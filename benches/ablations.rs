@@ -1,0 +1,223 @@
+//! Bench: ablations over SCALE's design choices (DESIGN.md §5).
+//!
+//! * peer-exchange topology (ring / k-regular / full / random)
+//! * checkpoint gate threshold
+//! * cluster count
+//! * election criteria weighting (incl. eq-4 literal-latency variant)
+//! * eq-5 literal sum-of-reciprocals vs harmonic mean
+//! * equirectangular (eq 8) vs haversine proximity error
+//! * driver-failure robustness
+
+use scale_fl::bench::section;
+use scale_fl::config::SimConfig;
+use scale_fl::geo::{equirectangular_km, haversine_km, GeoPoint};
+use scale_fl::netsim::MsgKind;
+use scale_fl::perf_index::{local_pi, OperationalMetrics, OperationalWeights};
+use scale_fl::runtime::compute::NativeSvm;
+use scale_fl::sim::Simulation;
+use scale_fl::topology::Topology;
+use scale_fl::util::rng::Rng;
+
+fn main() {
+    let compute = NativeSvm::new(NativeSvm::default_dims());
+    let base = SimConfig {
+        n_nodes: 50,
+        n_clusters: 5,
+        rounds: 20,
+        eval_every: 20,
+        ..Default::default()
+    }
+    .normalized();
+
+    section("topology ablation (50 nodes, 20 rounds)");
+    println!("topology   | acc   | p2p msgs | p2p KB | mean round ms");
+    for (name, topo) in [
+        ("ring", Topology::Ring),
+        ("k=4", Topology::KRegular(4)),
+        ("k=8", Topology::KRegular(8)),
+        ("full", Topology::Full),
+        ("random:3", Topology::RandomK(3)),
+    ] {
+        let cfg = SimConfig { topology: topo, ..base.clone() }.normalized();
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        let r = sim.run_scale().unwrap();
+        let p2p = r.ledger.get(&MsgKind::PeerExchange).copied().unwrap_or_default();
+        let mean_ms = r.rounds.iter().map(|x| x.latency_ms).sum::<f64>()
+            / r.rounds.len() as f64;
+        println!(
+            "{name:<10} | {:.3} | {:>8} | {:>6.1} | {mean_ms:>8.1}",
+            r.final_metrics.accuracy,
+            p2p.count,
+            p2p.bytes as f64 / 1e3
+        );
+    }
+
+    section("checkpoint threshold ablation");
+    println!("threshold | updates | acc");
+    for &d in &[0.0, 0.005, 0.01, 0.05, 0.2, 0.8] {
+        let cfg = SimConfig { checkpoint_min_delta: d, ..base.clone() }.normalized();
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        let r = sim.run_scale().unwrap();
+        println!("{d:>9} | {:>7} | {:.3}", r.total_updates(), r.final_metrics.accuracy);
+    }
+
+    section("cluster count ablation (100 nodes)");
+    println!("clusters | updates | acc   | intra-var proxy (mean cluster size)");
+    for &k in &[2usize, 5, 10, 20] {
+        let cfg = SimConfig {
+            n_nodes: 100,
+            n_clusters: k,
+            rounds: 15,
+            eval_every: 15,
+            ..Default::default()
+        }
+        .normalized();
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        let r = sim.run_scale().unwrap();
+        println!(
+            "{k:>8} | {:>7} | {:.3} | {:.1}",
+            r.total_updates(),
+            r.final_metrics.accuracy,
+            100.0 / k as f64
+        );
+    }
+
+    section("election weighting (battery-heavy vs compute-heavy)");
+    println!("weights        | driver changes | acc");
+    for (name, w) in [
+        ("default", scale_fl::election::CriteriaWeights::default()),
+        (
+            "compute-heavy",
+            scale_fl::election::CriteriaWeights {
+                w_compute: 0.7,
+                w_network: 0.1,
+                w_battery: 0.05,
+                w_reliability: 0.05,
+                w_representativeness: 0.05,
+                w_trust: 0.05,
+            },
+        ),
+        (
+            "battery-heavy",
+            scale_fl::election::CriteriaWeights {
+                w_compute: 0.05,
+                w_network: 0.1,
+                w_battery: 0.7,
+                w_reliability: 0.05,
+                w_representativeness: 0.05,
+                w_trust: 0.05,
+            },
+        ),
+    ] {
+        let cfg = SimConfig {
+            election: w,
+            node_failure_prob: 0.1,
+            node_recovery_prob: 0.5,
+            ..base.clone()
+        }
+        .normalized();
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        let r = sim.run_scale().unwrap();
+        let elections: u64 = r.clusters.iter().map(|c| c.elections).sum();
+        println!("{name:<14} | {:>14} | {:.3}", elections, r.final_metrics.accuracy);
+    }
+
+    section("eq-5 literal vs harmonic operational-efficiency score");
+    let mut rng = Rng::new(3);
+    let mut flips = 0;
+    let n = 200;
+    for _ in 0..n {
+        let a = OperationalMetrics {
+            cpu_utilization: rng.range_f64(0.1, 0.9),
+            energy_consumption: rng.range_f64(1.0, 50.0),
+            network_efficiency: rng.range_f64(0.3, 0.99),
+            energy_efficiency: rng.range_f64(0.05, 1.0),
+        };
+        let b = OperationalMetrics {
+            cpu_utilization: rng.range_f64(0.1, 0.9),
+            energy_consumption: rng.range_f64(1.0, 50.0),
+            network_efficiency: rng.range_f64(0.3, 0.99),
+            energy_efficiency: rng.range_f64(0.05, 1.0),
+        };
+        let lit = OperationalWeights::default();
+        let harm = OperationalWeights { harmonic: true, ..Default::default() };
+        let order_lit = local_pi(&a, &lit) < local_pi(&b, &lit);
+        let order_harm = local_pi(&a, &harm) < local_pi(&b, &harm);
+        if order_lit != order_harm {
+            flips += 1;
+        }
+    }
+    println!(
+        "ranking disagreement between literal eq-5 and harmonic mean: {}/{} pairs ({:.0}%)",
+        flips,
+        n,
+        flips as f64 / n as f64 * 100.0
+    );
+
+    section("eq-8 equirectangular vs haversine error");
+    let mut rng = Rng::new(7);
+    let mut worst_metro = 0.0f64;
+    let mut worst_conus = 0.0f64;
+    for _ in 0..2000 {
+        let a = GeoPoint::new(rng.range_f64(25.0, 48.0), rng.range_f64(-124.0, -67.0));
+        let near = GeoPoint::new(
+            a.lat_deg + rng.range_f64(-0.3, 0.3),
+            a.lon_deg + rng.range_f64(-0.3, 0.3),
+        );
+        let far = GeoPoint::new(rng.range_f64(25.0, 48.0), rng.range_f64(-124.0, -67.0));
+        let rel = |p: GeoPoint, q: GeoPoint| {
+            let h = haversine_km(p, q);
+            if h < 1e-6 {
+                0.0
+            } else {
+                (equirectangular_km(p, q) - h).abs() / h
+            }
+        };
+        worst_metro = worst_metro.max(rel(a, near));
+        worst_conus = worst_conus.max(rel(a, far));
+    }
+    println!("worst relative error: metro-scale {worst_metro:.5}, CONUS-scale {worst_conus:.4}");
+    assert!(worst_metro < 0.01, "eq 8 must be near-exact at cluster scale");
+
+    section("extension ablation: quantized exchange / secure aggregation");
+    println!("variant        | acc   | p2p KB | collect KB");
+    for (name, q, sa) in [
+        ("baseline", false, false),
+        ("quantized", true, false),
+        ("secagg", false, true),
+        ("quant+secagg", true, true),
+    ] {
+        let cfg = SimConfig {
+            quantize_exchange: q,
+            secure_aggregation: sa,
+            ..base.clone()
+        }
+        .normalized();
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        let r = sim.run_scale().unwrap();
+        let kb = |k: MsgKind| r.ledger.get(&k).map_or(0, |t| t.bytes) as f64 / 1e3;
+        println!(
+            "{name:<14} | {:.3} | {:>6.1} | {:>6.1}",
+            r.final_metrics.accuracy,
+            kb(MsgKind::PeerExchange),
+            kb(MsgKind::DriverCollect),
+        );
+    }
+
+    section("failure robustness (updates & acc vs failure prob)");
+    println!("fail_p | elections | acc");
+    for &p in &[0.0, 0.1, 0.3] {
+        let cfg = SimConfig {
+            node_failure_prob: p,
+            node_recovery_prob: 0.5,
+            ..base.clone()
+        }
+        .normalized();
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        let r = sim.run_scale().unwrap();
+        let elections: u64 = r.clusters.iter().map(|c| c.elections).sum();
+        println!("{p:>6} | {elections:>9} | {:.3}", r.final_metrics.accuracy);
+    }
+
+    println!("\nablations OK");
+}

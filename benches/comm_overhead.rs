@@ -1,0 +1,79 @@
+//! Bench: §4.2.2 communication overhead — global-server updates and cloud
+//! bytes as the federation scales (nodes ∈ {20, 50, 100, 200}).
+//!
+//! Expected shape: FedAvg grows linearly in nodes × rounds; SCALE grows
+//! with clusters × rounds (sub-linear in nodes at fixed cluster count) —
+//! the ~10x gap at 100 nodes widens with fleet size.
+
+use scale_fl::bench::section;
+use scale_fl::config::SimConfig;
+use scale_fl::netsim::MsgKind;
+use scale_fl::runtime::compute::NativeSvm;
+use scale_fl::sim::Simulation;
+
+fn main() {
+    let compute = NativeSvm::new(NativeSvm::default_dims());
+
+    section("communication overhead vs fleet size (20 rounds)");
+    println!(
+        "nodes | SCALE upd | FedAvg upd | reduction | SCALE cloud KB | FedAvg cloud KB | p2p KB"
+    );
+    for &nodes in &[20usize, 50, 100, 200] {
+        let cfg = SimConfig {
+            n_nodes: nodes,
+            n_clusters: (nodes / 10).max(2),
+            rounds: 20,
+            eval_every: 20,
+            dataset_samples: 569.max(nodes * 6),
+            dataset_malignant: (569.max(nodes * 6) as f64 * 0.37) as usize,
+            ..Default::default()
+        }
+        .normalized();
+
+        let mut sim = Simulation::new(cfg.clone(), &compute).unwrap();
+        let scale = sim.run_scale().unwrap();
+        let scale_cloud: u64 = [MsgKind::Summary, MsgKind::GlobalUpdate, MsgKind::Assignment]
+            .iter()
+            .map(|k| scale.ledger.get(k).map_or(0, |t| t.bytes))
+            .sum();
+        let p2p: u64 = [MsgKind::PeerExchange, MsgKind::DriverCollect, MsgKind::DriverBroadcast]
+            .iter()
+            .map(|k| scale.ledger.get(k).map_or(0, |t| t.bytes))
+            .sum();
+
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        let fedavg = sim.run_fedavg(None).unwrap();
+        let fedavg_cloud: u64 = [MsgKind::GlobalUpdate, MsgKind::GlobalBroadcast]
+            .iter()
+            .map(|k| fedavg.ledger.get(k).map_or(0, |t| t.bytes))
+            .sum();
+
+        println!(
+            "{:>5} | {:>9} | {:>10} | {:>8.1}x | {:>14.1} | {:>15.1} | {:>7.1}",
+            nodes,
+            scale.total_updates(),
+            fedavg.total_updates(),
+            fedavg.total_updates() as f64 / scale.total_updates().max(1) as f64,
+            scale_cloud as f64 / 1e3,
+            fedavg_cloud as f64 / 1e3,
+            p2p as f64 / 1e3,
+        );
+
+        // shape assertions: cloud traffic strictly lower under SCALE
+        assert!(scale.total_updates() < fedavg.total_updates());
+        assert!(scale_cloud < fedavg_cloud, "cloud bytes must shrink");
+    }
+
+    section("per-round update trace at 100 nodes (tapering)");
+    let cfg = SimConfig::paper_table1();
+    let mut sim = Simulation::new(cfg, &compute).unwrap();
+    let scale = sim.run_scale().unwrap();
+    let trace: Vec<u64> = scale.rounds.iter().map(|r| r.updates).collect();
+    println!("updates by round: {trace:?}");
+    let early: u64 = trace[..10].iter().sum();
+    let late: u64 = trace[trace.len() - 10..].iter().sum();
+    println!("first 10 rounds: {early} uploads, last 10 rounds: {late}");
+    assert!(late <= early, "checkpoint gate must taper uploads");
+
+    println!("\ncomm_overhead OK");
+}

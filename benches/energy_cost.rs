@@ -1,0 +1,88 @@
+//! Bench: §4.2.4 energy consumption and cloud-cost implications.
+//!
+//! Energy = device radio energy (per link class: metro D2D 1x, WAN 3x,
+//! cellular-to-cloud 14x J/byte) + training compute energy. Cost = cloud
+//! ingress $ + server aggregation CPU $. Expected shape: SCALE's cheap
+//! local traffic undercuts FedAvg's all-cloud traffic, and the server
+//! cost collapses with the update count.
+
+use scale_fl::bench::section;
+use scale_fl::config::SimConfig;
+use scale_fl::netsim::MsgKind;
+use scale_fl::runtime::compute::NativeSvm;
+use scale_fl::sim::Simulation;
+
+fn main() {
+    let compute = NativeSvm::new(NativeSvm::default_dims());
+
+    section("energy & cost at the paper setup (100 nodes, 30 rounds)");
+    let cfg = SimConfig::paper_table1();
+    let mut sim = Simulation::new(cfg.clone(), &compute).unwrap();
+    let scale = sim.run_scale().unwrap();
+    let mut sim = Simulation::new(cfg, &compute).unwrap();
+    let fedavg = sim.run_fedavg(None).unwrap();
+
+    println!("metric             |    SCALE |   FedAvg | ratio");
+    let rows: [(&str, f64, f64); 5] = [
+        ("comm energy J", scale.comm_energy_j, fedavg.comm_energy_j),
+        ("compute energy J", scale.compute_energy_j, fedavg.compute_energy_j),
+        ("total energy J", scale.total_energy_j(), fedavg.total_energy_j()),
+        ("cloud cost $ x1e6", scale.cloud_cost_usd * 1e6, fedavg.cloud_cost_usd * 1e6),
+        ("server cpu s", scale.server_cpu_s, fedavg.server_cpu_s),
+    ];
+    for (name, s, f) in rows {
+        println!("{name:<18} | {s:>8.3} | {f:>8.3} | {:>5.2}x", f / s.max(1e-12));
+    }
+    assert!(
+        scale.total_energy_j() < fedavg.total_energy_j(),
+        "SCALE total energy must beat FedAvg at paper scale"
+    );
+    assert!(scale.cloud_cost_usd < fedavg.cloud_cost_usd * 0.5);
+
+    section("energy breakdown by message kind (SCALE)");
+    for (kind, t) in &scale.ledger {
+        println!(
+            "  {kind:?}: {} msgs, {:.1} KB, {:.2} J",
+            t.count,
+            t.bytes as f64 / 1e3,
+            t.energy_j
+        );
+    }
+
+    section("energy vs fleet size (total J, 15 rounds)");
+    println!("nodes | SCALE | FedAvg | ratio");
+    for &nodes in &[20usize, 50, 100, 200] {
+        let cfg = SimConfig {
+            n_nodes: nodes,
+            n_clusters: (nodes / 10).max(2),
+            rounds: 15,
+            eval_every: 15,
+            ..Default::default()
+        }
+        .normalized();
+        let mut sim = Simulation::new(cfg.clone(), &compute).unwrap();
+        let s = sim.run_scale().unwrap();
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        let f = sim.run_fedavg(None).unwrap();
+        println!(
+            "{nodes:>5} | {:>5.1} | {:>6.1} | {:>5.2}x",
+            s.total_energy_j(),
+            f.total_energy_j(),
+            f.total_energy_j() / s.total_energy_j().max(1e-12)
+        );
+    }
+
+    section("battery drain (modelled Wh over the paper run)");
+    let cfg = SimConfig::paper_table1();
+    let mut sim = Simulation::new(cfg, &compute).unwrap();
+    let _ = sim.run_scale().unwrap();
+    let worst = sim
+        .nodes
+        .iter()
+        .map(|n| n.device.battery_wh - n.battery_wh)
+        .fold(0.0f64, f64::max);
+    println!("worst-case device battery drain: {worst:.4} Wh");
+    let _ = scale.ledger.get(&MsgKind::GlobalUpdate);
+
+    println!("\nenergy_cost OK");
+}

@@ -1,0 +1,96 @@
+//! Bench: §4.2.3 processing latency — per-round end-to-end latency of
+//! SCALE vs traditional FL, and the effect of the checkpointing gate on
+//! global-server processing load.
+//!
+//! Expected shape: FedAvg's round latency is dominated by the server
+//! processing N sequential updates; SCALE's by local exchange + (rarely)
+//! one driver upload per cluster — a large mean-latency gap that grows
+//! with fleet size.
+
+use scale_fl::bench::section;
+use scale_fl::config::{CheckpointMode, SimConfig};
+use scale_fl::runtime::compute::NativeSvm;
+use scale_fl::sim::Simulation;
+use scale_fl::util::stats::percentile;
+
+fn latency_stats(rounds: &[scale_fl::sim::report::RoundRecord]) -> (f64, f64, f64) {
+    let xs: Vec<f64> = rounds.iter().map(|r| r.latency_ms).collect();
+    (
+        xs.iter().sum::<f64>() / xs.len() as f64,
+        percentile(&xs, 50.0),
+        percentile(&xs, 95.0),
+    )
+}
+
+fn main() {
+    let compute = NativeSvm::new(NativeSvm::default_dims());
+
+    section("round latency: SCALE vs FedAvg (paper setup)");
+    println!("mode   | mean ms | p50 ms | p95 ms | total ms");
+    let cfg = SimConfig::paper_table1();
+    let mut sim = Simulation::new(cfg.clone(), &compute).unwrap();
+    let scale = sim.run_scale().unwrap();
+    let mut sim = Simulation::new(cfg, &compute).unwrap();
+    let fedavg = sim.run_fedavg(None).unwrap();
+    for (name, r) in [("SCALE", &scale), ("FedAvg", &fedavg)] {
+        let (mean, p50, p95) = latency_stats(&r.rounds);
+        println!(
+            "{name:<6} | {mean:>7.1} | {p50:>6.1} | {p95:>6.1} | {:>8.0}",
+            r.total_latency_ms()
+        );
+    }
+    let (scale_mean, _, _) = latency_stats(&scale.rounds);
+    let (fedavg_mean, _, _) = latency_stats(&fedavg.rounds);
+    assert!(
+        scale_mean < fedavg_mean,
+        "SCALE mean latency {scale_mean:.1} must beat FedAvg {fedavg_mean:.1}"
+    );
+
+    section("checkpointing ablation (SCALE, gate threshold sweep)");
+    println!("gate        | updates | mean round ms | server share ms/round");
+    for (label, mode, delta) in [
+        ("no gate", CheckpointMode::ParamDelta, 0.0),
+        ("delta 0.01", CheckpointMode::ParamDelta, 0.01),
+        ("delta 0.05", CheckpointMode::ParamDelta, 0.05),
+        ("accuracy", CheckpointMode::Accuracy, 0.002),
+    ] {
+        let cfg = SimConfig {
+            checkpoint_mode: mode,
+            checkpoint_min_delta: delta,
+            eval_every: 30,
+            ..SimConfig::paper_table1()
+        }
+        .normalized();
+        let mut sim = Simulation::new(cfg.clone(), &compute).unwrap();
+        let r = sim.run_scale().unwrap();
+        let (mean, _, _) = latency_stats(&r.rounds);
+        let server_share = r.total_updates() as f64 * cfg.net.cloud_process_ms
+            / r.rounds.len() as f64;
+        println!(
+            "{label:<11} | {:>7} | {mean:>13.1} | {server_share:>9.2}",
+            r.total_updates()
+        );
+    }
+
+    section("latency vs fleet size (mean round ms)");
+    println!("nodes | SCALE | FedAvg");
+    for &nodes in &[20usize, 50, 100, 200] {
+        let cfg = SimConfig {
+            n_nodes: nodes,
+            n_clusters: (nodes / 10).max(2),
+            rounds: 10,
+            eval_every: 10,
+            ..Default::default()
+        }
+        .normalized();
+        let mut sim = Simulation::new(cfg.clone(), &compute).unwrap();
+        let s = sim.run_scale().unwrap();
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        let f = sim.run_fedavg(None).unwrap();
+        let (sm, _, _) = latency_stats(&s.rounds);
+        let (fm, _, _) = latency_stats(&f.rounds);
+        println!("{nodes:>5} | {sm:>5.0} | {fm:>6.0}");
+    }
+
+    println!("\nlatency OK");
+}

@@ -1,0 +1,190 @@
+//! Bench: L3 coordinator micro-benchmarks (wall-clock, bench harness).
+//!
+//! The hot paths of the rust layer in isolation: cluster formation at
+//! fleet scale, driver election, netsim accounting, crypto envelopes,
+//! checkpoint codec, JSON parsing — plus the PJRT artifact latencies when
+//! `artifacts/` is present (train step, scores, aggregate). These are the
+//! numbers the §Perf pass in EXPERIMENTS.md tracks.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use scale_fl::bench::{bench, report, section};
+use scale_fl::checkpoint::Checkpoint;
+use scale_fl::clustering::{form_clusters, ClusterConfig, NodeSummary};
+use scale_fl::crypto::NodeKey;
+use scale_fl::data::{pad_batch, synth_wdbc, Scaler};
+use scale_fl::election::{elect, Ballot, CriteriaWeights};
+use scale_fl::geo::GeoPoint;
+use scale_fl::netsim::{MsgKind, NetConfig, Network};
+use scale_fl::runtime::compute::{ModelCompute, NativeSvm, PjrtModel};
+use scale_fl::runtime::manifest::ModelKind;
+use scale_fl::runtime::Runtime;
+use scale_fl::util::rng::Rng;
+
+fn summaries(n: usize) -> Vec<NodeSummary> {
+    let mut rng = Rng::new(1);
+    (0..n)
+        .map(|i| NodeSummary {
+            node_id: i,
+            data_score: rng.range_f64(0.0, 1000.0),
+            perf_index: rng.range_f64(-2.0, 2.0),
+            location: GeoPoint::new(rng.range_f64(25.0, 48.0), rng.range_f64(-124.0, -67.0)),
+        })
+        .collect()
+}
+
+fn main() {
+    section("cluster formation (k-means++ over 4-d summaries)");
+    for &(n, k) in &[(100usize, 10usize), (1_000, 32), (10_000, 100)] {
+        let s = summaries(n);
+        let cfg = ClusterConfig { n_clusters: k, seed: 3, ..Default::default() };
+        let t = bench(2, if n > 5_000 { 5 } else { 20 }, || {
+            std::hint::black_box(form_clusters(&s, &cfg));
+        });
+        report(&format!("form_clusters n={n} k={k}"), &t);
+    }
+
+    section("driver election (eq 11)");
+    for &n in &[10usize, 100, 1_000] {
+        let mut rng = Rng::new(2);
+        let ballots: Vec<Ballot> = (0..n)
+            .map(|i| Ballot {
+                node_id: i,
+                compute: rng.range_f64(1.0, 100.0),
+                network: rng.range_f64(1.0, 200.0),
+                battery: rng.range_f64(1.0, 60.0),
+                reliability: rng.f64(),
+                representativeness: rng.f64(),
+                trust: rng.f64(),
+            })
+            .collect();
+        let w = CriteriaWeights::default();
+        let t = bench(10, 200, || {
+            std::hint::black_box(elect(&ballots, &w));
+        });
+        report(&format!("elect n={n}"), &t);
+    }
+
+    section("netsim send accounting");
+    {
+        let fleet = scale_fl::devices::generate_fleet(&scale_fl::devices::FleetConfig {
+            n_devices: 100,
+            ..Default::default()
+        });
+        let mut net = Network::new(NetConfig::default(), 5, false);
+        let t = bench(100, 2_000, || {
+            for i in 0..10 {
+                net.send(
+                    MsgKind::PeerExchange,
+                    Some(&fleet[i]),
+                    Some(&fleet[(i + 7) % 100]),
+                    196,
+                    0,
+                );
+            }
+        });
+        report("10x send (per call /10)", &t);
+    }
+
+    section("crypto envelope (AES-128-CTR + HMAC-SHA256)");
+    {
+        let key = NodeKey::derive(&[7u8; 32], 3);
+        let mut rng = Rng::new(9);
+        let msg = vec![0xA5u8; 256];
+        let env = key.seal(&msg, &mut rng);
+        let t = bench(50, 2_000, || {
+            std::hint::black_box(key.seal(&msg, &mut rng));
+        });
+        report("seal 256 B", &t);
+        let t = bench(50, 2_000, || {
+            std::hint::black_box(key.open(&env).unwrap());
+        });
+        report("open 256 B", &t);
+    }
+
+    section("checkpoint codec (zlib + crc32, 545-dim params)");
+    {
+        let cp = Checkpoint {
+            round: 5,
+            metric: 0.9,
+            params: (0..545).map(|i| (i as f32).sin()).collect(),
+        };
+        let bytes = cp.to_bytes();
+        let t = bench(50, 1_000, || {
+            std::hint::black_box(cp.to_bytes());
+        });
+        report("encode", &t);
+        let t = bench(50, 1_000, || {
+            std::hint::black_box(Checkpoint::from_bytes(&bytes).unwrap());
+        });
+        report("decode", &t);
+    }
+
+    section("json config parse");
+    {
+        let text = scale_fl::config::SimConfig::default().to_json().to_string_pretty();
+        let t = bench(50, 2_000, || {
+            std::hint::black_box(scale_fl::util::json::parse(&text).unwrap());
+        });
+        report(&format!("parse {} B config", text.len()), &t);
+    }
+
+    section("native SVM compute (rust oracle, B=64 F=32)");
+    {
+        let native = NativeSvm::new(NativeSvm::default_dims());
+        let mut ds = synth_wdbc(3);
+        Scaler::fit(&ds).transform(&mut ds);
+        let batch = pad_batch(&ds, 0, 64, 32);
+        let params = native.init_params(0);
+        let t = bench(50, 2_000, || {
+            std::hint::black_box(native.train_step(&batch, &params, 0.05, 0.001).unwrap());
+        });
+        report("train_step", &t);
+        let t = bench(50, 2_000, || {
+            std::hint::black_box(native.scores(&batch, &params).unwrap());
+        });
+        report("scores", &t);
+    }
+
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        section("PJRT artifact latency (AOT JAX/Pallas via xla crate)");
+        let rt = Rc::new(Runtime::open(dir).unwrap());
+        rt.warm_up().unwrap();
+        let model = PjrtModel::new(rt.clone(), ModelKind::Svm);
+        let mut ds = synth_wdbc(3);
+        Scaler::fit(&ds).transform(&mut ds);
+        let batch = pad_batch(&ds, 0, 64, 32);
+        let params = model.init_params(0);
+        let t = bench(20, 500, || {
+            std::hint::black_box(model.train_step(&batch, &params, 0.05, 0.001).unwrap());
+        });
+        report("svm_train_step (buffer-cached execute)", &t);
+        let t = bench(20, 500, || {
+            std::hint::black_box(model.train_steps(&batch, &params, 0.05, 0.001, 5).unwrap());
+        });
+        report("svm_train_steps x5 (fused loop artifact)", &t);
+        let t = bench(20, 500, || {
+            std::hint::black_box(model.scores(&batch, &params).unwrap());
+        });
+        report("svm_scores", &t);
+        let banks: Vec<Vec<f32>> = (0..8).map(|_| params.clone()).collect();
+        let refs: Vec<&[f32]> = banks.iter().map(|v| v.as_slice()).collect();
+        let t = bench(20, 500, || {
+            std::hint::black_box(model.aggregate(&refs).unwrap());
+        });
+        report("aggregate_svm (8 vectors)", &t);
+
+        let mlp = PjrtModel::new(rt, ModelKind::Mlp);
+        let mparams = mlp.init_params(0);
+        let t = bench(10, 200, || {
+            std::hint::black_box(mlp.train_step(&batch, &mparams, 0.05, 0.001).unwrap());
+        });
+        report("mlp_train_step (pallas dense fwd+bwd)", &t);
+    } else {
+        println!("\n(artifacts not built; skipping PJRT latencies)");
+    }
+
+    println!("\nmicro_l3 OK");
+}

@@ -1,0 +1,76 @@
+//! Bench: regenerate the paper's **Table 1** — per-cluster global-update
+//! counts and accuracies for traditional FL vs SCALE (100 nodes, 10
+//! clusters, 30 rounds).
+//!
+//! Paper's totals: FedAvg 2850 updates / 0.85 acc; SCALE 235 / 0.86.
+//! Absolute numbers depend on the authors' (unreported) gating threshold;
+//! the *shape* to match is ~10x update reduction at equal accuracy with
+//! per-cluster spread. Uses the PJRT artifacts when present, else the
+//! native oracle.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use scale_fl::bench::section;
+use scale_fl::config::SimConfig;
+use scale_fl::runtime::compute::{ModelCompute, NativeSvm, PjrtModel};
+use scale_fl::runtime::manifest::ModelKind;
+use scale_fl::runtime::Runtime;
+use scale_fl::sim::Simulation;
+
+fn backend() -> Box<dyn ModelCompute> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let rt = Rc::new(Runtime::open(dir).expect("runtime"));
+        rt.warm_up().expect("warm_up");
+        println!("backend: PJRT");
+        Box::new(PjrtModel::new(rt, ModelKind::Svm))
+    } else {
+        println!("backend: native (no artifacts)");
+        Box::new(NativeSvm::new(NativeSvm::default_dims()))
+    }
+}
+
+fn main() {
+    let compute = backend();
+    let cfg = SimConfig::paper_table1();
+
+    section("Table 1 — FedAvg (paper total: 2850 updates, 0.85 acc)");
+    let t = std::time::Instant::now();
+    let mut sim = Simulation::new(cfg.clone(), compute.as_ref()).unwrap();
+    let grouping = sim.scale_grouping().unwrap();
+    let fedavg = sim.run_fedavg(Some(grouping)).unwrap();
+    println!("| Runs       | Nodes | Rounds | Updates | Acc |");
+    print!("{}", fedavg.table1_rows());
+    println!("(run took {:.1}s)", t.elapsed().as_secs_f64());
+
+    section("Table 1 — SCALE (paper total: 235 updates, 0.86 acc)");
+    let t = std::time::Instant::now();
+    let mut sim = Simulation::new(cfg, compute.as_ref()).unwrap();
+    let scale = sim.run_scale().unwrap();
+    println!("| Runs       | Nodes | Rounds | Updates | Acc |");
+    print!("{}", scale.table1_rows());
+    println!("(run took {:.1}s)", t.elapsed().as_secs_f64());
+
+    section("shape check vs paper");
+    let reduction = fedavg.total_updates() as f64 / scale.total_updates().max(1) as f64;
+    println!(
+        "update reduction : {reduction:.1}x   (paper: {:.1}x)",
+        2850.0 / 235.0
+    );
+    println!(
+        "accuracy         : SCALE {:.3} vs FedAvg {:.3}   (paper: 0.86 vs 0.85)",
+        scale.final_metrics.accuracy, fedavg.final_metrics.accuracy
+    );
+    let (lo, hi) = scale
+        .clusters
+        .iter()
+        .fold((u64::MAX, 0u64), |(lo, hi), c| (lo.min(c.updates), hi.max(c.updates)));
+    println!("per-cluster upload spread: {lo}..{hi} of 30   (paper: 7..30)");
+    assert!(reduction > 5.0, "reduction {reduction:.1} too small");
+    assert!(
+        (scale.final_metrics.accuracy - fedavg.final_metrics.accuracy).abs() < 0.05,
+        "accuracy diverged"
+    );
+    println!("\ntable1_comm OK");
+}

@@ -1,0 +1,89 @@
+//! Bench: three-way comparison — SCALE vs hierarchical FL (client-edge-
+//! cloud, the architecture the paper's intro argues against) vs
+//! traditional FedAvg, on the paper setup.
+//!
+//! The point the paper makes qualitatively in §1: HFL also cuts cloud
+//! traffic, but pays for an always-on edge-server tier; SCALE gets the
+//! same (or better) communication profile out of dynamically elected
+//! member devices. Expected shape: cloud updates SCALE ≈ HFL ≪ FedAvg;
+//! infrastructure cost SCALE = 0 < HFL; accuracy comparable everywhere.
+
+use scale_fl::bench::section;
+use scale_fl::config::SimConfig;
+use scale_fl::netsim::MsgKind;
+use scale_fl::runtime::compute::NativeSvm;
+use scale_fl::sim::Simulation;
+
+fn main() {
+    let compute = NativeSvm::new(NativeSvm::default_dims());
+    let cfg = SimConfig::paper_table1();
+
+    let mut sim = Simulation::new(cfg.clone(), &compute).unwrap();
+    let scale = sim.run_scale().unwrap();
+    let mut sim = Simulation::new(cfg.clone(), &compute).unwrap();
+    let hfl = sim.run_hfl(3).unwrap();
+    let mut sim = Simulation::new(cfg, &compute).unwrap();
+    let fedavg = sim.run_fedavg(None).unwrap();
+
+    section("SCALE vs HFL(period=3) vs FedAvg — paper setup");
+    println!("metric              |    SCALE |      HFL |   FedAvg");
+    let row = |name: &str, s: f64, h: f64, f: f64| {
+        println!("{name:<19} | {s:>8.3} | {h:>8.3} | {f:>8.3}");
+    };
+    row(
+        "cloud updates",
+        scale.total_updates() as f64,
+        hfl.total_updates() as f64,
+        fedavg.total_updates() as f64,
+    );
+    row(
+        "accuracy",
+        scale.final_metrics.accuracy,
+        hfl.final_metrics.accuracy,
+        fedavg.final_metrics.accuracy,
+    );
+    row(
+        "total latency s",
+        scale.total_latency_ms() / 1e3,
+        hfl.total_latency_ms() / 1e3,
+        fedavg.total_latency_ms() / 1e3,
+    );
+    row("comm energy J", scale.comm_energy_j, hfl.comm_energy_j, fedavg.comm_energy_j);
+    row(
+        "cloud cost $x1e6",
+        scale.cloud_cost_usd * 1e6,
+        hfl.cloud_cost_usd * 1e6,
+        fedavg.cloud_cost_usd * 1e6,
+    );
+    row(
+        "edge infra $x1e6",
+        scale.edge_cost_usd * 1e6,
+        hfl.edge_cost_usd * 1e6,
+        fedavg.edge_cost_usd * 1e6,
+    );
+    row(
+        "TOTAL cost $x1e6",
+        (scale.cloud_cost_usd + scale.edge_cost_usd) * 1e6,
+        (hfl.cloud_cost_usd + hfl.edge_cost_usd) * 1e6,
+        (fedavg.cloud_cost_usd + fedavg.edge_cost_usd) * 1e6,
+    );
+
+    section("edge-period sweep (HFL cloud updates vs staleness)");
+    println!("period | cloud upd | acc");
+    for &p in &[1usize, 3, 5, 10] {
+        let cfg = SimConfig { eval_every: 30, ..SimConfig::paper_table1() }.normalized();
+        let compute = NativeSvm::new(NativeSvm::default_dims());
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        let r = sim.run_hfl(p).unwrap();
+        println!("{p:>6} | {:>9} | {:.3}", r.total_updates(), r.final_metrics.accuracy);
+    }
+
+    // shape assertions
+    assert!(scale.total_updates() < fedavg.total_updates() / 5);
+    assert!(hfl.total_updates() < fedavg.total_updates() / 2);
+    assert_eq!(scale.edge_cost_usd, 0.0);
+    assert!(hfl.edge_cost_usd > 0.0);
+    assert!((scale.final_metrics.accuracy - hfl.final_metrics.accuracy).abs() < 0.05);
+    let _ = MsgKind::EdgeUpdate;
+    println!("\nthree_way OK");
+}

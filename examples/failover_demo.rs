@@ -1,0 +1,54 @@
+//! Failover demo: driver failures, health detection, Algorithm-4
+//! re-election, and checkpoint-based continuity.
+//!
+//! Sweeps the per-round node failure probability and shows that SCALE
+//! keeps converging: dead drivers are detected by the health monitor and
+//! replaced by the weighted election of eq 11, while the cluster model
+//! survives in the driver's checkpoint store.
+//!
+//! ```bash
+//! cargo run --release --example failover_demo
+//! ```
+
+use anyhow::Result;
+
+use scale_fl::config::SimConfig;
+use scale_fl::netsim::MsgKind;
+use scale_fl::runtime::compute::NativeSvm;
+use scale_fl::sim::Simulation;
+
+fn main() -> Result<()> {
+    let compute = NativeSvm::new(NativeSvm::default_dims());
+
+    println!("failure_p | elections | ballots | live(min) | updates | final acc");
+    for &p in &[0.0, 0.05, 0.1, 0.2, 0.35] {
+        let cfg = SimConfig {
+            n_nodes: 40,
+            n_clusters: 5,
+            rounds: 20,
+            node_failure_prob: p,
+            node_recovery_prob: 0.5,
+            eval_every: 20,
+            seed: 11,
+            ..Default::default()
+        }
+        .normalized();
+        let mut sim = Simulation::new(cfg, &compute)?;
+        let report = sim.run_scale()?;
+        let elections: u64 = report.clusters.iter().map(|c| c.elections).sum();
+        let min_live = report.rounds.iter().map(|r| r.live_nodes).min().unwrap_or(0);
+        println!(
+            "{:>9.2} | {:>9} | {:>7} | {:>9} | {:>7} | {:.3}",
+            p,
+            elections,
+            report.ledger.get(&MsgKind::Election).map_or(0, |t| t.count),
+            min_live,
+            report.total_updates(),
+            report.final_metrics.accuracy,
+        );
+    }
+
+    println!("\nEven at 35% per-round node failure the federation re-elects");
+    println!("drivers and converges — the paper's robustness claim (§3.4).");
+    Ok(())
+}

@@ -1,0 +1,196 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+Run once by ``make artifacts``::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust side's
+XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids, so text round-trips cleanly. Every function is
+lowered with ``return_tuple=True`` so the rust runtime uniformly unpacks
+an output tuple.
+
+Alongside the ``*.hlo.txt`` files we emit ``manifest.json`` describing the
+I/O contract (names, shapes, dtypes, packed-parameter dims) that the rust
+runtime validates at load time — a wrong shape fails fast at startup, not
+mid-round.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.model import DIMS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (the rust-loadable form)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _f32(shape):
+    return {"shape": list(shape), "dtype": "f32"}
+
+
+def _i32(shape):
+    return {"shape": list(shape), "dtype": "i32"}
+
+
+def build_entries(dims=DIMS):
+    """(name, fn, example-args, manifest-io) for every artifact."""
+    b, f, k = dims.batch, dims.features, dims.bank
+    ds, dm = dims.svm_dim, dims.mlp_dim
+
+    x = _spec((b, f))
+    yv = _spec((b,))
+    maskv = _spec((b,))
+    scalar = _spec(())
+    steps = _spec((), jnp.int32)
+
+    def tup(fn):
+        # lowered with return_tuple=True; make single outputs explicit tuples
+        def wrapped(*a):
+            out = fn(*a)
+            return out if isinstance(out, tuple) else (out,)
+
+        return wrapped
+
+    entries = [
+        {
+            "name": "svm_train_step",
+            "fn": tup(model.svm_train_step),
+            "args": (x, yv, maskv, _spec((ds,)), scalar, scalar),
+            "inputs": [
+                ("x", _f32((b, f))), ("y", _f32((b,))), ("mask", _f32((b,))),
+                ("params", _f32((ds,))), ("lr", _f32(())), ("reg", _f32(())),
+            ],
+            "outputs": [("params", _f32((ds,))), ("loss", _f32(()))],
+        },
+        {
+            "name": "svm_train_loop",
+            "fn": tup(model.svm_train_loop),
+            "args": (x, yv, maskv, _spec((ds,)), scalar, scalar, steps),
+            "inputs": [
+                ("x", _f32((b, f))), ("y", _f32((b,))), ("mask", _f32((b,))),
+                ("params", _f32((ds,))), ("lr", _f32(())), ("reg", _f32(())),
+                ("steps", _i32(())),
+            ],
+            "outputs": [("params", _f32((ds,))), ("loss", _f32(()))],
+        },
+        {
+            "name": "svm_scores",
+            "fn": tup(model.svm_scores),
+            "args": (x, _spec((ds,))),
+            "inputs": [("x", _f32((b, f))), ("params", _f32((ds,)))],
+            "outputs": [("scores", _f32((b,)))],
+        },
+        {
+            "name": "mlp_train_step",
+            "fn": tup(model.mlp_train_step),
+            "args": (x, yv, maskv, _spec((dm,)), scalar, scalar),
+            "inputs": [
+                ("x", _f32((b, f))), ("y", _f32((b,))), ("mask", _f32((b,))),
+                ("params", _f32((dm,))), ("lr", _f32(())), ("reg", _f32(())),
+            ],
+            "outputs": [("params", _f32((dm,))), ("loss", _f32(()))],
+        },
+        {
+            "name": "mlp_train_loop",
+            "fn": tup(model.mlp_train_loop),
+            "args": (x, yv, maskv, _spec((dm,)), scalar, scalar, steps),
+            "inputs": [
+                ("x", _f32((b, f))), ("y", _f32((b,))), ("mask", _f32((b,))),
+                ("params", _f32((dm,))), ("lr", _f32(())), ("reg", _f32(())),
+                ("steps", _i32(())),
+            ],
+            "outputs": [("params", _f32((dm,))), ("loss", _f32(()))],
+        },
+        {
+            "name": "mlp_scores",
+            "fn": tup(model.mlp_scores),
+            "args": (x, _spec((dm,))),
+            "inputs": [("x", _f32((b, f))), ("params", _f32((dm,)))],
+            "outputs": [("scores", _f32((b,)))],
+        },
+        {
+            "name": "aggregate_svm",
+            "fn": tup(model.aggregate),
+            "args": (_spec((k, ds)), _spec((k,))),
+            "inputs": [("bank", _f32((k, ds))), ("mask", _f32((k,)))],
+            "outputs": [("mean", _f32((ds,)))],
+        },
+        {
+            "name": "aggregate_mlp",
+            "fn": tup(model.aggregate),
+            "args": (_spec((k, dm)), _spec((k,))),
+            "inputs": [("bank", _f32((k, dm))), ("mask", _f32((k,)))],
+            "outputs": [("mean", _f32((dm,)))],
+        },
+    ]
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", help="comma-separated artifact names", default="")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = {s for s in args.only.split(",") if s}
+
+    dims = DIMS
+    manifest = {
+        "dims": {
+            "batch": dims.batch,
+            "features": dims.features,
+            "raw_features": 30,
+            "bank": dims.bank,
+            "hidden": dims.hidden,
+            "svm_dim": dims.svm_dim,
+            "mlp_dim": dims.mlp_dim,
+        },
+        "artifacts": {},
+    }
+
+    for e in build_entries(dims):
+        if only and e["name"] not in only:
+            continue
+        lowered = jax.jit(e["fn"]).lower(*e["args"])
+        text = to_hlo_text(lowered)
+        fname = f"{e['name']}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][e["name"]] = {
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [{"name": n, **io} for n, io in e["inputs"]],
+            "outputs": [{"name": n, **io} for n, io in e["outputs"]],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Layer-1 Pallas kernels for the SCALE federated-learning stack.
+
+Every kernel here is authored with ``jax.experimental.pallas`` and lowered
+with ``interpret=True`` so the resulting HLO contains plain XLA ops that
+the rust PJRT CPU client can execute (real-TPU Mosaic custom-calls cannot
+run on the CPU plugin; see DESIGN.md §Hardware-Adaptation).
+
+Kernels
+-------
+``hinge.hinge_grad_sums``
+    Fused single-pass hinge-loss statistics for the linear SVM: raw
+    gradient sums, loss sum and active-row count, tiled over row blocks.
+``matmul.matmul`` / ``matmul.dense``
+    Tiled matmul kernel and a ``jax.custom_vjp`` dense layer whose forward
+    *and* backward passes route through the kernel (used by the MLP).
+``aggregate.masked_mean``
+    Masked mean over a stacked bank of parameter vectors — the compute
+    core of both the peer-exchange average (paper eq 9) and the driver's
+    consensus aggregation (paper eq 10).
+``scores.linear_scores``
+    Decision-score kernel ``X @ w + b`` for evaluation.
+
+``ref.py`` holds the pure-``jax.numpy`` oracles the pytest suite checks
+every kernel against (exact same math, no pallas).
+"""
+
+from . import aggregate, hinge, matmul, ref, scores  # noqa: F401
+
+__all__ = ["aggregate", "hinge", "matmul", "ref", "scores"]

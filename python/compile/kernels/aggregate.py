@@ -1,0 +1,55 @@
+"""Masked mean over a stacked bank of parameter vectors.
+
+This is the compute core of both sides of the paper's Hybrid Decentralized
+Aggregation Protocol:
+
+* peer exchange (eq 9): a node averages its own weights with the weights
+  received from its |N_i| peers — a masked mean over a bank with
+  |N_i| + 1 valid rows;
+* driver consensus (eq 10): the elected driver averages the post-exchange
+  weights of every live node in its cluster.
+
+The bank is a fixed-shape f32[K, D] buffer (K = max cluster size) with a
+validity mask so one AOT artifact serves every cluster size; D is the
+packed parameter dimension. Single-block kernel: with K=16, D<=608, f32
+the whole bank is ~38 KiB — one VMEM-resident tile, so tiling over D would
+only add grid overhead.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _masked_mean_kernel(bank_ref, mask_ref, o_ref):
+    bank = bank_ref[...]          # [K, D]
+    mask = mask_ref[...]          # [K]
+    total = mask @ bank           # [D]  (weighted row-sum)
+    count = jnp.maximum(jnp.sum(mask), 1.0)
+    o_ref[...] = total / count
+
+
+@jax.jit
+def masked_mean(bank, mask):
+    """Mean of the rows of ``bank`` selected by ``mask``.
+
+    Args:
+      bank: f32[K, D] stacked parameter vectors (invalid rows arbitrary).
+      mask: f32[K] row validity in {0, 1}.
+
+    Returns: f32[D]; zeros-safe (empty mask divides by 1, returning 0s
+      only if the bank rows were 0 — callers guarantee >= 1 valid row).
+    """
+    k, d = bank.shape
+    return pl.pallas_call(
+        _masked_mean_kernel,
+        in_specs=[
+            pl.BlockSpec((k, d), lambda: (0, 0)),
+            pl.BlockSpec((k,), lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), bank.dtype),
+        interpret=True,
+    )(bank, mask)

@@ -1,0 +1,114 @@
+"""Fused hinge-loss gradient kernel (the SVM training hot-spot).
+
+One pallas pass over the design matrix produces everything the training
+step needs:
+
+    scores   = X @ w + b                       (per row)
+    margin_r = 1 - y_r * scores_r
+    active_r = mask_r * (margin_r > 0)
+    gw_sum   = - sum_r  active_r * y_r * X[r, :]      (raw, un-normalised)
+    gb_sum   = - sum_r  active_r * y_r
+    loss_sum =   sum_r  mask_r * max(0, margin_r)
+    n        =   sum_r  mask_r
+
+The caller (layer 2, ``model.py``) finishes with the cheap scalar epilogue
+``grad_w = gw_sum / n + reg * w`` so the kernel itself stays a pure
+reduction and the design matrix is read exactly once (no separate
+score / loss / grad passes, no HBM round-trip for the activations).
+
+Tiling: the grid walks row blocks of ``block_rows`` (default 16) rows;
+``w`` stays resident across the whole grid while X/y/mask stream through
+VMEM one block at a time. Outputs are accumulated in place across grid
+steps (initialised at step 0). With B=64, F=32, f32 the per-step VMEM
+footprint is ~(16x32 + 3*16 + 32)*4 B ~= 2.4 KiB — far under any real
+VMEM budget; the block shape is chosen for 8-sublane alignment rather
+than capacity.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hinge_kernel(x_ref, y_ref, m_ref, w_ref, b_ref,
+                  gw_ref, gb_ref, loss_ref, n_ref):
+    """One grid step: accumulate hinge statistics for a block of rows."""
+    step = pl.program_id(0)
+
+    x = x_ref[...]            # [BR, F]
+    y = y_ref[...]            # [BR]
+    m = m_ref[...]            # [BR]
+    w = w_ref[...]            # [F]
+    b = b_ref[0]
+
+    scores = x @ w + b                            # [BR]
+    margin = 1.0 - y * scores                     # [BR]
+    active = m * (margin > 0.0).astype(x.dtype)   # [BR]
+    coef = active * y                             # [BR]
+
+    gw_part = -(coef @ x)                         # [F]
+    gb_part = -jnp.sum(coef)
+    loss_part = jnp.sum(m * jnp.maximum(margin, 0.0))
+    n_part = jnp.sum(m)
+
+    @pl.when(step == 0)
+    def _init():
+        gw_ref[...] = jnp.zeros_like(gw_ref)
+        gb_ref[...] = jnp.zeros_like(gb_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+
+    gw_ref[...] += gw_part
+    gb_ref[0] += gb_part
+    loss_ref[0] += loss_part
+    n_ref[0] += n_part
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def hinge_grad_sums(x, y, mask, w, b, *, block_rows: int = 16):
+    """Raw hinge-loss reduction sums via the fused pallas kernel.
+
+    Args:
+      x:    f32[B, F] design matrix (padding rows arbitrary).
+      y:    f32[B] labels in {-1, +1} (padding rows arbitrary).
+      mask: f32[B] row validity in {0, 1}.
+      w:    f32[F] weight vector.
+      b:    f32[1] bias.
+      block_rows: rows per grid step; must divide B.
+
+    Returns:
+      (gw_sum f32[F], gb_sum f32[1], loss_sum f32[1], n f32[1]).
+    """
+    batch, feat = x.shape
+    if batch % block_rows != 0:
+        raise ValueError(f"block_rows {block_rows} must divide batch {batch}")
+    grid = (batch // block_rows,)
+
+    return pl.pallas_call(
+        _hinge_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, feat), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((feat,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((feat,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((feat,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+        ],
+        interpret=True,
+    )(x, y, mask, w, b)

@@ -1,0 +1,83 @@
+"""Tiled pallas matmul and a custom-VJP dense layer built on it.
+
+The MLP model variant routes *all* of its matrix products — forward
+activations and both backward products — through ``matmul`` so the whole
+fwd/bwd graph is pallas-kernel compute (``jax.custom_vjp`` supplies the
+differentiation rule because ``pallas_call`` has none of its own).
+
+Tiling: grid over (M-tiles, N-tiles); the contraction dimension K is kept
+whole per tile (K <= 64 everywhere in this model family, so a full K strip
+of both operands fits VMEM comfortably: with bm=bn=16, K=64, f32 the three
+resident tiles are 16x64 + 64x16 + 16x16 floats ~= 9 KiB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] @ b_ref[...]
+
+
+def _pick_tile(dim: int, want: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``want`` (tile size helper)."""
+    t = min(want, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul(a, b, *, bm: int = 16, bn: int = 16):
+    """``a @ b`` via the tiled pallas kernel.
+
+    Args:
+      a: f32[M, K]
+      b: f32[K, N]
+      bm, bn: requested output tile sizes (clamped to divisors of M / N).
+
+    Returns: f32[M, N]
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    tm, tn = _pick_tile(m, bm), _pick_tile(n, bn)
+
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // tm, n // tn),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+@jax.custom_vjp
+def dense(x, w, b):
+    """Dense layer ``x @ w + b`` with pallas compute in fwd and bwd."""
+    return matmul(x, w) + b
+
+
+def _dense_fwd(x, w, b):
+    return dense(x, w, b), (x, w)
+
+
+def _dense_bwd(res, g):
+    x, w = res
+    dx = matmul(g, w.T)          # [M, K]
+    dw = matmul(x.T, g)          # [K, N]
+    db = jnp.sum(g, axis=0)      # [N]
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

@@ -1,0 +1,47 @@
+"""Linear decision-score kernel: ``scores = X @ w + b``.
+
+Used by the evaluation artifact (the rust coordinator turns raw scores
+into accuracy / precision / recall / F1 / ROC-AUC, which need the full
+score vector, not just predictions). Tiled over row blocks like the hinge
+kernel so X streams through VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scores_kernel(x_ref, w_ref, b_ref, o_ref):
+    o_ref[...] = x_ref[...] @ w_ref[...] + b_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def linear_scores(x, w, b, *, block_rows: int = 16):
+    """Decision scores for a block of rows.
+
+    Args:
+      x: f32[B, F]; w: f32[F]; b: f32[1].
+      block_rows: rows per grid step; must divide B.
+
+    Returns: f32[B] raw margins (sign = predicted class).
+    """
+    batch, feat = x.shape
+    if batch % block_rows != 0:
+        raise ValueError(f"block_rows {block_rows} must divide batch {batch}")
+
+    return pl.pallas_call(
+        _scores_kernel,
+        grid=(batch // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, feat), lambda i: (i, 0)),
+            pl.BlockSpec((feat,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((batch,), x.dtype),
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,208 @@
+"""Layer-2 JAX compute graphs for the SCALE stack.
+
+Each public function here is one AOT artifact: ``aot.py`` jits it,
+lowers it to HLO text, and the rust coordinator executes it through PJRT
+on the hot path. All shapes are static (see ``Dims``); variable-size
+client datasets are padded + masked by the rust side.
+
+Two model families share the same artifact interface (so the coordinator
+is model-agnostic):
+
+* **SVM** — linear SVM trained by hinge-loss + L2 subgradient descent.
+  This is the paper's own workload (scikit-learn SVC on Breast Cancer
+  Wisconsin ≈ linear-kernel SVC ≈ this model; see DESIGN.md §2).
+* **MLP** — one-hidden-layer tanh network with logistic loss, proving the
+  stack generalises beyond the paper's linear model. All matrix products
+  (fwd and bwd) run through the pallas ``matmul`` kernel.
+
+Packed parameter layout (f32 vectors, so aggregation is a masked mean
+over a bank of flat vectors):
+
+* SVM: ``[w_0..w_{F-1} | b]``                          → D = F + 1 = 33
+* MLP: ``[W1 (F*H) | b1 (H) | W2 (H) | b2 (1)]``       → D = 545
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import aggregate as agg_k
+from compile.kernels import hinge as hinge_k
+from compile.kernels import matmul as mm_k
+from compile.kernels import scores as scores_k
+
+
+@dataclasses.dataclass(frozen=True)
+class Dims:
+    """Static shape contract shared with the rust coordinator.
+
+    ``batch``    rows per training/eval call (clients pad + mask to this);
+    ``features`` padded feature count (WDBC's 30 → 32 for lane alignment);
+    ``bank``     max rows in an aggregation bank (max cluster size + 1);
+    ``hidden``   MLP hidden width.
+    """
+
+    batch: int = 64
+    features: int = 32
+    bank: int = 16
+    hidden: int = 16
+
+    @property
+    def svm_dim(self) -> int:
+        return self.features + 1
+
+    @property
+    def mlp_dim(self) -> int:
+        f, h = self.features, self.hidden
+        return f * h + h + h + 1
+
+
+DIMS = Dims()
+
+
+# --------------------------------------------------------------------------
+# SVM (paper workload)
+# --------------------------------------------------------------------------
+
+def _svm_unpack(params):
+    return params[:-1], params[-1:]
+
+
+def svm_train_step(x, y, mask, params, lr, reg):
+    """One full-batch hinge-loss subgradient step.
+
+    Args:
+      x: f32[B, F]; y: f32[B] in {-1,+1}; mask: f32[B] in {0,1};
+      params: f32[F+1] packed ``[w | b]``; lr, reg: f32 scalars.
+
+    Returns:
+      (params' f32[F+1], loss f32[]) — loss is the *pre-step* regularised
+      objective ``mean_hinge + reg/2 * ||w||²``, which the coordinator uses
+      for checkpoint gating and convergence traces.
+    """
+    w, b = _svm_unpack(params)
+    gw_sum, gb_sum, loss_sum, n = hinge_k.hinge_grad_sums(x, y, mask, w, b)
+    n = jnp.maximum(n[0], 1.0)
+    grad_w = gw_sum / n + reg * w
+    grad_b = gb_sum[0] / n
+    loss = loss_sum[0] / n + 0.5 * reg * jnp.sum(w * w)
+    new = jnp.concatenate([w - lr * grad_w, (b - lr * grad_b)])
+    return new, loss
+
+
+def svm_train_loop(x, y, mask, params, lr, reg, steps):
+    """`steps` full-batch hinge subgradient steps in ONE executable.
+
+    Perf-path variant of ``svm_train_step`` (EXPERIMENTS.md §Perf): the
+    coordinator's local-training inner loop (``local_epochs`` steps over
+    the same padded batch) runs as a single XLA while-loop, cutting PJRT
+    dispatch + host<->device transfer count by the epoch factor. ``steps``
+    is a traced i32 scalar so one artifact serves every epoch setting.
+
+    Returns (params', last pre-step loss).
+    """
+
+    def body(_, carry):
+        p, _loss = carry
+        return svm_train_step(x, y, mask, p, lr, reg)
+
+    return jax.lax.fori_loop(
+        0, steps, body, (params, jnp.float32(0.0))
+    )
+
+
+def svm_scores(x, params):
+    """Decision scores f32[B] for evaluation (sign = class)."""
+    w, b = _svm_unpack(params)
+    return scores_k.linear_scores(x, w, b)
+
+
+def svm_init(dims: Dims = DIMS):
+    """Zero-initialised packed SVM parameters (deterministic)."""
+    return jnp.zeros((dims.svm_dim,), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# MLP (generalisation workload)
+# --------------------------------------------------------------------------
+
+def _mlp_unpack(params, dims: Dims = DIMS):
+    f, h = dims.features, dims.hidden
+    w1 = params[: f * h].reshape(f, h)
+    b1 = params[f * h : f * h + h]
+    w2 = params[f * h + h : f * h + 2 * h].reshape(h, 1)
+    b2 = params[f * h + 2 * h :]
+    return w1, b1, w2, b2
+
+
+def _mlp_forward(x, params, dims: Dims = DIMS):
+    w1, b1, w2, b2 = _mlp_unpack(params, dims)
+    hidden = jnp.tanh(mm_k.dense(x, w1, b1))          # [B, H] — pallas
+    out = mm_k.dense(hidden, w2, b2)                  # [B, 1] — pallas
+    return out[:, 0]
+
+
+def _mlp_loss(params, x, y, mask, reg, dims: Dims = DIMS):
+    scores = _mlp_forward(x, params, dims)
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    # logistic loss on ±1 labels, masked mean
+    per_row = jnp.logaddexp(0.0, -y * scores)
+    data = jnp.sum(mask * per_row) / n
+    return data + 0.5 * reg * jnp.sum(params * params)
+
+
+def mlp_train_step(x, y, mask, params, lr, reg, dims: Dims = DIMS):
+    """One full-batch gradient step on the logistic objective.
+
+    Same interface as ``svm_train_step`` with D = ``dims.mlp_dim``; the
+    backward pass runs through the pallas ``dense`` custom-VJP.
+    """
+    loss, grads = jax.value_and_grad(_mlp_loss)(params, x, y, mask, reg, dims)
+    return params - lr * grads, loss
+
+
+def mlp_train_loop(x, y, mask, params, lr, reg, steps, dims: Dims = DIMS):
+    """Multi-step MLP training loop (see ``svm_train_loop``)."""
+
+    def body(_, carry):
+        p, _loss = carry
+        return mlp_train_step(x, y, mask, p, lr, reg, dims)
+
+    return jax.lax.fori_loop(
+        0, steps, body, (params, jnp.float32(0.0))
+    )
+
+
+def mlp_scores(x, params, dims: Dims = DIMS):
+    """Decision scores f32[B] (sign = class)."""
+    return _mlp_forward(x, params, dims)
+
+
+def mlp_init(seed: int = 0, dims: Dims = DIMS):
+    """Small-scale Glorot-ish init, deterministic in ``seed``."""
+    f, h = dims.features, dims.hidden
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    w1 = jax.random.normal(k1, (f, h), jnp.float32) * (1.0 / jnp.sqrt(f))
+    w2 = jax.random.normal(k2, (h, 1), jnp.float32) * (1.0 / jnp.sqrt(h))
+    return jnp.concatenate(
+        [w1.reshape(-1), jnp.zeros((h,)), w2.reshape(-1), jnp.zeros((1,))]
+    ).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Aggregation (eq 9 peer exchange / eq 10 driver consensus)
+# --------------------------------------------------------------------------
+
+def aggregate(bank, mask):
+    """Masked mean over a bank of packed parameter vectors.
+
+    Args:
+      bank: f32[K, D] stacked parameter vectors; mask: f32[K] validity.
+
+    Returns: f32[D].
+    """
+    return agg_k.masked_mean(bank, mask)

@@ -1,0 +1,96 @@
+"""AOT path: lowering produces parseable single-module HLO text and a
+manifest whose shapes match the model contract."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+from compile.model import DIMS
+
+
+def test_entries_cover_all_artifacts():
+    names = {e["name"] for e in aot.build_entries()}
+    assert names == {
+        "svm_train_step", "svm_train_loop", "svm_scores",
+        "mlp_train_step", "mlp_train_loop", "mlp_scores",
+        "aggregate_svm", "aggregate_mlp",
+    }
+
+
+def test_lowered_hlo_text_shape():
+    import jax
+
+    entry = next(e for e in aot.build_entries() if e["name"] == "aggregate_svm")
+    lowered = jax.jit(entry["fn"]).lower(*entry["args"])
+    text = aot.to_hlo_text(lowered)
+    # HLO text module header + ENTRY computation
+    assert text.startswith("HloModule"), text[:60]
+    assert "ENTRY" in text
+    # static shapes visible in the signature
+    assert f"f32[{DIMS.bank},{DIMS.svm_dim}]" in text
+    # exactly one module (rust loader expects a single module per file)
+    assert text.count("HloModule") == 1
+
+
+def test_cli_writes_artifacts_and_manifest(tmp_path):
+    out = tmp_path / "arts"
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out),
+         "--only", "aggregate_svm,svm_scores"],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert set(manifest["artifacts"]) == {"aggregate_svm", "svm_scores"}
+    dims = manifest["dims"]
+    assert dims["batch"] == DIMS.batch
+    assert dims["svm_dim"] == DIMS.svm_dim
+    assert dims["raw_features"] == 30
+    for name, spec in manifest["artifacts"].items():
+        text = (out / spec["file"]).read_text()
+        assert text.startswith("HloModule"), name
+        import hashlib
+
+        assert spec["sha256"] == hashlib.sha256(text.encode()).hexdigest(), name
+        assert spec["inputs"] and spec["outputs"], name
+
+
+def test_manifest_io_specs_match_model_dims():
+    entries = {e["name"]: e for e in aot.build_entries()}
+    ts = entries["svm_train_step"]
+    shapes = {n: io["shape"] for n, io in ts["inputs"]}
+    assert shapes["x"] == [DIMS.batch, DIMS.features]
+    assert shapes["params"] == [DIMS.svm_dim]
+    assert shapes["lr"] == []
+    outs = {n: io["shape"] for n, io in ts["outputs"]}
+    assert outs["params"] == [DIMS.svm_dim]
+    assert outs["loss"] == []
+
+    ag = entries["aggregate_mlp"]
+    shapes = {n: io["shape"] for n, io in ag["inputs"]}
+    assert shapes["bank"] == [DIMS.bank, DIMS.mlp_dim]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(
+        os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    ),
+    reason="artifacts not built",
+)
+def test_existing_artifacts_hash_clean():
+    """`make artifacts` output on disk must match its manifest (the rust
+    runtime enforces the same at load time)."""
+    import hashlib
+
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest = json.loads(open(os.path.join(root, "manifest.json")).read())
+    assert len(manifest["artifacts"]) == 8
+    for name, spec in manifest["artifacts"].items():
+        text = open(os.path.join(root, spec["file"])).read()
+        assert spec["sha256"] == hashlib.sha256(text.encode()).hexdigest(), name

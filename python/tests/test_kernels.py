@@ -1,0 +1,178 @@
+"""L1 correctness: every pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes, masks, and value ranges; assertions are
+``allclose`` at f32 tolerances. This gate runs before `make artifacts`
+trusts the kernels enough to lower them.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aggregate, hinge, matmul, ref, scores
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32 = np.float32
+ATOL = 1e-4
+RTOL = 1e-4
+
+
+def rng_arrays(seed, *shapes, scale=2.0):
+    r = np.random.RandomState(seed)
+    return [r.uniform(-scale, scale, s).astype(F32) for s in shapes]
+
+
+def close(a, b, what=""):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=RTOL, atol=ATOL,
+                               err_msg=what)
+
+
+# -------------------------------------------------------------------------
+# hinge kernel
+# -------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    rows=st.sampled_from([16, 32, 64]),
+    feat=st.sampled_from([8, 32]),
+    block=st.sampled_from([8, 16]),
+    mask_frac=st.floats(0.0, 1.0),
+)
+def test_hinge_matches_ref(seed, rows, feat, block, mask_frac):
+    (x,) = rng_arrays(seed, (rows, feat))
+    r = np.random.RandomState(seed + 1)
+    y = r.choice([-1.0, 1.0], rows).astype(F32)
+    mask = (r.uniform(0, 1, rows) < mask_frac).astype(F32)
+    w = r.uniform(-1, 1, feat).astype(F32)
+    b = r.uniform(-1, 1, 1).astype(F32)
+
+    got = hinge.hinge_grad_sums(x, y, mask, w, b, block_rows=block)
+    want = ref.hinge_grad_sums_ref(x, y, mask, w, b)
+    for g, e, name in zip(got, want, ["gw", "gb", "loss", "n"]):
+        close(g, e, name)
+
+
+def test_hinge_fully_masked_is_zero():
+    x, = rng_arrays(0, (64, 32))
+    y = np.ones(64, F32)
+    mask = np.zeros(64, F32)
+    w = np.zeros(32, F32)
+    b = np.zeros(1, F32)
+    gw, gb, loss, n = hinge.hinge_grad_sums(x, y, mask, w, b)
+    assert float(jnp.abs(gw).max()) == 0.0
+    assert float(gb[0]) == 0.0 and float(loss[0]) == 0.0 and float(n[0]) == 0.0
+
+
+def test_hinge_rejects_bad_block():
+    x, = rng_arrays(0, (64, 32))
+    with pytest.raises(ValueError):
+        hinge.hinge_grad_sums(x, x[:, 0], x[:, 0], x[0], x[0, :1], block_rows=7)
+
+
+def test_hinge_active_margin_boundary():
+    # rows exactly at margin 1 - y*s = 0 are INACTIVE (strict >)
+    x = np.zeros((16, 8), F32)
+    x[:, 0] = 1.0
+    y = np.ones(16, F32)
+    w = np.zeros(8, F32)
+    w[0] = 1.0  # scores = 1 → margin = 0
+    mask = np.ones(16, F32)
+    b = np.zeros(1, F32)
+    gw, gb, loss, n = hinge.hinge_grad_sums(x, y, mask, w, b, block_rows=8)
+    close(gw, np.zeros(8), "gw at boundary")
+    assert float(loss[0]) == 0.0
+    assert float(n[0]) == 16.0
+
+
+# -------------------------------------------------------------------------
+# matmul / dense
+# -------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.sampled_from([8, 16, 64]),
+    k=st.sampled_from([8, 32, 64]),
+    n=st.sampled_from([1, 16, 32]),
+)
+def test_matmul_matches_ref(seed, m, k, n):
+    a, b = rng_arrays(seed, (m, k), (k, n))
+    close(matmul.matmul(a, b), ref.matmul_ref(a, b), "matmul")
+
+
+def test_matmul_shape_mismatch():
+    a, b = rng_arrays(0, (8, 4), (5, 8))
+    with pytest.raises(ValueError):
+        matmul.matmul(a, b)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_dense_forward_and_grads_match_ref(seed):
+    x, w = rng_arrays(seed, (16, 8), (8, 4))
+    b = rng_arrays(seed + 1, (4,))[0]
+    close(matmul.dense(x, w, b), ref.dense_ref(x, w, b), "dense fwd")
+
+    # backward: compare custom-vjp grads against jnp autodiff of the ref
+    def loss_k(x, w, b):
+        return jnp.sum(jnp.tanh(matmul.dense(x, w, b)) ** 2)
+
+    def loss_r(x, w, b):
+        return jnp.sum(jnp.tanh(ref.dense_ref(x, w, b)) ** 2)
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(x, w, b)
+    for a_, b_, name in zip(gk, gr, ["dx", "dw", "db"]):
+        close(a_, b_, name)
+
+
+# -------------------------------------------------------------------------
+# masked mean
+# -------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.sampled_from([4, 16]),
+    d=st.sampled_from([33, 64, 545]),
+    valid=st.integers(1, 16),
+)
+def test_masked_mean_matches_ref(seed, k, d, valid):
+    bank, = rng_arrays(seed, (k, d))
+    mask = np.zeros(k, F32)
+    mask[: min(valid, k)] = 1.0
+    close(aggregate.masked_mean(bank, mask), ref.masked_mean_ref(bank, mask), "mean")
+
+
+def test_masked_mean_single_row_identity():
+    bank, = rng_arrays(3, (16, 33))
+    mask = np.zeros(16, F32)
+    mask[7] = 1.0
+    close(aggregate.masked_mean(bank, mask), bank[7], "single row")
+
+
+def test_masked_mean_empty_mask_is_safe():
+    bank, = rng_arrays(4, (8, 16))
+    out = aggregate.masked_mean(bank, np.zeros(8, F32))
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+# -------------------------------------------------------------------------
+# linear scores
+# -------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), block=st.sampled_from([8, 16, 32]))
+def test_linear_scores_matches_ref(seed, block):
+    x, = rng_arrays(seed, (64, 32))
+    w = rng_arrays(seed + 1, (32,))[0]
+    b = rng_arrays(seed + 2, (1,))[0]
+    close(
+        scores.linear_scores(x, w, b, block_rows=block),
+        ref.linear_scores_ref(x, w, b),
+        "scores",
+    )

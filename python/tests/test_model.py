@@ -1,0 +1,160 @@
+"""L2 behaviour: training dynamics, padding inertness, packing, shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.model import DIMS
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32 = np.float32
+
+
+def separable_batch(seed=0, n_valid=48):
+    """Linearly separable batch in the AOT contract shape."""
+    r = np.random.RandomState(seed)
+    b, f = DIMS.batch, DIMS.features
+    x = np.zeros((b, f), F32)
+    y = np.zeros(b, F32)
+    mask = np.zeros(b, F32)
+    labels = r.choice([-1.0, 1.0], n_valid)
+    x[:n_valid] = r.normal(0, 0.3, (n_valid, f))
+    x[:n_valid, 0] += labels * 1.5
+    y[:n_valid] = labels
+    mask[:n_valid] = 1.0
+    return jnp.array(x), jnp.array(y), jnp.array(mask)
+
+
+def test_svm_loss_decreases_and_classifies():
+    x, y, mask = separable_batch()
+    params = model.svm_init()
+    first = None
+    for _ in range(120):
+        params, loss = model.svm_train_step(x, y, mask, params, 0.1, 0.001)
+        first = first if first is not None else float(loss)
+    final_loss = float(model.svm_train_step(x, y, mask, params, 0.1, 0.001)[1])
+    assert final_loss < first * 0.5, (first, final_loss)
+    scores = model.svm_scores(x, params)
+    preds = np.sign(np.asarray(scores))[:48]
+    labels = np.asarray(y)[:48]
+    acc = float((preds == labels).mean())
+    assert acc > 0.95, acc
+
+
+def test_svm_padding_rows_inert():
+    x, y, mask = separable_batch()
+    params = model.svm_init()
+    # poison the masked-out region
+    x2 = np.asarray(x).copy()
+    x2[48:] = 1e6
+    y2 = np.asarray(y).copy()
+    y2[48:] = 1.0
+    p1, l1 = model.svm_train_step(x, y, mask, params, 0.1, 0.01)
+    p2, l2 = model.svm_train_step(jnp.array(x2), jnp.array(y2), mask, params, 0.1, 0.01)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-6)
+    assert float(l1) == float(l2)
+
+
+def test_svm_padded_feature_columns_stay_zero():
+    x, y, mask = separable_batch()
+    # zero the padding columns (30, 31) as the rust loader guarantees
+    x = x.at[:, 30:].set(0.0)
+    params = model.svm_init()
+    for _ in range(20):
+        params, _ = model.svm_train_step(x, y, mask, params, 0.1, 0.001)
+    w_pad = np.asarray(params)[30:32]
+    np.testing.assert_allclose(w_pad, 0.0, atol=1e-7)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_mlp_gradient_step_decreases_loss(seed):
+    x, y, mask = separable_batch(seed)
+    params = model.mlp_init(seed)
+    _, loss0 = model.mlp_train_step(x, y, mask, params, 0.0, 0.0)  # no-op step
+    p = params
+    for _ in range(60):
+        p, loss = model.mlp_train_step(x, y, mask, p, 0.2, 0.0)
+    assert float(loss) < float(loss0), (float(loss0), float(loss))
+
+
+def test_mlp_packing_roundtrip():
+    params = model.mlp_init(3)
+    assert params.shape == (DIMS.mlp_dim,)
+    w1, b1, w2, b2 = model._mlp_unpack(params)
+    assert w1.shape == (DIMS.features, DIMS.hidden)
+    assert b1.shape == (DIMS.hidden,)
+    assert w2.shape == (DIMS.hidden, 1)
+    assert b2.shape == (1,)
+    repacked = jnp.concatenate([w1.reshape(-1), b1, w2.reshape(-1), b2])
+    np.testing.assert_array_equal(np.asarray(repacked), np.asarray(params))
+
+
+def test_aggregate_is_masked_mean():
+    r = np.random.RandomState(0)
+    bank = r.normal(size=(DIMS.bank, DIMS.svm_dim)).astype(F32)
+    mask = np.zeros(DIMS.bank, F32)
+    mask[:5] = 1.0
+    out = model.aggregate(jnp.array(bank), jnp.array(mask))
+    np.testing.assert_allclose(np.asarray(out), bank[:5].mean(0), rtol=1e-5, atol=1e-6)
+
+
+def test_eq9_peer_average_via_aggregate():
+    # eq 9 with |N_i| = 2: mean of own + two peer vectors
+    own = np.full(DIMS.svm_dim, 1.0, F32)
+    p1 = np.full(DIMS.svm_dim, 4.0, F32)
+    p2 = np.full(DIMS.svm_dim, 7.0, F32)
+    bank = np.zeros((DIMS.bank, DIMS.svm_dim), F32)
+    bank[0], bank[1], bank[2] = own, p1, p2
+    mask = np.zeros(DIMS.bank, F32)
+    mask[:3] = 1.0
+    out = np.asarray(model.aggregate(jnp.array(bank), jnp.array(mask)))
+    np.testing.assert_allclose(out, 4.0, rtol=1e-6)
+
+
+def test_dims_contract():
+    assert DIMS.svm_dim == DIMS.features + 1 == 33
+    assert DIMS.mlp_dim == DIMS.features * DIMS.hidden + 2 * DIMS.hidden + 1 == 545
+    assert DIMS.batch % 16 == 0  # hinge kernel block divisibility
+
+
+def test_svm_train_loop_matches_repeated_steps():
+    import jax.numpy as jnp
+    from compile import model
+    x, y, mask = separable_batch(3)
+    params = model.svm_init()
+    p_loop, loss_loop = model.svm_train_loop(x, y, mask, params, 0.1, 0.001, 7)
+    p_iter = params
+    loss_iter = None
+    for _ in range(7):
+        p_iter, loss_iter = model.svm_train_step(x, y, mask, p_iter, 0.1, 0.001)
+    np.testing.assert_allclose(
+        np.asarray(p_loop), np.asarray(p_iter), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(float(loss_loop), float(loss_iter), rtol=1e-5)
+
+
+def test_mlp_train_loop_matches_repeated_steps():
+    import jax.numpy as jnp
+    from compile import model
+    x, y, mask = separable_batch(5)
+    params = model.mlp_init(2)
+    p_loop, _ = model.mlp_train_loop(x, y, mask, params, 0.1, 0.0, 4)
+    p_iter = params
+    for _ in range(4):
+        p_iter, _ = model.mlp_train_step(x, y, mask, p_iter, 0.1, 0.0)
+    np.testing.assert_allclose(
+        np.asarray(p_loop), np.asarray(p_iter), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_train_loop_zero_steps_is_identity():
+    from compile import model
+    x, y, mask = separable_batch(1)
+    params = model.svm_init() + 0.1
+    p, loss = model.svm_train_loop(x, y, mask, params, 0.1, 0.001, 0)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(params))
+    assert float(loss) == 0.0

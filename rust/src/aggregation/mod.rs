@@ -1,0 +1,189 @@
+//! Hybrid Decentralized Aggregation Protocol primitives (paper §3.3).
+//!
+//! The two halves of HDAP as pure, unit-testable functions over a
+//! [`ModelCompute`] backend:
+//!
+//! * [`peer_exchange`] — eq 9, synchronous gossip: every node averages its
+//!   *previous-round* weights with those received from its peer set `N_i`
+//!   (`w_i ← (w_i + Σ_{j∈N_i} w_j) / (|N_i|+1)`). All updates are computed
+//!   from the same snapshot, exactly as the equation is written.
+//! * [`driver_consensus`] — eq 10: the driver averages the post-exchange
+//!   weights of all live cluster members (`w_consensus = mean_i w_i`).
+//!
+//! Both route the actual mean through the backend's `aggregate`, i.e.
+//! through the `aggregate_*` pallas artifact in production.
+
+use anyhow::Result;
+
+use crate::runtime::compute::ModelCompute;
+
+/// Eq 9 over one cluster. `params[p]` are the weights of the member at
+/// position `p`; `peers[p]` are positions (see `topology::peer_sets`).
+/// Isolated nodes (empty peer set) keep their weights unchanged.
+pub fn peer_exchange(
+    compute: &dyn ModelCompute,
+    params: &[Vec<f32>],
+    peers: &[Vec<usize>],
+) -> Result<Vec<Vec<f32>>> {
+    anyhow::ensure!(params.len() == peers.len(), "params/peers length mismatch");
+    let mut out = Vec::with_capacity(params.len());
+    for (i, ps) in peers.iter().enumerate() {
+        if ps.is_empty() {
+            out.push(params[i].clone());
+            continue;
+        }
+        // own weights first, then each peer's snapshot
+        let mut bank: Vec<&[f32]> = Vec::with_capacity(ps.len() + 1);
+        bank.push(&params[i]);
+        for &j in ps {
+            anyhow::ensure!(j < params.len(), "peer index {j} out of range");
+            bank.push(&params[j]);
+        }
+        out.push(compute.aggregate(&bank)?);
+    }
+    Ok(out)
+}
+
+/// Eq 10: driver-side consensus over the cluster's post-exchange weights.
+pub fn driver_consensus(
+    compute: &dyn ModelCompute,
+    params: &[Vec<f32>],
+) -> Result<Vec<f32>> {
+    anyhow::ensure!(!params.is_empty(), "consensus over empty cluster");
+    let bank: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+    compute.aggregate(&bank)
+}
+
+/// Convergence diagnostic: maximum pairwise L2 distance between member
+/// parameter vectors (gossip should shrink this every exchange round).
+pub fn dispersion(params: &[Vec<f32>]) -> f64 {
+    let mut worst = 0.0f64;
+    for i in 0..params.len() {
+        for j in (i + 1)..params.len() {
+            let d: f64 = params[i]
+                .iter()
+                .zip(&params[j])
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            worst = worst.max(d);
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::compute::NativeSvm;
+    use crate::topology::{peer_sets, Topology};
+    use crate::util::rng::Rng;
+
+    fn compute() -> NativeSvm {
+        NativeSvm::new(NativeSvm::default_dims())
+    }
+
+    fn random_params(n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..33).map(|_| rng.f32() * 2.0 - 1.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn eq9_exact_on_ring_of_three() {
+        let c = compute();
+        let params = vec![vec![0.0f32; 33], vec![3.0f32; 33], vec![6.0f32; 33]];
+        let peers = peer_sets(Topology::Ring, &[0, 1, 2], 0, 0);
+        let out = peer_exchange(&c, &params, &peers).unwrap();
+        // ring of 3 = full graph: everyone averages all three → 3.0
+        for (i, p) in out.iter().enumerate() {
+            assert!(p.iter().all(|&v| (v - 3.0).abs() < 1e-6), "node {i}");
+        }
+    }
+
+    #[test]
+    fn eq9_uses_previous_round_snapshot() {
+        // chain 0-1-2 (node 1 has both peers; 0 and 2 only node 1).
+        let c = compute();
+        let params = vec![vec![0.0f32; 33], vec![3.0f32; 33], vec![12.0f32; 33]];
+        let peers = vec![vec![1], vec![0, 2], vec![1]];
+        let out = peer_exchange(&c, &params, &peers).unwrap();
+        // node0 = (0+3)/2 = 1.5 — NOT affected by node1's concurrent update
+        assert!((out[0][0] - 1.5).abs() < 1e-6);
+        assert!((out[1][0] - 5.0).abs() < 1e-6);
+        assert!((out[2][0] - 7.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn isolated_node_unchanged() {
+        let c = compute();
+        let params = random_params(2, 1);
+        let peers = vec![vec![], vec![]];
+        let out = peer_exchange(&c, &params, &peers).unwrap();
+        assert_eq!(out, params);
+    }
+
+    #[test]
+    fn exchange_preserves_mean_on_regular_graphs() {
+        // on a k-regular graph eq 9 is a doubly-stochastic mixing step:
+        // the cluster mean is invariant
+        let c = compute();
+        let params = random_params(8, 2);
+        let peers = peer_sets(Topology::KRegular(4), &(0..8).collect::<Vec<_>>(), 0, 0);
+        let out = peer_exchange(&c, &params, &peers).unwrap();
+        let mean_of = |ps: &[Vec<f32>]| {
+            let mut m = vec![0.0f64; 33];
+            for p in ps {
+                for (a, &x) in m.iter_mut().zip(p) {
+                    *a += x as f64;
+                }
+            }
+            m.into_iter().map(|x| x / ps.len() as f64).collect::<Vec<_>>()
+        };
+        let before = mean_of(&params);
+        let after = mean_of(&out);
+        for (b, a) in before.iter().zip(&after) {
+            assert!((b - a).abs() < 1e-5, "{b} vs {a}");
+        }
+    }
+
+    #[test]
+    fn repeated_exchange_contracts_dispersion() {
+        let c = compute();
+        let mut params = random_params(10, 3);
+        let peers = peer_sets(Topology::KRegular(4), &(0..10).collect::<Vec<_>>(), 0, 0);
+        let d0 = dispersion(&params);
+        for _ in 0..8 {
+            params = peer_exchange(&c, &params, &peers).unwrap();
+        }
+        let d1 = dispersion(&params);
+        assert!(d1 < d0 * 0.2, "dispersion {d0} -> {d1}");
+    }
+
+    #[test]
+    fn eq10_is_plain_mean() {
+        let c = compute();
+        let params = vec![vec![1.0f32; 33], vec![2.0f32; 33], vec![6.0f32; 33]];
+        let w = driver_consensus(&c, &params).unwrap();
+        assert!(w.iter().all(|&v| (v - 3.0).abs() < 1e-6));
+        assert!(driver_consensus(&c, &[]).is_err());
+    }
+
+    #[test]
+    fn full_topology_one_round_reaches_consensus() {
+        let c = compute();
+        let params = random_params(6, 4);
+        let peers = peer_sets(Topology::Full, &(0..6).collect::<Vec<_>>(), 0, 0);
+        let out = peer_exchange(&c, &params, &peers).unwrap();
+        assert!(dispersion(&out) < 1e-5);
+    }
+
+    #[test]
+    fn dispersion_basics() {
+        assert_eq!(dispersion(&[]), 0.0);
+        assert_eq!(dispersion(&[vec![1.0; 4]]), 0.0);
+        let d = dispersion(&[vec![0.0; 4], vec![2.0; 4]]);
+        assert!((d - 4.0).abs() < 1e-9); // sqrt(4 * 2²)
+    }
+}

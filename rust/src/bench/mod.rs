@@ -1,0 +1,79 @@
+//! Tiny benchmarking harness (offline stand-in for `criterion`).
+//!
+//! `cargo bench` targets in `benches/` use `harness = false` and drive
+//! this module directly: warmup + timed iterations with mean / p50 / p95,
+//! plus markdown-ish table printing shared by the paper-table benches.
+
+use std::time::Instant;
+
+use crate::util::stats::percentile;
+
+/// Timing summary over all measured iterations.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub min_us: f64,
+}
+
+impl Timing {
+    pub fn format(&self) -> String {
+        format!(
+            "mean {:>10.2} µs  p50 {:>10.2} µs  p95 {:>10.2} µs  min {:>10.2} µs  (n={})",
+            self.mean_us, self.p50_us, self.p95_us, self.min_us, self.iters
+        )
+    }
+}
+
+/// Measure `f` with `warmup` unmeasured and `iters` measured calls.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    Timing {
+        iters: samples.len(),
+        mean_us: samples.iter().sum::<f64>() / samples.len() as f64,
+        p50_us: percentile(&samples, 50.0),
+        p95_us: percentile(&samples, 95.0),
+        min_us: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Print one named measurement row.
+pub fn report(name: &str, t: &Timing) {
+    println!("  {name:<44} {}", t.format());
+}
+
+/// Section banner for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let mut x = 0u64;
+        let t = bench(2, 50, || {
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert_eq!(t.iters, 50);
+        assert!(t.min_us <= t.p50_us);
+        assert!(t.p50_us <= t.p95_us + 1e-9);
+        assert!(t.mean_us > 0.0);
+        assert!(!t.format().is_empty());
+        std::hint::black_box(x);
+    }
+}

@@ -1,0 +1,448 @@
+//! Check-pointing (paper §3.3 / §4.2.3): the mechanism behind SCALE's
+//! 2850 → 235 global-update reduction.
+//!
+//! Every HDAP round produces a cluster model at the driver. Instead of
+//! forwarding each one to the global server (the traditional-FL pattern
+//! that Table 1 counts as 2850 updates), the driver *check-points* it
+//! locally and uploads only when the model meaningfully improved:
+//!
+//! * [`UploadGate`] — improvement gating on a validation metric
+//!   (higher-is-better). Uploads when `metric > best + min_delta`, always
+//!   on the first observation, and optionally force-uploads on the final
+//!   round so the global server never ends stale.
+//! * [`CheckpointStore`] — bounded in-memory ring of checkpoints with a
+//!   compact binary codec (magic/version header, zlib-compressed f32
+//!   payload, CRC-32 integrity) and disk persistence for driver-failover
+//!   handoff: a newly elected driver restores the cluster's latest
+//!   checkpoint instead of restarting the round.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use flate2::read::ZlibDecoder;
+use flate2::write::ZlibEncoder;
+use flate2::Compression;
+
+/// Gate decision for one round's cluster model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Send to the global server (counts as a `GlobalUpdate`).
+    Upload,
+    /// Keep locally only (counts as `CheckpointLocal`).
+    Skip,
+}
+
+/// Improvement-gated upload policy.
+#[derive(Clone, Debug)]
+pub struct UploadGate {
+    min_delta: f64,
+    best: Option<f64>,
+    uploads: u64,
+    skips: u64,
+}
+
+impl UploadGate {
+    /// `min_delta` — required improvement of the (higher-is-better)
+    /// validation metric before an upload is worth global traffic.
+    pub fn new(min_delta: f64) -> Self {
+        assert!(min_delta >= 0.0);
+        UploadGate { min_delta, best: None, uploads: 0, skips: 0 }
+    }
+
+    /// Observe this round's metric and decide.
+    pub fn observe(&mut self, metric: f64) -> Decision {
+        let upload = match self.best {
+            None => true,
+            Some(best) => metric > best + self.min_delta,
+        };
+        if upload {
+            self.best = Some(metric);
+            self.uploads += 1;
+            Decision::Upload
+        } else {
+            self.skips += 1;
+            Decision::Skip
+        }
+    }
+
+    /// Force an upload (used on the final round).
+    pub fn force(&mut self) -> Decision {
+        self.uploads += 1;
+        Decision::Upload
+    }
+
+    pub fn best(&self) -> Option<f64> {
+        self.best
+    }
+
+    pub fn uploads(&self) -> u64 {
+        self.uploads
+    }
+
+    pub fn skips(&self) -> u64 {
+        self.skips
+    }
+}
+
+/// Change-gated upload policy: upload while the cluster model is still
+/// *moving*, checkpoint locally once it has plateaued.
+///
+/// This is the gate that reproduces Table 1's upload pattern (235 of 300
+/// driver-rounds — i.e. most rounds upload, tapering as clusters
+/// converge): the driver uploads when the relative L2 change of the
+/// consensus parameters since the *last upload* exceeds `threshold`.
+#[derive(Clone, Debug)]
+pub struct DeltaGate {
+    threshold: f64,
+    last_uploaded: Option<Vec<f32>>,
+    uploads: u64,
+    skips: u64,
+}
+
+impl DeltaGate {
+    pub fn new(threshold: f64) -> Self {
+        assert!(threshold >= 0.0);
+        DeltaGate { threshold, last_uploaded: None, uploads: 0, skips: 0 }
+    }
+
+    /// Relative L2 distance `‖p − last‖ / (‖last‖ + ε)`.
+    fn rel_delta(last: &[f32], p: &[f32]) -> f64 {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in last.iter().zip(p) {
+            num += ((a - b) as f64).powi(2);
+            den += (*a as f64).powi(2);
+        }
+        num.sqrt() / (den.sqrt() + 1e-12)
+    }
+
+    /// Observe this round's consensus parameters and decide.
+    pub fn observe(&mut self, params: &[f32]) -> Decision {
+        let upload = match &self.last_uploaded {
+            None => true,
+            Some(last) => Self::rel_delta(last, params) > self.threshold,
+        };
+        if upload {
+            self.last_uploaded = Some(params.to_vec());
+            self.uploads += 1;
+            Decision::Upload
+        } else {
+            self.skips += 1;
+            Decision::Skip
+        }
+    }
+
+    /// Force an upload (final round).
+    pub fn force(&mut self, params: &[f32]) -> Decision {
+        self.last_uploaded = Some(params.to_vec());
+        self.uploads += 1;
+        Decision::Upload
+    }
+
+    pub fn uploads(&self) -> u64 {
+        self.uploads
+    }
+
+    pub fn skips(&self) -> u64 {
+        self.skips
+    }
+}
+
+/// One checkpointed cluster model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub round: u32,
+    pub metric: f64,
+    pub params: Vec<f32>,
+}
+
+const MAGIC: &[u8; 4] = b"SCKP";
+const VERSION: u8 = 1;
+
+/// Codec errors.
+#[derive(Debug, thiserror::Error)]
+pub enum CodecError {
+    #[error("bad magic / truncated header")]
+    BadHeader,
+    #[error("unsupported version {0}")]
+    BadVersion(u8),
+    #[error("crc mismatch (stored {stored:08x}, computed {computed:08x})")]
+    BadCrc { stored: u32, computed: u32 },
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Checkpoint {
+    /// Serialize: `SCKP | ver | round u32 | metric f64 | dim u32 |
+    /// crc32(payload) u32 | zlib(f32-le payload)`.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut raw = Vec::with_capacity(self.params.len() * 4);
+        for p in &self.params {
+            raw.extend_from_slice(&p.to_le_bytes());
+        }
+        let crc = crc32fast::hash(&raw);
+        let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(&raw).expect("zlib write");
+        let compressed = enc.finish().expect("zlib finish");
+
+        let mut out = Vec::with_capacity(25 + compressed.len());
+        out.extend_from_slice(MAGIC);
+        out.push(VERSION);
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&self.metric.to_le_bytes());
+        out.extend_from_slice(&(self.params.len() as u32).to_le_bytes());
+        out.extend_from_slice(&crc.to_le_bytes());
+        out.extend_from_slice(&compressed);
+        out
+    }
+
+    /// Decode and verify.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint, CodecError> {
+        if bytes.len() < 25 || &bytes[..4] != MAGIC {
+            return Err(CodecError::BadHeader);
+        }
+        let version = bytes[4];
+        if version != VERSION {
+            return Err(CodecError::BadVersion(version));
+        }
+        let round = u32::from_le_bytes(bytes[5..9].try_into().unwrap());
+        let metric = f64::from_le_bytes(bytes[9..17].try_into().unwrap());
+        let dim = u32::from_le_bytes(bytes[17..21].try_into().unwrap()) as usize;
+        let stored_crc = u32::from_le_bytes(bytes[21..25].try_into().unwrap());
+
+        let mut raw = Vec::with_capacity(dim * 4);
+        ZlibDecoder::new(&bytes[25..]).read_to_end(&mut raw)?;
+        if raw.len() != dim * 4 {
+            return Err(CodecError::BadHeader);
+        }
+        let computed = crc32fast::hash(&raw);
+        if computed != stored_crc {
+            return Err(CodecError::BadCrc { stored: stored_crc, computed });
+        }
+        let params = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Checkpoint { round, metric, params })
+    }
+}
+
+/// Bounded checkpoint ring with disk persistence.
+#[derive(Clone, Debug)]
+pub struct CheckpointStore {
+    capacity: usize,
+    entries: Vec<Checkpoint>,
+}
+
+impl CheckpointStore {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        CheckpointStore { capacity, entries: Vec::new() }
+    }
+
+    /// Append a checkpoint, evicting the oldest beyond capacity.
+    pub fn push(&mut self, cp: Checkpoint) {
+        self.entries.push(cp);
+        if self.entries.len() > self.capacity {
+            self.entries.remove(0);
+        }
+    }
+
+    pub fn latest(&self) -> Option<&Checkpoint> {
+        self.entries.last()
+    }
+
+    /// Highest-metric checkpoint (failover restore target).
+    pub fn best(&self) -> Option<&Checkpoint> {
+        self.entries.iter().max_by(|a, b| {
+            a.metric
+                .partial_cmp(&b.metric)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.round.cmp(&b.round))
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Persist the latest checkpoint to disk.
+    pub fn save_latest(&self, path: &Path) -> Result<(), CodecError> {
+        if let Some(cp) = self.latest() {
+            std::fs::write(path, cp.to_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Restore from disk into an empty store.
+    pub fn load(path: &Path, capacity: usize) -> Result<CheckpointStore, CodecError> {
+        let bytes = std::fs::read(path)?;
+        let cp = Checkpoint::from_bytes(&bytes)?;
+        let mut store = CheckpointStore::new(capacity);
+        store.push(cp);
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_uploads_only_on_improvement() {
+        let mut g = UploadGate::new(0.005);
+        assert_eq!(g.observe(0.50), Decision::Upload); // first is free
+        assert_eq!(g.observe(0.50), Decision::Skip);
+        assert_eq!(g.observe(0.504), Decision::Skip); // below min_delta
+        assert_eq!(g.observe(0.51), Decision::Upload);
+        assert_eq!(g.observe(0.40), Decision::Skip); // regression never uploads
+        assert_eq!(g.uploads(), 2);
+        assert_eq!(g.skips(), 3);
+        assert_eq!(g.best(), Some(0.51));
+    }
+
+    #[test]
+    fn gate_zero_delta_uploads_strict_improvements() {
+        let mut g = UploadGate::new(0.0);
+        g.observe(0.5);
+        assert_eq!(g.observe(0.5), Decision::Skip);
+        assert_eq!(g.observe(0.500001), Decision::Upload);
+    }
+
+    #[test]
+    fn gate_force() {
+        let mut g = UploadGate::new(1.0);
+        g.observe(0.9);
+        assert_eq!(g.observe(0.95), Decision::Skip);
+        assert_eq!(g.force(), Decision::Upload);
+        assert_eq!(g.uploads(), 2);
+    }
+
+    #[test]
+    fn tighter_gate_fewer_uploads() {
+        let metrics: Vec<f64> = (0..30).map(|i| 0.5 + 0.01 * (i as f64).sqrt()).collect();
+        let uploads = |delta: f64| {
+            let mut g = UploadGate::new(delta);
+            metrics.iter().for_each(|&m| {
+                g.observe(m);
+            });
+            g.uploads()
+        };
+        assert!(uploads(0.0) >= uploads(0.01));
+        assert!(uploads(0.01) >= uploads(0.05));
+        assert!(uploads(0.05) >= 1);
+    }
+
+    #[test]
+    fn delta_gate_uploads_while_moving() {
+        let mut g = DeltaGate::new(0.05);
+        let p0 = vec![1.0f32; 8];
+        assert_eq!(g.observe(&p0), Decision::Upload); // first free
+        // tiny drift: below threshold
+        let p1: Vec<f32> = p0.iter().map(|x| x * 1.001).collect();
+        assert_eq!(g.observe(&p1), Decision::Skip);
+        // accumulated drift vs LAST UPLOAD crosses the threshold
+        let p2: Vec<f32> = p0.iter().map(|x| x * 1.10).collect();
+        assert_eq!(g.observe(&p2), Decision::Upload);
+        // relative to the new baseline again
+        assert_eq!(g.observe(&p2), Decision::Skip);
+        assert_eq!(g.uploads(), 2);
+        assert_eq!(g.skips(), 2);
+    }
+
+    #[test]
+    fn delta_gate_zero_threshold_always_uploads_changes() {
+        let mut g = DeltaGate::new(0.0);
+        g.observe(&[1.0, 1.0]);
+        assert_eq!(g.observe(&[1.0, 1.0]), Decision::Skip); // identical
+        assert_eq!(g.observe(&[1.0, 1.000001]), Decision::Upload);
+    }
+
+    #[test]
+    fn delta_gate_force_resets_baseline() {
+        let mut g = DeltaGate::new(10.0); // never naturally uploads
+        assert_eq!(g.observe(&[1.0]), Decision::Upload);
+        assert_eq!(g.observe(&[5.0]), Decision::Skip);
+        assert_eq!(g.force(&[5.0]), Decision::Upload);
+        assert_eq!(g.uploads(), 2);
+    }
+
+    fn cp(round: u32, metric: f64, dim: usize) -> Checkpoint {
+        Checkpoint {
+            round,
+            metric,
+            params: (0..dim).map(|i| (i as f32).sin()).collect(),
+        }
+    }
+
+    #[test]
+    fn codec_roundtrip() {
+        for dim in [0usize, 1, 33, 545] {
+            let c = cp(7, 0.875, dim);
+            let bytes = c.to_bytes();
+            let back = Checkpoint::from_bytes(&bytes).unwrap();
+            assert_eq!(back, c, "dim {dim}");
+        }
+    }
+
+    #[test]
+    fn codec_rejects_corruption() {
+        let bytes = cp(1, 0.5, 33).to_bytes();
+        // header corruption
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(matches!(Checkpoint::from_bytes(&bad), Err(CodecError::BadHeader)));
+        // version bump
+        let mut bad = bytes.clone();
+        bad[4] = 9;
+        assert!(matches!(Checkpoint::from_bytes(&bad), Err(CodecError::BadVersion(9))));
+        // payload bitflip → crc or zlib failure, never silent corruption
+        let mut bad = bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xFF;
+        assert!(Checkpoint::from_bytes(&bad).is_err());
+        // truncation
+        assert!(Checkpoint::from_bytes(&bytes[..10]).is_err());
+    }
+
+    #[test]
+    fn compression_helps_on_smooth_params() {
+        let c = Checkpoint { round: 0, metric: 0.0, params: vec![0.25f32; 4096] };
+        let bytes = c.to_bytes();
+        assert!(bytes.len() < 4096 * 4 / 4, "compressed {} bytes", bytes.len());
+    }
+
+    #[test]
+    fn store_eviction_and_best() {
+        let mut s = CheckpointStore::new(3);
+        for (r, m) in [(0, 0.5), (1, 0.9), (2, 0.7), (3, 0.8)] {
+            s.push(cp(r, m, 8));
+        }
+        assert_eq!(s.len(), 3); // round 0 evicted
+        assert_eq!(s.latest().unwrap().round, 3);
+        assert_eq!(s.best().unwrap().round, 1); // 0.9 survived
+    }
+
+    #[test]
+    fn store_disk_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("scale_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cluster3.ckpt");
+        let mut s = CheckpointStore::new(4);
+        s.push(cp(11, 0.91, 33));
+        s.save_latest(&path).unwrap();
+        let restored = CheckpointStore::load(&path, 4).unwrap();
+        assert_eq!(restored.latest(), s.latest());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        let res = CheckpointStore::load(Path::new("/nonexistent/x.ckpt"), 1);
+        assert!(res.is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Minimal argument parser (offline stand-in for `clap`).
+//!
+//! Grammar: `scale <subcommand> [--flag value] [--switch] [positional…]`.
+//! Flags may be given as `--flag value` or `--flag=value`; unknown flags
+//! are an error (catches typos), and every flag access is typed.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+/// Declaration of what a subcommand accepts.
+#[derive(Clone, Debug, Default)]
+pub struct Spec {
+    /// Flags that take a value.
+    pub flags: &'static [&'static str],
+    /// Boolean switches.
+    pub switches: &'static [&'static str],
+}
+
+impl Args {
+    /// Parse `argv[1..]` against a spec (argv[1] = subcommand).
+    pub fn parse(argv: &[String], spec: &Spec) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        out.subcommand = it.next().cloned().unwrap_or_default();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if spec.switches.contains(&name.as_str()) {
+                    if inline.is_some() {
+                        bail!("switch --{name} takes no value");
+                    }
+                    out.switches.push(name);
+                } else if spec.flags.contains(&name.as_str()) {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .with_context(|| format!("--{name} needs a value"))?
+                            .clone(),
+                    };
+                    out.flags.insert(name, value);
+                } else {
+                    bail!("unknown flag --{name}");
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.flags
+            .get(name)
+            .map(|v| v.parse::<usize>().with_context(|| format!("--{name}={v} not an integer")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.flags
+            .get(name)
+            .map(|v| v.parse::<f64>().with_context(|| format!("--{name}={v} not a number")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>> {
+        self.flags
+            .get(name)
+            .map(|v| v.parse::<u64>().with_context(|| format!("--{name}={v} not an integer")))
+            .transpose()
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    const SPEC: Spec = Spec {
+        flags: &["nodes", "seed", "alpha"],
+        switches: &["table1", "verbose"],
+    };
+
+    #[test]
+    fn parses_flags_switches_positional() {
+        let a = Args::parse(&argv("run --nodes 100 --table1 out.json --seed=7"), &SPEC).unwrap();
+        assert_eq!(a.subcommand, "run");
+        assert_eq!(a.get_usize("nodes").unwrap(), Some(100));
+        assert_eq!(a.get_u64("seed").unwrap(), Some(7));
+        assert!(a.has("table1"));
+        assert!(!a.has("verbose"));
+        assert_eq!(a.positional, vec!["out.json"]);
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(Args::parse(&argv("run --bogus 1"), &SPEC).is_err());
+        assert!(Args::parse(&argv("run --nodes"), &SPEC).is_err());
+        assert!(Args::parse(&argv("run --nodes abc"), &SPEC)
+            .unwrap()
+            .get_usize("nodes")
+            .is_err());
+        assert!(Args::parse(&argv("run --table1=yes"), &SPEC).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv("bench"), &SPEC).unwrap();
+        assert_eq!(a.get_or("nodes", "10"), "10");
+        assert_eq!(a.get_f64("alpha").unwrap(), None);
+    }
+}

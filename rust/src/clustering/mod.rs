@@ -1,0 +1,489 @@
+//! Server-assisted cluster formation (paper §3.2, Algorithm 2).
+//!
+//! The global server receives each node's (decrypted) summary — schema
+//! fingerprint 𝒟𝒮, performance index 𝒫ℐ, geographic location 𝒢𝒫 — and
+//! forms clusters 𝒞 that "minimize intra-cluster variance while
+//! maximizing inter-cluster distances". We realise that as weighted
+//! k-means in a 4-dimensional normalised feature space:
+//!
+//! ```text
+//! φ(node) = [ w_ds · ds̃,  w_pi · pĩ,  w_gp · lat̃,  w_gp · loñ ]
+//! ```
+//!
+//! where each tilde is fleet-min–max-scaled (paper eq 3 reused), with
+//! k-means++ seeding, deterministic tie-breaking, empty-cluster repair,
+//! and optional size balancing (the paper's Table 1 clusters hold 8–12 of
+//! 100 nodes, i.e. roughly balanced). Quality metrics (intra-cluster
+//! variance, silhouette-style separation) feed the ablation benches.
+
+use crate::geo::GeoPoint;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// One node's clustering summary as seen by the server (post-decrypt).
+#[derive(Clone, Debug)]
+pub struct NodeSummary {
+    pub node_id: usize,
+    /// Data-similarity scalar (combined metadata score, eq 2).
+    pub data_score: f64,
+    /// Performance index (log-PI, eq 7, or compute-ability, eq 4).
+    pub perf_index: f64,
+    pub location: GeoPoint,
+}
+
+/// Weights of the three proximity axes (DESIGN.md §3; ablation knob).
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterWeights {
+    pub w_data: f64,
+    pub w_perf: f64,
+    pub w_geo: f64,
+}
+
+impl Default for ClusterWeights {
+    fn default() -> Self {
+        ClusterWeights { w_data: 1.0, w_perf: 0.5, w_geo: 1.5 }
+    }
+}
+
+/// Clustering configuration.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub n_clusters: usize,
+    pub weights: ClusterWeights,
+    pub max_iters: usize,
+    /// If set, rebalance so every cluster size is within
+    /// `[⌊n/k⌋ - slack, ⌈n/k⌉ + slack]`.
+    pub balance_slack: Option<usize>,
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            n_clusters: 10,
+            weights: ClusterWeights::default(),
+            max_iters: 50,
+            balance_slack: Some(2),
+            seed: 11,
+        }
+    }
+}
+
+/// Result: assignment per node + quality measures.
+#[derive(Clone, Debug)]
+pub struct Clustering {
+    /// `assignment[i]` = cluster of `summaries[i]`.
+    pub assignment: Vec<usize>,
+    pub n_clusters: usize,
+    /// Mean squared distance to own centroid (minimised objective).
+    pub intra_variance: f64,
+    /// Mean distance between distinct centroids (separation measure).
+    pub inter_distance: f64,
+    /// Iterations until convergence.
+    pub iterations: usize,
+}
+
+impl Clustering {
+    /// Node ids per cluster.
+    pub fn members(&self, summaries: &[NodeSummary]) -> Vec<Vec<usize>> {
+        let mut m = vec![Vec::new(); self.n_clusters];
+        for (i, &c) in self.assignment.iter().enumerate() {
+            m[c].push(summaries[i].node_id);
+        }
+        m
+    }
+
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut s = vec![0usize; self.n_clusters];
+        for &c in &self.assignment {
+            s[c] += 1;
+        }
+        s
+    }
+}
+
+/// Build the normalised 4-d feature vectors.
+fn featurize(summaries: &[NodeSummary], w: &ClusterWeights) -> Vec<[f64; 4]> {
+    let ds: Vec<f64> = summaries.iter().map(|s| s.data_score).collect();
+    let pi: Vec<f64> = summaries.iter().map(|s| s.perf_index).collect();
+    let lat: Vec<f64> = summaries.iter().map(|s| s.location.lat_deg).collect();
+    let lon: Vec<f64> = summaries.iter().map(|s| s.location.lon_deg).collect();
+    let ds = stats::minmax_scale(&ds, 0.0, 1.0);
+    let pi = stats::minmax_scale(&pi, 0.0, 1.0);
+    let lat = stats::minmax_scale(&lat, 0.0, 1.0);
+    let lon = stats::minmax_scale(&lon, 0.0, 1.0);
+    (0..summaries.len())
+        .map(|i| {
+            [
+                w.w_data * ds[i],
+                w.w_perf * pi[i],
+                w.w_geo * lat[i],
+                w.w_geo * lon[i],
+            ]
+        })
+        .collect()
+}
+
+#[inline]
+fn dist2(a: &[f64; 4], b: &[f64; 4]) -> f64 {
+    let mut s = 0.0;
+    for i in 0..4 {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// k-means++ seeding (deterministic given the rng).
+fn seed_centroids(points: &[[f64; 4]], k: usize, rng: &mut Rng) -> Vec<[f64; 4]> {
+    let mut centroids = Vec::with_capacity(k);
+    centroids.push(points[rng.index(points.len())]);
+    let mut d2: Vec<f64> = points.iter().map(|p| dist2(p, &centroids[0])).collect();
+    while centroids.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 1e-18 {
+            // all points coincide with existing centroids: pick round-robin
+            points[centroids.len() % points.len()]
+        } else {
+            let mut target = rng.f64() * total;
+            let mut pick = points.len() - 1;
+            for (i, &d) in d2.iter().enumerate() {
+                target -= d;
+                if target <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            points[pick]
+        };
+        centroids.push(next);
+        for (i, p) in points.iter().enumerate() {
+            d2[i] = d2[i].min(dist2(p, &next));
+        }
+    }
+    centroids
+}
+
+/// Run server-assisted cluster formation.
+pub fn form_clusters(summaries: &[NodeSummary], cfg: &ClusterConfig) -> Clustering {
+    let n = summaries.len();
+    assert!(n > 0, "no nodes to cluster");
+    let k = cfg.n_clusters.min(n).max(1);
+    let points = featurize(summaries, &cfg.weights);
+    let mut rng = Rng::new(cfg.seed);
+
+    let mut centroids = seed_centroids(&points, k, &mut rng);
+    let mut assignment = vec![0usize; n];
+    let mut iterations = 0;
+
+    for iter in 0..cfg.max_iters.max(1) {
+        iterations = iter + 1;
+        // assign step (deterministic tie-break on lower cluster index)
+        let mut changed = false;
+        for (i, p) in points.iter().enumerate() {
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for (c, cent) in centroids.iter().enumerate() {
+                let d = dist2(p, cent);
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        // update step with empty-cluster repair (steal farthest point
+        // from the most populous cluster)
+        let mut counts = vec![0usize; k];
+        for &c in &assignment {
+            counts[c] += 1;
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                let donor = (0..k).max_by_key(|&d| counts[d]).unwrap();
+                let victim = points
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| assignment[*i] == donor)
+                    .max_by(|(_, a), (_, b)| {
+                        dist2(a, &centroids[donor])
+                            .partial_cmp(&dist2(b, &centroids[donor]))
+                            .unwrap()
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap();
+                assignment[victim] = c;
+                counts[c] += 1;
+                counts[donor] -= 1;
+                changed = true;
+            }
+        }
+        let mut sums = vec![[0.0f64; 4]; k];
+        for (i, p) in points.iter().enumerate() {
+            let c = assignment[i];
+            for d in 0..4 {
+                sums[c][d] += p[d];
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for d in 0..4 {
+                    centroids[c][d] = sums[c][d] / counts[c] as f64;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    if let Some(slack) = cfg.balance_slack {
+        rebalance(&points, &mut assignment, &mut centroids, slack);
+    }
+
+    // quality metrics
+    let intra_variance = points
+        .iter()
+        .enumerate()
+        .map(|(i, p)| dist2(p, &centroids[assignment[i]]))
+        .sum::<f64>()
+        / n as f64;
+    let mut inter = Vec::new();
+    for a in 0..k {
+        for b in (a + 1)..k {
+            inter.push(dist2(&centroids[a], &centroids[b]).sqrt());
+        }
+    }
+    let inter_distance = stats::mean(&inter);
+
+    Clustering { assignment, n_clusters: k, intra_variance, inter_distance, iterations }
+}
+
+/// Greedy size rebalancing: move the cheapest-to-move nodes out of
+/// oversized clusters into the nearest undersized ones.
+fn rebalance(
+    points: &[[f64; 4]],
+    assignment: &mut [usize],
+    centroids: &mut [[f64; 4]],
+    slack: usize,
+) {
+    let n = points.len();
+    let k = centroids.len();
+    let target_lo = (n / k).saturating_sub(slack).max(1);
+    let target_hi = n.div_ceil(k) + slack;
+
+    loop {
+        let mut counts = vec![0usize; k];
+        for &c in assignment.iter() {
+            counts[c] += 1;
+        }
+        let over: Vec<usize> = (0..k).filter(|&c| counts[c] > target_hi).collect();
+        let under: Vec<usize> = (0..k).filter(|&c| counts[c] < target_lo).collect();
+        if over.is_empty() && under.is_empty() {
+            break;
+        }
+        // pick the move (node from an oversized or any cluster → an
+        // undersized / non-oversized cluster) with minimal added distance
+        let mut best: Option<(f64, usize, usize)> = None; // (cost, node, dst)
+        for (i, p) in points.iter().enumerate() {
+            let src = assignment[i];
+            let src_over = counts[src] > target_hi;
+            if !src_over && counts[src] <= target_lo {
+                continue;
+            }
+            for dst in 0..k {
+                if dst == src {
+                    continue;
+                }
+                let dst_ok = if !under.is_empty() {
+                    counts[dst] < target_lo
+                } else {
+                    src_over && counts[dst] < target_hi
+                };
+                if !dst_ok {
+                    continue;
+                }
+                let cost = dist2(p, &centroids[dst]) - dist2(p, &centroids[src]);
+                if best.map_or(true, |(c, _, _)| cost < c) {
+                    best = Some((cost, i, dst));
+                }
+            }
+        }
+        match best {
+            Some((_, node, dst)) => assignment[node] = dst,
+            None => break, // no legal move; accept the imbalance
+        }
+    }
+
+    // refresh centroids after moves
+    let mut counts = vec![0usize; k];
+    let mut sums = vec![[0.0f64; 4]; k];
+    for (i, p) in points.iter().enumerate() {
+        let c = assignment[i];
+        counts[c] += 1;
+        for d in 0..4 {
+            sums[c][d] += p[d];
+        }
+    }
+    for c in 0..k {
+        if counts[c] > 0 {
+            for d in 0..4 {
+                centroids[c][d] = sums[c][d] / counts[c] as f64;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summaries_two_metros(n: usize) -> Vec<NodeSummary> {
+        (0..n)
+            .map(|i| {
+                let east = i % 2 == 0;
+                NodeSummary {
+                    node_id: i,
+                    data_score: 100.0 + (i % 3) as f64,
+                    perf_index: 0.5 + 0.01 * (i % 5) as f64,
+                    location: if east {
+                        GeoPoint::new(40.7 + 0.01 * (i as f64 % 7.0), -74.0)
+                    } else {
+                        GeoPoint::new(34.0, -118.2 + 0.01 * (i as f64 % 7.0))
+                    },
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn two_metros_two_clusters_geo_dominant() {
+        let s = summaries_two_metros(40);
+        let cfg = ClusterConfig {
+            n_clusters: 2,
+            balance_slack: None,
+            ..Default::default()
+        };
+        let c = form_clusters(&s, &cfg);
+        // every east node shares a cluster; every west node the other
+        let east_cluster = c.assignment[0];
+        for (i, &a) in c.assignment.iter().enumerate() {
+            if i % 2 == 0 {
+                assert_eq!(a, east_cluster, "east node {i}");
+            } else {
+                assert_ne!(a, east_cluster, "west node {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_nodes_assigned_and_no_empty_cluster() {
+        let s = summaries_two_metros(100);
+        let cfg = ClusterConfig::default();
+        let c = form_clusters(&s, &cfg);
+        assert_eq!(c.assignment.len(), 100);
+        assert!(c.sizes().iter().all(|&n| n > 0), "sizes {:?}", c.sizes());
+    }
+
+    #[test]
+    fn balancing_bounds_sizes() {
+        let s = summaries_two_metros(100);
+        let cfg = ClusterConfig {
+            n_clusters: 10,
+            balance_slack: Some(2),
+            ..Default::default()
+        };
+        let c = form_clusters(&s, &cfg);
+        for &n in &c.sizes() {
+            assert!((8..=12).contains(&n), "cluster size {n} outside Table-1 band");
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let s = summaries_two_metros(60);
+        let cfg = ClusterConfig::default();
+        let a = form_clusters(&s, &cfg);
+        let b = form_clusters(&s, &cfg);
+        assert_eq!(a.assignment, b.assignment);
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let s = summaries_two_metros(3);
+        let cfg = ClusterConfig { n_clusters: 10, balance_slack: None, ..Default::default() };
+        let c = form_clusters(&s, &cfg);
+        assert_eq!(c.n_clusters, 3);
+        assert!(c.sizes().iter().all(|&n| n == 1));
+    }
+
+    #[test]
+    fn identical_points_dont_crash() {
+        let s: Vec<NodeSummary> = (0..20)
+            .map(|i| NodeSummary {
+                node_id: i,
+                data_score: 1.0,
+                perf_index: 1.0,
+                location: GeoPoint::new(40.0, -74.0),
+            })
+            .collect();
+        let cfg = ClusterConfig { n_clusters: 4, ..Default::default() };
+        let c = form_clusters(&s, &cfg);
+        assert_eq!(c.assignment.len(), 20);
+        assert!(c.sizes().iter().all(|&n| n > 0));
+        assert!(c.intra_variance >= 0.0);
+    }
+
+    #[test]
+    fn quality_improves_with_more_clusters() {
+        let s = summaries_two_metros(80);
+        let var_at = |k| {
+            form_clusters(
+                &s,
+                &ClusterConfig { n_clusters: k, balance_slack: None, ..Default::default() },
+            )
+            .intra_variance
+        };
+        assert!(var_at(8) <= var_at(2) + 1e-12);
+    }
+
+    #[test]
+    fn data_weight_groups_by_schema() {
+        // geo identical; data scores form two bands → w_data must split them
+        let s: Vec<NodeSummary> = (0..30)
+            .map(|i| NodeSummary {
+                node_id: i,
+                data_score: if i < 15 { 10.0 } else { 500.0 },
+                perf_index: 0.5,
+                location: GeoPoint::new(40.0, -74.0),
+            })
+            .collect();
+        let cfg = ClusterConfig {
+            n_clusters: 2,
+            weights: ClusterWeights { w_data: 2.0, w_perf: 0.0, w_geo: 0.0 },
+            balance_slack: None,
+            ..Default::default()
+        };
+        let c = form_clusters(&s, &cfg);
+        let c0 = c.assignment[0];
+        assert!(c.assignment[..15].iter().all(|&a| a == c0));
+        assert!(c.assignment[15..].iter().all(|&a| a != c0));
+    }
+
+    #[test]
+    fn members_roundtrip() {
+        let s = summaries_two_metros(20);
+        let c = form_clusters(&s, &ClusterConfig { n_clusters: 4, ..Default::default() });
+        let members = c.members(&s);
+        let total: usize = members.iter().map(|m| m.len()).sum();
+        assert_eq!(total, 20);
+        for (cluster, m) in members.iter().enumerate() {
+            for &id in m {
+                assert_eq!(c.assignment[id], cluster);
+            }
+        }
+    }
+}

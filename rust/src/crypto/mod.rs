@@ -1,0 +1,193 @@
+//! Authenticated envelope encryption for client → server summaries.
+//!
+//! Paper §3.1: client nodes compute feature-variance scores, performance
+//! indices and coordinates locally, then the summaries are "encrypted and
+//! transmitted to the global server". The paper names no scheme, so we use
+//! a standard symmetric envelope (DESIGN.md §2): **AES-128-CTR** for
+//! confidentiality with an **HMAC-SHA-256** tag in encrypt-then-MAC order,
+//! per-message random nonces, and per-node keys derived from a session
+//! root key with SHA-256 (HKDF-like expand: `SHA256(root || "node" || id)`).
+//!
+//! The CTR keystream is implemented directly on the vendored `aes` block
+//! cipher (the `ctr` stream-mode crate is not vendored): a 16-byte counter
+//! block `nonce(12) || be32(counter)` is encrypted per 16-byte chunk.
+
+use aes::cipher::{BlockEncrypt, KeyInit};
+use aes::Aes128;
+use hmac::{Hmac, Mac};
+use sha2::{Digest, Sha256};
+
+use crate::util::rng::Rng;
+
+type HmacSha256 = Hmac<Sha256>;
+
+/// Envelope layout constants.
+pub const NONCE_LEN: usize = 12;
+pub const TAG_LEN: usize = 32;
+
+/// Errors from envelope processing.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CryptoError {
+    #[error("ciphertext too short ({0} bytes)")]
+    TooShort(usize),
+    #[error("authentication tag mismatch")]
+    BadTag,
+}
+
+/// Per-node symmetric key pair (cipher key + MAC key).
+#[derive(Clone)]
+pub struct NodeKey {
+    enc: [u8; 16],
+    mac: [u8; 32],
+}
+
+impl NodeKey {
+    /// Derive the key for `node_id` from a session root key.
+    pub fn derive(root: &[u8; 32], node_id: u64) -> NodeKey {
+        let mut h = Sha256::new();
+        h.update(root);
+        h.update(b"scale-node-enc");
+        h.update(node_id.to_le_bytes());
+        let enc_full = h.finalize();
+        let mut enc = [0u8; 16];
+        enc.copy_from_slice(&enc_full[..16]);
+
+        let mut h = Sha256::new();
+        h.update(root);
+        h.update(b"scale-node-mac");
+        h.update(node_id.to_le_bytes());
+        let mac: [u8; 32] = h.finalize().into();
+        NodeKey { enc, mac }
+    }
+
+    /// Encrypt-then-MAC: returns `nonce || ciphertext || tag`.
+    pub fn seal(&self, plaintext: &[u8], rng: &mut Rng) -> Vec<u8> {
+        let mut nonce = [0u8; NONCE_LEN];
+        for chunk in nonce.chunks_mut(8) {
+            let r = rng.next_u64().to_le_bytes();
+            let n = chunk.len();
+            chunk.copy_from_slice(&r[..n]);
+        }
+        let mut out = Vec::with_capacity(NONCE_LEN + plaintext.len() + TAG_LEN);
+        out.extend_from_slice(&nonce);
+        let mut body = plaintext.to_vec();
+        ctr_xor(&self.enc, &nonce, &mut body);
+        out.extend_from_slice(&body);
+
+        let mut mac = <HmacSha256 as Mac>::new_from_slice(&self.mac).expect("hmac key");
+        mac.update(&out);
+        out.extend_from_slice(&mac.finalize().into_bytes());
+        out
+    }
+
+    /// Verify-then-decrypt the `seal` envelope.
+    pub fn open(&self, envelope: &[u8]) -> Result<Vec<u8>, CryptoError> {
+        if envelope.len() < NONCE_LEN + TAG_LEN {
+            return Err(CryptoError::TooShort(envelope.len()));
+        }
+        let (body, tag) = envelope.split_at(envelope.len() - TAG_LEN);
+        let mut mac = <HmacSha256 as Mac>::new_from_slice(&self.mac).expect("hmac key");
+        mac.update(body);
+        mac.verify_slice(tag).map_err(|_| CryptoError::BadTag)?;
+
+        let (nonce, ct) = body.split_at(NONCE_LEN);
+        let mut pt = ct.to_vec();
+        let mut n = [0u8; NONCE_LEN];
+        n.copy_from_slice(nonce);
+        ctr_xor(&self.enc, &n, &mut pt);
+        Ok(pt)
+    }
+}
+
+/// XOR `data` with the AES-128-CTR keystream for `(key, nonce)`.
+fn ctr_xor(key: &[u8; 16], nonce: &[u8; NONCE_LEN], data: &mut [u8]) {
+    let cipher = Aes128::new_from_slice(key).expect("aes key");
+    let mut counter: u32 = 0;
+    for chunk in data.chunks_mut(16) {
+        let mut block = [0u8; 16];
+        block[..NONCE_LEN].copy_from_slice(nonce);
+        block[NONCE_LEN..].copy_from_slice(&counter.to_be_bytes());
+        let mut ga = aes::cipher::generic_array::GenericArray::from(block);
+        cipher.encrypt_block(&mut ga);
+        for (b, k) in chunk.iter_mut().zip(ga.iter()) {
+            *b ^= k;
+        }
+        counter = counter.wrapping_add(1);
+    }
+}
+
+/// SHA-256 content hash (checkpoint integrity, artifact validation).
+pub fn sha256_hex(data: &[u8]) -> String {
+    let digest = Sha256::digest(data);
+    let mut s = String::with_capacity(64);
+    for b in digest {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key() -> NodeKey {
+        NodeKey::derive(&[7u8; 32], 42)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let k = key();
+        let mut rng = Rng::new(1);
+        for len in [0usize, 1, 15, 16, 17, 100, 4096] {
+            let msg: Vec<u8> = (0..len).map(|i| (i * 7 % 251) as u8).collect();
+            let env = k.seal(&msg, &mut rng);
+            assert_eq!(env.len(), NONCE_LEN + len + TAG_LEN);
+            assert_eq!(k.open(&env).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn tamper_detected() {
+        let k = key();
+        let mut rng = Rng::new(2);
+        let env = k.seal(b"summary: pi=0.83", &mut rng);
+        for i in 0..env.len() {
+            let mut bad = env.clone();
+            bad[i] ^= 0x01;
+            assert_eq!(k.open(&bad).unwrap_err(), CryptoError::BadTag, "byte {i}");
+        }
+    }
+
+    #[test]
+    fn wrong_key_rejected() {
+        let k1 = NodeKey::derive(&[1u8; 32], 0);
+        let k2 = NodeKey::derive(&[1u8; 32], 1);
+        let mut rng = Rng::new(3);
+        let env = k1.seal(b"hello", &mut rng);
+        assert_eq!(k2.open(&env).unwrap_err(), CryptoError::BadTag);
+    }
+
+    #[test]
+    fn nonce_uniqueness_gives_distinct_ciphertexts() {
+        let k = key();
+        let mut rng = Rng::new(4);
+        let a = k.seal(b"same message", &mut rng);
+        let b = k.seal(b"same message", &mut rng);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn too_short_rejected() {
+        let k = key();
+        assert!(matches!(k.open(&[0u8; 10]), Err(CryptoError::TooShort(10))));
+    }
+
+    #[test]
+    fn sha256_known_vector() {
+        // SHA256("abc")
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+    }
+}

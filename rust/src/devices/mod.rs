@@ -1,0 +1,248 @@
+//! Edge-device profiles and fleet generation.
+//!
+//! The paper evaluates SCALE in a *homogeneous environment* (the title):
+//! 100 similar edge devices spread across geographic sites. Physical
+//! devices are out of reach here, so the fleet is synthesised (DESIGN.md
+//! §2): each device gets hardware characteristics drawn around a common
+//! baseline with configurable spread (`heterogeneity = 0` → identical
+//! devices; larger values explore the non-homogeneous regime in the
+//! ablation benches), a geographic position scattered around one of a few
+//! metro anchors, and reliability/trust priors used by driver election.
+
+use crate::geo::GeoPoint;
+use crate::perf_index::{ComputeMetrics, OperationalMetrics};
+use crate::util::rng::Rng;
+
+/// Static description of one edge device.
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub id: usize,
+    /// Compute throughput, GFLOP/s.
+    pub gflops: f64,
+    /// Usable hardware threads.
+    pub threads: usize,
+    /// Memory, GiB.
+    pub mem_gib: f64,
+    /// Link bandwidth, Mbit/s.
+    pub bandwidth_mbps: f64,
+    /// Link base latency to the metro gateway, ms.
+    pub latency_ms: f64,
+    /// Battery capacity, Wh.
+    pub battery_wh: f64,
+    /// Average transmit energy, joules per MB.
+    pub tx_energy_j_per_mb: f64,
+    /// Average compute energy, joules per GFLOP.
+    pub compute_energy_j_per_gflop: f64,
+    /// Historical uptime fraction in [0, 1] (election criterion).
+    pub reliability: f64,
+    /// Security/trust prior in [0, 1] (election criterion).
+    pub trust: f64,
+    /// Geographic position.
+    pub location: GeoPoint,
+    /// Metro anchor index this device was scattered around.
+    pub metro: usize,
+}
+
+impl DeviceProfile {
+    /// Method-1 raw metrics (paper eq 4 inputs) derived from the profile.
+    pub fn compute_metrics(&self) -> ComputeMetrics {
+        ComputeMetrics {
+            compute_power: self.gflops,
+            energy_efficiency: 1.0 / self.compute_energy_j_per_gflop.max(1e-9),
+            latency_ms: self.latency_ms,
+            bandwidth_mbps: self.bandwidth_mbps,
+            concurrency: self.threads as f64,
+        }
+    }
+
+    /// Method-2 raw metrics (paper eq 5 inputs) under a nominal load.
+    pub fn operational_metrics(&self, rng: &mut Rng) -> OperationalMetrics {
+        // utilisation and goodput jitter a little per measurement window
+        let jitter = |r: &mut Rng| 1.0 + 0.05 * (r.f64() - 0.5);
+        OperationalMetrics {
+            cpu_utilization: (0.35 + 0.4 * (1.0 - self.gflops / 100.0).clamp(0.0, 1.0))
+                .clamp(0.05, 0.99)
+                * jitter(rng),
+            energy_consumption: (self.gflops * self.compute_energy_j_per_gflop).max(0.1)
+                * jitter(rng),
+            network_efficiency: (0.6 + 0.35 * (self.bandwidth_mbps / 200.0).min(1.0))
+                .clamp(0.05, 0.99)
+                * jitter(rng),
+            energy_efficiency: (1.0 / self.compute_energy_j_per_gflop.max(1e-9) / 10.0)
+                .clamp(0.01, 1.0)
+                * jitter(rng),
+        }
+    }
+
+    /// Seconds of compute for `gflop` of work on this device.
+    pub fn compute_seconds(&self, gflop: f64) -> f64 {
+        gflop / self.gflops.max(1e-9)
+    }
+
+    /// Joules to transmit `bytes` over the device link.
+    pub fn tx_energy_j(&self, bytes: u64) -> f64 {
+        bytes as f64 / 1.0e6 * self.tx_energy_j_per_mb
+    }
+}
+
+/// Fleet-generation parameters.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub n_devices: usize,
+    /// Relative spread of hardware characteristics (0 = identical).
+    pub heterogeneity: f64,
+    /// Number of metro anchors devices scatter around.
+    pub n_metros: usize,
+    /// Scatter radius around each anchor, km (approx, degrees-converted).
+    pub metro_radius_km: f64,
+    pub seed: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            n_devices: 100,
+            heterogeneity: 0.15,
+            n_metros: 10,
+            metro_radius_km: 25.0,
+            seed: 7,
+        }
+    }
+}
+
+/// Metro anchors: a spread of US city coordinates (enough for 12 metros;
+/// wraps around if more are requested).
+const METROS: [(f64, f64); 12] = [
+    (40.7128, -74.0060),  // New York
+    (34.0522, -118.2437), // Los Angeles
+    (41.8781, -87.6298),  // Chicago
+    (29.7604, -95.3698),  // Houston
+    (33.4484, -112.0740), // Phoenix
+    (39.9526, -75.1652),  // Philadelphia
+    (37.7273, -89.2168),  // Carbondale, IL
+    (47.6062, -122.3321), // Seattle
+    (25.7617, -80.1918),  // Miami
+    (39.7392, -104.9903), // Denver
+    (32.7767, -96.7970),  // Dallas
+    (42.3601, -71.0589),  // Boston
+];
+
+/// Generate a deterministic fleet of device profiles.
+pub fn generate_fleet(cfg: &FleetConfig) -> Vec<DeviceProfile> {
+    assert!(cfg.n_devices > 0 && cfg.n_metros > 0);
+    let rng = Rng::new(cfg.seed);
+    let h = cfg.heterogeneity.max(0.0);
+    // ~1 degree latitude ≈ 111.19 km
+    let radius_deg = cfg.metro_radius_km / 111.19;
+
+    (0..cfg.n_devices)
+        .map(|id| {
+            let mut r = rng.derive(id as u64);
+            let spread = |r: &mut Rng, base: f64| {
+                (base * (1.0 + h * r.normal())).max(base * 0.05)
+            };
+            let metro = id % cfg.n_metros;
+            let (alat, alon) = METROS[metro % METROS.len()];
+            let lat = alat + radius_deg * r.normal() * 0.5;
+            let lon = alon + radius_deg * r.normal() * 0.5
+                / alat.to_radians().cos().abs().max(0.2);
+            DeviceProfile {
+                id,
+                gflops: spread(&mut r, 40.0),
+                threads: (spread(&mut r, 4.0).round() as usize).clamp(1, 32),
+                mem_gib: spread(&mut r, 4.0),
+                bandwidth_mbps: spread(&mut r, 80.0),
+                latency_ms: spread(&mut r, 20.0),
+                battery_wh: spread(&mut r, 40.0),
+                tx_energy_j_per_mb: spread(&mut r, 2.5),
+                compute_energy_j_per_gflop: spread(&mut r, 0.5),
+                reliability: (0.95 + 0.05 * r.f64() - h * 0.3 * r.f64()).clamp(0.5, 1.0),
+                trust: (0.9 + 0.1 * r.f64() - h * 0.2 * r.f64()).clamp(0.3, 1.0),
+                location: GeoPoint::new(lat, lon),
+                metro,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geo::equirectangular_km;
+
+    #[test]
+    fn fleet_is_deterministic() {
+        let cfg = FleetConfig::default();
+        let a = generate_fleet(&cfg);
+        let b = generate_fleet(&cfg);
+        assert_eq!(a.len(), 100);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.gflops, y.gflops);
+            assert_eq!(x.location, y.location);
+        }
+    }
+
+    #[test]
+    fn homogeneous_fleet_is_identical_hardware() {
+        let cfg = FleetConfig { heterogeneity: 0.0, ..Default::default() };
+        let fleet = generate_fleet(&cfg);
+        let g0 = fleet[0].gflops;
+        assert!(fleet.iter().all(|d| (d.gflops - g0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn heterogeneity_increases_spread() {
+        let lo = generate_fleet(&FleetConfig { heterogeneity: 0.05, ..Default::default() });
+        let hi = generate_fleet(&FleetConfig { heterogeneity: 0.5, ..Default::default() });
+        let spread = |f: &[DeviceProfile]| {
+            let xs: Vec<f64> = f.iter().map(|d| d.gflops).collect();
+            crate::util::stats::std_dev(&xs)
+        };
+        assert!(spread(&hi) > spread(&lo) * 2.0);
+    }
+
+    #[test]
+    fn devices_cluster_near_metros() {
+        let cfg = FleetConfig { metro_radius_km: 25.0, ..Default::default() };
+        let fleet = generate_fleet(&cfg);
+        for d in &fleet {
+            let (alat, alon) = METROS[d.metro % METROS.len()];
+            let dist = equirectangular_km(d.location, GeoPoint::new(alat, alon));
+            // 0.5σ scatter at 25 km radius: allow a generous 5σ bound
+            assert!(dist < 125.0, "device {} is {dist} km from its metro", d.id);
+        }
+    }
+
+    #[test]
+    fn metro_assignment_round_robin() {
+        let cfg = FleetConfig { n_devices: 25, n_metros: 5, ..Default::default() };
+        let fleet = generate_fleet(&cfg);
+        for m in 0..5 {
+            assert_eq!(fleet.iter().filter(|d| d.metro == m).count(), 5);
+        }
+    }
+
+    #[test]
+    fn derived_metrics_positive_and_finite() {
+        let fleet = generate_fleet(&FleetConfig::default());
+        let mut rng = Rng::new(1);
+        for d in &fleet {
+            let cm = d.compute_metrics();
+            assert!(cm.compute_power > 0.0 && cm.compute_power.is_finite());
+            assert!(cm.energy_efficiency > 0.0);
+            let om = d.operational_metrics(&mut rng);
+            assert!(om.cpu_utilization > 0.0 && om.cpu_utilization <= 1.1);
+            assert!(om.energy_consumption > 0.0);
+            assert!(d.compute_seconds(1.0) > 0.0);
+            assert!(d.tx_energy_j(1_000_000) > 0.0);
+        }
+    }
+
+    #[test]
+    fn physical_helpers() {
+        let fleet = generate_fleet(&FleetConfig { heterogeneity: 0.0, ..Default::default() });
+        let d = &fleet[0];
+        assert!((d.compute_seconds(d.gflops) - 1.0).abs() < 1e-9);
+        assert!((d.tx_energy_j(1_000_000) - d.tx_energy_j_per_mb).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,262 @@
+//! Decentralized driver selection (paper §3.4, eq 11, Algorithm 4).
+//!
+//! After the decentralized weight exchange (and whenever the health
+//! monitor declares the current driver dead) the cluster elects a new
+//! driver:
+//!
+//! ```text
+//! L = argmax_{e_i ∈ ℰ}  Σ_j  ω_j · p_{j,i}
+//! ```
+//!
+//! over the paper's six criteria — computational capacity, network
+//! connectivity/bandwidth, battery/energy, reliability/availability,
+//! data representativeness, security/trustworthiness — each min–max
+//! normalised over the *live* candidates so no single axis dominates by
+//! unit choice. Ties break on lower node id (deterministic consensus:
+//! every node computes the same argmax from the same shared ballots).
+
+use crate::devices::DeviceProfile;
+use crate::util::stats::minmax_scale;
+
+/// The six election criteria of §3.4, as one ballot per candidate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Ballot {
+    pub node_id: usize,
+    /// Computational capacity (GFLOP/s).
+    pub compute: f64,
+    /// Network connectivity & bandwidth (Mbit/s).
+    pub network: f64,
+    /// Battery / energy resources (Wh remaining).
+    pub battery: f64,
+    /// Reliability & availability (historical uptime fraction).
+    pub reliability: f64,
+    /// Data representativeness (how close the node's label mix is to the
+    /// cluster's — 1 = identical distribution).
+    pub representativeness: f64,
+    /// Security & trustworthiness prior.
+    pub trust: f64,
+}
+
+impl Ballot {
+    /// Build a ballot from a device profile + current dynamic state.
+    pub fn from_profile(
+        d: &DeviceProfile,
+        battery_remaining_wh: f64,
+        representativeness: f64,
+    ) -> Ballot {
+        Ballot {
+            node_id: d.id,
+            compute: d.gflops,
+            network: d.bandwidth_mbps,
+            battery: battery_remaining_wh,
+            reliability: d.reliability,
+            representativeness,
+            trust: d.trust,
+        }
+    }
+}
+
+/// Criterion weights ω_j (defaults sum to 1; ablation knob).
+#[derive(Clone, Copy, Debug)]
+pub struct CriteriaWeights {
+    pub w_compute: f64,
+    pub w_network: f64,
+    pub w_battery: f64,
+    pub w_reliability: f64,
+    pub w_representativeness: f64,
+    pub w_trust: f64,
+}
+
+impl Default for CriteriaWeights {
+    fn default() -> Self {
+        CriteriaWeights {
+            w_compute: 0.25,
+            w_network: 0.20,
+            w_battery: 0.20,
+            w_reliability: 0.15,
+            w_representativeness: 0.10,
+            w_trust: 0.10,
+        }
+    }
+}
+
+/// Election outcome.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ElectionResult {
+    pub driver: usize,
+    /// `(node_id, composite score)` for every candidate, sorted by
+    /// descending score (the succession order used on driver failure).
+    pub ranking: Vec<(usize, f64)>,
+}
+
+/// Run eq 11 over the candidate ballots.
+///
+/// Panics on an empty candidate set (a cluster always has ≥ 1 live node
+/// by construction; the sim layer dissolves clusters that lose everyone).
+pub fn elect(ballots: &[Ballot], w: &CriteriaWeights) -> ElectionResult {
+    assert!(!ballots.is_empty(), "election with no candidates");
+
+    let col = |f: fn(&Ballot) -> f64| -> Vec<f64> {
+        minmax_scale(&ballots.iter().map(f).collect::<Vec<_>>(), 0.0, 1.0)
+    };
+    let compute = col(|b| b.compute);
+    let network = col(|b| b.network);
+    let battery = col(|b| b.battery);
+    let reliability = col(|b| b.reliability);
+    let representativeness = col(|b| b.representativeness);
+    let trust = col(|b| b.trust);
+
+    let mut ranking: Vec<(usize, f64)> = ballots
+        .iter()
+        .enumerate()
+        .map(|(i, b)| {
+            let score = w.w_compute * compute[i]
+                + w.w_network * network[i]
+                + w.w_battery * battery[i]
+                + w.w_reliability * reliability[i]
+                + w.w_representativeness * representativeness[i]
+                + w.w_trust * trust[i];
+            (b.node_id, score)
+        })
+        .collect();
+    // descending score, ascending id on ties (deterministic consensus)
+    ranking.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    ElectionResult { driver: ranking[0].0, ranking }
+}
+
+/// Representativeness criterion: 1 − total-variation distance between the
+/// node's label distribution and the cluster's.
+pub fn representativeness(node_pos_frac: f64, cluster_pos_frac: f64) -> f64 {
+    1.0 - (node_pos_frac - cluster_pos_frac).abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    fn ballot(id: usize, v: f64) -> Ballot {
+        Ballot {
+            node_id: id,
+            compute: v,
+            network: v,
+            battery: v,
+            reliability: v,
+            representativeness: v,
+            trust: v,
+        }
+    }
+
+    #[test]
+    fn dominant_candidate_wins() {
+        let ballots = vec![ballot(0, 0.2), ballot(1, 0.9), ballot(2, 0.5)];
+        let r = elect(&ballots, &CriteriaWeights::default());
+        assert_eq!(r.driver, 1);
+        assert_eq!(r.ranking[0].0, 1);
+        assert_eq!(r.ranking.last().unwrap().0, 0);
+    }
+
+    #[test]
+    fn tie_breaks_on_lower_id() {
+        let ballots = vec![ballot(7, 0.5), ballot(3, 0.5), ballot(9, 0.5)];
+        let r = elect(&ballots, &CriteriaWeights::default());
+        assert_eq!(r.driver, 3);
+        let ids: Vec<usize> = r.ranking.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![3, 7, 9]);
+    }
+
+    #[test]
+    fn single_candidate() {
+        let r = elect(&[ballot(42, 0.1)], &CriteriaWeights::default());
+        assert_eq!(r.driver, 42);
+        assert_eq!(r.ranking.len(), 1);
+    }
+
+    #[test]
+    fn weights_steer_the_choice() {
+        // node 0: compute monster, dead battery; node 1: the reverse
+        let b0 = Ballot { node_id: 0, compute: 100.0, network: 50.0, battery: 1.0,
+                          reliability: 0.9, representativeness: 0.9, trust: 0.9 };
+        let b1 = Ballot { node_id: 1, compute: 10.0, network: 50.0, battery: 40.0,
+                          reliability: 0.9, representativeness: 0.9, trust: 0.9 };
+        let compute_heavy = CriteriaWeights {
+            w_compute: 0.9, w_network: 0.02, w_battery: 0.02,
+            w_reliability: 0.02, w_representativeness: 0.02, w_trust: 0.02,
+        };
+        let battery_heavy = CriteriaWeights {
+            w_compute: 0.02, w_network: 0.02, w_battery: 0.9,
+            w_reliability: 0.02, w_representativeness: 0.02, w_trust: 0.02,
+        };
+        assert_eq!(elect(&[b0, b1], &compute_heavy).driver, 0);
+        assert_eq!(elect(&[b0, b1], &battery_heavy).driver, 1);
+    }
+
+    #[test]
+    fn representativeness_measure() {
+        assert_eq!(representativeness(0.4, 0.4), 1.0);
+        assert!((representativeness(0.1, 0.6) - 0.5).abs() < 1e-12);
+        assert!(representativeness(0.0, 1.0) <= 0.0 + 1e-12);
+    }
+
+    #[test]
+    fn scores_scale_invariant() {
+        // multiplying a raw criterion by 1000 must not change the outcome
+        // (min–max normalisation)
+        let mk = |scale: f64| {
+            vec![
+                Ballot { node_id: 0, compute: 10.0 * scale, network: 5.0, battery: 5.0,
+                         reliability: 0.5, representativeness: 0.5, trust: 0.5 },
+                Ballot { node_id: 1, compute: 90.0 * scale, network: 4.0, battery: 5.0,
+                         reliability: 0.5, representativeness: 0.5, trust: 0.5 },
+            ]
+        };
+        let w = CriteriaWeights::default();
+        assert_eq!(elect(&mk(1.0), &w).driver, elect(&mk(1000.0), &w).driver);
+    }
+
+    #[test]
+    #[should_panic(expected = "no candidates")]
+    fn empty_panics() {
+        elect(&[], &CriteriaWeights::default());
+    }
+
+    #[test]
+    fn property_winner_is_ranking_head_and_scores_sorted() {
+        check(&Config { cases: 100, ..Default::default() }, "election invariants", |g| {
+            let n = g.usize_in(1, 16);
+            let ballots: Vec<Ballot> = (0..n)
+                .map(|i| Ballot {
+                    node_id: i * 3 + 1,
+                    compute: g.f64_in(0.0, 100.0),
+                    network: g.f64_in(0.0, 200.0),
+                    battery: g.f64_in(0.0, 60.0),
+                    reliability: g.f64_in(0.0, 1.0),
+                    representativeness: g.f64_in(0.0, 1.0),
+                    trust: g.f64_in(0.0, 1.0),
+                })
+                .collect();
+            let r = elect(&ballots, &CriteriaWeights::default());
+            if r.ranking.len() != n {
+                return Err("ranking length".into());
+            }
+            if r.driver != r.ranking[0].0 {
+                return Err("driver != head of ranking".into());
+            }
+            for win in r.ranking.windows(2) {
+                if win[0].1 < win[1].1 - 1e-12 {
+                    return Err("ranking not sorted".into());
+                }
+            }
+            // every score within [0, Σw]
+            let wsum = 1.0;
+            if r.ranking.iter().any(|(_, s)| *s < -1e-12 || *s > wsum + 1e-9) {
+                return Err("score out of range".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,294 @@
+//! Feature-variance schema scoring (paper §3.1.1, eqs 1–2).
+//!
+//! Clients never ship raw data; they ship a **schema fingerprint** the
+//! global server uses to group nodes holding similar datasets:
+//!
+//! * **Method 1 — alphabetical schema-based scoring (eq 1).** Columns are
+//!   sorted alphabetically (the paper stresses this to keep identical
+//!   attributes scoring identically), then each attribute name
+//!   `a₇a₆…a₁a₀` is folded into a base-35 positional score
+//!   `Σ aᵢ·35^(i-1)` for i = 7…1. *As printed*, eq 1 weights `a₇` by
+//!   `35⁶` down to `a₁` by `35⁰` and the trailing character `a₀`
+//!   contributes nothing — we reproduce that literally (names are
+//!   right-padded / truncated to 8 characters first). Character values:
+//!   A=0…Z=25 per the paper; digits map to 26–34 to fill the base-35
+//!   alphabet; anything else maps to 34.
+//! * **Method 2 — combined metadata features (eq 2).**
+//!   `M = w_sorted · C_sorted + w_type · C_type`, where `C_sorted` is the
+//!   mean attribute score of the sorted column list and `C_type` the mean
+//!   data-type score.
+//!
+//! The dataset-level **feature-variance score** is the variance of the
+//! per-column scores — two clients with the same schema get *identical*
+//! scores (the property the clustering relies on), and schemas with more
+//! diverse column names land farther apart.
+
+use crate::util::stats;
+
+/// Column data types recognised by the schema scorer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    Float,
+    Int,
+    Bool,
+    Str,
+    DateTime,
+}
+
+impl DType {
+    /// Stable per-type score used by `C_type` in eq 2.
+    pub fn score(self) -> f64 {
+        match self {
+            DType::Float => 1.0,
+            DType::Int => 2.0,
+            DType::Bool => 3.0,
+            DType::Str => 4.0,
+            DType::DateTime => 5.0,
+        }
+    }
+}
+
+/// A dataset column: name + dtype.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Column {
+    pub name: String,
+    pub dtype: DType,
+}
+
+impl Column {
+    pub fn new(name: &str, dtype: DType) -> Self {
+        Column { name: name.to_string(), dtype }
+    }
+}
+
+/// Character value in the base-35 alphabet (A=0 … Z=25, 0–8 → 26–34).
+pub fn char_value(c: char) -> u64 {
+    match c {
+        'a'..='z' => c as u64 - 'a' as u64,
+        'A'..='Z' => c as u64 - 'A' as u64,
+        '0'..='8' => c as u64 - '0' as u64 + 26,
+        _ => 34,
+    }
+}
+
+/// Attribute score per eq 1 (literal reproduction — see module docs).
+pub fn attribute_score(name: &str) -> u64 {
+    // Right-pad with 'A' (value 0) / truncate to exactly 8 chars a7..a0.
+    let mut chars: Vec<char> = name.chars().take(8).collect();
+    while chars.len() < 8 {
+        chars.push('A');
+    }
+    // chars[0] = a7 … chars[7] = a0; eq 1 sums a7·35⁶ … a1·35⁰ (a0 unused).
+    let mut score: u64 = 0;
+    for (k, &c) in chars.iter().take(7).enumerate() {
+        let power = 6 - k as u32;
+        score += char_value(c) * 35u64.pow(power);
+    }
+    score
+}
+
+/// Sorted per-column attribute scores (Method 1).
+pub fn schema_scores(columns: &[Column]) -> Vec<f64> {
+    let mut sorted: Vec<&Column> = columns.iter().collect();
+    sorted.sort_by(|a, b| a.name.cmp(&b.name));
+    sorted.iter().map(|c| attribute_score(&c.name) as f64).collect()
+}
+
+/// Dataset-level feature-variance score (variance of column scores).
+pub fn feature_variance(columns: &[Column]) -> f64 {
+    stats::variance(&schema_scores(columns))
+}
+
+/// Weights for eq 2 (defaults favour name order per the paper's emphasis).
+#[derive(Clone, Copy, Debug)]
+pub struct MetadataWeights {
+    pub w_sorted: f64,
+    pub w_type: f64,
+}
+
+impl Default for MetadataWeights {
+    fn default() -> Self {
+        MetadataWeights { w_sorted: 0.7, w_type: 0.3 }
+    }
+}
+
+/// Combined metadata score `M` per eq 2 (Method 2).
+pub fn combined_metadata_score(columns: &[Column], w: MetadataWeights) -> f64 {
+    if columns.is_empty() {
+        return 0.0;
+    }
+    let scores = schema_scores(columns);
+    let c_sorted = stats::mean(&scores);
+    let types: Vec<f64> = columns.iter().map(|c| c.dtype.score()).collect();
+    let c_type = stats::mean(&types);
+    w.w_sorted * c_sorted + w.w_type * c_type
+}
+
+/// Schema fingerprint a client transmits (both methods + column count).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SchemaFingerprint {
+    pub feature_variance: f64,
+    pub combined_score: f64,
+    pub n_columns: usize,
+}
+
+/// Compute the full fingerprint for a client's schema.
+pub fn fingerprint(columns: &[Column], w: MetadataWeights) -> SchemaFingerprint {
+    SchemaFingerprint {
+        feature_variance: feature_variance(columns),
+        combined_score: combined_metadata_score(columns, w),
+        n_columns: columns.len(),
+    }
+}
+
+/// Normalised data-similarity distance between two fingerprints in [0, 1]
+/// (0 = identical schema). Uses relative difference of both scores.
+pub fn similarity_distance(a: &SchemaFingerprint, b: &SchemaFingerprint) -> f64 {
+    fn rel(x: f64, y: f64) -> f64 {
+        let denom = x.abs().max(y.abs());
+        if denom < f64::EPSILON {
+            0.0
+        } else {
+            ((x - y).abs() / denom).min(1.0)
+        }
+    }
+    let col_gap = if a.n_columns.max(b.n_columns) == 0 {
+        0.0
+    } else {
+        (a.n_columns as f64 - b.n_columns as f64).abs()
+            / a.n_columns.max(b.n_columns) as f64
+    };
+    (rel(a.feature_variance, b.feature_variance)
+        + rel(a.combined_score, b.combined_score)
+        + col_gap)
+        / 3.0
+}
+
+/// The 30 Breast Cancer Wisconsin (Diagnostic) feature columns — the
+/// schema the paper's experiment runs on (10 base measures × mean/SE/worst).
+pub fn wdbc_columns() -> Vec<Column> {
+    const BASES: [&str; 10] = [
+        "radius", "texture", "perimeter", "area", "smoothness",
+        "compactness", "concavity", "concave_points", "symmetry",
+        "fractal_dimension",
+    ];
+    const SUFFIXES: [&str; 3] = ["mean", "se", "worst"];
+    let mut cols = Vec::with_capacity(30);
+    for suffix in SUFFIXES {
+        for base in BASES {
+            cols.push(Column::new(&format!("{base}_{suffix}"), DType::Float));
+        }
+    }
+    cols
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn char_values_follow_paper() {
+        assert_eq!(char_value('A'), 0);
+        assert_eq!(char_value('a'), 0);
+        assert_eq!(char_value('B'), 1);
+        assert_eq!(char_value('Z'), 25);
+        assert_eq!(char_value('0'), 26);
+        assert_eq!(char_value('8'), 34);
+        assert_eq!(char_value('_'), 34);
+    }
+
+    #[test]
+    fn eq1_literal_example() {
+        // "B" → a7='B'(1), a6..a0 padding 'A'(0): score = 1·35⁶
+        assert_eq!(attribute_score("B"), 35u64.pow(6));
+        // "AB" → a7=0, a6=1 → 35⁵
+        assert_eq!(attribute_score("AB"), 35u64.pow(5));
+        // empty name scores 0
+        assert_eq!(attribute_score(""), 0);
+    }
+
+    #[test]
+    fn eq1_trailing_char_is_inert_as_printed() {
+        // 8-char names differing only in the last character (a0) score
+        // identically — the literal reading of eq 1.
+        assert_eq!(attribute_score("radiusXY"), attribute_score("radiusXZ"));
+        // but differing in a1 (7th char) they differ
+        assert_ne!(attribute_score("radiusXY"), attribute_score("radiusZY"));
+    }
+
+    #[test]
+    fn case_insensitive_scoring() {
+        assert_eq!(attribute_score("Radius"), attribute_score("radius"));
+    }
+
+    #[test]
+    fn identical_schemas_identical_scores() {
+        let a = wdbc_columns();
+        let mut b = wdbc_columns();
+        // column ORDER must not matter (alphabetical sort)
+        b.reverse();
+        assert_eq!(feature_variance(&a), feature_variance(&b));
+        let w = MetadataWeights::default();
+        assert_eq!(combined_metadata_score(&a, w), combined_metadata_score(&b, w));
+    }
+
+    #[test]
+    fn different_schema_different_scores() {
+        let a = wdbc_columns();
+        let b = vec![
+            Column::new("user_id", DType::Int),
+            Column::new("purchase", DType::Float),
+            Column::new("timestamp", DType::DateTime),
+        ];
+        assert_ne!(feature_variance(&a), feature_variance(&b));
+        let fa = fingerprint(&a, MetadataWeights::default());
+        let fb = fingerprint(&b, MetadataWeights::default());
+        assert!(similarity_distance(&fa, &fb) > 0.1);
+    }
+
+    #[test]
+    fn similarity_distance_is_metric_like() {
+        let fa = fingerprint(&wdbc_columns(), MetadataWeights::default());
+        assert_eq!(similarity_distance(&fa, &fa), 0.0);
+        let fb = fingerprint(
+            &[Column::new("x", DType::Int)],
+            MetadataWeights::default(),
+        );
+        let d1 = similarity_distance(&fa, &fb);
+        let d2 = similarity_distance(&fb, &fa);
+        assert_eq!(d1, d2);
+        assert!((0.0..=1.0).contains(&d1));
+    }
+
+    #[test]
+    fn wdbc_schema_shape() {
+        let cols = wdbc_columns();
+        assert_eq!(cols.len(), 30);
+        assert!(cols.iter().all(|c| c.dtype == DType::Float));
+        // 10 unique bases × 3 suffixes, all distinct names
+        let mut names: Vec<_> = cols.iter().map(|c| c.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 30);
+    }
+
+    #[test]
+    fn eq2_weights_blend() {
+        let cols = wdbc_columns();
+        let only_sorted =
+            combined_metadata_score(&cols, MetadataWeights { w_sorted: 1.0, w_type: 0.0 });
+        let only_type =
+            combined_metadata_score(&cols, MetadataWeights { w_sorted: 0.0, w_type: 1.0 });
+        // all-float schema: C_type = 1.0
+        assert!((only_type - 1.0).abs() < 1e-12);
+        let mixed =
+            combined_metadata_score(&cols, MetadataWeights { w_sorted: 0.5, w_type: 0.5 });
+        assert!((mixed - 0.5 * (only_sorted + only_type)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_schema() {
+        assert_eq!(feature_variance(&[]), 0.0);
+        assert_eq!(combined_metadata_score(&[], MetadataWeights::default()), 0.0);
+    }
+}

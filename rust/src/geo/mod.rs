@@ -1,0 +1,175 @@
+//! Geographic proximity evaluation (paper §3.2.1, eq 8).
+//!
+//! The global server clusters devices partly by geographic closeness. The
+//! paper's formula is the **equirectangular approximation**
+//!
+//! ```text
+//! distance = R * sqrt( (Δφ)² + (cos((φ₁+φ₂)/2) * Δλ)² )
+//! ```
+//!
+//! which we implement as the primary metric, with the haversine
+//! great-circle distance as a cross-check baseline (the approximation
+//! error is benched in `ablations`). Coordinates are degrees latitude /
+//! longitude; distances are kilometres.
+
+/// Mean Earth radius in kilometres (IUGG).
+pub const EARTH_RADIUS_KM: f64 = 6371.0088;
+
+/// A geographic coordinate in degrees.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GeoPoint {
+    pub lat_deg: f64,
+    pub lon_deg: f64,
+}
+
+impl GeoPoint {
+    pub fn new(lat_deg: f64, lon_deg: f64) -> Self {
+        GeoPoint { lat_deg, lon_deg }
+    }
+}
+
+/// Equirectangular approximation of the distance in km — paper eq 8.
+pub fn equirectangular_km(a: GeoPoint, b: GeoPoint) -> f64 {
+    let phi1 = a.lat_deg.to_radians();
+    let phi2 = b.lat_deg.to_radians();
+    let dphi = phi2 - phi1;
+    let dlambda = delta_lon_rad(a.lon_deg, b.lon_deg);
+    let x = ((phi1 + phi2) / 2.0).cos() * dlambda;
+    EARTH_RADIUS_KM * (dphi * dphi + x * x).sqrt()
+}
+
+/// Haversine great-circle distance in km (cross-check baseline).
+pub fn haversine_km(a: GeoPoint, b: GeoPoint) -> f64 {
+    let phi1 = a.lat_deg.to_radians();
+    let phi2 = b.lat_deg.to_radians();
+    let dphi = phi2 - phi1;
+    let dlambda = delta_lon_rad(a.lon_deg, b.lon_deg);
+    let s = (dphi / 2.0).sin().powi(2)
+        + phi1.cos() * phi2.cos() * (dlambda / 2.0).sin().powi(2);
+    2.0 * EARTH_RADIUS_KM * s.sqrt().min(1.0).asin()
+}
+
+/// Shortest signed longitude difference in radians (handles antimeridian).
+fn delta_lon_rad(lon1_deg: f64, lon2_deg: f64) -> f64 {
+    let mut d = (lon2_deg - lon1_deg) % 360.0;
+    if d > 180.0 {
+        d -= 360.0;
+    } else if d < -180.0 {
+        d += 360.0;
+    }
+    d.to_radians()
+}
+
+/// Pairwise distance matrix (row-major, symmetric, zero diagonal).
+pub fn distance_matrix(points: &[GeoPoint]) -> Vec<f64> {
+    let n = points.len();
+    let mut m = vec![0.0; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = equirectangular_km(points[i], points[j]);
+            m[i * n + j] = d;
+            m[j * n + i] = d;
+        }
+    }
+    m
+}
+
+/// Geographic centroid (arithmetic in degrees — adequate at metro scale,
+/// which is where SCALE clusters live).
+pub fn centroid(points: &[GeoPoint]) -> GeoPoint {
+    if points.is_empty() {
+        return GeoPoint::new(0.0, 0.0);
+    }
+    let n = points.len() as f64;
+    GeoPoint::new(
+        points.iter().map(|p| p.lat_deg).sum::<f64>() / n,
+        points.iter().map(|p| p.lon_deg).sum::<f64>() / n,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NYC: GeoPoint = GeoPoint { lat_deg: 40.7128, lon_deg: -74.0060 };
+    const LA: GeoPoint = GeoPoint { lat_deg: 34.0522, lon_deg: -118.2437 };
+    const CARBONDALE: GeoPoint = GeoPoint { lat_deg: 37.7273, lon_deg: -89.2168 };
+
+    #[test]
+    fn zero_distance_to_self() {
+        assert_eq!(equirectangular_km(NYC, NYC), 0.0);
+        assert_eq!(haversine_km(NYC, NYC), 0.0);
+    }
+
+    #[test]
+    fn symmetry() {
+        assert!((equirectangular_km(NYC, LA) - equirectangular_km(LA, NYC)).abs() < 1e-9);
+        assert!((haversine_km(NYC, LA) - haversine_km(LA, NYC)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nyc_la_ballpark() {
+        // true great-circle distance ≈ 3936 km
+        let h = haversine_km(NYC, LA);
+        assert!((h - 3936.0).abs() < 15.0, "haversine {h}");
+        let e = equirectangular_km(NYC, LA);
+        // the approximation is within ~1.5% at this span
+        assert!((e - h).abs() / h < 0.015, "equirect {e} vs haversine {h}");
+    }
+
+    #[test]
+    fn short_range_agreement() {
+        // at metro scale the approximation is essentially exact
+        let a = CARBONDALE;
+        let b = GeoPoint::new(37.78, -89.25);
+        let (e, h) = (equirectangular_km(a, b), haversine_km(a, b));
+        assert!(e > 1.0 && e < 20.0);
+        assert!((e - h).abs() < 0.01, "e={e} h={h}");
+    }
+
+    #[test]
+    fn antimeridian_wrap() {
+        let west = GeoPoint::new(0.0, 179.5);
+        let east = GeoPoint::new(0.0, -179.5);
+        let d = equirectangular_km(west, east);
+        // 1 degree of longitude at the equator ≈ 111.19 km
+        assert!((d - 111.19).abs() < 0.5, "wrap distance {d}");
+    }
+
+    #[test]
+    fn one_degree_latitude() {
+        let a = GeoPoint::new(10.0, 20.0);
+        let b = GeoPoint::new(11.0, 20.0);
+        let d = equirectangular_km(a, b);
+        assert!((d - 111.19).abs() < 0.5, "{d}");
+    }
+
+    #[test]
+    fn matrix_properties() {
+        let pts = [NYC, LA, CARBONDALE];
+        let m = distance_matrix(&pts);
+        for i in 0..3 {
+            assert_eq!(m[i * 3 + i], 0.0);
+            for j in 0..3 {
+                assert!((m[i * 3 + j] - m[j * 3 + i]).abs() < 1e-12);
+            }
+        }
+        assert!((m[1] - equirectangular_km(NYC, LA)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn centroid_of_symmetric_points() {
+        let pts = [GeoPoint::new(10.0, 20.0), GeoPoint::new(-10.0, -20.0)];
+        let c = centroid(&pts);
+        assert!(c.lat_deg.abs() < 1e-12 && c.lon_deg.abs() < 1e-12);
+        assert_eq!(centroid(&[]), GeoPoint::new(0.0, 0.0));
+    }
+
+    #[test]
+    fn triangle_inequality_haversine() {
+        let d_ab = haversine_km(NYC, CARBONDALE);
+        let d_bc = haversine_km(CARBONDALE, LA);
+        let d_ac = haversine_km(NYC, LA);
+        assert!(d_ac <= d_ab + d_bc + 1e-9);
+    }
+}

@@ -1,0 +1,214 @@
+//! Health-status verification (paper §3.4): heartbeats + failure detection.
+//!
+//! Drivers and members emit heartbeats each round; the monitor marks a
+//! node *suspected* after `suspect_after` missed beats and *dead* after
+//! `dead_after` (dead ⊇ suspected). A dead driver triggers Algorithm-4
+//! re-election in the sim layer; dead members are dropped from the peer
+//! topology until they recover. Recovery (a heartbeat from a suspected /
+//! dead node) fully reinstates it — the paper's mechanism is liveness
+//! monitoring, not membership consensus, so we keep the detector simple
+//! and deterministic.
+
+use std::collections::BTreeMap;
+
+/// Node liveness as judged by the monitor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    Alive,
+    Suspected,
+    Dead,
+}
+
+/// Failure-detector thresholds (in missed heartbeat rounds).
+#[derive(Clone, Copy, Debug)]
+pub struct HealthConfig {
+    pub suspect_after: usize,
+    pub dead_after: usize,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig { suspect_after: 1, dead_after: 2 }
+    }
+}
+
+/// Per-node record.
+#[derive(Clone, Copy, Debug)]
+struct NodeHealth {
+    last_beat_round: usize,
+    registered_round: usize,
+}
+
+/// The health monitor (one per cluster in the sim; cheap enough to be
+/// global too).
+#[derive(Clone, Debug)]
+pub struct HealthMonitor {
+    cfg: HealthConfig,
+    nodes: BTreeMap<usize, NodeHealth>,
+}
+
+impl HealthMonitor {
+    pub fn new(cfg: HealthConfig) -> Self {
+        assert!(cfg.dead_after >= cfg.suspect_after, "dead_after < suspect_after");
+        HealthMonitor { cfg, nodes: BTreeMap::new() }
+    }
+
+    /// Register a node at `round` (treated as having just beaten).
+    pub fn register(&mut self, node: usize, round: usize) {
+        self.nodes.insert(
+            node,
+            NodeHealth { last_beat_round: round, registered_round: round },
+        );
+    }
+
+    /// Record a heartbeat from `node` at `round` (auto-registers unknown
+    /// nodes — recovery path).
+    pub fn heartbeat(&mut self, node: usize, round: usize) {
+        match self.nodes.get_mut(&node) {
+            Some(h) => h.last_beat_round = h.last_beat_round.max(round),
+            None => self.register(node, round),
+        }
+    }
+
+    /// Evaluate a node's state as of `round`.
+    pub fn state(&self, node: usize, round: usize) -> HealthState {
+        match self.nodes.get(&node) {
+            None => HealthState::Dead,
+            Some(h) => {
+                let missed = round.saturating_sub(h.last_beat_round);
+                if missed >= self.cfg.dead_after {
+                    HealthState::Dead
+                } else if missed >= self.cfg.suspect_after {
+                    HealthState::Suspected
+                } else {
+                    HealthState::Alive
+                }
+            }
+        }
+    }
+
+    pub fn is_alive(&self, node: usize, round: usize) -> bool {
+        self.state(node, round) == HealthState::Alive
+    }
+
+    /// All registered nodes currently alive at `round`.
+    pub fn alive_nodes(&self, round: usize) -> Vec<usize> {
+        self.nodes
+            .keys()
+            .copied()
+            .filter(|&n| self.is_alive(n, round))
+            .collect()
+    }
+
+    /// All registered nodes dead at `round`.
+    pub fn dead_nodes(&self, round: usize) -> Vec<usize> {
+        self.nodes
+            .keys()
+            .copied()
+            .filter(|&n| self.state(n, round) == HealthState::Dead)
+            .collect()
+    }
+
+    /// Rounds since registration (uptime context for reliability stats).
+    pub fn tenure(&self, node: usize, round: usize) -> Option<usize> {
+        self.nodes
+            .get(&node)
+            .map(|h| round.saturating_sub(h.registered_round))
+    }
+
+    pub fn registered(&self) -> impl Iterator<Item = usize> + '_ {
+        self.nodes.keys().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn monitor() -> HealthMonitor {
+        let mut m = HealthMonitor::new(HealthConfig::default());
+        for n in 0..4 {
+            m.register(n, 0);
+        }
+        m
+    }
+
+    #[test]
+    fn fresh_nodes_alive() {
+        let m = monitor();
+        for n in 0..4 {
+            assert_eq!(m.state(n, 0), HealthState::Alive);
+        }
+    }
+
+    #[test]
+    fn unknown_node_is_dead() {
+        let m = monitor();
+        assert_eq!(m.state(99, 0), HealthState::Dead);
+    }
+
+    #[test]
+    fn suspect_then_dead_progression() {
+        let mut m = monitor();
+        m.heartbeat(0, 1);
+        // node 1 stops beating after round 0
+        assert_eq!(m.state(1, 0), HealthState::Alive);
+        assert_eq!(m.state(1, 1), HealthState::Suspected);
+        assert_eq!(m.state(1, 2), HealthState::Dead);
+        assert_eq!(m.state(1, 10), HealthState::Dead);
+        // node 0 beat at round 1: alive at 1, suspected at 2
+        assert_eq!(m.state(0, 1), HealthState::Alive);
+        assert_eq!(m.state(0, 2), HealthState::Suspected);
+    }
+
+    #[test]
+    fn recovery_reinstates() {
+        let mut m = monitor();
+        assert_eq!(m.state(2, 5), HealthState::Dead);
+        m.heartbeat(2, 5);
+        assert_eq!(m.state(2, 5), HealthState::Alive);
+    }
+
+    #[test]
+    fn heartbeat_never_moves_backwards() {
+        let mut m = monitor();
+        m.heartbeat(0, 5);
+        m.heartbeat(0, 3); // stale beat must not regress
+        assert_eq!(m.state(0, 5), HealthState::Alive);
+    }
+
+    #[test]
+    fn alive_and_dead_listing() {
+        let mut m = monitor();
+        for r in 1..=3 {
+            m.heartbeat(0, r);
+            m.heartbeat(1, r);
+        }
+        assert_eq!(m.alive_nodes(3), vec![0, 1]);
+        assert_eq!(m.dead_nodes(3), vec![2, 3]);
+    }
+
+    #[test]
+    fn custom_thresholds() {
+        let mut m = HealthMonitor::new(HealthConfig { suspect_after: 3, dead_after: 6 });
+        m.register(0, 0);
+        assert_eq!(m.state(0, 2), HealthState::Alive);
+        assert_eq!(m.state(0, 3), HealthState::Suspected);
+        assert_eq!(m.state(0, 5), HealthState::Suspected);
+        assert_eq!(m.state(0, 6), HealthState::Dead);
+    }
+
+    #[test]
+    fn tenure_tracks_registration() {
+        let mut m = HealthMonitor::new(HealthConfig::default());
+        m.register(7, 4);
+        assert_eq!(m.tenure(7, 10), Some(6));
+        assert_eq!(m.tenure(8, 10), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "dead_after")]
+    fn invalid_config_panics() {
+        HealthMonitor::new(HealthConfig { suspect_after: 5, dead_after: 2 });
+    }
+}

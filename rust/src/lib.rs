@@ -1,0 +1,46 @@
+//! # SCALE-FL
+//!
+//! Production-grade reproduction of *"SCALE: Self-regulated Clustered
+//! federAted LEarning in a Homogeneous Environment"* (Puppala et al.,
+//! 2024) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the SCALE coordinator: global server,
+//!   proximity-based cluster formation, the Hybrid Decentralized
+//!   Aggregation Protocol, driver election, health monitoring,
+//!   checkpointing, a message-level network/energy simulator, and a
+//!   traditional-FedAvg baseline.
+//! * **Layer 2** — JAX compute graphs (`python/compile/model.py`)
+//!   AOT-lowered to HLO text artifacts.
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) fused into
+//!   those graphs.
+//!
+//! The rust binary never calls Python: `runtime` loads the artifacts via
+//! the PJRT C API (`xla` crate) and executes them on the hot path.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod crypto;
+pub mod data;
+pub mod devices;
+pub mod features;
+pub mod geo;
+pub mod netsim;
+pub mod perf_index;
+pub mod util;
+pub mod checkpoint;
+pub mod clustering;
+pub mod election;
+pub mod health;
+pub mod metrics;
+pub mod topology;
+pub mod runtime;
+pub mod aggregation;
+pub mod config;
+pub mod server;
+pub mod sim;
+pub mod cli;
+pub mod bench;
+pub mod quant;
+pub mod secagg;
+pub mod trace;

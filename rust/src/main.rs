@@ -1,0 +1,397 @@
+//! `scale` — launcher CLI for the SCALE federated-learning system.
+//!
+//! ```text
+//! scale run          run SCALE and/or the FedAvg baseline, print tables
+//! scale cluster-info run cluster formation only and print the clusters
+//! scale gen-config   write a default config JSON to edit
+//! scale artifacts    inspect the AOT artifact manifest
+//! scale help         this text
+//! ```
+//!
+//! Examples:
+//! ```text
+//! scale run --mode both --table1 --fig2
+//! scale run --nodes 50 --clusters 5 --rounds 20 --backend native
+//! scale run --config exp.json --out report.json
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use scale_fl::cli::{Args, Spec};
+use scale_fl::config::{Partition, SimConfig};
+use scale_fl::runtime::compute::{ModelCompute, NativeSvm, PjrtModel};
+use scale_fl::runtime::manifest::ModelKind;
+use scale_fl::runtime::Runtime;
+use scale_fl::sim::Simulation;
+use scale_fl::topology::Topology;
+
+const RUN_SPEC: Spec = Spec {
+    flags: &[
+        "config", "mode", "backend", "artifacts", "nodes", "clusters", "rounds",
+        "epochs", "seed", "partition", "model", "min-delta", "failure-prob",
+        "topology", "heterogeneity", "out", "lr", "reg", "trace-dir", "edge-period",
+    ],
+    switches: &["table1", "fig2", "quiet", "rounds-trace", "quantize", "secagg"],
+};
+
+const INFO_SPEC: Spec = Spec {
+    flags: &["nodes", "clusters", "seed", "heterogeneity"],
+    switches: &[],
+};
+
+const GEN_SPEC: Spec = Spec { flags: &["out"], switches: &[] };
+const ART_SPEC: Spec = Spec { flags: &["artifacts"], switches: &[] };
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    match argv.first().map(String::as_str) {
+        Some("run") => cmd_run(&Args::parse(argv, &RUN_SPEC)?),
+        Some("cluster-info") => cmd_cluster_info(&Args::parse(argv, &INFO_SPEC)?),
+        Some("gen-config") => cmd_gen_config(&Args::parse(argv, &GEN_SPEC)?),
+        Some("artifacts") => cmd_artifacts(&Args::parse(argv, &ART_SPEC)?),
+        Some("help") | None => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand '{other}' (try 'scale help')"),
+    }
+}
+
+const HELP: &str = "\
+scale — SCALE clustered federated learning (paper reproduction)
+
+USAGE:
+  scale run [OPTIONS]           run the experiment
+  scale cluster-info [OPTIONS]  cluster formation only
+  scale gen-config [--out F]    write default config JSON
+  scale artifacts [--artifacts DIR]
+  scale help
+
+RUN OPTIONS:
+  --config FILE        load a config JSON (other flags override it)
+  --mode scale|fedavg|hfl|both (default both; hfl = client-edge-cloud
+                       baseline, --edge-period N cloud syncs)
+  --backend pjrt|native        (default pjrt; native = rust SVM oracle)
+  --artifacts DIR      AOT artifact dir (default ./artifacts)
+  --nodes N --clusters K --rounds R --epochs E --seed S
+  --model svm|mlp      (pjrt backend only for mlp)
+  --partition iid|skew:ALPHA
+  --topology ring|full|k:K|random:K
+  --min-delta D        checkpoint upload gate (default 0.03)
+  --failure-prob P     per-round node failure probability
+  --heterogeneity H    device spread (0 = homogeneous)
+  --lr X --reg X
+  --quantize           int8-quantize exchanged weights (quant module)
+  --secagg             pairwise-masked secure aggregation (secagg module)
+  --trace-dir DIR      write rounds/clusters/ledger CSVs + JSON per run
+  --out FILE           write the JSON report(s)
+  --table1 --fig2      print the paper-table renderings
+  --rounds-trace       print per-round records
+";
+
+/// Build a SimConfig from `--config` + flag overrides.
+fn config_from(args: &Args) -> Result<SimConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => SimConfig::load(Path::new(path))?,
+        None => SimConfig::default(),
+    };
+    if let Some(n) = args.get_usize("nodes")? {
+        cfg.n_nodes = n;
+    }
+    if let Some(k) = args.get_usize("clusters")? {
+        cfg.n_clusters = k;
+    }
+    if let Some(r) = args.get_usize("rounds")? {
+        cfg.rounds = r;
+    }
+    if let Some(e) = args.get_usize("epochs")? {
+        cfg.local_epochs = e;
+    }
+    if let Some(s) = args.get_u64("seed")? {
+        cfg.seed = s;
+    }
+    if let Some(m) = args.get("model") {
+        cfg.model = ModelKind::parse(m)?;
+    }
+    if let Some(d) = args.get_f64("min-delta")? {
+        cfg.checkpoint_min_delta = d;
+    }
+    if let Some(p) = args.get_f64("failure-prob")? {
+        cfg.node_failure_prob = p;
+    }
+    if let Some(h) = args.get_f64("heterogeneity")? {
+        cfg.fleet.heterogeneity = h;
+    }
+    if let Some(x) = args.get_f64("lr")? {
+        cfg.lr = x as f32;
+    }
+    if let Some(x) = args.get_f64("reg")? {
+        cfg.reg = x as f32;
+    }
+    if let Some(p) = args.get("partition") {
+        cfg.partition = match p {
+            "iid" => Partition::Iid,
+            skew if skew.starts_with("skew:") => {
+                let alpha: f64 = skew[5..].parse().context("skew alpha")?;
+                Partition::LabelSkew(alpha)
+            }
+            other => bail!("unknown partition '{other}'"),
+        };
+    }
+    if args.has("quantize") {
+        cfg.quantize_exchange = true;
+    }
+    if args.has("secagg") {
+        cfg.secure_aggregation = true;
+    }
+    if let Some(t) = args.get("topology") {
+        cfg.topology = match t {
+            "ring" => Topology::Ring,
+            "full" => Topology::Full,
+            k if k.starts_with("k:") => Topology::KRegular(k[2..].parse()?),
+            k if k.starts_with("random:") => Topology::RandomK(k[7..].parse()?),
+            other => bail!("unknown topology '{other}'"),
+        };
+    }
+    let cfg = cfg.normalized();
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Instantiate the chosen compute backend.
+fn backend_from(args: &Args, cfg: &SimConfig) -> Result<Box<dyn ModelCompute>> {
+    match args.get_or("backend", "pjrt") {
+        "native" => {
+            if cfg.model != ModelKind::Svm {
+                bail!("native backend only implements the SVM model");
+            }
+            Ok(Box::new(NativeSvm::new(NativeSvm::default_dims())))
+        }
+        "pjrt" => {
+            let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+            let rt = Rc::new(Runtime::open(&dir).with_context(|| {
+                format!("opening artifacts at {} (run `make artifacts`)", dir.display())
+            })?);
+            rt.warm_up()?;
+            Ok(Box::new(PjrtModel::new(rt, cfg.model)))
+        }
+        other => bail!("unknown backend '{other}'"),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let compute = backend_from(args, &cfg)?;
+    let mode = args.get_or("mode", "both");
+    let quiet = args.has("quiet");
+    let mut reports = Vec::new();
+
+    if mode == "scale" || mode == "both" {
+        let mut sim = Simulation::new(cfg.clone(), compute.as_ref())?;
+        let report = sim.run_scale()?;
+        if !quiet {
+            print_summary(&report);
+            if args.has("rounds-trace") {
+                print_rounds(&report);
+            }
+            if args.has("table1") {
+                println!("\nTable 1 (SCALE):\n{}", report.table1_rows());
+            }
+            if args.has("fig2") {
+                println!("\nFigure 2 series (SCALE):\n{}", report.fig2_rows());
+            }
+        }
+        reports.push(report);
+    }
+    if mode == "hfl" {
+        let period = args.get_usize("edge-period")?.unwrap_or(3);
+        let mut sim = Simulation::new(cfg.clone(), compute.as_ref())?;
+        let report = sim.run_hfl(period)?;
+        if !quiet {
+            print_summary(&report);
+            println!("edge infra cost : ${:.6}", report.edge_cost_usd);
+            if args.has("rounds-trace") {
+                print_rounds(&report);
+            }
+        }
+        reports.push(report);
+    }
+    if mode == "fedavg" || mode == "both" {
+        let mut sim = Simulation::new(cfg.clone(), compute.as_ref())?;
+        let grouping = Some(sim.scale_grouping()?);
+        let report = sim.run_fedavg(grouping)?;
+        if !quiet {
+            print_summary(&report);
+            if args.has("rounds-trace") {
+                print_rounds(&report);
+            }
+            if args.has("table1") {
+                println!("\nTable 1 (FedAvg):\n{}", report.table1_rows());
+            }
+            if args.has("fig2") {
+                println!("\nFigure 2 series (FedAvg):\n{}", report.fig2_rows());
+            }
+        }
+        reports.push(report);
+    }
+    if mode == "both" && !quiet && reports.len() == 2 {
+        let (s, f) = (&reports[0], &reports[1]);
+        println!("\n=== SCALE vs FedAvg ===");
+        println!(
+            "global updates : {} vs {} ({:.1}x reduction)",
+            s.total_updates(),
+            f.total_updates(),
+            f.total_updates() as f64 / s.total_updates().max(1) as f64
+        );
+        println!(
+            "accuracy       : {:.3} vs {:.3}",
+            s.final_metrics.accuracy, f.final_metrics.accuracy
+        );
+        println!(
+            "total latency  : {:.0} ms vs {:.0} ms",
+            s.total_latency_ms(),
+            f.total_latency_ms()
+        );
+        println!(
+            "total energy   : {:.1} J vs {:.1} J",
+            s.total_energy_j(),
+            f.total_energy_j()
+        );
+        println!("cloud cost     : ${:.6} vs ${:.6}", s.cloud_cost_usd, f.cloud_cost_usd);
+    }
+
+    if let Some(dir) = args.get("trace-dir") {
+        for r in &reports {
+            scale_fl::trace::write_run(Path::new(dir), r)?;
+        }
+        if !quiet {
+            println!("\ntraces written to {dir}/");
+        }
+    }
+    if let Some(out) = args.get("out") {
+        let json = if reports.len() == 1 {
+            reports[0].to_json().to_string_pretty()
+        } else {
+            let mut v = scale_fl::util::json::Value::obj();
+            for r in &reports {
+                let mode_name = r.mode.clone();
+                v.set(&mode_name, r.to_json());
+            }
+            v.to_string_pretty()
+        };
+        std::fs::write(out, json).with_context(|| format!("writing {out}"))?;
+        if !quiet {
+            println!("\nreport written to {out}");
+        }
+    }
+    Ok(())
+}
+
+fn print_summary(r: &scale_fl::sim::report::RunReport) {
+    println!("\n=== {} run ===", r.mode);
+    println!("rounds          : {}", r.rounds.len());
+    println!("global updates  : {}", r.total_updates());
+    println!(
+        "final metrics   : acc {:.3}  prec {:.3}  rec {:.3}  f1 {:.3}  auc {:.3}",
+        r.final_metrics.accuracy,
+        r.final_metrics.precision,
+        r.final_metrics.recall,
+        r.final_metrics.f1,
+        r.final_metrics.roc_auc
+    );
+    println!("total latency   : {:.0} ms (modelled)", r.total_latency_ms());
+    println!(
+        "energy          : {:.1} J comm + {:.3} J compute",
+        r.comm_energy_j, r.compute_energy_j
+    );
+    println!("cloud cost      : ${:.6}", r.cloud_cost_usd);
+    println!("sim wall time   : {:.0} ms", r.wall_ms);
+}
+
+fn print_rounds(r: &scale_fl::sim::report::RunReport) {
+    println!("round | updates | cum | loss     | latency_ms | live | acc");
+    for rec in &r.rounds {
+        println!(
+            "{:>5} | {:>7} | {:>3} | {:<8.5} | {:>10.1} | {:>4} | {}",
+            rec.round + 1,
+            rec.updates,
+            rec.cum_updates,
+            rec.mean_loss,
+            rec.latency_ms,
+            rec.live_nodes,
+            rec.metrics.map_or("-".to_string(), |m| format!("{:.3}", m.accuracy)),
+        );
+    }
+}
+
+fn cmd_cluster_info(args: &Args) -> Result<()> {
+    let mut cfg = SimConfig::default();
+    if let Some(n) = args.get_usize("nodes")? {
+        cfg.n_nodes = n;
+    }
+    if let Some(k) = args.get_usize("clusters")? {
+        cfg.n_clusters = k;
+    }
+    if let Some(s) = args.get_u64("seed")? {
+        cfg.seed = s;
+    }
+    if let Some(h) = args.get_f64("heterogeneity")? {
+        cfg.fleet.heterogeneity = h;
+    }
+    let cfg = cfg.normalized();
+    cfg.validate()?;
+    let compute = NativeSvm::new(NativeSvm::default_dims());
+    let mut sim = Simulation::new(cfg, &compute)?;
+    let groups = sim.scale_grouping()?;
+    println!("formed {} clusters over {} nodes:", groups.len(), sim.nodes.len());
+    for (c, members) in groups.iter().enumerate() {
+        let metros: Vec<usize> = members.iter().map(|&id| sim.nodes[id].device.metro).collect();
+        println!(
+            "  cluster {:>2}: {:>3} nodes, metros {:?}, members {:?}",
+            c + 1,
+            members.len(),
+            metros,
+            members
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gen_config(args: &Args) -> Result<()> {
+    let out = args.get_or("out", "scale_config.json");
+    SimConfig::default().save(Path::new(out))?;
+    println!("default config written to {out}");
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let rt = Runtime::open(&dir)?;
+    let d = rt.manifest.dims;
+    println!("artifact dir : {}", dir.display());
+    println!(
+        "dims         : batch={} features={} (raw {}) bank={} hidden={} svm_dim={} mlp_dim={}",
+        d.batch, d.features, d.raw_features, d.bank, d.hidden, d.svm_dim, d.mlp_dim
+    );
+    for name in rt.manifest.artifact_names() {
+        let a = rt.manifest.artifact(&name).unwrap();
+        let ins: Vec<String> =
+            a.inputs.iter().map(|t| format!("{}{:?}", t.name, t.shape)).collect();
+        let outs: Vec<String> =
+            a.outputs.iter().map(|t| format!("{}{:?}", t.name, t.shape)).collect();
+        println!("  {name}: {} -> {} [{}]", ins.join(", "), outs.join(", "), a.file);
+    }
+    rt.warm_up()?;
+    println!("all artifacts compiled OK");
+    Ok(())
+}

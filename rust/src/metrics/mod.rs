@@ -1,0 +1,240 @@
+//! Model-quality metrics (paper Figure 2 / Table 1 columns).
+//!
+//! Computed in rust from the raw decision scores that the `svm_scores` /
+//! `mlp_scores` artifacts return: accuracy, precision, recall, F1 and
+//! ROC AUC (rank-based, ties handled by midranks — equivalent to the
+//! Mann–Whitney U statistic). Labels use the ±1 convention with +1 =
+//! positive (malignant).
+
+/// Confusion counts at threshold 0.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Confusion {
+    pub tp: u64,
+    pub fp: u64,
+    pub tn: u64,
+    pub fn_: u64,
+}
+
+impl Confusion {
+    /// Tally scores vs ±1 labels at the 0 threshold (score > 0 ⇒ +1).
+    pub fn from_scores(scores: &[f32], labels: &[f32]) -> Confusion {
+        assert_eq!(scores.len(), labels.len());
+        let mut c = Confusion::default();
+        for (&s, &y) in scores.iter().zip(labels) {
+            let pred_pos = s > 0.0;
+            let actual_pos = y > 0.0;
+            match (pred_pos, actual_pos) {
+                (true, true) => c.tp += 1,
+                (true, false) => c.fp += 1,
+                (false, false) => c.tn += 1,
+                (false, true) => c.fn_ += 1,
+            }
+        }
+        c
+    }
+
+    pub fn total(&self) -> u64 {
+        self.tp + self.fp + self.tn + self.fn_
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            return 0.0;
+        }
+        (self.tp + self.tn) as f64 / t as f64
+    }
+
+    /// Precision (0 when no positive predictions).
+    pub fn precision(&self) -> f64 {
+        let denom = self.tp + self.fp;
+        if denom == 0 {
+            0.0
+        } else {
+            self.tp as f64 / denom as f64
+        }
+    }
+
+    /// Recall / sensitivity (0 when no positive labels).
+    pub fn recall(&self) -> f64 {
+        let denom = self.tp + self.fn_;
+        if denom == 0 {
+            0.0
+        } else {
+            self.tp as f64 / denom as f64
+        }
+    }
+
+    /// F1 (harmonic mean; 0 when precision + recall = 0).
+    pub fn f1(&self) -> f64 {
+        let (p, r) = (self.precision(), self.recall());
+        if p + r <= 0.0 {
+            0.0
+        } else {
+            2.0 * p * r / (p + r)
+        }
+    }
+}
+
+/// ROC AUC via midrank Mann–Whitney U. Returns 0.5 when either class is
+/// absent (undefined; 0.5 = uninformative convention).
+pub fn roc_auc(scores: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&y| y > 0.0).count();
+    let n_neg = labels.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    // sort indices by score ascending
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal));
+    // midranks over tie groups
+    let mut rank_sum_pos = 0.0f64;
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let midrank = (i + j) as f64 / 2.0 + 1.0; // ranks are 1-based
+        for &k in &idx[i..=j] {
+            if labels[k] > 0.0 {
+                rank_sum_pos += midrank;
+            }
+        }
+        i = j + 1;
+    }
+    let u = rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0;
+    u / (n_pos as f64 * n_neg as f64)
+}
+
+/// Full model-performance snapshot (one Figure-2 sample).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ModelMetrics {
+    pub accuracy: f64,
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+    pub roc_auc: f64,
+    pub n: u64,
+}
+
+impl ModelMetrics {
+    pub fn from_scores(scores: &[f32], labels: &[f32]) -> ModelMetrics {
+        let c = Confusion::from_scores(scores, labels);
+        ModelMetrics {
+            accuracy: c.accuracy(),
+            precision: c.precision(),
+            recall: c.recall(),
+            f1: c.f1(),
+            roc_auc: roc_auc(scores, labels),
+            n: c.total(),
+        }
+    }
+
+    /// Sample-weighted average of several snapshots (cluster → global).
+    pub fn weighted_mean(parts: &[ModelMetrics]) -> ModelMetrics {
+        let total: u64 = parts.iter().map(|m| m.n).sum();
+        if total == 0 {
+            return ModelMetrics::default();
+        }
+        let mut out = ModelMetrics { n: total, ..Default::default() };
+        for m in parts {
+            let w = m.n as f64 / total as f64;
+            out.accuracy += w * m.accuracy;
+            out.precision += w * m.precision;
+            out.recall += w * m.recall;
+            out.f1 += w * m.f1;
+            out.roc_auc += w * m.roc_auc;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_classifier() {
+        let scores = [2.0f32, 1.0, -1.0, -2.0];
+        let labels = [1.0f32, 1.0, -1.0, -1.0];
+        let m = ModelMetrics::from_scores(&scores, &labels);
+        assert_eq!(m.accuracy, 1.0);
+        assert_eq!(m.precision, 1.0);
+        assert_eq!(m.recall, 1.0);
+        assert_eq!(m.f1, 1.0);
+        assert_eq!(m.roc_auc, 1.0);
+    }
+
+    #[test]
+    fn inverted_classifier() {
+        let scores = [-2.0f32, -1.0, 1.0, 2.0];
+        let labels = [1.0f32, 1.0, -1.0, -1.0];
+        let m = ModelMetrics::from_scores(&scores, &labels);
+        assert_eq!(m.accuracy, 0.0);
+        assert_eq!(m.roc_auc, 0.0);
+    }
+
+    #[test]
+    fn known_confusion() {
+        // preds: +,+,-,-,+  labels: +,-,+,-,+
+        let scores = [1.0f32, 1.0, -1.0, -1.0, 1.0];
+        let labels = [1.0f32, -1.0, 1.0, -1.0, 1.0];
+        let c = Confusion::from_scores(&scores, &labels);
+        assert_eq!((c.tp, c.fp, c.tn, c.fn_), (2, 1, 1, 1));
+        assert!((c.accuracy() - 0.6).abs() < 1e-12);
+        assert!((c.precision() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((c.recall() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((c.f1() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        // all negative predictions: precision 0 by convention
+        let c = Confusion::from_scores(&[-1.0, -1.0], &[1.0, -1.0]);
+        assert_eq!(c.precision(), 0.0);
+        assert_eq!(c.f1(), 0.0);
+        // single-class labels: AUC falls back to 0.5
+        assert_eq!(roc_auc(&[0.3, 0.7], &[1.0, 1.0]), 0.5);
+        assert_eq!(Confusion::default().accuracy(), 0.0);
+    }
+
+    #[test]
+    fn auc_with_ties_uses_midranks() {
+        // two positives and two negatives all scoring the same: AUC = 0.5
+        assert_eq!(roc_auc(&[1.0; 4], &[1.0, 1.0, -1.0, -1.0]), 0.5);
+        // one tie straddling classes
+        let auc = roc_auc(&[0.9, 0.5, 0.5, 0.1], &[1.0, 1.0, -1.0, -1.0]);
+        assert!((auc - 0.875).abs() < 1e-12, "{auc}");
+    }
+
+    #[test]
+    fn auc_threshold_free() {
+        // shifting all scores by a constant must not change AUC
+        let labels = [1.0f32, -1.0, 1.0, -1.0, 1.0, -1.0];
+        let scores = [0.3f32, 0.1, 0.9, 0.4, 0.6, 0.2];
+        let shifted: Vec<f32> = scores.iter().map(|s| s - 10.0).collect();
+        assert_eq!(roc_auc(&scores, &labels), roc_auc(&shifted, &labels));
+    }
+
+    #[test]
+    fn weighted_mean_weights_by_n() {
+        let a = ModelMetrics { accuracy: 1.0, precision: 1.0, recall: 1.0, f1: 1.0, roc_auc: 1.0, n: 10 };
+        let b = ModelMetrics { accuracy: 0.0, precision: 0.0, recall: 0.0, f1: 0.0, roc_auc: 0.0, n: 30 };
+        let m = ModelMetrics::weighted_mean(&[a, b]);
+        assert!((m.accuracy - 0.25).abs() < 1e-12);
+        assert_eq!(m.n, 40);
+        assert_eq!(ModelMetrics::weighted_mean(&[]), ModelMetrics::default());
+    }
+
+    #[test]
+    fn auc_monotone_in_separation() {
+        let labels: Vec<f32> = (0..40).map(|i| if i < 20 { 1.0 } else { -1.0 }).collect();
+        let weak: Vec<f32> = (0..40)
+            .map(|i| if i < 20 { 0.1 } else { 0.0 } + (i % 7) as f32 * 0.05)
+            .collect();
+        let strong: Vec<f32> = (0..40).map(|i| if i < 20 { 1.0 } else { -1.0 }).collect();
+        assert!(roc_auc(&strong, &labels) > roc_auc(&weak, &labels));
+    }
+}

@@ -1,0 +1,498 @@
+//! Message-level network simulator with latency / bandwidth / energy
+//! accounting (substrate for paper §4.2.2–§4.2.4).
+//!
+//! The paper's communication, latency, energy and cost metrics are all
+//! functionals of *which messages flowed where*: global-server updates,
+//! peer-to-peer weight exchanges, heartbeats, checkpoint uploads. This
+//! module models each transmission as
+//!
+//! ```text
+//! latency = base_latency(link) + size_bytes / bandwidth(link) + jitter
+//! energy  = tx_energy(sender, size) + rx_energy(receiver, size)
+//! ```
+//!
+//! with link classes distinguishing cheap intra-cluster (metro) hops from
+//! expensive WAN hops to the global server — the asymmetry SCALE exploits.
+//! Every send is recorded in a [`TrafficLedger`] keyed by [`MsgKind`], so
+//! the bench harness can regenerate Table 1's update counts and the
+//! §4.2.2–4.2.4 series directly from the ledger.
+
+use std::collections::BTreeMap;
+
+use crate::devices::DeviceProfile;
+use crate::geo::equirectangular_km;
+use crate::util::rng::Rng;
+
+/// Message categories tracked by the ledger.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum MsgKind {
+    /// Client → global server: encrypted summary (clustering phase).
+    Summary,
+    /// Global server → client: cluster assignment / topology.
+    Assignment,
+    /// Peer ↔ peer weight exchange inside a cluster (eq 9).
+    PeerExchange,
+    /// Node → driver: post-exchange weights for consensus (eq 10).
+    DriverCollect,
+    /// Driver → nodes: cluster model broadcast.
+    DriverBroadcast,
+    /// Driver → global server: model update (THE Table-1 counter).
+    GlobalUpdate,
+    /// Global server → drivers: global model broadcast.
+    GlobalBroadcast,
+    /// Health heartbeat.
+    Heartbeat,
+    /// Driver-election ballot.
+    Election,
+    /// Checkpoint persisted locally by a driver (no network cost, counted
+    /// for the checkpoint-traffic ablation).
+    CheckpointLocal,
+    /// Client → edge server (HFL baseline tier-1 upload).
+    EdgeUpdate,
+    /// Edge server → clients (HFL baseline tier-1 broadcast).
+    EdgeBroadcast,
+}
+
+/// Link classes with different base latency / effective bandwidth.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkClass {
+    /// Same-metro peer link.
+    Metro,
+    /// Cross-metro peer link.
+    Wan,
+    /// Any device ↔ global server (cloud) link.
+    Cloud,
+}
+
+/// Network model parameters.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Base one-way latency per link class, ms.
+    pub base_latency_ms: [f64; 3],
+    /// Bandwidth derating per link class (multiplies device bandwidth).
+    pub bandwidth_factor: [f64; 3],
+    /// Jitter fraction of base latency (uniform ±).
+    pub jitter_frac: f64,
+    /// Receive energy as a fraction of transmit energy.
+    pub rx_energy_frac: f64,
+    /// Radio-energy multiplier per link class (long-haul cloud links cost
+    /// far more J/byte than metro hops — the asymmetry SCALE's local
+    /// traffic exploits for the §4.2.4 energy claim).
+    pub energy_factor: [f64; 3],
+    /// Distance threshold (km) separating Metro from Wan peer links.
+    pub metro_km: f64,
+    /// Cloud (global server) processing cost per received update, ms.
+    pub cloud_process_ms: f64,
+    /// Cloud $ cost per GB ingested (egress-style pricing, cost metric).
+    pub cloud_cost_per_gb: f64,
+    /// Cloud $ cost per CPU-second of aggregation.
+    pub cloud_cost_per_cpu_s: f64,
+    /// $ per edge-server-second (HFL baseline infrastructure — the cost
+    /// SCALE's whole design avoids; ~small always-on VM).
+    pub edge_server_cost_per_s: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            base_latency_ms: [4.0, 28.0, 45.0],
+            bandwidth_factor: [1.0, 0.6, 0.35],
+            jitter_frac: 0.10,
+            rx_energy_frac: 0.6,
+            // D2D/WiFi metro ≈ 1×, inter-metro WAN ≈ 3×, cellular-to-cloud
+            // uplink ≈ 14× J/byte (LTE uplink vs local WiFi, common
+            // measurement-study range)
+            energy_factor: [1.0, 3.0, 14.0],
+            metro_km: 80.0,
+            cloud_process_ms: 3.0,
+            cloud_cost_per_gb: 0.09,
+            cloud_cost_per_cpu_s: 0.000_014, // ~c6i on-demand per vCPU-s
+            edge_server_cost_per_s: 0.10 / 3600.0, // ~$0.10/hr small VM
+        }
+    }
+}
+
+impl NetConfig {
+    fn class_params(&self, class: LinkClass) -> (f64, f64) {
+        let i = match class {
+            LinkClass::Metro => 0,
+            LinkClass::Wan => 1,
+            LinkClass::Cloud => 2,
+        };
+        (self.base_latency_ms[i], self.bandwidth_factor[i])
+    }
+}
+
+/// One recorded transmission.
+#[derive(Clone, Debug)]
+pub struct SentMsg {
+    pub kind: MsgKind,
+    pub from: Option<usize>,
+    /// `None` = global server.
+    pub to: Option<usize>,
+    pub bytes: u64,
+    pub latency_ms: f64,
+    pub energy_j: f64,
+    pub round: usize,
+}
+
+/// Aggregated per-kind counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct KindTotals {
+    pub count: u64,
+    pub bytes: u64,
+    pub latency_ms: f64,
+    pub energy_j: f64,
+}
+
+/// Traffic ledger: every send, plus running aggregates.
+#[derive(Clone, Debug, Default)]
+pub struct TrafficLedger {
+    totals: BTreeMap<MsgKind, KindTotals>,
+    /// Per-round GlobalUpdate counts (Table 1 needs per-cluster / per-run
+    /// breakdowns, kept by the sim layer; the ledger keeps the global
+    /// round series for the latency figure).
+    global_updates_by_round: Vec<u64>,
+    log: Vec<SentMsg>,
+    /// When false, individual messages are not retained (aggregates only)
+    /// — the hot-loop mode used by the large benches.
+    pub keep_log: bool,
+}
+
+impl TrafficLedger {
+    pub fn new(keep_log: bool) -> Self {
+        TrafficLedger { keep_log, ..Default::default() }
+    }
+
+    pub fn record(&mut self, msg: SentMsg) {
+        let t = self.totals.entry(msg.kind).or_default();
+        t.count += 1;
+        t.bytes += msg.bytes;
+        t.latency_ms += msg.latency_ms;
+        t.energy_j += msg.energy_j;
+        if msg.kind == MsgKind::GlobalUpdate {
+            if self.global_updates_by_round.len() <= msg.round {
+                self.global_updates_by_round.resize(msg.round + 1, 0);
+            }
+            self.global_updates_by_round[msg.round] += 1;
+        }
+        if self.keep_log {
+            self.log.push(msg);
+        }
+    }
+
+    pub fn totals(&self, kind: MsgKind) -> KindTotals {
+        self.totals.get(&kind).copied().unwrap_or_default()
+    }
+
+    pub fn all_totals(&self) -> &BTreeMap<MsgKind, KindTotals> {
+        &self.totals
+    }
+
+    pub fn global_updates(&self) -> u64 {
+        self.totals(MsgKind::GlobalUpdate).count
+    }
+
+    pub fn global_updates_by_round(&self) -> &[u64] {
+        &self.global_updates_by_round
+    }
+
+    pub fn log(&self) -> &[SentMsg] {
+        &self.log
+    }
+
+    /// Total network energy across all kinds, joules.
+    pub fn total_energy_j(&self) -> f64 {
+        self.totals.values().map(|t| t.energy_j).sum()
+    }
+
+    /// Total bytes that crossed the cloud link (cost metric input).
+    pub fn cloud_bytes(&self) -> u64 {
+        [MsgKind::Summary, MsgKind::GlobalUpdate, MsgKind::GlobalBroadcast,
+         MsgKind::Assignment]
+            .iter()
+            .map(|k| self.totals(*k).bytes)
+            .sum()
+    }
+
+    pub fn merge(&mut self, other: &TrafficLedger) {
+        for (k, t) in &other.totals {
+            let e = self.totals.entry(*k).or_default();
+            e.count += t.count;
+            e.bytes += t.bytes;
+            e.latency_ms += t.latency_ms;
+            e.energy_j += t.energy_j;
+        }
+        for (r, c) in other.global_updates_by_round.iter().enumerate() {
+            if self.global_updates_by_round.len() <= r {
+                self.global_updates_by_round.resize(r + 1, 0);
+            }
+            self.global_updates_by_round[r] += c;
+        }
+        if self.keep_log {
+            self.log.extend_from_slice(&other.log);
+        }
+    }
+}
+
+/// The network simulator: computes per-message latency/energy and records
+/// into the ledger.
+pub struct Network {
+    pub cfg: NetConfig,
+    pub ledger: TrafficLedger,
+    rng: Rng,
+}
+
+impl Network {
+    pub fn new(cfg: NetConfig, seed: u64, keep_log: bool) -> Self {
+        Network { cfg, ledger: TrafficLedger::new(keep_log), rng: Rng::new(seed) }
+    }
+
+    /// Classify the link between two devices (or device ↔ cloud).
+    pub fn classify(
+        &self,
+        from: Option<&DeviceProfile>,
+        to: Option<&DeviceProfile>,
+    ) -> LinkClass {
+        match (from, to) {
+            (Some(a), Some(b)) => {
+                if device_distance_km(a, b) <= self.cfg.metro_km {
+                    LinkClass::Metro
+                } else {
+                    LinkClass::Wan
+                }
+            }
+            _ => LinkClass::Cloud,
+        }
+    }
+
+    /// Simulate one transmission and record it. Returns the sampled
+    /// one-way latency in ms.
+    pub fn send(
+        &mut self,
+        kind: MsgKind,
+        from: Option<&DeviceProfile>,
+        to: Option<&DeviceProfile>,
+        bytes: u64,
+        round: usize,
+    ) -> f64 {
+        let latency_ms = if kind == MsgKind::CheckpointLocal {
+            0.0
+        } else {
+            let class = self.classify(from, to);
+            let (base, bw_factor) = self.cfg.class_params(class);
+            // effective bandwidth limited by the slower endpoint
+            let bw_mbps = [from, to]
+                .iter()
+                .flatten()
+                .map(|d| d.bandwidth_mbps)
+                .fold(f64::INFINITY, f64::min);
+            let bw_mbps = if bw_mbps.is_finite() { bw_mbps } else { 500.0 } * bw_factor;
+            let transfer_ms = bytes as f64 * 8.0 / (bw_mbps * 1e6) * 1e3;
+            let jitter = base * self.cfg.jitter_frac * (2.0 * self.rng.f64() - 1.0);
+            let endpoint_lat: f64 = [from, to]
+                .iter()
+                .flatten()
+                .map(|d| d.latency_ms * 0.25)
+                .sum();
+            (base + transfer_ms + jitter + endpoint_lat).max(0.1)
+        };
+
+        let tx = from.map_or(0.0, |d| d.tx_energy_j(bytes));
+        let rx = to.map_or(0.0, |d| d.tx_energy_j(bytes) * self.cfg.rx_energy_frac);
+        let efactor = {
+            let class = self.classify(from, to);
+            let i = match class {
+                LinkClass::Metro => 0,
+                LinkClass::Wan => 1,
+                LinkClass::Cloud => 2,
+            };
+            self.cfg.energy_factor[i]
+        };
+        let energy_j =
+            if kind == MsgKind::CheckpointLocal { 0.0 } else { (tx + rx) * efactor };
+
+        self.ledger.record(SentMsg {
+            kind,
+            from: from.map(|d| d.id),
+            to: to.map(|d| d.id),
+            bytes,
+            latency_ms,
+            energy_j,
+            round,
+        });
+        latency_ms
+    }
+
+    /// Cloud-side processing latency for one received update (ms).
+    pub fn cloud_process_latency_ms(&self) -> f64 {
+        self.cfg.cloud_process_ms
+    }
+
+    /// Dollar cost of all cloud traffic + aggregation compute so far.
+    pub fn cloud_cost_usd(&self, aggregation_cpu_s: f64) -> f64 {
+        self.ledger.cloud_bytes() as f64 / 1e9 * self.cfg.cloud_cost_per_gb
+            + aggregation_cpu_s * self.cfg.cloud_cost_per_cpu_s
+    }
+}
+
+/// Geographic distance between two devices, km.
+pub fn device_distance_km(a: &DeviceProfile, b: &DeviceProfile) -> f64 {
+    equirectangular_km(a.location, b.location)
+}
+
+/// Payload-size model: serialized f32 parameter vector + framing.
+pub fn param_payload_bytes(dim: usize) -> u64 {
+    (dim * 4 + 64) as u64
+}
+
+/// Payload-size model: encrypted summary envelope.
+pub fn summary_payload_bytes(plaintext: usize) -> u64 {
+    (plaintext + crate::crypto::NONCE_LEN + crate::crypto::TAG_LEN + 32) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::{generate_fleet, FleetConfig};
+    use crate::geo::GeoPoint;
+
+    fn fleet() -> Vec<DeviceProfile> {
+        generate_fleet(&FleetConfig { n_devices: 20, n_metros: 4, ..Default::default() })
+    }
+
+    fn mk_point(id: usize, lat: f64, lon: f64) -> DeviceProfile {
+        let mut d = fleet()[0].clone();
+        d.id = id;
+        d.location = GeoPoint::new(lat, lon);
+        d
+    }
+
+    #[test]
+    fn link_classification() {
+        let net = Network::new(NetConfig::default(), 0, false);
+        let a = mk_point(0, 40.0, -74.0);
+        let near = mk_point(1, 40.1, -74.1);
+        let far = mk_point(2, 34.0, -118.0);
+        assert_eq!(net.classify(Some(&a), Some(&near)), LinkClass::Metro);
+        assert_eq!(net.classify(Some(&a), Some(&far)), LinkClass::Wan);
+        assert_eq!(net.classify(Some(&a), None), LinkClass::Cloud);
+        assert_eq!(net.classify(None, Some(&a)), LinkClass::Cloud);
+    }
+
+    #[test]
+    fn latency_ordering_metro_wan_cloud() {
+        let mut net = Network::new(
+            NetConfig { jitter_frac: 0.0, ..Default::default() },
+            1,
+            false,
+        );
+        let a = mk_point(0, 40.0, -74.0);
+        let near = mk_point(1, 40.05, -74.05);
+        let far = mk_point(2, 34.0, -118.0);
+        let bytes = param_payload_bytes(33);
+        let l_metro = net.send(MsgKind::PeerExchange, Some(&a), Some(&near), bytes, 0);
+        let l_wan = net.send(MsgKind::PeerExchange, Some(&a), Some(&far), bytes, 0);
+        let l_cloud = net.send(MsgKind::GlobalUpdate, Some(&a), None, bytes, 0);
+        assert!(l_metro < l_wan, "{l_metro} < {l_wan}");
+        assert!(l_wan < l_cloud + 20.0);
+        assert!(l_cloud > l_metro);
+    }
+
+    #[test]
+    fn bigger_payload_higher_latency_and_energy() {
+        let mut net = Network::new(
+            NetConfig { jitter_frac: 0.0, ..Default::default() },
+            2,
+            true,
+        );
+        let a = mk_point(0, 40.0, -74.0);
+        let b = mk_point(1, 40.01, -74.0);
+        let l_small = net.send(MsgKind::PeerExchange, Some(&a), Some(&b), 1_000, 0);
+        let l_big = net.send(MsgKind::PeerExchange, Some(&a), Some(&b), 50_000_000, 0);
+        assert!(l_big > l_small);
+        let log = net.ledger.log();
+        assert!(log[1].energy_j > log[0].energy_j * 100.0);
+    }
+
+    #[test]
+    fn ledger_aggregates_and_rounds() {
+        let mut net = Network::new(NetConfig::default(), 3, false);
+        let a = mk_point(0, 40.0, -74.0);
+        for round in 0..5 {
+            net.send(MsgKind::GlobalUpdate, Some(&a), None, 196, round);
+            net.send(MsgKind::Heartbeat, Some(&a), None, 32, round);
+        }
+        net.send(MsgKind::GlobalUpdate, Some(&a), None, 196, 2);
+        assert_eq!(net.ledger.global_updates(), 6);
+        assert_eq!(net.ledger.global_updates_by_round(), &[1, 1, 2, 1, 1]);
+        assert_eq!(net.ledger.totals(MsgKind::Heartbeat).count, 5);
+        assert_eq!(net.ledger.totals(MsgKind::GlobalUpdate).bytes, 6 * 196);
+    }
+
+    #[test]
+    fn checkpoint_local_is_free() {
+        let mut net = Network::new(NetConfig::default(), 4, false);
+        let a = mk_point(0, 40.0, -74.0);
+        let lat = net.send(MsgKind::CheckpointLocal, Some(&a), Some(&a), 10_000, 0);
+        assert_eq!(lat, 0.0);
+        assert_eq!(net.ledger.totals(MsgKind::CheckpointLocal).energy_j, 0.0);
+        assert_eq!(net.ledger.totals(MsgKind::CheckpointLocal).count, 1);
+    }
+
+    #[test]
+    fn merge_ledgers() {
+        let mut a = TrafficLedger::new(false);
+        let mut b = TrafficLedger::new(false);
+        let msg = |round| SentMsg {
+            kind: MsgKind::GlobalUpdate,
+            from: Some(0),
+            to: None,
+            bytes: 10,
+            latency_ms: 1.0,
+            energy_j: 0.5,
+            round,
+        };
+        a.record(msg(0));
+        b.record(msg(0));
+        b.record(msg(1));
+        a.merge(&b);
+        assert_eq!(a.global_updates(), 3);
+        assert_eq!(a.global_updates_by_round(), &[2, 1]);
+        assert!((a.totals(MsgKind::GlobalUpdate).energy_j - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cloud_cost_scales_with_traffic() {
+        let mut net = Network::new(NetConfig::default(), 5, false);
+        let a = mk_point(0, 40.0, -74.0);
+        let c0 = net.cloud_cost_usd(0.0);
+        for _ in 0..100 {
+            net.send(MsgKind::GlobalUpdate, Some(&a), None, 1_000_000, 0);
+        }
+        let c1 = net.cloud_cost_usd(0.0);
+        assert!(c1 > c0);
+        let c2 = net.cloud_cost_usd(1000.0);
+        assert!(c2 > c1);
+    }
+
+    #[test]
+    fn payload_models() {
+        assert_eq!(param_payload_bytes(33), 33 * 4 + 64);
+        assert!(summary_payload_bytes(100) > 100);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let mut net = Network::new(NetConfig::default(), seed, false);
+            let a = mk_point(0, 40.0, -74.0);
+            let b = mk_point(1, 40.1, -74.0);
+            (0..10)
+                .map(|r| net.send(MsgKind::PeerExchange, Some(&a), Some(&b), 1000, r))
+                .sum::<f64>()
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9), run(10));
+    }
+}

@@ -1,0 +1,338 @@
+//! Performance Index for edge devices (paper §3.1.2, eqs 3–7).
+//!
+//! Two scoring methods, both computed at the client and shipped (encrypted)
+//! to the global server for clustering and driver election:
+//!
+//! * **Method 1 — Compute Ability Score (eqs 3–4).** Raw metrics
+//!   (computational power `C_p`, energy efficiency `E_e`, latency `L`,
+//!   network bandwidth `N_b`, concurrency level `C_l`) are min–max scaled
+//!   onto `[a, b]` (eq 3) and combined as the weighted sum of eq 4.
+//!   *Deviation note*: eq 4 as printed adds `w₃·L`, which would reward
+//!   high latency; we scale latency inverted by default (lower latency →
+//!   higher scaled value) so the index is monotone in device quality.
+//!   Set [`ComputeWeights::invert_latency`] `= false` for the literal
+//!   formula — the ablation bench compares both.
+//! * **Method 2 — Operational Efficiency Score (eqs 5–7).** The printed
+//!   eq 5 sums *reciprocals* of weighted utilisation/consumption metrics,
+//!   `α = 1/(ψ/4)` (eq 6) and the transmitted value is `ln α` (eq 7). We
+//!   implement it literally (with zero-guards); since high ψ means cheap
+//!   resource usage, α is an *efficiency* index. A `harmonic` switch
+//!   computes the proper weighted harmonic mean instead (ablation knob).
+
+use crate::util::stats::minmax_scale_one;
+
+/// Raw Method-1 metrics as measured on a device.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ComputeMetrics {
+    /// Computational power (e.g. GFLOP/s).
+    pub compute_power: f64,
+    /// Energy efficiency (e.g. GFLOP/J).
+    pub energy_efficiency: f64,
+    /// Network round-trip latency to peers (ms) — lower is better.
+    pub latency_ms: f64,
+    /// Network bandwidth (Mbit/s).
+    pub bandwidth_mbps: f64,
+    /// Concurrency level (hardware threads usable for training).
+    pub concurrency: f64,
+}
+
+/// Fleet-wide min/max bounds used by eq 3 scaling (the server computes
+/// these over all submitted metrics so every device scales consistently).
+#[derive(Clone, Copy, Debug)]
+pub struct MetricBounds {
+    pub lo: ComputeMetrics,
+    pub hi: ComputeMetrics,
+}
+
+impl MetricBounds {
+    /// Bounds over a fleet of raw metrics.
+    pub fn from_fleet(fleet: &[ComputeMetrics]) -> Self {
+        assert!(!fleet.is_empty(), "empty fleet");
+        let mut lo = fleet[0];
+        let mut hi = fleet[0];
+        for m in fleet {
+            lo.compute_power = lo.compute_power.min(m.compute_power);
+            hi.compute_power = hi.compute_power.max(m.compute_power);
+            lo.energy_efficiency = lo.energy_efficiency.min(m.energy_efficiency);
+            hi.energy_efficiency = hi.energy_efficiency.max(m.energy_efficiency);
+            lo.latency_ms = lo.latency_ms.min(m.latency_ms);
+            hi.latency_ms = hi.latency_ms.max(m.latency_ms);
+            lo.bandwidth_mbps = lo.bandwidth_mbps.min(m.bandwidth_mbps);
+            hi.bandwidth_mbps = hi.bandwidth_mbps.max(m.bandwidth_mbps);
+            lo.concurrency = lo.concurrency.min(m.concurrency);
+            hi.concurrency = hi.concurrency.max(m.concurrency);
+        }
+        MetricBounds { lo, hi }
+    }
+}
+
+/// Weights for eq 4 (must be finite; defaults sum to 1).
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeWeights {
+    pub w_compute: f64,
+    pub w_energy: f64,
+    pub w_latency: f64,
+    pub w_bandwidth: f64,
+    pub w_concurrency: f64,
+    /// Scale latency inverted (see module docs). Default `true`.
+    pub invert_latency: bool,
+    /// eq 3 target range `[a, b]`.
+    pub scale_to: (f64, f64),
+}
+
+impl Default for ComputeWeights {
+    fn default() -> Self {
+        ComputeWeights {
+            w_compute: 0.30,
+            w_energy: 0.20,
+            w_latency: 0.15,
+            w_bandwidth: 0.20,
+            w_concurrency: 0.15,
+            invert_latency: true,
+            scale_to: (0.0, 1.0),
+        }
+    }
+}
+
+/// Compute Ability Score — eq 3 scaling + eq 4 weighted sum.
+pub fn compute_ability_score(
+    m: &ComputeMetrics,
+    bounds: &MetricBounds,
+    w: &ComputeWeights,
+) -> f64 {
+    let (a, b) = w.scale_to;
+    let s = |x: f64, lo: f64, hi: f64| minmax_scale_one(x, lo, hi, a, b);
+    let cp = s(m.compute_power, bounds.lo.compute_power, bounds.hi.compute_power);
+    let ee = s(
+        m.energy_efficiency,
+        bounds.lo.energy_efficiency,
+        bounds.hi.energy_efficiency,
+    );
+    let lat_raw = s(m.latency_ms, bounds.lo.latency_ms, bounds.hi.latency_ms);
+    let lat = if w.invert_latency { a + b - lat_raw } else { lat_raw };
+    let nb = s(m.bandwidth_mbps, bounds.lo.bandwidth_mbps, bounds.hi.bandwidth_mbps);
+    let cl = s(m.concurrency, bounds.lo.concurrency, bounds.hi.concurrency);
+
+    w.w_compute * cp + w.w_energy * ee + w.w_latency * lat + w.w_bandwidth * nb
+        + w.w_concurrency * cl
+}
+
+/// Raw Method-2 metrics.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OperationalMetrics {
+    /// CPU utilisation fraction in (0, 1].
+    pub cpu_utilization: f64,
+    /// Energy consumption (W average during training).
+    pub energy_consumption: f64,
+    /// Network efficiency (goodput fraction in (0, 1]).
+    pub network_efficiency: f64,
+    /// Energy efficiency (useful work per joule, normalised).
+    pub energy_efficiency: f64,
+}
+
+/// Weights for eq 5.
+#[derive(Clone, Copy, Debug)]
+pub struct OperationalWeights {
+    pub w_cpu: f64,
+    pub w_energy: f64,
+    pub w_network: f64,
+    pub w_efficiency: f64,
+    /// `false` (default): literal eq 5 sum-of-reciprocals.
+    /// `true`: proper weighted harmonic mean (ablation knob).
+    pub harmonic: bool,
+}
+
+impl Default for OperationalWeights {
+    fn default() -> Self {
+        OperationalWeights {
+            w_cpu: 1.0,
+            w_energy: 1.0,
+            w_network: 1.0,
+            w_efficiency: 1.0,
+            harmonic: false,
+        }
+    }
+}
+
+/// Guard against division by ~zero (clamps denominators).
+const EPS: f64 = 1e-9;
+
+/// ψ from eq 5 (or the harmonic-mean variant).
+pub fn psi(m: &OperationalMetrics, w: &OperationalWeights) -> f64 {
+    let terms = [
+        (m.cpu_utilization, w.w_cpu),
+        (m.energy_consumption, w.w_energy),
+        (m.network_efficiency, w.w_network),
+        (m.energy_efficiency, w.w_efficiency),
+    ];
+    if w.harmonic {
+        // weighted harmonic mean: Σwᵢ / Σ(wᵢ/xᵢ)
+        let wsum: f64 = terms.iter().map(|(_, w)| w).sum();
+        let denom: f64 = terms.iter().map(|(x, w)| w / x.max(EPS)).sum();
+        wsum / denom.max(EPS)
+    } else {
+        terms.iter().map(|(x, w)| 1.0 / (x * w).max(EPS)).sum()
+    }
+}
+
+/// Local P.I. α — eq 6: `α = 1 / (ψ / 4)`.
+pub fn local_pi(m: &OperationalMetrics, w: &OperationalWeights) -> f64 {
+    let p = psi(m, w);
+    if w.harmonic {
+        // harmonic variant is already a mean — no /4 rescale
+        p
+    } else {
+        1.0 / (p / 4.0).max(EPS)
+    }
+}
+
+/// Transmitted value — eq 7: `ln α`.
+pub fn local_log_pi(m: &OperationalMetrics, w: &OperationalWeights) -> f64 {
+    local_pi(m, w).max(EPS).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet() -> Vec<ComputeMetrics> {
+        vec![
+            ComputeMetrics {
+                compute_power: 10.0,
+                energy_efficiency: 1.0,
+                latency_ms: 50.0,
+                bandwidth_mbps: 20.0,
+                concurrency: 2.0,
+            },
+            ComputeMetrics {
+                compute_power: 50.0,
+                energy_efficiency: 3.0,
+                latency_ms: 10.0,
+                bandwidth_mbps: 100.0,
+                concurrency: 8.0,
+            },
+            ComputeMetrics {
+                compute_power: 30.0,
+                energy_efficiency: 2.0,
+                latency_ms: 30.0,
+                bandwidth_mbps: 60.0,
+                concurrency: 4.0,
+            },
+        ]
+    }
+
+    #[test]
+    fn bounds_cover_fleet() {
+        let f = fleet();
+        let b = MetricBounds::from_fleet(&f);
+        assert_eq!(b.lo.compute_power, 10.0);
+        assert_eq!(b.hi.compute_power, 50.0);
+        assert_eq!(b.lo.latency_ms, 10.0);
+        assert_eq!(b.hi.latency_ms, 50.0);
+    }
+
+    #[test]
+    fn best_device_scores_highest() {
+        let f = fleet();
+        let b = MetricBounds::from_fleet(&f);
+        let w = ComputeWeights::default();
+        let scores: Vec<f64> = f.iter().map(|m| compute_ability_score(m, &b, &w)).collect();
+        // device 1 dominates on every axis (incl. lowest latency)
+        assert!(scores[1] > scores[0]);
+        assert!(scores[1] > scores[2]);
+        // with default unit range and unit-sum weights, scores stay in [0,1]
+        assert!(scores.iter().all(|s| (0.0..=1.0).contains(s)));
+        assert!((scores[1] - 1.0).abs() < 1e-12);
+        assert!(scores[0].abs() < 1e-12);
+    }
+
+    #[test]
+    fn literal_latency_flag_flips_preference() {
+        let f = fleet();
+        let b = MetricBounds::from_fleet(&f);
+        let mut only_latency = ComputeWeights {
+            w_compute: 0.0,
+            w_energy: 0.0,
+            w_latency: 1.0,
+            w_bandwidth: 0.0,
+            w_concurrency: 0.0,
+            ..ComputeWeights::default()
+        };
+        let inv = compute_ability_score(&f[1], &b, &only_latency);
+        only_latency.invert_latency = false;
+        let lit = compute_ability_score(&f[1], &b, &only_latency);
+        // device 1 has the LOWEST latency: best when inverted, worst literal
+        assert!((inv - 1.0).abs() < 1e-12);
+        assert!(lit.abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq3_custom_range() {
+        let f = fleet();
+        let b = MetricBounds::from_fleet(&f);
+        let w = ComputeWeights { scale_to: (1.0, 5.0), ..Default::default() };
+        let s = compute_ability_score(&f[1], &b, &w);
+        // unit-sum weights, all metrics at the top of [1,5] → 5
+        assert!((s - 5.0).abs() < 1e-9);
+    }
+
+    fn op(cpu: f64, e: f64, n: f64, ee: f64) -> OperationalMetrics {
+        OperationalMetrics {
+            cpu_utilization: cpu,
+            energy_consumption: e,
+            network_efficiency: n,
+            energy_efficiency: ee,
+        }
+    }
+
+    #[test]
+    fn eq5_literal_value() {
+        // all metrics 1, weights 1 → ψ = 4, α = 1/(4/4) = 1, ln α = 0
+        let w = OperationalWeights::default();
+        let m = op(1.0, 1.0, 1.0, 1.0);
+        assert!((psi(&m, &w) - 4.0).abs() < 1e-12);
+        assert!((local_pi(&m, &w) - 1.0).abs() < 1e-12);
+        assert!(local_log_pi(&m, &w).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq6_monotone_in_resource_cost() {
+        // heavier resource use (larger denominator terms → smaller ψ? no:
+        // larger x → smaller 1/x → smaller ψ → larger α). The literal
+        // formula therefore *rewards* heavy consumption; verify the math
+        // is what the paper printed.
+        let w = OperationalWeights::default();
+        let light = op(0.2, 10.0, 0.9, 0.8);
+        let heavy = op(0.9, 50.0, 0.9, 0.8);
+        assert!(psi(&light, &w) > psi(&heavy, &w));
+        assert!(local_pi(&light, &w) < local_pi(&heavy, &w));
+    }
+
+    #[test]
+    fn zero_guard() {
+        let w = OperationalWeights::default();
+        let m = op(0.0, 0.0, 0.0, 0.0);
+        assert!(psi(&m, &w).is_finite());
+        assert!(local_log_pi(&m, &w).is_finite());
+    }
+
+    #[test]
+    fn harmonic_variant_is_a_mean() {
+        let w = OperationalWeights { harmonic: true, ..Default::default() };
+        let m = op(0.5, 0.5, 0.5, 0.5);
+        // harmonic mean of identical values is the value itself
+        assert!((psi(&m, &w) - 0.5).abs() < 1e-9);
+        assert!((local_pi(&m, &w) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_pi_orders_like_pi() {
+        let w = OperationalWeights::default();
+        let a = op(0.3, 5.0, 0.9, 0.9);
+        let b = op(0.9, 40.0, 0.9, 0.9);
+        assert_eq!(
+            local_pi(&a, &w) < local_pi(&b, &w),
+            local_log_pi(&a, &w) < local_log_pi(&b, &w)
+        );
+    }
+}

@@ -1,0 +1,174 @@
+//! Uniform int8 quantization for weight-exchange payloads
+//! (communication-efficiency extension; cf. QSGD in the paper's §2).
+//!
+//! SCALE's remaining traffic after checkpoint gating is the intra-cluster
+//! gossip (PeerExchange dominates the energy ledger). Quantizing the
+//! exchanged vectors to int8 cuts those payloads ~4× at a small, bounded
+//! accuracy cost (benched in `ablations`):
+//!
+//! ```text
+//! q_i = round((x_i − min) / step),  step = (max − min) / 255
+//! ```
+//!
+//! The codec is deterministic, handles degenerate (constant) vectors, and
+//! exposes the exact wire size so `netsim` can account the savings.
+
+/// An int8-quantized parameter vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantVec {
+    /// Minimum of the original values.
+    pub min: f32,
+    /// Quantization step ((max−min)/255; 0 for constant vectors).
+    pub step: f32,
+    /// Quantized codes.
+    pub codes: Vec<u8>,
+}
+
+impl QuantVec {
+    /// Quantize an f32 vector.
+    pub fn encode(xs: &[f32]) -> QuantVec {
+        if xs.is_empty() {
+            return QuantVec { min: 0.0, step: 0.0, codes: Vec::new() };
+        }
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in xs {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        let step = (hi - lo) / 255.0;
+        let codes = if step <= 0.0 {
+            vec![0u8; xs.len()]
+        } else {
+            xs.iter()
+                .map(|&x| (((x - lo) / step).round() as i32).clamp(0, 255) as u8)
+                .collect()
+        };
+        QuantVec { min: lo, step, codes }
+    }
+
+    /// Dequantize back to f32.
+    pub fn decode(&self) -> Vec<f32> {
+        self.codes
+            .iter()
+            .map(|&c| self.min + c as f32 * self.step)
+            .collect()
+    }
+
+    /// Wire size in bytes: codes + (min, step) header + length field.
+    pub fn wire_bytes(&self) -> u64 {
+        self.codes.len() as u64 + 4 + 4 + 4
+    }
+
+    /// Worst-case absolute dequantization error (= step / 2).
+    pub fn max_error(&self) -> f32 {
+        self.step / 2.0
+    }
+
+    /// Serialize to bytes (length-prefixed, little-endian header).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.codes.len() + 12);
+        out.extend_from_slice(&(self.codes.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.min.to_le_bytes());
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.extend_from_slice(&self.codes);
+        out
+    }
+
+    /// Parse the `to_bytes` layout.
+    pub fn from_bytes(bytes: &[u8]) -> Option<QuantVec> {
+        if bytes.len() < 12 {
+            return None;
+        }
+        let n = u32::from_le_bytes(bytes[0..4].try_into().ok()?) as usize;
+        if bytes.len() != 12 + n {
+            return None;
+        }
+        Some(QuantVec {
+            min: f32::from_le_bytes(bytes[4..8].try_into().ok()?),
+            step: f32::from_le_bytes(bytes[8..12].try_into().ok()?),
+            codes: bytes[12..].to_vec(),
+        })
+    }
+}
+
+/// Quantize → dequantize round trip (the lossy channel the sim applies
+/// to exchanged weights when `quantize_exchange` is on).
+pub fn channel(xs: &[f32]) -> Vec<f32> {
+    QuantVec::encode(xs).decode()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let xs: Vec<f32> = (0..545).map(|i| ((i as f32) * 0.37).sin() * 3.0).collect();
+        let q = QuantVec::encode(&xs);
+        let back = q.decode();
+        let bound = q.max_error() + 1e-6;
+        for (a, b) in xs.iter().zip(&back) {
+            assert!((a - b).abs() <= bound, "{a} vs {b} (bound {bound})");
+        }
+    }
+
+    #[test]
+    fn constant_vector_is_exact() {
+        let xs = vec![2.5f32; 64];
+        let q = QuantVec::encode(&xs);
+        assert_eq!(q.step, 0.0);
+        assert_eq!(q.decode(), xs);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(QuantVec::encode(&[]).decode(), Vec::<f32>::new());
+        let q = QuantVec::encode(&[7.0]);
+        assert_eq!(q.decode(), vec![7.0]);
+    }
+
+    #[test]
+    fn wire_size_is_quarter_of_f32() {
+        let xs = vec![0.5f32; 545];
+        let q = QuantVec::encode(&xs);
+        let f32_bytes = 545 * 4;
+        assert!(q.wire_bytes() < f32_bytes as u64 / 3, "{}", q.wire_bytes());
+    }
+
+    #[test]
+    fn bytes_roundtrip_and_rejects_garbage() {
+        let xs: Vec<f32> = (0..33).map(|i| i as f32 * 0.1 - 1.0).collect();
+        let q = QuantVec::encode(&xs);
+        let b = q.to_bytes();
+        assert_eq!(QuantVec::from_bytes(&b).unwrap(), q);
+        assert!(QuantVec::from_bytes(&b[..5]).is_none());
+        let mut bad = b.clone();
+        bad.push(0);
+        assert!(QuantVec::from_bytes(&bad).is_none());
+    }
+
+    #[test]
+    fn extremes_map_to_extremes() {
+        let q = QuantVec::encode(&[-1.0, 0.0, 1.0]);
+        assert_eq!(q.codes[0], 0);
+        assert_eq!(q.codes[2], 255);
+    }
+
+    #[test]
+    fn property_error_bound_holds() {
+        check(&Config { cases: 100, ..Default::default() }, "quant error bound", |g| {
+            let xs: Vec<f32> = g.vec_of(|r| r.f32() * 200.0 - 100.0);
+            let q = QuantVec::encode(&xs);
+            let back = q.decode();
+            let bound = q.max_error() as f64 + 1e-5;
+            for (a, b) in xs.iter().zip(&back) {
+                if ((a - b).abs() as f64) > bound {
+                    return Err(format!("{a} vs {b}, bound {bound}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,547 @@
+//! The compute abstraction the coordinator programs against.
+//!
+//! [`ModelCompute`] is the narrow interface between the SCALE round engine
+//! and the numerics: one local training step, decision scores for
+//! evaluation, and bank aggregation (eq 9 / eq 10). Two implementations:
+//!
+//! * [`PjrtModel`] — the production path: executes the AOT-lowered
+//!   JAX/Pallas artifacts through [`super::Runtime`]. Aggregation banks
+//!   larger than the artifact's fixed `K` are chunked and exactly
+//!   count-weight recombined.
+//! * [`NativeSvm`] — a pure-rust mirror of the SVM math (same formulas as
+//!   `python/compile/kernels/ref.py`). Used as the cross-check oracle in
+//!   integration tests (PJRT vs native must agree to f32 tolerance) and
+//!   for artifact-free unit tests of the sim engine.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::manifest::{Dims, ModelKind};
+use super::{to_f32_scalar, to_f32_vec, Runtime};
+use crate::data::PaddedBatch;
+use crate::util::rng::Rng;
+
+/// Model numerics as seen by the coordinator.
+pub trait ModelCompute {
+    /// Packed parameter dimension D.
+    fn param_dim(&self) -> usize;
+    /// Static batch size B of one training/eval call.
+    fn batch(&self) -> usize;
+    /// Padded feature count F.
+    fn features(&self) -> usize;
+    /// Deterministic initial parameters.
+    fn init_params(&self, seed: u64) -> Vec<f32>;
+    /// One full-batch gradient step; returns (new params, pre-step loss).
+    fn train_step(
+        &self,
+        batch: &PaddedBatch,
+        params: &[f32],
+        lr: f32,
+        reg: f32,
+    ) -> Result<(Vec<f32>, f32)>;
+    /// `steps` consecutive gradient steps on the same batch; returns the
+    /// final params and the last pre-step loss. Backends may fuse this
+    /// into one executable (the PJRT path uses the `*_train_loop`
+    /// artifact — one dispatch instead of `steps`).
+    fn train_steps(
+        &self,
+        batch: &PaddedBatch,
+        params: &[f32],
+        lr: f32,
+        reg: f32,
+        steps: usize,
+    ) -> Result<(Vec<f32>, f32)> {
+        let mut p = params.to_vec();
+        let mut loss = 0.0f32;
+        for _ in 0..steps.max(1) {
+            let (np, l) = self.train_step(batch, &p, lr, reg)?;
+            p = np;
+            loss = l;
+        }
+        Ok((p, loss))
+    }
+    /// Decision scores for the valid rows of the batch.
+    fn scores(&self, batch: &PaddedBatch, params: &[f32]) -> Result<Vec<f32>>;
+    /// Mean of the given parameter vectors (all length `param_dim`).
+    fn aggregate(&self, vectors: &[&[f32]]) -> Result<Vec<f32>>;
+    /// FLOPs of one train step (energy / perf model input).
+    fn train_flops(&self) -> f64;
+}
+
+// ---------------------------------------------------------------------
+// PJRT-backed implementation
+// ---------------------------------------------------------------------
+
+/// Device-resident copies of a batch's static inputs (x, y, mask).
+struct BatchBuffers {
+    x: xla::PjRtBuffer,
+    y: xla::PjRtBuffer,
+    mask: xla::PjRtBuffer,
+}
+
+/// Cap on cached batches (a 100-node paper run stages ~200 batches;
+/// the cap only guards pathological bench loops).
+const BATCH_CACHE_CAP: usize = 4096;
+
+/// Executes the AOT artifacts for one model family.
+pub struct PjrtModel {
+    rt: Rc<Runtime>,
+    kind: ModelKind,
+    dims: Dims,
+    /// x/y/mask device buffers keyed by `PaddedBatch::uid` — staged once,
+    /// reused across every train/eval call on that batch (perf: §Perf in
+    /// EXPERIMENTS.md; batches are immutable by contract).
+    batch_cache: RefCell<HashMap<u64, Rc<BatchBuffers>>>,
+}
+
+impl PjrtModel {
+    pub fn new(rt: Rc<Runtime>, kind: ModelKind) -> PjrtModel {
+        let dims = rt.manifest.dims;
+        PjrtModel { rt, kind, dims, batch_cache: RefCell::new(HashMap::new()) }
+    }
+
+    /// Stage (or fetch cached) device buffers for a batch's static inputs.
+    fn staged(&self, batch: &PaddedBatch) -> Result<Rc<BatchBuffers>> {
+        if let Some(b) = self.batch_cache.borrow().get(&batch.uid) {
+            return Ok(b.clone());
+        }
+        let (b, f) = (self.dims.batch, self.dims.features);
+        anyhow::ensure!(batch.batch == b && batch.features == f, "batch shape mismatch");
+        let staged = Rc::new(BatchBuffers {
+            x: self.rt.stage_f32(&batch.x, &[b, f])?,
+            y: self.rt.stage_f32(&batch.y, &[b])?,
+            mask: self.rt.stage_f32(&batch.mask, &[b])?,
+        });
+        let mut cache = self.batch_cache.borrow_mut();
+        if cache.len() >= BATCH_CACHE_CAP {
+            cache.clear();
+        }
+        cache.insert(batch.uid, staged.clone());
+        Ok(staged)
+    }
+
+    fn train_loop_artifact(&self) -> &'static str {
+        match self.kind {
+            ModelKind::Svm => "svm_train_loop",
+            ModelKind::Mlp => "mlp_train_loop",
+        }
+    }
+
+    pub fn kind(&self) -> ModelKind {
+        self.kind
+    }
+
+    pub fn runtime(&self) -> &Rc<Runtime> {
+        &self.rt
+    }
+
+    /// Aggregate one bank of ≤ K vectors through the artifact.
+    fn aggregate_bank(&self, vectors: &[&[f32]]) -> Result<Vec<f32>> {
+        let k = self.dims.bank;
+        let d = self.param_dim();
+        debug_assert!(vectors.len() <= k && !vectors.is_empty());
+        let mut bank = vec![0.0f32; k * d];
+        let mut mask = vec![0.0f32; k];
+        for (i, v) in vectors.iter().enumerate() {
+            anyhow::ensure!(v.len() == d, "vector {} has dim {} != {}", i, v.len(), d);
+            bank[i * d..(i + 1) * d].copy_from_slice(v);
+            mask[i] = 1.0;
+        }
+        let bank_b = self.rt.stage_f32(&bank, &[k, d])?;
+        let mask_b = self.rt.stage_f32(&mask, &[k])?;
+        let out = self
+            .rt
+            .execute_buffers(self.kind.aggregate_artifact(), &[&bank_b, &mask_b])?;
+        to_f32_vec(&out[0])
+    }
+}
+
+impl ModelCompute for PjrtModel {
+    fn param_dim(&self) -> usize {
+        match self.kind {
+            ModelKind::Svm => self.dims.svm_dim,
+            ModelKind::Mlp => self.dims.mlp_dim,
+        }
+    }
+
+    fn batch(&self) -> usize {
+        self.dims.batch
+    }
+
+    fn features(&self) -> usize {
+        self.dims.features
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        init_params_for(self.kind, &self.dims, seed)
+    }
+
+    fn train_step(
+        &self,
+        batch: &PaddedBatch,
+        params: &[f32],
+        lr: f32,
+        reg: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        anyhow::ensure!(params.len() == self.param_dim(), "param dim mismatch");
+        let staged = self.staged(batch)?;
+        let p = self.rt.stage_f32(params, &[self.param_dim()])?;
+        let lr_b = self.rt.stage_f32(&[lr], &[])?;
+        let reg_b = self.rt.stage_f32(&[reg], &[])?;
+        let out = self.rt.execute_buffers(
+            self.kind.train_artifact(),
+            &[&staged.x, &staged.y, &staged.mask, &p, &lr_b, &reg_b],
+        )?;
+        Ok((to_f32_vec(&out[0])?, to_f32_scalar(&out[1])?))
+    }
+
+    fn train_steps(
+        &self,
+        batch: &PaddedBatch,
+        params: &[f32],
+        lr: f32,
+        reg: f32,
+        steps: usize,
+    ) -> Result<(Vec<f32>, f32)> {
+        anyhow::ensure!(params.len() == self.param_dim(), "param dim mismatch");
+        let staged = self.staged(batch)?;
+        let p = self.rt.stage_f32(params, &[self.param_dim()])?;
+        let lr_b = self.rt.stage_f32(&[lr], &[])?;
+        let reg_b = self.rt.stage_f32(&[reg], &[])?;
+        let steps_b = self.rt.stage_i32_scalar(steps.max(1) as i32)?;
+        let out = self.rt.execute_buffers(
+            self.train_loop_artifact(),
+            &[&staged.x, &staged.y, &staged.mask, &p, &lr_b, &reg_b, &steps_b],
+        )?;
+        Ok((to_f32_vec(&out[0])?, to_f32_scalar(&out[1])?))
+    }
+
+    fn scores(&self, batch: &PaddedBatch, params: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(params.len() == self.param_dim(), "param dim mismatch");
+        let staged = self.staged(batch)?;
+        let p = self.rt.stage_f32(params, &[self.param_dim()])?;
+        let out = self
+            .rt
+            .execute_buffers(self.kind.scores_artifact(), &[&staged.x, &p])?;
+        let mut scores = to_f32_vec(&out[0])?;
+        scores.truncate(batch.n_valid);
+        Ok(scores)
+    }
+
+    fn aggregate(&self, vectors: &[&[f32]]) -> Result<Vec<f32>> {
+        anyhow::ensure!(!vectors.is_empty(), "aggregate of zero vectors");
+        let k = self.dims.bank;
+        if vectors.len() <= k {
+            return self.aggregate_bank(vectors);
+        }
+        // chunk and recombine exactly (count-weighted mean of chunk means)
+        let d = self.param_dim();
+        let mut acc = vec![0.0f64; d];
+        let mut total = 0usize;
+        for chunk in vectors.chunks(k) {
+            let mean = self.aggregate_bank(chunk)?;
+            for (a, m) in acc.iter_mut().zip(&mean) {
+                *a += *m as f64 * chunk.len() as f64;
+            }
+            total += chunk.len();
+        }
+        Ok(acc.into_iter().map(|a| (a / total as f64) as f32).collect())
+    }
+
+    fn train_flops(&self) -> f64 {
+        train_flops_for(self.kind, &self.dims)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Native (pure-rust) SVM oracle
+// ---------------------------------------------------------------------
+
+/// Pure-rust mirror of the SVM artifacts (same math as `ref.py`).
+#[derive(Clone, Debug)]
+pub struct NativeSvm {
+    pub dims: Dims,
+}
+
+impl NativeSvm {
+    pub fn new(dims: Dims) -> NativeSvm {
+        NativeSvm { dims }
+    }
+
+    /// Dims matching the default AOT contract (for artifact-free tests).
+    pub fn default_dims() -> Dims {
+        Dims {
+            batch: 64,
+            features: 32,
+            raw_features: 30,
+            bank: 16,
+            hidden: 16,
+            svm_dim: 33,
+            mlp_dim: 545,
+        }
+    }
+}
+
+impl ModelCompute for NativeSvm {
+    fn param_dim(&self) -> usize {
+        self.dims.svm_dim
+    }
+
+    fn batch(&self) -> usize {
+        self.dims.batch
+    }
+
+    fn features(&self) -> usize {
+        self.dims.features
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        init_params_for(ModelKind::Svm, &self.dims, seed)
+    }
+
+    fn train_step(
+        &self,
+        batch: &PaddedBatch,
+        params: &[f32],
+        lr: f32,
+        reg: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let f = self.dims.features;
+        anyhow::ensure!(params.len() == f + 1, "param dim");
+        let (w, bias) = params.split_at(f);
+        let mut gw = vec![0.0f32; f];
+        let mut gb = 0.0f32;
+        let mut loss_sum = 0.0f32;
+        let mut n = 0.0f32;
+        for r in 0..batch.batch {
+            let m = batch.mask[r];
+            if m == 0.0 {
+                continue;
+            }
+            let row = &batch.x[r * f..(r + 1) * f];
+            let mut s = bias[0];
+            for j in 0..f {
+                s += w[j] * row[j];
+            }
+            let y = batch.y[r];
+            let margin = 1.0 - y * s;
+            if margin > 0.0 {
+                loss_sum += m * margin;
+                let coef = m * y;
+                for j in 0..f {
+                    gw[j] -= coef * row[j];
+                }
+                gb -= coef;
+            }
+            n += m;
+        }
+        let n = n.max(1.0);
+        let mut new = Vec::with_capacity(f + 1);
+        let mut w_sq = 0.0f32;
+        for j in 0..f {
+            w_sq += w[j] * w[j];
+            let grad = gw[j] / n + reg * w[j];
+            new.push(w[j] - lr * grad);
+        }
+        new.push(bias[0] - lr * (gb / n));
+        let loss = loss_sum / n + 0.5 * reg * w_sq;
+        Ok((new, loss))
+    }
+
+    fn scores(&self, batch: &PaddedBatch, params: &[f32]) -> Result<Vec<f32>> {
+        let f = self.dims.features;
+        let (w, bias) = params.split_at(f);
+        let mut out = Vec::with_capacity(batch.n_valid);
+        for r in 0..batch.n_valid {
+            let row = &batch.x[r * f..(r + 1) * f];
+            let mut s = bias[0];
+            for j in 0..f {
+                s += w[j] * row[j];
+            }
+            out.push(s);
+        }
+        Ok(out)
+    }
+
+    fn aggregate(&self, vectors: &[&[f32]]) -> Result<Vec<f32>> {
+        anyhow::ensure!(!vectors.is_empty(), "aggregate of zero vectors");
+        let d = self.param_dim();
+        let mut acc = vec![0.0f64; d];
+        for v in vectors {
+            anyhow::ensure!(v.len() == d, "vector dim");
+            for (a, x) in acc.iter_mut().zip(*v) {
+                *a += *x as f64;
+            }
+        }
+        let n = vectors.len() as f64;
+        Ok(acc.into_iter().map(|a| (a / n) as f32).collect())
+    }
+
+    fn train_flops(&self) -> f64 {
+        train_flops_for(ModelKind::Svm, &self.dims)
+    }
+}
+
+/// Shared deterministic init (zeros for SVM; small normals for MLP).
+pub fn init_params_for(kind: ModelKind, dims: &Dims, seed: u64) -> Vec<f32> {
+    match kind {
+        ModelKind::Svm => vec![0.0; dims.svm_dim],
+        ModelKind::Mlp => {
+            let (f, h) = (dims.features, dims.hidden);
+            let mut rng = Rng::new(seed ^ 0x11A9);
+            let mut p = Vec::with_capacity(dims.mlp_dim);
+            let s1 = 1.0 / (f as f64).sqrt();
+            for _ in 0..f * h {
+                p.push((rng.normal() * s1) as f32);
+            }
+            p.extend(std::iter::repeat(0.0f32).take(h)); // b1
+            let s2 = 1.0 / (h as f64).sqrt();
+            for _ in 0..h {
+                p.push((rng.normal() * s2) as f32); // w2
+            }
+            p.push(0.0); // b2
+            p
+        }
+    }
+}
+
+/// FLOP cost model for one full-batch train step.
+pub fn train_flops_for(kind: ModelKind, dims: &Dims) -> f64 {
+    let (b, f, h) = (dims.batch as f64, dims.features as f64, dims.hidden as f64);
+    match kind {
+        // scores (2BF) + grad accumulation (2BF) + epilogue (~4F)
+        ModelKind::Svm => 4.0 * b * f + 4.0 * f,
+        // fwd 2BFH + 2BH, bwd ≈ 2× fwd
+        ModelKind::Mlp => 3.0 * (2.0 * b * f * h + 2.0 * b * h),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{pad_batch, Dataset};
+
+    fn native() -> NativeSvm {
+        NativeSvm::new(NativeSvm::default_dims())
+    }
+
+    fn toy_batch(n: usize) -> PaddedBatch {
+        // y = sign(x0): linearly separable on feature 0
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n {
+            let label = if i % 2 == 0 { 1.0f32 } else { -1.0 };
+            let mut row = vec![0.0f32; 30];
+            row[0] = label * (1.0 + (i % 5) as f32 * 0.1);
+            row[1] = (i % 7) as f32 * 0.01;
+            x.extend_from_slice(&row);
+            y.push(label);
+        }
+        let ds = Dataset::new(x, y, 30);
+        pad_batch(&ds, 0, 64, 32)
+    }
+
+    #[test]
+    fn native_training_reduces_loss_and_separates() {
+        let m = native();
+        let batch = toy_batch(40);
+        let mut params = m.init_params(0);
+        let (_, loss0) = m.train_step(&batch, &params, 0.1, 0.001).unwrap();
+        for _ in 0..100 {
+            let (p, _) = m.train_step(&batch, &params, 0.1, 0.001).unwrap();
+            params = p;
+        }
+        let (_, loss_end) = m.train_step(&batch, &params, 0.1, 0.001).unwrap();
+        assert!(loss_end < loss0 * 0.5, "loss {loss0} -> {loss_end}");
+        let scores = m.scores(&batch, &params).unwrap();
+        assert_eq!(scores.len(), 40);
+        for (i, &s) in scores.iter().enumerate() {
+            assert_eq!(s > 0.0, i % 2 == 0, "row {i} score {s}");
+        }
+    }
+
+    #[test]
+    fn padding_rows_do_not_affect_training() {
+        let m = native();
+        // same data at different padding fill
+        let b40 = toy_batch(40);
+        let mut garbage = b40.clone();
+        // poison the padding area — masked rows must be inert
+        for r in 40..64 {
+            for j in 0..32 {
+                garbage.x[r * 32 + j] = 999.0;
+            }
+            garbage.y[r] = 1.0;
+            // mask stays 0
+        }
+        let p0 = m.init_params(0);
+        let (pa, la) = m.train_step(&b40, &p0, 0.1, 0.01).unwrap();
+        let (pb, lb) = m.train_step(&garbage, &p0, 0.1, 0.01).unwrap();
+        assert_eq!(pa, pb);
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn zero_mask_is_safe() {
+        let m = native();
+        let ds = Dataset::new(vec![], vec![], 30);
+        let batch = pad_batch(&ds, 0, 64, 32);
+        let p0 = m.init_params(0);
+        let (p1, loss) = m.train_step(&batch, &p0, 0.1, 0.0).unwrap();
+        assert_eq!(p1, p0); // no data, no movement (w=0 ⇒ reg grad 0)
+        assert_eq!(loss, 0.0);
+    }
+
+    #[test]
+    fn native_aggregate_is_mean() {
+        let m = native();
+        let a = vec![1.0f32; 33];
+        let b = vec![3.0f32; 33];
+        let out = m.aggregate(&[&a, &b]).unwrap();
+        assert!(out.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+        assert!(m.aggregate(&[]).is_err());
+    }
+
+    #[test]
+    fn init_params_deterministic() {
+        let dims = NativeSvm::default_dims();
+        assert_eq!(init_params_for(ModelKind::Svm, &dims, 0), vec![0.0f32; 33]);
+        let a = init_params_for(ModelKind::Mlp, &dims, 5);
+        let b = init_params_for(ModelKind::Mlp, &dims, 5);
+        let c = init_params_for(ModelKind::Mlp, &dims, 6);
+        assert_eq!(a.len(), 545);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        // b1 segment is zero
+        assert!(a[32 * 16..32 * 16 + 16].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn flop_model_positive_and_ordered() {
+        let dims = NativeSvm::default_dims();
+        let svm = train_flops_for(ModelKind::Svm, &dims);
+        let mlp = train_flops_for(ModelKind::Mlp, &dims);
+        assert!(svm > 0.0);
+        assert!(mlp > svm, "MLP step must cost more than SVM step");
+    }
+
+    #[test]
+    fn regularization_pulls_weights_down() {
+        let m = native();
+        let batch = toy_batch(16);
+        let mut p = m.init_params(0);
+        for _ in 0..50 {
+            p = m.train_step(&batch, &p, 0.1, 0.0).unwrap().0;
+        }
+        let w_norm_no_reg: f32 = p[..32].iter().map(|w| w * w).sum();
+        let mut p = m.init_params(0);
+        for _ in 0..50 {
+            p = m.train_step(&batch, &p, 0.1, 0.5).unwrap().0;
+        }
+        let w_norm_reg: f32 = p[..32].iter().map(|w| w * w).sum();
+        assert!(w_norm_reg < w_norm_no_reg);
+    }
+}

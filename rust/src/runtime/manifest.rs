@@ -1,0 +1,275 @@
+//! `artifacts/manifest.json` parsing + validation.
+//!
+//! Written by `python/compile/aot.py` next to the HLO artifacts; describes
+//! the static-shape I/O contract (names / shapes / dtypes), the packed
+//! dimension constants, and per-artifact SHA-256 so the rust side can
+//! fail fast on any drift between the compile path and the coordinator.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// One tensor in an artifact signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub sha256: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Shared dimension constants (mirror of `python/compile/model.py::Dims`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Dims {
+    pub batch: usize,
+    pub features: usize,
+    /// Unpadded feature count of the source dataset (WDBC: 30).
+    pub raw_features: usize,
+    pub bank: usize,
+    pub hidden: usize,
+    pub svm_dim: usize,
+    pub mlp_dim: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dims: Dims,
+    artifacts: Vec<ArtifactSpec>,
+}
+
+fn tensor_list(v: &Value, what: &str) -> Result<Vec<TensorSpec>> {
+    let arr = v.as_arr().with_context(|| format!("{what} not an array"))?;
+    arr.iter()
+        .map(|t| {
+            let name = t
+                .get("name")
+                .and_then(Value::as_str)
+                .context("tensor missing name")?
+                .to_string();
+            let shape = t
+                .get("shape")
+                .and_then(Value::as_arr)
+                .context("tensor missing shape")?
+                .iter()
+                .map(|d| d.as_usize().context("non-integer dim"))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = t
+                .get("dtype")
+                .and_then(Value::as_str)
+                .unwrap_or("f32")
+                .to_string();
+            Ok(TensorSpec { name, shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Parse from a JSON string.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = json::parse(text).context("manifest JSON")?;
+        let d = v.get("dims").context("manifest missing 'dims'")?;
+        let dim = |key: &str| -> Result<usize> {
+            d.get(key)
+                .and_then(Value::as_usize)
+                .with_context(|| format!("dims.{key} missing or invalid"))
+        };
+        let dims = Dims {
+            batch: dim("batch")?,
+            features: dim("features")?,
+            raw_features: dim("raw_features")?,
+            bank: dim("bank")?,
+            hidden: dim("hidden")?,
+            svm_dim: dim("svm_dim")?,
+            mlp_dim: dim("mlp_dim")?,
+        };
+        if dims.svm_dim != dims.features + 1 {
+            bail!("dims inconsistency: svm_dim {} != features {} + 1", dims.svm_dim, dims.features);
+        }
+        if dims.raw_features > dims.features {
+            bail!("raw_features {} exceeds padded features {}", dims.raw_features, dims.features);
+        }
+
+        let arts = v
+            .get("artifacts")
+            .and_then(Value::as_obj)
+            .context("manifest missing 'artifacts'")?;
+        let mut artifacts = Vec::new();
+        for (name, spec) in arts {
+            let file = spec
+                .get("file")
+                .and_then(Value::as_str)
+                .context("artifact missing file")?
+                .to_string();
+            let sha256 = spec
+                .get("sha256")
+                .and_then(Value::as_str)
+                .context("artifact missing sha256")?
+                .to_string();
+            let inputs = tensor_list(spec.get("inputs").context("missing inputs")?, "inputs")?;
+            let outputs =
+                tensor_list(spec.get("outputs").context("missing outputs")?, "outputs")?;
+            artifacts.push(ArtifactSpec { name: name.clone(), file, sha256, inputs, outputs });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+        Ok(Manifest { dims, artifacts })
+    }
+
+    /// Load from disk.
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.artifacts.iter().map(|a| a.name.clone()).collect()
+    }
+
+    /// Packed parameter dimension for a model family.
+    pub fn param_dim(&self, model: ModelKind) -> usize {
+        match model {
+            ModelKind::Svm => self.dims.svm_dim,
+            ModelKind::Mlp => self.dims.mlp_dim,
+        }
+    }
+}
+
+/// Which model family the coordinator runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Svm,
+    Mlp,
+}
+
+impl ModelKind {
+    pub fn train_artifact(self) -> &'static str {
+        match self {
+            ModelKind::Svm => "svm_train_step",
+            ModelKind::Mlp => "mlp_train_step",
+        }
+    }
+
+    pub fn scores_artifact(self) -> &'static str {
+        match self {
+            ModelKind::Svm => "svm_scores",
+            ModelKind::Mlp => "mlp_scores",
+        }
+    }
+
+    pub fn aggregate_artifact(self) -> &'static str {
+        match self {
+            ModelKind::Svm => "aggregate_svm",
+            ModelKind::Mlp => "aggregate_mlp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ModelKind> {
+        match s {
+            "svm" => Ok(ModelKind::Svm),
+            "mlp" => Ok(ModelKind::Mlp),
+            other => bail!("unknown model kind '{other}' (expected svm|mlp)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "dims": {"batch": 64, "features": 32, "raw_features": 30,
+               "bank": 16, "hidden": 16, "svm_dim": 33, "mlp_dim": 545},
+      "artifacts": {
+        "svm_train_step": {
+          "file": "svm_train_step.hlo.txt",
+          "sha256": "ab",
+          "inputs": [
+            {"name": "x", "shape": [64, 32], "dtype": "f32"},
+            {"name": "params", "shape": [33], "dtype": "f32"}
+          ],
+          "outputs": [{"name": "params", "shape": [33], "dtype": "f32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.dims.batch, 64);
+        assert_eq!(m.dims.mlp_dim, 545);
+        let a = m.artifact("svm_train_step").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![64, 32]);
+        assert_eq!(a.outputs[0].name, "params");
+        assert!(m.artifact("nope").is_none());
+        assert_eq!(m.artifact_names(), vec!["svm_train_step"]);
+    }
+
+    #[test]
+    fn rejects_inconsistent_dims() {
+        let bad = SAMPLE.replace("\"svm_dim\": 33", "\"svm_dim\": 99");
+        assert!(Manifest::parse(&bad).is_err());
+        let bad = SAMPLE.replace("\"raw_features\": 30", "\"raw_features\": 64");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+        let no_arts = r#"{"dims": {"batch":64,"features":32,"raw_features":30,
+            "bank":16,"hidden":16,"svm_dim":33,"mlp_dim":545}, "artifacts": {}}"#;
+        assert!(Manifest::parse(no_arts).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // integration-style: when `make artifacts` has run, the real file
+        // must parse and expose the six artifacts
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if !path.exists() {
+            return;
+        }
+        let m = Manifest::load(&path).unwrap();
+        for name in [
+            "svm_train_step",
+            "svm_train_loop",
+            "svm_scores",
+            "mlp_train_step",
+            "mlp_train_loop",
+            "mlp_scores",
+            "aggregate_svm",
+            "aggregate_mlp",
+        ] {
+            assert!(m.artifact(name).is_some(), "missing artifact {name}");
+        }
+        assert_eq!(m.param_dim(ModelKind::Svm), m.dims.svm_dim);
+        assert_eq!(m.param_dim(ModelKind::Mlp), m.dims.mlp_dim);
+    }
+
+    #[test]
+    fn model_kind_parsing() {
+        assert_eq!(ModelKind::parse("svm").unwrap(), ModelKind::Svm);
+        assert_eq!(ModelKind::parse("mlp").unwrap(), ModelKind::Mlp);
+        assert!(ModelKind::parse("gpt").is_err());
+        assert_eq!(ModelKind::Svm.train_artifact(), "svm_train_step");
+        assert_eq!(ModelKind::Mlp.aggregate_artifact(), "aggregate_mlp");
+    }
+}

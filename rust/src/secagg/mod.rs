@@ -1,0 +1,222 @@
+//! Secure aggregation for the driver-collect phase (privacy extension).
+//!
+//! The paper stresses privacy but transmits cluster members' raw weights
+//! to the driver for eq-10 consensus. This module adds the standard
+//! pairwise-masking construction (Bonawitz-style, simplified to the
+//! honest-but-curious, no-dropout-within-phase setting):
+//!
+//! 1. weights are encoded in **fixed point** (i64, 2⁻²⁴ resolution) so
+//!    masking is exact modular arithmetic, not lossy float addition;
+//! 2. every ordered pair `(i, j)` of group members derives a shared mask
+//!    stream from their node keys (`mix(k_i, k_j)` — in a deployment this
+//!    would be a Diffie–Hellman shared secret); member `i` **adds** the
+//!    stream for every `j > i` and **subtracts** it for every `j < i`;
+//! 3. the driver sums the masked vectors: all masks cancel term-by-term
+//!    (wrapping arithmetic), leaving exactly `Σᵢ wᵢ` in fixed point, which
+//!    divides out to the eq-10 mean.
+//!
+//! The driver learns only the sum — no individual member's weights —
+//! while the consensus result is bit-identical to the plaintext mean (up
+//! to the 2⁻²⁴ quantization, ~6e-8, far below f32 training noise).
+
+use crate::util::rng::{mix64, Rng};
+
+/// Fixed-point scale: 24 fractional bits.
+const SCALE: f64 = (1u64 << 24) as f64;
+
+/// Per-node masking secret (derived from the session root key in the sim).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MaskSecret(pub u64);
+
+impl MaskSecret {
+    /// Derive from a session root key + node id.
+    pub fn derive(root: &[u8; 32], node_id: u64) -> MaskSecret {
+        let mut acc = 0xA17E_5EC2_D002u64 ^ node_id;
+        for chunk in root.chunks(8) {
+            let mut b = [0u8; 8];
+            b[..chunk.len()].copy_from_slice(chunk);
+            acc = mix64(acc, u64::from_le_bytes(b));
+        }
+        MaskSecret(acc)
+    }
+}
+
+/// Encode f32 weights to fixed-point i64 (wrapping domain).
+pub fn encode_fixed(params: &[f32]) -> Vec<i64> {
+    params.iter().map(|&x| (x as f64 * SCALE).round() as i64).collect()
+}
+
+/// Decode fixed-point back to f32, dividing by `count` (the group mean).
+pub fn decode_mean(sum: &[i64], count: usize) -> Vec<f32> {
+    assert!(count > 0);
+    sum.iter()
+        .map(|&v| (v as f64 / count as f64 / SCALE) as f32)
+        .collect()
+}
+
+/// The pairwise mask stream shared by nodes `a` and `b` (symmetric).
+fn pair_stream(a: MaskSecret, b: MaskSecret, dim: usize) -> Vec<i64> {
+    // symmetric seed: order-independent combination
+    let seed = mix64(a.0 ^ b.0, a.0.wrapping_add(b.0));
+    let mut rng = Rng::new(seed);
+    (0..dim).map(|_| rng.next_u64() as i64).collect()
+}
+
+/// Mask one member's fixed-point weights for a group.
+///
+/// `members` are the (id, secret) pairs of the whole group **in a
+/// canonical order agreed by all members** (the sim uses ascending node
+/// id); `me` is this member's index in that list.
+pub fn mask(encoded: &[i64], members: &[(usize, MaskSecret)], me: usize) -> Vec<i64> {
+    let mut out = encoded.to_vec();
+    let my_secret = members[me].1;
+    for (idx, &(_, secret)) in members.iter().enumerate() {
+        if idx == me {
+            continue;
+        }
+        let stream = pair_stream(my_secret, secret, encoded.len());
+        if idx > me {
+            for (o, s) in out.iter_mut().zip(&stream) {
+                *o = o.wrapping_add(*s);
+            }
+        } else {
+            for (o, s) in out.iter_mut().zip(&stream) {
+                *o = o.wrapping_sub(*s);
+            }
+        }
+    }
+    out
+}
+
+/// Driver-side: sum the masked vectors (masks cancel) → fixed-point Σwᵢ.
+pub fn sum_masked(masked: &[Vec<i64>]) -> Vec<i64> {
+    assert!(!masked.is_empty());
+    let dim = masked[0].len();
+    let mut sum = vec![0i64; dim];
+    for m in masked {
+        assert_eq!(m.len(), dim, "dimension mismatch in masked sum");
+        for (s, v) in sum.iter_mut().zip(m) {
+            *s = s.wrapping_add(*v);
+        }
+    }
+    sum
+}
+
+/// Full secure mean over a group's f32 parameter vectors (test helper /
+/// reference composition of the above).
+pub fn secure_mean(
+    params: &[Vec<f32>],
+    members: &[(usize, MaskSecret)],
+) -> Vec<f32> {
+    assert_eq!(params.len(), members.len());
+    let masked: Vec<Vec<i64>> = params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| mask(&encode_fixed(p), members, i))
+        .collect();
+    decode_mean(&sum_masked(&masked), params.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    fn group(n: usize) -> Vec<(usize, MaskSecret)> {
+        let root = [3u8; 32];
+        (0..n).map(|i| (i, MaskSecret::derive(&root, i as u64))).collect()
+    }
+
+    #[test]
+    fn fixed_point_roundtrip() {
+        let xs = vec![0.0f32, 1.5, -2.25, 0.3333, 1e3, -1e3];
+        let enc = encode_fixed(&xs);
+        let dec = decode_mean(&enc, 1);
+        for (a, b) in xs.iter().zip(&dec) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn masks_cancel_exactly() {
+        let members = group(5);
+        let params: Vec<Vec<f32>> = (0..5)
+            .map(|i| (0..33).map(|j| (i * 33 + j) as f32 * 0.01 - 0.5).collect())
+            .collect();
+        let secure = secure_mean(&params, &members);
+        // plaintext mean
+        let mut plain = vec![0.0f64; 33];
+        for p in &params {
+            for (a, &x) in plain.iter_mut().zip(p) {
+                *a += x as f64;
+            }
+        }
+        for (s, p) in secure.iter().zip(&plain) {
+            let expected = (p / 5.0) as f32;
+            assert!((s - expected).abs() < 1e-5, "{s} vs {expected}");
+        }
+    }
+
+    #[test]
+    fn single_masked_vector_is_garbage() {
+        // the driver must not learn an individual's weights: a masked
+        // vector decodes to something wildly different from the input
+        let members = group(3);
+        let p = vec![0.5f32; 33];
+        let masked = mask(&encode_fixed(&p), &members, 0);
+        let decoded = decode_mean(&masked, 1);
+        let max_dev = decoded
+            .iter()
+            .map(|&v| (v - 0.5).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_dev > 1e3, "mask too weak: max deviation {max_dev}");
+    }
+
+    #[test]
+    fn two_party_group() {
+        let members = group(2);
+        let params = vec![vec![1.0f32; 8], vec![3.0f32; 8]];
+        let m = secure_mean(&params, &members);
+        assert!(m.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn singleton_group_is_identity() {
+        let members = group(1);
+        let params = vec![vec![0.75f32; 4]];
+        let m = secure_mean(&params, &members);
+        assert!(m.iter().all(|&v| (v - 0.75).abs() < 1e-6));
+    }
+
+    #[test]
+    fn secrets_differ_by_node_and_root() {
+        let r1 = [1u8; 32];
+        let r2 = [2u8; 32];
+        assert_ne!(MaskSecret::derive(&r1, 0), MaskSecret::derive(&r1, 1));
+        assert_ne!(MaskSecret::derive(&r1, 0), MaskSecret::derive(&r2, 0));
+    }
+
+    #[test]
+    fn property_secure_mean_matches_plaintext() {
+        check(&Config { cases: 60, ..Default::default() }, "secagg correctness", |g| {
+            let n = g.usize_in(1, 12);
+            let dim = g.usize_in(1, 64);
+            let members = group(n);
+            let params: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..dim).map(|_| g.rng.f32() * 20.0 - 10.0).collect())
+                .collect();
+            let secure = secure_mean(&params, &members);
+            for d in 0..dim {
+                let plain: f64 =
+                    params.iter().map(|p| p[d] as f64).sum::<f64>() / n as f64;
+                if (secure[d] as f64 - plain).abs() > 1e-4 {
+                    return Err(format!(
+                        "dim {d}: secure {} vs plain {plain}",
+                        secure[d]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,294 @@
+//! The global server (paper §3.2): encrypted-summary intake, cluster
+//! formation, cluster-model registry, and final global aggregation.
+//!
+//! SCALE keeps the global server *out* of the per-round loop: it sees one
+//! encrypted summary per node at setup, forms the clusters, and then only
+//! receives the checkpoint-gated driver uploads. Its total work (decrypts,
+//! aggregations, bytes ingested) is tracked for the §4.2.4 cost metric.
+
+use anyhow::{bail, Context, Result};
+
+use crate::clustering::{form_clusters, ClusterConfig, Clustering, NodeSummary};
+use crate::crypto::NodeKey;
+use crate::geo::GeoPoint;
+use crate::runtime::compute::ModelCompute;
+use crate::util::json::{self, Value};
+
+/// Client-side summary plaintext (what gets encrypted and shipped).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SummaryMsg {
+    pub node_id: usize,
+    /// Combined metadata score (eq 2).
+    pub data_score: f64,
+    /// Transmitted performance index (eq 7: `ln α`).
+    pub perf_index: f64,
+    pub lat_deg: f64,
+    pub lon_deg: f64,
+}
+
+impl SummaryMsg {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut v = Value::obj();
+        v.set("node_id", Value::Num(self.node_id as f64));
+        v.set("data_score", Value::Num(self.data_score));
+        v.set("perf_index", Value::Num(self.perf_index));
+        v.set("lat", Value::Num(self.lat_deg));
+        v.set("lon", Value::Num(self.lon_deg));
+        v.to_string_compact().into_bytes()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<SummaryMsg> {
+        let text = std::str::from_utf8(bytes).context("summary utf8")?;
+        let v = json::parse(text).context("summary JSON")?;
+        let num = |k: &str| -> Result<f64> {
+            v.get(k)
+                .and_then(Value::as_f64)
+                .with_context(|| format!("summary missing '{k}'"))
+        };
+        Ok(SummaryMsg {
+            node_id: num("node_id")? as usize,
+            data_score: num("data_score")?,
+            perf_index: num("perf_index")?,
+            lat_deg: num("lat")?,
+            lon_deg: num("lon")?,
+        })
+    }
+
+    /// Encrypt with the node's derived key.
+    pub fn seal(&self, root: &[u8; 32], rng: &mut crate::util::rng::Rng) -> Vec<u8> {
+        NodeKey::derive(root, self.node_id as u64).seal(&self.to_bytes(), rng)
+    }
+}
+
+/// Registry entry for a cluster's latest uploaded model.
+#[derive(Clone, Debug)]
+struct ClusterModel {
+    params: Vec<f32>,
+    size: usize,
+    round: usize,
+}
+
+/// The global server.
+pub struct GlobalServer {
+    root_key: [u8; 32],
+    summaries: Vec<NodeSummary>,
+    clustering: Option<Clustering>,
+    models: Vec<Option<ClusterModel>>,
+    /// Decrypt + aggregate CPU seconds burned server-side (cost metric).
+    pub cpu_seconds: f64,
+    /// Count of summary decrypt failures (tamper/abuse monitoring).
+    pub rejected_summaries: u64,
+}
+
+impl GlobalServer {
+    pub fn new(root_key: [u8; 32]) -> GlobalServer {
+        GlobalServer {
+            root_key,
+            summaries: Vec::new(),
+            clustering: None,
+            models: Vec::new(),
+            cpu_seconds: 0.0,
+            rejected_summaries: 0,
+        }
+    }
+
+    /// Receive one encrypted summary envelope from `node_id`.
+    pub fn intake_summary(&mut self, node_id: usize, envelope: &[u8]) -> Result<()> {
+        let key = NodeKey::derive(&self.root_key, node_id as u64);
+        let plain = match key.open(envelope) {
+            Ok(p) => p,
+            Err(e) => {
+                self.rejected_summaries += 1;
+                bail!("summary from node {node_id} rejected: {e}");
+            }
+        };
+        // ~1 µs/KB decrypt cost model
+        self.cpu_seconds += plain.len() as f64 * 1e-9;
+        let msg = SummaryMsg::from_bytes(&plain)?;
+        if msg.node_id != node_id {
+            self.rejected_summaries += 1;
+            bail!("summary claims node {} but sent by {node_id}", msg.node_id);
+        }
+        self.summaries.push(NodeSummary {
+            node_id: msg.node_id,
+            data_score: msg.data_score,
+            perf_index: msg.perf_index,
+            location: GeoPoint::new(msg.lat_deg, msg.lon_deg),
+        });
+        Ok(())
+    }
+
+    pub fn n_summaries(&self) -> usize {
+        self.summaries.len()
+    }
+
+    /// Run Algorithm-2 cluster formation over the received summaries.
+    /// Returns per-cluster member node-id lists.
+    pub fn form_clusters(&mut self, cfg: &ClusterConfig) -> Result<Vec<Vec<usize>>> {
+        if self.summaries.is_empty() {
+            bail!("no summaries received");
+        }
+        let clustering = form_clusters(&self.summaries, cfg);
+        let members = clustering.members(&self.summaries);
+        self.models = vec![None; clustering.n_clusters];
+        // cost model: k-means over n 4-d points, ~50 iters
+        self.cpu_seconds += self.summaries.len() as f64 * 50.0 * 4.0 * 1e-8;
+        self.clustering = Some(clustering);
+        Ok(members)
+    }
+
+    pub fn clustering(&self) -> Option<&Clustering> {
+        self.clustering.as_ref()
+    }
+
+    /// Register a driver upload (Table-1 `GlobalUpdate` payload).
+    pub fn receive_cluster_model(
+        &mut self,
+        cluster: usize,
+        params: Vec<f32>,
+        size: usize,
+        round: usize,
+    ) -> Result<()> {
+        if cluster >= self.models.len() {
+            bail!("unknown cluster {cluster}");
+        }
+        // aggregation bookkeeping cost: one vector copy + mean slot
+        self.cpu_seconds += params.len() as f64 * 1e-9 + 3e-3 * 1e-3;
+        self.models[cluster] = Some(ClusterModel { params, size, round });
+        Ok(())
+    }
+
+    /// Clusters that have uploaded at least once.
+    pub fn reporting_clusters(&self) -> usize {
+        self.models.iter().flatten().count()
+    }
+
+    /// Latest upload round per cluster (staleness diagnostics).
+    pub fn model_rounds(&self) -> Vec<Option<usize>> {
+        self.models.iter().map(|m| m.as_ref().map(|c| c.round)).collect()
+    }
+
+    /// Global model: aggregate of the latest cluster models (through the
+    /// compute backend, i.e. the `aggregate_*` artifact in production).
+    pub fn global_model(&mut self, compute: &dyn ModelCompute) -> Result<Vec<f32>> {
+        let known: Vec<&ClusterModel> = self.models.iter().flatten().collect();
+        if known.is_empty() {
+            bail!("no cluster models received yet");
+        }
+        let bank: Vec<&[f32]> = known.iter().map(|m| m.params.as_slice()).collect();
+        self.cpu_seconds += bank.len() as f64 * bank[0].len() as f64 * 1e-9;
+        compute.aggregate(&bank)
+    }
+
+    /// Sample-weighted cluster sizes of the registered models.
+    pub fn coverage(&self) -> usize {
+        self.models.iter().flatten().map(|m| m.size).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::compute::NativeSvm;
+    use crate::util::rng::Rng;
+
+    const ROOT: [u8; 32] = [9u8; 32];
+
+    fn summary(id: usize) -> SummaryMsg {
+        SummaryMsg {
+            node_id: id,
+            data_score: 100.0 + id as f64,
+            perf_index: -0.5 + 0.01 * id as f64,
+            lat_deg: 40.0 + (id % 2) as f64 * 10.0,
+            lon_deg: -74.0 - (id % 2) as f64 * 40.0,
+        }
+    }
+
+    #[test]
+    fn summary_codec_roundtrip() {
+        let s = summary(17);
+        let back = SummaryMsg::from_bytes(&s.to_bytes()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn encrypted_intake_roundtrip() {
+        let mut server = GlobalServer::new(ROOT);
+        let mut rng = Rng::new(4);
+        for id in 0..20 {
+            let env = summary(id).seal(&ROOT, &mut rng);
+            server.intake_summary(id, &env).unwrap();
+        }
+        assert_eq!(server.n_summaries(), 20);
+        assert_eq!(server.rejected_summaries, 0);
+        assert!(server.cpu_seconds > 0.0);
+    }
+
+    #[test]
+    fn tampered_summary_rejected() {
+        let mut server = GlobalServer::new(ROOT);
+        let mut rng = Rng::new(5);
+        let mut env = summary(3).seal(&ROOT, &mut rng);
+        env[20] ^= 1;
+        assert!(server.intake_summary(3, &env).is_err());
+        assert_eq!(server.rejected_summaries, 1);
+        assert_eq!(server.n_summaries(), 0);
+    }
+
+    #[test]
+    fn spoofed_node_id_rejected() {
+        let mut server = GlobalServer::new(ROOT);
+        let mut rng = Rng::new(6);
+        // node 7 signs a summary claiming to be node 3: key mismatch → BadTag
+        let env = summary(3).seal(&ROOT, &mut rng);
+        assert!(server.intake_summary(7, &env).is_err());
+        // even with node 3's key, claiming a different id inside fails
+        let mut forged = summary(9);
+        forged.node_id = 3;
+        let env = NodeKey::derive(&ROOT, 9).seal(&forged.to_bytes(), &mut rng);
+        assert!(server.intake_summary(9, &env).is_err());
+    }
+
+    #[test]
+    fn clustering_and_model_registry() {
+        let mut server = GlobalServer::new(ROOT);
+        let mut rng = Rng::new(7);
+        for id in 0..40 {
+            let env = summary(id).seal(&ROOT, &mut rng);
+            server.intake_summary(id, &env).unwrap();
+        }
+        let cfg = ClusterConfig { n_clusters: 2, balance_slack: None, ..Default::default() };
+        let members = server.form_clusters(&cfg).unwrap();
+        assert_eq!(members.len(), 2);
+        assert_eq!(members.iter().map(Vec::len).sum::<usize>(), 40);
+
+        let compute = NativeSvm::new(NativeSvm::default_dims());
+        assert!(server.global_model(&compute).is_err()); // nothing uploaded
+        server.receive_cluster_model(0, vec![2.0; 33], 20, 5).unwrap();
+        server.receive_cluster_model(1, vec![4.0; 33], 20, 7).unwrap();
+        assert_eq!(server.reporting_clusters(), 2);
+        assert_eq!(server.coverage(), 40);
+        assert_eq!(server.model_rounds(), vec![Some(5), Some(7)]);
+        let g = server.global_model(&compute).unwrap();
+        assert!(g.iter().all(|&v| (v - 3.0).abs() < 1e-6));
+        assert!(server.receive_cluster_model(9, vec![], 0, 0).is_err());
+    }
+
+    #[test]
+    fn stale_model_overwritten_by_newer_upload() {
+        let mut server = GlobalServer::new(ROOT);
+        let mut rng = Rng::new(8);
+        for id in 0..4 {
+            let env = summary(id).seal(&ROOT, &mut rng);
+            server.intake_summary(id, &env).unwrap();
+        }
+        let cfg = ClusterConfig { n_clusters: 1, balance_slack: None, ..Default::default() };
+        server.form_clusters(&cfg).unwrap();
+        server.receive_cluster_model(0, vec![1.0; 33], 4, 0).unwrap();
+        server.receive_cluster_model(0, vec![5.0; 33], 4, 9).unwrap();
+        let compute = NativeSvm::new(NativeSvm::default_dims());
+        let g = server.global_model(&compute).unwrap();
+        assert!(g.iter().all(|&v| (v - 5.0).abs() < 1e-6));
+        assert_eq!(server.model_rounds(), vec![Some(9)]);
+    }
+}

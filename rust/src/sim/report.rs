@@ -1,0 +1,265 @@
+//! Run reports: per-round and per-cluster records, JSON export, and the
+//! markdown renderers that regenerate the paper's Table 1 / Figure 2.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::ModelMetrics;
+use crate::netsim::{KindTotals, MsgKind};
+use crate::util::json::Value;
+
+/// One round's record.
+#[derive(Clone, Debug, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Global-server updates this round.
+    pub updates: u64,
+    pub cum_updates: u64,
+    /// Mean training loss over live nodes.
+    pub mean_loss: f64,
+    /// End-to-end round latency (ms): slowest cluster + server processing.
+    pub latency_ms: f64,
+    /// Global-model metrics (only on eval rounds).
+    pub metrics: Option<ModelMetrics>,
+    /// Live nodes this round.
+    pub live_nodes: usize,
+    /// Driver elections triggered this round.
+    pub elections: u64,
+}
+
+/// One cluster's end-of-run summary (a Table-1 row).
+#[derive(Clone, Debug, Default)]
+pub struct ClusterReport {
+    pub cluster: usize,
+    pub n_nodes: usize,
+    pub rounds: usize,
+    /// Global-server updates sent by this cluster's driver.
+    pub updates: u64,
+    /// Final cluster-model accuracy on the cluster's validation data.
+    pub final_accuracy: f64,
+    /// Driver elections (including the initial one).
+    pub elections: u64,
+}
+
+/// Full run output.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub mode: String,
+    pub rounds: Vec<RoundRecord>,
+    pub clusters: Vec<ClusterReport>,
+    pub ledger: BTreeMap<MsgKind, KindTotals>,
+    pub final_metrics: ModelMetrics,
+    /// Communication energy (J) across all links.
+    pub comm_energy_j: f64,
+    /// Device-side training compute energy (J).
+    pub compute_energy_j: f64,
+    /// Global-server dollar cost (traffic + aggregation CPU).
+    pub cloud_cost_usd: f64,
+    /// Edge-server infrastructure cost (HFL baseline only; 0 elsewhere).
+    pub edge_cost_usd: f64,
+    /// Server CPU seconds.
+    pub server_cpu_s: f64,
+    /// Wall-clock of the simulation itself.
+    pub wall_ms: f64,
+}
+
+impl RunReport {
+    pub fn total_updates(&self) -> u64 {
+        self.clusters.iter().map(|c| c.updates).sum()
+    }
+
+    pub fn total_latency_ms(&self) -> f64 {
+        self.rounds.iter().map(|r| r.latency_ms).sum()
+    }
+
+    pub fn mean_cluster_accuracy(&self) -> f64 {
+        if self.clusters.is_empty() {
+            return 0.0;
+        }
+        self.clusters.iter().map(|c| c.final_accuracy).sum::<f64>()
+            / self.clusters.len() as f64
+    }
+
+    pub fn total_energy_j(&self) -> f64 {
+        self.comm_energy_j + self.compute_energy_j
+    }
+
+    /// Table-1-style markdown rows for this run.
+    pub fn table1_rows(&self) -> String {
+        let mut out = String::new();
+        for c in &self.clusters {
+            out.push_str(&format!(
+                "| Cluster {:<2} | {:>3} | {:>3} | {:>5} | {:.2} |\n",
+                c.cluster + 1,
+                c.n_nodes,
+                c.rounds,
+                c.updates,
+                c.final_accuracy
+            ));
+        }
+        out.push_str(&format!(
+            "| Total      | {:>3} | {:>3} | {:>5} | {:.2} |\n",
+            self.clusters.iter().map(|c| c.n_nodes).sum::<usize>(),
+            self.clusters.first().map_or(0, |c| c.rounds),
+            self.total_updates(),
+            self.mean_cluster_accuracy()
+        ));
+        out
+    }
+
+    /// Figure-2-style metric series (one row per eval round).
+    pub fn fig2_rows(&self) -> String {
+        let mut out = String::from(
+            "| round | accuracy | precision | recall | f1 | roc_auc |\n",
+        );
+        for r in &self.rounds {
+            if let Some(m) = r.metrics {
+                out.push_str(&format!(
+                    "| {:>5} | {:.4} | {:.4} | {:.4} | {:.4} | {:.4} |\n",
+                    r.round + 1,
+                    m.accuracy,
+                    m.precision,
+                    m.recall,
+                    m.f1,
+                    m.roc_auc
+                ));
+            }
+        }
+        out
+    }
+
+    /// JSON export for downstream tooling / EXPERIMENTS.md generation.
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("mode", Value::Str(self.mode.clone()));
+        v.set("total_updates", Value::Num(self.total_updates() as f64));
+        v.set("total_latency_ms", Value::Num(self.total_latency_ms()));
+        v.set("comm_energy_j", Value::Num(self.comm_energy_j));
+        v.set("compute_energy_j", Value::Num(self.compute_energy_j));
+        v.set("cloud_cost_usd", Value::Num(self.cloud_cost_usd));
+        v.set("edge_cost_usd", Value::Num(self.edge_cost_usd));
+        v.set("server_cpu_s", Value::Num(self.server_cpu_s));
+        v.set("wall_ms", Value::Num(self.wall_ms));
+        let mut fm = Value::obj();
+        fm.set("accuracy", Value::Num(self.final_metrics.accuracy));
+        fm.set("precision", Value::Num(self.final_metrics.precision));
+        fm.set("recall", Value::Num(self.final_metrics.recall));
+        fm.set("f1", Value::Num(self.final_metrics.f1));
+        fm.set("roc_auc", Value::Num(self.final_metrics.roc_auc));
+        v.set("final_metrics", fm);
+        let clusters: Vec<Value> = self
+            .clusters
+            .iter()
+            .map(|c| {
+                let mut cv = Value::obj();
+                cv.set("cluster", Value::Num(c.cluster as f64));
+                cv.set("n_nodes", Value::Num(c.n_nodes as f64));
+                cv.set("updates", Value::Num(c.updates as f64));
+                cv.set("final_accuracy", Value::Num(c.final_accuracy));
+                cv.set("elections", Value::Num(c.elections as f64));
+                cv
+            })
+            .collect();
+        v.set("clusters", Value::Arr(clusters));
+        let rounds: Vec<Value> = self
+            .rounds
+            .iter()
+            .map(|r| {
+                let mut rv = Value::obj();
+                rv.set("round", Value::Num(r.round as f64));
+                rv.set("updates", Value::Num(r.updates as f64));
+                rv.set("mean_loss", Value::Num(r.mean_loss));
+                rv.set("latency_ms", Value::Num(r.latency_ms));
+                rv.set("live_nodes", Value::Num(r.live_nodes as f64));
+                if let Some(m) = r.metrics {
+                    rv.set("accuracy", Value::Num(m.accuracy));
+                    rv.set("f1", Value::Num(m.f1));
+                }
+                rv
+            })
+            .collect();
+        v.set("rounds", Value::Arr(rounds));
+        let mut ledger = Value::obj();
+        for (kind, t) in &self.ledger {
+            let mut kv = Value::obj();
+            kv.set("count", Value::Num(t.count as f64));
+            kv.set("bytes", Value::Num(t.bytes as f64));
+            kv.set("energy_j", Value::Num(t.energy_j));
+            ledger.set(&format!("{kind:?}"), kv);
+        }
+        v.set("ledger", ledger);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> RunReport {
+        RunReport {
+            mode: "scale".into(),
+            rounds: vec![
+                RoundRecord {
+                    round: 0,
+                    updates: 10,
+                    cum_updates: 10,
+                    mean_loss: 0.9,
+                    latency_ms: 120.0,
+                    metrics: Some(ModelMetrics { accuracy: 0.8, ..Default::default() }),
+                    live_nodes: 100,
+                    elections: 10,
+                },
+                RoundRecord {
+                    round: 1,
+                    updates: 3,
+                    cum_updates: 13,
+                    mean_loss: 0.5,
+                    latency_ms: 90.0,
+                    metrics: None,
+                    live_nodes: 100,
+                    elections: 0,
+                },
+            ],
+            clusters: vec![
+                ClusterReport { cluster: 0, n_nodes: 9, rounds: 30, updates: 29,
+                                final_accuracy: 0.91, elections: 1 },
+                ClusterReport { cluster: 1, n_nodes: 11, rounds: 30, updates: 17,
+                                final_accuracy: 0.85, elections: 2 },
+            ],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn totals() {
+        let r = report();
+        assert_eq!(r.total_updates(), 46);
+        assert_eq!(r.total_latency_ms(), 210.0);
+        assert!((r.mean_cluster_accuracy() - 0.88).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table1_rendering() {
+        let t = report().table1_rows();
+        assert!(t.contains("Cluster 1"), "{t}");
+        assert!(t.contains("| Total"), "{t}");
+        assert!(t.contains("46"), "{t}");
+        assert_eq!(t.lines().count(), 3);
+    }
+
+    #[test]
+    fn fig2_rendering_only_eval_rounds() {
+        let f = report().fig2_rows();
+        assert_eq!(f.lines().count(), 2); // header + one eval round
+        assert!(f.contains("0.8000"));
+    }
+
+    #[test]
+    fn json_export_parses() {
+        let j = report().to_json().to_string_pretty();
+        let v = crate::util::json::parse(&j).unwrap();
+        assert_eq!(v.get("total_updates").unwrap().as_f64(), Some(46.0));
+        assert_eq!(v.get("clusters").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("rounds").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,252 @@
+//! Intra-cluster peer-exchange topology (the `N_i` of paper eq 9).
+//!
+//! HDAP's peer exchange needs, for every node `i` in a cluster, a peer set
+//! `N_i`. The paper leaves the topology open ("a selected subset of
+//! peers"); we provide the standard gossip graphs and bench them against
+//! each other in `ablations`:
+//!
+//! * [`Topology::Ring`] — bidirectional ring (degree 2), minimal traffic;
+//! * [`Topology::KRegular`] — each node exchanges with `k` ring-offset
+//!   neighbours (even `k`), the common gossip compromise;
+//! * [`Topology::Full`] — all-to-all within the cluster (degree n−1),
+//!   fastest mixing / highest traffic;
+//! * [`Topology::RandomK`] — `k` fresh random peers per round (sampled
+//!   deterministically from the round seed).
+//!
+//! All graphs are built over *live* members only and guarantee symmetry
+//! (`j ∈ N_i ⇔ i ∈ N_j`) so one exchange round is one undirected edge
+//! traversal — the invariant the property tests pin down.
+
+use crate::util::rng::Rng;
+
+/// Peer-set construction strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    Ring,
+    /// Even degree `k` (clamped to cluster size − 1).
+    KRegular(usize),
+    Full,
+    /// `k` random peers per round, symmetrised.
+    RandomK(usize),
+}
+
+/// Build `N_i` for every member: `peers[p]` lists *indices into
+/// `members`* (not node ids) for the member at position `p`.
+pub fn peer_sets(topology: Topology, members: &[usize], round: usize, seed: u64) -> Vec<Vec<usize>> {
+    let n = members.len();
+    if n <= 1 {
+        return vec![Vec::new(); n];
+    }
+    match topology {
+        Topology::Ring => ring_offsets(n, &[1]),
+        Topology::KRegular(k) => {
+            let k = k.max(2).min(n - 1).max(1);
+            let half = k.div_ceil(2);
+            let offsets: Vec<usize> = (1..=half).collect();
+            ring_offsets(n, &offsets)
+        }
+        Topology::Full => {
+            (0..n).map(|i| (0..n).filter(|&j| j != i).collect()).collect()
+        }
+        Topology::RandomK(k) => random_k(n, k.max(1).min(n - 1), round, seed),
+    }
+}
+
+/// Ring-style graph from symmetric offsets.
+fn ring_offsets(n: usize, offsets: &[usize]) -> Vec<Vec<usize>> {
+    let mut peers = vec![Vec::new(); n];
+    for i in 0..n {
+        for &o in offsets {
+            let o = o % n;
+            if o == 0 {
+                continue;
+            }
+            let fwd = (i + o) % n;
+            let back = (i + n - o) % n;
+            if !peers[i].contains(&fwd) && fwd != i {
+                peers[i].push(fwd);
+            }
+            if !peers[i].contains(&back) && back != i {
+                peers[i].push(back);
+            }
+        }
+        peers[i].sort_unstable();
+    }
+    peers
+}
+
+/// Random symmetric graph with target degree ~k (deterministic per round).
+fn random_k(n: usize, k: usize, round: usize, seed: u64) -> Vec<Vec<usize>> {
+    let mut rng = Rng::new(crate::util::rng::mix64(seed, round as u64));
+    let mut peers: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        while peers[i].len() < k {
+            let j = rng.index(n);
+            if j == i || peers[i].contains(&j) {
+                // on tiny clusters a full retry loop could spin; bail when
+                // the node is already connected to everyone
+                if peers[i].len() >= n - 1 {
+                    break;
+                }
+                continue;
+            }
+            peers[i].push(j);
+            if !peers[j].contains(&i) {
+                peers[j].push(i);
+            }
+        }
+    }
+    for p in &mut peers {
+        p.sort_unstable();
+    }
+    peers
+}
+
+/// Undirected edge list (i < j) implied by the peer sets.
+pub fn edges(peers: &[Vec<usize>]) -> Vec<(usize, usize)> {
+    let mut es = Vec::new();
+    for (i, ps) in peers.iter().enumerate() {
+        for &j in ps {
+            if i < j {
+                es.push((i, j));
+            }
+        }
+    }
+    es
+}
+
+/// Is the peer graph connected? (BFS; vacuously true for n ≤ 1.)
+pub fn is_connected(peers: &[Vec<usize>]) -> bool {
+    let n = peers.len();
+    if n <= 1 {
+        return true;
+    }
+    let mut seen = vec![false; n];
+    let mut stack = vec![0usize];
+    seen[0] = true;
+    let mut count = 1;
+    while let Some(i) = stack.pop() {
+        for &j in &peers[i] {
+            if !seen[j] {
+                seen[j] = true;
+                count += 1;
+                stack.push(j);
+            }
+        }
+    }
+    count == n
+}
+
+/// Check symmetry `j ∈ N_i ⇔ i ∈ N_j`.
+pub fn is_symmetric(peers: &[Vec<usize>]) -> bool {
+    peers.iter().enumerate().all(|(i, ps)| ps.iter().all(|&j| peers[j].contains(&i)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    fn members(n: usize) -> Vec<usize> {
+        (100..100 + n).collect()
+    }
+
+    #[test]
+    fn ring_degree_two() {
+        let p = peer_sets(Topology::Ring, &members(8), 0, 0);
+        assert!(p.iter().all(|ps| ps.len() == 2));
+        assert!(is_symmetric(&p));
+        assert!(is_connected(&p));
+    }
+
+    #[test]
+    fn ring_tiny_clusters() {
+        assert_eq!(peer_sets(Topology::Ring, &members(1), 0, 0), vec![Vec::<usize>::new()]);
+        let p2 = peer_sets(Topology::Ring, &members(2), 0, 0);
+        assert_eq!(p2, vec![vec![1], vec![0]]);
+        let p3 = peer_sets(Topology::Ring, &members(3), 0, 0);
+        assert!(p3.iter().all(|ps| ps.len() == 2));
+    }
+
+    #[test]
+    fn k_regular_degree() {
+        let p = peer_sets(Topology::KRegular(4), &members(10), 0, 0);
+        assert!(p.iter().all(|ps| ps.len() == 4), "{p:?}");
+        assert!(is_symmetric(&p));
+        assert!(is_connected(&p));
+    }
+
+    #[test]
+    fn k_regular_clamps_to_full() {
+        let p = peer_sets(Topology::KRegular(100), &members(5), 0, 0);
+        assert!(p.iter().all(|ps| ps.len() == 4));
+    }
+
+    #[test]
+    fn full_topology() {
+        let p = peer_sets(Topology::Full, &members(6), 0, 0);
+        assert!(p.iter().all(|ps| ps.len() == 5));
+        assert!(is_symmetric(&p));
+    }
+
+    #[test]
+    fn random_k_deterministic_per_round_and_varies_across_rounds() {
+        let m = members(12);
+        let a = peer_sets(Topology::RandomK(3), &m, 5, 42);
+        let b = peer_sets(Topology::RandomK(3), &m, 5, 42);
+        let c = peer_sets(Topology::RandomK(3), &m, 6, 42);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(is_symmetric(&a));
+    }
+
+    #[test]
+    fn edges_count_matches_half_degree_sum() {
+        for topo in [Topology::Ring, Topology::KRegular(4), Topology::Full] {
+            let p = peer_sets(topo, &members(9), 0, 0);
+            let degree_sum: usize = p.iter().map(|ps| ps.len()).sum();
+            assert_eq!(edges(&p).len() * 2, degree_sum, "{topo:?}");
+        }
+    }
+
+    #[test]
+    fn property_symmetry_and_connectivity_all_topologies() {
+        check(&Config { cases: 80, ..Default::default() }, "topology invariants", |g| {
+            let n = g.usize_in(1, 24);
+            let k = g.usize_in(2, 8);
+            let round = g.usize_in(0, 10);
+            let m = members(n);
+            for topo in [
+                Topology::Ring,
+                Topology::KRegular(k),
+                Topology::Full,
+                Topology::RandomK(k),
+            ] {
+                let p = peer_sets(topo, &m, round, 7);
+                if p.len() != n {
+                    return Err(format!("{topo:?}: wrong length"));
+                }
+                if !is_symmetric(&p) {
+                    return Err(format!("{topo:?}: asymmetric"));
+                }
+                for (i, ps) in p.iter().enumerate() {
+                    if ps.contains(&i) {
+                        return Err(format!("{topo:?}: self-loop at {i}"));
+                    }
+                    let mut q = ps.clone();
+                    q.dedup();
+                    if q.len() != ps.len() {
+                        return Err(format!("{topo:?}: duplicate peers"));
+                    }
+                }
+                // ring-family graphs must be connected (mixing guarantee)
+                if matches!(topo, Topology::Ring | Topology::KRegular(_) | Topology::Full)
+                    && !is_connected(&p)
+                {
+                    return Err(format!("{topo:?}: disconnected"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

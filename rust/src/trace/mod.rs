@@ -1,0 +1,227 @@
+//! Experiment tracing: CSV exports and a minimal `log` backend.
+//!
+//! Downstream analysis (plotting Figure-2-style curves, comparing runs)
+//! wants flat files, not console tables. [`round_csv`] / [`cluster_csv`]
+//! render a [`RunReport`] as RFC-4180 CSV, [`write_run`] dumps the
+//! standard trio (rounds.csv, clusters.csv, report.json) into a run
+//! directory, and [`init_logger`] installs a tiny stderr logger for the
+//! `log` facade used across the crate.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::sim::report::RunReport;
+
+/// CSV-escape one field (RFC 4180: quote when needed, double quotes).
+fn esc(field: &str) -> String {
+    if field.contains([',', '"', '\n']) {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+/// Per-round CSV: one row per round, metrics blank on non-eval rounds.
+pub fn round_csv(report: &RunReport) -> String {
+    let mut out = String::from(
+        "round,updates,cum_updates,mean_loss,latency_ms,live_nodes,elections,\
+         accuracy,precision,recall,f1,roc_auc\n",
+    );
+    for r in &report.rounds {
+        let metrics = match r.metrics {
+            Some(m) => format!(
+                "{:.6},{:.6},{:.6},{:.6},{:.6}",
+                m.accuracy, m.precision, m.recall, m.f1, m.roc_auc
+            ),
+            None => ",,,,".to_string(),
+        };
+        out.push_str(&format!(
+            "{},{},{},{:.6},{:.3},{},{},{}\n",
+            r.round + 1,
+            r.updates,
+            r.cum_updates,
+            r.mean_loss,
+            r.latency_ms,
+            r.live_nodes,
+            r.elections,
+            metrics
+        ));
+    }
+    out
+}
+
+/// Per-cluster CSV (the Table-1 rows).
+pub fn cluster_csv(report: &RunReport) -> String {
+    let mut out = String::from("cluster,n_nodes,rounds,updates,final_accuracy,elections\n");
+    for c in &report.clusters {
+        out.push_str(&format!(
+            "{},{},{},{},{:.6},{}\n",
+            c.cluster + 1,
+            c.n_nodes,
+            c.rounds,
+            c.updates,
+            c.final_accuracy,
+            c.elections
+        ));
+    }
+    out
+}
+
+/// Ledger CSV: message-kind totals.
+pub fn ledger_csv(report: &RunReport) -> String {
+    let mut out = String::from("kind,count,bytes,latency_ms,energy_j\n");
+    for (kind, t) in &report.ledger {
+        out.push_str(&format!(
+            "{},{},{},{:.3},{:.6}\n",
+            esc(&format!("{kind:?}")),
+            t.count,
+            t.bytes,
+            t.latency_ms,
+            t.energy_j
+        ));
+    }
+    out
+}
+
+/// Write the standard run trio into `dir` (created if needed):
+/// `<mode>_rounds.csv`, `<mode>_clusters.csv`, `<mode>_ledger.csv`,
+/// `<mode>_report.json`.
+pub fn write_run(dir: &Path, report: &RunReport) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let mode = &report.mode;
+    std::fs::write(dir.join(format!("{mode}_rounds.csv")), round_csv(report))?;
+    std::fs::write(dir.join(format!("{mode}_clusters.csv")), cluster_csv(report))?;
+    std::fs::write(dir.join(format!("{mode}_ledger.csv")), ledger_csv(report))?;
+    std::fs::write(
+        dir.join(format!("{mode}_report.json")),
+        report.to_json().to_string_pretty(),
+    )?;
+    Ok(())
+}
+
+/// Minimal stderr logger for the `log` facade (level from `SCALE_LOG`:
+/// error|warn|info|debug|trace; default info). Idempotent.
+pub fn init_logger() {
+    static LOGGER: StderrLogger = StderrLogger;
+    let level = match std::env::var("SCALE_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    };
+    if log::set_logger(&LOGGER).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!("[{:<5}] {}: {}", record.level(), record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::ModelMetrics;
+    use crate::sim::report::{ClusterReport, RoundRecord};
+
+    fn report() -> RunReport {
+        RunReport {
+            mode: "scale".into(),
+            rounds: vec![
+                RoundRecord {
+                    round: 0,
+                    updates: 4,
+                    cum_updates: 4,
+                    mean_loss: 0.83,
+                    latency_ms: 120.5,
+                    metrics: Some(ModelMetrics {
+                        accuracy: 0.9,
+                        precision: 0.8,
+                        recall: 0.7,
+                        f1: 0.75,
+                        roc_auc: 0.92,
+                        n: 100,
+                    }),
+                    live_nodes: 20,
+                    elections: 4,
+                },
+                RoundRecord { round: 1, updates: 2, cum_updates: 6, ..Default::default() },
+            ],
+            clusters: vec![ClusterReport {
+                cluster: 0,
+                n_nodes: 10,
+                rounds: 2,
+                updates: 6,
+                final_accuracy: 0.875,
+                elections: 1,
+            }],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn round_csv_shape() {
+        let csv = round_csv(&report());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("round,updates"));
+        assert!(lines[1].contains("0.900000"));
+        // non-eval round has empty metric fields
+        assert!(lines[2].ends_with(",,,,"));
+        // constant column count across rows
+        let cols = lines[0].split(',').count();
+        assert!(lines.iter().all(|l| l.split(',').count() == cols), "{csv}");
+    }
+
+    #[test]
+    fn cluster_and_ledger_csv() {
+        let r = report();
+        let c = cluster_csv(&r);
+        assert!(c.contains("1,10,2,6,0.875000,1"));
+        let l = ledger_csv(&r);
+        assert_eq!(l.lines().count(), 1); // header only (empty ledger)
+    }
+
+    #[test]
+    fn csv_escaping() {
+        assert_eq!(esc("plain"), "plain");
+        assert_eq!(esc("a,b"), "\"a,b\"");
+        assert_eq!(esc("q\"x"), "\"q\"\"x\"");
+    }
+
+    #[test]
+    fn write_run_creates_trio() {
+        let dir = std::env::temp_dir().join(format!("scale_trace_{}", std::process::id()));
+        write_run(&dir, &report()).unwrap();
+        for f in ["scale_rounds.csv", "scale_clusters.csv", "scale_ledger.csv",
+                  "scale_report.json"] {
+            assert!(dir.join(f).exists(), "{f}");
+        }
+        // json parses back
+        let text = std::fs::read_to_string(dir.join("scale_report.json")).unwrap();
+        assert!(crate::util::json::parse(&text).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn logger_initializes_idempotently() {
+        init_logger();
+        init_logger();
+        log::info!("trace logger smoke");
+    }
+}

@@ -1,0 +1,172 @@
+//! Tiny property-testing harness (offline stand-in for `proptest`).
+//!
+//! Runs a property over many seeded random cases and, on failure, retries
+//! the failing case against progressively "smaller" inputs produced by the
+//! generator at lower size budgets — a lightweight shrink that keeps
+//! counterexamples readable. Deterministic: failures print the case seed,
+//! and `check_with_seed` replays it.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum "size" hint passed to generators (scales vector lengths etc.).
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0x5CA1E, max_size: 64 }
+    }
+}
+
+/// Per-case context handed to generators.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    /// Size budget for this case (ramps up over the run).
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    /// Vector of `len <= size` elements from `f`.
+    pub fn vec_of<T>(&mut self, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+        let len = self.rng.index(self.size.max(1)) + 1;
+        (0..len).map(|_| f(self.rng)).collect()
+    }
+
+    /// Uniform f64 in a finite, well-behaved range.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_i64(lo as i64, hi as i64) as usize
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub struct Failure {
+    pub case_seed: u64,
+    pub case_index: usize,
+    pub message: String,
+}
+
+/// Run `prop` over `cfg.cases` random cases. Panics (with the replay seed)
+/// on the first failing case — mirroring `proptest!` ergonomics.
+pub fn check<F>(cfg: &Config, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    if let Some(fail) = check_quiet(cfg, &mut prop) {
+        panic!(
+            "property '{name}' failed at case {} (replay seed {:#x}): {}",
+            fail.case_index, fail.case_seed, fail.message
+        );
+    }
+}
+
+/// Like [`check`] but returns the failure instead of panicking (testable).
+pub fn check_quiet<F>(cfg: &Config, prop: &mut F) -> Option<Failure>
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for i in 0..cfg.cases {
+        let case_seed = crate::util::rng::mix64(cfg.seed, i as u64);
+        // size ramps from small to max so early failures are tiny already
+        let size = 1 + (cfg.max_size - 1) * i / cfg.cases.max(1);
+        if let Err(msg) = run_case(case_seed, size, prop) {
+            // shrink: replay the same seed at smaller sizes, keep the
+            // smallest size that still fails
+            let mut best = (size, msg);
+            let mut s = size / 2;
+            while s >= 1 {
+                match run_case(case_seed, s, prop) {
+                    Err(m) => {
+                        best = (s, m);
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            return Some(Failure {
+                case_seed,
+                case_index: i,
+                message: format!("(size {}) {}", best.0, best.1),
+            });
+        }
+    }
+    None
+}
+
+fn run_case<F>(case_seed: u64, size: usize, prop: &mut F) -> Result<(), String>
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut rng = Rng::new(case_seed);
+    let mut g = Gen { rng: &mut rng, size };
+    prop(&mut g)
+}
+
+/// Replay a single case seed (debugging helper).
+pub fn check_with_seed<F>(case_seed: u64, size: usize, mut prop: F) -> Result<(), String>
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    run_case(case_seed, size, &mut prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(&Config::default(), "reverse twice is identity", |g| {
+            let v = g.vec_of(|r| r.next_u64());
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            if v == w {
+                Ok(())
+            } else {
+                Err("mismatch".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_is_caught_and_shrunk() {
+        let cfg = Config { cases: 256, ..Config::default() };
+        let fail = check_quiet(&cfg, &mut |g: &mut Gen| {
+            let v = g.vec_of(|r| r.index(10));
+            if v.len() < 3 {
+                Ok(())
+            } else {
+                Err(format!("len {} >= 3", v.len()))
+            }
+        });
+        let f = fail.expect("property should fail");
+        // shrinking should have pushed the failure toward small sizes
+        assert!(f.message.contains("size"));
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut seen = Vec::new();
+        for _ in 0..2 {
+            let r = check_with_seed(0xDEAD, 8, |g| {
+                let v: Vec<u64> = g.vec_of(|r| r.next_u64());
+                Err(format!("{v:?}"))
+            });
+            seen.push(r.unwrap_err());
+        }
+        assert_eq!(seen[0], seen[1]);
+    }
+}

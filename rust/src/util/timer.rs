@@ -1,0 +1,78 @@
+//! Wall-clock timing helpers for the bench harness and perf traces.
+
+use std::time::{Duration, Instant};
+
+/// Measure one closure invocation.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed())
+}
+
+/// Simple scoped stopwatch accumulating named segments.
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    segments: Vec<(String, Duration)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` and record it under `name`.
+    pub fn measure<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, d) = time_once(f);
+        self.add(name, d);
+        out
+    }
+
+    /// Accumulate a duration under `name`.
+    pub fn add(&mut self, name: &str, d: Duration) {
+        if let Some(seg) = self.segments.iter_mut().find(|(n, _)| n == name) {
+            seg.1 += d;
+        } else {
+            self.segments.push((name.to_string(), d));
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<Duration> {
+        self.segments.iter().find(|(n, _)| n == name).map(|(_, d)| *d)
+    }
+
+    pub fn segments(&self) -> &[(String, Duration)] {
+        &self.segments
+    }
+
+    pub fn total(&self) -> Duration {
+        self.segments.iter().map(|(_, d)| *d).sum()
+    }
+
+    /// One-line summary, longest segment first.
+    pub fn summary(&self) -> String {
+        let mut segs: Vec<_> = self.segments.iter().collect();
+        segs.sort_by(|a, b| b.1.cmp(&a.1));
+        segs.iter()
+            .map(|(n, d)| format!("{n}={:.3}ms", d.as_secs_f64() * 1e3))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_accumulates() {
+        let mut sw = Stopwatch::new();
+        let x = sw.measure("a", || 21 * 2);
+        assert_eq!(x, 42);
+        sw.add("a", Duration::from_millis(1));
+        sw.add("b", Duration::from_millis(2));
+        assert!(sw.get("a").unwrap() >= Duration::from_millis(1));
+        assert_eq!(sw.segments().len(), 2);
+        assert!(sw.total() >= Duration::from_millis(3));
+        assert!(sw.summary().contains("a="));
+    }
+}

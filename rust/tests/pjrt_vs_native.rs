@@ -1,0 +1,164 @@
+//! Integration: the AOT artifacts executed through PJRT must agree with
+//! the pure-rust native oracle to f32 tolerance, and the full artifact
+//! set must load, validate and execute.
+//!
+//! Requires `make artifacts` to have run (skips cleanly otherwise so
+//! `cargo test` stays green on a fresh checkout).
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use scale_fl::data::{pad_batch, synth_wdbc, Dataset, Scaler};
+use scale_fl::runtime::compute::{ModelCompute, NativeSvm, PjrtModel};
+use scale_fl::runtime::manifest::ModelKind;
+use scale_fl::runtime::Runtime;
+use scale_fl::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn runtime() -> Option<Rc<Runtime>> {
+    artifacts_dir().map(|d| Rc::new(Runtime::open(&d).expect("runtime open")))
+}
+
+fn wdbc_batch(seed: u64) -> scale_fl::data::PaddedBatch {
+    let mut rng = Rng::new(seed);
+    let mut ds = synth_wdbc(seed);
+    let scaler = Scaler::fit(&ds);
+    scaler.transform(&mut ds);
+    let idx = rng.sample_indices(ds.n(), 48);
+    let sub = ds.select(&idx);
+    pad_batch(&sub, 0, 64, 32)
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol + tol * x.abs().max(y.abs()),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn all_artifacts_load_and_execute() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    rt.warm_up().expect("warm_up compiles all artifacts");
+    for kind in [ModelKind::Svm, ModelKind::Mlp] {
+        let model = PjrtModel::new(rt.clone(), kind);
+        let batch = wdbc_batch(1);
+        let params = model.init_params(3);
+        let (new, loss) = model.train_step(&batch, &params, 0.05, 0.001).unwrap();
+        assert_eq!(new.len(), model.param_dim());
+        assert!(loss.is_finite(), "{kind:?} loss {loss}");
+        let scores = model.scores(&batch, &new).unwrap();
+        assert_eq!(scores.len(), batch.n_valid);
+        assert!(scores.iter().all(|s| s.is_finite()));
+        let agg = model.aggregate(&[&new, &params]).unwrap();
+        assert_eq!(agg.len(), model.param_dim());
+    }
+}
+
+#[test]
+fn pjrt_svm_matches_native_oracle() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let pjrt = PjrtModel::new(rt.clone(), ModelKind::Svm);
+    let native = NativeSvm::new(rt.manifest.dims);
+
+    let batch = wdbc_batch(7);
+    let mut p_pjrt = pjrt.init_params(0);
+    let mut p_native = native.init_params(0);
+    assert_eq!(p_pjrt, p_native);
+
+    for step in 0..25 {
+        let (np, lp) = pjrt.train_step(&batch, &p_pjrt, 0.05, 0.001).unwrap();
+        let (nn, ln) = native.train_step(&batch, &p_native, 0.05, 0.001).unwrap();
+        assert!(
+            (lp - ln).abs() <= 1e-4 + 1e-4 * ln.abs(),
+            "step {step}: loss {lp} vs {ln}"
+        );
+        assert_close(&np, &nn, 1e-4, &format!("params step {step}"));
+        p_pjrt = np;
+        p_native = nn;
+    }
+
+    let s_pjrt = pjrt.scores(&batch, &p_pjrt).unwrap();
+    let s_native = native.scores(&batch, &p_native).unwrap();
+    assert_close(&s_pjrt, &s_native, 1e-3, "scores");
+}
+
+#[test]
+fn pjrt_training_learns_wdbc() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let model = PjrtModel::new(rt, ModelKind::Svm);
+    let batch = wdbc_batch(11);
+    let mut params = model.init_params(0);
+    let mut first_loss = None;
+    let mut last_loss = 0.0;
+    for _ in 0..150 {
+        let (p, loss) = model.train_step(&batch, &params, 0.1, 0.001).unwrap();
+        params = p;
+        first_loss.get_or_insert(loss);
+        last_loss = loss;
+    }
+    assert!(
+        last_loss < first_loss.unwrap() * 0.5,
+        "loss {:?} -> {last_loss}",
+        first_loss
+    );
+    let scores = model.scores(&batch, &params).unwrap();
+    let m = scale_fl::metrics::ModelMetrics::from_scores(&scores, &batch.y[..batch.n_valid]);
+    assert!(m.accuracy > 0.85, "train accuracy {}", m.accuracy);
+    assert!(m.roc_auc > 0.9, "auc {}", m.roc_auc);
+}
+
+#[test]
+fn pjrt_aggregate_matches_native_even_chunked() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let pjrt = PjrtModel::new(rt.clone(), ModelKind::Svm);
+    let native = NativeSvm::new(rt.manifest.dims);
+    let mut rng = Rng::new(3);
+    // 21 vectors > bank size 16 → exercises the chunked recombine
+    let vecs: Vec<Vec<f32>> = (0..21)
+        .map(|_| (0..33).map(|_| rng.f32() * 2.0 - 1.0).collect())
+        .collect();
+    let refs: Vec<&[f32]> = vecs.iter().map(|v| v.as_slice()).collect();
+    let a = pjrt.aggregate(&refs).unwrap();
+    let b = native.aggregate(&refs).unwrap();
+    assert_close(&a, &b, 1e-5, "aggregate");
+}
+
+#[test]
+fn runtime_rejects_bad_shapes() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let lit = scale_fl::runtime::literal_f32(&vec![0.0; 10], &[10]).unwrap();
+    let err = match rt.execute("svm_scores", &[lit]) {
+        Ok(_) => panic!("shape mismatch accepted"),
+        Err(e) => e,
+    };
+    assert!(format!("{err}").contains("expects"), "{err}");
+
+    let ds = Dataset::new(vec![0.0; 30], vec![1.0], 30);
+    let batch = pad_batch(&ds, 0, 64, 32);
+    let model = PjrtModel::new(rt, ModelKind::Svm);
+    let bad_params = vec![0.0f32; 7];
+    assert!(model.train_step(&batch, &bad_params, 0.1, 0.0).is_err());
+}

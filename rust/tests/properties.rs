@@ -1,0 +1,263 @@
+//! Cross-module property tests: system-level invariants that must hold
+//! for every configuration, checked with the in-repo property runner
+//! (`util::prop`) over randomized federations. Artifact-free (native
+//! backend) so they run on any checkout.
+
+use scale_fl::checkpoint::Checkpoint;
+use scale_fl::config::{Partition, SimConfig};
+use scale_fl::netsim::MsgKind;
+use scale_fl::quant::QuantVec;
+use scale_fl::runtime::compute::NativeSvm;
+use scale_fl::sim::Simulation;
+use scale_fl::topology::Topology;
+use scale_fl::util::prop::{check, Config, Gen};
+use scale_fl::util::rng::Rng;
+
+fn random_cfg(g: &mut Gen) -> SimConfig {
+    let n_nodes = g.usize_in(6, 36);
+    let n_clusters = g.usize_in(2, n_nodes.min(6));
+    let topo = match g.usize_in(0, 3) {
+        0 => Topology::Ring,
+        1 => Topology::KRegular(g.usize_in(2, 6)),
+        2 => Topology::Full,
+        _ => Topology::RandomK(g.usize_in(1, 4)),
+    };
+    SimConfig {
+        n_nodes,
+        n_clusters,
+        rounds: g.usize_in(2, 6),
+        local_epochs: g.usize_in(1, 3),
+        topology: topo,
+        partition: if g.rng.chance(0.5) {
+            Partition::Iid
+        } else {
+            Partition::LabelSkew(g.f64_in(0.2, 5.0))
+        },
+        checkpoint_min_delta: g.f64_in(0.0, 0.2),
+        node_failure_prob: if g.rng.chance(0.3) { g.f64_in(0.0, 0.3) } else { 0.0 },
+        quantize_exchange: g.rng.chance(0.3),
+        secure_aggregation: g.rng.chance(0.3),
+        dataset_samples: g.usize_in(150, 500),
+        dataset_malignant: 0, // set below
+        eval_every: 100,      // skip mid-run evals for speed
+        seed: g.rng.next_u64(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn sim_invariants_hold_across_random_configs() {
+    let compute = NativeSvm::new(NativeSvm::default_dims());
+    check(
+        &Config { cases: 25, seed: 0xF00D, max_size: 8 },
+        "sim invariants",
+        |g| {
+            let mut cfg = random_cfg(g);
+            cfg.dataset_malignant = (cfg.dataset_samples as f64 * 0.37) as usize;
+            let cfg = cfg.normalized();
+            cfg.validate().map_err(|e| format!("cfg invalid: {e}"))?;
+            let mut sim = Simulation::new(cfg.clone(), &compute)
+                .map_err(|e| format!("setup: {e}"))?;
+            let r = sim.run_scale().map_err(|e| format!("run: {e}"))?;
+
+            // (1) cluster sizes partition the fleet
+            let covered: usize = r.clusters.iter().map(|c| c.n_nodes).sum();
+            if covered != cfg.n_nodes {
+                return Err(format!("clusters cover {covered} != {}", cfg.n_nodes));
+            }
+            // (2) ledger GlobalUpdate count == per-cluster update totals
+            let ledger_updates =
+                r.ledger.get(&MsgKind::GlobalUpdate).map_or(0, |t| t.count);
+            if ledger_updates != r.total_updates() {
+                return Err(format!(
+                    "ledger updates {ledger_updates} != report {}",
+                    r.total_updates()
+                ));
+            }
+            // (3) uploads bounded by driver-round opportunities, ≥ forced
+            //     finals for clusters that were live at the end
+            if r.total_updates() > (cfg.rounds * r.clusters.len()) as u64 {
+                return Err("more uploads than driver-rounds".into());
+            }
+            // (4) every round's cumulative counter is monotone
+            let mut prev = 0;
+            for rec in &r.rounds {
+                if rec.cum_updates < prev {
+                    return Err("cum_updates not monotone".into());
+                }
+                prev = rec.cum_updates;
+            }
+            // (5) every cluster held ≥1 election (the initial one)
+            if r.clusters.iter().any(|c| c.elections == 0) {
+                return Err("cluster without initial election".into());
+            }
+            // (6) energies and latencies are non-negative and finite
+            if !(r.comm_energy_j.is_finite() && r.comm_energy_j >= 0.0) {
+                return Err("bad comm energy".into());
+            }
+            if r.rounds.iter().any(|x| !x.latency_ms.is_finite() || x.latency_ms < 0.0)
+            {
+                return Err("bad round latency".into());
+            }
+            // (7) metrics are probabilities
+            let m = r.final_metrics;
+            for (name, v) in [
+                ("acc", m.accuracy),
+                ("prec", m.precision),
+                ("rec", m.recall),
+                ("f1", m.f1),
+                ("auc", m.roc_auc),
+            ] {
+                if !(0.0..=1.0).contains(&v) {
+                    return Err(format!("{name} out of range: {v}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fedavg_updates_equal_live_node_rounds() {
+    let compute = NativeSvm::new(NativeSvm::default_dims());
+    check(
+        &Config { cases: 15, seed: 0xBEEF, max_size: 8 },
+        "fedavg accounting",
+        |g| {
+            let mut cfg = random_cfg(g);
+            cfg.node_failure_prob = 0.0; // exact accounting without failures
+            cfg.dataset_malignant = (cfg.dataset_samples as f64 * 0.37) as usize;
+            let cfg = cfg.normalized();
+            let mut sim = Simulation::new(cfg.clone(), &compute)
+                .map_err(|e| format!("setup: {e}"))?;
+            let r = sim.run_fedavg(None).map_err(|e| format!("run: {e}"))?;
+            let expect = (cfg.n_nodes * cfg.rounds) as u64;
+            if r.total_updates() != expect {
+                return Err(format!("updates {} != {expect}", r.total_updates()));
+            }
+            let broadcasts =
+                r.ledger.get(&MsgKind::GlobalBroadcast).map_or(0, |t| t.count);
+            if broadcasts != expect {
+                return Err(format!("broadcasts {broadcasts} != {expect}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn checkpoint_codec_rejects_random_corruption() {
+    check(
+        &Config { cases: 150, seed: 0xC0DE, max_size: 64 },
+        "checkpoint codec fuzz",
+        |g| {
+            let dim = g.usize_in(0, 600);
+            let params: Vec<f32> = (0..dim).map(|_| g.rng.f32() * 10.0 - 5.0).collect();
+            let cp = Checkpoint {
+                round: g.rng.next_u64() as u32,
+                metric: g.f64_in(0.0, 1.0),
+                params,
+            };
+            let mut bytes = cp.to_bytes();
+            // clean roundtrip first
+            let back = Checkpoint::from_bytes(&bytes).map_err(|e| format!("{e}"))?;
+            if back != cp {
+                return Err("roundtrip mismatch".into());
+            }
+            // corrupt 1..4 random bytes: must error OR decode to an
+            // identical checkpoint (a flip inside zlib padding may be
+            // absorbed) — silent *different* data is the failure mode
+            let flips = g.usize_in(1, 4);
+            for _ in 0..flips {
+                let i = g.rng.index(bytes.len());
+                bytes[i] ^= (g.rng.next_u64() as u8) | 1;
+            }
+            match Checkpoint::from_bytes(&bytes) {
+                Err(_) => Ok(()),
+                Ok(decoded) if decoded == cp => Ok(()),
+                Ok(_) => Err("corruption decoded silently to different data".into()),
+            }
+        },
+    );
+}
+
+#[test]
+fn quantization_never_exceeds_half_step_error() {
+    check(
+        &Config { cases: 200, seed: 0x0AB1, max_size: 128 },
+        "quant bound",
+        |g| {
+            let xs: Vec<f32> = g.vec_of(|r| (r.f32() - 0.5) * r.f32() * 100.0);
+            let q = QuantVec::encode(&xs);
+            let back = q.decode();
+            let bound = q.max_error() as f64 + 1e-5;
+            for (a, b) in xs.iter().zip(&back) {
+                if ((a - b).abs() as f64) > bound {
+                    return Err(format!("{a} vs {b} bound {bound}"));
+                }
+            }
+            // serialized form parses back to the same struct
+            if QuantVec::from_bytes(&q.to_bytes()).as_ref() != Some(&q) {
+                return Err("bytes roundtrip".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn full_run_is_bit_deterministic() {
+    let compute = NativeSvm::new(NativeSvm::default_dims());
+    check(
+        &Config { cases: 6, seed: 0xD17E, max_size: 4 },
+        "determinism",
+        |g| {
+            let mut cfg = random_cfg(g);
+            cfg.dataset_malignant = (cfg.dataset_samples as f64 * 0.37) as usize;
+            let cfg = cfg.normalized();
+            let run = || {
+                let mut sim = Simulation::new(cfg.clone(), &compute).unwrap();
+                let r = sim.run_scale().unwrap();
+                (
+                    r.total_updates(),
+                    r.final_metrics,
+                    r.comm_energy_j,
+                    r.ledger.get(&MsgKind::PeerExchange).map_or(0, |t| t.count),
+                )
+            };
+            let (a, b) = (run(), run());
+            if a != b {
+                return Err(format!("two runs diverged: {a:?} vs {b:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn seeds_produce_distinct_but_valid_runs() {
+    let compute = NativeSvm::new(NativeSvm::default_dims());
+    let mut rng = Rng::new(77);
+    let mut outcomes = Vec::new();
+    for _ in 0..4 {
+        let cfg = SimConfig {
+            n_nodes: 20,
+            n_clusters: 4,
+            rounds: 5,
+            dataset_samples: 300,
+            dataset_malignant: 110,
+            eval_every: 5,
+            seed: rng.next_u64(),
+            ..Default::default()
+        }
+        .normalized();
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        let r = sim.run_scale().unwrap();
+        outcomes.push((r.total_updates(), r.comm_energy_j.to_bits()));
+    }
+    // different seeds should not all collapse to one trajectory
+    let mut unique = outcomes.clone();
+    unique.sort();
+    unique.dedup();
+    assert!(unique.len() >= 2, "seeds produced identical runs: {outcomes:?}");
+}

@@ -1,0 +1,155 @@
+//! Integration: the full SCALE system over the PJRT backend — MLP model
+//! family, extension combinations (quantized exchange, secure
+//! aggregation), config round trips through the CLI surface, and trace
+//! exports. Skips PJRT-dependent cases when artifacts are absent.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use scale_fl::config::{Partition, SimConfig};
+use scale_fl::netsim::MsgKind;
+use scale_fl::runtime::compute::{NativeSvm, PjrtModel};
+use scale_fl::runtime::manifest::ModelKind;
+use scale_fl::runtime::Runtime;
+use scale_fl::sim::Simulation;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json")
+        .exists()
+        .then(|| Rc::new(Runtime::open(&dir).expect("runtime open")))
+}
+
+fn small_cfg() -> SimConfig {
+    SimConfig {
+        n_nodes: 16,
+        n_clusters: 4,
+        rounds: 6,
+        local_epochs: 2,
+        eval_every: 3,
+        dataset_samples: 320,
+        dataset_malignant: 120,
+        seed: 9,
+        ..Default::default()
+    }
+    .normalized()
+}
+
+#[test]
+fn mlp_model_family_runs_scale_through_pjrt() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let compute = PjrtModel::new(rt, ModelKind::Mlp);
+    let mut cfg = small_cfg();
+    cfg.model = ModelKind::Mlp;
+    cfg.lr = 0.15;
+    let mut sim = Simulation::new(cfg, &compute).unwrap();
+    let report = sim.run_scale().unwrap();
+    assert_eq!(report.clusters.len(), 4);
+    assert!(report.final_metrics.accuracy > 0.7, "{:?}", report.final_metrics);
+    // MLP params (545) flow through aggregate_mlp
+    let payload = report.ledger[&MsgKind::PeerExchange].bytes
+        / report.ledger[&MsgKind::PeerExchange].count;
+    assert_eq!(payload, 545 * 4 + 64);
+}
+
+#[test]
+fn pjrt_and_native_svm_agree_on_protocol_outputs() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let cfg = small_cfg();
+    let pjrt = PjrtModel::new(rt, ModelKind::Svm);
+    let native = NativeSvm::new(NativeSvm::default_dims());
+
+    let mut sim_p = Simulation::new(cfg.clone(), &pjrt).unwrap();
+    let rep_p = sim_p.run_scale().unwrap();
+    let mut sim_n = Simulation::new(cfg, &native).unwrap();
+    let rep_n = sim_n.run_scale().unwrap();
+
+    // identical protocol decisions (same seeds); numerics within f32 drift
+    assert_eq!(rep_p.total_updates(), rep_n.total_updates());
+    assert_eq!(
+        rep_p.ledger[&MsgKind::PeerExchange].count,
+        rep_n.ledger[&MsgKind::PeerExchange].count
+    );
+    assert!(
+        (rep_p.final_metrics.accuracy - rep_n.final_metrics.accuracy).abs() < 0.03,
+        "pjrt {} vs native {}",
+        rep_p.final_metrics.accuracy,
+        rep_n.final_metrics.accuracy
+    );
+}
+
+#[test]
+fn extension_matrix_native() {
+    let native = NativeSvm::new(NativeSvm::default_dims());
+    for (quant, secagg) in [(false, false), (true, false), (false, true), (true, true)] {
+        let mut cfg = small_cfg();
+        cfg.quantize_exchange = quant;
+        cfg.secure_aggregation = secagg;
+        let mut sim = Simulation::new(cfg, &native).unwrap();
+        let rep = sim.run_scale().unwrap();
+        assert!(
+            rep.final_metrics.accuracy > 0.75,
+            "quant={quant} secagg={secagg}: {:?}",
+            rep.final_metrics
+        );
+    }
+}
+
+#[test]
+fn skewed_mlp_with_failures_and_secagg() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let compute = PjrtModel::new(rt, ModelKind::Mlp);
+    let mut cfg = small_cfg();
+    cfg.model = ModelKind::Mlp;
+    cfg.partition = Partition::LabelSkew(0.5);
+    cfg.node_failure_prob = 0.15;
+    cfg.node_recovery_prob = 0.6;
+    cfg.secure_aggregation = true;
+    cfg.lr = 0.15;
+    let mut sim = Simulation::new(cfg, &compute).unwrap();
+    let report = sim.run_scale().unwrap();
+    // survives the combination and still learns something nontrivial
+    assert!(report.final_metrics.roc_auc > 0.6, "{:?}", report.final_metrics);
+    let elections: u64 = report.clusters.iter().map(|c| c.elections).sum();
+    assert!(elections >= 4);
+}
+
+#[test]
+fn trace_export_from_real_run() {
+    let native = NativeSvm::new(NativeSvm::default_dims());
+    let mut sim = Simulation::new(small_cfg(), &native).unwrap();
+    let report = sim.run_scale().unwrap();
+    let dir = std::env::temp_dir().join(format!("scale_it_{}", std::process::id()));
+    scale_fl::trace::write_run(&dir, &report).unwrap();
+    let rounds = std::fs::read_to_string(dir.join("scale_rounds.csv")).unwrap();
+    assert_eq!(rounds.lines().count(), 1 + report.rounds.len());
+    let clusters = std::fs::read_to_string(dir.join("scale_clusters.csv")).unwrap();
+    assert_eq!(clusters.lines().count(), 1 + report.clusters.len());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn config_json_drives_simulation() {
+    // full path: config -> JSON -> file -> load -> run
+    let mut cfg = small_cfg();
+    cfg.quantize_exchange = true;
+    cfg.partition = Partition::LabelSkew(0.7);
+    let path = std::env::temp_dir().join(format!("scale_cfg_it_{}.json", std::process::id()));
+    cfg.save(&path).unwrap();
+    let loaded = SimConfig::load(&path).unwrap();
+    assert_eq!(loaded.quantize_exchange, true);
+    assert_eq!(loaded.partition, Partition::LabelSkew(0.7));
+    let native = NativeSvm::new(NativeSvm::default_dims());
+    let mut sim = Simulation::new(loaded, &native).unwrap();
+    assert!(sim.run_scale().is_ok());
+    std::fs::remove_file(&path).ok();
+}
