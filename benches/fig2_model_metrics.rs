@@ -7,17 +7,19 @@
 //! protocols start comparable and converge; SCALE tracks (or slightly
 //! exceeds) the baseline throughout.
 
-use std::path::Path;
-use std::rc::Rc;
-
 use scale_fl::bench::section;
 use scale_fl::config::SimConfig;
-use scale_fl::runtime::compute::{ModelCompute, NativeSvm, PjrtModel};
-use scale_fl::runtime::manifest::ModelKind;
-use scale_fl::runtime::Runtime;
+use scale_fl::runtime::compute::{ModelCompute, NativeSvm};
 use scale_fl::sim::Simulation;
 
+#[cfg(feature = "pjrt")]
 fn backend() -> Box<dyn ModelCompute> {
+    use scale_fl::runtime::compute::PjrtModel;
+    use scale_fl::runtime::manifest::ModelKind;
+    use scale_fl::runtime::Runtime;
+    use std::path::Path;
+    use std::rc::Rc;
+
     let dir = Path::new("artifacts");
     if dir.join("manifest.json").exists() {
         let rt = Rc::new(Runtime::open(dir).expect("runtime"));
@@ -28,6 +30,12 @@ fn backend() -> Box<dyn ModelCompute> {
         println!("backend: native (no artifacts)");
         Box::new(NativeSvm::new(NativeSvm::default_dims()))
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn backend() -> Box<dyn ModelCompute> {
+    println!("backend: native (pjrt feature off)");
+    Box::new(NativeSvm::new(NativeSvm::default_dims()))
 }
 
 fn main() {

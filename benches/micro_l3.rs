@@ -4,10 +4,7 @@
 //! fleet scale, driver election, netsim accounting, crypto envelopes,
 //! checkpoint codec, JSON parsing — plus the PJRT artifact latencies when
 //! `artifacts/` is present (train step, scores, aggregate). These are the
-//! numbers the §Perf pass in EXPERIMENTS.md tracks.
-
-use std::path::Path;
-use std::rc::Rc;
+//! numbers the perf pass tracks across PRs.
 
 use scale_fl::bench::{bench, report, section};
 use scale_fl::checkpoint::Checkpoint;
@@ -17,9 +14,7 @@ use scale_fl::data::{pad_batch, synth_wdbc, Scaler};
 use scale_fl::election::{elect, Ballot, CriteriaWeights};
 use scale_fl::geo::GeoPoint;
 use scale_fl::netsim::{MsgKind, NetConfig, Network};
-use scale_fl::runtime::compute::{ModelCompute, NativeSvm, PjrtModel};
-use scale_fl::runtime::manifest::ModelKind;
-use scale_fl::runtime::Runtime;
+use scale_fl::runtime::compute::{ModelCompute, NativeSvm};
 use scale_fl::util::rng::Rng;
 
 fn summaries(n: usize) -> Vec<NodeSummary> {
@@ -147,6 +142,19 @@ fn main() {
         report("scores", &t);
     }
 
+    pjrt_section();
+
+    println!("\nmicro_l3 OK");
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_section() {
+    use scale_fl::runtime::compute::PjrtModel;
+    use scale_fl::runtime::manifest::ModelKind;
+    use scale_fl::runtime::Runtime;
+    use std::path::Path;
+    use std::rc::Rc;
+
     let dir = Path::new("artifacts");
     if dir.join("manifest.json").exists() {
         section("PJRT artifact latency (AOT JAX/Pallas via xla crate)");
@@ -185,6 +193,9 @@ fn main() {
     } else {
         println!("\n(artifacts not built; skipping PJRT latencies)");
     }
+}
 
-    println!("\nmicro_l3 OK");
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_section() {
+    println!("\n(pjrt feature off; skipping PJRT latencies)");
 }

@@ -6,7 +6,7 @@
 //! executes an AOT-compiled JAX/Pallas artifact via PJRT (this example
 //! REQUIRES `make artifacts`). Prints the per-round loss curve, the
 //! Table-1 regeneration for both SCALE and FedAvg, the Figure-2 metric
-//! series, and writes `e2e_report.json`. EXPERIMENTS.md records a run.
+//! series, and writes `e2e_report.json`.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example breast_cancer_e2e

@@ -1,0 +1,82 @@
+//! Churn-stress demo: the bundled scenario drops 20% of the fleet
+//! mid-run, darkens a metro, degrades the backhaul, slows stragglers and
+//! drifts labels — and prints the self-regulation timeline (health
+//! detection → proximity re-clustering → driver re-election) that keeps
+//! the federation converging through all of it. Finishes with a
+//! multi-seed sweep and checks the parallel runner is bit-identical to
+//! sequential execution.
+//!
+//! ```bash
+//! cargo run --release --example churn_stress
+//! ```
+
+use anyhow::Result;
+
+use scale_fl::runtime::compute::NativeSvm;
+use scale_fl::scenario::{self, sweep};
+use scale_fl::sim::Simulation;
+
+fn main() -> Result<()> {
+    let (scenario, sim_cfg) = scenario::parse_with_sim(scenario::EXAMPLE_TOML)?;
+    let cfg = sim_cfg.expect("example scenario embeds [sim]");
+    println!(
+        "scenario '{}': {} event(s) over {} rounds, {} nodes / {} clusters",
+        scenario.name,
+        scenario.events.len(),
+        cfg.rounds,
+        cfg.n_nodes,
+        cfg.n_clusters
+    );
+
+    let compute = NativeSvm::new(NativeSvm::default_dims());
+    let mut sim = Simulation::new(cfg.clone(), &compute)?;
+    let report = sim.run_scale_scenario(&scenario)?;
+
+    println!("\nround | events | reclu | elect | live | updates | acc");
+    for r in &report.rounds {
+        println!(
+            "{:>5} | {:>6} | {:>5} | {:>5} | {:>4} | {:>7} | {}",
+            r.round + 1,
+            r.scenario_events,
+            r.reclusterings,
+            r.elections,
+            r.live_nodes,
+            r.updates,
+            r.metrics.map_or("-".to_string(), |m| format!("{:.3}", m.accuracy)),
+        );
+    }
+
+    println!("\nre-clustering timeline:");
+    for n in &report.scenario {
+        println!("  round {:>2}: {}", n.round + 1, n.what);
+    }
+    println!(
+        "\nfinal: acc {:.3} | updates {} | re-clusterings {} | elections {}",
+        report.final_metrics.accuracy,
+        report.total_updates(),
+        report.total_reclusterings(),
+        report.total_elections()
+    );
+    assert!(report.total_reclusterings() >= 1, "expected at least one re-clustering");
+
+    // --- multi-seed sweep: parallel must equal sequential ---
+    let seeds = sweep::seeds_from(cfg.seed, 4);
+    let par = sweep::run_sweep(&cfg, &scenario, &seeds, true)?;
+    let seq = sweep::run_sweep(&cfg, &scenario, &seeds, false)?;
+    for (p, s) in par.iter().zip(&seq) {
+        assert_eq!(
+            p.report.fingerprint(),
+            s.report.fingerprint(),
+            "seed {} diverged",
+            p.seed
+        );
+    }
+    let sum = sweep::summarize(&par);
+    println!(
+        "\nsweep over {} seeds (parallel == sequential): acc {:.3} ± {:.3}, \
+         mean updates {:.1}, mean re-clusterings {:.1}",
+        sum.runs, sum.mean_accuracy, sum.std_accuracy, sum.mean_updates,
+        sum.mean_reclusterings
+    );
+    Ok(())
+}

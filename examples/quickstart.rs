@@ -10,18 +10,20 @@
 //! pure-rust SVM oracle when `artifacts/` is absent), and prints the
 //! headline comparison against the FedAvg baseline.
 
-use std::path::Path;
-use std::rc::Rc;
-
 use anyhow::Result;
 
 use scale_fl::config::SimConfig;
-use scale_fl::runtime::compute::{ModelCompute, NativeSvm, PjrtModel};
-use scale_fl::runtime::manifest::ModelKind;
-use scale_fl::runtime::Runtime;
+use scale_fl::runtime::compute::{ModelCompute, NativeSvm};
 use scale_fl::sim::Simulation;
 
+#[cfg(feature = "pjrt")]
 fn backend() -> Result<Box<dyn ModelCompute>> {
+    use scale_fl::runtime::compute::PjrtModel;
+    use scale_fl::runtime::manifest::ModelKind;
+    use scale_fl::runtime::Runtime;
+    use std::path::Path;
+    use std::rc::Rc;
+
     let dir = Path::new("artifacts");
     if dir.join("manifest.json").exists() {
         let rt = Rc::new(Runtime::open(dir)?);
@@ -32,6 +34,12 @@ fn backend() -> Result<Box<dyn ModelCompute>> {
         println!("backend: native rust oracle (run `make artifacts` for PJRT)");
         Ok(Box::new(NativeSvm::new(NativeSvm::default_dims())))
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn backend() -> Result<Box<dyn ModelCompute>> {
+    println!("backend: native rust oracle (build with --features pjrt for PJRT)");
+    Ok(Box::new(NativeSvm::new(NativeSvm::default_dims())))
 }
 
 fn main() -> Result<()> {

@@ -376,11 +376,20 @@ impl SimConfig {
         Ok(cfg)
     }
 
+    /// Load a config file: JSON, or — for `.toml` paths — the TOML subset
+    /// of `util::toml` (scenario files carry their experiment overrides
+    /// under a `[sim]` table, which is honoured here too).
     pub fn load(path: &std::path::Path) -> Result<SimConfig> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
-        let v = json::parse(&text).context("config JSON")?;
-        SimConfig::from_json(&v)
+        let is_toml = path.extension().and_then(|e| e.to_str()) == Some("toml");
+        let v = if is_toml {
+            crate::util::toml::parse(&text)
+                .with_context(|| format!("config TOML {}", path.display()))?
+        } else {
+            json::parse(&text).context("config JSON")?
+        };
+        SimConfig::from_json(v.get("sim").unwrap_or(&v))
     }
 
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
@@ -453,6 +462,28 @@ mod tests {
         let back = SimConfig::load(&path).unwrap();
         assert_eq!(back.n_nodes, cfg.n_nodes);
         assert_eq!(back.seed, cfg.seed);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn toml_config_loads_with_and_without_sim_table() {
+        let dir = std::env::temp_dir().join(format!("scale_toml_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let flat = dir.join("flat.toml");
+        std::fs::write(&flat, "n_nodes = 24\nn_clusters = 4\nrounds = 7\n").unwrap();
+        let cfg = SimConfig::load(&flat).unwrap();
+        assert_eq!(cfg.n_nodes, 24);
+        assert_eq!(cfg.rounds, 7);
+        assert_eq!(cfg.fleet.n_devices, 24); // normalized
+        let nested = dir.join("scenario.toml");
+        std::fs::write(
+            &nested,
+            "name = \"x\"\n[sim]\nn_nodes = 18\nn_clusters = 3\nseed = 5\n",
+        )
+        .unwrap();
+        let cfg = SimConfig::load(&nested).unwrap();
+        assert_eq!(cfg.n_nodes, 18);
+        assert_eq!(cfg.seed, 5);
         std::fs::remove_dir_all(&dir).ok();
     }
 

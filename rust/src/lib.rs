@@ -14,11 +14,18 @@
 //! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) fused into
 //!   those graphs.
 //!
-//! The rust binary never calls Python: `runtime` loads the artifacts via
-//! the PJRT C API (`xla` crate) and executes them on the hot path.
+//! The rust binary never calls Python: with the non-default `pjrt`
+//! feature, `runtime` loads the artifacts via the PJRT C API (`xla`
+//! crate) and executes them on the hot path; the default build runs the
+//! pure-rust `NativeSvm` oracle so tier-1 stays dependency-free.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured record.
+//! The `scenario` subsystem wraps the round loop in event-driven churn
+//! (node leave/join/return, regional outages, stragglers, bandwidth
+//! degradation, label drift) and drives the paper's self-regulation
+//! loop: health detection → proximity re-clustering → driver
+//! re-election, plus a parallel multi-seed sweep runner.
+//!
+//! See DESIGN.md (repo root) for the subsystem inventory.
 
 pub mod crypto;
 pub mod data;
@@ -38,6 +45,7 @@ pub mod runtime;
 pub mod aggregation;
 pub mod config;
 pub mod server;
+pub mod scenario;
 pub mod sim;
 pub mod cli;
 pub mod bench;

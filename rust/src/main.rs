@@ -2,9 +2,10 @@
 //!
 //! ```text
 //! scale run          run SCALE and/or the FedAvg baseline, print tables
+//! scale scenario     event-driven scenarios: run / sweep / gen
 //! scale cluster-info run cluster formation only and print the clusters
 //! scale gen-config   write a default config JSON to edit
-//! scale artifacts    inspect the AOT artifact manifest
+//! scale artifacts    inspect the AOT artifact manifest (pjrt builds)
 //! scale help         this text
 //! ```
 //!
@@ -12,19 +13,28 @@
 //! ```text
 //! scale run --mode both --table1 --fig2
 //! scale run --nodes 50 --clusters 5 --rounds 20 --backend native
-//! scale run --config exp.json --out report.json
+//! scale scenario gen --out churn.toml
+//! scale scenario run --file churn.toml --rounds-trace
+//! scale scenario sweep --file churn.toml --seeds 8 --verify
 //! ```
 
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
 
 use scale_fl::cli::{Args, Spec};
 use scale_fl::config::{Partition, SimConfig};
-use scale_fl::runtime::compute::{ModelCompute, NativeSvm, PjrtModel};
+use scale_fl::runtime::compute::{ModelCompute, NativeSvm};
+#[cfg(feature = "pjrt")]
+use scale_fl::runtime::compute::PjrtModel;
 use scale_fl::runtime::manifest::ModelKind;
+#[cfg(feature = "pjrt")]
 use scale_fl::runtime::Runtime;
+use scale_fl::scenario::{self, sweep, Scenario};
 use scale_fl::sim::Simulation;
 use scale_fl::topology::Topology;
 
@@ -37,6 +47,16 @@ const RUN_SPEC: Spec = Spec {
     switches: &["table1", "fig2", "quiet", "rounds-trace", "quantize", "secagg"],
 };
 
+const SCENARIO_SPEC: Spec = Spec {
+    flags: &[
+        "file", "config", "backend", "artifacts", "nodes", "clusters", "rounds",
+        "epochs", "seed", "partition", "model", "min-delta", "failure-prob",
+        "topology", "heterogeneity", "out", "lr", "reg", "trace-dir", "seeds",
+        "base-seed",
+    ],
+    switches: &["quiet", "rounds-trace", "sequential", "verify", "quantize", "secagg"],
+};
+
 const INFO_SPEC: Spec = Spec {
     flags: &["nodes", "clusters", "seed", "heterogeneity"],
     switches: &[],
@@ -44,6 +64,11 @@ const INFO_SPEC: Spec = Spec {
 
 const GEN_SPEC: Spec = Spec { flags: &["out"], switches: &[] };
 const ART_SPEC: Spec = Spec { flags: &["artifacts"], switches: &[] };
+
+#[cfg(feature = "pjrt")]
+const DEFAULT_BACKEND: &str = "pjrt";
+#[cfg(not(feature = "pjrt"))]
+const DEFAULT_BACKEND: &str = "native";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -56,6 +81,7 @@ fn main() {
 fn dispatch(argv: &[String]) -> Result<()> {
     match argv.first().map(String::as_str) {
         Some("run") => cmd_run(&Args::parse(argv, &RUN_SPEC)?),
+        Some("scenario") => cmd_scenario(&Args::parse(argv, &SCENARIO_SPEC)?),
         Some("cluster-info") => cmd_cluster_info(&Args::parse(argv, &INFO_SPEC)?),
         Some("gen-config") => cmd_gen_config(&Args::parse(argv, &GEN_SPEC)?),
         Some("artifacts") => cmd_artifacts(&Args::parse(argv, &ART_SPEC)?),
@@ -72,16 +98,20 @@ scale — SCALE clustered federated learning (paper reproduction)
 
 USAGE:
   scale run [OPTIONS]           run the experiment
+  scale scenario run --file F   run SCALE under an event timeline (TOML)
+  scale scenario sweep --file F multi-seed sweep (parallel, native backend)
+  scale scenario gen [--out F]  write an example scenario TOML
   scale cluster-info [OPTIONS]  cluster formation only
   scale gen-config [--out F]    write default config JSON
   scale artifacts [--artifacts DIR]
   scale help
 
 RUN OPTIONS:
-  --config FILE        load a config JSON (other flags override it)
+  --config FILE        load a config (JSON, or TOML via its [sim] table);
+                       other flags override it
   --mode scale|fedavg|hfl|both (default both; hfl = client-edge-cloud
                        baseline, --edge-period N cloud syncs)
-  --backend pjrt|native        (default pjrt; native = rust SVM oracle)
+  --backend pjrt|native        (pjrt needs a build with --features pjrt)
   --artifacts DIR      AOT artifact dir (default ./artifacts)
   --nodes N --clusters K --rounds R --epochs E --seed S
   --model svm|mlp      (pjrt backend only for mlp)
@@ -97,14 +127,27 @@ RUN OPTIONS:
   --out FILE           write the JSON report(s)
   --table1 --fig2      print the paper-table renderings
   --rounds-trace       print per-round records
+
+SCENARIO OPTIONS (plus the run options above):
+  --file F             scenario TOML (events, [regulation], optional [sim])
+  --seeds N            sweep width (default 8)
+  --base-seed S        first sweep seed (default: config seed)
+  --sequential         disable the parallel sweep fan-out
+  --verify             re-run the sweep sequentially and require
+                       bit-identical reports
 ";
 
 /// Build a SimConfig from `--config` + flag overrides.
 fn config_from(args: &Args) -> Result<SimConfig> {
-    let mut cfg = match args.get("config") {
+    let base = match args.get("config") {
         Some(path) => SimConfig::load(Path::new(path))?,
         None => SimConfig::default(),
     };
+    config_overrides(args, base)
+}
+
+/// Apply command-line overrides on top of `cfg`.
+fn config_overrides(args: &Args, mut cfg: SimConfig) -> Result<SimConfig> {
     if let Some(n) = args.get_usize("nodes")? {
         cfg.n_nodes = n;
     }
@@ -170,23 +213,31 @@ fn config_from(args: &Args) -> Result<SimConfig> {
 
 /// Instantiate the chosen compute backend.
 fn backend_from(args: &Args, cfg: &SimConfig) -> Result<Box<dyn ModelCompute>> {
-    match args.get_or("backend", "pjrt") {
+    match args.get_or("backend", DEFAULT_BACKEND) {
         "native" => {
             if cfg.model != ModelKind::Svm {
                 bail!("native backend only implements the SVM model");
             }
             Ok(Box::new(NativeSvm::new(NativeSvm::default_dims())))
         }
-        "pjrt" => {
-            let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
-            let rt = Rc::new(Runtime::open(&dir).with_context(|| {
-                format!("opening artifacts at {} (run `make artifacts`)", dir.display())
-            })?);
-            rt.warm_up()?;
-            Ok(Box::new(PjrtModel::new(rt, cfg.model)))
-        }
+        "pjrt" => backend_pjrt(args, cfg.model),
         other => bail!("unknown backend '{other}'"),
     }
+}
+
+#[cfg(feature = "pjrt")]
+fn backend_pjrt(args: &Args, model: ModelKind) -> Result<Box<dyn ModelCompute>> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let rt = Rc::new(Runtime::open(&dir).with_context(|| {
+        format!("opening artifacts at {} (run `make artifacts`)", dir.display())
+    })?);
+    rt.warm_up()?;
+    Ok(Box::new(PjrtModel::new(rt, model)))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn backend_pjrt(_args: &Args, _model: ModelKind) -> Result<Box<dyn ModelCompute>> {
+    bail!("this build has no PJRT support (rebuild with `--features pjrt`)")
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -270,8 +321,16 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!("cloud cost     : ${:.6} vs ${:.6}", s.cloud_cost_usd, f.cloud_cost_usd);
     }
 
+    write_outputs(args, &reports, quiet)
+}
+
+fn write_outputs(
+    args: &Args,
+    reports: &[scale_fl::sim::report::RunReport],
+    quiet: bool,
+) -> Result<()> {
     if let Some(dir) = args.get("trace-dir") {
-        for r in &reports {
+        for r in reports {
             scale_fl::trace::write_run(Path::new(dir), r)?;
         }
         if !quiet {
@@ -283,7 +342,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             reports[0].to_json().to_string_pretty()
         } else {
             let mut v = scale_fl::util::json::Value::obj();
-            for r in &reports {
+            for r in reports {
                 let mode_name = r.mode.clone();
                 v.set(&mode_name, r.to_json());
             }
@@ -294,6 +353,155 @@ fn cmd_run(args: &Args) -> Result<()> {
             println!("\nreport written to {out}");
         }
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// scenario subcommands
+// ---------------------------------------------------------------------
+
+fn cmd_scenario(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("run") => cmd_scenario_run(args),
+        Some("sweep") => cmd_scenario_sweep(args),
+        Some("gen") => cmd_scenario_gen(args),
+        _ => bail!("usage: scale scenario run|sweep|gen (try 'scale help')"),
+    }
+}
+
+/// Scenario + config resolution: `--config` (if given) else the file's
+/// `[sim]` table else defaults, with flag overrides on top.
+fn scenario_setup(args: &Args) -> Result<(Scenario, SimConfig)> {
+    let path = args
+        .get("file")
+        .context("scenario needs --file <scenario.toml> (see 'scale scenario gen')")?;
+    let (scenario, embedded) = scenario::load_with_sim(Path::new(path))?;
+    let base = match args.get("config") {
+        Some(p) => SimConfig::load(Path::new(p))?,
+        None => embedded.unwrap_or_default(),
+    };
+    let cfg = config_overrides(args, base)?;
+    scenario.validate(cfg.n_nodes, cfg.fleet.n_metros)?;
+    Ok((scenario, cfg))
+}
+
+fn cmd_scenario_run(args: &Args) -> Result<()> {
+    let (scenario, cfg) = scenario_setup(args)?;
+    let compute = backend_from(args, &cfg)?;
+    let quiet = args.has("quiet");
+    if !quiet {
+        println!(
+            "scenario '{}': {} event(s), regulation {} (min_live_frac {:.2}, cooldown {})",
+            scenario.name,
+            scenario.events.len(),
+            if scenario.regulation.enabled { "on" } else { "off" },
+            scenario.regulation.min_live_frac,
+            scenario.regulation.cooldown,
+        );
+    }
+    let mut sim = Simulation::new(cfg, compute.as_ref())?;
+    let report = sim.run_scale_scenario(&scenario)?;
+    if !quiet {
+        print_summary(&report);
+        println!(
+            "re-clusterings  : {}   elections: {}",
+            report.total_reclusterings(),
+            report.total_elections()
+        );
+        if args.has("rounds-trace") {
+            print_rounds(&report);
+        }
+        println!("\nself-regulation timeline:");
+        println!("round | events | reclu | elect | live");
+        for r in &report.rounds {
+            println!(
+                "{:>5} | {:>6} | {:>5} | {:>5} | {:>4}",
+                r.round + 1,
+                r.scenario_events,
+                r.reclusterings,
+                r.elections,
+                r.live_nodes
+            );
+        }
+        println!("\nlog:");
+        for n in &report.scenario {
+            println!("  round {:>3}: {}", n.round + 1, n.what);
+        }
+    }
+    write_outputs(args, &[report], quiet)
+}
+
+fn cmd_scenario_sweep(args: &Args) -> Result<()> {
+    let (scenario, cfg) = scenario_setup(args)?;
+    if args.get("backend") == Some("pjrt") {
+        bail!("the sweep runner is native-only (PJRT handles are thread-local)");
+    }
+    let n = args.get_usize("seeds")?.unwrap_or(8);
+    anyhow::ensure!(n > 0, "--seeds must be > 0");
+    let base = args.get_u64("base-seed")?.unwrap_or(cfg.seed);
+    let seeds = sweep::seeds_from(base, n);
+    let parallel = !args.has("sequential");
+    let quiet = args.has("quiet");
+
+    let t0 = std::time::Instant::now();
+    let runs = sweep::run_sweep(&cfg, &scenario, &seeds, parallel)?;
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    if !quiet {
+        println!(
+            "sweep '{}': {} seed(s), {} ({:.2}s wall)",
+            scenario.name,
+            n,
+            if parallel { "parallel" } else { "sequential" },
+            elapsed
+        );
+        println!("seed       | updates | reclu | elect | final acc");
+        for r in &runs {
+            println!(
+                "{:>10} | {:>7} | {:>5} | {:>5} | {:.3}",
+                r.seed,
+                r.report.total_updates(),
+                r.report.total_reclusterings(),
+                r.report.total_elections(),
+                r.report.final_metrics.accuracy
+            );
+        }
+        let s = sweep::summarize(&runs);
+        println!(
+            "aggregate  | acc {:.3} ± {:.3} | mean updates {:.1} | mean reclusterings {:.1}",
+            s.mean_accuracy, s.std_accuracy, s.mean_updates, s.mean_reclusterings
+        );
+    }
+
+    if args.has("verify") {
+        let sequential = sweep::run_sweep(&cfg, &scenario, &seeds, false)?;
+        for (p, s) in runs.iter().zip(&sequential) {
+            if p.report.fingerprint() != s.report.fingerprint() {
+                bail!("seed {} diverged between parallel and sequential runs", p.seed);
+            }
+        }
+        if !quiet {
+            println!("verify: parallel == sequential for all {n} seed(s)");
+        }
+    }
+
+    if let Some(out) = args.get("out") {
+        let mut v = scale_fl::util::json::Value::obj();
+        for r in &runs {
+            v.set(&format!("seed_{}", r.seed), r.report.to_json());
+        }
+        std::fs::write(out, v.to_string_pretty()).with_context(|| format!("writing {out}"))?;
+        if !quiet {
+            println!("sweep report written to {out}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_scenario_gen(args: &Args) -> Result<()> {
+    let out = args.get_or("out", "scenario.toml");
+    std::fs::write(out, scenario::EXAMPLE_TOML).with_context(|| format!("writing {out}"))?;
+    println!("example scenario written to {out}");
     Ok(())
 }
 
@@ -374,6 +582,7 @@ fn cmd_gen_config(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_artifacts(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let rt = Runtime::open(&dir)?;
@@ -394,4 +603,9 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
     rt.warm_up()?;
     println!("all artifacts compiled OK");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_artifacts(_args: &Args) -> Result<()> {
+    bail!("artifact inspection needs a build with `--features pjrt`")
 }

@@ -241,11 +241,29 @@ pub struct Network {
     pub cfg: NetConfig,
     pub ledger: TrafficLedger,
     rng: Rng,
+    /// Scenario-injected multiplier on effective bandwidth (1 = nominal;
+    /// 0.25 = every link at a quarter of its rated throughput).
+    degradation: f64,
 }
 
 impl Network {
     pub fn new(cfg: NetConfig, seed: u64, keep_log: bool) -> Self {
-        Network { cfg, ledger: TrafficLedger::new(keep_log), rng: Rng::new(seed) }
+        Network {
+            cfg,
+            ledger: TrafficLedger::new(keep_log),
+            rng: Rng::new(seed),
+            degradation: 1.0,
+        }
+    }
+
+    /// Set the fleet-wide bandwidth degradation window (scenario engine);
+    /// `1.0` restores nominal throughput.
+    pub fn set_bandwidth_degradation(&mut self, factor: f64) {
+        self.degradation = factor.clamp(1e-3, 1.0);
+    }
+
+    pub fn bandwidth_degradation(&self) -> f64 {
+        self.degradation
     }
 
     /// Classify the link between two devices (or device ↔ cloud).
@@ -287,7 +305,9 @@ impl Network {
                 .flatten()
                 .map(|d| d.bandwidth_mbps)
                 .fold(f64::INFINITY, f64::min);
-            let bw_mbps = if bw_mbps.is_finite() { bw_mbps } else { 500.0 } * bw_factor;
+            let bw_mbps = if bw_mbps.is_finite() { bw_mbps } else { 500.0 }
+                * bw_factor
+                * self.degradation;
             let transfer_ms = bytes as f64 * 8.0 / (bw_mbps * 1e6) * 1e3;
             let jitter = base * self.cfg.jitter_frac * (2.0 * self.rng.f64() - 1.0);
             let endpoint_lat: f64 = [from, to]
@@ -480,6 +500,31 @@ mod tests {
     fn payload_models() {
         assert_eq!(param_payload_bytes(33), 33 * 4 + 64);
         assert!(summary_payload_bytes(100) > 100);
+    }
+
+    #[test]
+    fn bandwidth_degradation_slows_transfers_and_restores() {
+        let mut net = Network::new(
+            NetConfig { jitter_frac: 0.0, ..Default::default() },
+            6,
+            false,
+        );
+        let a = mk_point(0, 40.0, -74.0);
+        let b = mk_point(1, 40.01, -74.0);
+        let bytes = 5_000_000;
+        let nominal = net.send(MsgKind::PeerExchange, Some(&a), Some(&b), bytes, 0);
+        net.set_bandwidth_degradation(0.25);
+        assert_eq!(net.bandwidth_degradation(), 0.25);
+        let degraded = net.send(MsgKind::PeerExchange, Some(&a), Some(&b), bytes, 1);
+        assert!(degraded > nominal * 2.0, "degraded {degraded} vs nominal {nominal}");
+        net.set_bandwidth_degradation(1.0);
+        let restored = net.send(MsgKind::PeerExchange, Some(&a), Some(&b), bytes, 2);
+        assert!((restored - nominal).abs() < nominal * 0.1);
+        // setter clamps out-of-range factors
+        net.set_bandwidth_degradation(0.0);
+        assert!(net.bandwidth_degradation() > 0.0);
+        net.set_bandwidth_degradation(7.0);
+        assert_eq!(net.bandwidth_degradation(), 1.0);
     }
 
     #[test]

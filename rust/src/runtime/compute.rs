@@ -4,22 +4,27 @@
 //! and the numerics: one local training step, decision scores for
 //! evaluation, and bank aggregation (eq 9 / eq 10). Two implementations:
 //!
-//! * [`PjrtModel`] — the production path: executes the AOT-lowered
-//!   JAX/Pallas artifacts through [`super::Runtime`]. Aggregation banks
-//!   larger than the artifact's fixed `K` are chunked and exactly
-//!   count-weight recombined.
+//! * [`PjrtModel`] — the production path (behind the `pjrt` feature):
+//!   executes the AOT-lowered JAX/Pallas artifacts through
+//!   [`super::Runtime`]. Aggregation banks larger than the artifact's
+//!   fixed `K` are chunked and exactly count-weight recombined.
 //! * [`NativeSvm`] — a pure-rust mirror of the SVM math (same formulas as
 //!   `python/compile/kernels/ref.py`). Used as the cross-check oracle in
-//!   integration tests (PJRT vs native must agree to f32 tolerance) and
-//!   for artifact-free unit tests of the sim engine.
+//!   integration tests (PJRT vs native must agree to f32 tolerance), for
+//!   artifact-free unit tests of the sim engine, and — being `Send` +
+//!   `Sync` — as the backend of the parallel `scenario::sweep` runner.
 
+#[cfg(feature = "pjrt")]
 use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
 use anyhow::Result;
 
 use super::manifest::{Dims, ModelKind};
+#[cfg(feature = "pjrt")]
 use super::{to_f32_scalar, to_f32_vec, Runtime};
 use crate::data::PaddedBatch;
 use crate::util::rng::Rng;
@@ -76,6 +81,7 @@ pub trait ModelCompute {
 // ---------------------------------------------------------------------
 
 /// Device-resident copies of a batch's static inputs (x, y, mask).
+#[cfg(feature = "pjrt")]
 struct BatchBuffers {
     x: xla::PjRtBuffer,
     y: xla::PjRtBuffer,
@@ -84,19 +90,22 @@ struct BatchBuffers {
 
 /// Cap on cached batches (a 100-node paper run stages ~200 batches;
 /// the cap only guards pathological bench loops).
+#[cfg(feature = "pjrt")]
 const BATCH_CACHE_CAP: usize = 4096;
 
 /// Executes the AOT artifacts for one model family.
+#[cfg(feature = "pjrt")]
 pub struct PjrtModel {
     rt: Rc<Runtime>,
     kind: ModelKind,
     dims: Dims,
     /// x/y/mask device buffers keyed by `PaddedBatch::uid` — staged once,
-    /// reused across every train/eval call on that batch (perf: §Perf in
-    /// EXPERIMENTS.md; batches are immutable by contract).
+    /// reused across every train/eval call on that batch (batches are
+    /// immutable by contract).
     batch_cache: RefCell<HashMap<u64, Rc<BatchBuffers>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtModel {
     pub fn new(rt: Rc<Runtime>, kind: ModelKind) -> PjrtModel {
         let dims = rt.manifest.dims;
@@ -159,6 +168,7 @@ impl PjrtModel {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl ModelCompute for PjrtModel {
     fn param_dim(&self) -> usize {
         match self.kind {

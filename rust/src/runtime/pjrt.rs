@@ -1,0 +1,226 @@
+//! The xla-crate-backed PJRT runtime (compiled only with the `pjrt`
+//! feature): artifact loading, integrity checks, an executable cache,
+//! and literal/buffer staging helpers. See the parent module docs.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+
+/// Artifact-backed PJRT runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Executions per artifact (perf accounting).
+    exec_counts: RefCell<HashMap<String, u64>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            exec_counts: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (once) and cache the named artifact.
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self
+            .manifest
+            .artifact(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?;
+        let path = self.dir.join(&spec.file);
+        let text = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let sha = crate::crypto::sha256_hex(&text);
+        if sha != spec.sha256 {
+            bail!(
+                "artifact '{name}' integrity mismatch: manifest {} vs file {}",
+                spec.sha256,
+                sha
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO text for '{name}': {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling '{name}': {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact; inputs are validated against the manifest.
+    /// Returns the flattened output tuple.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self
+            .manifest
+            .artifact(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact '{name}' expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (lit, tspec) in inputs.iter().zip(&spec.inputs) {
+            let want: usize = tspec.shape.iter().product();
+            let got = lit.element_count();
+            if want != got {
+                bail!(
+                    "artifact '{name}' input '{}' expects {} elements, got {}",
+                    tspec.name,
+                    want,
+                    got
+                );
+            }
+        }
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing '{name}': {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching '{name}' result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling '{name}' result: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "artifact '{name}' declared {} outputs, produced {}",
+                spec.outputs.len(),
+                parts.len()
+            );
+        }
+        *self
+            .exec_counts
+            .borrow_mut()
+            .entry(name.to_string())
+            .or_insert(0) += 1;
+        Ok(parts)
+    }
+
+    /// Execute with pre-staged device buffers (hot path: avoids host
+    /// literal construction and re-transfer of inputs that live across
+    /// calls — see `compute::PjrtModel`'s batch-buffer cache).
+    pub fn execute_buffers(
+        &self,
+        name: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let spec = self
+            .manifest
+            .artifact(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact '{name}' expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let exe = self.load(name)?;
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing '{name}' (buffers): {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching '{name}' result: {e:?}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling '{name}' result: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "artifact '{name}' declared {} outputs, produced {}",
+                spec.outputs.len(),
+                parts.len()
+            );
+        }
+        *self
+            .exec_counts
+            .borrow_mut()
+            .entry(name.to_string())
+            .or_insert(0) += 1;
+        Ok(parts)
+    }
+
+    /// Stage an f32 host array as a device buffer.
+    pub fn stage_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("staging f32{dims:?}: {e:?}"))
+    }
+
+    /// Stage an i32 scalar as a device buffer.
+    pub fn stage_i32_scalar(&self, v: i32) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&[v], &[], None)
+            .map_err(|e| anyhow::anyhow!("staging i32 scalar: {e:?}"))
+    }
+
+    /// Number of `execute` calls per artifact so far.
+    pub fn exec_count(&self, name: &str) -> u64 {
+        self.exec_counts.borrow().get(name).copied().unwrap_or(0)
+    }
+
+    /// Pre-compile every artifact in the manifest (startup warm-up).
+    pub fn warm_up(&self) -> Result<()> {
+        for name in self.manifest.artifact_names() {
+            self.load(&name)?;
+        }
+        Ok(())
+    }
+}
+
+/// Build an f32 literal of the given logical shape.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let want: usize = shape.iter().product();
+    if want != data.len() {
+        bail!("literal shape {:?} needs {} elements, got {}", shape, want, data.len());
+    }
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape to {:?}: {e:?}", shape))
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Read back an f32 literal (any shape) as a flat vector.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("literal to_vec: {e:?}"))
+}
+
+/// Read back a scalar f32 literal.
+pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow::anyhow!("literal scalar read: {e:?}"))
+}

@@ -1,0 +1,714 @@
+//! Scenario engine: event-driven churn and the self-regulation loop.
+//!
+//! The paper's headline claim is *self-regulated* clustered FL — clusters
+//! that adapt to device dynamics — which a fixed fleet replaying a fixed
+//! round loop cannot exercise. This module wraps `sim::Simulation`'s
+//! round loop in a discrete-event timeline of injected perturbations:
+//!
+//! * **churn** — nodes leave (temporarily or permanently), return, join;
+//! * **correlated regional outages** — a whole metro goes dark at once
+//!   (keyed off the fleet's `geo` anchors);
+//! * **stragglers** — nodes compute N× slower for a window of rounds;
+//! * **bandwidth degradation** — a fleet-wide throughput derating applied
+//!   to `netsim` for a window of rounds;
+//! * **label drift** — a fraction of a node's local training labels flip,
+//!   shifting its data distribution mid-run.
+//!
+//! A scheduler ([`ScenarioState`]) drains the event queue between rounds
+//! and the sim layer then runs the paper's self-regulation loop: `health`
+//! flags degraded nodes, `clustering` re-forms the affected clusters via
+//! Proximity Evaluation, and `election` re-runs Algorithm-4 driver
+//! selection — all recorded per-round in `sim::report`.
+//!
+//! Scenarios are authored in TOML (see [`EXAMPLE_TOML`], `scale scenario
+//! gen`) and parsed through `util::toml` into the same `Value` trees the
+//! `config` module consumes, so a scenario file can embed its full
+//! `[sim]` experiment config. [`sweep`] adds a parallel multi-seed runner
+//! on top.
+
+pub mod sweep;
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::SimConfig;
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+use crate::util::toml;
+
+/// Which nodes an event targets.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Selector {
+    /// Explicit node ids.
+    Nodes(Vec<usize>),
+    /// A deterministic pseudo-random fraction of the eligible nodes.
+    Frac(f64),
+    /// Every eligible node anchored to the given metro (correlated set).
+    Metro(usize),
+}
+
+impl Selector {
+    /// Resolve against already-eligibility-filtered candidate ids.
+    /// `metro_of` maps a node id to its metro anchor; `rng` makes `Frac`
+    /// draws deterministic per (seed, round, event).
+    pub fn resolve<F>(&self, candidates: &[usize], metro_of: F, rng: &mut Rng) -> Vec<usize>
+    where
+        F: Fn(usize) -> usize,
+    {
+        match self {
+            Selector::Nodes(ids) => {
+                ids.iter().copied().filter(|id| candidates.contains(id)).collect()
+            }
+            Selector::Frac(frac) => {
+                let k = ((candidates.len() as f64) * frac).ceil() as usize;
+                let k = k.min(candidates.len());
+                if k == 0 {
+                    return Vec::new();
+                }
+                let mut picked: Vec<usize> = rng
+                    .sample_indices(candidates.len(), k)
+                    .into_iter()
+                    .map(|i| candidates[i])
+                    .collect();
+                picked.sort_unstable();
+                picked
+            }
+            Selector::Metro(m) => {
+                candidates.iter().copied().filter(|&id| metro_of(id) == *m).collect()
+            }
+        }
+    }
+}
+
+/// One injectable fleet / network / data perturbation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// Nodes drop out; they return after `duration` rounds, or never
+    /// (`None` = permanent departure).
+    Leave { who: Selector, duration: Option<usize> },
+    /// Currently-down nodes (re)join the federation.
+    Join { who: Selector },
+    /// Nodes compute `factor`× slower for `duration` rounds.
+    Straggler { who: Selector, factor: f64, duration: usize },
+    /// Correlated regional outage: every live node in `metro` goes dark
+    /// for `duration` rounds.
+    Outage { metro: usize, duration: usize },
+    /// Fleet-wide bandwidth derating to `factor`× nominal for `duration`
+    /// rounds (applied to `netsim`).
+    Bandwidth { factor: f64, duration: usize },
+    /// Label drift: flip `flip_frac` of the targets' training labels.
+    Drift { who: Selector, flip_frac: f64 },
+}
+
+/// An event pinned to the round boundary it fires at.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimedEvent {
+    pub round: usize,
+    pub kind: EventKind,
+}
+
+/// Self-regulation policy: when does the federation re-form clusters?
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RegulationPolicy {
+    /// Re-form a cluster once the fraction of members the health monitor
+    /// still considers reachable falls below this.
+    pub min_live_frac: f64,
+    /// Minimum rounds between re-clusterings (damping).
+    pub cooldown: usize,
+    /// Master switch; off = events fire without any re-clustering.
+    pub enabled: bool,
+}
+
+impl Default for RegulationPolicy {
+    fn default() -> Self {
+        RegulationPolicy { min_live_frac: 0.5, cooldown: 2, enabled: true }
+    }
+}
+
+/// A named event timeline plus the regulation policy it runs under.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    /// Sorted by round at construction.
+    pub events: Vec<TimedEvent>,
+    pub regulation: RegulationPolicy,
+}
+
+impl Scenario {
+    /// The empty scenario: no events, self-regulation off. `run_scale`
+    /// uses this so plain runs reproduce the pre-scenario behaviour
+    /// bit-for-bit.
+    pub fn none() -> Scenario {
+        Scenario {
+            name: "baseline".into(),
+            events: Vec::new(),
+            regulation: RegulationPolicy { enabled: false, ..RegulationPolicy::default() },
+        }
+    }
+
+    /// Parse from a `util::toml` / `util::json` value tree.
+    pub fn from_value(v: &Value) -> Result<Scenario> {
+        let name = v.get("name").and_then(Value::as_str).unwrap_or("scenario").to_string();
+        let mut regulation = RegulationPolicy::default();
+        if let Some(r) = v.get("regulation") {
+            if let Some(x) = r.get("min_live_frac").and_then(Value::as_f64) {
+                regulation.min_live_frac = x;
+            }
+            if let Some(x) = r.get("cooldown").and_then(Value::as_usize) {
+                regulation.cooldown = x;
+            }
+            if let Some(b) = r.get("enabled").and_then(Value::as_bool) {
+                regulation.enabled = b;
+            }
+        }
+        let mut events = Vec::new();
+        if let Some(arr) = v.get("event").and_then(Value::as_arr) {
+            for (i, e) in arr.iter().enumerate() {
+                events.push(parse_event(e).with_context(|| format!("event #{}", i + 1))?);
+            }
+        }
+        events.sort_by_key(|e| e.round);
+        Ok(Scenario { name, events, regulation })
+    }
+
+    /// Parse a scenario TOML document (ignores any `[sim]` table; use
+    /// [`parse_with_sim`] to get both).
+    pub fn from_toml(text: &str) -> Result<Scenario> {
+        Scenario::from_value(&toml::parse(text).context("scenario TOML")?)
+    }
+
+    pub fn load(path: &Path) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Scenario::from_toml(&text)
+    }
+
+    /// Sanity-check the timeline against the fleet's node and metro
+    /// counts (a typo'd metro would otherwise silently target nothing).
+    pub fn validate(&self, n_nodes: usize, n_metros: usize) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.regulation.min_live_frac) {
+            bail!("regulation.min_live_frac must be in [0, 1]");
+        }
+        for (i, ev) in self.events.iter().enumerate() {
+            let e = i + 1;
+            match &ev.kind {
+                EventKind::Leave { who, duration } => {
+                    validate_selector(who, n_nodes, n_metros, e)?;
+                    if duration == &Some(0) {
+                        bail!("event #{e}: leave duration must be >= 1");
+                    }
+                }
+                EventKind::Join { who } => validate_selector(who, n_nodes, n_metros, e)?,
+                EventKind::Straggler { who, factor, duration } => {
+                    validate_selector(who, n_nodes, n_metros, e)?;
+                    if *factor < 1.0 {
+                        bail!("event #{e}: straggler factor must be >= 1");
+                    }
+                    if *duration == 0 {
+                        bail!("event #{e}: straggler duration must be >= 1");
+                    }
+                }
+                EventKind::Outage { metro, duration } => {
+                    if *metro >= n_metros {
+                        bail!("event #{e}: metro {metro} >= n_metros {n_metros}");
+                    }
+                    if *duration == 0 {
+                        bail!("event #{e}: outage duration must be >= 1");
+                    }
+                }
+                EventKind::Bandwidth { factor, duration } => {
+                    if !(*factor > 0.0 && *factor <= 1.0) {
+                        bail!("event #{e}: bandwidth factor must be in (0, 1]");
+                    }
+                    if *duration == 0 {
+                        bail!("event #{e}: bandwidth duration must be >= 1");
+                    }
+                }
+                EventKind::Drift { who, flip_frac } => {
+                    validate_selector(who, n_nodes, n_metros, e)?;
+                    if !(*flip_frac > 0.0 && *flip_frac <= 1.0) {
+                        bail!("event #{e}: drift flip_frac must be in (0, 1]");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn validate_selector(
+    who: &Selector,
+    n_nodes: usize,
+    n_metros: usize,
+    event: usize,
+) -> Result<()> {
+    match who {
+        Selector::Nodes(ids) => {
+            if let Some(&bad) = ids.iter().find(|&&id| id >= n_nodes) {
+                bail!("event #{event}: node id {bad} >= n_nodes {n_nodes}");
+            }
+        }
+        Selector::Frac(f) => {
+            if !(*f > 0.0 && *f <= 1.0) {
+                bail!("event #{event}: frac must be in (0, 1]");
+            }
+        }
+        Selector::Metro(m) => {
+            if *m >= n_metros {
+                bail!("event #{event}: metro {m} >= n_metros {n_metros}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn parse_selector(e: &Value) -> Result<Selector> {
+    if let Some(arr) = e.get("nodes").and_then(Value::as_arr) {
+        let ids = arr
+            .iter()
+            .map(|x| x.as_usize().context("node id must be a non-negative integer"))
+            .collect::<Result<Vec<usize>>>()?;
+        Ok(Selector::Nodes(ids))
+    } else if let Some(f) = e.get("frac").and_then(Value::as_f64) {
+        Ok(Selector::Frac(f))
+    } else if let Some(m) = e.get("metro").and_then(Value::as_usize) {
+        Ok(Selector::Metro(m))
+    } else {
+        bail!("event needs a target: 'nodes = [..]', 'frac = x' or 'metro = m'")
+    }
+}
+
+fn parse_event(e: &Value) -> Result<TimedEvent> {
+    let round = e
+        .get("round")
+        .and_then(Value::as_usize)
+        .context("event missing 'round'")?;
+    let kind_s = e.get("kind").and_then(Value::as_str).context("event missing 'kind'")?;
+    let duration = e.get("duration").and_then(Value::as_usize);
+    let f64_field = |k: &str| e.get(k).and_then(Value::as_f64);
+    let kind = match kind_s {
+        "leave" => EventKind::Leave { who: parse_selector(e)?, duration },
+        "join" => EventKind::Join { who: parse_selector(e)? },
+        "straggler" => EventKind::Straggler {
+            who: parse_selector(e)?,
+            factor: f64_field("factor").unwrap_or(2.0),
+            duration: duration.context("straggler needs 'duration'")?,
+        },
+        "outage" => EventKind::Outage {
+            metro: e.get("metro").and_then(Value::as_usize).context("outage needs 'metro'")?,
+            duration: duration.context("outage needs 'duration'")?,
+        },
+        "bandwidth" => EventKind::Bandwidth {
+            factor: f64_field("factor").context("bandwidth needs 'factor'")?,
+            duration: duration.context("bandwidth needs 'duration'")?,
+        },
+        "drift" => EventKind::Drift {
+            who: parse_selector(e)?,
+            flip_frac: f64_field("flip_frac").context("drift needs 'flip_frac'")?,
+        },
+        other => bail!("unknown event kind '{other}'"),
+    };
+    Ok(TimedEvent { round, kind })
+}
+
+/// Load a scenario file together with its optional embedded `[sim]`
+/// experiment config.
+pub fn load_with_sim(path: &Path) -> Result<(Scenario, Option<SimConfig>)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_with_sim(&text)
+}
+
+/// [`load_with_sim`] over an in-memory TOML document.
+pub fn parse_with_sim(text: &str) -> Result<(Scenario, Option<SimConfig>)> {
+    let v = toml::parse(text).context("scenario TOML")?;
+    let scenario = Scenario::from_value(&v)?;
+    let sim = match v.get("sim") {
+        Some(s) => Some(SimConfig::from_json(s).context("scenario [sim] table")?),
+        None => None,
+    };
+    Ok((scenario, sim))
+}
+
+/// The effect to undo when a timed window expires. Windows may overlap:
+/// expiry of one never blindly cancels another — the sim consults the
+/// *remaining* active windows (`still_down`, `active_slow_factor`,
+/// `active_bandwidth_floor`) before restoring nominal state.
+#[derive(Clone, Debug)]
+pub enum Undo {
+    /// Bring scenario-downed nodes back (churn return).
+    Revive(Vec<usize>),
+    /// End one straggler window (`factor` is that window's slowdown).
+    Unslow { ids: Vec<usize>, factor: f64 },
+    /// End one bandwidth-degradation window of the given factor.
+    RestoreBandwidth { factor: f64 },
+}
+
+/// Per-run scheduler state: the pending timeline, active effect windows,
+/// membership bookkeeping for churned nodes, and regulation counters.
+#[derive(Clone, Debug)]
+pub struct ScenarioState {
+    events: Vec<TimedEvent>,
+    next: usize,
+    /// (expire_round, undo) pairs for active windows.
+    active: Vec<(usize, Undo)>,
+    /// Live nodes awaiting (re)admission into a cluster.
+    pub pending_join: BTreeSet<usize>,
+    /// Nodes dropped from cluster membership by a re-formation; they move
+    /// to `pending_join` when they come back up.
+    pub unassigned: BTreeSet<usize>,
+    /// Nodes whose local label distribution shifted since the last
+    /// re-clustering (drift trigger for the regulation loop).
+    pub drifted: BTreeSet<usize>,
+    pub regulation: RegulationPolicy,
+    last_recluster: Option<usize>,
+}
+
+impl ScenarioState {
+    pub fn new(scenario: &Scenario) -> ScenarioState {
+        let mut events = scenario.events.clone();
+        events.sort_by_key(|e| e.round);
+        ScenarioState {
+            events,
+            next: 0,
+            active: Vec::new(),
+            pending_join: BTreeSet::new(),
+            unassigned: BTreeSet::new(),
+            drifted: BTreeSet::new(),
+            regulation: scenario.regulation,
+            last_recluster: None,
+        }
+    }
+
+    /// Events that fire at (or before) this round boundary, in order.
+    pub fn take_due(&mut self, round: usize) -> Vec<TimedEvent> {
+        let mut out = Vec::new();
+        while self.next < self.events.len() && self.events[self.next].round <= round {
+            out.push(self.events[self.next].clone());
+            self.next += 1;
+        }
+        out
+    }
+
+    /// Register an effect window ending at `expire_round`.
+    pub fn schedule_undo(&mut self, expire_round: usize, undo: Undo) {
+        self.active.push((expire_round, undo));
+    }
+
+    /// Drain every window that has expired by `round`.
+    pub fn take_expired(&mut self, round: usize) -> Vec<Undo> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].0 <= round {
+                out.push(self.active.remove(i).1);
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Most severe (lowest) bandwidth factor among still-active windows.
+    pub fn active_bandwidth_floor(&self) -> Option<f64> {
+        self.active
+            .iter()
+            .filter_map(|(_, u)| match u {
+                Undo::RestoreBandwidth { factor } => Some(*factor),
+                _ => None,
+            })
+            .reduce(f64::min)
+    }
+
+    /// Strongest straggler slowdown still covering `id`, if any.
+    pub fn active_slow_factor(&self, id: usize) -> Option<f64> {
+        self.active
+            .iter()
+            .filter_map(|(_, u)| match u {
+                Undo::Unslow { ids, factor } if ids.contains(&id) => Some(*factor),
+                _ => None,
+            })
+            .reduce(f64::max)
+    }
+
+    /// Whether another active leave/outage window still holds `id` down.
+    pub fn still_down(&self, id: usize) -> bool {
+        self.active
+            .iter()
+            .any(|(_, u)| matches!(u, Undo::Revive(ids) if ids.contains(&id)))
+    }
+
+    /// Cooldown gate for the re-clustering trigger.
+    pub fn may_recluster(&self, round: usize) -> bool {
+        self.last_recluster
+            .map_or(true, |r| round >= r + self.regulation.cooldown.max(1))
+    }
+
+    pub fn note_recluster(&mut self, round: usize) {
+        self.last_recluster = Some(round);
+    }
+}
+
+/// A ready-to-run churn-stress scenario; `scale scenario gen` writes it
+/// and `examples/churn_stress.rs` runs it.
+pub const EXAMPLE_TOML: &str = r#"# SCALE scenario: mid-run churn, a regional outage, degraded backhaul,
+# stragglers and label drift — with the self-regulation loop enabled.
+name = "churn_stress"
+
+# Full experiment config; any SimConfig JSON key works here.
+[sim]
+n_nodes = 30
+n_clusters = 5
+rounds = 15
+local_epochs = 3
+eval_every = 5
+dataset_samples = 600
+dataset_malignant = 220
+seed = 42
+
+[regulation]
+min_live_frac = 0.6
+cooldown = 2
+enabled = true
+
+# 20% of the live fleet drops at round 5 and returns 6 rounds later.
+[[event]]
+round = 4
+kind = "leave"
+frac = 0.2
+duration = 6
+
+[[event]]
+round = 5
+kind = "bandwidth"
+factor = 0.25
+duration = 3
+
+[[event]]
+round = 6
+kind = "straggler"
+frac = 0.1
+factor = 4.0
+duration = 3
+
+[[event]]
+round = 7
+kind = "outage"
+metro = 1
+duration = 2
+
+[[event]]
+round = 9
+kind = "drift"
+frac = 0.15
+flip_frac = 0.25
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::MsgKind;
+    use crate::runtime::compute::NativeSvm;
+    use crate::sim::Simulation;
+
+    #[test]
+    fn example_toml_parses_with_sim() {
+        let (scenario, sim) = parse_with_sim(EXAMPLE_TOML).unwrap();
+        assert_eq!(scenario.name, "churn_stress");
+        assert_eq!(scenario.events.len(), 5);
+        // sorted by round
+        let rounds: Vec<usize> = scenario.events.iter().map(|e| e.round).collect();
+        let mut sorted = rounds.clone();
+        sorted.sort_unstable();
+        assert_eq!(rounds, sorted);
+        assert!(scenario.regulation.enabled);
+        assert_eq!(scenario.regulation.cooldown, 2);
+        let cfg = sim.expect("[sim] table");
+        assert_eq!(cfg.n_nodes, 30);
+        assert_eq!(cfg.rounds, 15);
+        scenario.validate(cfg.n_nodes, cfg.fleet.n_metros).unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_bad_events() {
+        let bad = |toml: &str, n: usize| {
+            let s = Scenario::from_toml(toml);
+            match s {
+                Err(_) => true,
+                Ok(s) => s.validate(n, 4).is_err(),
+            }
+        };
+        assert!(bad("[[event]]\nround = 1\nkind = \"leave\"\nnodes = [99]\n", 10));
+        assert!(bad("[[event]]\nround = 1\nkind = \"leave\"\nfrac = 1.5\n", 10));
+        assert!(bad("[[event]]\nround = 1\nkind = \"bandwidth\"\nfactor = 0.0\nduration = 2\n", 10));
+        assert!(bad("[[event]]\nround = 1\nkind = \"straggler\"\nfrac = 0.5\nfactor = 0.5\nduration = 2\n", 10));
+        assert!(bad("[[event]]\nround = 1\nkind = \"warp\"\nfrac = 0.5\n", 10));
+        assert!(bad("[[event]]\nkind = \"leave\"\nfrac = 0.5\n", 10));
+        // metro indices are validated against the fleet's n_metros (4 here)
+        assert!(bad("[[event]]\nround = 1\nkind = \"outage\"\nmetro = 9\nduration = 2\n", 10));
+        assert!(bad("[[event]]\nround = 1\nkind = \"leave\"\nmetro = 4\n", 10));
+        assert!(!bad("[[event]]\nround = 1\nkind = \"outage\"\nmetro = 3\nduration = 2\n", 10));
+    }
+
+    #[test]
+    fn selector_resolution_is_deterministic_and_bounded() {
+        let candidates: Vec<usize> = (0..20).collect();
+        let metro_of = |id: usize| id % 4;
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let s = Selector::Frac(0.25);
+        let ra = s.resolve(&candidates, metro_of, &mut a);
+        let rb = s.resolve(&candidates, metro_of, &mut b);
+        assert_eq!(ra, rb);
+        assert_eq!(ra.len(), 5); // ceil(20 * 0.25)
+        assert!(ra.windows(2).all(|w| w[0] < w[1]));
+
+        let m = Selector::Metro(2).resolve(&candidates, metro_of, &mut a);
+        assert_eq!(m, vec![2, 6, 10, 14, 18]);
+
+        let n = Selector::Nodes(vec![3, 99, 7]).resolve(&candidates, metro_of, &mut a);
+        assert_eq!(n, vec![3, 7]); // out-of-candidate ids filtered
+    }
+
+    #[test]
+    fn state_queue_and_windows() {
+        let scenario = Scenario::from_toml(
+            "[[event]]\nround = 2\nkind = \"join\"\nfrac = 1.0\n\
+             [[event]]\nround = 0\nkind = \"leave\"\nfrac = 0.5\n",
+        )
+        .unwrap();
+        let mut st = ScenarioState::new(&scenario);
+        let due0 = st.take_due(0);
+        assert_eq!(due0.len(), 1); // sorted: leave fires first
+        assert!(matches!(due0[0].kind, EventKind::Leave { .. }));
+        assert!(st.take_due(1).is_empty());
+        assert_eq!(st.take_due(2).len(), 1);
+
+        st.schedule_undo(3, Undo::RestoreBandwidth { factor: 0.5 });
+        st.schedule_undo(5, Undo::Unslow { ids: vec![1], factor: 3.0 });
+        assert!(st.take_expired(2).is_empty());
+        assert_eq!(st.take_expired(3).len(), 1);
+        assert_eq!(st.take_expired(9).len(), 1);
+
+        assert!(st.may_recluster(0));
+        st.note_recluster(0);
+        assert!(!st.may_recluster(1));
+        assert!(st.may_recluster(2));
+    }
+
+    /// Overlapping effect windows: expiry of one window must not cancel
+    /// a still-active sibling.
+    #[test]
+    fn overlapping_windows_consult_remaining_active_state() {
+        let scenario = Scenario::from_toml("name = \"w\"\n").unwrap();
+        let mut st = ScenarioState::new(&scenario);
+        st.schedule_undo(3, Undo::RestoreBandwidth { factor: 0.5 });
+        st.schedule_undo(6, Undo::RestoreBandwidth { factor: 0.25 });
+        st.schedule_undo(4, Undo::Unslow { ids: vec![7], factor: 2.0 });
+        st.schedule_undo(8, Undo::Unslow { ids: vec![7, 9], factor: 5.0 });
+        st.schedule_undo(9, Undo::Revive(vec![3]));
+
+        assert_eq!(st.active_bandwidth_floor(), Some(0.25));
+        assert_eq!(st.active_slow_factor(7), Some(5.0));
+        assert_eq!(st.active_slow_factor(9), Some(5.0));
+        assert_eq!(st.active_slow_factor(1), None);
+        assert!(st.still_down(3));
+        assert!(!st.still_down(4));
+
+        // first bandwidth + first straggler window expire; the longer
+        // siblings must still govern the remaining state
+        let expired = st.take_expired(4);
+        assert_eq!(expired.len(), 2);
+        assert_eq!(st.active_bandwidth_floor(), Some(0.25));
+        assert_eq!(st.active_slow_factor(7), Some(5.0));
+
+        let _ = st.take_expired(8);
+        assert_eq!(st.active_bandwidth_floor(), None);
+        assert_eq!(st.active_slow_factor(7), None);
+        assert!(st.still_down(3));
+        let _ = st.take_expired(9);
+        assert!(!st.still_down(3));
+    }
+
+    /// The acceptance scenario in miniature: ≥20% mid-run dropout must
+    /// complete every round, trigger at least one re-clustering and at
+    /// least one driver re-election, and stay deterministic.
+    #[test]
+    fn churn_scenario_reclusters_and_reelects() {
+        let (scenario, sim_cfg) = parse_with_sim(EXAMPLE_TOML).unwrap();
+        let cfg = sim_cfg.unwrap();
+        let compute = NativeSvm::new(NativeSvm::default_dims());
+        let mut sim = Simulation::new(cfg.clone(), &compute).unwrap();
+        let report = sim.run_scale_scenario(&scenario).unwrap();
+
+        assert_eq!(report.rounds.len(), cfg.rounds, "all rounds completed");
+        assert!(report.total_reclusterings() >= 1, "no re-clustering happened");
+        // initial elections (one per cluster) plus regulation re-elections
+        assert!(
+            report.total_elections() > cfg.n_clusters as u64,
+            "no re-election beyond the initial ones: {}",
+            report.total_elections()
+        );
+        // the 20% leave event is visible as a live-node dip
+        let min_live = report.rounds.iter().map(|r| r.live_nodes).min().unwrap();
+        assert!(
+            min_live <= cfg.n_nodes - cfg.n_nodes / 5,
+            "live never dipped: min {min_live}"
+        );
+        // events were applied and logged
+        assert!(report.rounds.iter().map(|r| r.scenario_events).sum::<u64>() >= 5);
+        assert!(!report.scenario.is_empty());
+        // the federation still learns through the churn
+        assert!(
+            report.final_metrics.accuracy > 0.6,
+            "accuracy collapsed: {:?}",
+            report.final_metrics
+        );
+        // re-clustering traffic is accounted (fresh summaries + assignments)
+        assert!(report.ledger[&MsgKind::Summary].count > cfg.n_nodes as u64);
+    }
+
+    #[test]
+    fn scenario_run_is_deterministic() {
+        let (scenario, sim_cfg) = parse_with_sim(EXAMPLE_TOML).unwrap();
+        let mut cfg = sim_cfg.unwrap();
+        cfg.rounds = 8; // keep the double run cheap
+        let cfg = cfg.normalized();
+        let compute = NativeSvm::new(NativeSvm::default_dims());
+        let run = || {
+            let mut sim = Simulation::new(cfg.clone(), &compute).unwrap();
+            sim.run_scale_scenario(&scenario).unwrap().fingerprint()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn permanent_leave_never_returns() {
+        let scenario = Scenario::from_toml(
+            "[[event]]\nround = 1\nkind = \"leave\"\nnodes = [0, 1]\n",
+        )
+        .unwrap();
+        let cfg = SimConfig {
+            n_nodes: 12,
+            n_clusters: 3,
+            rounds: 6,
+            local_epochs: 1,
+            eval_every: 100,
+            dataset_samples: 240,
+            dataset_malignant: 90,
+            seed: 3,
+            ..Default::default()
+        }
+        .normalized();
+        let compute = NativeSvm::new(NativeSvm::default_dims());
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        let report = sim.run_scale_scenario(&scenario).unwrap();
+        for r in &report.rounds {
+            if r.round >= 1 {
+                assert!(r.live_nodes <= 10, "round {}: {}", r.round, r.live_nodes);
+            }
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Parallel multi-seed sweep runner.
+//!
+//! A scenario result only means something across seeds: churn timing
+//! interacts with the failure RNG, so a single run can land anywhere in
+//! the outcome distribution. [`run_sweep`] executes the same
+//! `(config, scenario)` pair under N seeds and aggregates.
+//!
+//! Parallelism uses `std::thread::scope` over the **`Send`-safe
+//! [`NativeSvm`] backend** (the image vendors no `rayon`; a scoped
+//! round-robin split gives the same fan-out with zero dependencies).
+//! PJRT stays single-threaded by design — its handles are `Rc`-based and
+//! thread-local — which is exactly why the sweep pins the native oracle.
+//! Every seed's simulation owns its RNG, network and fleet, so a
+//! parallel sweep is bit-identical to running the seeds sequentially;
+//! `RunReport::fingerprint` makes that checkable (and `scale scenario
+//! sweep --verify` checks it).
+
+use std::thread;
+
+use anyhow::Result;
+
+use crate::config::SimConfig;
+use crate::runtime::compute::NativeSvm;
+use crate::runtime::manifest::ModelKind;
+use crate::scenario::Scenario;
+use crate::sim::report::RunReport;
+use crate::sim::Simulation;
+use crate::util::stats::{mean, std_dev};
+
+/// One seed's completed run.
+#[derive(Clone, Debug)]
+pub struct SweepRun {
+    pub seed: u64,
+    pub report: RunReport,
+}
+
+/// Aggregate statistics over a sweep.
+#[derive(Clone, Debug)]
+pub struct SweepSummary {
+    pub runs: usize,
+    pub mean_accuracy: f64,
+    pub std_accuracy: f64,
+    pub mean_updates: f64,
+    pub mean_reclusterings: f64,
+    pub mean_elections: f64,
+}
+
+/// `n` consecutive seeds starting at `base`.
+pub fn seeds_from(base: u64, n: usize) -> Vec<u64> {
+    (0..n as u64).map(|i| base.wrapping_add(i)).collect()
+}
+
+fn run_one(cfg: &SimConfig, scenario: &Scenario, seed: u64) -> Result<SweepRun> {
+    let mut cfg = cfg.clone();
+    cfg.seed = seed;
+    let cfg = cfg.normalized();
+    let compute = NativeSvm::new(NativeSvm::default_dims());
+    let mut sim = Simulation::new(cfg, &compute)?;
+    let report = sim.run_scale_scenario(scenario)?;
+    Ok(SweepRun { seed, report })
+}
+
+/// Run every seed; `parallel` fans the seeds out over the available
+/// cores. Results come back in seed order either way, and parallel
+/// output is identical to sequential output for the same inputs.
+pub fn run_sweep(
+    cfg: &SimConfig,
+    scenario: &Scenario,
+    seeds: &[u64],
+    parallel: bool,
+) -> Result<Vec<SweepRun>> {
+    anyhow::ensure!(
+        cfg.model == ModelKind::Svm,
+        "the sweep runner is native-only and implements only the SVM model \
+         (got {:?})",
+        cfg.model
+    );
+    if !parallel || seeds.len() <= 1 {
+        return seeds.iter().map(|&s| run_one(cfg, scenario, s)).collect();
+    }
+    let workers = thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(seeds.len());
+    let mut slots: Vec<Option<Result<SweepRun>>> = Vec::new();
+    slots.resize_with(seeds.len(), || None);
+    thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            handles.push(scope.spawn(move || {
+                let mut out = Vec::new();
+                let mut i = w;
+                while i < seeds.len() {
+                    out.push((i, run_one(cfg, scenario, seeds[i])));
+                    i += workers;
+                }
+                out
+            }));
+        }
+        for h in handles {
+            for (i, r) in h.join().expect("sweep worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots.into_iter().map(|s| s.expect("sweep slot unfilled")).collect()
+}
+
+/// Mean/spread statistics over completed runs.
+pub fn summarize(runs: &[SweepRun]) -> SweepSummary {
+    let acc: Vec<f64> = runs.iter().map(|r| r.report.final_metrics.accuracy).collect();
+    let upd: Vec<f64> = runs.iter().map(|r| r.report.total_updates() as f64).collect();
+    let rec: Vec<f64> =
+        runs.iter().map(|r| r.report.total_reclusterings() as f64).collect();
+    let ele: Vec<f64> = runs.iter().map(|r| r.report.total_elections() as f64).collect();
+    SweepSummary {
+        runs: runs.len(),
+        mean_accuracy: mean(&acc),
+        std_accuracy: std_dev(&acc),
+        mean_updates: mean(&upd),
+        mean_reclusterings: mean(&rec),
+        mean_elections: mean(&ele),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{self, Scenario};
+
+    fn small_cfg() -> SimConfig {
+        SimConfig {
+            n_nodes: 12,
+            n_clusters: 3,
+            rounds: 4,
+            local_epochs: 1,
+            eval_every: 100,
+            dataset_samples: 240,
+            dataset_malignant: 90,
+            seed: 11,
+            ..Default::default()
+        }
+        .normalized()
+    }
+
+    fn churn() -> Scenario {
+        Scenario::from_toml(
+            "[regulation]\nmin_live_frac = 0.6\ncooldown = 1\n\
+             [[event]]\nround = 1\nkind = \"leave\"\nfrac = 0.25\nduration = 2\n",
+        )
+        .unwrap()
+    }
+
+    /// The acceptance check: 8 seeds in parallel must be bit-identical to
+    /// the same 8 seeds run sequentially.
+    #[test]
+    fn parallel_sweep_matches_sequential() {
+        let cfg = small_cfg();
+        let scenario = churn();
+        let seeds = seeds_from(cfg.seed, 8);
+        let par = run_sweep(&cfg, &scenario, &seeds, true).unwrap();
+        let seq = run_sweep(&cfg, &scenario, &seeds, false).unwrap();
+        assert_eq!(par.len(), 8);
+        assert_eq!(seq.len(), 8);
+        for (p, s) in par.iter().zip(&seq) {
+            assert_eq!(p.seed, s.seed);
+            assert_eq!(
+                p.report.fingerprint(),
+                s.report.fingerprint(),
+                "seed {} diverged between parallel and sequential",
+                p.seed
+            );
+        }
+        // distinct seeds explore distinct trajectories
+        assert!(
+            par.windows(2).any(|w| w[0].report.fingerprint() != w[1].report.fingerprint())
+        );
+    }
+
+    #[test]
+    fn summary_aggregates() {
+        let cfg = small_cfg();
+        let runs = run_sweep(&cfg, &scenario::Scenario::none(), &seeds_from(1, 3), true)
+            .unwrap();
+        let s = summarize(&runs);
+        assert_eq!(s.runs, 3);
+        assert!(s.mean_accuracy > 0.5 && s.mean_accuracy <= 1.0);
+        assert!(s.std_accuracy >= 0.0);
+        assert!(s.mean_updates >= 3.0); // >= one forced final per cluster
+        assert_eq!(s.mean_reclusterings, 0.0); // regulation off in none()
+    }
+
+    #[test]
+    fn seed_helper() {
+        assert_eq!(seeds_from(5, 3), vec![5, 6, 7]);
+        assert!(seeds_from(0, 0).is_empty());
+    }
+}

@@ -10,7 +10,15 @@
 //!
 //! Single-threaded by design: PJRT handles are thread-local (`Rc`), and a
 //! discrete-event structure keeps message accounting exact. "Latency" is
-//! *modelled* time from `netsim`, not wall-clock.
+//! *modelled* time from `netsim`, not wall-clock. (Multi-seed parallelism
+//! lives one level up, in `scenario::sweep`, which runs independent
+//! simulations over the `Send`-safe native backend.)
+//!
+//! [`Simulation::run_scale_scenario`] additionally threads a
+//! `scenario::Scenario` timeline through the round loop: events are
+//! drained at each round boundary and the self-regulation loop (health
+//! detection → proximity re-clustering → driver re-election) repairs the
+//! federation as the fleet churns.
 
 pub mod report;
 
@@ -23,17 +31,19 @@ use crate::data::{batches, synth_wdbc_sized, Dataset, PaddedBatch, Scaler};
 use crate::devices::{generate_fleet, DeviceProfile};
 use crate::election::{elect, representativeness, Ballot};
 use crate::features::{combined_metadata_score, wdbc_columns, MetadataWeights};
-use crate::health::HealthMonitor;
+use crate::geo::{centroid, equirectangular_km, GeoPoint};
+use crate::health::{HealthMonitor, HealthState};
 use crate::metrics::ModelMetrics;
 use crate::netsim::{param_payload_bytes, summary_payload_bytes, MsgKind, Network};
 use crate::perf_index::{local_log_pi, OperationalWeights};
 use crate::runtime::compute::ModelCompute;
 use crate::quant;
+use crate::scenario::{EventKind, Scenario, ScenarioState, Undo};
 use crate::secagg;
 use crate::server::{GlobalServer, SummaryMsg};
 use crate::topology::peer_sets;
 use crate::util::rng::Rng;
-use report::{ClusterReport, RoundRecord, RunReport};
+use report::{ClusterReport, RoundRecord, RunReport, ScenarioNote};
 
 /// Heartbeat / ballot / assignment payload sizes (bytes).
 const HEARTBEAT_BYTES: u64 = 32;
@@ -56,6 +66,11 @@ pub struct NodeState {
     pub compute_energy_j: f64,
     /// Modelled seconds of local compute spent so far.
     pub compute_seconds: f64,
+    /// Compute slowdown injected by scenario straggler events (1 = nominal).
+    pub slow_factor: f64,
+    /// Downed by a scenario event; excluded from random recovery until the
+    /// scenario brings the node back.
+    pub scenario_down: bool,
 }
 
 impl NodeState {
@@ -81,7 +96,7 @@ impl NodeState {
         let last_mean = sum / self.train_batches.len().max(1) as f64;
         let steps = (epochs * self.train_batches.len()) as f64;
         let gflop = compute.train_flops() * steps / 1e9;
-        let seconds = self.device.compute_seconds(gflop);
+        let seconds = self.device.compute_seconds(gflop) * self.slow_factor;
         let energy = gflop * self.device.compute_energy_j_per_gflop;
         self.compute_seconds += seconds;
         self.compute_energy_j += energy;
@@ -194,6 +209,8 @@ impl<'a> Simulation<'a> {
                 last_loss: f64::NAN,
                 compute_energy_j: 0.0,
                 compute_seconds: 0.0,
+                slow_factor: 1.0,
+                scenario_down: false,
             });
         }
 
@@ -275,48 +292,73 @@ impl<'a> Simulation<'a> {
 
     /// Build per-cluster state, including the initial driver election.
     fn init_clusters(&mut self, members: Vec<Vec<usize>>) -> Result<Vec<ClusterState>> {
-        let (b, f) = (self.compute.batch(), self.compute.features());
         let mut clusters = Vec::with_capacity(members.len());
         for (cid, member_ids) in members.into_iter().enumerate() {
             anyhow::ensure!(!member_ids.is_empty(), "cluster {cid} empty");
-            let tests: Vec<&Dataset> =
-                member_ids.iter().map(|&id| &self.nodes[id].test).collect();
-            let eval = Dataset::concat(&tests);
-            let eval_labels = eval.y.clone();
-            let eval_batches = batches(&eval, b, f);
-            let trains: Vec<&Dataset> =
-                member_ids.iter().map(|&id| &self.nodes[id].train).collect();
-            let total_n: usize = trains.iter().map(|t| t.n()).sum();
-            let total_pos: usize = trains.iter().map(|t| t.positives()).sum();
-            let pos_frac = if total_n > 0 {
-                total_pos as f64 / total_n as f64
-            } else {
-                0.0
-            };
-
-            let mut monitor = HealthMonitor::new(self.cfg.health);
-            for &id in &member_ids {
-                monitor.register(id, 0);
-            }
-            let mut cluster = ClusterState {
-                id: cid,
-                members: member_ids,
-                driver: usize::MAX,
-                gate: UploadGate::new(self.cfg.checkpoint_min_delta),
-                delta_gate: DeltaGate::new(self.cfg.checkpoint_min_delta),
-                store: CheckpointStore::new(8),
-                monitor,
-                eval_batches,
-                eval_labels,
-                pos_frac,
-                elections: 0,
-                updates: 0,
-                last_accuracy: 0.0,
-            };
-            self.run_election(&mut cluster, 0)?;
-            clusters.push(cluster);
+            clusters.push(self.build_cluster(cid, member_ids, 0)?);
         }
         Ok(clusters)
+    }
+
+    /// Build one cluster's protocol state over `member_ids`, electing a
+    /// driver among its live members at `round`. An empty member list
+    /// yields a dormant slot (kept so cluster ids stay stable across
+    /// self-regulated re-formations); the round loop skips it.
+    fn build_cluster(
+        &mut self,
+        cid: usize,
+        member_ids: Vec<usize>,
+        round: usize,
+    ) -> Result<ClusterState> {
+        let mut monitor = HealthMonitor::new(self.cfg.health);
+        for &id in &member_ids {
+            monitor.register(id, round);
+        }
+        let mut cluster = ClusterState {
+            id: cid,
+            members: member_ids,
+            driver: 0,
+            gate: UploadGate::new(self.cfg.checkpoint_min_delta),
+            delta_gate: DeltaGate::new(self.cfg.checkpoint_min_delta),
+            store: CheckpointStore::new(8),
+            monitor,
+            eval_batches: Vec::new(),
+            eval_labels: Vec::new(),
+            pos_frac: 0.0,
+            elections: 0,
+            updates: 0,
+            last_accuracy: 0.0,
+        };
+        self.refresh_cluster_eval(&mut cluster);
+        if cluster.members.iter().any(|&id| self.nodes[id].alive) {
+            self.run_election(&mut cluster, round)?;
+        } else if let Some(&first) = cluster.members.first() {
+            cluster.driver = first;
+        }
+        Ok(cluster)
+    }
+
+    /// Recompute a cluster's validation set and label mix from its current
+    /// membership (formation, proximity admission, drift repair).
+    fn refresh_cluster_eval(&self, cluster: &mut ClusterState) {
+        let (b, f) = (self.compute.batch(), self.compute.features());
+        if cluster.members.is_empty() {
+            cluster.eval_batches = Vec::new();
+            cluster.eval_labels = Vec::new();
+            cluster.pos_frac = 0.0;
+            return;
+        }
+        let tests: Vec<&Dataset> =
+            cluster.members.iter().map(|&id| &self.nodes[id].test).collect();
+        let eval = Dataset::concat(&tests);
+        cluster.eval_labels = eval.y.clone();
+        cluster.eval_batches = batches(&eval, b, f);
+        let trains: Vec<&Dataset> =
+            cluster.members.iter().map(|&id| &self.nodes[id].train).collect();
+        let total_n: usize = trains.iter().map(|t| t.n()).sum();
+        let total_pos: usize = trains.iter().map(|t| t.positives()).sum();
+        cluster.pos_frac =
+            if total_n > 0 { total_pos as f64 / total_n as f64 } else { 0.0 };
     }
 
     /// Algorithm-4 election among live members; accounts ballot traffic.
@@ -365,6 +407,9 @@ impl<'a> Simulation<'a> {
         }
         let mut frng = self.rng.derive(0xFA11 + round as u64);
         for node in &mut self.nodes {
+            if node.scenario_down {
+                continue; // scenario-controlled outages don't self-heal
+            }
             if node.alive {
                 if frng.chance(self.cfg.node_failure_prob) {
                     node.alive = false;
@@ -379,18 +424,34 @@ impl<'a> Simulation<'a> {
     // SCALE protocol
     // ------------------------------------------------------------------
 
-    /// Run the full SCALE protocol; returns the run report.
+    /// Run the full SCALE protocol; returns the run report. Equivalent to
+    /// [`Self::run_scale_scenario`] with no events and self-regulation
+    /// off, so plain runs stay bit-identical to the pre-scenario engine.
     pub fn run_scale(&mut self) -> Result<RunReport> {
+        self.run_scale_scenario(&Scenario::none())
+    }
+
+    /// Run the full SCALE protocol under an injected scenario timeline:
+    /// churn / outage / straggler / bandwidth / drift events drain at
+    /// each round boundary, after which the self-regulation loop repairs
+    /// the federation (health → re-clustering → re-election).
+    pub fn run_scale_scenario(&mut self, scenario: &Scenario) -> Result<RunReport> {
+        scenario.validate(self.cfg.n_nodes, self.cfg.fleet.n_metros)?;
         let wall = std::time::Instant::now();
         let mut server = GlobalServer::new(self.root_key);
         let members = self.cluster_formation(&mut server)?;
         let mut clusters = self.init_clusters(members)?;
+        let mut state = ScenarioState::new(scenario);
+        let mut notes: Vec<ScenarioNote> = Vec::new();
 
         let mut rounds = Vec::with_capacity(self.cfg.rounds);
         for round in 0..self.cfg.rounds {
+            let events_applied = self.apply_scenario_round(&mut state, round, &mut notes);
             self.inject_failures(round);
+            let (reclusterings, regulate_elections) =
+                self.self_regulate(&mut state, &mut clusters, round, &mut notes)?;
             let mut round_updates = 0u64;
-            let mut round_elections = 0u64;
+            let mut round_elections = regulate_elections;
             let mut slowest_cluster_ms = 0.0f64;
             let mut loss_sum = 0.0f64;
             let mut loss_n = 0usize;
@@ -456,6 +517,8 @@ impl<'a> Simulation<'a> {
                 metrics,
                 live_nodes: self.nodes.iter().filter(|n| n.alive).count(),
                 elections: round_elections,
+                scenario_events: events_applied,
+                reclusterings,
             });
         }
 
@@ -479,7 +542,411 @@ impl<'a> Simulation<'a> {
             })
             .collect();
 
-        Ok(self.finish_report("scale", rounds, cluster_reports, final_metrics, &server, wall))
+        let mut report =
+            self.finish_report("scale", rounds, cluster_reports, final_metrics, &server, wall);
+        report.scenario = notes;
+        Ok(report)
+    }
+
+    /// Drain the scenario queue at a round boundary: expire finished
+    /// effect windows, then apply newly-due events. Returns the number of
+    /// events applied.
+    fn apply_scenario_round(
+        &mut self,
+        state: &mut ScenarioState,
+        round: usize,
+        notes: &mut Vec<ScenarioNote>,
+    ) -> u64 {
+        // Expired windows restore state *only as far as the remaining
+        // active windows allow* — overlapping effects never get cancelled
+        // early by a shorter sibling window.
+        for undo in state.take_expired(round) {
+            match undo {
+                Undo::Revive(ids) => {
+                    for id in ids {
+                        if state.still_down(id) {
+                            continue; // a later leave/outage still holds it
+                        }
+                        let node = &mut self.nodes[id];
+                        node.scenario_down = false;
+                        node.alive = true;
+                        if state.unassigned.remove(&id) {
+                            state.pending_join.insert(id);
+                        }
+                        notes.push(ScenarioNote {
+                            round,
+                            what: format!("node {id} returned"),
+                        });
+                    }
+                }
+                Undo::Unslow { ids, .. } => {
+                    for id in ids {
+                        self.nodes[id].slow_factor =
+                            state.active_slow_factor(id).unwrap_or(1.0);
+                    }
+                    notes.push(ScenarioNote {
+                        round,
+                        what: "straggler window ended".into(),
+                    });
+                }
+                Undo::RestoreBandwidth { .. } => {
+                    let floor = state.active_bandwidth_floor().unwrap_or(1.0);
+                    self.net.set_bandwidth_degradation(floor);
+                    notes.push(ScenarioNote {
+                        round,
+                        what: if floor >= 1.0 {
+                            "bandwidth restored".into()
+                        } else {
+                            format!(
+                                "bandwidth window ended (still degraded to {:.0}%)",
+                                floor * 100.0
+                            )
+                        },
+                    });
+                }
+            }
+        }
+
+        let due = state.take_due(round);
+        for (ei, ev) in due.iter().enumerate() {
+            let mut erng = self
+                .rng
+                .derive(0xE7E57 ^ crate::util::rng::mix64(round as u64, ei as u64));
+            match &ev.kind {
+                EventKind::Leave { who, duration } => {
+                    let candidates: Vec<usize> =
+                        self.nodes.iter().filter(|n| n.alive).map(|n| n.id).collect();
+                    let targets =
+                        who.resolve(&candidates, |id| self.nodes[id].device.metro, &mut erng);
+                    for &id in &targets {
+                        let node = &mut self.nodes[id];
+                        node.alive = false;
+                        node.scenario_down = true;
+                        state.pending_join.remove(&id);
+                    }
+                    if let Some(d) = duration {
+                        state.schedule_undo(round + d, Undo::Revive(targets.clone()));
+                    }
+                    notes.push(ScenarioNote {
+                        round,
+                        what: format!(
+                            "churn: {} node(s) left{}",
+                            targets.len(),
+                            match duration {
+                                Some(d) => format!(" for {d} round(s)"),
+                                None => " permanently".into(),
+                            }
+                        ),
+                    });
+                }
+                EventKind::Join { who } => {
+                    let candidates: Vec<usize> =
+                        self.nodes.iter().filter(|n| !n.alive).map(|n| n.id).collect();
+                    let targets =
+                        who.resolve(&candidates, |id| self.nodes[id].device.metro, &mut erng);
+                    for &id in &targets {
+                        let node = &mut self.nodes[id];
+                        node.alive = true;
+                        node.scenario_down = false;
+                        if state.unassigned.remove(&id) {
+                            state.pending_join.insert(id);
+                        }
+                    }
+                    notes.push(ScenarioNote {
+                        round,
+                        what: format!("churn: {} node(s) joined", targets.len()),
+                    });
+                }
+                EventKind::Straggler { who, factor, duration } => {
+                    let candidates: Vec<usize> =
+                        self.nodes.iter().filter(|n| n.alive).map(|n| n.id).collect();
+                    let targets =
+                        who.resolve(&candidates, |id| self.nodes[id].device.metro, &mut erng);
+                    for &id in &targets {
+                        // the strongest overlapping slowdown wins
+                        self.nodes[id].slow_factor =
+                            self.nodes[id].slow_factor.max(factor.max(1.0));
+                    }
+                    state.schedule_undo(
+                        round + *duration,
+                        Undo::Unslow { ids: targets.clone(), factor: factor.max(1.0) },
+                    );
+                    notes.push(ScenarioNote {
+                        round,
+                        what: format!(
+                            "{} straggler(s) at {factor:.1}x for {duration} round(s)",
+                            targets.len()
+                        ),
+                    });
+                }
+                EventKind::Outage { metro, duration } => {
+                    let targets: Vec<usize> = self
+                        .nodes
+                        .iter()
+                        .filter(|n| n.alive && n.device.metro == *metro)
+                        .map(|n| n.id)
+                        .collect();
+                    for &id in &targets {
+                        let node = &mut self.nodes[id];
+                        node.alive = false;
+                        node.scenario_down = true;
+                        state.pending_join.remove(&id);
+                    }
+                    state.schedule_undo(round + *duration, Undo::Revive(targets.clone()));
+                    notes.push(ScenarioNote {
+                        round,
+                        what: format!(
+                            "regional outage: metro {metro} dark ({} node(s)) for {duration} round(s)",
+                            targets.len()
+                        ),
+                    });
+                }
+                EventKind::Bandwidth { factor, duration } => {
+                    // the most severe overlapping degradation wins
+                    let floor = self.net.bandwidth_degradation().min(*factor);
+                    self.net.set_bandwidth_degradation(floor);
+                    state.schedule_undo(
+                        round + *duration,
+                        Undo::RestoreBandwidth { factor: *factor },
+                    );
+                    notes.push(ScenarioNote {
+                        round,
+                        what: format!(
+                            "bandwidth degraded to {:.0}% for {duration} round(s)",
+                            factor * 100.0
+                        ),
+                    });
+                }
+                EventKind::Drift { who, flip_frac } => {
+                    let candidates: Vec<usize> =
+                        self.nodes.iter().filter(|n| n.alive).map(|n| n.id).collect();
+                    let targets =
+                        who.resolve(&candidates, |id| self.nodes[id].device.metro, &mut erng);
+                    let (b, f) = (self.compute.batch(), self.compute.features());
+                    for &id in &targets {
+                        let mut drng = erng.derive(id as u64);
+                        let node = &mut self.nodes[id];
+                        for y in &mut node.train.y {
+                            if drng.chance(*flip_frac) {
+                                *y = -*y;
+                            }
+                        }
+                        node.pos_frac = if node.train.n() > 0 {
+                            node.train.positives() as f64 / node.train.n() as f64
+                        } else {
+                            0.0
+                        };
+                        node.train_batches = batches(&node.train, b, f);
+                        state.drifted.insert(id);
+                    }
+                    notes.push(ScenarioNote {
+                        round,
+                        what: format!(
+                            "label drift on {} node(s) (flip {:.0}%)",
+                            targets.len(),
+                            flip_frac * 100.0
+                        ),
+                    });
+                }
+            }
+        }
+        due.len() as u64
+    }
+
+    /// The self-regulation loop (the paper's "self-regulated" half):
+    /// `health` flags clusters whose reachable membership collapsed or
+    /// whose data drifted, `clustering` re-forms them via Proximity
+    /// Evaluation over fresh summaries, and `election` re-runs
+    /// Algorithm-4 driver selection. Returning nodes are re-admitted to
+    /// their geographically nearest cluster. Returns
+    /// `(re-clusterings, elections)` performed this round.
+    fn self_regulate(
+        &mut self,
+        state: &mut ScenarioState,
+        clusters: &mut [ClusterState],
+        round: usize,
+        notes: &mut Vec<ScenarioNote>,
+    ) -> Result<(u64, u64)> {
+        if !state.regulation.enabled {
+            return Ok((0, 0));
+        }
+        let mut elections = 0u64;
+
+        // randomly-recovered nodes whose old cluster was re-formed while
+        // they were down: route them back through proximity admission
+        let recovered: Vec<usize> = state
+            .unassigned
+            .iter()
+            .copied()
+            .filter(|&id| self.nodes[id].alive)
+            .collect();
+        for id in recovered {
+            state.unassigned.remove(&id);
+            state.pending_join.insert(id);
+        }
+
+        // --- proximity admission of returning / joining nodes ---
+        let pending: Vec<usize> = state.pending_join.iter().copied().collect();
+        for id in pending {
+            if !self.nodes[id].alive {
+                continue;
+            }
+            let mut best: Option<(f64, usize)> = None;
+            for (ci, c) in clusters.iter().enumerate() {
+                let pts: Vec<GeoPoint> = c
+                    .members
+                    .iter()
+                    .filter(|&&m| self.nodes[m].alive)
+                    .map(|&m| self.nodes[m].device.location)
+                    .collect();
+                if pts.is_empty() {
+                    continue;
+                }
+                let d = equirectangular_km(self.nodes[id].device.location, centroid(&pts));
+                if best.map_or(true, |(bd, _)| d < bd) {
+                    best = Some((d, ci));
+                }
+            }
+            if let Some((_, ci)) = best {
+                self.net.send(
+                    MsgKind::Assignment,
+                    None,
+                    Some(&self.nodes[id].device),
+                    ASSIGNMENT_BYTES,
+                    round,
+                );
+                let cluster = &mut clusters[ci];
+                cluster.members.push(id);
+                cluster.monitor.register(id, round);
+                let cid = cluster.id;
+                self.refresh_cluster_eval(cluster);
+                state.pending_join.remove(&id);
+                notes.push(ScenarioNote {
+                    round,
+                    what: format!("node {id} admitted to cluster {cid} by proximity"),
+                });
+            }
+        }
+
+        // --- health scan: clusters whose detected-live fraction collapsed
+        //     (or whose members' data drifted) need re-formation ---
+        let mut affected: Vec<usize> = Vec::new();
+        for (ci, c) in clusters.iter().enumerate() {
+            if c.members.is_empty() {
+                continue;
+            }
+            let down = c
+                .members
+                .iter()
+                .filter(|&&m| {
+                    !self.nodes[m].alive
+                        && c.monitor.state(m, round) != HealthState::Alive
+                })
+                .count();
+            let live_frac = 1.0 - down as f64 / c.members.len() as f64;
+            let drifted = c.members.iter().any(|m| state.drifted.contains(m));
+            if live_frac < state.regulation.min_live_frac || drifted {
+                affected.push(ci);
+            }
+        }
+        if affected.is_empty() || !state.may_recluster(round) {
+            return Ok((0, elections));
+        }
+
+        // --- proximity evaluation re-forms the affected clusters ---
+        let mut pool: Vec<usize> = Vec::new();
+        for &ci in &affected {
+            for &m in &clusters[ci].members.clone() {
+                if self.nodes[m].alive {
+                    pool.push(m);
+                } else {
+                    state.unassigned.insert(m);
+                }
+                state.drifted.remove(&m);
+            }
+        }
+        // stranded joiners (no live cluster existed to admit them above)
+        let stranded: Vec<usize> = state
+            .pending_join
+            .iter()
+            .copied()
+            .filter(|&id| self.nodes[id].alive)
+            .collect();
+        for id in stranded {
+            state.pending_join.remove(&id);
+            state.unassigned.remove(&id);
+            pool.push(id);
+        }
+        pool.sort_unstable();
+        pool.dedup();
+        if pool.is_empty() {
+            notes.push(ScenarioNote {
+                round,
+                what: format!(
+                    "{} cluster(s) fully dark; re-clustering deferred",
+                    affected.len()
+                ),
+            });
+            return Ok((0, elections));
+        }
+
+        let k_new = affected.len().min(pool.len());
+        let mut crng = self.rng.derive(0x5EC1 ^ round as u64);
+        let mut summaries = Vec::with_capacity(pool.len());
+        for &id in &pool {
+            let msg = self.summary_for(id);
+            let envelope = msg.seal(&self.root_key, &mut crng);
+            self.net.send(
+                MsgKind::Summary,
+                Some(&self.nodes[id].device),
+                None,
+                summary_payload_bytes(envelope.len()),
+                round,
+            );
+            summaries.push(crate::clustering::NodeSummary {
+                node_id: msg.node_id,
+                data_score: msg.data_score,
+                perf_index: msg.perf_index,
+                location: GeoPoint::new(msg.lat_deg, msg.lon_deg),
+            });
+        }
+        let ccfg = crate::clustering::ClusterConfig {
+            n_clusters: k_new,
+            ..self.cfg.cluster.clone()
+        };
+        let clustering = crate::clustering::form_clusters(&summaries, &ccfg);
+        let groups = clustering.members(&summaries);
+
+        for (gi, &ci) in affected.iter().enumerate() {
+            let member_ids = groups.get(gi).cloned().unwrap_or_default();
+            for &id in &member_ids {
+                self.net.send(
+                    MsgKind::Assignment,
+                    None,
+                    Some(&self.nodes[id].device),
+                    ASSIGNMENT_BYTES,
+                    round,
+                );
+                state.unassigned.remove(&id);
+            }
+            let cid = clusters[ci].id;
+            let mut fresh = self.build_cluster(cid, member_ids, round)?;
+            elections += fresh.elections;
+            fresh.elections += clusters[ci].elections;
+            fresh.updates += clusters[ci].updates;
+            clusters[ci] = fresh;
+        }
+        state.note_recluster(round);
+        notes.push(ScenarioNote {
+            round,
+            what: format!(
+                "re-clustered {} cluster(s) over {} live node(s) into {} group(s)",
+                affected.len(),
+                pool.len(),
+                k_new
+            ),
+        });
+        Ok((1, elections))
     }
 
     /// One cluster's SCALE round. Returns accounting for the round record.
@@ -786,6 +1253,8 @@ impl<'a> Simulation<'a> {
                 metrics,
                 live_nodes: alive.len(),
                 elections: 0,
+                scenario_events: 0,
+                reclusterings: 0,
             });
         }
 
@@ -842,6 +1311,7 @@ impl<'a> Simulation<'a> {
             edge_cost_usd: 0.0,
             server_cpu_s: server.cpu_seconds,
             wall_ms: wall.elapsed().as_secs_f64() * 1e3,
+            scenario: Vec::new(),
         }
     }
 
@@ -1026,6 +1496,8 @@ impl<'a> Simulation<'a> {
                 metrics,
                 live_nodes: self.nodes.iter().filter(|n| n.alive).count(),
                 elections: 0,
+                scenario_events: 0,
+                reclusterings: 0,
             });
         }
 

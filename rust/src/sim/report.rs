@@ -24,6 +24,17 @@ pub struct RoundRecord {
     pub live_nodes: usize,
     /// Driver elections triggered this round.
     pub elections: u64,
+    /// Scenario events applied at this round boundary.
+    pub scenario_events: u64,
+    /// Cluster re-formations performed by the self-regulation loop.
+    pub reclusterings: u64,
+}
+
+/// One scenario / self-regulation action recorded in the run log.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ScenarioNote {
+    pub round: usize,
+    pub what: String,
 }
 
 /// One cluster's end-of-run summary (a Table-1 row).
@@ -60,11 +71,21 @@ pub struct RunReport {
     pub server_cpu_s: f64,
     /// Wall-clock of the simulation itself.
     pub wall_ms: f64,
+    /// Scenario / self-regulation timeline (empty for plain runs).
+    pub scenario: Vec<ScenarioNote>,
 }
 
 impl RunReport {
     pub fn total_updates(&self) -> u64 {
         self.clusters.iter().map(|c| c.updates).sum()
+    }
+
+    pub fn total_reclusterings(&self) -> u64 {
+        self.rounds.iter().map(|r| r.reclusterings).sum()
+    }
+
+    pub fn total_elections(&self) -> u64 {
+        self.clusters.iter().map(|c| c.elections).sum()
     }
 
     pub fn total_latency_ms(&self) -> f64 {
@@ -127,7 +148,7 @@ impl RunReport {
         out
     }
 
-    /// JSON export for downstream tooling / EXPERIMENTS.md generation.
+    /// JSON export for downstream tooling / experiment-log generation.
     pub fn to_json(&self) -> Value {
         let mut v = Value::obj();
         v.set("mode", Value::Str(self.mode.clone()));
@@ -167,9 +188,13 @@ impl RunReport {
                 let mut rv = Value::obj();
                 rv.set("round", Value::Num(r.round as f64));
                 rv.set("updates", Value::Num(r.updates as f64));
+                rv.set("cum_updates", Value::Num(r.cum_updates as f64));
                 rv.set("mean_loss", Value::Num(r.mean_loss));
                 rv.set("latency_ms", Value::Num(r.latency_ms));
                 rv.set("live_nodes", Value::Num(r.live_nodes as f64));
+                rv.set("elections", Value::Num(r.elections as f64));
+                rv.set("scenario_events", Value::Num(r.scenario_events as f64));
+                rv.set("reclusterings", Value::Num(r.reclusterings as f64));
                 if let Some(m) = r.metrics {
                     rv.set("accuracy", Value::Num(m.accuracy));
                     rv.set("f1", Value::Num(m.f1));
@@ -187,7 +212,28 @@ impl RunReport {
             ledger.set(&format!("{kind:?}"), kv);
         }
         v.set("ledger", ledger);
+        let scenario: Vec<Value> = self
+            .scenario
+            .iter()
+            .map(|n| {
+                let mut nv = Value::obj();
+                nv.set("round", Value::Num(n.round as f64));
+                nv.set("what", Value::Str(n.what.clone()));
+                nv
+            })
+            .collect();
+        v.set("scenario", Value::Arr(scenario));
         v
+    }
+
+    /// Canonical serialization with wall-clock excluded: two runs of the
+    /// same `(config, seed, scenario)` must produce identical
+    /// fingerprints — the determinism contract the property tests and the
+    /// parallel sweep verifier lean on.
+    pub fn fingerprint(&self) -> String {
+        let mut v = self.to_json();
+        v.set("wall_ms", Value::Num(0.0));
+        v.to_string_compact()
     }
 }
 
@@ -208,6 +254,7 @@ mod tests {
                     metrics: Some(ModelMetrics { accuracy: 0.8, ..Default::default() }),
                     live_nodes: 100,
                     elections: 10,
+                    ..Default::default()
                 },
                 RoundRecord {
                     round: 1,
@@ -218,6 +265,8 @@ mod tests {
                     metrics: None,
                     live_nodes: 100,
                     elections: 0,
+                    scenario_events: 2,
+                    reclusterings: 1,
                 },
             ],
             clusters: vec![
@@ -260,6 +309,23 @@ mod tests {
         let v = crate::util::json::parse(&j).unwrap();
         assert_eq!(v.get("total_updates").unwrap().as_f64(), Some(46.0));
         assert_eq!(v.get("clusters").unwrap().as_arr().unwrap().len(), 2);
-        assert_eq!(v.get("rounds").unwrap().as_arr().unwrap().len(), 2);
+        let rounds = v.get("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rounds.len(), 2);
+        assert_eq!(rounds[1].get("reclusterings").unwrap().as_f64(), Some(1.0));
+        assert_eq!(rounds[1].get("scenario_events").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn fingerprint_ignores_wall_clock_only() {
+        let mut a = report();
+        let mut b = report();
+        a.wall_ms = 12.5;
+        b.wall_ms = 99.0;
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.scenario.push(ScenarioNote { round: 1, what: "churn".into() });
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut c = report();
+        c.rounds[0].updates += 1;
+        assert_ne!(a.fingerprint(), c.fingerprint());
     }
 }

@@ -26,7 +26,7 @@ fn esc(field: &str) -> String {
 pub fn round_csv(report: &RunReport) -> String {
     let mut out = String::from(
         "round,updates,cum_updates,mean_loss,latency_ms,live_nodes,elections,\
-         accuracy,precision,recall,f1,roc_auc\n",
+         scenario_events,reclusterings,accuracy,precision,recall,f1,roc_auc\n",
     );
     for r in &report.rounds {
         let metrics = match r.metrics {
@@ -37,7 +37,7 @@ pub fn round_csv(report: &RunReport) -> String {
             None => ",,,,".to_string(),
         };
         out.push_str(&format!(
-            "{},{},{},{:.6},{:.3},{},{},{}\n",
+            "{},{},{},{:.6},{:.3},{},{},{},{},{}\n",
             r.round + 1,
             r.updates,
             r.cum_updates,
@@ -45,6 +45,8 @@ pub fn round_csv(report: &RunReport) -> String {
             r.latency_ms,
             r.live_nodes,
             r.elections,
+            r.scenario_events,
+            r.reclusterings,
             metrics
         ));
     }
@@ -159,6 +161,7 @@ mod tests {
                     }),
                     live_nodes: 20,
                     elections: 4,
+                    ..Default::default()
                 },
                 RoundRecord { round: 1, updates: 2, cum_updates: 6, ..Default::default() },
             ],

@@ -1,12 +1,14 @@
-//! Zero-dependency substrates: PRNG, JSON, statistics, property testing.
+//! Zero-dependency substrates: PRNG, JSON, TOML, statistics, property
+//! testing.
 //!
 //! The offline build image vendors only the `xla` crate's own dependency
-//! closure (no `rand`, `serde`, `proptest`, …), so the substrates every
-//! other module leans on are implemented here and unit-tested in place.
-//! See DESIGN.md §2 (substitutions).
+//! closure (no `rand`, `serde`, `proptest`, `toml`, …), so the substrates
+//! every other module leans on are implemented here and unit-tested in
+//! place. See DESIGN.md §2 (substitutions).
 
 pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod timer;
+pub mod toml;

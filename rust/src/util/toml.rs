@@ -1,0 +1,229 @@
+//! Minimal TOML subset parser producing [`super::json::Value`] trees.
+//!
+//! Scenario files and config overrides are authored in TOML (comments and
+//! section headers read better than JSON for hand-edited timelines), but
+//! the offline build image vendors no `toml` crate, so — like
+//! `util::json` — the subset we need is implemented here:
+//!
+//! * `key = value` pairs with bare keys (`[A-Za-z0-9_-]+`);
+//! * `[table]` and `[[array-of-tables]]` headers (one level deep);
+//! * values that are also valid JSON: basic strings with escapes,
+//!   integers, floats, booleans, and single-line arrays — these are
+//!   delegated to the JSON value parser — plus `'literal strings'`;
+//! * `#` comments and blank lines.
+//!
+//! Unsupported TOML (dotted keys, dates, multi-line strings/arrays,
+//! inline tables, `1_000` separators) and duplicate keys/tables are
+//! rejected with a line-numbered error rather than mis-parsed. The output shape matches what
+//! `config::SimConfig::from_json` and `scenario::Scenario::from_value`
+//! consume: `[[event]]` sections become a `Value::Arr` under `"event"`.
+
+use anyhow::{bail, Context, Result};
+
+use super::json::{self, Value};
+
+/// `(header, pairs)`: header `None` = root scope, else `(name, is_array)`.
+type Section = (Option<(String, bool)>, Vec<(String, Value)>);
+
+/// Parse a TOML-subset document into a JSON value tree.
+pub fn parse(input: &str) -> Result<Value> {
+    let mut sections: Vec<Section> = vec![(None, Vec::new())];
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw);
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let at = |msg: String| format!("line {}: {}", lineno + 1, msg);
+        if let Some(inner) = line.strip_prefix("[[") {
+            let name = inner
+                .strip_suffix("]]")
+                .with_context(|| at("unterminated [[table]] header".into()))?
+                .trim();
+            check_key(name).map_err(|e| anyhow::anyhow!(at(e)))?;
+            sections.push((Some((name.to_string(), true)), Vec::new()));
+        } else if let Some(inner) = line.strip_prefix('[') {
+            let name = inner
+                .strip_suffix(']')
+                .with_context(|| at("unterminated [table] header".into()))?
+                .trim();
+            check_key(name).map_err(|e| anyhow::anyhow!(at(e)))?;
+            sections.push((Some((name.to_string(), false)), Vec::new()));
+        } else {
+            let (key, rest) = line
+                .split_once('=')
+                .with_context(|| at("expected `key = value`".into()))?;
+            let key = key.trim();
+            check_key(key).map_err(|e| anyhow::anyhow!(at(e)))?;
+            let value = parse_value(rest.trim()).map_err(|e| anyhow::anyhow!(at(e)))?;
+            let section = sections.last_mut().unwrap();
+            if section.1.iter().any(|(k, _)| k == key) {
+                bail!("{}", at(format!("duplicate key '{key}'")));
+            }
+            section.1.push((key.to_string(), value));
+        }
+    }
+
+    // Assemble: root pairs directly, [table] as nested objects, repeated
+    // [[table]] headers collected into one array per name.
+    let mut root = Value::obj();
+    let mut arrays: Vec<(String, Vec<Value>)> = Vec::new();
+    for (header, pairs) in sections {
+        match header {
+            None => {
+                for (k, v) in pairs {
+                    root.set(&k, v);
+                }
+            }
+            Some((name, false)) => {
+                if root.get(&name).is_some() || arrays.iter().any(|(n, _)| *n == name) {
+                    bail!("duplicate table [{name}]");
+                }
+                root.set(&name, Value::Obj(pairs));
+            }
+            Some((name, true)) => {
+                if root.get(&name).is_some() {
+                    bail!("[[{name}]] conflicts with an earlier [{name}] or key");
+                }
+                match arrays.iter_mut().find(|(n, _)| *n == name) {
+                    Some((_, items)) => items.push(Value::Obj(pairs)),
+                    None => arrays.push((name, vec![Value::Obj(pairs)])),
+                }
+            }
+        }
+    }
+    for (name, items) in arrays {
+        root.set(&name, Value::Arr(items));
+    }
+    Ok(root)
+}
+
+/// Bare keys only: enough for config fields and section names.
+fn check_key(key: &str) -> std::result::Result<(), String> {
+    if key.is_empty() {
+        return Err("empty key".into());
+    }
+    if !key
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+    {
+        return Err(format!("unsupported key '{key}' (bare keys only)"));
+    }
+    Ok(())
+}
+
+/// Drop a trailing `#` comment, honouring quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str: Option<char> = None;
+    for (i, c) in line.char_indices() {
+        match in_str {
+            Some(q) => {
+                // basic strings may escape the quote; literal strings may not
+                if c == q && (q == '\'' || !escaped(&line[..i])) {
+                    in_str = None;
+                }
+            }
+            None => match c {
+                '"' | '\'' => in_str = Some(c),
+                '#' => return &line[..i],
+                _ => {}
+            },
+        }
+    }
+    line
+}
+
+/// Whether the next character after `prefix` is backslash-escaped
+/// (an odd run of trailing backslashes; `\\` escapes itself).
+fn escaped(prefix: &str) -> bool {
+    prefix.chars().rev().take_while(|&c| c == '\\').count() % 2 == 1
+}
+
+/// Parse one scalar / array. TOML scalars in this subset are a superset
+/// of JSON only through `'literal strings'`; everything else delegates.
+fn parse_value(text: &str) -> std::result::Result<Value, String> {
+    if text.is_empty() {
+        return Err("missing value".into());
+    }
+    if text.len() >= 2 && text.starts_with('\'') && text.ends_with('\'') {
+        return Ok(Value::Str(text[1..text.len() - 1].to_string()));
+    }
+    json::parse(text).map_err(|e| format!("bad value `{text}`: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_root_keys() {
+        let v = parse(
+            "name = \"churn\"\nseed = 42\nfrac = 0.25\nflag = true\nids = [1, 2, 3]\n",
+        )
+        .unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("churn"));
+        assert_eq!(v.get("seed").unwrap().as_usize(), Some(42));
+        assert_eq!(v.get("frac").unwrap().as_f64(), Some(0.25));
+        assert_eq!(v.get("flag").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("ids").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn tables_and_array_of_tables() {
+        let v = parse(
+            "a = 1\n[regulation]\nmin_live_frac = 0.5\n\n[[event]]\nround = 3\n\
+             kind = \"leave\"\n[[event]]\nround = 5\nkind = \"join\"\n",
+        )
+        .unwrap();
+        assert_eq!(v.at(&["regulation", "min_live_frac"]).unwrap().as_f64(), Some(0.5));
+        let events = v.get("event").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get("round").unwrap().as_usize(), Some(3));
+        assert_eq!(events[1].get("kind").unwrap().as_str(), Some("join"));
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn comments_and_literal_strings() {
+        let v = parse(
+            "# full-line comment\nname = 'lit#eral'  # trailing\nhash = \"a#b\"\n",
+        )
+        .unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("lit#eral"));
+        assert_eq!(v.get("hash").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("no equals here").is_err());
+        assert!(parse("[unclosed\nx = 1").is_err());
+        assert!(parse("a.b = 1").is_err());
+        assert!(parse("k = 1_000").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("[t]\nx = 1\n[t]\ny = 2").is_err());
+        assert!(parse("[t]\nx = 1\n[[t]]\ny = 2").is_err());
+        // duplicate keys are an error, not first-wins / last-wins
+        assert!(parse("a = 1\na = 2").is_err());
+        assert!(parse("[t]\nx = 1\nx = 2").is_err());
+        assert!(parse("[[t]]\nx = 1\nx = 2").is_err());
+    }
+
+    #[test]
+    fn escaped_backslash_before_closing_quote() {
+        // "dir\\" ends with an escaped backslash; the quote still closes
+        // the string and the trailing comment is stripped
+        let v = parse("p = \"dir\\\\\"  # trailing\n").unwrap();
+        assert_eq!(v.get("p").unwrap().as_str(), Some("dir\\"));
+        // an escaped quote stays inside the string
+        let v = parse("q = \"a\\\"b\"\n").unwrap();
+        assert_eq!(v.get("q").unwrap().as_str(), Some("a\"b"));
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers() {
+        let v = parse("a = -3\nb = 1.5e2\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(-3.0));
+        assert_eq!(v.get("b").unwrap().as_f64(), Some(150.0));
+    }
+}

@@ -3,7 +3,9 @@
 //! set must load, validate and execute.
 //!
 //! Requires `make artifacts` to have run (skips cleanly otherwise so
-//! `cargo test` stays green on a fresh checkout).
+//! `cargo test` stays green on a fresh checkout) and a build with the
+//! `pjrt` feature (the whole file is compiled out otherwise).
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 use std::rc::Rc;

@@ -261,3 +261,113 @@ fn seeds_produce_distinct_but_valid_runs() {
     unique.dedup();
     assert!(unique.len() >= 2, "seeds produced identical runs: {outcomes:?}");
 }
+
+#[test]
+fn scenario_runs_are_byte_identical_given_config_and_seed() {
+    // The determinism contract extended to active churn scenarios: the
+    // same (config, seed, scenario) must yield byte-identical RunReports
+    // (fingerprint == canonical JSON minus wall-clock).
+    let compute = NativeSvm::new(NativeSvm::default_dims());
+    let scenario = scale_fl::scenario::Scenario::from_toml(
+        "[regulation]\nmin_live_frac = 0.7\ncooldown = 1\n\
+         [[event]]\nround = 1\nkind = \"leave\"\nfrac = 0.3\nduration = 2\n\
+         [[event]]\nround = 2\nkind = \"bandwidth\"\nfactor = 0.5\nduration = 2\n\
+         [[event]]\nround = 3\nkind = \"drift\"\nfrac = 0.2\nflip_frac = 0.3\n",
+    )
+    .unwrap();
+    check(
+        &Config { cases: 8, seed: 0xD0_0D, max_size: 8 },
+        "scenario determinism",
+        |g| {
+            let mut cfg = random_cfg(g);
+            cfg.dataset_malignant = (cfg.dataset_samples as f64 * 0.37) as usize;
+            cfg.rounds = cfg.rounds.max(5); // let every event fire
+            let cfg = cfg.normalized();
+            let run = || {
+                let mut sim = Simulation::new(cfg.clone(), &compute)
+                    .map_err(|e| format!("setup: {e}"))?;
+                let rep = sim
+                    .run_scale_scenario(&scenario)
+                    .map_err(|e| format!("run: {e}"))?;
+                Ok::<String, String>(rep.fingerprint())
+            };
+            let (a, b) = (run()?, run()?);
+            if a != b {
+                return Err("two scenario runs diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn netsim_ledger_totals_match_per_message_sums() {
+    // Payload accounting: with the full message log retained, per-kind
+    // aggregate (count, bytes, latency, energy) must equal the sums over
+    // the individual messages.
+    use scale_fl::devices::{generate_fleet, FleetConfig};
+    use scale_fl::netsim::{NetConfig, Network};
+
+    check(
+        &Config { cases: 40, seed: 0x1ED6E2, max_size: 64 },
+        "netsim accounting",
+        |g| {
+            let fleet = generate_fleet(&FleetConfig {
+                n_devices: 12,
+                n_metros: 3,
+                ..Default::default()
+            });
+            let mut net = Network::new(NetConfig::default(), g.rng.next_u64(), true);
+            let kinds = [
+                MsgKind::Summary,
+                MsgKind::PeerExchange,
+                MsgKind::DriverCollect,
+                MsgKind::GlobalUpdate,
+                MsgKind::Heartbeat,
+                MsgKind::CheckpointLocal,
+            ];
+            let n_msgs = g.usize_in(1, 200);
+            for round in 0..n_msgs {
+                let kind = kinds[g.rng.index(kinds.len())];
+                let from = g.rng.index(fleet.len());
+                let to = g.rng.index(fleet.len());
+                let bytes = g.rng.index(100_000) as u64;
+                // mix in cloud endpoints (None) on both sides
+                let fd = (from % 4 != 0).then_some(&fleet[from]);
+                let td = (to % 5 != 0).then_some(&fleet[to]);
+                if g.rng.chance(0.15) {
+                    // window some sends under bandwidth degradation
+                    net.set_bandwidth_degradation(g.f64_in(0.1, 1.0));
+                }
+                net.send(kind, fd, td, bytes, round % 7);
+            }
+            let log = net.ledger.log().to_vec();
+            if log.len() != n_msgs {
+                return Err(format!("log kept {} of {n_msgs}", log.len()));
+            }
+            for kind in kinds {
+                let t = net.ledger.totals(kind);
+                let count = log.iter().filter(|m| m.kind == kind).count() as u64;
+                let bytes: u64 =
+                    log.iter().filter(|m| m.kind == kind).map(|m| m.bytes).sum();
+                let latency: f64 =
+                    log.iter().filter(|m| m.kind == kind).map(|m| m.latency_ms).sum();
+                let energy: f64 =
+                    log.iter().filter(|m| m.kind == kind).map(|m| m.energy_j).sum();
+                if t.count != count || t.bytes != bytes {
+                    return Err(format!(
+                        "{kind:?}: totals ({}, {}) != log sums ({count}, {bytes})",
+                        t.count, t.bytes
+                    ));
+                }
+                if (t.latency_ms - latency).abs() > 1e-9 * (1.0 + latency.abs()) {
+                    return Err(format!("{kind:?}: latency {} != {latency}", t.latency_ms));
+                }
+                if (t.energy_j - energy).abs() > 1e-9 * (1.0 + energy.abs()) {
+                    return Err(format!("{kind:?}: energy {} != {energy}", t.energy_j));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,18 +1,27 @@
 //! Integration: the full SCALE system over the PJRT backend — MLP model
 //! family, extension combinations (quantized exchange, secure
 //! aggregation), config round trips through the CLI surface, and trace
-//! exports. Skips PJRT-dependent cases when artifacts are absent.
+//! exports. Skips PJRT-dependent cases when artifacts are absent or the
+//! `pjrt` feature is off.
 
+#[cfg(feature = "pjrt")]
 use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
 use scale_fl::config::{Partition, SimConfig};
+#[cfg(feature = "pjrt")]
 use scale_fl::netsim::MsgKind;
-use scale_fl::runtime::compute::{NativeSvm, PjrtModel};
+use scale_fl::runtime::compute::NativeSvm;
+#[cfg(feature = "pjrt")]
+use scale_fl::runtime::compute::PjrtModel;
+#[cfg(feature = "pjrt")]
 use scale_fl::runtime::manifest::ModelKind;
+#[cfg(feature = "pjrt")]
 use scale_fl::runtime::Runtime;
 use scale_fl::sim::Simulation;
 
+#[cfg(feature = "pjrt")]
 fn runtime() -> Option<Rc<Runtime>> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     dir.join("manifest.json")
@@ -35,6 +44,7 @@ fn small_cfg() -> SimConfig {
     .normalized()
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn mlp_model_family_runs_scale_through_pjrt() {
     let Some(rt) = runtime() else {
@@ -55,6 +65,7 @@ fn mlp_model_family_runs_scale_through_pjrt() {
     assert_eq!(payload, 545 * 4 + 64);
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_and_native_svm_agree_on_protocol_outputs() {
     let Some(rt) = runtime() else {
@@ -101,6 +112,7 @@ fn extension_matrix_native() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn skewed_mlp_with_failures_and_secagg() {
     let Some(rt) = runtime() else {
