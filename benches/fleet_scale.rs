@@ -1,0 +1,71 @@
+//! Bench: fleet-scale wall-clock of the cluster-parallel round engine.
+//!
+//! Sweeps 1k / 4k / 10k-node fleets across cluster widths and thread
+//! counts through `scale_fl::bench::measure_fleet` (the same routine
+//! behind `scale fleet bench`, so the CSV rows share one schema),
+//! asserting byte-identical `RunReport` fingerprints and writing a CSV
+//! (`SCALE_FLEET_CSV`, default `fleet_scale.csv`) that the CI leg
+//! uploads as an artifact.
+//!
+//! The full 10k sweep is gated behind `SCALE_FLEET_FULL=1` so the
+//! default `cargo bench` stays laptop-friendly; 1k and 4k always run.
+
+use scale_fl::bench::{fleet_csv_row, measure_fleet, section, FLEET_CSV_HEADER};
+use scale_fl::config::SimConfig;
+
+fn main() {
+    // auto policy lives in one place: SimConfig::effective_threads
+    let auto = SimConfig::fleet_preset(1_000, 16).effective_threads();
+    let full = matches!(std::env::var("SCALE_FLEET_FULL").as_deref(), Ok("1"));
+
+    // (nodes, clusters, rounds): cluster width doubles with fleet size so
+    // per-cluster work stays roughly constant
+    let mut sweeps: Vec<(usize, usize, usize)> = vec![
+        (1_000, 16, 6),
+        (1_000, 64, 6),
+        (4_000, 64, 6),
+        (4_000, 256, 6),
+    ];
+    if full {
+        sweeps.push((10_000, 128, 4));
+        sweeps.push((10_000, 256, 4));
+    }
+    let mut thread_counts = vec![2];
+    if auto > 2 {
+        thread_counts.push(auto);
+    }
+
+    let mut rows: Vec<String> = Vec::new();
+    section("fleet-scale: sequential vs cluster-parallel (same fingerprint)");
+    println!("nodes  | clusters | threads | seq s   | par s   | speedup | identical");
+    for (nodes, clusters, rounds) in sweeps {
+        let mut cfg = SimConfig::fleet_preset(nodes, clusters);
+        cfg.rounds = rounds;
+        for &threads in &thread_counts {
+            let m = measure_fleet(&cfg, threads).expect("fleet measurement");
+            println!(
+                "{nodes:>6} | {clusters:>8} | {threads:>7} | {:>7.2} | {:>7.2} | {:>6.2}x | {}",
+                m.seq_s,
+                m.par_s,
+                m.speedup(),
+                m.identical
+            );
+            assert!(
+                m.identical,
+                "fingerprint diverged at {nodes} nodes / {clusters} clusters / {threads} threads"
+            );
+            rows.push(fleet_csv_row(&cfg, &m));
+        }
+    }
+
+    let csv_path =
+        std::env::var("SCALE_FLEET_CSV").unwrap_or_else(|_| "fleet_scale.csv".into());
+    let mut csv = String::from(FLEET_CSV_HEADER);
+    csv.push('\n');
+    for r in &rows {
+        csv.push_str(r);
+        csv.push('\n');
+    }
+    std::fs::write(&csv_path, csv).expect("writing fleet_scale csv");
+    println!("\ncsv written to {csv_path}");
+}

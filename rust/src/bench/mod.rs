@@ -6,6 +6,13 @@
 
 use std::time::Instant;
 
+use anyhow::Result;
+
+use crate::config::SimConfig;
+use crate::runtime::compute::NativeSvm;
+use crate::runtime::manifest::ModelKind;
+use crate::sim::report::RunReport;
+use crate::sim::Simulation;
 use crate::util::stats::percentile;
 
 /// Timing summary over all measured iterations.
@@ -47,6 +54,70 @@ pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
     }
 }
 
+/// One sequential-vs-parallel fleet measurement — the shared core of
+/// `scale fleet bench` and `benches/fleet_scale.rs`, so the two emit
+/// identical CSV rows and apply the same determinism check.
+pub struct FleetMeasurement {
+    pub threads: usize,
+    pub seq_s: f64,
+    pub par_s: f64,
+    /// `RunReport::fingerprint` equality between the two runs — the
+    /// parallel engine's determinism contract. Callers should hard-fail
+    /// when false.
+    pub identical: bool,
+    /// The parallel run's report.
+    pub report: RunReport,
+}
+
+impl FleetMeasurement {
+    pub fn speedup(&self) -> f64 {
+        self.seq_s / self.par_s.max(1e-9)
+    }
+}
+
+/// Shared CSV schema for fleet measurements.
+pub const FLEET_CSV_HEADER: &str =
+    "nodes,clusters,rounds,threads,seq_s,par_s,speedup,fingerprint_match,updates,accuracy";
+
+/// One CSV row under [`FLEET_CSV_HEADER`].
+pub fn fleet_csv_row(cfg: &SimConfig, m: &FleetMeasurement) -> String {
+    format!(
+        "{},{},{},{},{:.4},{:.4},{:.3},{},{},{:.4}",
+        cfg.n_nodes,
+        cfg.n_clusters,
+        cfg.rounds,
+        m.threads,
+        m.seq_s,
+        m.par_s,
+        m.speedup(),
+        m.identical,
+        m.report.total_updates(),
+        m.report.final_metrics.accuracy
+    )
+}
+
+/// Run `cfg` once at `threads = 1` and once at `threads`, over the
+/// native backend, timing both runs and comparing their fingerprints.
+pub fn measure_fleet(cfg: &SimConfig, threads: usize) -> Result<FleetMeasurement> {
+    anyhow::ensure!(
+        cfg.model == ModelKind::Svm,
+        "fleet measurement is native-only (SVM model)"
+    );
+    let compute = NativeSvm::new(NativeSvm::default_dims());
+    let run_at = |threads: usize| -> Result<(f64, RunReport)> {
+        let mut c = cfg.clone();
+        c.threads = threads;
+        let t0 = Instant::now();
+        let mut sim = Simulation::new_parallel(c, &compute)?;
+        let report = sim.run_scale()?;
+        Ok((t0.elapsed().as_secs_f64(), report))
+    };
+    let (seq_s, seq_report) = run_at(1)?;
+    let (par_s, report) = run_at(threads)?;
+    let identical = seq_report.fingerprint() == report.fingerprint();
+    Ok(FleetMeasurement { threads, seq_s, par_s, identical, report })
+}
+
 /// Print one named measurement row.
 pub fn report(name: &str, t: &Timing) {
     println!("  {name:<44} {}", t.format());
@@ -60,6 +131,32 @@ pub fn section(title: &str) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fleet_measurement_is_identical_and_csv_schema_matches() {
+        let cfg = SimConfig {
+            n_nodes: 12,
+            n_clusters: 3,
+            rounds: 3,
+            local_epochs: 1,
+            eval_every: 100,
+            dataset_samples: 240,
+            dataset_malignant: 90,
+            seed: 3,
+            ..Default::default()
+        }
+        .normalized();
+        let m = measure_fleet(&cfg, 2).unwrap();
+        assert!(m.identical);
+        assert!(m.seq_s > 0.0 && m.par_s > 0.0);
+        assert!(m.speedup() > 0.0);
+        let row = fleet_csv_row(&cfg, &m);
+        assert_eq!(
+            row.split(',').count(),
+            FLEET_CSV_HEADER.split(',').count(),
+            "row/schema drift: {row}"
+        );
+    }
 
     #[test]
     fn bench_produces_ordered_stats() {

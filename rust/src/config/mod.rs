@@ -82,6 +82,17 @@ pub struct SimConfig {
     pub fleet: FleetConfig,
     pub net: NetConfig,
 
+    // --- execution
+    /// Worker threads for the cluster-parallel round engine: clusters fan
+    /// out across `std::thread::scope` workers each round, with
+    /// per-cluster RNG child streams and private traffic sub-ledgers
+    /// merged in cluster-id order at the round barrier, so the
+    /// `RunReport::fingerprint` is byte-identical for any value. `1` =
+    /// fully sequential, `0` = auto (available parallelism). Values > 1
+    /// need a `Send + Sync` backend (`Simulation::new_parallel` over
+    /// `NativeSvm`); PJRT stays single-threaded by design.
+    pub threads: usize,
+
     // --- bookkeeping
     pub seed: u64,
     /// Evaluate global metrics every `eval_every` rounds (and final).
@@ -123,6 +134,7 @@ impl Default for SimConfig {
             node_recovery_prob: 0.7,
             fleet: FleetConfig::default(),
             net: NetConfig::default(),
+            threads: 1,
             seed: 42,
             eval_every: 5,
             dataset_samples: crate::data::wdbc::N_SAMPLES,
@@ -136,6 +148,51 @@ impl SimConfig {
     /// The paper's Table-1 setup.
     pub fn paper_table1() -> SimConfig {
         SimConfig::default()
+    }
+
+    /// Large-fleet preset: `n_nodes` over `n_clusters` with the dataset
+    /// sized to keep the paper's ~6 samples/client and the cadence tuned
+    /// so 1k–10k-node federations are bench-friendly (no mid-run global
+    /// evals; the hot loop is pure cluster work). `threads = 0` (auto)
+    /// so the cluster-parallel engine uses every core by default.
+    pub fn fleet_preset(n_nodes: usize, n_clusters: usize) -> SimConfig {
+        let samples = (n_nodes * 6).max(crate::data::wdbc::N_SAMPLES);
+        SimConfig {
+            n_nodes,
+            n_clusters,
+            rounds: 10,
+            local_epochs: 3,
+            eval_every: 1_000_000, // final round only
+            dataset_samples: samples,
+            dataset_malignant: (samples as f64 * 0.37) as usize,
+            threads: 0,
+            ..Default::default()
+        }
+        .normalized()
+    }
+
+    /// Resolve the configured round-engine worker count: `0` = auto
+    /// (available cores), anything else verbatim. The single source of
+    /// truth for the `threads` policy — the engine, the CLI and the
+    /// fleet bench all resolve through here.
+    pub fn effective_threads(&self) -> usize {
+        match self.threads {
+            0 => std::thread::available_parallelism().map_or(1, |n| n.get()),
+            t => t,
+        }
+    }
+
+    /// Named presets for the CLI (`--preset`).
+    pub fn preset(name: &str) -> Result<SimConfig> {
+        match name {
+            "paper" => Ok(SimConfig::paper_table1()),
+            "fleet-1k" => Ok(SimConfig::fleet_preset(1_000, 16)),
+            "fleet-4k" => Ok(SimConfig::fleet_preset(4_000, 64)),
+            "fleet-10k" => Ok(SimConfig::fleet_preset(10_000, 256)),
+            other => bail!(
+                "unknown preset '{other}' (paper, fleet-1k, fleet-4k, fleet-10k)"
+            ),
+        }
     }
 
     /// Consistency checks; call before running.
@@ -242,6 +299,7 @@ impl SimConfig {
         v.set("secure_aggregation", Value::Bool(self.secure_aggregation));
         v.set("node_failure_prob", Value::Num(self.node_failure_prob));
         v.set("node_recovery_prob", Value::Num(self.node_recovery_prob));
+        v.set("threads", Value::Num(self.threads as f64));
         v.set("seed", Value::Num(self.seed as f64));
         v.set("eval_every", Value::Num(self.eval_every as f64));
         v.set("dataset_samples", Value::Num(self.dataset_samples as f64));
@@ -335,6 +393,9 @@ impl SimConfig {
         }
         if let Some(x) = num("node_recovery_prob") {
             cfg.node_recovery_prob = x;
+        }
+        if let Some(x) = int("threads") {
+            cfg.threads = x;
         }
         if let Some(x) = v.get("seed").and_then(Value::as_u64) {
             cfg.seed = x;
@@ -432,6 +493,36 @@ mod tests {
         assert_eq!(back.fleet.heterogeneity, 0.4);
         assert_eq!(back.cluster.weights.w_geo, 2.5);
         assert_eq!(back.fleet.n_devices, 40); // normalized
+    }
+
+    #[test]
+    fn threads_roundtrips_and_defaults_to_sequential() {
+        assert_eq!(SimConfig::default().threads, 1);
+        let mut cfg = SimConfig::default();
+        cfg.threads = 8;
+        let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.threads, 8);
+    }
+
+    #[test]
+    fn fleet_presets_validate_and_scale() {
+        for (name, nodes, clusters) in [
+            ("fleet-1k", 1_000, 16),
+            ("fleet-4k", 4_000, 64),
+            ("fleet-10k", 10_000, 256),
+        ] {
+            let cfg = SimConfig::preset(name).unwrap();
+            cfg.validate().unwrap();
+            assert_eq!(cfg.n_nodes, nodes);
+            assert_eq!(cfg.n_clusters, clusters);
+            assert_eq!(cfg.fleet.n_devices, nodes);
+            assert_eq!(cfg.threads, 0); // auto
+            // keep the paper's per-client data density
+            assert!(cfg.dataset_samples >= nodes * 6);
+            assert!(cfg.dataset_malignant < cfg.dataset_samples);
+        }
+        assert_eq!(SimConfig::preset("paper").unwrap().n_nodes, 100);
+        assert!(SimConfig::preset("fleet-1m").is_err());
     }
 
     #[test]

@@ -25,6 +25,13 @@
 //! loop: health detection → proximity re-clustering → driver
 //! re-election, plus a parallel multi-seed sweep runner.
 //!
+//! The `sim` round engine is cluster-parallel: each round fans the
+//! clusters out across scoped threads (`SimConfig::threads`, CLI
+//! `--threads`) with per-cluster RNG child streams and private traffic
+//! sub-ledgers merged in cluster-id order, so `RunReport::fingerprint`
+//! is byte-identical for any thread count — the contract pinned by the
+//! golden-fingerprint suite and `scale fleet bench` at 1k–10k nodes.
+//!
 //! See DESIGN.md (repo root) for the subsystem inventory.
 
 pub mod crypto;

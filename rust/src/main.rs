@@ -3,6 +3,7 @@
 //! ```text
 //! scale run          run SCALE and/or the FedAvg baseline, print tables
 //! scale scenario     event-driven scenarios: run / sweep / gen
+//! scale fleet bench  cluster-parallel speedup + determinism check
 //! scale cluster-info run cluster formation only and print the clusters
 //! scale gen-config   write a default config JSON to edit
 //! scale artifacts    inspect the AOT artifact manifest (pjrt builds)
@@ -16,6 +17,7 @@
 //! scale scenario gen --out churn.toml
 //! scale scenario run --file churn.toml --rounds-trace
 //! scale scenario sweep --file churn.toml --seeds 8 --verify
+//! scale fleet bench --preset fleet-4k --threads 8 --csv fleet_scale.csv
 //! ```
 
 use std::path::Path;
@@ -40,21 +42,31 @@ use scale_fl::topology::Topology;
 
 const RUN_SPEC: Spec = Spec {
     flags: &[
-        "config", "mode", "backend", "artifacts", "nodes", "clusters", "rounds",
-        "epochs", "seed", "partition", "model", "min-delta", "failure-prob",
-        "topology", "heterogeneity", "out", "lr", "reg", "trace-dir", "edge-period",
+        "config", "preset", "mode", "backend", "artifacts", "nodes", "clusters",
+        "rounds", "epochs", "seed", "partition", "model", "min-delta",
+        "failure-prob", "topology", "heterogeneity", "out", "lr", "reg",
+        "trace-dir", "edge-period", "threads",
     ],
     switches: &["table1", "fig2", "quiet", "rounds-trace", "quantize", "secagg"],
 };
 
 const SCENARIO_SPEC: Spec = Spec {
     flags: &[
-        "file", "config", "backend", "artifacts", "nodes", "clusters", "rounds",
-        "epochs", "seed", "partition", "model", "min-delta", "failure-prob",
-        "topology", "heterogeneity", "out", "lr", "reg", "trace-dir", "seeds",
-        "base-seed",
+        "file", "config", "preset", "backend", "artifacts", "nodes", "clusters",
+        "rounds", "epochs", "seed", "partition", "model", "min-delta",
+        "failure-prob", "topology", "heterogeneity", "out", "lr", "reg",
+        "trace-dir", "seeds", "base-seed", "threads",
     ],
     switches: &["quiet", "rounds-trace", "sequential", "verify", "quantize", "secagg"],
+};
+
+const FLEET_SPEC: Spec = Spec {
+    flags: &[
+        "config", "preset", "nodes", "clusters", "rounds", "epochs", "seed",
+        "partition", "model", "min-delta", "failure-prob", "topology",
+        "heterogeneity", "lr", "reg", "threads", "csv", "out",
+    ],
+    switches: &["quiet", "quantize", "secagg"],
 };
 
 const INFO_SPEC: Spec = Spec {
@@ -82,6 +94,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     match argv.first().map(String::as_str) {
         Some("run") => cmd_run(&Args::parse(argv, &RUN_SPEC)?),
         Some("scenario") => cmd_scenario(&Args::parse(argv, &SCENARIO_SPEC)?),
+        Some("fleet") => cmd_fleet(&Args::parse(argv, &FLEET_SPEC)?),
         Some("cluster-info") => cmd_cluster_info(&Args::parse(argv, &INFO_SPEC)?),
         Some("gen-config") => cmd_gen_config(&Args::parse(argv, &GEN_SPEC)?),
         Some("artifacts") => cmd_artifacts(&Args::parse(argv, &ART_SPEC)?),
@@ -101,6 +114,7 @@ USAGE:
   scale scenario run --file F   run SCALE under an event timeline (TOML)
   scale scenario sweep --file F multi-seed sweep (parallel, native backend)
   scale scenario gen [--out F]  write an example scenario TOML
+  scale fleet bench [OPTIONS]   cluster-parallel speedup + determinism bench
   scale cluster-info [OPTIONS]  cluster formation only
   scale gen-config [--out F]    write default config JSON
   scale artifacts [--artifacts DIR]
@@ -109,10 +123,14 @@ USAGE:
 RUN OPTIONS:
   --config FILE        load a config (JSON, or TOML via its [sim] table);
                        other flags override it
+  --preset NAME        paper | fleet-1k | fleet-4k | fleet-10k
   --mode scale|fedavg|hfl|both (default both; hfl = client-edge-cloud
                        baseline, --edge-period N cloud syncs)
   --backend pjrt|native        (pjrt needs a build with --features pjrt)
   --artifacts DIR      AOT artifact dir (default ./artifacts)
+  --threads N          cluster-parallel round engine workers (native
+                       backend; 0 = auto, 1 = sequential; fingerprints
+                       are identical for every value)
   --nodes N --clusters K --rounds R --epochs E --seed S
   --model svm|mlp      (pjrt backend only for mlp)
   --partition iid|skew:ALPHA
@@ -135,15 +153,37 @@ SCENARIO OPTIONS (plus the run options above):
   --sequential         disable the parallel sweep fan-out
   --verify             re-run the sweep sequentially and require
                        bit-identical reports
+
+FLEET BENCH OPTIONS (plus config/preset/size flags above):
+  --threads N          parallel worker count to compare against
+                       --threads 1 (default 0 = auto)
+  --csv FILE           append a CSV row (header written when creating)
+  (base config defaults to the fleet-4k preset when neither --config nor
+   --preset is given; the bench runs the same config sequentially and
+   parallel, reports the wall-clock speedup, and fails if the
+   fingerprints differ)
 ";
 
-/// Build a SimConfig from `--config` + flag overrides.
-fn config_from(args: &Args) -> Result<SimConfig> {
-    let base = match args.get("config") {
-        Some(path) => SimConfig::load(Path::new(path))?,
-        None => SimConfig::default(),
+/// Build a SimConfig from `--config` / `--preset` + flag overrides,
+/// falling back to `default_base` when neither source is given.
+fn config_from_base(
+    args: &Args,
+    default_base: impl FnOnce() -> Result<SimConfig>,
+) -> Result<SimConfig> {
+    let base = match (args.get("config"), args.get("preset")) {
+        (Some(_), Some(_)) => {
+            bail!("--config and --preset are mutually exclusive (pick one base)")
+        }
+        (Some(path), None) => SimConfig::load(Path::new(path))?,
+        (None, Some(name)) => SimConfig::preset(name)?,
+        (None, None) => default_base()?,
     };
     config_overrides(args, base)
+}
+
+/// Build a SimConfig from `--config` / `--preset` + flag overrides.
+fn config_from(args: &Args) -> Result<SimConfig> {
+    config_from_base(args, || Ok(SimConfig::default()))
 }
 
 /// Apply command-line overrides on top of `cfg`.
@@ -174,6 +214,9 @@ fn config_overrides(args: &Args, mut cfg: SimConfig) -> Result<SimConfig> {
     }
     if let Some(h) = args.get_f64("heterogeneity")? {
         cfg.fleet.heterogeneity = h;
+    }
+    if let Some(t) = args.get_usize("threads")? {
+        cfg.threads = t;
     }
     if let Some(x) = args.get_f64("lr")? {
         cfg.lr = x as f32;
@@ -211,16 +254,34 @@ fn config_overrides(args: &Args, mut cfg: SimConfig) -> Result<SimConfig> {
     Ok(cfg)
 }
 
+/// The chosen compute backend. Native keeps its `Sync` marker so the
+/// cluster-parallel round engine (`--threads`) can fan out; PJRT is
+/// thread-local by design and always takes the sequential path.
+enum Backend {
+    Native(NativeSvm),
+    Pjrt(Box<dyn ModelCompute>),
+}
+
+impl Backend {
+    /// Simulation wired for the widest engine the backend supports.
+    fn simulation(&self, cfg: SimConfig) -> Result<Simulation<'_>> {
+        match self {
+            Backend::Native(c) => Simulation::new_parallel(cfg, c),
+            Backend::Pjrt(c) => Simulation::new(cfg, c.as_ref()),
+        }
+    }
+}
+
 /// Instantiate the chosen compute backend.
-fn backend_from(args: &Args, cfg: &SimConfig) -> Result<Box<dyn ModelCompute>> {
+fn backend_from(args: &Args, cfg: &SimConfig) -> Result<Backend> {
     match args.get_or("backend", DEFAULT_BACKEND) {
         "native" => {
             if cfg.model != ModelKind::Svm {
                 bail!("native backend only implements the SVM model");
             }
-            Ok(Box::new(NativeSvm::new(NativeSvm::default_dims())))
+            Ok(Backend::Native(NativeSvm::new(NativeSvm::default_dims())))
         }
-        "pjrt" => backend_pjrt(args, cfg.model),
+        "pjrt" => Ok(Backend::Pjrt(backend_pjrt(args, cfg.model)?)),
         other => bail!("unknown backend '{other}'"),
     }
 }
@@ -242,13 +303,13 @@ fn backend_pjrt(_args: &Args, _model: ModelKind) -> Result<Box<dyn ModelCompute>
 
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
-    let compute = backend_from(args, &cfg)?;
+    let backend = backend_from(args, &cfg)?;
     let mode = args.get_or("mode", "both");
     let quiet = args.has("quiet");
     let mut reports = Vec::new();
 
     if mode == "scale" || mode == "both" {
-        let mut sim = Simulation::new(cfg.clone(), compute.as_ref())?;
+        let mut sim = backend.simulation(cfg.clone())?;
         let report = sim.run_scale()?;
         if !quiet {
             print_summary(&report);
@@ -266,7 +327,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     if mode == "hfl" {
         let period = args.get_usize("edge-period")?.unwrap_or(3);
-        let mut sim = Simulation::new(cfg.clone(), compute.as_ref())?;
+        let mut sim = backend.simulation(cfg.clone())?;
         let report = sim.run_hfl(period)?;
         if !quiet {
             print_summary(&report);
@@ -278,7 +339,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         reports.push(report);
     }
     if mode == "fedavg" || mode == "both" {
-        let mut sim = Simulation::new(cfg.clone(), compute.as_ref())?;
+        let mut sim = backend.simulation(cfg.clone())?;
         let grouping = Some(sim.scale_grouping()?);
         let report = sim.run_fedavg(grouping)?;
         if !quiet {
@@ -387,7 +448,7 @@ fn scenario_setup(args: &Args) -> Result<(Scenario, SimConfig)> {
 
 fn cmd_scenario_run(args: &Args) -> Result<()> {
     let (scenario, cfg) = scenario_setup(args)?;
-    let compute = backend_from(args, &cfg)?;
+    let backend = backend_from(args, &cfg)?;
     let quiet = args.has("quiet");
     if !quiet {
         println!(
@@ -399,7 +460,7 @@ fn cmd_scenario_run(args: &Args) -> Result<()> {
             scenario.regulation.cooldown,
         );
     }
-    let mut sim = Simulation::new(cfg, compute.as_ref())?;
+    let mut sim = backend.simulation(cfg)?;
     let report = sim.run_scale_scenario(&scenario)?;
     if !quiet {
         print_summary(&report);
@@ -502,6 +563,88 @@ fn cmd_scenario_gen(args: &Args) -> Result<()> {
     let out = args.get_or("out", "scenario.toml");
     std::fs::write(out, scenario::EXAMPLE_TOML).with_context(|| format!("writing {out}"))?;
     println!("example scenario written to {out}");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// fleet subcommands
+// ---------------------------------------------------------------------
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("bench") => cmd_fleet_bench(args),
+        _ => bail!("usage: scale fleet bench [--preset fleet-4k] [--threads N] ..."),
+    }
+}
+
+/// Run one fleet config sequentially and cluster-parallel, report the
+/// wall-clock speedup, and hard-fail unless the two `RunReport`
+/// fingerprints are byte-identical — the determinism contract of the
+/// parallel round engine, checked on the real workload.
+fn cmd_fleet_bench(args: &Args) -> Result<()> {
+    let defaulted = args.get("config").is_none() && args.get("preset").is_none();
+    let cfg = config_from_base(args, || SimConfig::preset("fleet-4k"))?;
+    let quiet = args.has("quiet");
+    let par_threads = cfg.effective_threads();
+    if !quiet {
+        println!(
+            "fleet bench: {} nodes / {} clusters / {} rounds, --threads 1 vs {par_threads}{}",
+            cfg.n_nodes,
+            cfg.n_clusters,
+            cfg.rounds,
+            if defaulted {
+                " (base: fleet-4k preset — dataset/cadence scaled for large \
+                 fleets; pass --preset or --config to change)"
+            } else {
+                ""
+            }
+        );
+    }
+    let m = scale_fl::bench::measure_fleet(&cfg, par_threads)?;
+
+    if !quiet {
+        println!("sequential   : {:>8.2}s wall", m.seq_s);
+        println!("parallel x{par_threads:<3}: {:>8.2}s wall", m.par_s);
+        println!("speedup      : {:>8.2}x", m.speedup());
+        println!(
+            "fingerprint  : {} ({})",
+            if m.identical { "identical" } else { "DIVERGED" },
+            m.report.fingerprint_hash()
+        );
+        println!(
+            "run          : {} updates, final acc {:.3}",
+            m.report.total_updates(),
+            m.report.final_metrics.accuracy
+        );
+    }
+
+    if let Some(csv) = args.get("csv") {
+        use std::io::Write as _;
+        let path = Path::new(csv);
+        let fresh = !path.exists();
+        let mut fh = std::fs::OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(path)
+            .with_context(|| format!("opening {csv}"))?;
+        if fresh {
+            writeln!(fh, "{}", scale_fl::bench::FLEET_CSV_HEADER)
+                .with_context(|| format!("writing {csv}"))?;
+        }
+        writeln!(fh, "{}", scale_fl::bench::fleet_csv_row(&cfg, &m))
+            .with_context(|| format!("writing {csv}"))?;
+        if !quiet {
+            println!("csv row appended to {csv}");
+        }
+    }
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, m.report.to_json().to_string_pretty())
+            .with_context(|| format!("writing {out}"))?;
+    }
+    anyhow::ensure!(
+        m.identical,
+        "fingerprint diverged between --threads 1 and --threads {par_threads}"
+    );
     Ok(())
 }
 

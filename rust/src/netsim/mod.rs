@@ -124,7 +124,7 @@ impl NetConfig {
 }
 
 /// One recorded transmission.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SentMsg {
     pub kind: MsgKind,
     pub from: Option<usize>,
@@ -254,6 +254,19 @@ impl Network {
             rng: Rng::new(seed),
             degradation: 1.0,
         }
+    }
+
+    /// A sub-network for one parallel round unit: same parameters and
+    /// log-retention policy, the current degradation window, a fresh
+    /// empty ledger, and an independent jitter stream under `seed`.
+    /// Callers derive `seed` from `(run seed, round, shard id)` so the
+    /// stream — and therefore the fingerprint — is identical for any
+    /// `--threads` value; the sub-ledgers are merged back in shard order
+    /// at the round barrier.
+    pub fn fork(&self, seed: u64) -> Network {
+        let mut net = Network::new(self.cfg.clone(), seed, self.ledger.keep_log);
+        net.degradation = self.degradation;
+        net
     }
 
     /// Set the fleet-wide bandwidth degradation window (scenario engine);
@@ -525,6 +538,28 @@ mod tests {
         assert!(net.bandwidth_degradation() > 0.0);
         net.set_bandwidth_degradation(7.0);
         assert_eq!(net.bandwidth_degradation(), 1.0);
+    }
+
+    #[test]
+    fn fork_inherits_cfg_and_degradation_with_fresh_ledger() {
+        let mut net = Network::new(NetConfig::default(), 11, true);
+        let a = mk_point(0, 40.0, -74.0);
+        net.send(MsgKind::Heartbeat, Some(&a), None, 32, 0);
+        net.set_bandwidth_degradation(0.5);
+        let mut sub = net.fork(99);
+        assert_eq!(sub.bandwidth_degradation(), 0.5);
+        assert!(sub.ledger.keep_log);
+        assert_eq!(sub.ledger.log().len(), 0); // fresh ledger
+        sub.send(MsgKind::Heartbeat, Some(&a), None, 32, 1);
+        // forks with the same seed replay the same jitter stream
+        let mut sub2 = net.fork(99);
+        let l1 = net.fork(99).send(MsgKind::Heartbeat, Some(&a), None, 32, 1);
+        let l2 = sub2.send(MsgKind::Heartbeat, Some(&a), None, 32, 1);
+        assert_eq!(l1, l2);
+        // merging the sub-ledger folds its traffic into the parent
+        net.ledger.merge(&sub.ledger);
+        assert_eq!(net.ledger.totals(MsgKind::Heartbeat).count, 2);
+        assert_eq!(net.ledger.log().len(), 2);
     }
 
     #[test]

@@ -55,7 +55,9 @@ fn run_one(cfg: &SimConfig, scenario: &Scenario, seed: u64) -> Result<SweepRun> 
     cfg.seed = seed;
     let cfg = cfg.normalized();
     let compute = NativeSvm::new(NativeSvm::default_dims());
-    let mut sim = Simulation::new(cfg, &compute)?;
+    // new_parallel so a `threads` setting in the config composes with
+    // the seed-level fan-out (fingerprints are thread-count independent)
+    let mut sim = Simulation::new_parallel(cfg, &compute)?;
     let report = sim.run_scale_scenario(scenario)?;
     Ok(SweepRun { seed, report })
 }
@@ -78,6 +80,15 @@ pub fn run_sweep(
     if !parallel || seeds.len() <= 1 {
         return seeds.iter().map(|&s| run_one(cfg, scenario, s)).collect();
     }
+    // the seed-level fan-out already saturates the cores; per-sim
+    // cluster-parallelism would multiply thread counts (seeds × cores)
+    // without changing any result — fingerprints are thread-count
+    // invariant — so it is forced off inside a parallel sweep
+    let cfg = &{
+        let mut c = cfg.clone();
+        c.threads = 1;
+        c
+    };
     let workers = thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)

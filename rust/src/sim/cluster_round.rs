@@ -1,0 +1,283 @@
+//! One cluster's SCALE round as a self-contained unit — the shard the
+//! cluster-parallel engine fans out.
+//!
+//! SCALE's protocol keeps everything between central aggregations inside
+//! the cluster (PAPER §3.3: local training, peer exchange, driver
+//! consensus, checkpoint gating), so a round shards naturally by
+//! cluster: each unit gets exclusive `&mut` access to its members'
+//! [`NodeState`]s (claimed disjointly by the engine), its own
+//! [`ClusterState`], and a private forked [`Network`] whose jitter
+//! stream derives from `(seed, round, cluster id)` — never from
+//! scheduling. The only cross-cluster effects — the driver's upload to
+//! the global server and the traffic sub-ledger — are *returned* in
+//! [`ClusterRoundOut`] and applied by the engine at the round barrier in
+//! cluster-id order, which is what keeps `RunReport::fingerprint`
+//! byte-identical for `--threads 1` and `--threads N`.
+
+use anyhow::{Context, Result};
+
+use crate::aggregation::{driver_consensus, peer_exchange};
+use crate::checkpoint::{Checkpoint, Decision};
+use crate::config::{CheckpointMode, SimConfig};
+use crate::election::{elect, representativeness, Ballot, CriteriaWeights};
+use crate::netsim::{param_payload_bytes, MsgKind, Network};
+use crate::quant;
+use crate::runtime::compute::ModelCompute;
+use crate::secagg;
+use crate::topology::peer_sets;
+use crate::util::rng::mix64;
+
+use super::{eval_model, ClusterState, NodeState, BALLOT_BYTES, HEARTBEAT_BYTES};
+
+/// One cluster's round results, merged at the round barrier in
+/// cluster-id order.
+#[derive(Default)]
+pub struct ClusterRoundOut {
+    pub cid: usize,
+    /// In-round driver re-elections (driver failover).
+    pub elections: u64,
+    /// Modelled end-to-end latency of this cluster's round (ms).
+    pub latency_ms: f64,
+    pub loss_sum: f64,
+    pub loss_n: usize,
+    /// Consensus params + member count for the global server; registered
+    /// by the engine at the barrier so uploads never race.
+    pub upload: Option<(Vec<f32>, usize)>,
+}
+
+/// Algorithm-4 election over `alive_nodes` — the cluster's live members
+/// in member order — accounting ballot traffic on the given network.
+/// The one election implementation: serves both the in-round failover
+/// path (worker-side, over the unit's node slice) and
+/// `Simulation::run_election` (formation / self-regulation). The winner
+/// is identified by its device id, so caller index spaces never leak in.
+pub(crate) fn elect_driver(
+    cluster: &mut ClusterState,
+    alive_nodes: &[&NodeState],
+    net: &mut Network,
+    criteria: &CriteriaWeights,
+    round: usize,
+) -> Result<()> {
+    anyhow::ensure!(
+        !alive_nodes.is_empty(),
+        "cluster {} has no live members to elect from",
+        cluster.id
+    );
+    // each live member broadcasts its ballot to the others
+    for (i, a) in alive_nodes.iter().enumerate() {
+        for (j, b) in alive_nodes.iter().enumerate() {
+            if i != j {
+                net.send(
+                    MsgKind::Election,
+                    Some(&a.device),
+                    Some(&b.device),
+                    BALLOT_BYTES,
+                    round,
+                );
+            }
+        }
+    }
+    let ballots: Vec<Ballot> = alive_nodes
+        .iter()
+        .map(|n| {
+            Ballot::from_profile(
+                &n.device,
+                n.battery_wh,
+                representativeness(n.pos_frac, cluster.pos_frac),
+            )
+        })
+        .collect();
+    let result = elect(&ballots, criteria);
+    cluster.driver = result.driver;
+    cluster.elections += 1;
+    Ok(())
+}
+
+/// Execute one cluster's SCALE round: heartbeats → failover election →
+/// local training → peer exchange (eq 9) → driver collect + consensus
+/// (eq 10) → driver-side validation + checkpoint gate → broadcast.
+///
+/// `nodes[i]` is the state of `cluster.members[i]`; the slice covers the
+/// whole membership (dead nodes included — they are skipped exactly as
+/// the sequential engine skipped them). All traffic lands on `net`,
+/// which the caller forked for this `(round, cluster)`.
+pub(crate) fn scale_cluster_round(
+    cluster: &mut ClusterState,
+    nodes: &mut [&mut NodeState],
+    net: &mut Network,
+    compute: &dyn ModelCompute,
+    cfg: &SimConfig,
+    root_key: &[u8; 32],
+    round: usize,
+) -> Result<ClusterRoundOut> {
+    debug_assert_eq!(cluster.members.len(), nodes.len());
+    let mut out = ClusterRoundOut { cid: cluster.id, ..Default::default() };
+
+    // heartbeats from live members (to the previous driver)
+    let driver_local = cluster.members.iter().position(|&m| m == cluster.driver);
+    for li in 0..nodes.len() {
+        if nodes[li].alive {
+            cluster.monitor.heartbeat(cluster.members[li], round);
+            if let Some(dl) = driver_local {
+                if li != dl {
+                    let (from, to) = (&nodes[li].device, &nodes[dl].device);
+                    net.send(MsgKind::Heartbeat, Some(from), Some(to), HEARTBEAT_BYTES, round);
+                }
+            }
+        }
+    }
+
+    let alive: Vec<usize> = (0..nodes.len()).filter(|&li| nodes[li].alive).collect();
+    if alive.is_empty() {
+        return Ok(out); // cluster skips the round entirely
+    }
+    let alive_global: Vec<usize> = alive.iter().map(|&li| cluster.members[li]).collect();
+
+    // driver liveness → Algorithm-4 re-election
+    let driver_alive = driver_local.is_some_and(|dl| nodes[dl].alive);
+    if !driver_alive {
+        let alive_nodes: Vec<&NodeState> = alive.iter().map(|&li| &*nodes[li]).collect();
+        elect_driver(cluster, &alive_nodes, net, &cfg.election, round)?;
+        out.elections += 1;
+    }
+    let driver_local = cluster
+        .members
+        .iter()
+        .position(|&m| m == cluster.driver)
+        .context("elected driver is not a cluster member")?;
+
+    // --- local training ---
+    let mut train_ms = 0.0f64;
+    for &li in &alive {
+        let (loss, ms) =
+            nodes[li].local_train(compute, cfg.local_epochs, cfg.lr, cfg.reg)?;
+        out.loss_sum += loss;
+        out.loss_n += 1;
+        train_ms = train_ms.max(ms);
+    }
+
+    // --- peer exchange (eq 9) ---
+    let dim = compute.param_dim();
+    let payload = if cfg.quantize_exchange {
+        // int8 codes + (len, min, step) header — see `quant`
+        dim as u64 + 12 + 64
+    } else {
+        param_payload_bytes(dim)
+    };
+    let peers = peer_sets(
+        cfg.topology,
+        &alive_global,
+        round,
+        mix64(cfg.seed, cluster.id as u64),
+    );
+    let mut exchange_ms = 0.0f64;
+    for (p, ps) in peers.iter().enumerate() {
+        for &q in ps {
+            let (from, to) = (&nodes[alive[p]].device, &nodes[alive[q]].device);
+            let lat = net.send(MsgKind::PeerExchange, Some(from), Some(to), payload, round);
+            exchange_ms = exchange_ms.max(lat);
+        }
+    }
+    // snapshot of the weights as they leave each node: when exchange
+    // quantization is on, peers receive the int8-channel version
+    let snapshot: Vec<Vec<f32>> = alive
+        .iter()
+        .map(|&li| {
+            if cfg.quantize_exchange {
+                quant::channel(&nodes[li].params)
+            } else {
+                nodes[li].params.clone()
+            }
+        })
+        .collect();
+    let exchanged = peer_exchange(compute, &snapshot, &peers)?;
+    for (p, &li) in alive.iter().enumerate() {
+        nodes[li].params = exchanged[p].clone();
+    }
+
+    // --- driver collect + consensus (eq 10) ---
+    let collect_payload = if cfg.secure_aggregation {
+        // fixed-point i64 per element (see `secagg`)
+        (dim * 8) as u64 + 64
+    } else {
+        payload
+    };
+    let mut collect_ms = 0.0f64;
+    for &li in &alive {
+        if li != driver_local {
+            let (from, to) = (&nodes[li].device, &nodes[driver_local].device);
+            let lat =
+                net.send(MsgKind::DriverCollect, Some(from), Some(to), collect_payload, round);
+            collect_ms = collect_ms.max(lat);
+        }
+    }
+    let consensus = if cfg.secure_aggregation {
+        // pairwise-masked sum: the driver only ever sees masked vectors;
+        // the integer sum cancels the masks exactly
+        let members: Vec<(usize, secagg::MaskSecret)> = alive_global
+            .iter()
+            .map(|&id| (id, secagg::MaskSecret::derive(root_key, id as u64)))
+            .collect();
+        let masked: Vec<Vec<i64>> = exchanged
+            .iter()
+            .enumerate()
+            .map(|(i, p)| secagg::mask(&secagg::encode_fixed(p), &members, i))
+            .collect();
+        secagg::decode_mean(&secagg::sum_masked(&masked), masked.len())
+    } else {
+        driver_consensus(compute, &exchanged)?
+    };
+
+    // --- driver-side validation + checkpoint gate ---
+    let metrics = eval_model(compute, &cluster.eval_batches, &cluster.eval_labels, &consensus)?;
+    cluster.last_accuracy = metrics.accuracy;
+    let last_round = round + 1 == cfg.rounds;
+    let decision = match (last_round && cfg.force_final_upload, cfg.checkpoint_mode) {
+        (true, CheckpointMode::ParamDelta) => cluster.delta_gate.force(&consensus),
+        (true, CheckpointMode::Accuracy) => cluster.gate.force(),
+        (false, CheckpointMode::ParamDelta) => cluster.delta_gate.observe(&consensus),
+        (false, CheckpointMode::Accuracy) => cluster.gate.observe(metrics.accuracy),
+    };
+    let mut upload_ms = 0.0f64;
+    match decision {
+        Decision::Upload => {
+            upload_ms = net.send(
+                MsgKind::GlobalUpdate,
+                Some(&nodes[driver_local].device),
+                None,
+                payload,
+                round,
+            );
+            cluster.updates += 1;
+            out.upload = Some((consensus.clone(), cluster.members.len()));
+        }
+        Decision::Skip => {
+            net.send(
+                MsgKind::CheckpointLocal,
+                Some(&nodes[driver_local].device),
+                Some(&nodes[driver_local].device),
+                payload,
+                round,
+            );
+            cluster.store.push(Checkpoint {
+                round: round as u32,
+                metric: metrics.accuracy,
+                params: consensus.clone(),
+            });
+        }
+    }
+
+    // --- driver broadcast; members adopt the cluster model ---
+    let mut broadcast_ms = 0.0f64;
+    for &li in &alive {
+        if li != driver_local {
+            let (from, to) = (&nodes[driver_local].device, &nodes[li].device);
+            let lat = net.send(MsgKind::DriverBroadcast, Some(from), Some(to), payload, round);
+            broadcast_ms = broadcast_ms.max(lat);
+        }
+        nodes[li].params = consensus.clone();
+    }
+
+    out.latency_ms = train_ms + exchange_ms + collect_ms + upload_ms + broadcast_ms;
+    Ok(out)
+}

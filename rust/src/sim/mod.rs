@@ -8,47 +8,63 @@
 //! deterministic child streams, so a `(config, seed)` pair is a fully
 //! reproducible experiment.
 //!
-//! Single-threaded by design: PJRT handles are thread-local (`Rc`), and a
-//! discrete-event structure keeps message accounting exact. "Latency" is
-//! *modelled* time from `netsim`, not wall-clock. (Multi-seed parallelism
-//! lives one level up, in `scenario::sweep`, which runs independent
-//! simulations over the `Send`-safe native backend.)
+//! Cluster-parallel by construction: clusters operate independently
+//! between central aggregations (HDAP keeps training, peer exchange and
+//! driver consensus inside the cluster), so each round fans the clusters
+//! out as `cluster_round` units across `std::thread::scope` workers
+//! (`SimConfig::threads`, over a `Send + Sync` backend via
+//! [`Simulation::new_parallel`]). Every unit owns a per-cluster RNG
+//! child stream and a private traffic sub-ledger, merged back in
+//! cluster-id order at the round barrier — so `RunReport::fingerprint`
+//! is byte-identical for `--threads 1` and `--threads N`. PJRT handles
+//! are thread-local (`Rc`); that backend stays on the sequential path
+//! (multi-seed parallelism for it lives one level up, in
+//! `scenario::sweep`). "Latency" is *modelled* time from `netsim`, not
+//! wall-clock.
 //!
 //! [`Simulation::run_scale_scenario`] additionally threads a
 //! `scenario::Scenario` timeline through the round loop: events are
 //! drained at each round boundary and the self-regulation loop (health
 //! detection → proximity re-clustering → driver re-election) repairs the
-//! federation as the fleet churns.
+//! federation at the barrier, after the sub-ledger merge — repairs touch
+//! cross-cluster state and never run inside workers.
 
+mod cluster_round;
+mod par;
 pub mod report;
+
+pub use cluster_round::ClusterRoundOut;
 
 use anyhow::{Context, Result};
 
-use crate::aggregation::{driver_consensus, peer_exchange};
-use crate::checkpoint::{Checkpoint, CheckpointStore, Decision, DeltaGate, UploadGate};
-use crate::config::{CheckpointMode, Partition, SimConfig};
+use crate::checkpoint::{CheckpointStore, DeltaGate, UploadGate};
+use crate::config::{Partition, SimConfig};
 use crate::data::{batches, synth_wdbc_sized, Dataset, PaddedBatch, Scaler};
 use crate::devices::{generate_fleet, DeviceProfile};
-use crate::election::{elect, representativeness, Ballot};
 use crate::features::{combined_metadata_score, wdbc_columns, MetadataWeights};
 use crate::geo::{centroid, equirectangular_km, GeoPoint};
 use crate::health::{HealthMonitor, HealthState};
 use crate::metrics::ModelMetrics;
-use crate::netsim::{param_payload_bytes, summary_payload_bytes, MsgKind, Network};
+use crate::netsim::{
+    param_payload_bytes, summary_payload_bytes, MsgKind, Network, TrafficLedger,
+};
 use crate::perf_index::{local_log_pi, OperationalWeights};
 use crate::runtime::compute::ModelCompute;
-use crate::quant;
 use crate::scenario::{EventKind, Scenario, ScenarioState, Undo};
-use crate::secagg;
 use crate::server::{GlobalServer, SummaryMsg};
-use crate::topology::peer_sets;
-use crate::util::rng::Rng;
+use crate::util::rng::{mix64, Rng};
 use report::{ClusterReport, RoundRecord, RunReport, ScenarioNote};
 
 /// Heartbeat / ballot / assignment payload sizes (bytes).
-const HEARTBEAT_BYTES: u64 = 32;
-const BALLOT_BYTES: u64 = 112;
+pub(crate) const HEARTBEAT_BYTES: u64 = 32;
+pub(crate) const BALLOT_BYTES: u64 = 112;
 const ASSIGNMENT_BYTES: u64 = 96;
+
+/// Fixed shard width for the baselines' parallel training phase. A
+/// constant (never thread-count dependent) so the per-`(round, shard)`
+/// jitter streams — and therefore fingerprints — are identical for any
+/// `--threads` value.
+const NODE_SHARD: usize = 64;
 
 /// One simulated client node.
 pub struct NodeState {
@@ -127,6 +143,9 @@ pub struct ClusterState {
 pub struct Simulation<'a> {
     pub cfg: SimConfig,
     compute: &'a dyn ModelCompute,
+    /// The same backend with its `Sync` marker retained — set by
+    /// [`Simulation::new_parallel`], required for `threads > 1`.
+    sync_compute: Option<&'a (dyn ModelCompute + Sync)>,
     pub nodes: Vec<NodeState>,
     pub net: Network,
     rng: Rng,
@@ -230,6 +249,7 @@ impl<'a> Simulation<'a> {
         Ok(Simulation {
             cfg,
             compute,
+            sync_compute: None,
             nodes,
             net,
             rng,
@@ -237,6 +257,37 @@ impl<'a> Simulation<'a> {
             global_eval_labels,
             root_key,
         })
+    }
+
+    /// Build the federation over a thread-safe backend, enabling the
+    /// cluster-parallel round engine (`SimConfig::threads` > 1, or 0 =
+    /// auto). A sequential run through this constructor is byte-identical
+    /// to a [`Simulation::new`] one.
+    pub fn new_parallel(
+        cfg: SimConfig,
+        compute: &'a (dyn ModelCompute + Sync),
+    ) -> Result<Simulation<'a>> {
+        let mut sim = Simulation::new(cfg, compute)?;
+        sim.sync_compute = Some(compute);
+        Ok(sim)
+    }
+
+    /// Resolve `cfg.threads` and check the backend can fan out when
+    /// more than one worker is requested. Auto (`0`) degrades to
+    /// sequential on a single-threaded backend — only an *explicit*
+    /// `threads > 1` errors there.
+    fn effective_threads(&self) -> Result<usize> {
+        if self.cfg.threads == 0 && self.sync_compute.is_none() {
+            return Ok(1);
+        }
+        let t = self.cfg.effective_threads();
+        anyhow::ensure!(
+            t <= 1 || self.sync_compute.is_some(),
+            "threads = {t} needs a thread-safe backend: build the \
+             simulation with Simulation::new_parallel over the native \
+             backend (PJRT handles are thread-local)"
+        );
+        Ok(t)
     }
 
     /// Client-side summary for node `id` (eq 2 + eq 7 + coordinates).
@@ -362,42 +413,23 @@ impl<'a> Simulation<'a> {
     }
 
     /// Algorithm-4 election among live members; accounts ballot traffic.
+    /// Thin wrapper over `cluster_round::elect_driver` — the one
+    /// implementation, shared with the in-round failover path.
     fn run_election(&mut self, cluster: &mut ClusterState, round: usize) -> Result<()> {
-        let alive: Vec<usize> = cluster
+        let alive_nodes: Vec<&NodeState> = cluster
             .members
             .iter()
             .copied()
             .filter(|&id| self.nodes[id].alive)
+            .map(|id| &self.nodes[id])
             .collect();
-        anyhow::ensure!(
-            !alive.is_empty(),
-            "cluster {} has no live members to elect from",
-            cluster.id
-        );
-        // each live member broadcasts its ballot to the others
-        for &i in &alive {
-            for &j in &alive {
-                if i != j {
-                    let (from, to) = (&self.nodes[i].device, &self.nodes[j].device);
-                    self.net.send(MsgKind::Election, Some(from), Some(to), BALLOT_BYTES, round);
-                }
-            }
-        }
-        let ballots: Vec<Ballot> = alive
-            .iter()
-            .map(|&id| {
-                let n = &self.nodes[id];
-                Ballot::from_profile(
-                    &n.device,
-                    n.battery_wh,
-                    representativeness(n.pos_frac, cluster.pos_frac),
-                )
-            })
-            .collect();
-        let result = elect(&ballots, &self.cfg.election);
-        cluster.driver = result.driver;
-        cluster.elections += 1;
-        Ok(())
+        cluster_round::elect_driver(
+            cluster,
+            &alive_nodes,
+            &mut self.net,
+            &self.cfg.election,
+            round,
+        )
     }
 
     /// Inject node failures / recoveries for this round.
@@ -424,9 +456,12 @@ impl<'a> Simulation<'a> {
     // SCALE protocol
     // ------------------------------------------------------------------
 
-    /// Run the full SCALE protocol; returns the run report. Equivalent to
-    /// [`Self::run_scale_scenario`] with no events and self-regulation
-    /// off, so plain runs stay bit-identical to the pre-scenario engine.
+    /// Run the full SCALE protocol; returns the run report. Equivalent
+    /// to [`Self::run_scale_scenario`] with no events and
+    /// self-regulation off. The determinism contract is within-version:
+    /// a `(config, seed)` pair reproduces byte-for-byte at any
+    /// `--threads` value (jitter streams derive per `(round, cluster)`,
+    /// so results are *not* comparable to pre-parallel-engine traces).
     pub fn run_scale(&mut self) -> Result<RunReport> {
         self.run_scale_scenario(&Scenario::none())
     }
@@ -437,6 +472,7 @@ impl<'a> Simulation<'a> {
     /// the federation (health → re-clustering → re-election).
     pub fn run_scale_scenario(&mut self, scenario: &Scenario) -> Result<RunReport> {
         scenario.validate(self.cfg.n_nodes, self.cfg.fleet.n_metros)?;
+        let threads = self.effective_threads()?;
         let wall = std::time::Instant::now();
         let mut server = GlobalServer::new(self.root_key);
         let members = self.cluster_formation(&mut server)?;
@@ -448,40 +484,30 @@ impl<'a> Simulation<'a> {
         for round in 0..self.cfg.rounds {
             let events_applied = self.apply_scenario_round(&mut state, round, &mut notes);
             self.inject_failures(round);
+            // self-regulation repairs run between barriers — they touch
+            // cross-cluster state (proximity admission, re-formation)
+            // and must never race the fanned-out cluster rounds
             let (reclusterings, regulate_elections) =
                 self.self_regulate(&mut state, &mut clusters, round, &mut notes)?;
+
+            let outs = self.run_cluster_rounds(&mut clusters, round, threads)?;
+
             let mut round_updates = 0u64;
             let mut round_elections = regulate_elections;
             let mut slowest_cluster_ms = 0.0f64;
             let mut loss_sum = 0.0f64;
             let mut loss_n = 0usize;
-
-            for c in 0..clusters.len() {
-                let mut cluster = std::mem::replace(
-                    &mut clusters[c],
-                    ClusterState {
-                        id: 0,
-                        members: Vec::new(),
-                        driver: 0,
-                        gate: UploadGate::new(0.0),
-                        delta_gate: DeltaGate::new(0.0),
-                        store: CheckpointStore::new(1),
-                        monitor: HealthMonitor::new(self.cfg.health),
-                        eval_batches: Vec::new(),
-                        eval_labels: Vec::new(),
-                        pos_frac: 0.0,
-                        elections: 0,
-                        updates: 0,
-                        last_accuracy: 0.0,
-                    },
-                );
-                let out = self.scale_cluster_round(&mut cluster, round, &mut server)?;
-                round_updates += out.uploaded as u64;
+            // ordered merge: cluster-id order, whatever the scheduling was
+            for (out, ledger) in outs {
+                self.net.ledger.merge(&ledger);
+                round_updates += u64::from(out.upload.is_some());
                 round_elections += out.elections;
                 slowest_cluster_ms = slowest_cluster_ms.max(out.latency_ms);
                 loss_sum += out.loss_sum;
                 loss_n += out.loss_n;
-                clusters[c] = cluster;
+                if let Some((params, size)) = out.upload {
+                    server.receive_cluster_model(out.cid, params, size, round)?;
+                }
             }
 
             // server-side processing of this round's uploads
@@ -949,198 +975,56 @@ impl<'a> Simulation<'a> {
         Ok((1, elections))
     }
 
-    /// One cluster's SCALE round. Returns accounting for the round record.
-    fn scale_cluster_round(
+    /// Fan every cluster's round out over the unit executor — scoped
+    /// workers when `threads > 1`, inline otherwise — and return
+    /// `(out, sub-ledger)` pairs **in cluster order**, the only order
+    /// the barrier merge ever uses. Each unit claims exclusive `&mut`
+    /// access to its members' node states (clusters partition the
+    /// fleet; a violation panics here) and a forked network whose
+    /// jitter stream derives from `(seed, round, cluster id)`.
+    fn run_cluster_rounds(
         &mut self,
-        cluster: &mut ClusterState,
+        clusters: &mut [ClusterState],
         round: usize,
-        server: &mut GlobalServer,
-    ) -> Result<ClusterRoundOut> {
-        let mut out = ClusterRoundOut::default();
-
-        // heartbeats from live members (to the previous driver)
-        let driver_device_id = cluster.driver;
-        for &id in &cluster.members {
-            if self.nodes[id].alive {
-                cluster.monitor.heartbeat(id, round);
-                if id != driver_device_id {
-                    let (from, to) =
-                        (&self.nodes[id].device, &self.nodes[driver_device_id].device);
-                    self.net.send(MsgKind::Heartbeat, Some(from), Some(to), HEARTBEAT_BYTES, round);
-                }
-            }
-        }
-
-        let alive: Vec<usize> = cluster
-            .members
-            .iter()
-            .copied()
-            .filter(|&id| self.nodes[id].alive)
-            .collect();
-        if alive.is_empty() {
-            return Ok(out); // cluster skips the round entirely
-        }
-
-        // driver liveness → Algorithm-4 re-election
-        if !self.nodes[cluster.driver].alive {
-            self.run_election(cluster, round)?;
-            out.elections += 1;
-        }
-
-        // --- local training ---
-        let mut train_ms = 0.0f64;
-        for &id in &alive {
-            let (loss, ms) = {
-                let node = &mut self.nodes[id];
-                node.local_train(self.compute, self.cfg.local_epochs, self.cfg.lr, self.cfg.reg)?
-            };
-            out.loss_sum += loss;
-            out.loss_n += 1;
-            train_ms = train_ms.max(ms);
-        }
-
-        // --- peer exchange (eq 9) ---
-        let dim = self.compute.param_dim();
-        let payload = if self.cfg.quantize_exchange {
-            // int8 codes + (len, min, step) header — see `quant`
-            dim as u64 + 12 + 64
-        } else {
-            param_payload_bytes(dim)
-        };
-        let peers = peer_sets(
-            self.cfg.topology,
-            &alive,
-            round,
-            crate::util::rng::mix64(self.cfg.seed, cluster.id as u64),
-        );
-        let mut exchange_ms = 0.0f64;
-        for (p, ps) in peers.iter().enumerate() {
-            for &q in ps {
-                let (from, to) = (&self.nodes[alive[p]].device, &self.nodes[alive[q]].device);
-                let lat = self.net.send(MsgKind::PeerExchange, Some(from), Some(to), payload, round);
-                exchange_ms = exchange_ms.max(lat);
-            }
-        }
-        // snapshot of the weights as they leave each node: when exchange
-        // quantization is on, peers receive the int8-channel version
-        let snapshot: Vec<Vec<f32>> = alive
-            .iter()
-            .map(|&id| {
-                if self.cfg.quantize_exchange {
-                    quant::channel(&self.nodes[id].params)
-                } else {
-                    self.nodes[id].params.clone()
-                }
+        threads: usize,
+    ) -> Result<Vec<(ClusterRoundOut, TrafficLedger)>> {
+        let cfg = &self.cfg;
+        let root_key = self.root_key;
+        let base_net = &self.net;
+        let mut slots: Vec<Option<&mut NodeState>> =
+            self.nodes.iter_mut().map(Some).collect();
+        let units: Vec<(&mut ClusterState, Vec<&mut NodeState>)> = clusters
+            .iter_mut()
+            .map(|cluster| {
+                let nodes: Vec<&mut NodeState> = cluster
+                    .members
+                    .iter()
+                    .map(|&id| slots[id].take().expect("node claimed by two clusters"))
+                    .collect();
+                (cluster, nodes)
             })
             .collect();
-        let exchanged = peer_exchange(self.compute, &snapshot, &peers)?;
-        for (p, &id) in alive.iter().enumerate() {
-            self.nodes[id].params = exchanged[p].clone();
-        }
-
-        // --- driver collect + consensus (eq 10) ---
-        let collect_payload = if self.cfg.secure_aggregation {
-            // fixed-point i64 per element (see `secagg`)
-            (dim * 8) as u64 + 64
+        let run_one = |(cluster, mut nodes): (&mut ClusterState, Vec<&mut NodeState>),
+                       compute: &dyn ModelCompute|
+         -> Result<(ClusterRoundOut, TrafficLedger)> {
+            let seed = mix64(
+                mix64(cfg.seed, 0xC1_057E7),
+                mix64(round as u64, cluster.id as u64),
+            );
+            let mut net = base_net.fork(seed);
+            let out = cluster_round::scale_cluster_round(
+                cluster, &mut nodes, &mut net, compute, cfg, &root_key, round,
+            )?;
+            Ok((out, net.ledger))
+        };
+        let outs = if threads > 1 {
+            let compute = self.sync_compute.expect("effective_threads checked");
+            par::run_units_par(units, threads, move |u| run_one(u, compute))
         } else {
-            payload
+            let compute = self.compute;
+            par::run_units_seq(units, move |u| run_one(u, compute))
         };
-        let mut collect_ms = 0.0f64;
-        for &id in &alive {
-            if id != cluster.driver {
-                let (from, to) = (&self.nodes[id].device, &self.nodes[cluster.driver].device);
-                let lat = self.net.send(
-                    MsgKind::DriverCollect,
-                    Some(from),
-                    Some(to),
-                    collect_payload,
-                    round,
-                );
-                collect_ms = collect_ms.max(lat);
-            }
-        }
-        let consensus = if self.cfg.secure_aggregation {
-            // pairwise-masked sum: the driver only ever sees masked
-            // vectors; the integer sum cancels the masks exactly
-            let members: Vec<(usize, secagg::MaskSecret)> = alive
-                .iter()
-                .map(|&id| (id, secagg::MaskSecret::derive(&self.root_key, id as u64)))
-                .collect();
-            let masked: Vec<Vec<i64>> = exchanged
-                .iter()
-                .enumerate()
-                .map(|(i, p)| secagg::mask(&secagg::encode_fixed(p), &members, i))
-                .collect();
-            secagg::decode_mean(&secagg::sum_masked(&masked), masked.len())
-        } else {
-            driver_consensus(self.compute, &exchanged)?
-        };
-
-        // --- driver-side validation + checkpoint gate ---
-        let metrics = eval_model(
-            self.compute,
-            &cluster.eval_batches,
-            &cluster.eval_labels,
-            &consensus,
-        )?;
-        cluster.last_accuracy = metrics.accuracy;
-        let last_round = round + 1 == self.cfg.rounds;
-        let decision = match (last_round && self.cfg.force_final_upload, self.cfg.checkpoint_mode)
-        {
-            (true, CheckpointMode::ParamDelta) => cluster.delta_gate.force(&consensus),
-            (true, CheckpointMode::Accuracy) => cluster.gate.force(),
-            (false, CheckpointMode::ParamDelta) => cluster.delta_gate.observe(&consensus),
-            (false, CheckpointMode::Accuracy) => cluster.gate.observe(metrics.accuracy),
-        };
-        let mut upload_ms = 0.0f64;
-        match decision {
-            Decision::Upload => {
-                upload_ms = self.net.send(
-                    MsgKind::GlobalUpdate,
-                    Some(&self.nodes[cluster.driver].device),
-                    None,
-                    payload,
-                    round,
-                );
-                server.receive_cluster_model(
-                    cluster.id,
-                    consensus.clone(),
-                    cluster.members.len(),
-                    round,
-                )?;
-                cluster.updates += 1;
-                out.uploaded = true;
-            }
-            Decision::Skip => {
-                self.net.send(
-                    MsgKind::CheckpointLocal,
-                    Some(&self.nodes[cluster.driver].device),
-                    Some(&self.nodes[cluster.driver].device),
-                    payload,
-                    round,
-                );
-                cluster.store.push(Checkpoint {
-                    round: round as u32,
-                    metric: metrics.accuracy,
-                    params: consensus.clone(),
-                });
-            }
-        }
-
-        // --- driver broadcast; members adopt the cluster model ---
-        let mut broadcast_ms = 0.0f64;
-        for &id in &alive {
-            if id != cluster.driver {
-                let (from, to) = (&self.nodes[cluster.driver].device, &self.nodes[id].device);
-                let lat =
-                    self.net.send(MsgKind::DriverBroadcast, Some(from), Some(to), payload, round);
-                broadcast_ms = broadcast_ms.max(lat);
-            }
-            self.nodes[id].params = consensus.clone();
-        }
-
-        out.latency_ms = train_ms + exchange_ms + collect_ms + upload_ms + broadcast_ms;
-        Ok(out)
+        outs.into_iter().collect()
     }
 
     // ------------------------------------------------------------------
@@ -1151,6 +1035,7 @@ impl<'a> Simulation<'a> {
     /// `grouping` (optional) assigns nodes to report-rows so Table 1 can
     /// compare per-cluster counts; pass the SCALE clustering's members.
     pub fn run_fedavg(&mut self, grouping: Option<Vec<Vec<usize>>>) -> Result<RunReport> {
+        let threads = self.effective_threads()?;
         let wall = std::time::Instant::now();
         let mut server = GlobalServer::new(self.root_key);
         let payload = param_payload_bytes(self.compute.param_dim());
@@ -1178,34 +1063,25 @@ impl<'a> Simulation<'a> {
 
         for round in 0..self.cfg.rounds {
             self.inject_failures(round);
-            let alive: Vec<usize> =
-                (0..self.nodes.len()).filter(|&i| self.nodes[i].alive).collect();
+            // --- sharded training + upload phase (fans out like the
+            //     SCALE cluster rounds; ordered merge below) ---
+            let shard_outs = self.fedavg_train_shards(round, threads, payload)?;
             let mut train_ms = 0.0f64;
             let mut loss_sum = 0.0;
             let mut loss_n = 0usize;
             let mut upload_ms = 0.0f64;
-
-            for &id in &alive {
-                let (loss, ms) = self.nodes[id].local_train(
-                    self.compute,
-                    self.cfg.local_epochs,
-                    self.cfg.lr,
-                    self.cfg.reg,
-                )?;
-                loss_sum += loss;
-                loss_n += 1;
-                train_ms = train_ms.max(ms);
-                // every node uploads every round — the 2850 of Table 1
-                let lat = self.net.send(
-                    MsgKind::GlobalUpdate,
-                    Some(&self.nodes[id].device),
-                    None,
-                    payload,
-                    round,
-                );
-                upload_ms = upload_ms.max(lat);
-                per_node_updates[id] += 1;
+            for (out, ledger) in shard_outs {
+                self.net.ledger.merge(&ledger);
+                train_ms = train_ms.max(out.train_ms);
+                upload_ms = upload_ms.max(out.upload_ms);
+                loss_sum += out.loss_sum;
+                loss_n += out.loss_n;
+                for id in out.uploaded {
+                    per_node_updates[id] += 1;
+                }
             }
+            let alive: Vec<usize> =
+                (0..self.nodes.len()).filter(|&i| self.nodes[i].alive).collect();
 
             if !alive.is_empty() {
                 let bank: Vec<&[f32]> =
@@ -1289,6 +1165,54 @@ impl<'a> Simulation<'a> {
         Ok(self.finish_report("fedavg", rounds, cluster_reports, final_metrics, &server, wall))
     }
 
+    /// The FedAvg training + upload phase over fixed-width node shards
+    /// (`NODE_SHARD`); results come back in shard (= node-id) order.
+    fn fedavg_train_shards(
+        &mut self,
+        round: usize,
+        threads: usize,
+        payload: u64,
+    ) -> Result<Vec<(ShardOut, TrafficLedger)>> {
+        let cfg = &self.cfg;
+        let base_net = &self.net;
+        let units: Vec<(usize, &mut [NodeState])> =
+            self.nodes.chunks_mut(NODE_SHARD).enumerate().collect();
+        let run_one = |(shard, nodes): (usize, &mut [NodeState]),
+                       compute: &dyn ModelCompute|
+         -> Result<(ShardOut, TrafficLedger)> {
+            let seed = mix64(
+                mix64(cfg.seed, 0xFE_DA56),
+                mix64(round as u64, shard as u64),
+            );
+            let mut net = base_net.fork(seed);
+            let mut out = ShardOut::default();
+            for node in nodes.iter_mut() {
+                if !node.alive {
+                    continue;
+                }
+                let (loss, ms) =
+                    node.local_train(compute, cfg.local_epochs, cfg.lr, cfg.reg)?;
+                out.loss_sum += loss;
+                out.loss_n += 1;
+                out.train_ms = out.train_ms.max(ms);
+                // every node uploads every round — the 2850 of Table 1
+                let lat =
+                    net.send(MsgKind::GlobalUpdate, Some(&node.device), None, payload, round);
+                out.upload_ms = out.upload_ms.max(lat);
+                out.uploaded.push(node.id);
+            }
+            Ok((out, net.ledger))
+        };
+        let outs = if threads > 1 {
+            let compute = self.sync_compute.expect("effective_threads checked");
+            par::run_units_par(units, threads, move |u| run_one(u, compute))
+        } else {
+            let compute = self.compute;
+            par::run_units_seq(units, move |u| run_one(u, compute))
+        };
+        outs.into_iter().collect()
+    }
+
     fn finish_report(
         &mut self,
         mode: &str,
@@ -1328,6 +1252,7 @@ impl<'a> Simulation<'a> {
     /// exactly the spend SCALE's driver-node design avoids.
     pub fn run_hfl(&mut self, edge_period: usize) -> Result<RunReport> {
         anyhow::ensure!(edge_period >= 1, "edge_period must be >= 1");
+        let threads = self.effective_threads()?;
         let wall = std::time::Instant::now();
         let mut server = GlobalServer::new(self.root_key);
         let payload = param_payload_bytes(self.compute.param_dim());
@@ -1376,62 +1301,37 @@ impl<'a> Simulation<'a> {
 
         for round in 0..self.cfg.rounds {
             self.inject_failures(round);
+            // tier-2 sync every edge_period rounds (and final round)
+            let sync_round =
+                (round + 1) % edge_period == 0 || round + 1 == self.cfg.rounds;
+            // --- per-edge tier-1 phase (fans out like SCALE clusters);
+            //     cloud registration happens at the barrier, in edge
+            //     order, so uploads never race ---
+            let edge_outs =
+                self.hfl_edge_rounds(round, threads, payload, &edge_members, &edge_devices, sync_round)?;
             let mut loss_sum = 0.0;
             let mut loss_n = 0usize;
             let mut train_ms = 0.0f64;
             let mut tier1_ms = 0.0f64;
             let mut cloud_updates = 0u64;
-
-            for (e, members) in edge_members.iter().enumerate() {
-                let alive: Vec<usize> = members
-                    .iter()
-                    .copied()
-                    .filter(|&id| self.nodes[id].alive)
-                    .collect();
-                if alive.is_empty() {
-                    continue;
-                }
-                for &id in &alive {
-                    let (loss, ms) = self.nodes[id].local_train(
-                        self.compute,
-                        self.cfg.local_epochs,
-                        self.cfg.lr,
-                        self.cfg.reg,
-                    )?;
-                    loss_sum += loss;
-                    loss_n += 1;
-                    train_ms = train_ms.max(ms);
-                    let lat = self.net.send(
-                        MsgKind::EdgeUpdate,
-                        Some(&self.nodes[id].device),
-                        Some(&edge_devices[e]),
-                        payload,
-                        round,
-                    );
-                    tier1_ms = tier1_ms.max(lat);
-                }
-                let bank: Vec<&[f32]> =
-                    alive.iter().map(|&id| self.nodes[id].params.as_slice()).collect();
-                edge_models[e] = self.compute.aggregate(&bank)?;
-
-                // tier-2 sync every edge_period rounds (and final round)
-                if (round + 1) % edge_period == 0 || round + 1 == self.cfg.rounds {
-                    let lat = self.net.send(
-                        MsgKind::GlobalUpdate,
-                        Some(&edge_devices[e]),
-                        None,
-                        payload,
-                        round,
-                    );
-                    tier1_ms = tier1_ms.max(lat);
-                    server.receive_cluster_model(
-                        e,
-                        edge_models[e].clone(),
-                        members.len(),
-                        round,
-                    )?;
-                    edge_updates[e] += 1;
-                    cloud_updates += 1;
+            for (out, ledger) in edge_outs {
+                self.net.ledger.merge(&ledger);
+                loss_sum += out.loss_sum;
+                loss_n += out.loss_n;
+                train_ms = train_ms.max(out.train_ms);
+                tier1_ms = tier1_ms.max(out.tier1_ms);
+                if let Some(model) = out.edge_model {
+                    edge_models[out.e] = model;
+                    if out.uploaded {
+                        server.receive_cluster_model(
+                            out.e,
+                            edge_models[out.e].clone(),
+                            edge_members[out.e].len(),
+                            round,
+                        )?;
+                        edge_updates[out.e] += 1;
+                        cloud_updates += 1;
+                    }
                 }
             }
 
@@ -1538,6 +1438,82 @@ impl<'a> Simulation<'a> {
         Ok(report)
     }
 
+    /// One HFL round's tier-1 phase over every edge: client training,
+    /// client → edge uploads, edge aggregation, and — on sync rounds —
+    /// the edge → cloud transmission (the registration itself is the
+    /// caller's, at the barrier). Results come back in edge order.
+    fn hfl_edge_rounds(
+        &mut self,
+        round: usize,
+        threads: usize,
+        payload: u64,
+        edge_members: &[Vec<usize>],
+        edge_devices: &[DeviceProfile],
+        sync_round: bool,
+    ) -> Result<Vec<(EdgeOut, TrafficLedger)>> {
+        let cfg = &self.cfg;
+        let base_net = &self.net;
+        let mut slots: Vec<Option<&mut NodeState>> =
+            self.nodes.iter_mut().map(Some).collect();
+        let units: Vec<(usize, Vec<&mut NodeState>)> = edge_members
+            .iter()
+            .enumerate()
+            .map(|(e, members)| {
+                let nodes: Vec<&mut NodeState> = members
+                    .iter()
+                    .map(|&id| slots[id].take().expect("node claimed by two edges"))
+                    .collect();
+                (e, nodes)
+            })
+            .collect();
+        let run_one = |(e, mut nodes): (usize, Vec<&mut NodeState>),
+                       compute: &dyn ModelCompute|
+         -> Result<(EdgeOut, TrafficLedger)> {
+            let seed =
+                mix64(mix64(cfg.seed, 0x4F1_ED6E), mix64(round as u64, e as u64));
+            let mut net = base_net.fork(seed);
+            let mut out = EdgeOut { e, ..Default::default() };
+            let alive: Vec<usize> =
+                (0..nodes.len()).filter(|&li| nodes[li].alive).collect();
+            if alive.is_empty() {
+                return Ok((out, net.ledger)); // dark edge skips the round
+            }
+            for &li in &alive {
+                let (loss, ms) =
+                    nodes[li].local_train(compute, cfg.local_epochs, cfg.lr, cfg.reg)?;
+                out.loss_sum += loss;
+                out.loss_n += 1;
+                out.train_ms = out.train_ms.max(ms);
+                let lat = net.send(
+                    MsgKind::EdgeUpdate,
+                    Some(&nodes[li].device),
+                    Some(&edge_devices[e]),
+                    payload,
+                    round,
+                );
+                out.tier1_ms = out.tier1_ms.max(lat);
+            }
+            let bank: Vec<&[f32]> =
+                alive.iter().map(|&li| nodes[li].params.as_slice()).collect();
+            out.edge_model = Some(compute.aggregate(&bank)?);
+            if sync_round {
+                let lat =
+                    net.send(MsgKind::GlobalUpdate, Some(&edge_devices[e]), None, payload, round);
+                out.tier1_ms = out.tier1_ms.max(lat);
+                out.uploaded = true;
+            }
+            Ok((out, net.ledger))
+        };
+        let outs = if threads > 1 {
+            let compute = self.sync_compute.expect("effective_threads checked");
+            par::run_units_par(units, threads, move |u| run_one(u, compute))
+        } else {
+            let compute = self.compute;
+            par::run_units_seq(units, move |u| run_one(u, compute))
+        };
+        outs.into_iter().collect()
+    }
+
     /// The SCALE clustering's member lists (for baseline grouping): runs
     /// formation on a scratch server without touching `self.net` counts.
     pub fn scale_grouping(&mut self) -> Result<Vec<Vec<usize>>> {
@@ -1552,19 +1528,37 @@ impl<'a> Simulation<'a> {
     }
 }
 
-/// Internal per-cluster round accounting.
+/// One node-shard's training-phase results (FedAvg baseline), merged at
+/// the round barrier in shard order.
 #[derive(Default)]
-struct ClusterRoundOut {
-    uploaded: bool,
-    elections: u64,
-    latency_ms: f64,
+struct ShardOut {
     loss_sum: f64,
     loss_n: usize,
+    train_ms: f64,
+    upload_ms: f64,
+    /// Node ids that uploaded this round.
+    uploaded: Vec<usize>,
+}
+
+/// One edge's tier-1 round results (HFL baseline), merged at the round
+/// barrier in edge order.
+#[derive(Default)]
+struct EdgeOut {
+    e: usize,
+    loss_sum: f64,
+    loss_n: usize,
+    train_ms: f64,
+    tier1_ms: f64,
+    /// Fresh edge model (None when every member was down).
+    edge_model: Option<Vec<f32>>,
+    /// Whether this edge synced to the cloud this round.
+    uploaded: bool,
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::CheckpointMode;
     use crate::runtime::compute::NativeSvm;
 
     fn small_cfg() -> SimConfig {
@@ -1826,5 +1820,69 @@ mod tests {
         let first = report.rounds.first().unwrap().mean_loss;
         let last = report.rounds.last().unwrap().mean_loss;
         assert!(last < first, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn parallel_scale_rounds_are_fingerprint_identical() {
+        let compute = native();
+        let fp = |threads: usize| {
+            let mut cfg = small_cfg();
+            cfg.threads = threads;
+            let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
+            sim.run_scale().unwrap().fingerprint()
+        };
+        let base = fp(1);
+        assert_eq!(fp(2), base, "threads=2 diverged");
+        assert_eq!(fp(5), base, "threads=5 diverged");
+        // the sequential constructor takes the same per-cluster path
+        let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
+        assert_eq!(sim.run_scale().unwrap().fingerprint(), base);
+    }
+
+    #[test]
+    fn parallel_baselines_are_fingerprint_identical() {
+        let compute = native();
+        let run = |threads: usize| {
+            let mut cfg = small_cfg();
+            cfg.threads = threads;
+            let mut sim = Simulation::new_parallel(cfg.clone(), &compute).unwrap();
+            let fedavg = sim.run_fedavg(None).unwrap().fingerprint();
+            let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
+            let hfl = sim.run_hfl(3).unwrap().fingerprint();
+            (fedavg, hfl)
+        };
+        assert_eq!(run(1), run(4));
+    }
+
+    #[test]
+    fn parallel_scale_under_churn_and_failures_matches_sequential() {
+        let scenario = Scenario::from_toml(
+            "[regulation]\nmin_live_frac = 0.7\ncooldown = 1\n\
+             [[event]]\nround = 1\nkind = \"leave\"\nfrac = 0.3\nduration = 2\n\
+             [[event]]\nround = 3\nkind = \"bandwidth\"\nfactor = 0.5\nduration = 2\n",
+        )
+        .unwrap();
+        let compute = native();
+        let fp = |threads: usize| {
+            let mut cfg = small_cfg();
+            cfg.rounds = 10;
+            cfg.node_failure_prob = 0.15;
+            cfg.node_recovery_prob = 0.5;
+            cfg.threads = threads;
+            let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
+            sim.run_scale_scenario(&scenario).unwrap().fingerprint()
+        };
+        assert_eq!(fp(1), fp(4));
+    }
+
+    #[test]
+    fn threads_without_sync_backend_error_helpfully() {
+        let compute = native();
+        let mut cfg = small_cfg();
+        cfg.threads = 4;
+        // plain constructor drops the Sync marker, so fan-out must refuse
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        let err = sim.run_scale().unwrap_err().to_string();
+        assert!(err.contains("thread-safe"), "{err}");
     }
 }

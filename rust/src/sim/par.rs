@@ -1,0 +1,104 @@
+//! Deterministic fan-out executor for the cluster-parallel round engine.
+//!
+//! [`run_units_par`] distributes round units (one per cluster / node
+//! shard / edge) over `std::thread::scope` workers through a shared work
+//! queue and returns the outputs **in unit order**, whatever the
+//! scheduling was. Callers merge the outputs at the round barrier in
+//! that order, which is what makes `--threads N` byte-identical to
+//! `--threads 1`: each unit owns its RNG child stream and traffic
+//! sub-ledger, so only the merge order could leak scheduling — and the
+//! merge order is pinned here.
+//!
+//! The image vendors no `rayon`; a `Mutex<VecDeque>` queue over scoped
+//! threads is dependency-free and plenty for cluster-grained work (units
+//! are coarse: tens of µs to ms each).
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::thread;
+
+/// Run every unit inline, in order — the `--threads 1` path. Identical
+/// output to [`run_units_par`] by construction.
+pub(crate) fn run_units_seq<T, O>(units: Vec<T>, mut f: impl FnMut(T) -> O) -> Vec<O> {
+    units.into_iter().map(&mut f).collect()
+}
+
+/// Fan units out over at most `threads` scoped workers; outputs come
+/// back in unit order regardless of which worker ran what.
+pub(crate) fn run_units_par<T: Send, O: Send>(
+    units: Vec<T>,
+    threads: usize,
+    f: impl Fn(T) -> O + Sync,
+) -> Vec<O> {
+    let n = units.len();
+    if threads <= 1 || n <= 1 {
+        return run_units_seq(units, f);
+    }
+    let workers = threads.min(n);
+    let queue: Mutex<VecDeque<(usize, T)>> =
+        Mutex::new(units.into_iter().enumerate().collect());
+    let mut out: Vec<Option<O>> = std::iter::repeat_with(|| None).take(n).collect();
+    thread::scope(|scope| {
+        let queue = &queue;
+        let f = &f;
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut done: Vec<(usize, O)> = Vec::new();
+                    loop {
+                        let next = queue.lock().expect("unit queue poisoned").pop_front();
+                        match next {
+                            Some((i, unit)) => done.push((i, f(unit))),
+                            None => break,
+                        }
+                    }
+                    done
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, o) in h.join().expect("round worker panicked") {
+                out[i] = Some(o);
+            }
+        }
+    });
+    out.into_iter().map(|o| o.expect("unit result missing")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outputs_in_unit_order_for_any_thread_count() {
+        let units: Vec<usize> = (0..37).collect();
+        let seq = run_units_seq(units.clone(), |u| u * 3);
+        for threads in [1, 2, 4, 8, 64] {
+            let par = run_units_par(units.clone(), threads, |u| u * 3);
+            assert_eq!(par, seq, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn workers_share_the_queue_not_a_static_split() {
+        // a lopsided workload still completes and preserves order
+        let units: Vec<u64> = (0..16).map(|i| if i == 0 { 2_000_000 } else { 10 }).collect();
+        let out = run_units_par(units, 4, |spin| {
+            let mut acc = 0u64;
+            for i in 0..spin {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+            spin
+        });
+        assert_eq!(out[0], 2_000_000);
+        assert!(out[1..].iter().all(|&v| v == 10));
+    }
+
+    #[test]
+    fn empty_and_single_unit_edge_cases() {
+        let none: Vec<u32> = Vec::new();
+        assert!(run_units_par(none, 8, |u| u).is_empty());
+        assert_eq!(run_units_par(vec![7u32], 8, |u| u + 1), vec![8]);
+    }
+}

@@ -235,6 +235,18 @@ impl RunReport {
         v.set("wall_ms", Value::Num(0.0));
         v.to_string_compact()
     }
+
+    /// 64-bit FNV-1a of [`Self::fingerprint`], hex-encoded: the compact
+    /// form the golden-fingerprint regression suite pins (the full
+    /// canonical JSON runs to tens of KB per run).
+    pub fn fingerprint_hash(&self) -> String {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in self.fingerprint().as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        format!("{h:016x}")
+    }
 }
 
 #[cfg(test)]
@@ -327,5 +339,15 @@ mod tests {
         let mut c = report();
         c.rounds[0].updates += 1;
         assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_hash_tracks_fingerprint() {
+        let mut a = report();
+        let b = report();
+        assert_eq!(a.fingerprint_hash(), b.fingerprint_hash());
+        assert_eq!(a.fingerprint_hash().len(), 16);
+        a.rounds[0].updates += 1;
+        assert_ne!(a.fingerprint_hash(), b.fingerprint_hash());
     }
 }

@@ -1,0 +1,141 @@
+//! CLI integration: the `scale scenario gen → run → sweep --verify`
+//! round-trip through the real binary, asserting exit codes, that the
+//! printed re-clustering timeline parses, and that the JSON report is
+//! valid. Exercises `--threads` end-to-end on the way.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn scale_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_scale")
+}
+
+fn run(args: &[&str]) -> Output {
+    Command::new(scale_bin())
+        .args(args)
+        .output()
+        .expect("spawning scale binary")
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("scale_cli_rt_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    dir
+}
+
+#[test]
+fn scenario_gen_run_sweep_roundtrip() {
+    let dir = temp_dir("scenario");
+    let toml = dir.join("scenario.toml");
+    let report = dir.join("report.json");
+
+    // --- gen ---
+    let out = run(&["scenario", "gen", "--out", toml.to_str().unwrap()]);
+    assert!(out.status.success(), "gen failed: {out:?}");
+    assert!(toml.exists(), "scenario file not written");
+
+    // --- run (threads=2 exercises the parallel engine end-to-end) ---
+    let out = run(&[
+        "scenario",
+        "run",
+        "--file",
+        toml.to_str().unwrap(),
+        "--threads",
+        "2",
+        "--out",
+        report.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "run failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+
+    // the printed self-regulation timeline must parse: a header then one
+    // `round | events | reclu | elect | live` row per round
+    let mut lines = stdout.lines();
+    lines
+        .find(|l| l.contains("round | events | reclu | elect | live"))
+        .expect("timeline header missing");
+    let mut rows = 0usize;
+    for line in lines.by_ref() {
+        let cols: Vec<&str> = line.split('|').map(str::trim).collect();
+        if cols.len() != 5 {
+            break; // end of the table
+        }
+        for c in &cols {
+            c.parse::<u64>()
+                .unwrap_or_else(|_| panic!("non-numeric timeline cell '{c}' in '{line}'"));
+        }
+        rows += 1;
+    }
+    // the example scenario's [sim] table runs 15 rounds
+    assert_eq!(rows, 15, "timeline rows:\n{stdout}");
+    assert!(stdout.contains("re-clusterings"), "{stdout}");
+
+    // the JSON report parses and carries the scenario log
+    let json = std::fs::read_to_string(&report).expect("report.json");
+    let v = scale_fl::util::json::parse(&json).expect("report JSON parses");
+    assert_eq!(
+        v.get("rounds").and_then(|r| r.as_arr()).map(|a| a.len()),
+        Some(15),
+        "report rounds"
+    );
+    assert!(v.get("scenario").is_some(), "scenario log missing");
+
+    // --- sweep --verify: parallel must equal sequential, and say so ---
+    let out = run(&[
+        "scenario",
+        "sweep",
+        "--file",
+        toml.to_str().unwrap(),
+        "--seeds",
+        "2",
+        "--verify",
+    ]);
+    assert!(out.status.success(), "sweep failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("verify: parallel == sequential"),
+        "verify line missing:\n{stdout}"
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn scenario_run_without_file_exits_nonzero() {
+    let out = run(&["scenario", "run"]);
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--file"), "unhelpful error: {stderr}");
+}
+
+#[test]
+fn fleet_bench_small_is_deterministic_and_writes_csv() {
+    let dir = temp_dir("fleet");
+    let csv = dir.join("fleet.csv");
+    // a deliberately tiny fleet so the integration test stays fast; the
+    // command hard-fails internally if fingerprints diverge
+    let out = run(&[
+        "fleet",
+        "bench",
+        "--nodes",
+        "60",
+        "--clusters",
+        "6",
+        "--rounds",
+        "3",
+        "--preset",
+        "fleet-1k",
+        "--threads",
+        "2",
+        "--csv",
+        csv.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "fleet bench failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("identical"), "{stdout}");
+    let text = std::fs::read_to_string(&csv).expect("csv written");
+    assert!(text.starts_with("nodes,clusters,rounds,threads"), "{text}");
+    assert_eq!(text.lines().count(), 2, "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,195 @@
+//! Golden-fingerprint regression suite: pins `RunReport::fingerprint`
+//! (as its 64-bit FNV hash) for canonical `(config, seed, scenario)`
+//! triples across the SCALE / FedAvg / HFL engines, so a refactor cannot
+//! silently change results.
+//!
+//! Every case is executed twice — `--threads 1` and `SCALE_TEST_THREADS`
+//! (default 4) — and the two fingerprints must match byte-for-byte
+//! *before* the golden comparison: the cluster-parallel determinism
+//! contract is checked on every run, golden file or not.
+//!
+//! Blessing: `SCALE_BLESS=1 cargo test --test golden_fingerprints`
+//! regenerates `tests/golden/fingerprints.txt`. Entries missing from the
+//! file (e.g. a freshly added case) are auto-primed on first run;
+//! entries that *exist* and mismatch fail the suite.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use scale_fl::config::{CheckpointMode, Partition, SimConfig};
+use scale_fl::runtime::compute::NativeSvm;
+use scale_fl::scenario::Scenario;
+use scale_fl::sim::Simulation;
+
+/// Which engine a golden case drives.
+enum Mode {
+    Scale,
+    Scenario(&'static str),
+    FedAvg,
+    Hfl(usize),
+}
+
+fn base_cfg(nodes: usize, clusters: usize, rounds: usize, seed: u64) -> SimConfig {
+    SimConfig {
+        n_nodes: nodes,
+        n_clusters: clusters,
+        rounds,
+        local_epochs: 2,
+        eval_every: 4,
+        dataset_samples: nodes * 18,
+        dataset_malignant: nodes * 7,
+        seed,
+        ..Default::default()
+    }
+    .normalized()
+}
+
+const CHURN_SCENARIO: &str = "\
+[regulation]\nmin_live_frac = 0.7\ncooldown = 1\n\
+[[event]]\nround = 1\nkind = \"leave\"\nfrac = 0.3\nduration = 2\n\
+[[event]]\nround = 3\nkind = \"bandwidth\"\nfactor = 0.5\nduration = 2\n\
+[[event]]\nround = 4\nkind = \"drift\"\nfrac = 0.2\nflip_frac = 0.3\n";
+
+fn cases() -> Vec<(&'static str, SimConfig, Mode)> {
+    let skew_quantized = {
+        let mut cfg = base_cfg(24, 4, 8, 11);
+        cfg.partition = Partition::LabelSkew(0.4);
+        cfg.quantize_exchange = true;
+        cfg.normalized()
+    };
+    let secagg_failures = {
+        let mut cfg = base_cfg(20, 4, 10, 7);
+        cfg.secure_aggregation = true;
+        cfg.checkpoint_mode = CheckpointMode::Accuracy;
+        cfg.node_failure_prob = 0.2;
+        cfg.node_recovery_prob = 0.5;
+        cfg.normalized()
+    };
+    vec![
+        ("scale-iid-20x4", base_cfg(20, 4, 8, 5), Mode::Scale),
+        ("scale-skew-quantized", skew_quantized, Mode::Scale),
+        ("scale-secagg-accgate-failures", secagg_failures, Mode::Scale),
+        (
+            "scale-scenario-churn",
+            base_cfg(30, 5, 10, 13),
+            Mode::Scenario(CHURN_SCENARIO),
+        ),
+        ("fedavg-iid-20x4", base_cfg(20, 4, 6, 5), Mode::FedAvg),
+        ("hfl-20x4-period3", base_cfg(20, 4, 8, 9), Mode::Hfl(3)),
+    ]
+}
+
+fn run_case(cfg: &SimConfig, mode: &Mode, threads: usize) -> (String, String) {
+    let compute = NativeSvm::new(NativeSvm::default_dims());
+    let mut cfg = cfg.clone();
+    cfg.threads = threads;
+    let mut sim = Simulation::new_parallel(cfg, &compute).expect("sim setup");
+    let report = match mode {
+        Mode::Scale => sim.run_scale(),
+        Mode::Scenario(toml) => {
+            let scenario = Scenario::from_toml(toml).expect("scenario toml");
+            sim.run_scale_scenario(&scenario)
+        }
+        Mode::FedAvg => sim.run_fedavg(None),
+        Mode::Hfl(period) => sim.run_hfl(*period),
+    }
+    .expect("run");
+    (report.fingerprint(), report.fingerprint_hash())
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/fingerprints.txt")
+}
+
+fn read_golden() -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    let Ok(text) = std::fs::read_to_string(golden_path()) else {
+        return out;
+    };
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some((name, hash)) = line.split_once('=') {
+            out.insert(name.trim().to_string(), hash.trim().to_string());
+        }
+    }
+    out
+}
+
+fn write_golden(entries: &BTreeMap<String, String>) {
+    let mut text = String::from(
+        "# Golden RunReport fingerprint hashes (64-bit FNV of the canonical\n\
+         # JSON, wall-clock excluded). One line per (config, seed, scenario)\n\
+         # triple; regenerate intentionally with:\n\
+         #   SCALE_BLESS=1 cargo test --test golden_fingerprints\n",
+    );
+    for (name, hash) in entries {
+        let _ = writeln!(text, "{name} = {hash}");
+    }
+    let path = golden_path();
+    std::fs::create_dir_all(path.parent().unwrap()).expect("golden dir");
+    std::fs::write(&path, text).expect("writing golden file");
+}
+
+#[test]
+fn golden_fingerprints_pinned_and_thread_invariant() {
+    let bless = matches!(std::env::var("SCALE_BLESS").as_deref(), Ok("1"));
+    let par_threads: usize = std::env::var("SCALE_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+
+    let mut golden = read_golden();
+    let mut mismatches: Vec<String> = Vec::new();
+    let mut primed = false;
+
+    for (name, cfg, mode) in cases() {
+        let (fp_seq, hash_seq) = run_case(&cfg, &mode, 1);
+        if par_threads > 1 {
+            let (fp_par, _) = run_case(&cfg, &mode, par_threads);
+            assert_eq!(
+                fp_seq, fp_par,
+                "{name}: fingerprint diverged between threads 1 and {par_threads}"
+            );
+        }
+        match golden.get(name) {
+            Some(stored) if *stored == hash_seq => {}
+            Some(stored) => {
+                if bless {
+                    golden.insert(name.to_string(), hash_seq.clone());
+                    primed = true;
+                } else {
+                    mismatches.push(format!(
+                        "{name}: stored {stored}, computed {hash_seq}"
+                    ));
+                }
+            }
+            None => {
+                // auto-prime fresh cases so the suite bootstraps itself
+                // in environments without a committed pin — loudly: an
+                // unprimed case verifies thread-invariance but pins
+                // NOTHING until the regenerated file is committed
+                eprintln!(
+                    "golden_fingerprints: priming '{name}' = {hash_seq} \
+                     (no stored pin — commit tests/golden/fingerprints.txt \
+                     to arm the regression check)"
+                );
+                golden.insert(name.to_string(), hash_seq.clone());
+                primed = true;
+            }
+        }
+    }
+
+    if primed {
+        write_golden(&golden);
+    }
+    assert!(
+        mismatches.is_empty(),
+        "golden fingerprints changed (rerun with SCALE_BLESS=1 only if the \
+         change is intentional):\n{}",
+        mismatches.join("\n")
+    );
+}

@@ -5,7 +5,7 @@
 
 use scale_fl::checkpoint::Checkpoint;
 use scale_fl::config::{Partition, SimConfig};
-use scale_fl::netsim::MsgKind;
+use scale_fl::netsim::{MsgKind, SentMsg, TrafficLedger};
 use scale_fl::quant::QuantVec;
 use scale_fl::runtime::compute::NativeSvm;
 use scale_fl::sim::Simulation;
@@ -294,6 +294,161 @@ fn scenario_runs_are_byte_identical_given_config_and_seed() {
             let (a, b) = (run()?, run()?);
             if a != b {
                 return Err("two scenario runs diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn parallel_engines_match_sequential_fingerprints() {
+    // The cluster-parallel determinism contract over *random* configs:
+    // for any (config, seed), `threads ∈ {2, 4, 8}` must produce the
+    // exact fingerprint of the sequential run — for SCALE and for the
+    // sharded baseline phases.
+    let compute = NativeSvm::new(NativeSvm::default_dims());
+    check(
+        &Config { cases: 4, seed: 0x9A11E1, max_size: 8 },
+        "parallel determinism",
+        |g| {
+            let mut cfg = random_cfg(g);
+            cfg.dataset_malignant = (cfg.dataset_samples as f64 * 0.37) as usize;
+            let cfg = cfg.normalized();
+            let scale_fp = |threads: usize| -> Result<String, String> {
+                let mut c = cfg.clone();
+                c.threads = threads;
+                let mut sim = Simulation::new_parallel(c, &compute)
+                    .map_err(|e| format!("setup: {e}"))?;
+                Ok(sim.run_scale().map_err(|e| format!("run: {e}"))?.fingerprint())
+            };
+            let base = scale_fp(1)?;
+            for threads in [2usize, 4, 8] {
+                if scale_fp(threads)? != base {
+                    return Err(format!("scale diverged at threads={threads}"));
+                }
+            }
+            let baseline_fp = |threads: usize| -> Result<(String, String), String> {
+                let mut c = cfg.clone();
+                c.threads = threads;
+                let mut sim = Simulation::new_parallel(c.clone(), &compute)
+                    .map_err(|e| format!("setup: {e}"))?;
+                let fedavg = sim
+                    .run_fedavg(None)
+                    .map_err(|e| format!("fedavg: {e}"))?
+                    .fingerprint();
+                let mut sim = Simulation::new_parallel(c, &compute)
+                    .map_err(|e| format!("setup: {e}"))?;
+                let hfl =
+                    sim.run_hfl(2).map_err(|e| format!("hfl: {e}"))?.fingerprint();
+                Ok((fedavg, hfl))
+            };
+            if baseline_fp(1)? != baseline_fp(4)? {
+                return Err("baselines diverged at threads=4".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn traffic_ledger_merge_ordered_exact_and_order_insensitive() {
+    // The round barrier's correctness conditions: (a) an in-order merge
+    // of contiguous sub-ledgers reproduces the sequential ledger — the
+    // message log byte-for-byte, u64 totals exactly, f64 totals to
+    // rounding; (b) per-kind totals are associative and merge-order
+    // insensitive (counts/bytes exact, f64 within float tolerance).
+    check(
+        &Config { cases: 40, seed: 0x1ED63, max_size: 64 },
+        "ledger merge",
+        |g| {
+            let kinds = [
+                MsgKind::Summary,
+                MsgKind::PeerExchange,
+                MsgKind::GlobalUpdate,
+                MsgKind::Heartbeat,
+                MsgKind::DriverCollect,
+            ];
+            let n = g.usize_in(1, 120);
+            let msgs: Vec<SentMsg> = (0..n)
+                .map(|i| SentMsg {
+                    kind: kinds[g.rng.index(kinds.len())],
+                    from: Some(g.rng.index(30)),
+                    to: if g.rng.chance(0.2) { None } else { Some(g.rng.index(30)) },
+                    bytes: g.rng.index(100_000) as u64,
+                    latency_ms: g.f64_in(0.01, 500.0),
+                    energy_j: g.f64_in(0.0, 5.0),
+                    round: i % 7,
+                })
+                .collect();
+
+            // sequential reference
+            let mut seq = TrafficLedger::new(true);
+            for m in &msgs {
+                seq.record(m.clone());
+            }
+
+            // contiguous split, merged in order — the engine's barrier
+            let cut1 = g.rng.index(n + 1);
+            let cut2 = cut1 + g.rng.index(n - cut1 + 1);
+            let mut parts: Vec<TrafficLedger> = Vec::new();
+            for range in [0..cut1, cut1..cut2, cut2..n] {
+                let mut l = TrafficLedger::new(true);
+                for m in &msgs[range] {
+                    l.record(m.clone());
+                }
+                parts.push(l);
+            }
+            let mut merged = TrafficLedger::new(true);
+            for p in &parts {
+                merged.merge(p);
+            }
+            if merged.log() != seq.log() {
+                return Err("ordered merge log != sequential log".into());
+            }
+            if merged.global_updates_by_round() != seq.global_updates_by_round() {
+                return Err("per-round update series mismatch".into());
+            }
+            for kind in kinds {
+                let (a, b) = (merged.totals(kind), seq.totals(kind));
+                if a.count != b.count || a.bytes != b.bytes {
+                    return Err(format!("{kind:?} count/bytes mismatch"));
+                }
+                if (a.latency_ms - b.latency_ms).abs()
+                    > 1e-9 * (1.0 + b.latency_ms.abs())
+                    || (a.energy_j - b.energy_j).abs() > 1e-9 * (1.0 + b.energy_j.abs())
+                {
+                    return Err(format!("{kind:?} f64 totals drifted"));
+                }
+            }
+
+            // associativity / order-insensitivity of per-kind totals
+            let mut reversed = TrafficLedger::new(false);
+            for p in parts.iter().rev() {
+                reversed.merge(p);
+            }
+            let mut left = TrafficLedger::new(false);
+            left.merge(&parts[0]);
+            left.merge(&parts[1]);
+            let mut nested = TrafficLedger::new(false);
+            nested.merge(&left);
+            nested.merge(&parts[2]);
+            for kind in kinds {
+                let s = seq.totals(kind);
+                for (tag, l) in [("reversed", &reversed), ("nested", &nested)] {
+                    let t = l.totals(kind);
+                    if t.count != s.count || t.bytes != s.bytes {
+                        return Err(format!(
+                            "{tag} {kind:?} count/bytes not order-insensitive"
+                        ));
+                    }
+                    if (t.latency_ms - s.latency_ms).abs()
+                        > 1e-6 * (1.0 + s.latency_ms.abs())
+                        || (t.energy_j - s.energy_j).abs()
+                            > 1e-6 * (1.0 + s.energy_j.abs())
+                    {
+                        return Err(format!("{tag} {kind:?} f64 totals drifted"));
+                    }
+                }
             }
             Ok(())
         },
