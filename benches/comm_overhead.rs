@@ -1,15 +1,19 @@
 //! Bench: §4.2.2 communication overhead — global-server updates and cloud
-//! bytes as the federation scales (nodes ∈ {20, 50, 100, 200}).
+//! bytes as the federation scales (nodes ∈ {20, 50, 100, 200}), plus the
+//! wire-codec comparison on the fleet-1k preset (encoded bytes-on-wire).
 //!
 //! Expected shape: FedAvg grows linearly in nodes × rounds; SCALE grows
 //! with clusters × rounds (sub-linear in nodes at fixed cluster count) —
-//! the ~10x gap at 100 nodes widens with fleet size.
+//! the ~10x gap at 100 nodes widens with fleet size. On the wire axis,
+//! `--codec i8 --delta` (the `lean` preset) must cut the param-path
+//! bytes ≥ 4x vs the f32 passthrough.
 
 use scale_fl::bench::section;
 use scale_fl::config::SimConfig;
 use scale_fl::netsim::MsgKind;
 use scale_fl::runtime::compute::NativeSvm;
 use scale_fl::sim::Simulation;
+use scale_fl::wire::WireConfig;
 
 fn main() {
     let compute = NativeSvm::new(NativeSvm::default_dims());
@@ -63,6 +67,38 @@ fn main() {
         assert!(scale.total_updates() < fedavg.total_updates());
         assert!(scale_cloud < fedavg_cloud, "cloud bytes must shrink");
     }
+
+    section("wire codecs on the fleet-1k preset (encoded bytes-on-wire)");
+    println!("codec        | param-path KB | reduction | updates | final acc");
+    let mut f32_bytes = 0u64;
+    let mut lean_reduction = 0.0f64;
+    for preset in ["lossless", "f16", "i8", "lean"] {
+        let wire = WireConfig::preset(preset).unwrap();
+        let mut cfg = SimConfig::preset("fleet-1k").unwrap();
+        cfg.wire = wire;
+        let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
+        let report = sim.run_scale().unwrap();
+        let bytes = report.param_path_bytes();
+        if preset == "lossless" {
+            f32_bytes = bytes;
+        }
+        let reduction = f32_bytes as f64 / bytes.max(1) as f64;
+        if preset == "lean" {
+            lean_reduction = reduction;
+        }
+        println!(
+            "{:<12} | {:>13.1} | {:>8.2}x | {:>7} | {:.3}",
+            wire.label(),
+            bytes as f64 / 1e3,
+            reduction,
+            report.total_updates(),
+            report.final_metrics.accuracy,
+        );
+    }
+    assert!(
+        lean_reduction >= 4.0,
+        "i8+delta must cut param-path bytes >= 4x vs f32 (got {lean_reduction:.2}x)"
+    );
 
     section("per-round update trace at 100 nodes (tapering)");
     let cfg = SimConfig::paper_table1();

@@ -15,6 +15,7 @@
 
 use anyhow::Result;
 
+use crate::quant::QuantVec;
 use crate::runtime::compute::ModelCompute;
 
 /// Eq 9 over one cluster. `params[p]` are the weights of the member at
@@ -52,6 +53,38 @@ pub fn driver_consensus(
     anyhow::ensure!(!params.is_empty(), "consensus over empty cluster");
     let bank: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
     compute.aggregate(&bank)
+}
+
+/// Dequantize-accumulate: average int8-quantized contributions (wire
+/// frames' [`QuantVec`] payloads) without materializing each dequantized
+/// vector — every contribution's per-tensor scale/zero-point is applied
+/// inline while accumulating in `f64`, so a server can fold quantized
+/// uploads straight into the global model.
+///
+/// This is the server-side *reference* for real int8 upload streams
+/// (see `examples/comm_budget.rs`); the simulation models upload bytes
+/// via the wire layer while keeping its consensus math in full
+/// precision (DESIGN.md §6.4).
+///
+/// Equivalent (to float rounding) to `decode()`-ing every contribution
+/// and taking the mean; errors on empty input or mismatched dimensions.
+pub fn dequantize_accumulate(contributions: &[QuantVec]) -> Result<Vec<f32>> {
+    anyhow::ensure!(!contributions.is_empty(), "accumulate over no contributions");
+    let dim = contributions[0].codes.len();
+    let mut acc = vec![0.0f64; dim];
+    for q in contributions {
+        anyhow::ensure!(
+            q.codes.len() == dim,
+            "contribution dim {} != {dim}",
+            q.codes.len()
+        );
+        let (min, step) = (q.min as f64, q.step as f64);
+        for (a, &c) in acc.iter_mut().zip(&q.codes) {
+            *a += min + c as f64 * step;
+        }
+    }
+    let n = contributions.len() as f64;
+    Ok(acc.into_iter().map(|v| (v / n) as f32).collect())
 }
 
 /// Convergence diagnostic: maximum pairwise L2 distance between member
@@ -177,6 +210,31 @@ mod tests {
         let peers = peer_sets(Topology::Full, &(0..6).collect::<Vec<_>>(), 0, 0);
         let out = peer_exchange(&c, &params, &peers).unwrap();
         assert!(dispersion(&out) < 1e-5);
+    }
+
+    #[test]
+    fn dequantize_accumulate_matches_decode_then_mean() {
+        let banks = [random_params(5, 7), random_params(3, 8)];
+        for params in &banks {
+            let quantized: Vec<QuantVec> =
+                params.iter().map(|p| QuantVec::encode(p)).collect();
+            let fused = dequantize_accumulate(&quantized).unwrap();
+            // reference: decode every contribution, then plain mean
+            let decoded: Vec<Vec<f32>> = quantized.iter().map(|q| q.decode()).collect();
+            let n = decoded.len() as f32;
+            for (i, f) in fused.iter().enumerate() {
+                let mean: f32 = decoded.iter().map(|d| d[i]).sum::<f32>() / n;
+                assert!((f - mean).abs() < 1e-5, "coord {i}: {f} vs {mean}");
+            }
+        }
+    }
+
+    #[test]
+    fn dequantize_accumulate_rejects_bad_input() {
+        assert!(dequantize_accumulate(&[]).is_err());
+        let a = QuantVec::encode(&[1.0, 2.0]);
+        let b = QuantVec::encode(&[1.0, 2.0, 3.0]);
+        assert!(dequantize_accumulate(&[a, b]).is_err());
     }
 
     #[test]

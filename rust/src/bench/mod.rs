@@ -14,6 +14,7 @@ use crate::runtime::manifest::ModelKind;
 use crate::sim::report::RunReport;
 use crate::sim::Simulation;
 use crate::util::stats::percentile;
+use crate::wire::WireConfig;
 
 /// Timing summary over all measured iterations.
 #[derive(Clone, Copy, Debug)]
@@ -65,6 +66,13 @@ pub struct FleetMeasurement {
     /// parallel engine's determinism contract. Callers should hard-fail
     /// when false.
     pub identical: bool,
+    /// Encoded bytes over the parameter path (`RunReport::param_path_bytes`)
+    /// under the configured wire protocol.
+    pub param_bytes: u64,
+    /// The same config re-run with the `f32` passthrough wire, when the
+    /// measured config uses a compact codec — the bytes-on-wire
+    /// reference for the reduction factor. `None` for passthrough runs.
+    pub ref_param_bytes: Option<u64>,
     /// The parallel run's report.
     pub report: RunReport,
 }
@@ -73,16 +81,25 @@ impl FleetMeasurement {
     pub fn speedup(&self) -> f64 {
         self.seq_s / self.par_s.max(1e-9)
     }
+
+    /// Bytes-on-wire reduction of the configured codec vs the `f32`
+    /// passthrough (1.0 when the run *is* the passthrough).
+    pub fn wire_reduction(&self) -> f64 {
+        match self.ref_param_bytes {
+            Some(r) => r as f64 / self.param_bytes.max(1) as f64,
+            None => 1.0,
+        }
+    }
 }
 
 /// Shared CSV schema for fleet measurements.
-pub const FLEET_CSV_HEADER: &str =
-    "nodes,clusters,rounds,threads,seq_s,par_s,speedup,fingerprint_match,updates,accuracy";
+pub const FLEET_CSV_HEADER: &str = "nodes,clusters,rounds,threads,seq_s,par_s,speedup,\
+     fingerprint_match,updates,accuracy,codec,param_bytes,wire_reduction";
 
 /// One CSV row under [`FLEET_CSV_HEADER`].
 pub fn fleet_csv_row(cfg: &SimConfig, m: &FleetMeasurement) -> String {
     format!(
-        "{},{},{},{},{:.4},{:.4},{:.3},{},{},{:.4}",
+        "{},{},{},{},{:.4},{:.4},{:.3},{},{},{:.4},{},{},{:.3}",
         cfg.n_nodes,
         cfg.n_clusters,
         cfg.rounds,
@@ -92,19 +109,25 @@ pub fn fleet_csv_row(cfg: &SimConfig, m: &FleetMeasurement) -> String {
         m.speedup(),
         m.identical,
         m.report.total_updates(),
-        m.report.final_metrics.accuracy
+        m.report.final_metrics.accuracy,
+        cfg.wire.label(),
+        m.param_bytes,
+        m.wire_reduction()
     )
 }
 
 /// Run `cfg` once at `threads = 1` and once at `threads`, over the
 /// native backend, timing both runs and comparing their fingerprints.
+/// Non-passthrough wire configs additionally run an `f32`-passthrough
+/// reference (parallel, untimed) so the measurement carries the
+/// bytes-on-wire reduction.
 pub fn measure_fleet(cfg: &SimConfig, threads: usize) -> Result<FleetMeasurement> {
     anyhow::ensure!(
         cfg.model == ModelKind::Svm,
         "fleet measurement is native-only (SVM model)"
     );
     let compute = NativeSvm::new(NativeSvm::default_dims());
-    let run_at = |threads: usize| -> Result<(f64, RunReport)> {
+    let run_at = |cfg: &SimConfig, threads: usize| -> Result<(f64, RunReport)> {
         let mut c = cfg.clone();
         c.threads = threads;
         let t0 = Instant::now();
@@ -112,10 +135,27 @@ pub fn measure_fleet(cfg: &SimConfig, threads: usize) -> Result<FleetMeasurement
         let report = sim.run_scale()?;
         Ok((t0.elapsed().as_secs_f64(), report))
     };
-    let (seq_s, seq_report) = run_at(1)?;
-    let (par_s, report) = run_at(threads)?;
+    let (seq_s, seq_report) = run_at(cfg, 1)?;
+    let (par_s, report) = run_at(cfg, threads)?;
     let identical = seq_report.fingerprint() == report.fingerprint();
-    Ok(FleetMeasurement { threads, seq_s, par_s, identical, report })
+    let param_bytes = report.param_path_bytes();
+    let ref_param_bytes = if cfg.wire.is_passthrough() {
+        None
+    } else {
+        let mut rc = cfg.clone();
+        rc.wire = WireConfig::default();
+        rc.quantize_exchange = false;
+        Some(run_at(&rc, threads)?.1.param_path_bytes())
+    };
+    Ok(FleetMeasurement {
+        threads,
+        seq_s,
+        par_s,
+        identical,
+        param_bytes,
+        ref_param_bytes,
+        report,
+    })
 }
 
 /// Print one named measurement row.
@@ -150,12 +190,40 @@ mod tests {
         assert!(m.identical);
         assert!(m.seq_s > 0.0 && m.par_s > 0.0);
         assert!(m.speedup() > 0.0);
+        // passthrough: bytes measured, no reference run
+        assert!(m.param_bytes > 0);
+        assert_eq!(m.ref_param_bytes, None);
+        assert_eq!(m.wire_reduction(), 1.0);
         let row = fleet_csv_row(&cfg, &m);
         assert_eq!(
             row.split(',').count(),
             FLEET_CSV_HEADER.split(',').count(),
             "row/schema drift: {row}"
         );
+    }
+
+    #[test]
+    fn fleet_measurement_reports_wire_reduction_for_compact_codecs() {
+        let mut cfg = SimConfig {
+            n_nodes: 12,
+            n_clusters: 3,
+            rounds: 3,
+            local_epochs: 1,
+            eval_every: 100,
+            dataset_samples: 240,
+            dataset_malignant: 90,
+            seed: 3,
+            ..Default::default()
+        }
+        .normalized();
+        cfg.wire = WireConfig::preset("lean").unwrap();
+        let m = measure_fleet(&cfg, 2).unwrap();
+        assert!(m.identical);
+        let reference = m.ref_param_bytes.expect("compact codec runs a reference");
+        assert!(reference > m.param_bytes, "{reference} vs {}", m.param_bytes);
+        assert!(m.wire_reduction() > 2.0, "{}", m.wire_reduction());
+        let row = fleet_csv_row(&cfg, &m);
+        assert_eq!(row.split(',').count(), FLEET_CSV_HEADER.split(',').count());
     }
 
     #[test]

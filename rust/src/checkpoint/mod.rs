@@ -1,20 +1,38 @@
 //! Check-pointing (paper §3.3 / §4.2.3): the mechanism behind SCALE's
-//! 2850 → 235 global-update reduction.
+//! 2850 → 235 global-update reduction, and the delta baselines of the
+//! wire protocol (DESIGN.md §6).
 //!
 //! Every HDAP round produces a cluster model at the driver. Instead of
 //! forwarding each one to the global server (the traditional-FL pattern
 //! that Table 1 counts as 2850 updates), the driver *check-points* it
 //! locally and uploads only when the model meaningfully improved:
 //!
-//! * [`UploadGate`] — improvement gating on a validation metric
-//!   (higher-is-better). Uploads when `metric > best + min_delta`, always
-//!   on the first observation, and optionally force-uploads on the final
-//!   round so the global server never ends stale.
+//! * [`UploadGate`] / [`DeltaGate`] — upload gating on a validation
+//!   metric (higher-is-better) or on the relative parameter movement
+//!   since the last upload. Both upload on the first observation and
+//!   optionally force-upload on the final round so the global server
+//!   never ends stale.
 //! * [`CheckpointStore`] — bounded in-memory ring of checkpoints with a
 //!   compact binary codec (magic/version header, zlib-compressed f32
 //!   payload, CRC-32 integrity) and disk persistence for driver-failover
 //!   handoff: a newly elected driver restores the cluster's latest
 //!   checkpoint instead of restarting the round.
+//!
+//! The round engine pushes every round's broadcast consensus into the
+//! cluster's ring, so the ring doubles as the **wire-protocol baseline
+//! buffer**: delta frames ([`crate::wire`]) reference a ring entry by
+//! round, every live member holds it (they adopted the broadcast), and a
+//! node returning from an outage re-syncs from the ring before decoding
+//! deltas again. Drivers re-baseline their upload stream at central
+//! aggregation (the server's copy of the last uploaded model).
+//!
+//! ```
+//! use scale_fl::checkpoint::{Checkpoint, CheckpointStore};
+//! let mut ring = CheckpointStore::new(4);
+//! ring.push(Checkpoint { round: 0, metric: 0.5, params: vec![0.1, 0.2] });
+//! let bytes = ring.latest().unwrap().to_bytes();
+//! assert_eq!(&Checkpoint::from_bytes(&bytes).unwrap(), ring.latest().unwrap());
+//! ```
 
 use std::io::{Read, Write};
 use std::path::Path;

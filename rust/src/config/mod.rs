@@ -15,6 +15,7 @@ use crate::netsim::NetConfig;
 use crate::runtime::manifest::ModelKind;
 use crate::topology::Topology;
 use crate::util::json::{self, Value};
+use crate::wire::{CodecKind, WireConfig};
 
 /// Which signal gates driver uploads (see `checkpoint` module docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -66,10 +67,17 @@ pub struct SimConfig {
     pub health: HealthConfig,
 
     // --- extensions (off by default; ablation benches measure them)
-    /// int8-quantize peer-exchange / collect payloads (see `quant`).
+    /// Wire-protocol configuration for every parameter transfer (see
+    /// `wire`, DESIGN.md §6): codec (`f32`/`f16`/`i8`), delta encoding
+    /// against the shared baseline, top-k sparsification. The default
+    /// (`f32` passthrough) is byte- and value-identical to the seed.
+    pub wire: WireConfig,
+    /// Legacy alias: int8-quantize exchanged payloads. `normalized()`
+    /// maps this onto `wire.codec = i8` when no codec was chosen.
     pub quantize_exchange: bool,
     /// pairwise-masked secure aggregation on the collect phase
-    /// (see `secagg`; driver learns only the sum).
+    /// (see `secagg`; driver learns only the sum — quantized/delta
+    /// framing does not apply to masked vectors).
     pub secure_aggregation: bool,
 
     // --- failure injection
@@ -128,6 +136,7 @@ impl Default for SimConfig {
             cluster: ClusterConfig::default(),
             election: CriteriaWeights::default(),
             health: HealthConfig::default(),
+            wire: WireConfig::default(),
             quantize_exchange: false,
             secure_aggregation: false,
             node_failure_prob: 0.0,
@@ -226,6 +235,11 @@ impl SimConfig {
         if self.dataset_malignant > self.dataset_samples {
             bail!("dataset_malignant > dataset_samples");
         }
+        if let Some(f) = self.wire.topk {
+            if !(f > 0.0 && f <= 1.0) {
+                bail!("wire topk must be in (0, 1], got {f}");
+            }
+        }
         if !(0.0..=0.5).contains(&self.label_noise) {
             bail!("label_noise must be in [0, 0.5]");
         }
@@ -243,6 +257,10 @@ impl SimConfig {
     pub fn normalized(mut self) -> SimConfig {
         self.fleet.n_devices = self.n_nodes;
         self.cluster.n_clusters = self.n_clusters;
+        // legacy --quantize alias: upgrade the default codec to int8
+        if self.quantize_exchange && self.wire.codec == CodecKind::F32 {
+            self.wire.codec = CodecKind::I8;
+        }
         self
     }
 
@@ -295,6 +313,11 @@ impl SimConfig {
             ),
         );
         v.set("force_final_upload", Value::Bool(self.force_final_upload));
+        v.set("codec", Value::Str(self.wire.codec.name().into()));
+        v.set("delta", Value::Bool(self.wire.delta));
+        if let Some(f) = self.wire.topk {
+            v.set("topk", Value::Num(f));
+        }
         v.set("quantize_exchange", Value::Bool(self.quantize_exchange));
         v.set("secure_aggregation", Value::Bool(self.secure_aggregation));
         v.set("node_failure_prob", Value::Num(self.node_failure_prob));
@@ -381,6 +404,15 @@ impl SimConfig {
         }
         if let Some(b) = v.get("force_final_upload").and_then(Value::as_bool) {
             cfg.force_final_upload = b;
+        }
+        if let Some(s) = v.get("codec").and_then(Value::as_str) {
+            cfg.wire.codec = CodecKind::parse(s)?;
+        }
+        if let Some(b) = v.get("delta").and_then(Value::as_bool) {
+            cfg.wire.delta = b;
+        }
+        if let Some(f) = num("topk") {
+            cfg.wire.topk = Some(f);
         }
         if let Some(b) = v.get("quantize_exchange").and_then(Value::as_bool) {
             cfg.quantize_exchange = b;
@@ -496,6 +528,45 @@ mod tests {
     }
 
     #[test]
+    fn wire_config_roundtrips_and_validates() {
+        // default wire config stays the lossless passthrough
+        assert!(SimConfig::default().wire.is_passthrough());
+        let mut cfg = SimConfig::default();
+        cfg.wire = WireConfig { codec: CodecKind::I8, delta: true, topk: Some(0.25) };
+        let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.wire, cfg.wire);
+        // topk None survives (field omitted from JSON)
+        cfg.wire.topk = None;
+        let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.wire.topk, None);
+        // bad topk rejected
+        let mut bad = SimConfig::default();
+        bad.wire.topk = Some(0.0);
+        assert!(bad.validate().is_err());
+        bad.wire.topk = Some(1.5);
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn quantize_alias_maps_to_i8_codec() {
+        let mut cfg = SimConfig::default();
+        cfg.quantize_exchange = true;
+        let cfg = cfg.normalized();
+        assert_eq!(cfg.wire.codec, CodecKind::I8);
+        assert!(!cfg.wire.delta);
+        // an explicit codec choice wins over the alias
+        let mut cfg = SimConfig::default();
+        cfg.quantize_exchange = true;
+        cfg.wire.codec = CodecKind::F16;
+        assert_eq!(cfg.normalized().wire.codec, CodecKind::F16);
+        // the alias round-trips through JSON (normalized on load)
+        let mut cfg = SimConfig::default();
+        cfg.quantize_exchange = true;
+        let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.wire.codec, CodecKind::I8);
+    }
+
+    #[test]
     fn threads_roundtrips_and_defaults_to_sequential() {
         assert_eq!(SimConfig::default().threads, 1);
         let mut cfg = SimConfig::default();
@@ -585,6 +656,8 @@ mod tests {
         let v = json::parse(r#"{"partition": "by_zip_code"}"#).unwrap();
         assert!(SimConfig::from_json(&v).is_err());
         let v = json::parse(r#"{"topology": "hypercube"}"#).unwrap();
+        assert!(SimConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"codec": "mp3"}"#).unwrap();
         assert!(SimConfig::from_json(&v).is_err());
     }
 }

@@ -19,20 +19,29 @@
 //! crate) and executes them on the hot path; the default build runs the
 //! pure-rust `NativeSvm` oracle so tier-1 stays dependency-free.
 //!
-//! The `scenario` subsystem wraps the round loop in event-driven churn
+//! The [`scenario`] subsystem wraps the round loop in event-driven churn
 //! (node leave/join/return, regional outages, stragglers, bandwidth
 //! degradation, label drift) and drives the paper's self-regulation
 //! loop: health detection → proximity re-clustering → driver
 //! re-election, plus a parallel multi-seed sweep runner.
 //!
-//! The `sim` round engine is cluster-parallel: each round fans the
+//! The [`sim`] round engine is cluster-parallel: each round fans the
 //! clusters out across scoped threads (`SimConfig::threads`, CLI
 //! `--threads`) with per-cluster RNG child streams and private traffic
 //! sub-ledgers merged in cluster-id order, so `RunReport::fingerprint`
 //! is byte-identical for any thread count — the contract pinned by the
 //! golden-fingerprint suite and `scale fleet bench` at 1k–10k nodes.
 //!
-//! See DESIGN.md (repo root) for the subsystem inventory.
+//! Every parameter transfer rides the [`wire`] protocol: a versioned
+//! frame with pluggable codecs (`f32` passthrough, `f16`, `i8`
+//! scale/zero-point via [`quant`]) and delta encoding against the
+//! per-cluster [`checkpoint`] ring with top-k sparsification — the
+//! bytes-on-wire axis of the paper's Table-1 communication claim. The
+//! [`netsim`] ledger accounts encoded bytes; the `f32` passthrough
+//! keeps fingerprints byte-identical with pre-wire traces.
+//!
+//! See DESIGN.md (repo root) for the subsystem inventory and §6 for the
+//! wire-protocol rules.
 
 pub mod crypto;
 pub mod data;
@@ -59,3 +68,4 @@ pub mod bench;
 pub mod quant;
 pub mod secagg;
 pub mod trace;
+pub mod wire;

@@ -45,9 +45,9 @@ const RUN_SPEC: Spec = Spec {
         "config", "preset", "mode", "backend", "artifacts", "nodes", "clusters",
         "rounds", "epochs", "seed", "partition", "model", "min-delta",
         "failure-prob", "topology", "heterogeneity", "out", "lr", "reg",
-        "trace-dir", "edge-period", "threads",
+        "trace-dir", "edge-period", "threads", "wire", "codec", "topk",
     ],
-    switches: &["table1", "fig2", "quiet", "rounds-trace", "quantize", "secagg"],
+    switches: &["table1", "fig2", "quiet", "rounds-trace", "quantize", "secagg", "delta"],
 };
 
 const SCENARIO_SPEC: Spec = Spec {
@@ -55,18 +55,21 @@ const SCENARIO_SPEC: Spec = Spec {
         "file", "config", "preset", "backend", "artifacts", "nodes", "clusters",
         "rounds", "epochs", "seed", "partition", "model", "min-delta",
         "failure-prob", "topology", "heterogeneity", "out", "lr", "reg",
-        "trace-dir", "seeds", "base-seed", "threads",
+        "trace-dir", "seeds", "base-seed", "threads", "wire", "codec", "topk",
     ],
-    switches: &["quiet", "rounds-trace", "sequential", "verify", "quantize", "secagg"],
+    switches: &[
+        "quiet", "rounds-trace", "sequential", "verify", "quantize", "secagg", "delta",
+    ],
 };
 
 const FLEET_SPEC: Spec = Spec {
     flags: &[
         "config", "preset", "nodes", "clusters", "rounds", "epochs", "seed",
         "partition", "model", "min-delta", "failure-prob", "topology",
-        "heterogeneity", "lr", "reg", "threads", "csv", "out",
+        "heterogeneity", "lr", "reg", "threads", "csv", "out", "wire", "codec",
+        "topk",
     ],
-    switches: &["quiet", "quantize", "secagg"],
+    switches: &["quiet", "quantize", "secagg", "delta"],
 };
 
 const INFO_SPEC: Spec = Spec {
@@ -139,7 +142,15 @@ RUN OPTIONS:
   --failure-prob P     per-round node failure probability
   --heterogeneity H    device spread (0 = homogeneous)
   --lr X --reg X
-  --quantize           int8-quantize exchanged weights (quant module)
+  --codec f32|f16|i8   wire codec for every parameter transfer (wire
+                       module; default f32 = lossless passthrough)
+  --delta              delta-encode transfers against the shared baseline
+                       (checkpoint ring); implies top-k sparsification at
+                       the default 10% keep unless --topk overrides
+  --topk F             delta keep-fraction in (0,1]; 1.0 = dense delta
+  --wire NAME          wire preset: lossless | f16 | i8 | lean | sparse
+                       (lean = i8+delta, the Table-1 comm-budget setup)
+  --quantize           legacy alias for --codec i8
   --secagg             pairwise-masked secure aggregation (secagg module)
   --trace-dir DIR      write rounds/clusters/ledger CSVs + JSON per run
   --out FILE           write the JSON report(s)
@@ -154,14 +165,18 @@ SCENARIO OPTIONS (plus the run options above):
   --verify             re-run the sweep sequentially and require
                        bit-identical reports
 
-FLEET BENCH OPTIONS (plus config/preset/size flags above):
+FLEET BENCH OPTIONS (plus config/preset/size and wire flags above):
   --threads N          parallel worker count to compare against
                        --threads 1 (default 0 = auto)
-  --csv FILE           append a CSV row (header written when creating)
+  --csv FILE           append a CSV row (header written when creating;
+                       includes codec, param-path bytes and the wire
+                       reduction vs f32 passthrough)
   (base config defaults to the fleet-4k preset when neither --config nor
    --preset is given; the bench runs the same config sequentially and
    parallel, reports the wall-clock speedup, and fails if the
-   fingerprints differ)
+   fingerprints differ. With --codec/--delta it also re-runs the f32
+   passthrough and reports the encoded bytes-on-wire reduction, e.g.
+   `scale fleet bench --preset fleet-1k --codec i8 --delta`.)
 ";
 
 /// Build a SimConfig from `--config` / `--preset` + flag overrides,
@@ -233,6 +248,19 @@ fn config_overrides(args: &Args, mut cfg: SimConfig) -> Result<SimConfig> {
             }
             other => bail!("unknown partition '{other}'"),
         };
+    }
+    // wire protocol: preset first, then individual overrides
+    if let Some(w) = args.get("wire") {
+        cfg.wire = scale_fl::wire::WireConfig::preset(w)?;
+    }
+    if let Some(c) = args.get("codec") {
+        cfg.wire.codec = scale_fl::wire::CodecKind::parse(c)?;
+    }
+    if args.has("delta") {
+        cfg.wire.delta = true;
+    }
+    if let Some(f) = args.get_f64("topk")? {
+        cfg.wire.topk = Some(f);
     }
     if args.has("quantize") {
         cfg.quantize_exchange = true;
@@ -616,6 +644,20 @@ fn cmd_fleet_bench(args: &Args) -> Result<()> {
             m.report.total_updates(),
             m.report.final_metrics.accuracy
         );
+        match m.ref_param_bytes {
+            Some(reference) => println!(
+                "wire         : {} — {} param-path bytes vs {} (f32), {:.2}x reduction",
+                cfg.wire.label(),
+                m.param_bytes,
+                reference,
+                m.wire_reduction()
+            ),
+            None => println!(
+                "wire         : {} — {} param-path bytes",
+                cfg.wire.label(),
+                m.param_bytes
+            ),
+        }
     }
 
     if let Some(csv) = args.get("csv") {

@@ -16,6 +16,28 @@
 //! Every send is recorded in a [`TrafficLedger`] keyed by [`MsgKind`], so
 //! the bench harness can regenerate Table 1's update counts and the
 //! §4.2.2–4.2.4 series directly from the ledger.
+//!
+//! The ledger accounts **encoded bytes on the wire**, never logical
+//! floats: parameter transfers size themselves via the wire protocol
+//! ([`crate::wire`], DESIGN.md §6) — `Frame::encoded_len` or its
+//! closed-form [`crate::wire::WireConfig::frame_bytes`] — and
+//! [`Network::send_frame`] is the convenience that records a frame
+//! directly. The legacy [`param_payload_bytes`] model (`4·dim + 64`) is
+//! exactly what the wire layer's `f32` passthrough codec produces, so
+//! pre-wire traces stay byte-comparable.
+//!
+//! ```
+//! use scale_fl::netsim::{MsgKind, NetConfig, Network};
+//! use scale_fl::wire::WireConfig;
+//!
+//! let mut net = Network::new(NetConfig::default(), 7, false);
+//! let frame = WireConfig::default().encode(&[0.5f32; 33], 0, None);
+//! net.send_frame(MsgKind::GlobalUpdate, None, None, &frame, 0);
+//! assert_eq!(
+//!     net.ledger.totals(MsgKind::GlobalUpdate).bytes,
+//!     scale_fl::netsim::param_payload_bytes(33), // f32 passthrough == legacy model
+//! );
+//! ```
 
 use std::collections::BTreeMap;
 
@@ -357,6 +379,20 @@ impl Network {
         latency_ms
     }
 
+    /// Record one wire-protocol frame: [`Network::send`] with the frame's
+    /// modelled on-wire size (`Frame::encoded_len`), so the ledger counts
+    /// encoded bytes rather than logical floats.
+    pub fn send_frame(
+        &mut self,
+        kind: MsgKind,
+        from: Option<&DeviceProfile>,
+        to: Option<&DeviceProfile>,
+        frame: &crate::wire::Frame,
+        round: usize,
+    ) -> f64 {
+        self.send(kind, from, to, frame.encoded_len(), round)
+    }
+
     /// Cloud-side processing latency for one received update (ms).
     pub fn cloud_process_latency_ms(&self) -> f64 {
         self.cfg.cloud_process_ms
@@ -507,6 +543,22 @@ mod tests {
         assert!(c1 > c0);
         let c2 = net.cloud_cost_usd(1000.0);
         assert!(c2 > c1);
+    }
+
+    #[test]
+    fn send_frame_accounts_encoded_len() {
+        use crate::wire::WireConfig;
+        let mut net = Network::new(NetConfig::default(), 8, false);
+        let a = mk_point(0, 40.0, -74.0);
+        let baseline = vec![0.0f32; 33];
+        let xs = vec![0.25f32; 33];
+        let lean = WireConfig::preset("lean").unwrap();
+        let frame = lean.encode(&xs, 1, Some((0, &baseline)));
+        net.send_frame(MsgKind::PeerExchange, Some(&a), None, &frame, 1);
+        let t = net.ledger.totals(MsgKind::PeerExchange);
+        assert_eq!(t.count, 1);
+        assert_eq!(t.bytes, frame.encoded_len());
+        assert!(t.bytes < param_payload_bytes(33));
     }
 
     #[test]

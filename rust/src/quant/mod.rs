@@ -1,17 +1,36 @@
-//! Uniform int8 quantization for weight-exchange payloads
+//! Scalar quantization primitives for weight-exchange payloads
 //! (communication-efficiency extension; cf. QSGD in the paper's §2).
 //!
 //! SCALE's remaining traffic after checkpoint gating is the intra-cluster
-//! gossip (PeerExchange dominates the energy ledger). Quantizing the
-//! exchanged vectors to int8 cuts those payloads ~4× at a small, bounded
-//! accuracy cost (benched in `ablations`):
+//! gossip (PeerExchange dominates the energy ledger). This module holds
+//! the two lossy value representations the [`crate::wire`] codecs build
+//! on:
 //!
-//! ```text
-//! q_i = round((x_i − min) / step),  step = (max − min) / 255
+//! * [`QuantVec`] — uniform int8 with a **per-tensor scale/zero-point**
+//!   pair (`min` is the zero-point offset, `step` the scale):
+//!
+//!   ```text
+//!   q_i = round((x_i − min) / step),  step = (max − min) / 255
+//!   ```
+//!
+//!   Worst-case dequantization error is `step / 2` ([`QuantVec::max_error`]),
+//!   the bound the wire round-trip property tests pin.
+//! * [`f16_from_f32`] / [`f16_to_f32`] — IEEE 754 binary16 conversion
+//!   (round-half-up, overflow to ±∞), the `f16` wire codec's element
+//!   representation.
+//!
+//! Everything here is deterministic, handles degenerate (constant/empty)
+//! vectors, and exposes exact wire sizes so `netsim` can account the
+//! savings.
+//!
 //! ```
-//!
-//! The codec is deterministic, handles degenerate (constant) vectors, and
-//! exposes the exact wire size so `netsim` can account the savings.
+//! use scale_fl::quant::QuantVec;
+//! let xs = vec![-1.0f32, 0.25, 1.0];
+//! let q = QuantVec::encode(&xs);
+//! for (a, b) in xs.iter().zip(q.decode()) {
+//!     assert!((a - b).abs() <= q.max_error() + 1e-6);
+//! }
+//! ```
 
 /// An int8-quantized parameter vector.
 #[derive(Clone, Debug, PartialEq)]
@@ -98,6 +117,66 @@ pub fn channel(xs: &[f32]) -> Vec<f32> {
     QuantVec::encode(xs).decode()
 }
 
+/// Convert an `f32` to IEEE 754 binary16 bits.
+///
+/// Round-half-up on the dropped mantissa bits, overflow clamps to ±∞,
+/// values below the smallest binary16 subnormal flush to signed zero,
+/// and NaN maps to a quiet NaN. Values already representable in
+/// binary16 convert exactly (so [`f16_to_f32`]∘[`f16_from_f32`] is
+/// idempotent).
+pub fn f16_from_f32(value: f32) -> u16 {
+    let x = value.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let mut exp = ((x >> 23) & 0xFF) as i32;
+    let mut man = x & 0x007F_FFFF;
+    if exp == 0xFF {
+        // infinity / NaN (keep NaN quiet with a payload bit)
+        let nan = if man != 0 { 0x0200 } else { 0 };
+        return sign | 0x7C00 | nan;
+    }
+    exp -= 112; // rebase: f32 bias 127 → f16 bias 15
+    if exp >= 0x1F {
+        return sign | 0x7C00; // overflow → ±∞
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            return sign; // below the smallest subnormal → ±0
+        }
+        // subnormal: shift the (explicit-bit) mantissa into place
+        man |= 0x0080_0000;
+        let shift = (14 - exp) as u32; // 13 dropped bits + (1 - exp)
+        let halfway = 1u32 << (shift - 1);
+        return sign | ((man + halfway) >> shift) as u16;
+    }
+    man += 0x1000; // round half up at the 13 dropped bits
+    if man & 0x0080_0000 != 0 {
+        // mantissa rounded up into the next exponent
+        man = 0;
+        exp += 1;
+        if exp >= 0x1F {
+            return sign | 0x7C00;
+        }
+    }
+    sign | ((exp as u16) << 10) | ((man >> 13) as u16)
+}
+
+/// Convert IEEE 754 binary16 bits back to `f32` (always exact: every
+/// binary16 value is representable in binary32).
+pub fn f16_to_f32(bits: u16) -> f32 {
+    let sign = ((bits & 0x8000) as u32) << 16;
+    let exp = ((bits >> 10) & 0x1F) as u32;
+    let man = (bits & 0x03FF) as u32;
+    if exp == 0x1F {
+        return f32::from_bits(sign | 0x7F80_0000 | (man << 13));
+    }
+    if exp == 0 {
+        // subnormal (or zero): man × 2⁻²⁴, both factors exact in f32
+        let mag = man as f32 * (2.0f32).powi(-24);
+        return if sign != 0 { -mag } else { mag };
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,6 +233,65 @@ mod tests {
         let q = QuantVec::encode(&[-1.0, 0.0, 1.0]);
         assert_eq!(q.codes[0], 0);
         assert_eq!(q.codes[2], 255);
+    }
+
+    #[test]
+    fn f16_known_vectors() {
+        for (x, bits) in [
+            (0.0f32, 0x0000u16),
+            (1.0, 0x3C00),
+            (-2.0, 0xC000),
+            (0.5, 0x3800),
+            (65504.0, 0x7BFF), // binary16 max finite
+            (f32::INFINITY, 0x7C00),
+            (f32::NEG_INFINITY, 0xFC00),
+        ] {
+            assert_eq!(f16_from_f32(x), bits, "{x}");
+            assert_eq!(f16_to_f32(bits), x, "{bits:#06x}");
+        }
+        // overflow clamps to infinity
+        assert_eq!(f16_from_f32(65520.0), 0x7C00);
+        assert_eq!(f16_from_f32(1e9), 0x7C00);
+        // NaN stays NaN
+        assert!(f16_to_f32(f16_from_f32(f32::NAN)).is_nan());
+        // smallest subnormal: 2^-24
+        assert_eq!(f16_from_f32((2.0f32).powi(-24)), 0x0001);
+        assert_eq!(f16_to_f32(0x0001), (2.0f32).powi(-24));
+        // underflow flushes to zero
+        assert_eq!(f16_from_f32(1e-9), 0x0000);
+        assert_eq!(f16_from_f32(-1e-9), 0x8000);
+    }
+
+    #[test]
+    fn f16_roundtrip_is_idempotent_on_f16_values() {
+        // every representable finite binary16 value converts back exactly
+        let mut rng = crate::util::rng::Rng::new(0xF16);
+        for _ in 0..2000 {
+            let bits = rng.next_u64() as u16;
+            let x = f16_to_f32(bits);
+            if x.is_nan() {
+                assert!(f16_to_f32(f16_from_f32(x)).is_nan());
+            } else {
+                assert_eq!(f16_to_f32(f16_from_f32(x)), x, "{bits:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_error_bounded() {
+        check(&Config { cases: 200, ..Default::default() }, "f16 error bound", |g| {
+            let xs: Vec<f32> = g.vec_of(|r| (r.f32() - 0.5) * 200.0);
+            for &x in &xs {
+                let back = f16_to_f32(f16_from_f32(x));
+                // half-up rounding: ≤ 1 ulp relative for normals, tiny
+                // absolute error in the subnormal range
+                let bound = (x.abs() as f64 / 1024.0).max(1e-7);
+                if ((x - back).abs() as f64) > bound {
+                    return Err(format!("{x} -> {back} (bound {bound})"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -4,10 +4,11 @@
 //! and the numerics: one local training step, decision scores for
 //! evaluation, and bank aggregation (eq 9 / eq 10). Two implementations:
 //!
-//! * [`PjrtModel`] — the production path (behind the `pjrt` feature):
-//!   executes the AOT-lowered JAX/Pallas artifacts through
-//!   [`super::Runtime`]. Aggregation banks larger than the artifact's
-//!   fixed `K` are chunked and exactly count-weight recombined.
+//! * `PjrtModel` — the production path (behind the `pjrt` feature, so
+//!   only linkable in `--features pjrt` docs): executes the AOT-lowered
+//!   JAX/Pallas artifacts through `super::Runtime`. Aggregation banks
+//!   larger than the artifact's fixed `K` are chunked and exactly
+//!   count-weight recombined.
 //! * [`NativeSvm`] — a pure-rust mirror of the SVM math (same formulas as
 //!   `python/compile/kernels/ref.py`). Used as the cross-check oracle in
 //!   integration tests (PJRT vs native must agree to f32 tolerance), for

@@ -10,8 +10,8 @@
 //! * [`manifest`] — parse + validate `artifacts/manifest.json` (shapes,
 //!   dtypes, SHA-256 of each artifact) so contract drift fails at startup
 //!   (always compiled; no xla dependency);
-//! * [`Runtime`] — `PjRtClient::cpu()` + a compile-once executable cache
-//!   (`pjrt` feature only);
+//! * `Runtime` — `PjRtClient::cpu()` + a compile-once executable cache
+//!   (`pjrt` feature only, so only linkable in `--features pjrt` docs);
 //! * [`compute`] — the [`compute::ModelCompute`] trait the coordinator
 //!   programs against, with the PJRT-backed implementation (`pjrt`
 //!   feature) and a pure-rust native oracle used for cross-checking and

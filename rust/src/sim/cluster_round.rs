@@ -20,8 +20,7 @@ use crate::aggregation::{driver_consensus, peer_exchange};
 use crate::checkpoint::{Checkpoint, Decision};
 use crate::config::{CheckpointMode, SimConfig};
 use crate::election::{elect, representativeness, Ballot, CriteriaWeights};
-use crate::netsim::{param_payload_bytes, MsgKind, Network};
-use crate::quant;
+use crate::netsim::{MsgKind, Network};
 use crate::runtime::compute::ModelCompute;
 use crate::secagg;
 use crate::topology::peer_sets;
@@ -157,13 +156,13 @@ pub(crate) fn scale_cluster_round(
     }
 
     // --- peer exchange (eq 9) ---
+    // every parameter transfer rides a wire::Frame; the ledger accounts
+    // encoded bytes (DESIGN §6). The delta baseline is the last broadcast
+    // consensus, ring-buffered in the cluster's checkpoint store so every
+    // live member (and a returning one, via the ring) shares it.
     let dim = compute.param_dim();
-    let payload = if cfg.quantize_exchange {
-        // int8 codes + (len, min, step) header — see `quant`
-        dim as u64 + 12 + 64
-    } else {
-        param_payload_bytes(dim)
-    };
+    let has_baseline = cluster.store.latest().is_some();
+    let payload = cfg.wire.frame_bytes(dim, has_baseline);
     let peers = peer_sets(
         cfg.topology,
         &alive_global,
@@ -178,17 +177,17 @@ pub(crate) fn scale_cluster_round(
             exchange_ms = exchange_ms.max(lat);
         }
     }
-    // snapshot of the weights as they leave each node: when exchange
-    // quantization is on, peers receive the int8-channel version
+    // snapshot of the weights as they leave each node: peers receive the
+    // configured codec's encode→decode channel of the sender's params
+    // (bit-identical clone for the f32 passthrough)
+    let exchange_baseline: Option<Vec<f32>> = if cfg.wire.delta {
+        cluster.store.latest().map(|cp| cp.params.clone())
+    } else {
+        None
+    };
     let snapshot: Vec<Vec<f32>> = alive
         .iter()
-        .map(|&li| {
-            if cfg.quantize_exchange {
-                quant::channel(&nodes[li].params)
-            } else {
-                nodes[li].params.clone()
-            }
-        })
+        .map(|&li| cfg.wire.channel(&nodes[li].params, exchange_baseline.as_deref()))
         .collect();
     let exchanged = peer_exchange(compute, &snapshot, &peers)?;
     for (p, &li) in alive.iter().enumerate() {
@@ -241,14 +240,20 @@ pub(crate) fn scale_cluster_round(
     let mut upload_ms = 0.0f64;
     match decision {
         Decision::Upload => {
+            // the driver's upload stream deltas against the last model the
+            // server received from this cluster, and re-baselines on it
+            // (central aggregation is the re-sync point)
+            let upload_payload =
+                cfg.wire.frame_bytes(dim, cluster.upload_baseline.is_some());
             upload_ms = net.send(
                 MsgKind::GlobalUpdate,
                 Some(&nodes[driver_local].device),
                 None,
-                payload,
+                upload_payload,
                 round,
             );
             cluster.updates += 1;
+            cluster.upload_baseline = Some(consensus.clone());
             out.upload = Some((consensus.clone(), cluster.members.len()));
         }
         Decision::Skip => {
@@ -259,11 +264,6 @@ pub(crate) fn scale_cluster_round(
                 payload,
                 round,
             );
-            cluster.store.push(Checkpoint {
-                round: round as u32,
-                metric: metrics.accuracy,
-                params: consensus.clone(),
-            });
         }
     }
 
@@ -277,6 +277,14 @@ pub(crate) fn scale_cluster_round(
         }
         nodes[li].params = consensus.clone();
     }
+    // ring-buffer the broadcast model: it is the state every member now
+    // holds, i.e. the next round's delta baseline (and the failover
+    // restore point for a re-elected driver)
+    cluster.store.push(Checkpoint {
+        round: round as u32,
+        metric: metrics.accuracy,
+        params: consensus.clone(),
+    });
 
     out.latency_ms = train_ms + exchange_ms + collect_ms + upload_ms + broadcast_ms;
     Ok(out)

@@ -37,7 +37,7 @@ pub use cluster_round::ClusterRoundOut;
 
 use anyhow::{Context, Result};
 
-use crate::checkpoint::{CheckpointStore, DeltaGate, UploadGate};
+use crate::checkpoint::{Checkpoint, CheckpointStore, DeltaGate, UploadGate};
 use crate::config::{Partition, SimConfig};
 use crate::data::{batches, synth_wdbc_sized, Dataset, PaddedBatch, Scaler};
 use crate::devices::{generate_fleet, DeviceProfile};
@@ -45,9 +45,7 @@ use crate::features::{combined_metadata_score, wdbc_columns, MetadataWeights};
 use crate::geo::{centroid, equirectangular_km, GeoPoint};
 use crate::health::{HealthMonitor, HealthState};
 use crate::metrics::ModelMetrics;
-use crate::netsim::{
-    param_payload_bytes, summary_payload_bytes, MsgKind, Network, TrafficLedger,
-};
+use crate::netsim::{summary_payload_bytes, MsgKind, Network, TrafficLedger};
 use crate::perf_index::{local_log_pi, OperationalWeights};
 use crate::runtime::compute::ModelCompute;
 use crate::scenario::{EventKind, Scenario, ScenarioState, Undo};
@@ -129,10 +127,17 @@ pub struct ClusterState {
     pub driver: usize,
     pub gate: UploadGate,
     pub delta_gate: DeltaGate,
+    /// Checkpoint ring: every round's broadcast consensus lands here, so
+    /// the latest entry is the wire-protocol delta baseline the whole
+    /// cluster shares (DESIGN §6) as well as the failover restore point.
     pub store: CheckpointStore,
     pub monitor: HealthMonitor,
     eval_batches: Vec<PaddedBatch>,
     eval_labels: Vec<f32>,
+    /// Last model the global server received from this cluster — the
+    /// driver's upload-stream delta baseline ("re-baseline at central
+    /// aggregation").
+    upload_baseline: Option<Vec<f32>>,
     pub pos_frac: f64,
     pub elections: u64,
     pub updates: u64,
@@ -342,11 +347,15 @@ impl<'a> Simulation<'a> {
     }
 
     /// Build per-cluster state, including the initial driver election.
+    /// Every node (and the server) starts from the same `init_params`, so
+    /// that common model primes each cluster's baseline ring: delta
+    /// frames have a shared reference from round 0.
     fn init_clusters(&mut self, members: Vec<Vec<usize>>) -> Result<Vec<ClusterState>> {
+        let init = self.compute.init_params(self.cfg.seed);
         let mut clusters = Vec::with_capacity(members.len());
         for (cid, member_ids) in members.into_iter().enumerate() {
             anyhow::ensure!(!member_ids.is_empty(), "cluster {cid} empty");
-            clusters.push(self.build_cluster(cid, member_ids, 0)?);
+            clusters.push(self.build_cluster(cid, member_ids, 0, Some(init.clone()))?);
         }
         Ok(clusters)
     }
@@ -355,15 +364,28 @@ impl<'a> Simulation<'a> {
     /// driver among its live members at `round`. An empty member list
     /// yields a dormant slot (kept so cluster ids stay stable across
     /// self-regulated re-formations); the round loop skips it.
+    /// `baseline` (when every member and the server share a model — the
+    /// initial formation) primes the checkpoint ring and the upload
+    /// stream's delta reference; re-formed clusters start without one
+    /// and send dense frames until their first broadcast.
     fn build_cluster(
         &mut self,
         cid: usize,
         member_ids: Vec<usize>,
         round: usize,
+        baseline: Option<Vec<f32>>,
     ) -> Result<ClusterState> {
         let mut monitor = HealthMonitor::new(self.cfg.health);
         for &id in &member_ids {
             monitor.register(id, round);
+        }
+        let mut store = CheckpointStore::new(8);
+        if let Some(params) = &baseline {
+            store.push(Checkpoint {
+                round: round as u32,
+                metric: 0.0,
+                params: params.clone(),
+            });
         }
         let mut cluster = ClusterState {
             id: cid,
@@ -371,10 +393,11 @@ impl<'a> Simulation<'a> {
             driver: 0,
             gate: UploadGate::new(self.cfg.checkpoint_min_delta),
             delta_gate: DeltaGate::new(self.cfg.checkpoint_min_delta),
-            store: CheckpointStore::new(8),
+            store,
             monitor,
             eval_batches: Vec::new(),
             eval_labels: Vec::new(),
+            upload_baseline: baseline,
             pos_frac: 0.0,
             elections: 0,
             updates: 0,
@@ -956,7 +979,10 @@ impl<'a> Simulation<'a> {
                 state.unassigned.remove(&id);
             }
             let cid = clusters[ci].id;
-            let mut fresh = self.build_cluster(cid, member_ids, round)?;
+            // re-formed clusters have no model every new member is known
+            // to hold, so their wire baseline resets (dense frames until
+            // the first broadcast re-arms the ring)
+            let mut fresh = self.build_cluster(cid, member_ids, round, None)?;
             elections += fresh.elections;
             fresh.elections += clusters[ci].elections;
             fresh.updates += clusters[ci].updates;
@@ -1038,7 +1064,9 @@ impl<'a> Simulation<'a> {
         let threads = self.effective_threads()?;
         let wall = std::time::Instant::now();
         let mut server = GlobalServer::new(self.root_key);
-        let payload = param_payload_bytes(self.compute.param_dim());
+        // every node starts from (and is re-broadcast) the global model,
+        // so upload/broadcast frames always have a shared delta baseline
+        let payload = self.cfg.wire.frame_bytes(self.compute.param_dim(), true);
 
         // the baseline registers every node as its own "cluster" of one so
         // the registry tracks per-node models
@@ -1255,7 +1283,9 @@ impl<'a> Simulation<'a> {
         let threads = self.effective_threads()?;
         let wall = std::time::Instant::now();
         let mut server = GlobalServer::new(self.root_key);
-        let payload = param_payload_bytes(self.compute.param_dim());
+        // tiers re-broadcast the shared model every round, so frames
+        // always have a common delta baseline
+        let payload = self.cfg.wire.frame_bytes(self.compute.param_dim(), true);
 
         // edge servers: one per metro, registered as clusters at the
         // global server (re-using the registry machinery)
@@ -1771,8 +1801,8 @@ mod tests {
         let bytes = |r: &report::RunReport| {
             r.ledger[&MsgKind::PeerExchange].bytes
         };
-        // svm_dim=33: framing overhead caps the saving near 1.8x here;
-        // at mlp_dim=545 the ratio approaches the full 4x (quant tests)
+        // i8 frames at svm_dim=33: 20-byte header + 12+33 payload = 65 B
+        // vs the 196 B f32 passthrough envelope (~3x)
         assert!(
             bytes(&quant) * 3 < bytes(&plain) * 2,
             "quantized {} vs plain {}",
@@ -1785,6 +1815,81 @@ mod tests {
             quant.final_metrics.accuracy,
             plain.final_metrics.accuracy
         );
+    }
+
+    #[test]
+    fn wire_passthrough_matches_legacy_payload_bytes() {
+        // the lossless-fingerprint contract at the byte level: with the
+        // default wire config every parameter transfer must cost exactly
+        // the seed's param_payload_bytes model
+        let compute = native();
+        let dim = compute.param_dim();
+        let legacy = crate::netsim::param_payload_bytes(dim);
+        let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
+        let r = sim.run_scale().unwrap();
+        for kind in [
+            MsgKind::PeerExchange,
+            MsgKind::DriverCollect,
+            MsgKind::DriverBroadcast,
+            MsgKind::GlobalUpdate,
+        ] {
+            let t = r.ledger[&kind];
+            assert_eq!(t.bytes, t.count * legacy, "{kind:?}");
+        }
+        let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
+        let f = sim.run_fedavg(None).unwrap();
+        for kind in [MsgKind::GlobalUpdate, MsgKind::GlobalBroadcast] {
+            let t = f.ledger[&kind];
+            assert_eq!(t.bytes, t.count * legacy, "fedavg {kind:?}");
+        }
+    }
+
+    #[test]
+    fn lean_wire_cuts_param_bytes_and_stays_thread_invariant() {
+        let compute = native();
+        let run = |wire: crate::wire::WireConfig, threads: usize| {
+            let mut cfg = small_cfg();
+            cfg.wire = wire;
+            cfg.threads = threads;
+            let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
+            sim.run_scale().unwrap()
+        };
+        let lean = crate::wire::WireConfig::preset("lean").unwrap();
+        let plain = run(crate::wire::WireConfig::default(), 1);
+        let seq = run(lean, 1);
+        let par = run(lean, 4);
+        // the lossy-codec path honours the parallel determinism contract
+        assert_eq!(seq.fingerprint(), par.fingerprint());
+        // i8 + delta + top-k sparsification cuts the param path hard
+        assert!(
+            plain.param_path_bytes() >= 3 * seq.param_path_bytes(),
+            "plain {} vs lean {}",
+            plain.param_path_bytes(),
+            seq.param_path_bytes()
+        );
+        // and the federation still trains a usable model
+        assert!(
+            seq.final_metrics.accuracy > 0.55,
+            "lean accuracy {:?}",
+            seq.final_metrics
+        );
+    }
+
+    #[test]
+    fn lean_wire_uniform_frames_match_ledger_accounting() {
+        // with the baseline ring primed at formation, every PeerExchange
+        // frame in a scenario-free run has the same encoded size — the
+        // ledger must agree with WireConfig::frame_bytes exactly
+        let compute = native();
+        let mut cfg = small_cfg();
+        cfg.wire = crate::wire::WireConfig::preset("lean").unwrap();
+        let per_frame = cfg.wire.frame_bytes(compute.param_dim(), true);
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        let r = sim.run_scale().unwrap();
+        for kind in [MsgKind::PeerExchange, MsgKind::DriverBroadcast] {
+            let t = r.ledger[&kind];
+            assert_eq!(t.bytes, t.count * per_frame, "{kind:?}");
+        }
     }
 
     #[test]

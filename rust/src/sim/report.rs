@@ -104,6 +104,25 @@ impl RunReport {
         self.comm_energy_j + self.compute_energy_j
     }
 
+    /// Total encoded bytes of every parameter-carrying transfer — the
+    /// "bytes-on-wire" number the wire-protocol benches compare across
+    /// codecs (control traffic — heartbeats, ballots, summaries — and
+    /// node-local checkpoints are excluded).
+    pub fn param_path_bytes(&self) -> u64 {
+        [
+            MsgKind::PeerExchange,
+            MsgKind::DriverCollect,
+            MsgKind::DriverBroadcast,
+            MsgKind::GlobalUpdate,
+            MsgKind::GlobalBroadcast,
+            MsgKind::EdgeUpdate,
+            MsgKind::EdgeBroadcast,
+        ]
+        .iter()
+        .map(|k| self.ledger.get(k).map_or(0, |t| t.bytes))
+        .sum()
+    }
+
     /// Table-1-style markdown rows for this run.
     pub fn table1_rows(&self) -> String {
         let mut out = String::new();
@@ -297,6 +316,18 @@ mod tests {
         assert_eq!(r.total_updates(), 46);
         assert_eq!(r.total_latency_ms(), 210.0);
         assert!((r.mean_cluster_accuracy() - 0.88).abs() < 1e-12);
+    }
+
+    #[test]
+    fn param_path_bytes_sums_param_kinds_only() {
+        let mut r = report();
+        let t = |bytes| KindTotals { count: 1, bytes, ..Default::default() };
+        r.ledger.insert(MsgKind::PeerExchange, t(100));
+        r.ledger.insert(MsgKind::GlobalUpdate, t(20));
+        r.ledger.insert(MsgKind::DriverBroadcast, t(7));
+        r.ledger.insert(MsgKind::Heartbeat, t(1_000)); // control: excluded
+        r.ledger.insert(MsgKind::CheckpointLocal, t(500)); // local: excluded
+        assert_eq!(r.param_path_bytes(), 127);
     }
 
     #[test]

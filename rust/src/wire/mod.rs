@@ -1,0 +1,775 @@
+//! Versioned wire protocol for every parameter transfer in the system
+//! (DESIGN.md §6): a [`Frame`] is a fixed 20-byte header plus a payload
+//! produced by a pluggable [`Codec`] — `f32` passthrough, `f16`, or `i8`
+//! per-tensor scale/zero-point quantization (see [`crate::quant`]) —
+//! optionally delta-encoded against a baseline both endpoints share
+//! (the per-cluster checkpoint ring, [`crate::checkpoint`]) with
+//! deterministic top-k sparsification of the delta.
+//!
+//! The paper's Table-1 headline is a communication-overhead reduction;
+//! this module is the bytes-on-wire axis of that claim. The traffic
+//! ledger ([`crate::netsim`]) accounts [`Frame::encoded_len`] — encoded
+//! bytes, never logical floats.
+//!
+//! # Compatibility and determinism rules
+//!
+//! * The **f32 passthrough** configuration (`codec = f32`, `delta`
+//!   off — the default) models exactly the seed's envelope,
+//!   [`crate::netsim::param_payload_bytes`] (`4·dim + 64`), and its
+//!   value channel is the identity, so passthrough runs keep
+//!   `RunReport::fingerprint` byte-identical with pre-wire traces.
+//! * Compact codecs (`f16`, `i8`, any delta/top-k frame) use the lean
+//!   binary frame: [`FRAME_HEADER_BYTES`] + payload, no legacy envelope.
+//! * Every codec is deterministic: encoding depends only on the input
+//!   vector and baseline (top-k ties break toward the lower index), so
+//!   `--threads 1` and `--threads N` stay fingerprint-identical.
+//!
+//! # Example: encode → decode round-trip
+//!
+//! ```
+//! use scale_fl::wire::{CodecKind, WireConfig};
+//!
+//! // lossless passthrough: bit-exact, legacy envelope
+//! let current: Vec<f32> = (0..8).map(|i| i as f32 * 0.01).collect();
+//! let lossless = WireConfig::default();
+//! let frame = lossless.encode(&current, 0, None);
+//! assert_eq!(frame.decode(None).unwrap(), current);
+//! assert_eq!(frame.encoded_len(), scale_fl::netsim::param_payload_bytes(current.len()));
+//!
+//! // quantized sparse delta against a shared baseline: far fewer bytes
+//! let baseline = vec![0.0f32; 8];
+//! let lean = WireConfig { codec: CodecKind::I8, delta: true, topk: Some(0.5) };
+//! let frame = lean.encode(&current, 3, Some((2, &baseline)));
+//! assert!(frame.encoded_len() < lossless.frame_bytes(8, true));
+//! let decoded = frame.decode(Some(&baseline)).unwrap();
+//! assert_eq!(decoded.len(), 8);
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::{f16_from_f32, f16_to_f32, QuantVec};
+
+/// Frame magic: "SCALE Wire Format".
+pub const FRAME_MAGIC: [u8; 4] = *b"SWF1";
+/// Current frame version.
+pub const FRAME_VERSION: u8 = 1;
+/// Serialized header size: magic(4) + version(1) + codec(1) + flags(1) +
+/// reserved(1) + round(4) + baseline_round(4) + dim(4).
+pub const FRAME_HEADER_BYTES: usize = 20;
+/// Modelled transport envelope added to passthrough frames only, keeping
+/// their on-wire size at the seed's `4·dim + 64` so lossless runs stay
+/// fingerprint-compatible (compact codecs shed this allowance).
+pub const PASSTHROUGH_ENVELOPE_BYTES: usize = 44;
+/// `baseline_round` value of dense (non-delta) frames.
+pub const NO_BASELINE: u32 = u32::MAX;
+/// Delta keep-fraction used when `delta` is on and `topk` is unset.
+pub const DEFAULT_TOPK_FRAC: f64 = 0.1;
+
+const FLAG_DELTA: u8 = 0b01;
+const FLAG_SPARSE: u8 = 0b10;
+
+/// Payload codec selector (the frame header's `codec` byte).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CodecKind {
+    /// Full-precision little-endian `f32` — the lossless passthrough.
+    #[default]
+    F32,
+    /// IEEE 754 binary16 (half precision), 2 bytes per element.
+    F16,
+    /// Uniform int8 with a per-tensor scale/zero-point header
+    /// ([`crate::quant::QuantVec`]), `12 + n` bytes per tensor.
+    I8,
+}
+
+impl CodecKind {
+    /// CLI / config name.
+    pub fn name(self) -> &'static str {
+        match self {
+            CodecKind::F32 => "f32",
+            CodecKind::F16 => "f16",
+            CodecKind::I8 => "i8",
+        }
+    }
+
+    /// Parse a CLI / config name.
+    pub fn parse(s: &str) -> Result<CodecKind> {
+        match s {
+            "f32" => Ok(CodecKind::F32),
+            "f16" => Ok(CodecKind::F16),
+            "i8" => Ok(CodecKind::I8),
+            other => bail!("unknown codec '{other}' (f32, f16, i8)"),
+        }
+    }
+
+    fn to_byte(self) -> u8 {
+        match self {
+            CodecKind::F32 => 0,
+            CodecKind::F16 => 1,
+            CodecKind::I8 => 2,
+        }
+    }
+
+    fn from_byte(b: u8) -> Result<CodecKind> {
+        match b {
+            0 => Ok(CodecKind::F32),
+            1 => Ok(CodecKind::F16),
+            2 => Ok(CodecKind::I8),
+            other => bail!("unknown codec byte {other}"),
+        }
+    }
+}
+
+/// A payload codec: turns an `f32` vector into wire bytes and back.
+///
+/// Implementations must be deterministic (same input, same bytes) and
+/// self-consistent (`decode(encode(xs), xs.len())` succeeds); lossy
+/// codecs bound their error per-tensor (`i8`: half a quantization step,
+/// `f16`: half an ulp ≈ 2⁻¹¹ relative).
+pub trait Codec {
+    /// Which header byte this codec writes.
+    fn kind(&self) -> CodecKind;
+    /// Whether `decode(encode(xs))` reproduces `xs` bit-for-bit.
+    fn is_lossless(&self) -> bool;
+    /// Exact payload size for an `n`-element tensor.
+    fn payload_bytes(&self, n: usize) -> usize;
+    /// Encode `xs` into the codec's payload bytes.
+    fn encode(&self, xs: &[f32]) -> Vec<u8>;
+    /// Decode an `n`-element tensor; errors on malformed/mis-sized input.
+    fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>>;
+}
+
+/// Little-endian `f32` passthrough.
+pub struct F32Codec;
+
+impl Codec for F32Codec {
+    fn kind(&self) -> CodecKind {
+        CodecKind::F32
+    }
+
+    fn is_lossless(&self) -> bool {
+        true
+    }
+
+    fn payload_bytes(&self, n: usize) -> usize {
+        4 * n
+    }
+
+    fn encode(&self, xs: &[f32]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 * xs.len());
+        for x in xs {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(bytes.len() == 4 * n, "f32 payload length {} != {}", bytes.len(), 4 * n);
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// IEEE 754 binary16.
+pub struct F16Codec;
+
+impl Codec for F16Codec {
+    fn kind(&self) -> CodecKind {
+        CodecKind::F16
+    }
+
+    fn is_lossless(&self) -> bool {
+        false
+    }
+
+    fn payload_bytes(&self, n: usize) -> usize {
+        2 * n
+    }
+
+    fn encode(&self, xs: &[f32]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(2 * xs.len());
+        for &x in xs {
+            out.extend_from_slice(&f16_from_f32(x).to_le_bytes());
+        }
+        out
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(bytes.len() == 2 * n, "f16 payload length {} != {}", bytes.len(), 2 * n);
+        Ok(bytes
+            .chunks_exact(2)
+            .map(|c| f16_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+}
+
+/// Uniform int8 with per-tensor scale/zero-point ([`QuantVec`]).
+pub struct I8Codec;
+
+impl Codec for I8Codec {
+    fn kind(&self) -> CodecKind {
+        CodecKind::I8
+    }
+
+    fn is_lossless(&self) -> bool {
+        false
+    }
+
+    fn payload_bytes(&self, n: usize) -> usize {
+        // QuantVec layout: len(4) + min(4) + step(4) + codes(n)
+        12 + n
+    }
+
+    fn encode(&self, xs: &[f32]) -> Vec<u8> {
+        QuantVec::encode(xs).to_bytes()
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
+        let q = QuantVec::from_bytes(bytes).context("malformed i8 payload")?;
+        anyhow::ensure!(q.codes.len() == n, "i8 payload dim {} != {}", q.codes.len(), n);
+        Ok(q.decode())
+    }
+}
+
+/// The codec singleton for a [`CodecKind`].
+pub fn codec(kind: CodecKind) -> &'static dyn Codec {
+    match kind {
+        CodecKind::F32 => &F32Codec,
+        CodecKind::F16 => &F16Codec,
+        CodecKind::I8 => &I8Codec,
+    }
+}
+
+/// Wire-protocol configuration: which codec every parameter transfer
+/// uses, whether transfers delta-encode against the shared baseline, and
+/// how aggressively deltas are sparsified.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WireConfig {
+    pub codec: CodecKind,
+    /// Delta-encode against the last agreed baseline (checkpoint ring /
+    /// last uploaded model) when one is available.
+    pub delta: bool,
+    /// Keep-fraction of delta coefficients in `(0, 1]`; `None` means
+    /// [`DEFAULT_TOPK_FRAC`] under `delta` (use `Some(1.0)` for a dense
+    /// delta). Ignored without `delta`.
+    pub topk: Option<f64>,
+}
+
+impl WireConfig {
+    /// Named presets for the CLI (`--wire`).
+    pub fn preset(name: &str) -> Result<WireConfig> {
+        match name {
+            "lossless" | "f32" => Ok(WireConfig::default()),
+            "f16" => Ok(WireConfig { codec: CodecKind::F16, delta: false, topk: None }),
+            "i8" => Ok(WireConfig { codec: CodecKind::I8, delta: false, topk: None }),
+            "lean" => Ok(WireConfig { codec: CodecKind::I8, delta: true, topk: None }),
+            "sparse" => {
+                Ok(WireConfig { codec: CodecKind::I8, delta: true, topk: Some(0.05) })
+            }
+            other => {
+                bail!("unknown wire preset '{other}' (lossless, f16, i8, lean, sparse)")
+            }
+        }
+    }
+
+    /// The seed-compatible configuration: `f32`, no delta. Its value
+    /// channel is the identity and its byte model is the legacy
+    /// `param_payload_bytes` envelope.
+    pub fn is_passthrough(&self) -> bool {
+        self.codec == CodecKind::F32 && !self.delta
+    }
+
+    /// Whether encode → decode is bit-exact (only the passthrough is:
+    /// delta reconstruction `baseline + (x − baseline)` rounds).
+    pub fn is_lossless(&self) -> bool {
+        self.is_passthrough()
+    }
+
+    /// Compact human label (CSV-safe, no commas), e.g. `i8+delta@0.10`.
+    pub fn label(&self) -> String {
+        let mut s = self.codec.name().to_string();
+        if self.delta {
+            s.push_str("+delta");
+            let frac = self.topk.unwrap_or(DEFAULT_TOPK_FRAC);
+            if frac < 1.0 {
+                s.push_str(&format!("@{frac:.2}"));
+            }
+        }
+        s
+    }
+
+    /// Number of delta coefficients kept for a `dim`-element tensor
+    /// (`dim` itself when sparsification is off or inapplicable).
+    pub fn keep_k(&self, dim: usize) -> usize {
+        if dim == 0 || !self.delta {
+            return dim;
+        }
+        let frac = self.topk.unwrap_or(DEFAULT_TOPK_FRAC);
+        // sparse indices are u16 on the wire
+        if frac >= 1.0 || dim > u16::MAX as usize {
+            return dim;
+        }
+        ((frac * dim as f64).round() as usize).clamp(1, dim)
+    }
+
+    /// Modelled on-wire bytes of one `dim`-element transfer under this
+    /// configuration — exactly [`Frame::encoded_len`] of the frame
+    /// [`WireConfig::encode`] would build (`has_baseline` says whether a
+    /// shared delta baseline exists).
+    pub fn frame_bytes(&self, dim: usize, has_baseline: bool) -> u64 {
+        let delta_active = self.delta && has_baseline;
+        let c = codec(self.codec);
+        if self.codec == CodecKind::F32 && !delta_active {
+            // legacy envelope: identical to netsim::param_payload_bytes
+            return (FRAME_HEADER_BYTES + c.payload_bytes(dim) + PASSTHROUGH_ENVELOPE_BYTES)
+                as u64;
+        }
+        let k = if delta_active { self.keep_k(dim) } else { dim };
+        if delta_active && k < dim {
+            (FRAME_HEADER_BYTES + 4 + 2 * k + c.payload_bytes(k)) as u64
+        } else {
+            (FRAME_HEADER_BYTES + c.payload_bytes(dim)) as u64
+        }
+    }
+
+    /// Encode one transfer. `baseline` is `(ring round, params)` of the
+    /// reference both endpoints share; it is used only when `delta` is on
+    /// and the dimensions match (otherwise the frame is dense).
+    pub fn encode(&self, xs: &[f32], round: u32, baseline: Option<(u32, &[f32])>) -> Frame {
+        let dim = xs.len();
+        let c = codec(self.codec);
+        let base = if self.delta {
+            baseline.filter(|(_, b)| b.len() == dim)
+        } else {
+            None
+        };
+        match base {
+            None => Frame {
+                codec: self.codec,
+                delta: false,
+                sparse: false,
+                round,
+                baseline_round: NO_BASELINE,
+                dim: dim as u32,
+                payload: c.encode(xs),
+            },
+            Some((bround, b)) => {
+                let delta: Vec<f32> = xs.iter().zip(b).map(|(x, y)| x - y).collect();
+                let k = self.keep_k(dim);
+                if k >= dim {
+                    return Frame {
+                        codec: self.codec,
+                        delta: true,
+                        sparse: false,
+                        round,
+                        baseline_round: bround,
+                        dim: dim as u32,
+                        payload: c.encode(&delta),
+                    };
+                }
+                // deterministic top-k: largest |delta| first, ties toward
+                // the lower index; encoded in ascending index order
+                let mut order: Vec<usize> = (0..dim).collect();
+                order.sort_by(|&a, &b| {
+                    delta[b]
+                        .abs()
+                        .total_cmp(&delta[a].abs())
+                        .then(a.cmp(&b))
+                });
+                let mut keep = order[..k].to_vec();
+                keep.sort_unstable();
+                let values: Vec<f32> = keep.iter().map(|&i| delta[i]).collect();
+                let mut payload = Vec::with_capacity(4 + 2 * k + c.payload_bytes(k));
+                payload.extend_from_slice(&(k as u32).to_le_bytes());
+                for &i in &keep {
+                    payload.extend_from_slice(&(i as u16).to_le_bytes());
+                }
+                payload.extend_from_slice(&c.encode(&values));
+                Frame {
+                    codec: self.codec,
+                    delta: true,
+                    sparse: true,
+                    round,
+                    baseline_round: bround,
+                    dim: dim as u32,
+                    payload,
+                }
+            }
+        }
+    }
+
+    /// The lossy channel a transfer applies to its values:
+    /// `decode(encode(xs))`. Identity (bit-exact, no allocation beyond
+    /// the clone) for the passthrough configuration.
+    pub fn channel(&self, xs: &[f32], baseline: Option<&[f32]>) -> Vec<f32> {
+        if self.is_passthrough() {
+            return xs.to_vec();
+        }
+        let frame = self.encode(xs, 0, baseline.map(|b| (0, b)));
+        frame
+            .decode(baseline)
+            .expect("wire channel: self-encoded frame must decode")
+    }
+}
+
+/// One versioned wire transfer: header + codec payload.
+///
+/// Serialized layout (little-endian):
+///
+/// ```text
+/// magic "SWF1" | version u8 | codec u8 | flags u8 | reserved u8
+/// round u32 | baseline_round u32 | dim u32 | payload …
+/// ```
+///
+/// Sparse payloads are `k u32 | k × index u16 | codec(k values)`; dense
+/// payloads are the codec's encoding of the full (delta) vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub codec: CodecKind,
+    /// Payload is a delta against `baseline_round`'s model.
+    pub delta: bool,
+    /// Payload is top-k sparse (implies `delta`).
+    pub sparse: bool,
+    /// Producing round (metadata).
+    pub round: u32,
+    /// Checkpoint-ring round of the delta baseline ([`NO_BASELINE`] for
+    /// dense frames).
+    pub baseline_round: u32,
+    /// Logical element count of the decoded tensor.
+    pub dim: u32,
+    payload: Vec<u8>,
+}
+
+impl Frame {
+    /// Raw payload bytes (after the 20-byte header).
+    pub fn payload(&self) -> &[u8] {
+        &self.payload
+    }
+
+    /// Modelled on-wire size: serialized bytes, plus the legacy
+    /// [`PASSTHROUGH_ENVELOPE_BYTES`] allowance for passthrough frames
+    /// (keeping them byte-identical with the seed's
+    /// [`crate::netsim::param_payload_bytes`] model).
+    pub fn encoded_len(&self) -> u64 {
+        let raw = (FRAME_HEADER_BYTES + self.payload.len()) as u64;
+        if self.codec == CodecKind::F32 && !self.delta && !self.sparse {
+            raw + PASSTHROUGH_ENVELOPE_BYTES as u64
+        } else {
+            raw
+        }
+    }
+
+    /// Serialize header + payload.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(FRAME_HEADER_BYTES + self.payload.len());
+        out.extend_from_slice(&FRAME_MAGIC);
+        out.push(FRAME_VERSION);
+        out.push(self.codec.to_byte());
+        let mut flags = 0u8;
+        if self.delta {
+            flags |= FLAG_DELTA;
+        }
+        if self.sparse {
+            flags |= FLAG_SPARSE;
+        }
+        out.push(flags);
+        out.push(0); // reserved
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&self.baseline_round.to_le_bytes());
+        out.extend_from_slice(&self.dim.to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Parse and structurally validate a serialized frame.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Frame> {
+        anyhow::ensure!(bytes.len() >= FRAME_HEADER_BYTES, "frame truncated");
+        anyhow::ensure!(bytes[..4] == FRAME_MAGIC, "bad frame magic");
+        anyhow::ensure!(bytes[4] == FRAME_VERSION, "unsupported frame version {}", bytes[4]);
+        let codec_kind = CodecKind::from_byte(bytes[5])?;
+        let flags = bytes[6];
+        anyhow::ensure!(flags & !(FLAG_DELTA | FLAG_SPARSE) == 0, "unknown flags {flags:#x}");
+        let delta = flags & FLAG_DELTA != 0;
+        let sparse = flags & FLAG_SPARSE != 0;
+        anyhow::ensure!(!sparse || delta, "sparse frame without delta flag");
+        let round = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        let baseline_round = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+        let dim = u32::from_le_bytes(bytes[16..20].try_into().unwrap());
+        let payload = bytes[FRAME_HEADER_BYTES..].to_vec();
+
+        let c = codec(codec_kind);
+        if sparse {
+            anyhow::ensure!(payload.len() >= 4, "sparse frame truncated");
+            let k = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+            anyhow::ensure!(k <= dim as usize, "sparse k {k} > dim {dim}");
+            let expect = 4 + 2 * k + c.payload_bytes(k);
+            anyhow::ensure!(
+                payload.len() == expect,
+                "sparse payload length {} != {expect}",
+                payload.len()
+            );
+            let mut prev: Option<u16> = None;
+            for j in 0..k {
+                let idx = u16::from_le_bytes(payload[4 + 2 * j..6 + 2 * j].try_into().unwrap());
+                anyhow::ensure!((idx as u32) < dim, "sparse index {idx} >= dim {dim}");
+                anyhow::ensure!(
+                    prev.map_or(true, |p| idx > p),
+                    "sparse indices not strictly increasing"
+                );
+                prev = Some(idx);
+            }
+        } else {
+            let expect = c.payload_bytes(dim as usize);
+            anyhow::ensure!(
+                payload.len() == expect,
+                "payload length {} != {expect}",
+                payload.len()
+            );
+        }
+        Ok(Frame { codec: codec_kind, delta, sparse, round, baseline_round, dim, payload })
+    }
+
+    /// Decode back to the logical `f32` vector. Delta frames need the
+    /// baseline the sender referenced (`baseline_round` names the ring
+    /// entry); dense frames ignore it.
+    pub fn decode(&self, baseline: Option<&[f32]>) -> Result<Vec<f32>> {
+        let dim = self.dim as usize;
+        let c = codec(self.codec);
+        if !self.delta {
+            return c.decode(&self.payload, dim);
+        }
+        let b = baseline.context("delta frame needs its baseline to decode")?;
+        anyhow::ensure!(b.len() == dim, "baseline dim {} != frame dim {dim}", b.len());
+        if !self.sparse {
+            let d = c.decode(&self.payload, dim)?;
+            return Ok(b.iter().zip(&d).map(|(x, d)| x + d).collect());
+        }
+        anyhow::ensure!(self.payload.len() >= 4, "sparse frame truncated");
+        let k = u32::from_le_bytes(self.payload[0..4].try_into().unwrap()) as usize;
+        anyhow::ensure!(4 + 2 * k <= self.payload.len(), "sparse frame truncated");
+        let values = c.decode(&self.payload[4 + 2 * k..], k)?;
+        let mut out = b.to_vec();
+        for (j, v) in values.into_iter().enumerate() {
+            let idx =
+                u16::from_le_bytes(self.payload[4 + 2 * j..6 + 2 * j].try_into().unwrap())
+                    as usize;
+            anyhow::ensure!(idx < dim, "sparse index {idx} >= dim {dim}");
+            out[idx] += v;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::param_payload_bytes;
+
+    fn vecs(dim: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let base: Vec<f32> = (0..dim).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let cur: Vec<f32> = base.iter().map(|b| b + (rng.f32() - 0.5) * 0.1).collect();
+        (base, cur)
+    }
+
+    #[test]
+    fn passthrough_is_bit_exact_and_matches_legacy_bytes() {
+        for dim in [0usize, 1, 33, 545] {
+            let (_, xs) = vecs(dim, 1);
+            let wire = WireConfig::default();
+            let frame = wire.encode(&xs, 7, None);
+            assert_eq!(frame.encoded_len(), param_payload_bytes(dim));
+            assert_eq!(frame.encoded_len(), wire.frame_bytes(dim, false));
+            let back = frame.decode(None).unwrap();
+            assert_eq!(back.len(), xs.len());
+            for (a, b) in xs.iter().zip(&back) {
+                assert_eq!(a.to_bits(), b.to_bits(), "dim {dim}");
+            }
+            // channel is the identity too
+            let ch = wire.channel(&xs, None);
+            assert!(xs.iter().zip(&ch).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
+    fn frame_bytes_matches_encoded_len_across_configs() {
+        let (base, xs) = vecs(33, 2);
+        for codec_kind in [CodecKind::F32, CodecKind::F16, CodecKind::I8] {
+            for (delta, topk) in [
+                (false, None),
+                (true, None),
+                (true, Some(0.25)),
+                (true, Some(1.0)),
+            ] {
+                let wire = WireConfig { codec: codec_kind, delta, topk };
+                for baseline in [None, Some((0u32, base.as_slice()))] {
+                    let frame = wire.encode(&xs, 3, baseline);
+                    assert_eq!(
+                        frame.encoded_len(),
+                        wire.frame_bytes(33, baseline.is_some()),
+                        "{wire:?} baseline={}",
+                        baseline.is_some()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrip_every_shape() {
+        let (base, xs) = vecs(40, 3);
+        for wire in [
+            WireConfig::default(),
+            WireConfig { codec: CodecKind::F16, delta: false, topk: None },
+            WireConfig { codec: CodecKind::I8, delta: true, topk: Some(1.0) },
+            WireConfig { codec: CodecKind::I8, delta: true, topk: Some(0.2) },
+            WireConfig { codec: CodecKind::F32, delta: true, topk: Some(0.2) },
+        ] {
+            let frame = wire.encode(&xs, 9, Some((4, &base)));
+            let bytes = frame.to_bytes();
+            let back = Frame::from_bytes(&bytes).unwrap();
+            assert_eq!(back, frame, "{wire:?}");
+            assert_eq!(
+                back.decode(Some(&base)).unwrap(),
+                frame.decode(Some(&base)).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn from_bytes_rejects_corruption() {
+        let (base, xs) = vecs(16, 4);
+        let wire = WireConfig { codec: CodecKind::I8, delta: true, topk: Some(0.25) };
+        let bytes = wire.encode(&xs, 1, Some((0, &base))).to_bytes();
+        assert!(Frame::from_bytes(&bytes[..10]).is_err(), "truncated header");
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Frame::from_bytes(&bad).is_err(), "magic");
+        let mut bad = bytes.clone();
+        bad[4] = 99;
+        assert!(Frame::from_bytes(&bad).is_err(), "version");
+        let mut bad = bytes.clone();
+        bad[5] = 7;
+        assert!(Frame::from_bytes(&bad).is_err(), "codec byte");
+        let mut bad = bytes.clone();
+        bad[6] = 0xF0;
+        assert!(Frame::from_bytes(&bad).is_err(), "flags");
+        let mut bad = bytes.clone();
+        bad.pop();
+        assert!(Frame::from_bytes(&bad).is_err(), "short payload");
+        bad = bytes;
+        bad.push(0);
+        assert!(Frame::from_bytes(&bad).is_err(), "long payload");
+    }
+
+    #[test]
+    fn dense_delta_reconstructs_closely() {
+        let (base, xs) = vecs(64, 5);
+        let wire = WireConfig { codec: CodecKind::F32, delta: true, topk: Some(1.0) };
+        let out = wire.channel(&xs, Some(&base));
+        for (a, b) in xs.iter().zip(&out) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sparse_delta_keeps_largest_coefficients() {
+        let base = vec![0.0f32; 8];
+        let xs = vec![0.0, 5.0, 0.1, 0.0, -7.0, 0.2, 0.0, 0.0];
+        let wire = WireConfig { codec: CodecKind::F32, delta: true, topk: Some(0.25) };
+        // k = 2: the ±largest deltas (indices 1 and 4) survive
+        let out = wire.channel(&xs, Some(&base));
+        assert!((out[1] - 5.0).abs() < 1e-6);
+        assert!((out[4] + 7.0).abs() < 1e-6);
+        assert_eq!(out[2], 0.0);
+        assert_eq!(out[5], 0.0);
+    }
+
+    #[test]
+    fn delta_without_baseline_degrades_to_dense() {
+        let (_, xs) = vecs(12, 6);
+        let wire = WireConfig { codec: CodecKind::I8, delta: true, topk: None };
+        let frame = wire.encode(&xs, 0, None);
+        assert!(!frame.delta);
+        assert_eq!(frame.baseline_round, NO_BASELINE);
+        assert!(frame.decode(None).is_ok());
+        // mismatched baseline length also degrades to dense
+        let short = vec![0.0f32; 5];
+        let frame = wire.encode(&xs, 0, Some((0, &short)));
+        assert!(!frame.delta);
+    }
+
+    #[test]
+    fn delta_frame_requires_baseline_to_decode() {
+        let (base, xs) = vecs(12, 7);
+        let wire = WireConfig { codec: CodecKind::I8, delta: true, topk: None };
+        let frame = wire.encode(&xs, 2, Some((1, &base)));
+        assert!(frame.delta);
+        assert_eq!(frame.baseline_round, 1);
+        assert!(frame.decode(None).is_err());
+        assert!(frame.decode(Some(&base[..5])).is_err());
+        assert!(frame.decode(Some(&base)).is_ok());
+    }
+
+    #[test]
+    fn keep_k_policy() {
+        let lean = WireConfig::preset("lean").unwrap();
+        assert_eq!(lean.keep_k(33), 3); // round(0.1 * 33)
+        assert_eq!(lean.keep_k(5), 1); // floor of max(1, ..)
+        assert_eq!(lean.keep_k(0), 0);
+        let dense = WireConfig { topk: Some(1.0), ..lean };
+        assert_eq!(dense.keep_k(33), 33);
+        let off = WireConfig::default();
+        assert_eq!(off.keep_k(33), 33);
+        // u16 index limit: huge tensors fall back to dense
+        assert_eq!(lean.keep_k(70_000), 70_000);
+    }
+
+    #[test]
+    fn presets_and_labels() {
+        assert!(WireConfig::preset("lossless").unwrap().is_passthrough());
+        assert_eq!(WireConfig::preset("f16").unwrap().codec, CodecKind::F16);
+        let lean = WireConfig::preset("lean").unwrap();
+        assert_eq!(lean.codec, CodecKind::I8);
+        assert!(lean.delta);
+        assert!(WireConfig::preset("warp").is_err());
+        assert_eq!(WireConfig::default().label(), "f32");
+        assert_eq!(lean.label(), "i8+delta@0.10");
+        assert!(!lean.label().contains(','));
+        assert_eq!(
+            WireConfig { topk: Some(1.0), ..lean }.label(),
+            "i8+delta"
+        );
+    }
+
+    #[test]
+    fn lean_beats_passthrough_by_4x_at_svm_dim() {
+        let wire = WireConfig::preset("lean").unwrap();
+        let f32_bytes = WireConfig::default().frame_bytes(33, true);
+        let lean_bytes = wire.frame_bytes(33, true);
+        assert!(
+            f32_bytes as f64 / lean_bytes as f64 >= 4.0,
+            "{f32_bytes} / {lean_bytes}"
+        );
+    }
+
+    #[test]
+    fn codec_trait_objects_are_consistent() {
+        for kind in [CodecKind::F32, CodecKind::F16, CodecKind::I8] {
+            let c = codec(kind);
+            assert_eq!(c.kind(), kind);
+            let (_, xs) = vecs(21, 8);
+            let bytes = c.encode(&xs);
+            assert_eq!(bytes.len(), c.payload_bytes(21));
+            let back = c.decode(&bytes, 21).unwrap();
+            assert_eq!(back.len(), 21);
+            if c.is_lossless() {
+                assert!(xs.iter().zip(&back).all(|(a, b)| a.to_bits() == b.to_bits()));
+            }
+            assert!(c.decode(&bytes, 20).is_err());
+        }
+        assert_eq!(CodecKind::parse("i8").unwrap(), CodecKind::I8);
+        assert!(CodecKind::parse("mp3").is_err());
+    }
+}

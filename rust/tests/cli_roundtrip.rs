@@ -139,3 +139,41 @@ fn fleet_bench_small_is_deterministic_and_writes_csv() {
     assert_eq!(text.lines().count(), 2, "{text}");
     std::fs::remove_dir_all(&dir).ok();
 }
+
+#[test]
+fn fleet_bench_wire_flags_report_bytes_reduction() {
+    let dir = temp_dir("wire");
+    let csv = dir.join("wire.csv");
+    // --codec i8 --delta triggers the f32 reference run and the
+    // bytes-on-wire reduction report, end-to-end through the CLI
+    let out = run(&[
+        "fleet",
+        "bench",
+        "--nodes",
+        "60",
+        "--clusters",
+        "6",
+        "--rounds",
+        "3",
+        "--preset",
+        "fleet-1k",
+        "--threads",
+        "2",
+        "--codec",
+        "i8",
+        "--delta",
+        "--csv",
+        csv.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "wire fleet bench failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("identical"), "{stdout}");
+    assert!(stdout.contains("reduction"), "no wire reduction line:\n{stdout}");
+    assert!(stdout.contains("i8+delta"), "{stdout}");
+    let text = std::fs::read_to_string(&csv).expect("csv written");
+    assert!(text.contains("i8+delta"), "{text}");
+    // unknown codec names fail fast
+    let out = run(&["fleet", "bench", "--codec", "mp3"]);
+    assert!(!out.status.success());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -66,10 +66,16 @@ fn cases() -> Vec<(&'static str, SimConfig, Mode)> {
         cfg.node_recovery_prob = 0.5;
         cfg.normalized()
     };
+    let wire_lean = {
+        let mut cfg = base_cfg(20, 4, 8, 17);
+        cfg.wire = scale_fl::wire::WireConfig::preset("lean").unwrap();
+        cfg.normalized()
+    };
     vec![
         ("scale-iid-20x4", base_cfg(20, 4, 8, 5), Mode::Scale),
         ("scale-skew-quantized", skew_quantized, Mode::Scale),
         ("scale-secagg-accgate-failures", secagg_failures, Mode::Scale),
+        ("scale-wire-lean", wire_lean, Mode::Scale),
         (
             "scale-scenario-churn",
             base_cfg(30, 5, 10, 13),

@@ -12,6 +12,7 @@ use scale_fl::sim::Simulation;
 use scale_fl::topology::Topology;
 use scale_fl::util::prop::{check, Config, Gen};
 use scale_fl::util::rng::Rng;
+use scale_fl::wire::{CodecKind, WireConfig};
 
 fn random_cfg(g: &mut Gen) -> SimConfig {
     let n_nodes = g.usize_in(6, 36);
@@ -22,7 +23,15 @@ fn random_cfg(g: &mut Gen) -> SimConfig {
         2 => Topology::Full,
         _ => Topology::RandomK(g.usize_in(1, 4)),
     };
+    // every system invariant must hold for lossy wire configs too
+    let wire = match g.usize_in(0, 3) {
+        0 => WireConfig::default(),
+        1 => WireConfig { codec: CodecKind::F16, delta: false, topk: None },
+        2 => WireConfig::preset("lean").unwrap(),
+        _ => WireConfig { codec: CodecKind::I8, delta: true, topk: Some(1.0) },
+    };
     SimConfig {
+        wire,
         n_nodes,
         n_clusters,
         rounds: g.usize_in(2, 6),

@@ -1,0 +1,220 @@
+//! Wire-protocol contract tests: codec round-trips stay within their
+//! per-tensor error bounds, lossless runs reproduce the seed byte model
+//! and fingerprints exactly, and the traffic ledger agrees with
+//! `Frame::encoded_len` / `WireConfig::frame_bytes` to the byte.
+
+use scale_fl::config::SimConfig;
+use scale_fl::netsim::{param_payload_bytes, MsgKind};
+use scale_fl::quant::{f16_from_f32, f16_to_f32, QuantVec};
+use scale_fl::runtime::compute::{ModelCompute, NativeSvm};
+use scale_fl::sim::Simulation;
+use scale_fl::util::prop::{check, Config, Gen};
+use scale_fl::wire::{codec, CodecKind, Frame, WireConfig};
+
+fn gen_vec(g: &mut Gen) -> Vec<f32> {
+    g.vec_of(|r| (r.f32() - 0.5) * r.f32() * 50.0)
+}
+
+#[test]
+fn f32_passthrough_is_bit_exact_and_byte_compatible() {
+    check(
+        &Config { cases: 100, seed: 0x3132, max_size: 300 },
+        "f32 passthrough",
+        |g| {
+            let xs = gen_vec(g);
+            let wire = WireConfig::default();
+            let frame = wire.encode(&xs, 0, None);
+            if frame.encoded_len() != param_payload_bytes(xs.len()) {
+                return Err(format!(
+                    "frame {} != legacy {}",
+                    frame.encoded_len(),
+                    param_payload_bytes(xs.len())
+                ));
+            }
+            let back = frame.decode(None).map_err(|e| e.to_string())?;
+            for (a, b) in xs.iter().zip(&back) {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("bit drift: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn i8_roundtrip_error_within_per_tensor_scale_bound() {
+    check(
+        &Config { cases: 150, seed: 0x18, max_size: 400 },
+        "i8 scale bound",
+        |g| {
+            let xs = gen_vec(g);
+            let bound = QuantVec::encode(&xs).max_error() as f64 + 1e-5;
+            let back = codec(CodecKind::I8)
+                .decode(&codec(CodecKind::I8).encode(&xs), xs.len())
+                .map_err(|e| e.to_string())?;
+            for (a, b) in xs.iter().zip(&back) {
+                if ((a - b).abs() as f64) > bound {
+                    return Err(format!("{a} vs {b} (bound {bound})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn f16_roundtrip_error_within_half_ulp_bound() {
+    check(
+        &Config { cases: 150, seed: 0xF16, max_size: 400 },
+        "f16 bound",
+        |g| {
+            let xs = gen_vec(g);
+            let back = codec(CodecKind::F16)
+                .decode(&codec(CodecKind::F16).encode(&xs), xs.len())
+                .map_err(|e| e.to_string())?;
+            for (a, b) in xs.iter().zip(&back) {
+                let bound = (a.abs() as f64 / 1024.0).max(1e-7);
+                if ((a - b).abs() as f64) > bound {
+                    return Err(format!("{a} vs {b} (bound {bound})"));
+                }
+            }
+            // the codec is the f16_from/to pair elementwise
+            if back
+                .iter()
+                .zip(&xs)
+                .any(|(b, a)| b.to_bits() != f16_to_f32(f16_from_f32(*a)).to_bits())
+            {
+                return Err("codec disagrees with f16 primitives".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn delta_frames_roundtrip_and_serialize_across_random_configs() {
+    check(
+        &Config { cases: 120, seed: 0xDE17A, max_size: 200 },
+        "delta frames",
+        |g| {
+            let base = gen_vec(g);
+            let xs: Vec<f32> =
+                base.iter().map(|b| b + (g.rng.f32() - 0.5) * 0.2).collect();
+            let wire = WireConfig {
+                codec: match g.usize_in(0, 2) {
+                    0 => CodecKind::F32,
+                    1 => CodecKind::F16,
+                    _ => CodecKind::I8,
+                },
+                delta: true,
+                topk: match g.usize_in(0, 2) {
+                    0 => None,
+                    1 => Some(g.f64_in(0.05, 0.9)),
+                    _ => Some(1.0),
+                },
+            };
+            let frame = wire.encode(&xs, 5, Some((4, &base)));
+            // byte-accounting closed form matches the built frame
+            if frame.encoded_len() != wire.frame_bytes(xs.len(), true) {
+                return Err(format!(
+                    "{:?}: encoded_len {} != frame_bytes {}",
+                    wire,
+                    frame.encoded_len(),
+                    wire.frame_bytes(xs.len(), true)
+                ));
+            }
+            // serialization round-trips
+            let parsed = Frame::from_bytes(&frame.to_bytes()).map_err(|e| e.to_string())?;
+            if parsed != frame {
+                return Err("serialize/parse mismatch".into());
+            }
+            // decoding reproduces xs on the kept coordinates within the
+            // codec bound; dropped coordinates fall back to the baseline
+            let out = frame.decode(Some(&base)).map_err(|e| e.to_string())?;
+            if out.len() != xs.len() {
+                return Err("dim mismatch".into());
+            }
+            for (i, o) in out.iter().enumerate() {
+                let to_x = (o - xs[i]).abs();
+                let to_base = (o - base[i]).abs();
+                // each decoded coord is near the true value or the baseline
+                let slack = 0.5 + xs[i].abs() as f64 * 1e-2;
+                if (to_x.min(to_base) as f64) > slack {
+                    return Err(format!(
+                        "coord {i}: {o} far from both {} and {}",
+                        xs[i], base[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lossless_run_fingerprint_matches_explicit_passthrough() {
+    // the default config IS the passthrough; making it explicit (or
+    // spelling it via the preset) must not move the fingerprint
+    let compute = NativeSvm::new(NativeSvm::default_dims());
+    let run = |wire: WireConfig| {
+        let mut cfg = SimConfig {
+            n_nodes: 16,
+            n_clusters: 4,
+            rounds: 5,
+            dataset_samples: 320,
+            dataset_malignant: 120,
+            eval_every: 5,
+            seed: 9,
+            ..Default::default()
+        }
+        .normalized();
+        cfg.wire = wire;
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        sim.run_scale().unwrap().fingerprint()
+    };
+    let implicit = run(WireConfig::default());
+    let explicit = run(WireConfig::preset("lossless").unwrap());
+    assert_eq!(implicit, explicit);
+}
+
+#[test]
+fn ledger_bytes_equal_frame_encoded_len_times_count() {
+    // scenario-free run with the ring primed at formation: every param
+    // transfer of a kind has the same frame size, so ledger totals must
+    // factor exactly as count × encoded_len
+    let compute = NativeSvm::new(NativeSvm::default_dims());
+    for preset in ["lossless", "f16", "i8", "lean", "sparse"] {
+        let wire = WireConfig::preset(preset).unwrap();
+        let mut cfg = SimConfig {
+            n_nodes: 18,
+            n_clusters: 3,
+            rounds: 5,
+            dataset_samples: 360,
+            dataset_malignant: 130,
+            eval_every: 100,
+            seed: 4,
+            ..Default::default()
+        }
+        .normalized();
+        cfg.wire = wire;
+        let dim = compute.param_dim();
+        // a representative frame built exactly like the exchange path
+        let baseline = vec![0.0f32; dim];
+        let xs = vec![0.1f32; dim];
+        let frame = wire.encode(&xs, 1, Some((0, &baseline)));
+        assert_eq!(frame.encoded_len(), wire.frame_bytes(dim, true), "{preset}");
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        let r = sim.run_scale().unwrap();
+        for kind in
+            [MsgKind::PeerExchange, MsgKind::DriverCollect, MsgKind::DriverBroadcast]
+        {
+            let t = r.ledger[&kind];
+            assert_eq!(
+                t.bytes,
+                t.count * frame.encoded_len(),
+                "{preset} {kind:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# Markdown link check: every relative link target referenced from the
+# given markdown files must exist on disk. External (http/mailto) links
+# and pure anchors are skipped. Exits non-zero on the first broken set.
+set -u
+
+fail=0
+for f in "$@"; do
+    if [ ! -f "$f" ]; then
+        echo "check_md_links: missing input file: $f"
+        fail=1
+        continue
+    fi
+    dir=$(dirname "$f")
+    # extract ](target) occurrences, strip the wrapping
+    grep -oE '\]\([^)]+\)' "$f" | sed -E 's/^\]\(//; s/\)$//' |
+        while IFS= read -r link; do
+            case "$link" in
+                http://* | https://* | mailto:* | \#*) continue ;;
+            esac
+            target="${link%%#*}"
+            [ -z "$target" ] && continue
+            if [ ! -e "$dir/$target" ]; then
+                echo "$f: broken link -> $link"
+                echo "$f" >>"${TMPDIR:-/tmp}/md_link_failures.$$"
+            fi
+        done
+    if [ -s "${TMPDIR:-/tmp}/md_link_failures.$$" ]; then
+        fail=1
+        rm -f "${TMPDIR:-/tmp}/md_link_failures.$$"
+    fi
+done
+rm -f "${TMPDIR:-/tmp}/md_link_failures.$$"
+
+if [ "$fail" -eq 0 ]; then
+    echo "check_md_links: all relative links resolve ($# file(s))"
+fi
+exit "$fail"
