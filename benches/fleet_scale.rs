@@ -12,6 +12,7 @@
 
 use scale_fl::bench::{fleet_csv_row, measure_fleet, section, FLEET_CSV_HEADER};
 use scale_fl::config::SimConfig;
+use scale_fl::sim::AlgoKind;
 
 fn main() {
     // auto policy lives in one place: SimConfig::effective_threads
@@ -42,7 +43,7 @@ fn main() {
         let mut cfg = SimConfig::fleet_preset(nodes, clusters);
         cfg.rounds = rounds;
         for &threads in &thread_counts {
-            let m = measure_fleet(&cfg, threads).expect("fleet measurement");
+            let m = measure_fleet(&cfg, threads, AlgoKind::Scale).expect("fleet measurement");
             println!(
                 "{nodes:>6} | {clusters:>8} | {threads:>7} | {:>7.2} | {:>7.2} | {:>6.2}x | {}",
                 m.seq_s,
@@ -54,7 +55,7 @@ fn main() {
                 m.identical,
                 "fingerprint diverged at {nodes} nodes / {clusters} clusters / {threads} threads"
             );
-            rows.push(fleet_csv_row(&cfg, &m));
+            rows.push(fleet_csv_row(&cfg, &m, AlgoKind::Scale));
         }
     }
 

@@ -14,7 +14,7 @@ use anyhow::Result;
 
 use scale_fl::runtime::compute::NativeSvm;
 use scale_fl::scenario::{self, sweep};
-use scale_fl::sim::Simulation;
+use scale_fl::sim::{AlgoKind, Simulation};
 
 fn main() -> Result<()> {
     let (scenario, sim_cfg) = scenario::parse_with_sim(scenario::EXAMPLE_TOML)?;
@@ -61,8 +61,8 @@ fn main() -> Result<()> {
 
     // --- multi-seed sweep: parallel must equal sequential ---
     let seeds = sweep::seeds_from(cfg.seed, 4);
-    let par = sweep::run_sweep(&cfg, &scenario, &seeds, true)?;
-    let seq = sweep::run_sweep(&cfg, &scenario, &seeds, false)?;
+    let par = sweep::run_sweep(&cfg, &scenario, &seeds, true, AlgoKind::Scale)?;
+    let seq = sweep::run_sweep(&cfg, &scenario, &seeds, false, AlgoKind::Scale)?;
     for (p, s) in par.iter().zip(&seq) {
         assert_eq!(
             p.report.fingerprint(),

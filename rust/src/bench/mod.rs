@@ -11,8 +11,9 @@ use anyhow::Result;
 use crate::config::SimConfig;
 use crate::runtime::compute::NativeSvm;
 use crate::runtime::manifest::ModelKind;
+use crate::scenario::Scenario;
 use crate::sim::report::RunReport;
-use crate::sim::Simulation;
+use crate::sim::{AlgoKind, Simulation};
 use crate::util::stats::percentile;
 use crate::wire::WireConfig;
 
@@ -92,14 +93,15 @@ impl FleetMeasurement {
     }
 }
 
-/// Shared CSV schema for fleet measurements.
+/// Shared CSV schema for fleet measurements — `scale fleet bench`,
+/// `scale bench matrix` and `benches/fleet_scale.rs` all emit it.
 pub const FLEET_CSV_HEADER: &str = "nodes,clusters,rounds,threads,seq_s,par_s,speedup,\
-     fingerprint_match,updates,accuracy,codec,param_bytes,wire_reduction";
+     fingerprint_match,updates,accuracy,codec,param_bytes,wire_reduction,algo";
 
 /// One CSV row under [`FLEET_CSV_HEADER`].
-pub fn fleet_csv_row(cfg: &SimConfig, m: &FleetMeasurement) -> String {
+pub fn fleet_csv_row(cfg: &SimConfig, m: &FleetMeasurement, algo: AlgoKind) -> String {
     format!(
-        "{},{},{},{},{:.4},{:.4},{:.3},{},{},{:.4},{},{},{:.3}",
+        "{},{},{},{},{:.4},{:.4},{:.3},{},{},{:.4},{},{},{:.3},{}",
         cfg.n_nodes,
         cfg.n_clusters,
         cfg.rounds,
@@ -112,16 +114,31 @@ pub fn fleet_csv_row(cfg: &SimConfig, m: &FleetMeasurement) -> String {
         m.report.final_metrics.accuracy,
         cfg.wire.label(),
         m.param_bytes,
-        m.wire_reduction()
+        m.wire_reduction(),
+        algo.label()
     )
 }
 
-/// Run `cfg` once at `threads = 1` and once at `threads`, over the
-/// native backend, timing both runs and comparing their fingerprints.
-/// Non-passthrough wire configs additionally run an `f32`-passthrough
-/// reference (parallel, untimed) so the measurement carries the
-/// bytes-on-wire reduction.
-pub fn measure_fleet(cfg: &SimConfig, threads: usize) -> Result<FleetMeasurement> {
+/// Run `cfg` under `algo` once at `threads = 1` and once at `threads`,
+/// over the native backend, timing both runs and comparing their
+/// fingerprints — the engine's determinism contract, checked for every
+/// algorithm through the one execution path. Non-passthrough wire
+/// configs additionally run an `f32`-passthrough reference (parallel,
+/// untimed) so the measurement carries the bytes-on-wire reduction.
+pub fn measure_fleet(cfg: &SimConfig, threads: usize, algo: AlgoKind) -> Result<FleetMeasurement> {
+    measure_fleet_with_ref(cfg, threads, algo, None)
+}
+
+/// [`measure_fleet`] with an optional precomputed f32-passthrough
+/// reference byte count, so grid drivers (`run_matrix`) that already ran
+/// the passthrough twin of a compact-codec cell can skip the internal
+/// reference simulation.
+pub fn measure_fleet_with_ref(
+    cfg: &SimConfig,
+    threads: usize,
+    algo: AlgoKind,
+    reference: Option<u64>,
+) -> Result<FleetMeasurement> {
     anyhow::ensure!(
         cfg.model == ModelKind::Svm,
         "fleet measurement is native-only (SVM model)"
@@ -132,7 +149,7 @@ pub fn measure_fleet(cfg: &SimConfig, threads: usize) -> Result<FleetMeasurement
         c.threads = threads;
         let t0 = Instant::now();
         let mut sim = Simulation::new_parallel(c, &compute)?;
-        let report = sim.run_scale()?;
+        let report = sim.run_algo(algo, &Scenario::none())?;
         Ok((t0.elapsed().as_secs_f64(), report))
     };
     let (seq_s, seq_report) = run_at(cfg, 1)?;
@@ -141,6 +158,8 @@ pub fn measure_fleet(cfg: &SimConfig, threads: usize) -> Result<FleetMeasurement
     let param_bytes = report.param_path_bytes();
     let ref_param_bytes = if cfg.wire.is_passthrough() {
         None
+    } else if reference.is_some() {
+        reference
     } else {
         let mut rc = cfg.clone();
         rc.wire = WireConfig::default();
@@ -156,6 +175,74 @@ pub fn measure_fleet(cfg: &SimConfig, threads: usize) -> Result<FleetMeasurement
         ref_param_bytes,
         report,
     })
+}
+
+/// One `bench matrix` cell: a `(preset, wire, algo)` combination
+/// measured through [`measure_fleet`], so every cell carries the same
+/// CSV schema — and the same `--threads 1` vs N determinism hard-check —
+/// as `scale fleet bench`.
+pub struct MatrixCell {
+    /// Base-config label (preset name) of this cell.
+    pub preset: String,
+    pub algo: AlgoKind,
+    /// The cell's full config (base + wire preset, normalized).
+    pub cfg: SimConfig,
+    pub m: FleetMeasurement,
+}
+
+impl MatrixCell {
+    /// The cell's CSV row under [`FLEET_CSV_HEADER`].
+    pub fn csv_row(&self) -> String {
+        fleet_csv_row(&self.cfg, &self.m, self.algo)
+    }
+}
+
+/// Run the full comparison grid — every `(base config) × (wire preset)
+/// × (algorithm)` cell — through the unified engine. Fails fast if any
+/// cell's sequential and parallel fingerprints diverge: the matrix is
+/// only meaningful if every algorithm honours the determinism contract.
+pub fn run_matrix(
+    bases: &[(String, SimConfig)],
+    wires: &[String],
+    algos: &[AlgoKind],
+) -> Result<Vec<MatrixCell>> {
+    let mut out = Vec::with_capacity(bases.len() * wires.len() * algos.len());
+    for (preset, base) in bases {
+        // one f32-passthrough reference per (preset, algo): a lossless
+        // cell in the grid doubles as the reference for every compact
+        // cell's wire_reduction, so the grid never re-simulates it
+        let mut f32_ref: Vec<Option<u64>> = vec![None; algos.len()];
+        for wire in wires {
+            let mut cfg = base.clone();
+            cfg.wire = WireConfig::preset(wire)?;
+            let cfg = cfg.normalized();
+            cfg.validate()?;
+            // every cell must actually exercise the parallel engine: a
+            // threads=1 base (e.g. the paper preset) would make the
+            // determinism hard-check compare two sequential runs
+            let threads = cfg.effective_threads().max(2);
+            for (ai, &algo) in algos.iter().enumerate() {
+                let m = measure_fleet_with_ref(&cfg, threads, algo, f32_ref[ai])?;
+                anyhow::ensure!(
+                    m.identical,
+                    "fingerprint diverged for {preset}/{wire}/{}",
+                    algo.label()
+                );
+                if cfg.wire.is_passthrough() {
+                    f32_ref[ai] = Some(m.param_bytes);
+                } else if f32_ref[ai].is_none() {
+                    f32_ref[ai] = m.ref_param_bytes;
+                }
+                out.push(MatrixCell {
+                    preset: preset.clone(),
+                    algo,
+                    cfg: cfg.clone(),
+                    m,
+                });
+            }
+        }
+    }
+    Ok(out)
 }
 
 /// Print one named measurement row.
@@ -186,7 +273,7 @@ mod tests {
             ..Default::default()
         }
         .normalized();
-        let m = measure_fleet(&cfg, 2).unwrap();
+        let m = measure_fleet(&cfg, 2, AlgoKind::Scale).unwrap();
         assert!(m.identical);
         assert!(m.seq_s > 0.0 && m.par_s > 0.0);
         assert!(m.speedup() > 0.0);
@@ -194,12 +281,13 @@ mod tests {
         assert!(m.param_bytes > 0);
         assert_eq!(m.ref_param_bytes, None);
         assert_eq!(m.wire_reduction(), 1.0);
-        let row = fleet_csv_row(&cfg, &m);
+        let row = fleet_csv_row(&cfg, &m, AlgoKind::Scale);
         assert_eq!(
             row.split(',').count(),
             FLEET_CSV_HEADER.split(',').count(),
             "row/schema drift: {row}"
         );
+        assert!(row.ends_with(",scale"), "{row}");
     }
 
     #[test]
@@ -217,13 +305,64 @@ mod tests {
         }
         .normalized();
         cfg.wire = WireConfig::preset("lean").unwrap();
-        let m = measure_fleet(&cfg, 2).unwrap();
+        let m = measure_fleet(&cfg, 2, AlgoKind::Scale).unwrap();
         assert!(m.identical);
         let reference = m.ref_param_bytes.expect("compact codec runs a reference");
         assert!(reference > m.param_bytes, "{reference} vs {}", m.param_bytes);
         assert!(m.wire_reduction() > 2.0, "{}", m.wire_reduction());
-        let row = fleet_csv_row(&cfg, &m);
+        let row = fleet_csv_row(&cfg, &m, AlgoKind::Scale);
         assert_eq!(row.split(',').count(), FLEET_CSV_HEADER.split(',').count());
+    }
+
+    #[test]
+    fn matrix_covers_the_preset_codec_algo_grid() {
+        let base = SimConfig {
+            n_nodes: 12,
+            n_clusters: 3,
+            rounds: 3,
+            local_epochs: 1,
+            eval_every: 100,
+            dataset_samples: 240,
+            dataset_malignant: 90,
+            seed: 3,
+            threads: 2,
+            ..Default::default()
+        }
+        .normalized();
+        let cells = run_matrix(
+            &[("tiny".to_string(), base)],
+            &["lossless".to_string(), "lean".to_string()],
+            &AlgoKind::all(),
+        )
+        .unwrap();
+        // 1 preset × 2 wires × 3 algos
+        assert_eq!(cells.len(), 6);
+        for cell in &cells {
+            assert!(cell.m.identical, "{}/{}", cell.preset, cell.algo.label());
+            assert_eq!(
+                cell.csv_row().split(',').count(),
+                FLEET_CSV_HEADER.split(',').count()
+            );
+        }
+        // every algorithm appears under every wire preset
+        for algo in AlgoKind::all() {
+            assert_eq!(cells.iter().filter(|c| c.algo == algo).count(), 2);
+        }
+        // the lean cells actually cut param-path bytes vs their f32 twin
+        let bytes = |passthrough: bool, algo: AlgoKind| {
+            cells
+                .iter()
+                .find(|c| c.cfg.wire.is_passthrough() == passthrough && c.algo == algo)
+                .map(|c| c.m.param_bytes)
+                .unwrap()
+        };
+        for algo in AlgoKind::all() {
+            assert!(
+                bytes(true, algo) > bytes(false, algo),
+                "{} lean not smaller",
+                algo.label()
+            );
+        }
     }
 
     #[test]

@@ -1,23 +1,30 @@
 //! `scale` — launcher CLI for the SCALE federated-learning system.
 //!
 //! ```text
-//! scale run          run SCALE and/or the FedAvg baseline, print tables
+//! scale run          run SCALE and/or the baselines, print tables
 //! scale scenario     event-driven scenarios: run / sweep / gen
 //! scale fleet bench  cluster-parallel speedup + determinism check
+//! scale bench matrix all algorithms × wire presets, one CSV schema
 //! scale cluster-info run cluster formation only and print the clusters
 //! scale gen-config   write a default config JSON to edit
 //! scale artifacts    inspect the AOT artifact manifest (pjrt builds)
 //! scale help         this text
 //! ```
 //!
+//! Every round-running subcommand takes the unified `--algo
+//! scale|fedavg|hfl` axis: all three algorithms execute through the same
+//! phase-structured engine (`sim::engine`), so scenarios, `--threads`
+//! fan-out and the wire codecs apply to each of them identically.
+//!
 //! Examples:
 //! ```text
-//! scale run --mode both --table1 --fig2
+//! scale run --algo both --table1 --fig2
 //! scale run --nodes 50 --clusters 5 --rounds 20 --backend native
 //! scale scenario gen --out churn.toml
-//! scale scenario run --file churn.toml --rounds-trace
-//! scale scenario sweep --file churn.toml --seeds 8 --verify
+//! scale scenario run --file churn.toml --algo fedavg --rounds-trace
+//! scale scenario sweep --file churn.toml --algo hfl --seeds 8 --verify
 //! scale fleet bench --preset fleet-4k --threads 8 --csv fleet_scale.csv
+//! scale bench matrix --presets paper --codecs lossless,lean --csv matrix.csv
 //! ```
 
 use std::path::Path;
@@ -37,13 +44,13 @@ use scale_fl::runtime::manifest::ModelKind;
 #[cfg(feature = "pjrt")]
 use scale_fl::runtime::Runtime;
 use scale_fl::scenario::{self, sweep, Scenario};
-use scale_fl::sim::Simulation;
+use scale_fl::sim::{AlgoKind, Simulation};
 use scale_fl::topology::Topology;
 
 const RUN_SPEC: Spec = Spec {
     flags: &[
-        "config", "preset", "mode", "backend", "artifacts", "nodes", "clusters",
-        "rounds", "epochs", "seed", "partition", "model", "min-delta",
+        "config", "preset", "algo", "mode", "backend", "artifacts", "nodes",
+        "clusters", "rounds", "epochs", "seed", "partition", "model", "min-delta",
         "failure-prob", "topology", "heterogeneity", "out", "lr", "reg",
         "trace-dir", "edge-period", "threads", "wire", "codec", "topk",
     ],
@@ -52,10 +59,11 @@ const RUN_SPEC: Spec = Spec {
 
 const SCENARIO_SPEC: Spec = Spec {
     flags: &[
-        "file", "config", "preset", "backend", "artifacts", "nodes", "clusters",
-        "rounds", "epochs", "seed", "partition", "model", "min-delta",
-        "failure-prob", "topology", "heterogeneity", "out", "lr", "reg",
-        "trace-dir", "seeds", "base-seed", "threads", "wire", "codec", "topk",
+        "file", "config", "preset", "algo", "edge-period", "backend", "artifacts",
+        "nodes", "clusters", "rounds", "epochs", "seed", "partition", "model",
+        "min-delta", "failure-prob", "topology", "heterogeneity", "out", "lr",
+        "reg", "trace-dir", "seeds", "base-seed", "threads", "wire", "codec",
+        "topk",
     ],
     switches: &[
         "quiet", "rounds-trace", "sequential", "verify", "quantize", "secagg", "delta",
@@ -64,12 +72,21 @@ const SCENARIO_SPEC: Spec = Spec {
 
 const FLEET_SPEC: Spec = Spec {
     flags: &[
-        "config", "preset", "nodes", "clusters", "rounds", "epochs", "seed",
-        "partition", "model", "min-delta", "failure-prob", "topology",
-        "heterogeneity", "lr", "reg", "threads", "csv", "out", "wire", "codec",
-        "topk",
+        "config", "preset", "algo", "edge-period", "nodes", "clusters", "rounds",
+        "epochs", "seed", "partition", "model", "min-delta", "failure-prob",
+        "topology", "heterogeneity", "lr", "reg", "threads", "csv", "out", "wire",
+        "codec", "topk",
     ],
     switches: &["quiet", "quantize", "secagg", "delta"],
+};
+
+const MATRIX_SPEC: Spec = Spec {
+    flags: &[
+        "presets", "codecs", "edge-period", "csv", "threads", "nodes", "clusters",
+        "rounds", "epochs", "seed", "partition", "min-delta", "failure-prob",
+        "heterogeneity", "lr", "reg",
+    ],
+    switches: &["quiet"],
 };
 
 const INFO_SPEC: Spec = Spec {
@@ -98,6 +115,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         Some("run") => cmd_run(&Args::parse(argv, &RUN_SPEC)?),
         Some("scenario") => cmd_scenario(&Args::parse(argv, &SCENARIO_SPEC)?),
         Some("fleet") => cmd_fleet(&Args::parse(argv, &FLEET_SPEC)?),
+        Some("bench") => cmd_bench(&Args::parse(argv, &MATRIX_SPEC)?),
         Some("cluster-info") => cmd_cluster_info(&Args::parse(argv, &INFO_SPEC)?),
         Some("gen-config") => cmd_gen_config(&Args::parse(argv, &GEN_SPEC)?),
         Some("artifacts") => cmd_artifacts(&Args::parse(argv, &ART_SPEC)?),
@@ -109,75 +127,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     }
 }
 
-const HELP: &str = "\
-scale — SCALE clustered federated learning (paper reproduction)
-
-USAGE:
-  scale run [OPTIONS]           run the experiment
-  scale scenario run --file F   run SCALE under an event timeline (TOML)
-  scale scenario sweep --file F multi-seed sweep (parallel, native backend)
-  scale scenario gen [--out F]  write an example scenario TOML
-  scale fleet bench [OPTIONS]   cluster-parallel speedup + determinism bench
-  scale cluster-info [OPTIONS]  cluster formation only
-  scale gen-config [--out F]    write default config JSON
-  scale artifacts [--artifacts DIR]
-  scale help
-
-RUN OPTIONS:
-  --config FILE        load a config (JSON, or TOML via its [sim] table);
-                       other flags override it
-  --preset NAME        paper | fleet-1k | fleet-4k | fleet-10k
-  --mode scale|fedavg|hfl|both (default both; hfl = client-edge-cloud
-                       baseline, --edge-period N cloud syncs)
-  --backend pjrt|native        (pjrt needs a build with --features pjrt)
-  --artifacts DIR      AOT artifact dir (default ./artifacts)
-  --threads N          cluster-parallel round engine workers (native
-                       backend; 0 = auto, 1 = sequential; fingerprints
-                       are identical for every value)
-  --nodes N --clusters K --rounds R --epochs E --seed S
-  --model svm|mlp      (pjrt backend only for mlp)
-  --partition iid|skew:ALPHA
-  --topology ring|full|k:K|random:K
-  --min-delta D        checkpoint upload gate (default 0.03)
-  --failure-prob P     per-round node failure probability
-  --heterogeneity H    device spread (0 = homogeneous)
-  --lr X --reg X
-  --codec f32|f16|i8   wire codec for every parameter transfer (wire
-                       module; default f32 = lossless passthrough)
-  --delta              delta-encode transfers against the shared baseline
-                       (checkpoint ring); implies top-k sparsification at
-                       the default 10% keep unless --topk overrides
-  --topk F             delta keep-fraction in (0,1]; 1.0 = dense delta
-  --wire NAME          wire preset: lossless | f16 | i8 | lean | sparse
-                       (lean = i8+delta, the Table-1 comm-budget setup)
-  --quantize           legacy alias for --codec i8
-  --secagg             pairwise-masked secure aggregation (secagg module)
-  --trace-dir DIR      write rounds/clusters/ledger CSVs + JSON per run
-  --out FILE           write the JSON report(s)
-  --table1 --fig2      print the paper-table renderings
-  --rounds-trace       print per-round records
-
-SCENARIO OPTIONS (plus the run options above):
-  --file F             scenario TOML (events, [regulation], optional [sim])
-  --seeds N            sweep width (default 8)
-  --base-seed S        first sweep seed (default: config seed)
-  --sequential         disable the parallel sweep fan-out
-  --verify             re-run the sweep sequentially and require
-                       bit-identical reports
-
-FLEET BENCH OPTIONS (plus config/preset/size and wire flags above):
-  --threads N          parallel worker count to compare against
-                       --threads 1 (default 0 = auto)
-  --csv FILE           append a CSV row (header written when creating;
-                       includes codec, param-path bytes and the wire
-                       reduction vs f32 passthrough)
-  (base config defaults to the fleet-4k preset when neither --config nor
-   --preset is given; the bench runs the same config sequentially and
-   parallel, reports the wall-clock speedup, and fails if the
-   fingerprints differ. With --codec/--delta it also re-runs the f32
-   passthrough and reports the encoded bytes-on-wire reduction, e.g.
-   `scale fleet bench --preset fleet-1k --codec i8 --delta`.)
-";
+const HELP: &str = include_str!("help.txt");
 
 /// Build a SimConfig from `--config` / `--preset` + flag overrides,
 /// falling back to `default_base` when neither source is given.
@@ -329,10 +279,28 @@ fn backend_pjrt(_args: &Args, _model: ModelKind) -> Result<Box<dyn ModelCompute>
     bail!("this build has no PJRT support (rebuild with `--features pjrt`)")
 }
 
+/// Resolve the unified `--algo` axis (with `--edge-period` folded into
+/// the HFL variant).
+fn algo_from(args: &Args) -> Result<AlgoKind> {
+    let kind = AlgoKind::parse(args.get_or("algo", "scale"))?;
+    Ok(match args.get_usize("edge-period")? {
+        Some(p) => kind.with_edge_period(p),
+        None => kind,
+    })
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
     let backend = backend_from(args, &cfg)?;
-    let mode = args.get_or("mode", "both");
+    // --algo is the unified axis; --mode remains a legacy alias
+    let mode = args
+        .get("algo")
+        .or_else(|| args.get("mode"))
+        .unwrap_or("both");
+    // one vocabulary: `run` accepts whatever the engine parses, plus "both"
+    if mode != "both" && AlgoKind::parse(mode).is_err() {
+        bail!("unknown --algo '{mode}' (scale, fedavg, hfl, both)");
+    }
     let quiet = args.has("quiet");
     let mut reports = Vec::new();
 
@@ -354,7 +322,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         reports.push(report);
     }
     if mode == "hfl" {
-        let period = args.get_usize("edge-period")?.unwrap_or(3);
+        let period = args
+            .get_usize("edge-period")?
+            .unwrap_or(AlgoKind::DEFAULT_EDGE_PERIOD);
         let mut sim = backend.simulation(cfg.clone())?;
         let report = sim.run_hfl(period)?;
         if !quiet {
@@ -476,12 +446,14 @@ fn scenario_setup(args: &Args) -> Result<(Scenario, SimConfig)> {
 
 fn cmd_scenario_run(args: &Args) -> Result<()> {
     let (scenario, cfg) = scenario_setup(args)?;
+    let algo = algo_from(args)?;
     let backend = backend_from(args, &cfg)?;
     let quiet = args.has("quiet");
     if !quiet {
         println!(
-            "scenario '{}': {} event(s), regulation {} (min_live_frac {:.2}, cooldown {})",
+            "scenario '{}' [{}]: {} event(s), regulation {} (min_live_frac {:.2}, cooldown {})",
             scenario.name,
+            algo.label(),
             scenario.events.len(),
             if scenario.regulation.enabled { "on" } else { "off" },
             scenario.regulation.min_live_frac,
@@ -489,7 +461,7 @@ fn cmd_scenario_run(args: &Args) -> Result<()> {
         );
     }
     let mut sim = backend.simulation(cfg)?;
-    let report = sim.run_scale_scenario(&scenario)?;
+    let report = sim.run_algo(algo, &scenario)?;
     if !quiet {
         print_summary(&report);
         println!(
@@ -497,6 +469,8 @@ fn cmd_scenario_run(args: &Args) -> Result<()> {
             report.total_reclusterings(),
             report.total_elections()
         );
+        // the compact determinism witness: identical for any --threads
+        println!("fingerprint     : {}", report.fingerprint_hash());
         if args.has("rounds-trace") {
             print_rounds(&report);
         }
@@ -522,6 +496,7 @@ fn cmd_scenario_run(args: &Args) -> Result<()> {
 
 fn cmd_scenario_sweep(args: &Args) -> Result<()> {
     let (scenario, cfg) = scenario_setup(args)?;
+    let algo = algo_from(args)?;
     if args.get("backend") == Some("pjrt") {
         bail!("the sweep runner is native-only (PJRT handles are thread-local)");
     }
@@ -533,13 +508,14 @@ fn cmd_scenario_sweep(args: &Args) -> Result<()> {
     let quiet = args.has("quiet");
 
     let t0 = std::time::Instant::now();
-    let runs = sweep::run_sweep(&cfg, &scenario, &seeds, parallel)?;
+    let runs = sweep::run_sweep(&cfg, &scenario, &seeds, parallel, algo)?;
     let elapsed = t0.elapsed().as_secs_f64();
 
     if !quiet {
         println!(
-            "sweep '{}': {} seed(s), {} ({:.2}s wall)",
+            "sweep '{}' [{}]: {} seed(s), {} ({:.2}s wall)",
             scenario.name,
+            algo.label(),
             n,
             if parallel { "parallel" } else { "sequential" },
             elapsed
@@ -563,7 +539,7 @@ fn cmd_scenario_sweep(args: &Args) -> Result<()> {
     }
 
     if args.has("verify") {
-        let sequential = sweep::run_sweep(&cfg, &scenario, &seeds, false)?;
+        let sequential = sweep::run_sweep(&cfg, &scenario, &seeds, false, algo)?;
         for (p, s) in runs.iter().zip(&sequential) {
             if p.report.fingerprint() != s.report.fingerprint() {
                 bail!("seed {} diverged between parallel and sequential runs", p.seed);
@@ -612,11 +588,13 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 fn cmd_fleet_bench(args: &Args) -> Result<()> {
     let defaulted = args.get("config").is_none() && args.get("preset").is_none();
     let cfg = config_from_base(args, || SimConfig::preset("fleet-4k"))?;
+    let algo = algo_from(args)?;
     let quiet = args.has("quiet");
     let par_threads = cfg.effective_threads();
     if !quiet {
         println!(
-            "fleet bench: {} nodes / {} clusters / {} rounds, --threads 1 vs {par_threads}{}",
+            "fleet bench [{}]: {} nodes / {} clusters / {} rounds, --threads 1 vs {par_threads}{}",
+            algo.label(),
             cfg.n_nodes,
             cfg.n_clusters,
             cfg.rounds,
@@ -628,7 +606,7 @@ fn cmd_fleet_bench(args: &Args) -> Result<()> {
             }
         );
     }
-    let m = scale_fl::bench::measure_fleet(&cfg, par_threads)?;
+    let m = scale_fl::bench::measure_fleet(&cfg, par_threads, algo)?;
 
     if !quiet {
         println!("sequential   : {:>8.2}s wall", m.seq_s);
@@ -661,23 +639,7 @@ fn cmd_fleet_bench(args: &Args) -> Result<()> {
     }
 
     if let Some(csv) = args.get("csv") {
-        use std::io::Write as _;
-        let path = Path::new(csv);
-        let fresh = !path.exists();
-        let mut fh = std::fs::OpenOptions::new()
-            .append(true)
-            .create(true)
-            .open(path)
-            .with_context(|| format!("opening {csv}"))?;
-        if fresh {
-            writeln!(fh, "{}", scale_fl::bench::FLEET_CSV_HEADER)
-                .with_context(|| format!("writing {csv}"))?;
-        }
-        writeln!(fh, "{}", scale_fl::bench::fleet_csv_row(&cfg, &m))
-            .with_context(|| format!("writing {csv}"))?;
-        if !quiet {
-            println!("csv row appended to {csv}");
-        }
+        append_fleet_csv(csv, &[scale_fl::bench::fleet_csv_row(&cfg, &m, algo)], quiet)?;
     }
     if let Some(out) = args.get("out") {
         std::fs::write(out, m.report.to_json().to_string_pretty())
@@ -687,6 +649,112 @@ fn cmd_fleet_bench(args: &Args) -> Result<()> {
         m.identical,
         "fingerprint diverged between --threads 1 and --threads {par_threads}"
     );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// bench subcommands
+// ---------------------------------------------------------------------
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("matrix") => cmd_bench_matrix(args),
+        _ => bail!(
+            "usage: scale bench matrix [--presets paper] \
+             [--codecs lossless,lean] [--csv FILE] ..."
+        ),
+    }
+}
+
+/// Run every `(preset, wire preset, algorithm)` cell through the
+/// unified engine and emit one fleet-bench-schema CSV row per cell —
+/// the three-way comparison grid behind the paper's tables, measured
+/// (not modelled) and determinism-checked.
+fn cmd_bench_matrix(args: &Args) -> Result<()> {
+    let quiet = args.has("quiet");
+    let split = |s: &str| -> Vec<String> {
+        s.split(',').map(str::trim).filter(|t| !t.is_empty()).map(String::from).collect()
+    };
+    let preset_names = split(args.get_or("presets", "paper"));
+    let wire_names = split(args.get_or("codecs", "lossless,lean"));
+    anyhow::ensure!(!preset_names.is_empty(), "--presets must name at least one preset");
+    anyhow::ensure!(!wire_names.is_empty(), "--codecs must name at least one wire preset");
+    let edge_period = args
+        .get_usize("edge-period")?
+        .unwrap_or(AlgoKind::DEFAULT_EDGE_PERIOD);
+
+    let mut bases = Vec::with_capacity(preset_names.len());
+    for name in &preset_names {
+        let cfg = config_overrides(args, SimConfig::preset(name)?)?;
+        bases.push((name.clone(), cfg));
+    }
+    let algos: Vec<AlgoKind> = AlgoKind::all()
+        .into_iter()
+        .map(|a| a.with_edge_period(edge_period))
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let cells = scale_fl::bench::run_matrix(&bases, &wire_names, &algos)?;
+    if !quiet {
+        println!(
+            "bench matrix: {} preset(s) x {} codec(s) x {} algo(s) = {} cell(s) \
+             ({:.2}s wall)",
+            preset_names.len(),
+            wire_names.len(),
+            algos.len(),
+            cells.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        println!("{}", scale_fl::bench::FLEET_CSV_HEADER);
+        for cell in &cells {
+            println!("{}", cell.csv_row());
+        }
+    }
+    if let Some(csv) = args.get("csv") {
+        let rows: Vec<String> = cells.iter().map(|c| c.csv_row()).collect();
+        append_fleet_csv(csv, &rows, quiet)?;
+    }
+    Ok(())
+}
+
+/// Append rows to a fleet-schema CSV: the header is written when the
+/// file is created, and appending to a file whose header does not match
+/// the current schema (e.g. one from before the `algo` column) is
+/// refused instead of silently mixing row widths.
+fn append_fleet_csv(csv: &str, rows: &[String], quiet: bool) -> Result<()> {
+    use std::io::{BufRead as _, Write as _};
+    let path = Path::new(csv);
+    let header = scale_fl::bench::FLEET_CSV_HEADER;
+    // only the first line matters: a missing or empty file gets the
+    // header, anything else must already carry the current schema
+    let mut first = String::new();
+    if let Ok(fh) = std::fs::File::open(path) {
+        std::io::BufReader::new(fh)
+            .read_line(&mut first)
+            .with_context(|| format!("reading {csv}"))?;
+    }
+    let fresh = first.is_empty();
+    if !fresh {
+        anyhow::ensure!(
+            first.trim_end() == header,
+            "{csv} has a different CSV schema (header '{}'); point --csv at a fresh file",
+            first.trim_end()
+        );
+    }
+    let mut fh = std::fs::OpenOptions::new()
+        .append(true)
+        .create(true)
+        .open(path)
+        .with_context(|| format!("opening {csv}"))?;
+    if fresh {
+        writeln!(fh, "{header}").with_context(|| format!("writing {csv}"))?;
+    }
+    for row in rows {
+        writeln!(fh, "{row}").with_context(|| format!("writing {csv}"))?;
+    }
+    if !quiet {
+        println!("{} csv row(s) appended to {csv}", rows.len());
+    }
     Ok(())
 }
 

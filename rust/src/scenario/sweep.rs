@@ -24,7 +24,7 @@ use crate::runtime::compute::NativeSvm;
 use crate::runtime::manifest::ModelKind;
 use crate::scenario::Scenario;
 use crate::sim::report::RunReport;
-use crate::sim::Simulation;
+use crate::sim::{AlgoKind, Simulation};
 use crate::util::stats::{mean, std_dev};
 
 /// One seed's completed run.
@@ -50,7 +50,7 @@ pub fn seeds_from(base: u64, n: usize) -> Vec<u64> {
     (0..n as u64).map(|i| base.wrapping_add(i)).collect()
 }
 
-fn run_one(cfg: &SimConfig, scenario: &Scenario, seed: u64) -> Result<SweepRun> {
+fn run_one(cfg: &SimConfig, scenario: &Scenario, seed: u64, algo: AlgoKind) -> Result<SweepRun> {
     let mut cfg = cfg.clone();
     cfg.seed = seed;
     let cfg = cfg.normalized();
@@ -58,11 +58,13 @@ fn run_one(cfg: &SimConfig, scenario: &Scenario, seed: u64) -> Result<SweepRun> 
     // new_parallel so a `threads` setting in the config composes with
     // the seed-level fan-out (fingerprints are thread-count independent)
     let mut sim = Simulation::new_parallel(cfg, &compute)?;
-    let report = sim.run_scale_scenario(scenario)?;
+    let report = sim.run_algo(algo, scenario)?;
     Ok(SweepRun { seed, report })
 }
 
-/// Run every seed; `parallel` fans the seeds out over the available
+/// Run every seed through the unified engine under `algo` (the CLI's
+/// `--algo` axis — SCALE, FedAvg and HFL all sweep through the same
+/// scenario timeline); `parallel` fans the seeds out over the available
 /// cores. Results come back in seed order either way, and parallel
 /// output is identical to sequential output for the same inputs.
 pub fn run_sweep(
@@ -70,6 +72,7 @@ pub fn run_sweep(
     scenario: &Scenario,
     seeds: &[u64],
     parallel: bool,
+    algo: AlgoKind,
 ) -> Result<Vec<SweepRun>> {
     anyhow::ensure!(
         cfg.model == ModelKind::Svm,
@@ -78,7 +81,7 @@ pub fn run_sweep(
         cfg.model
     );
     if !parallel || seeds.len() <= 1 {
-        return seeds.iter().map(|&s| run_one(cfg, scenario, s)).collect();
+        return seeds.iter().map(|&s| run_one(cfg, scenario, s, algo)).collect();
     }
     // the seed-level fan-out already saturates the cores; per-sim
     // cluster-parallelism would multiply thread counts (seeds × cores)
@@ -102,7 +105,7 @@ pub fn run_sweep(
                 let mut out = Vec::new();
                 let mut i = w;
                 while i < seeds.len() {
-                    out.push((i, run_one(cfg, scenario, seeds[i])));
+                    out.push((i, run_one(cfg, scenario, seeds[i], algo)));
                     i += workers;
                 }
                 out
@@ -169,8 +172,8 @@ mod tests {
         let cfg = small_cfg();
         let scenario = churn();
         let seeds = seeds_from(cfg.seed, 8);
-        let par = run_sweep(&cfg, &scenario, &seeds, true).unwrap();
-        let seq = run_sweep(&cfg, &scenario, &seeds, false).unwrap();
+        let par = run_sweep(&cfg, &scenario, &seeds, true, AlgoKind::Scale).unwrap();
+        let seq = run_sweep(&cfg, &scenario, &seeds, false, AlgoKind::Scale).unwrap();
         assert_eq!(par.len(), 8);
         assert_eq!(seq.len(), 8);
         for (p, s) in par.iter().zip(&seq) {
@@ -189,10 +192,42 @@ mod tests {
     }
 
     #[test]
+    fn baseline_sweeps_run_under_churn_and_match_sequential() {
+        // the unified engine gives FedAvg and HFL the scenario timeline:
+        // a parallel sweep of either baseline must equal its sequential
+        // twin bit-for-bit, exactly like SCALE
+        let cfg = small_cfg();
+        let scenario = churn();
+        let seeds = seeds_from(cfg.seed, 3);
+        for algo in [AlgoKind::FedAvg, AlgoKind::Hfl { edge_period: 2 }] {
+            let par = run_sweep(&cfg, &scenario, &seeds, true, algo).unwrap();
+            let seq = run_sweep(&cfg, &scenario, &seeds, false, algo).unwrap();
+            for (p, s) in par.iter().zip(&seq) {
+                assert_eq!(
+                    p.report.fingerprint(),
+                    s.report.fingerprint(),
+                    "{} seed {} diverged",
+                    algo.label(),
+                    p.seed
+                );
+                assert_eq!(p.report.mode, algo.label());
+                // churn actually bites: the round log records the events
+                assert!(p.report.rounds.iter().any(|r| r.scenario_events > 0));
+            }
+        }
+    }
+
+    #[test]
     fn summary_aggregates() {
         let cfg = small_cfg();
-        let runs = run_sweep(&cfg, &scenario::Scenario::none(), &seeds_from(1, 3), true)
-            .unwrap();
+        let runs = run_sweep(
+            &cfg,
+            &scenario::Scenario::none(),
+            &seeds_from(1, 3),
+            true,
+            AlgoKind::Scale,
+        )
+        .unwrap();
         let s = summarize(&runs);
         assert_eq!(s.runs, 3);
         assert!(s.mean_accuracy > 0.5 && s.mean_accuracy <= 1.0);

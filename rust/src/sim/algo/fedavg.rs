@@ -1,0 +1,214 @@
+//! Traditional FedAvg as an [`Algorithm`]: every live node trains and
+//! uploads to the cloud every round, the server aggregates, and the
+//! global model is re-broadcast to every node — the Table-1 baseline
+//! SCALE is compared against.
+//!
+//! * **setup** — every node registers as its own "cluster" of one so
+//!   the server registry tracks per-node models; the global model starts
+//!   from the shared `init_params`.
+//! * **group phase** — training + upload traffic shards over fixed
+//!   64-node chunks (`NODE_SHARD`: a constant, never thread-count
+//!   dependent, so per-`(round, shard)` jitter streams — and therefore
+//!   fingerprints — are identical for any `--threads` value).
+//! * **central sync** — aggregate over live nodes, broadcast back, with
+//!   the additive latency model (train + upload + server + broadcast).
+//!
+//! Running through the unified engine gives the baseline the scenario
+//! timeline for free: churn and outages toggle node liveness, and the
+//! round simply runs over whoever is alive (membership is static, so the
+//! default no-op `regulate` is correct).
+
+use anyhow::Result;
+
+use crate::netsim::{MsgKind, TrafficLedger};
+use crate::runtime::compute::ModelCompute;
+use crate::server::GlobalServer;
+use crate::sim::report::{group_reports, ClusterReport};
+use crate::sim::{engine, NodeState, Simulation};
+use crate::util::rng::mix64;
+
+use super::{Algorithm, RoundOut};
+
+/// Fixed shard width for the parallel training phase. A constant (never
+/// thread-count dependent) so the per-`(round, shard)` jitter streams —
+/// and therefore fingerprints — are identical for any `--threads` value.
+const NODE_SHARD: usize = 64;
+
+/// One node-shard's training-phase results, merged at the round barrier
+/// in shard (= node-id) order.
+#[derive(Default)]
+pub struct ShardOut {
+    loss_sum: f64,
+    loss_n: usize,
+    train_ms: f64,
+    upload_ms: f64,
+    /// Node ids that uploaded this round.
+    uploaded: Vec<usize>,
+}
+
+/// The FedAvg baseline. `grouping` (optional) assigns nodes to
+/// report-rows so Table 1 can compare per-cluster counts; pass the SCALE
+/// clustering's members (`Simulation::scale_grouping`).
+pub struct FedAvgAlgo {
+    grouping: Option<Vec<Vec<usize>>>,
+    global: Vec<f32>,
+    per_node_updates: Vec<u64>,
+    /// Wire-frame bytes per parameter transfer: every node starts from
+    /// (and is re-broadcast) the global model, so upload/broadcast
+    /// frames always have a shared delta baseline.
+    payload: u64,
+}
+
+impl FedAvgAlgo {
+    pub fn new(grouping: Option<Vec<Vec<usize>>>) -> FedAvgAlgo {
+        FedAvgAlgo {
+            grouping,
+            global: Vec::new(),
+            per_node_updates: Vec::new(),
+            payload: 0,
+        }
+    }
+}
+
+impl Algorithm for FedAvgAlgo {
+    type Unit = ShardOut;
+
+    fn mode(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn setup(&mut self, sim: &mut Simulation<'_>, server: &mut GlobalServer) -> Result<()> {
+        self.payload = sim.cfg.wire.frame_bytes(sim.compute.param_dim(), true);
+        // the baseline registers every node as its own "cluster" of one
+        // so the registry tracks per-node models; summaries are
+        // fabricated locally (no crypto/network traffic in the baseline)
+        for id in 0..sim.nodes.len() {
+            let s = sim.summary_for(id);
+            let env = s.seal(&sim.root_key, &mut sim.rng.derive(0xBA5E + id as u64));
+            server.intake_summary(id, &env).ok();
+        }
+        let ccfg = crate::clustering::ClusterConfig {
+            n_clusters: sim.nodes.len(),
+            balance_slack: None,
+            ..sim.cfg.cluster.clone()
+        };
+        server.form_clusters(&ccfg)?;
+        self.per_node_updates = vec![0u64; sim.nodes.len()];
+        self.global = sim.compute.init_params(sim.cfg.seed);
+        Ok(())
+    }
+
+    /// The training + upload phase over fixed-width node shards; results
+    /// come back in shard (= node-id) order.
+    fn group_phase(
+        &mut self,
+        sim: &mut Simulation<'_>,
+        round: usize,
+        threads: usize,
+    ) -> Result<Vec<(ShardOut, TrafficLedger)>> {
+        let payload = self.payload;
+        let cfg = &sim.cfg;
+        let base_net = &sim.net;
+        let units: Vec<(usize, &mut [NodeState])> =
+            sim.nodes.chunks_mut(NODE_SHARD).enumerate().collect();
+        let run_one = |(shard, nodes): (usize, &mut [NodeState]),
+                       compute: &dyn ModelCompute|
+         -> Result<(ShardOut, TrafficLedger)> {
+            let seed = mix64(
+                mix64(cfg.seed, 0xFE_DA56),
+                mix64(round as u64, shard as u64),
+            );
+            let mut net = base_net.fork(seed);
+            let mut out = ShardOut::default();
+            for node in nodes.iter_mut() {
+                if !node.alive {
+                    continue;
+                }
+                let (loss, ms) =
+                    node.local_train(compute, cfg.local_epochs, cfg.lr, cfg.reg)?;
+                out.loss_sum += loss;
+                out.loss_n += 1;
+                out.train_ms = out.train_ms.max(ms);
+                // every node uploads every round — the 2850 of Table 1
+                let lat =
+                    net.send(MsgKind::GlobalUpdate, Some(&node.device), None, payload, round);
+                out.upload_ms = out.upload_ms.max(lat);
+                out.uploaded.push(node.id);
+            }
+            Ok((out, net.ledger))
+        };
+        engine::fan_out(sim.compute, sim.sync_compute, threads, units, run_one)
+            .into_iter()
+            .collect()
+    }
+
+    fn central_sync(
+        &mut self,
+        sim: &mut Simulation<'_>,
+        _server: &mut GlobalServer,
+        round: usize,
+        outs: Vec<ShardOut>,
+    ) -> Result<RoundOut> {
+        let mut ro = RoundOut::default();
+        let mut train_ms = 0.0f64;
+        let mut upload_ms = 0.0f64;
+        for out in outs {
+            train_ms = train_ms.max(out.train_ms);
+            upload_ms = upload_ms.max(out.upload_ms);
+            ro.loss_sum += out.loss_sum;
+            ro.loss_n += out.loss_n;
+            for id in out.uploaded {
+                self.per_node_updates[id] += 1;
+            }
+        }
+        let alive: Vec<usize> =
+            (0..sim.nodes.len()).filter(|&i| sim.nodes[i].alive).collect();
+
+        if !alive.is_empty() {
+            let bank: Vec<&[f32]> =
+                alive.iter().map(|&id| sim.nodes[id].params.as_slice()).collect();
+            self.global = sim.compute.aggregate(&bank)?;
+        }
+
+        let mut broadcast_ms = 0.0f64;
+        for &id in &alive {
+            let lat = sim.net.send(
+                MsgKind::GlobalBroadcast,
+                None,
+                Some(&sim.nodes[id].device),
+                self.payload,
+                round,
+            );
+            broadcast_ms = broadcast_ms.max(lat);
+            sim.nodes[id].params = self.global.clone();
+        }
+
+        let server_ms = alive.len() as f64 * sim.net.cloud_process_latency_ms();
+        ro.latency_ms = train_ms + upload_ms + server_ms + broadcast_ms;
+        ro.updates = alive.len() as u64;
+        Ok(ro)
+    }
+
+    fn eval_params(&self, _sim: &Simulation<'_>, _server: &mut GlobalServer) -> Option<Vec<f32>> {
+        Some(self.global.clone())
+    }
+
+    fn final_params(&self, _sim: &Simulation<'_>, _server: &mut GlobalServer) -> Result<Vec<f32>> {
+        Ok(self.global.clone())
+    }
+
+    /// Per-group report rows (the provided grouping or one big group),
+    /// each evaluated against the final global model.
+    fn reports(&self, sim: &Simulation<'_>, final_params: &[f32]) -> Result<Vec<ClusterReport>> {
+        let grouping = match &self.grouping {
+            Some(g) => g.clone(),
+            None => vec![(0..sim.nodes.len()).collect::<Vec<usize>>()],
+        };
+        group_reports(
+            sim,
+            &grouping,
+            |_, group| group.iter().map(|&id| self.per_node_updates[id]).sum(),
+            final_params,
+        )
+    }
+}

@@ -1,0 +1,230 @@
+//! The [`Algorithm`] trait: a federated-learning algorithm described as
+//! the composable phases one round is made of, executed by the single
+//! generic loop in [`super::engine`].
+//!
+//! Every algorithm — SCALE, FedAvg, hierarchical FL — runs the same
+//! round skeleton:
+//!
+//! ```text
+//! scenario events → failure injection → regulate (repairs)
+//!   → group phase   (fan-out: local train + exchange + intra-group
+//!                    aggregate, one unit per cluster/shard/edge)
+//!   → barrier       (engine: sub-ledger merge in unit order)
+//!   → central sync  (server uploads, global aggregate, broadcast)
+//!   → report        (engine: eval cadence + RoundRecord assembly)
+//! ```
+//!
+//! The engine owns node state, the traffic ledger, health/eval cadence
+//! and the `sim::par` executor; an implementation only describes *what
+//! its phases do*, so every algorithm automatically gets `--threads`
+//! fan-out, wire-codec framing on its exchange paths, and
+//! scenario-driven churn/outage/straggler events. The phase split is
+//! also the determinism boundary: the group phase runs on forked
+//! per-`(round, unit)` networks and returns its effects, the central
+//! sync applies them **in unit order** on the main network — which is
+//! what keeps `RunReport::fingerprint` byte-identical for `--threads 1`
+//! and `--threads N` (DESIGN.md §7).
+
+pub mod fedavg;
+pub mod hfl;
+pub mod scale;
+
+pub use fedavg::FedAvgAlgo;
+pub use hfl::HflAlgo;
+pub use scale::ScaleAlgo;
+
+use anyhow::{bail, Result};
+
+use crate::netsim::TrafficLedger;
+use crate::scenario::ScenarioState;
+use crate::server::GlobalServer;
+use crate::sim::report::{ClusterReport, RoundRecord, ScenarioNote};
+use crate::sim::Simulation;
+
+/// One round's algorithm-level outcome; the engine folds it into a
+/// [`RoundRecord`] (adding the engine-owned fields: eval metrics, live
+/// node count, scenario/regulation counters).
+#[derive(Clone, Debug, Default)]
+pub struct RoundOut {
+    /// Global-server updates this round.
+    pub updates: u64,
+    /// Sum / count of per-node training losses (mean taken by the engine).
+    pub loss_sum: f64,
+    pub loss_n: usize,
+    /// Modelled end-to-end round latency (ms), server processing included.
+    pub latency_ms: f64,
+    /// In-round driver elections (failover; regulation elections are
+    /// counted separately by the engine).
+    pub elections: u64,
+}
+
+/// What the regulation phase repaired this round.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Repairs {
+    /// Cluster re-formations performed.
+    pub reclusterings: u64,
+    /// Driver elections triggered by the repairs.
+    pub elections: u64,
+}
+
+/// A federated-learning algorithm as composable round phases. See the
+/// module docs for the skeleton; [`super::engine::run`] is the one
+/// execution path.
+///
+/// Implementations keep their own protocol state (cluster registry,
+/// global model, edge tier); the `Simulation` owns the federation
+/// (nodes, network, RNG, config, backend).
+pub trait Algorithm {
+    /// One parallel unit's group-phase output (per cluster / node shard /
+    /// edge), merged at the round barrier **in unit order**.
+    type Unit: Send;
+
+    /// Report mode tag (`"scale"`, `"fedavg"`, `"hfl"`).
+    fn mode(&self) -> &'static str;
+
+    /// Formation phase, once before round 0: summaries, cluster/registry
+    /// setup, initial models.
+    fn setup(&mut self, sim: &mut Simulation<'_>, server: &mut GlobalServer) -> Result<()>;
+
+    /// Self-regulation phase, between barriers: repair the federation
+    /// after scenario events (re-admission, re-clustering, re-election).
+    /// Algorithms with static membership keep the default no-op — churn
+    /// still applies to them through node liveness.
+    fn regulate(
+        &mut self,
+        _sim: &mut Simulation<'_>,
+        _state: &mut ScenarioState,
+        _round: usize,
+        _notes: &mut Vec<ScenarioNote>,
+    ) -> Result<Repairs> {
+        Ok(Repairs::default())
+    }
+
+    /// The fanned-out phase: local training, peer/edge exchange and
+    /// intra-group aggregation, one unit per group, each on a private
+    /// forked network. Returns `(unit output, sub-ledger)` pairs in unit
+    /// order; the engine merges the sub-ledgers at the barrier.
+    fn group_phase(
+        &mut self,
+        sim: &mut Simulation<'_>,
+        round: usize,
+        threads: usize,
+    ) -> Result<Vec<(Self::Unit, TrafficLedger)>>;
+
+    /// The barrier-side phase, sequential and in unit order: register
+    /// uploads with the global server, aggregate, broadcast back down.
+    fn central_sync(
+        &mut self,
+        sim: &mut Simulation<'_>,
+        server: &mut GlobalServer,
+        round: usize,
+        outs: Vec<Self::Unit>,
+    ) -> Result<RoundOut>;
+
+    /// Parameters to evaluate on eval rounds (`None` when no global
+    /// model exists yet — e.g. SCALE before the first driver upload).
+    fn eval_params(&self, sim: &Simulation<'_>, server: &mut GlobalServer) -> Option<Vec<f32>>;
+
+    /// The end-of-run global model (an error when the run produced none).
+    fn final_params(&self, sim: &Simulation<'_>, server: &mut GlobalServer) -> Result<Vec<f32>>;
+
+    /// Per-group end-of-run rows (Table 1): one per cluster / report
+    /// group / edge, evaluated against `final_params` where needed.
+    fn reports(&self, sim: &Simulation<'_>, final_params: &[f32]) -> Result<Vec<ClusterReport>>;
+
+    /// Dedicated-infrastructure cost of the run (HFL's edge tier; zero
+    /// for infrastructure-free algorithms).
+    fn edge_cost_usd(&self, _sim: &Simulation<'_>, _rounds: &[RoundRecord]) -> f64 {
+        0.0
+    }
+}
+
+/// Which algorithm the unified engine drives — the CLI's `--algo` axis
+/// on `run`, `scenario run|sweep` and `fleet bench` / `bench matrix`.
+///
+/// ```
+/// use scale_fl::sim::AlgoKind;
+/// assert_eq!(AlgoKind::parse("scale").unwrap(), AlgoKind::Scale);
+/// assert_eq!(
+///     AlgoKind::parse("hfl").unwrap(),
+///     AlgoKind::Hfl { edge_period: AlgoKind::DEFAULT_EDGE_PERIOD },
+/// );
+/// assert!(AlgoKind::parse("gossip").is_err());
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgoKind {
+    /// The SCALE protocol (clusters + HDAP + self-regulation).
+    Scale,
+    /// The traditional FedAvg baseline (every node ↔ cloud, every round).
+    FedAvg,
+    /// The client-edge-cloud hierarchical baseline; edges sync to the
+    /// cloud every `edge_period` rounds.
+    Hfl { edge_period: usize },
+}
+
+impl AlgoKind {
+    /// Edge→cloud sync period `--algo hfl` uses unless `--edge-period`
+    /// overrides it.
+    pub const DEFAULT_EDGE_PERIOD: usize = 3;
+
+    /// Parse a `--algo` value.
+    pub fn parse(s: &str) -> Result<AlgoKind> {
+        Ok(match s {
+            "scale" => AlgoKind::Scale,
+            "fedavg" => AlgoKind::FedAvg,
+            "hfl" => AlgoKind::Hfl { edge_period: Self::DEFAULT_EDGE_PERIOD },
+            other => bail!("unknown algorithm '{other}' (scale, fedavg, hfl)"),
+        })
+    }
+
+    /// The CLI / CSV / report label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            AlgoKind::Scale => "scale",
+            AlgoKind::FedAvg => "fedavg",
+            AlgoKind::Hfl { .. } => "hfl",
+        }
+    }
+
+    /// Replace the edge period (no-op for non-HFL kinds).
+    pub fn with_edge_period(self, edge_period: usize) -> AlgoKind {
+        match self {
+            AlgoKind::Hfl { .. } => AlgoKind::Hfl { edge_period },
+            k => k,
+        }
+    }
+
+    /// Every algorithm, in the canonical comparison order — the `bench
+    /// matrix` axis.
+    pub fn all() -> [AlgoKind; 3] {
+        [
+            AlgoKind::Scale,
+            AlgoKind::FedAvg,
+            AlgoKind::Hfl { edge_period: Self::DEFAULT_EDGE_PERIOD },
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_kind_parses_and_labels() {
+        assert_eq!(AlgoKind::parse("scale").unwrap(), AlgoKind::Scale);
+        assert_eq!(AlgoKind::parse("fedavg").unwrap(), AlgoKind::FedAvg);
+        assert_eq!(
+            AlgoKind::parse("hfl").unwrap(),
+            AlgoKind::Hfl { edge_period: 3 }
+        );
+        assert!(AlgoKind::parse("dsgd").is_err());
+        for k in AlgoKind::all() {
+            assert!(!k.label().is_empty());
+        }
+        assert_eq!(
+            AlgoKind::parse("hfl").unwrap().with_edge_period(7),
+            AlgoKind::Hfl { edge_period: 7 }
+        );
+        assert_eq!(AlgoKind::Scale.with_edge_period(7), AlgoKind::Scale);
+    }
+}

@@ -1,0 +1,350 @@
+//! SCALE as an [`Algorithm`]: clustered HDAP with checkpoint-gated
+//! uploads and the paper's self-regulation loop.
+//!
+//! * **setup** — encrypted summaries → Proximity-Evaluation cluster
+//!   formation → per-cluster state (checkpoint ring, health monitor,
+//!   initial Algorithm-4 election).
+//! * **regulate** — the self-regulated half of the paper: proximity
+//!   re-admission of returning nodes, health-triggered re-clustering,
+//!   driver re-election (between barriers — repairs touch cross-cluster
+//!   state and never race the fanned-out cluster rounds).
+//! * **group phase** — one `cluster_round::scale_cluster_round` unit per
+//!   cluster, each over exclusive `&mut` node slots and a network forked
+//!   per `(round, cluster)`.
+//! * **central sync** — driver uploads register with the global server
+//!   in cluster-id order; round latency is the slowest cluster plus
+//!   server processing.
+
+use anyhow::Result;
+
+use crate::geo::{centroid, equirectangular_km, GeoPoint};
+use crate::health::HealthState;
+use crate::netsim::{summary_payload_bytes, MsgKind, TrafficLedger};
+use crate::runtime::compute::ModelCompute;
+use crate::scenario::ScenarioState;
+use crate::server::GlobalServer;
+use crate::sim::cluster_round::{self, ClusterRoundOut};
+use crate::sim::report::{ClusterReport, ScenarioNote};
+use crate::sim::{engine, ClusterState, NodeState, Simulation, ASSIGNMENT_BYTES};
+use crate::util::rng::mix64;
+
+use super::{Algorithm, Repairs, RoundOut};
+
+/// The SCALE protocol. Holds the per-cluster protocol state (membership,
+/// driver, gates, checkpoint ring, health monitor) between rounds.
+#[derive(Default)]
+pub struct ScaleAlgo {
+    clusters: Vec<ClusterState>,
+}
+
+impl ScaleAlgo {
+    pub fn new() -> ScaleAlgo {
+        ScaleAlgo::default()
+    }
+}
+
+impl Algorithm for ScaleAlgo {
+    type Unit = ClusterRoundOut;
+
+    fn mode(&self) -> &'static str {
+        "scale"
+    }
+
+    fn setup(&mut self, sim: &mut Simulation<'_>, server: &mut GlobalServer) -> Result<()> {
+        let members = sim.cluster_formation(server)?;
+        self.clusters = sim.init_clusters(members)?;
+        Ok(())
+    }
+
+    /// The self-regulation loop: `health` flags clusters whose reachable
+    /// membership collapsed or whose data drifted, `clustering` re-forms
+    /// them via Proximity Evaluation over fresh summaries, and
+    /// `election` re-runs Algorithm-4 driver selection. Returning nodes
+    /// are re-admitted to their geographically nearest cluster.
+    fn regulate(
+        &mut self,
+        sim: &mut Simulation<'_>,
+        state: &mut ScenarioState,
+        round: usize,
+        notes: &mut Vec<ScenarioNote>,
+    ) -> Result<Repairs> {
+        if !state.regulation.enabled {
+            return Ok(Repairs::default());
+        }
+        let clusters = &mut self.clusters;
+        let mut elections = 0u64;
+
+        // randomly-recovered nodes whose old cluster was re-formed while
+        // they were down: route them back through proximity admission
+        let recovered: Vec<usize> = state
+            .unassigned
+            .iter()
+            .copied()
+            .filter(|&id| sim.nodes[id].alive)
+            .collect();
+        for id in recovered {
+            state.unassigned.remove(&id);
+            state.pending_join.insert(id);
+        }
+
+        // --- proximity admission of returning / joining nodes ---
+        let pending: Vec<usize> = state.pending_join.iter().copied().collect();
+        for id in pending {
+            if !sim.nodes[id].alive {
+                continue;
+            }
+            let mut best: Option<(f64, usize)> = None;
+            for (ci, c) in clusters.iter().enumerate() {
+                let pts: Vec<GeoPoint> = c
+                    .members
+                    .iter()
+                    .filter(|&&m| sim.nodes[m].alive)
+                    .map(|&m| sim.nodes[m].device.location)
+                    .collect();
+                if pts.is_empty() {
+                    continue;
+                }
+                let d = equirectangular_km(sim.nodes[id].device.location, centroid(&pts));
+                if best.map_or(true, |(bd, _)| d < bd) {
+                    best = Some((d, ci));
+                }
+            }
+            if let Some((_, ci)) = best {
+                sim.net.send(
+                    MsgKind::Assignment,
+                    None,
+                    Some(&sim.nodes[id].device),
+                    ASSIGNMENT_BYTES,
+                    round,
+                );
+                let cluster = &mut clusters[ci];
+                cluster.members.push(id);
+                cluster.monitor.register(id, round);
+                let cid = cluster.id;
+                sim.refresh_cluster_eval(cluster);
+                state.pending_join.remove(&id);
+                notes.push(ScenarioNote {
+                    round,
+                    what: format!("node {id} admitted to cluster {cid} by proximity"),
+                });
+            }
+        }
+
+        // --- health scan: clusters whose detected-live fraction collapsed
+        //     (or whose members' data drifted) need re-formation ---
+        let mut affected: Vec<usize> = Vec::new();
+        for (ci, c) in clusters.iter().enumerate() {
+            if c.members.is_empty() {
+                continue;
+            }
+            let down = c
+                .members
+                .iter()
+                .filter(|&&m| {
+                    !sim.nodes[m].alive
+                        && c.monitor.state(m, round) != HealthState::Alive
+                })
+                .count();
+            let live_frac = 1.0 - down as f64 / c.members.len() as f64;
+            let drifted = c.members.iter().any(|m| state.drifted.contains(m));
+            if live_frac < state.regulation.min_live_frac || drifted {
+                affected.push(ci);
+            }
+        }
+        if affected.is_empty() || !state.may_recluster(round) {
+            return Ok(Repairs { reclusterings: 0, elections });
+        }
+
+        // --- proximity evaluation re-forms the affected clusters ---
+        let mut pool: Vec<usize> = Vec::new();
+        for &ci in &affected {
+            for &m in &clusters[ci].members.clone() {
+                if sim.nodes[m].alive {
+                    pool.push(m);
+                } else {
+                    state.unassigned.insert(m);
+                }
+                state.drifted.remove(&m);
+            }
+        }
+        // stranded joiners (no live cluster existed to admit them above)
+        let stranded: Vec<usize> = state
+            .pending_join
+            .iter()
+            .copied()
+            .filter(|&id| sim.nodes[id].alive)
+            .collect();
+        for id in stranded {
+            state.pending_join.remove(&id);
+            state.unassigned.remove(&id);
+            pool.push(id);
+        }
+        pool.sort_unstable();
+        pool.dedup();
+        if pool.is_empty() {
+            notes.push(ScenarioNote {
+                round,
+                what: format!(
+                    "{} cluster(s) fully dark; re-clustering deferred",
+                    affected.len()
+                ),
+            });
+            return Ok(Repairs { reclusterings: 0, elections });
+        }
+
+        let k_new = affected.len().min(pool.len());
+        let mut crng = sim.rng.derive(0x5EC1 ^ round as u64);
+        let mut summaries = Vec::with_capacity(pool.len());
+        for &id in &pool {
+            let msg = sim.summary_for(id);
+            let envelope = msg.seal(&sim.root_key, &mut crng);
+            sim.net.send(
+                MsgKind::Summary,
+                Some(&sim.nodes[id].device),
+                None,
+                summary_payload_bytes(envelope.len()),
+                round,
+            );
+            summaries.push(crate::clustering::NodeSummary {
+                node_id: msg.node_id,
+                data_score: msg.data_score,
+                perf_index: msg.perf_index,
+                location: GeoPoint::new(msg.lat_deg, msg.lon_deg),
+            });
+        }
+        let ccfg = crate::clustering::ClusterConfig {
+            n_clusters: k_new,
+            ..sim.cfg.cluster.clone()
+        };
+        let clustering = crate::clustering::form_clusters(&summaries, &ccfg);
+        let groups = clustering.members(&summaries);
+
+        for (gi, &ci) in affected.iter().enumerate() {
+            let member_ids = groups.get(gi).cloned().unwrap_or_default();
+            for &id in &member_ids {
+                sim.net.send(
+                    MsgKind::Assignment,
+                    None,
+                    Some(&sim.nodes[id].device),
+                    ASSIGNMENT_BYTES,
+                    round,
+                );
+                state.unassigned.remove(&id);
+            }
+            let cid = clusters[ci].id;
+            // re-formed clusters have no model every new member is known
+            // to hold, so their wire baseline resets (dense frames until
+            // the first broadcast re-arms the ring)
+            let mut fresh = sim.build_cluster(cid, member_ids, round, None)?;
+            elections += fresh.elections;
+            fresh.elections += clusters[ci].elections;
+            fresh.updates += clusters[ci].updates;
+            clusters[ci] = fresh;
+        }
+        state.note_recluster(round);
+        notes.push(ScenarioNote {
+            round,
+            what: format!(
+                "re-clustered {} cluster(s) over {} live node(s) into {} group(s)",
+                affected.len(),
+                pool.len(),
+                k_new
+            ),
+        });
+        Ok(Repairs { reclusterings: 1, elections })
+    }
+
+    /// Fan every cluster's round out as a `cluster_round` unit. Each
+    /// unit claims exclusive `&mut` access to its members' node states
+    /// (clusters partition the fleet; a violation panics here) and a
+    /// forked network whose jitter stream derives from
+    /// `(seed, round, cluster id)`.
+    fn group_phase(
+        &mut self,
+        sim: &mut Simulation<'_>,
+        round: usize,
+        threads: usize,
+    ) -> Result<Vec<(ClusterRoundOut, TrafficLedger)>> {
+        let cfg = &sim.cfg;
+        let root_key = sim.root_key;
+        let base_net = &sim.net;
+        let mut slots: Vec<Option<&mut NodeState>> =
+            sim.nodes.iter_mut().map(Some).collect();
+        let units: Vec<(&mut ClusterState, Vec<&mut NodeState>)> = self
+            .clusters
+            .iter_mut()
+            .map(|cluster| {
+                let nodes: Vec<&mut NodeState> = cluster
+                    .members
+                    .iter()
+                    .map(|&id| slots[id].take().expect("node claimed by two clusters"))
+                    .collect();
+                (cluster, nodes)
+            })
+            .collect();
+        let run_one = |(cluster, mut nodes): (&mut ClusterState, Vec<&mut NodeState>),
+                       compute: &dyn ModelCompute|
+         -> Result<(ClusterRoundOut, TrafficLedger)> {
+            let seed = mix64(
+                mix64(cfg.seed, 0xC1_057E7),
+                mix64(round as u64, cluster.id as u64),
+            );
+            let mut net = base_net.fork(seed);
+            let out = cluster_round::scale_cluster_round(
+                cluster, &mut nodes, &mut net, compute, cfg, &root_key, round,
+            )?;
+            Ok((out, net.ledger))
+        };
+        engine::fan_out(sim.compute, sim.sync_compute, threads, units, run_one)
+            .into_iter()
+            .collect()
+    }
+
+    fn central_sync(
+        &mut self,
+        sim: &mut Simulation<'_>,
+        server: &mut GlobalServer,
+        round: usize,
+        outs: Vec<ClusterRoundOut>,
+    ) -> Result<RoundOut> {
+        let mut ro = RoundOut::default();
+        let mut slowest_cluster_ms = 0.0f64;
+        for out in outs {
+            ro.updates += u64::from(out.upload.is_some());
+            ro.elections += out.elections;
+            slowest_cluster_ms = slowest_cluster_ms.max(out.latency_ms);
+            ro.loss_sum += out.loss_sum;
+            ro.loss_n += out.loss_n;
+            if let Some((params, size)) = out.upload {
+                server.receive_cluster_model(out.cid, params, size, round)?;
+            }
+        }
+        // server-side processing of this round's uploads
+        let server_ms = ro.updates as f64 * sim.net.cloud_process_latency_ms();
+        ro.latency_ms = slowest_cluster_ms + server_ms;
+        Ok(ro)
+    }
+
+    fn eval_params(&self, sim: &Simulation<'_>, server: &mut GlobalServer) -> Option<Vec<f32>> {
+        server.global_model(sim.compute).ok()
+    }
+
+    fn final_params(&self, sim: &Simulation<'_>, server: &mut GlobalServer) -> Result<Vec<f32>> {
+        server.global_model(sim.compute)
+    }
+
+    fn reports(&self, sim: &Simulation<'_>, _final_params: &[f32]) -> Result<Vec<ClusterReport>> {
+        Ok(self
+            .clusters
+            .iter()
+            .map(|c| ClusterReport {
+                cluster: c.id,
+                n_nodes: c.members.len(),
+                rounds: sim.cfg.rounds,
+                updates: c.updates,
+                final_accuracy: c.last_accuracy,
+                elections: c.elections,
+            })
+            .collect())
+    }
+}

@@ -1,0 +1,350 @@
+//! The one execution path: a generic round loop that drives any
+//! [`Algorithm`] — SCALE, FedAvg or HFL — over a `Simulation` and an
+//! (optional) scenario timeline.
+//!
+//! The engine owns everything cross-cutting, so no algorithm carries its
+//! own copy of it:
+//!
+//! * **Scenario events** drain at each round boundary ([`run`] →
+//!   `apply_scenario`): churn / outage / straggler / bandwidth / drift
+//!   mutate node and network state for *every* algorithm.
+//! * **Failure injection** (`SimConfig::node_failure_prob`) likewise.
+//! * **The parallel executor**: `fan_out` routes an algorithm's group
+//!   units through `sim::par` — scoped workers when `threads > 1`,
+//!   inline otherwise — and hands back outputs in unit order.
+//! * **The traffic ledger barrier**: per-unit sub-ledgers merge into the
+//!   main ledger in unit order before the central sync runs, the only
+//!   order the fingerprint contract allows.
+//! * **Eval cadence and reporting**: `eval_every` sampling, per-round
+//!   records, the final metrics, and `report::finish_report`.
+//!
+//! Determinism contract (DESIGN.md §7): the loop performs the same
+//! main-network sends and RNG derivations in the same order as the
+//! pre-engine per-algorithm loops did, so `RunReport::fingerprint` for
+//! every existing `(config, seed, scenario)` triple is byte-identical —
+//! pinned by `tests/golden_fingerprints.rs` — and `--threads 1` vs
+//! `--threads N` parity holds for all three algorithms.
+
+use anyhow::Result;
+
+use crate::data::batches;
+use crate::runtime::compute::ModelCompute;
+use crate::scenario::{EventKind, Scenario, ScenarioState, Undo};
+use crate::server::GlobalServer;
+use crate::util::rng::mix64;
+
+use super::algo::Algorithm;
+use super::par;
+use super::report::{self, RoundRecord, RunReport, ScenarioNote};
+use super::Simulation;
+
+/// Run `algo` for `sim.cfg.rounds` rounds under `scenario` and return
+/// the run report. The thin `Simulation::run_*` wrappers all land here.
+pub fn run<A: Algorithm>(
+    sim: &mut Simulation<'_>,
+    algo: &mut A,
+    scenario: &Scenario,
+) -> Result<RunReport> {
+    scenario.validate(sim.cfg.n_nodes, sim.cfg.fleet.n_metros)?;
+    let threads = sim.effective_threads()?;
+    let wall = std::time::Instant::now();
+    let mut server = GlobalServer::new(sim.root_key);
+    algo.setup(sim, &mut server)?;
+    let mut state = ScenarioState::new(scenario);
+    let mut notes: Vec<ScenarioNote> = Vec::new();
+
+    let mut rounds: Vec<RoundRecord> = Vec::with_capacity(sim.cfg.rounds);
+    for round in 0..sim.cfg.rounds {
+        let events_applied = apply_scenario(sim, &mut state, round, &mut notes);
+        sim.inject_failures(round);
+        // repairs touch cross-group state (proximity admission,
+        // re-formation) and must never race the fanned-out group phase
+        let repairs = algo.regulate(sim, &mut state, round, &mut notes)?;
+
+        let units = algo.group_phase(sim, round, threads)?;
+        // round barrier: sub-ledgers merge in unit order, whatever the
+        // scheduling was, before any barrier-side work runs
+        let mut outs = Vec::with_capacity(units.len());
+        for (out, ledger) in units {
+            sim.net.ledger.merge(&ledger);
+            outs.push(out);
+        }
+        let out = algo.central_sync(sim, &mut server, round, outs)?;
+
+        let metrics = if (round + 1) % sim.cfg.eval_every == 0
+            || round + 1 == sim.cfg.rounds
+        {
+            match algo.eval_params(sim, &mut server) {
+                Some(params) => Some(report::eval_model(
+                    sim.compute,
+                    &sim.global_eval_batches,
+                    &sim.global_eval_labels,
+                    &params,
+                )?),
+                None => None, // nothing uploaded yet
+            }
+        } else {
+            None
+        };
+
+        let cum = rounds.last().map_or(0, |r| r.cum_updates) + out.updates;
+        rounds.push(RoundRecord {
+            round,
+            updates: out.updates,
+            cum_updates: cum,
+            mean_loss: if out.loss_n > 0 {
+                out.loss_sum / out.loss_n as f64
+            } else {
+                f64::NAN
+            },
+            latency_ms: out.latency_ms,
+            metrics,
+            live_nodes: sim.nodes.iter().filter(|n| n.alive).count(),
+            elections: repairs.elections + out.elections,
+            scenario_events: events_applied,
+            reclusterings: repairs.reclusterings,
+        });
+    }
+
+    let final_params = algo.final_params(sim, &mut server)?;
+    let final_metrics = report::eval_model(
+        sim.compute,
+        &sim.global_eval_batches,
+        &sim.global_eval_labels,
+        &final_params,
+    )?;
+    let clusters = algo.reports(sim, &final_params)?;
+    let edge_cost = algo.edge_cost_usd(sim, &rounds);
+
+    let mut rep =
+        report::finish_report(sim, algo.mode(), rounds, clusters, final_metrics, &server, wall);
+    rep.edge_cost_usd = edge_cost;
+    rep.scenario = notes;
+    Ok(rep)
+}
+
+/// Fan an algorithm's group units out over the unit executor — scoped
+/// workers when `threads > 1` (requires the `Sync` backend handle kept
+/// by `Simulation::new_parallel`; `effective_threads` has already
+/// enforced this), inline otherwise — returning outputs **in unit
+/// order** regardless of scheduling.
+pub(crate) fn fan_out<U: Send, O: Send>(
+    compute: &dyn ModelCompute,
+    sync_compute: Option<&(dyn ModelCompute + Sync)>,
+    threads: usize,
+    units: Vec<U>,
+    run_unit: impl Fn(U, &dyn ModelCompute) -> O + Sync,
+) -> Vec<O> {
+    if threads > 1 {
+        let compute = sync_compute.expect("effective_threads checked");
+        par::run_units_par(units, threads, move |u| run_unit(u, compute))
+    } else {
+        par::run_units_seq(units, move |u| run_unit(u, compute))
+    }
+}
+
+/// Drain the scenario queue at a round boundary: expire finished effect
+/// windows, then apply newly-due events. Returns the number of events
+/// applied. Engine-owned: churn reshapes node/network state identically
+/// whichever algorithm is running.
+pub(crate) fn apply_scenario(
+    sim: &mut Simulation<'_>,
+    state: &mut ScenarioState,
+    round: usize,
+    notes: &mut Vec<ScenarioNote>,
+) -> u64 {
+    // Expired windows restore state *only as far as the remaining
+    // active windows allow* — overlapping effects never get cancelled
+    // early by a shorter sibling window.
+    for undo in state.take_expired(round) {
+        match undo {
+            Undo::Revive(ids) => {
+                for id in ids {
+                    if state.still_down(id) {
+                        continue; // a later leave/outage still holds it
+                    }
+                    let node = &mut sim.nodes[id];
+                    node.scenario_down = false;
+                    node.alive = true;
+                    if state.unassigned.remove(&id) {
+                        state.pending_join.insert(id);
+                    }
+                    notes.push(ScenarioNote {
+                        round,
+                        what: format!("node {id} returned"),
+                    });
+                }
+            }
+            Undo::Unslow { ids, .. } => {
+                for id in ids {
+                    sim.nodes[id].slow_factor =
+                        state.active_slow_factor(id).unwrap_or(1.0);
+                }
+                notes.push(ScenarioNote {
+                    round,
+                    what: "straggler window ended".into(),
+                });
+            }
+            Undo::RestoreBandwidth { .. } => {
+                let floor = state.active_bandwidth_floor().unwrap_or(1.0);
+                sim.net.set_bandwidth_degradation(floor);
+                notes.push(ScenarioNote {
+                    round,
+                    what: if floor >= 1.0 {
+                        "bandwidth restored".into()
+                    } else {
+                        format!(
+                            "bandwidth window ended (still degraded to {:.0}%)",
+                            floor * 100.0
+                        )
+                    },
+                });
+            }
+        }
+    }
+
+    let due = state.take_due(round);
+    for (ei, ev) in due.iter().enumerate() {
+        let mut erng = sim
+            .rng
+            .derive(0xE7E57 ^ mix64(round as u64, ei as u64));
+        match &ev.kind {
+            EventKind::Leave { who, duration } => {
+                let candidates: Vec<usize> =
+                    sim.nodes.iter().filter(|n| n.alive).map(|n| n.id).collect();
+                let targets =
+                    who.resolve(&candidates, |id| sim.nodes[id].device.metro, &mut erng);
+                for &id in &targets {
+                    let node = &mut sim.nodes[id];
+                    node.alive = false;
+                    node.scenario_down = true;
+                    state.pending_join.remove(&id);
+                }
+                if let Some(d) = duration {
+                    state.schedule_undo(round + d, Undo::Revive(targets.clone()));
+                }
+                notes.push(ScenarioNote {
+                    round,
+                    what: format!(
+                        "churn: {} node(s) left{}",
+                        targets.len(),
+                        match duration {
+                            Some(d) => format!(" for {d} round(s)"),
+                            None => " permanently".into(),
+                        }
+                    ),
+                });
+            }
+            EventKind::Join { who } => {
+                let candidates: Vec<usize> =
+                    sim.nodes.iter().filter(|n| !n.alive).map(|n| n.id).collect();
+                let targets =
+                    who.resolve(&candidates, |id| sim.nodes[id].device.metro, &mut erng);
+                for &id in &targets {
+                    let node = &mut sim.nodes[id];
+                    node.alive = true;
+                    node.scenario_down = false;
+                    if state.unassigned.remove(&id) {
+                        state.pending_join.insert(id);
+                    }
+                }
+                notes.push(ScenarioNote {
+                    round,
+                    what: format!("churn: {} node(s) joined", targets.len()),
+                });
+            }
+            EventKind::Straggler { who, factor, duration } => {
+                let candidates: Vec<usize> =
+                    sim.nodes.iter().filter(|n| n.alive).map(|n| n.id).collect();
+                let targets =
+                    who.resolve(&candidates, |id| sim.nodes[id].device.metro, &mut erng);
+                for &id in &targets {
+                    // the strongest overlapping slowdown wins
+                    sim.nodes[id].slow_factor =
+                        sim.nodes[id].slow_factor.max(factor.max(1.0));
+                }
+                state.schedule_undo(
+                    round + *duration,
+                    Undo::Unslow { ids: targets.clone(), factor: factor.max(1.0) },
+                );
+                notes.push(ScenarioNote {
+                    round,
+                    what: format!(
+                        "{} straggler(s) at {factor:.1}x for {duration} round(s)",
+                        targets.len()
+                    ),
+                });
+            }
+            EventKind::Outage { metro, duration } => {
+                let targets: Vec<usize> = sim
+                    .nodes
+                    .iter()
+                    .filter(|n| n.alive && n.device.metro == *metro)
+                    .map(|n| n.id)
+                    .collect();
+                for &id in &targets {
+                    let node = &mut sim.nodes[id];
+                    node.alive = false;
+                    node.scenario_down = true;
+                    state.pending_join.remove(&id);
+                }
+                state.schedule_undo(round + *duration, Undo::Revive(targets.clone()));
+                notes.push(ScenarioNote {
+                    round,
+                    what: format!(
+                        "regional outage: metro {metro} dark ({} node(s)) for {duration} round(s)",
+                        targets.len()
+                    ),
+                });
+            }
+            EventKind::Bandwidth { factor, duration } => {
+                // the most severe overlapping degradation wins
+                let floor = sim.net.bandwidth_degradation().min(*factor);
+                sim.net.set_bandwidth_degradation(floor);
+                state.schedule_undo(
+                    round + *duration,
+                    Undo::RestoreBandwidth { factor: *factor },
+                );
+                notes.push(ScenarioNote {
+                    round,
+                    what: format!(
+                        "bandwidth degraded to {:.0}% for {duration} round(s)",
+                        factor * 100.0
+                    ),
+                });
+            }
+            EventKind::Drift { who, flip_frac } => {
+                let candidates: Vec<usize> =
+                    sim.nodes.iter().filter(|n| n.alive).map(|n| n.id).collect();
+                let targets =
+                    who.resolve(&candidates, |id| sim.nodes[id].device.metro, &mut erng);
+                let (b, f) = (sim.compute.batch(), sim.compute.features());
+                for &id in &targets {
+                    let mut drng = erng.derive(id as u64);
+                    let node = &mut sim.nodes[id];
+                    for y in &mut node.train.y {
+                        if drng.chance(*flip_frac) {
+                            *y = -*y;
+                        }
+                    }
+                    node.pos_frac = if node.train.n() > 0 {
+                        node.train.positives() as f64 / node.train.n() as f64
+                    } else {
+                        0.0
+                    };
+                    node.train_batches = batches(&node.train, b, f);
+                    state.drifted.insert(id);
+                }
+                notes.push(ScenarioNote {
+                    round,
+                    what: format!(
+                        "label drift on {} node(s) (flip {:.0}%)",
+                        targets.len(),
+                        flip_frac * 100.0
+                    ),
+                });
+            }
+        }
+    }
+    due.len() as u64
+}

@@ -1,39 +1,48 @@
-//! The SCALE round engine: sets up the federation and runs either the
-//! SCALE protocol (clusters + HDAP + checkpointing + election + health)
-//! or the traditional-FL baseline over the *same* data, fleet, and
-//! network model — the apples-to-apples comparison behind Table 1.
+//! The simulation layer: one federation (data, fleet, network, RNG) and
+//! one phase-structured execution path for every algorithm.
 //!
-//! Everything is driven from one seed: dataset synthesis, partitioning,
-//! fleet generation, failure injection and peer sampling all derive
-//! deterministic child streams, so a `(config, seed)` pair is a fully
-//! reproducible experiment.
+//! [`Simulation`] owns the federation — dataset synthesis, partitioning,
+//! fleet generation, node state, the network/energy model — all derived
+//! from one seed, so a `(config, seed)` pair is a fully reproducible
+//! experiment. *How* a round runs lives elsewhere:
 //!
-//! Cluster-parallel by construction: clusters operate independently
-//! between central aggregations (HDAP keeps training, peer exchange and
-//! driver consensus inside the cluster), so each round fans the clusters
-//! out as `cluster_round` units across `std::thread::scope` workers
-//! (`SimConfig::threads`, over a `Send + Sync` backend via
-//! [`Simulation::new_parallel`]). Every unit owns a per-cluster RNG
-//! child stream and a private traffic sub-ledger, merged back in
-//! cluster-id order at the round barrier — so `RunReport::fingerprint`
-//! is byte-identical for `--threads 1` and `--threads N`. PJRT handles
-//! are thread-local (`Rc`); that backend stays on the sequential path
-//! (multi-seed parallelism for it lives one level up, in
-//! `scenario::sweep`). "Latency" is *modelled* time from `netsim`, not
-//! wall-clock.
+//! * [`algo`] — the [`Algorithm`] trait and its implementations
+//!   ([`ScaleAlgo`], [`FedAvgAlgo`], [`HflAlgo`]), each describing a
+//!   round as composable phases: local train, peer/edge exchange,
+//!   intra-group aggregate, central sync, report.
+//! * [`engine`] — the single generic round loop that executes any
+//!   algorithm: it owns scenario-event draining, failure injection, the
+//!   `sim::par` fan-out of group units, the traffic-ledger barrier
+//!   merge, eval cadence and report assembly. All three algorithms
+//!   therefore share `--threads` parallelism, wire-codec framing, and
+//!   scenario-driven churn through one code path.
+//! * `cluster_round` — SCALE's per-cluster round unit (HDAP: training,
+//!   peer exchange, driver consensus, checkpoint gating), the shard the
+//!   engine fans out.
 //!
-//! [`Simulation::run_scale_scenario`] additionally threads a
-//! `scenario::Scenario` timeline through the round loop: events are
-//! drained at each round boundary and the self-regulation loop (health
-//! detection → proximity re-clustering → driver re-election) repairs the
-//! federation at the barrier, after the sub-ledger merge — repairs touch
-//! cross-cluster state and never run inside workers.
+//! Cluster-parallel by construction: group units (clusters / node shards
+//! / edges) own per-unit RNG child streams and private traffic
+//! sub-ledgers, merged back in unit order at the round barrier — so
+//! `RunReport::fingerprint` is byte-identical for `--threads 1` and
+//! `--threads N` (over a `Send + Sync` backend via
+//! [`Simulation::new_parallel`]; PJRT handles are thread-local and stay
+//! on the sequential path). "Latency" is *modelled* time from `netsim`,
+//! not wall-clock.
+//!
+//! The [`Simulation::run_scale`] / [`Simulation::run_fedavg`] /
+//! [`Simulation::run_hfl`] entry points are thin wrappers over
+//! [`engine::run`]; [`Simulation::run_algo`] exposes the unified
+//! `--algo` axis, scenario timeline included.
 
+pub mod algo;
 mod cluster_round;
+pub mod engine;
 mod par;
 pub mod report;
 
+pub use algo::{AlgoKind, Algorithm, FedAvgAlgo, HflAlgo, Repairs, RoundOut, ScaleAlgo};
 pub use cluster_round::ClusterRoundOut;
+pub use report::eval_model;
 
 use anyhow::{Context, Result};
 
@@ -42,27 +51,19 @@ use crate::config::{Partition, SimConfig};
 use crate::data::{batches, synth_wdbc_sized, Dataset, PaddedBatch, Scaler};
 use crate::devices::{generate_fleet, DeviceProfile};
 use crate::features::{combined_metadata_score, wdbc_columns, MetadataWeights};
-use crate::geo::{centroid, equirectangular_km, GeoPoint};
-use crate::health::{HealthMonitor, HealthState};
-use crate::metrics::ModelMetrics;
-use crate::netsim::{summary_payload_bytes, MsgKind, Network, TrafficLedger};
+use crate::health::HealthMonitor;
+use crate::netsim::{summary_payload_bytes, MsgKind, Network};
 use crate::perf_index::{local_log_pi, OperationalWeights};
 use crate::runtime::compute::ModelCompute;
-use crate::scenario::{EventKind, Scenario, ScenarioState, Undo};
+use crate::scenario::Scenario;
 use crate::server::{GlobalServer, SummaryMsg};
-use crate::util::rng::{mix64, Rng};
-use report::{ClusterReport, RoundRecord, RunReport, ScenarioNote};
+use crate::util::rng::Rng;
+use report::RunReport;
 
 /// Heartbeat / ballot / assignment payload sizes (bytes).
 pub(crate) const HEARTBEAT_BYTES: u64 = 32;
 pub(crate) const BALLOT_BYTES: u64 = 112;
-const ASSIGNMENT_BYTES: u64 = 96;
-
-/// Fixed shard width for the baselines' parallel training phase. A
-/// constant (never thread-count dependent) so the per-`(round, shard)`
-/// jitter streams — and therefore fingerprints — are identical for any
-/// `--threads` value.
-const NODE_SHARD: usize = 64;
+pub(crate) const ASSIGNMENT_BYTES: u64 = 96;
 
 /// One simulated client node.
 pub struct NodeState {
@@ -70,7 +71,7 @@ pub struct NodeState {
     pub device: DeviceProfile,
     pub train: Dataset,
     pub test: Dataset,
-    train_batches: Vec<PaddedBatch>,
+    pub(crate) train_batches: Vec<PaddedBatch>,
     pub params: Vec<f32>,
     pub battery_wh: f64,
     pub alive: bool,
@@ -90,7 +91,7 @@ pub struct NodeState {
 impl NodeState {
     /// Run `epochs` local full-batch steps; returns mean loss of the last
     /// epoch and the modelled wall time in ms.
-    fn local_train(
+    pub(crate) fn local_train(
         &mut self,
         compute: &dyn ModelCompute,
         epochs: usize,
@@ -132,46 +133,31 @@ pub struct ClusterState {
     /// cluster shares (DESIGN §6) as well as the failover restore point.
     pub store: CheckpointStore,
     pub monitor: HealthMonitor,
-    eval_batches: Vec<PaddedBatch>,
-    eval_labels: Vec<f32>,
+    pub(crate) eval_batches: Vec<PaddedBatch>,
+    pub(crate) eval_labels: Vec<f32>,
     /// Last model the global server received from this cluster — the
     /// driver's upload-stream delta baseline ("re-baseline at central
     /// aggregation").
-    upload_baseline: Option<Vec<f32>>,
+    pub(crate) upload_baseline: Option<Vec<f32>>,
     pub pos_frac: f64,
     pub elections: u64,
     pub updates: u64,
     pub last_accuracy: f64,
 }
 
-/// The configured federation, ready to run either protocol.
+/// The configured federation, ready to run any [`Algorithm`].
 pub struct Simulation<'a> {
     pub cfg: SimConfig,
-    compute: &'a dyn ModelCompute,
+    pub(crate) compute: &'a dyn ModelCompute,
     /// The same backend with its `Sync` marker retained — set by
     /// [`Simulation::new_parallel`], required for `threads > 1`.
-    sync_compute: Option<&'a (dyn ModelCompute + Sync)>,
+    pub(crate) sync_compute: Option<&'a (dyn ModelCompute + Sync)>,
     pub nodes: Vec<NodeState>,
     pub net: Network,
-    rng: Rng,
-    global_eval_batches: Vec<PaddedBatch>,
-    global_eval_labels: Vec<f32>,
-    root_key: [u8; 32],
-}
-
-/// Evaluate packed params over padded batches; returns full metrics.
-pub fn eval_model(
-    compute: &dyn ModelCompute,
-    eval_batches: &[PaddedBatch],
-    labels: &[f32],
-    params: &[f32],
-) -> Result<ModelMetrics> {
-    let mut scores = Vec::with_capacity(labels.len());
-    for b in eval_batches {
-        scores.extend(compute.scores(b, params)?);
-    }
-    anyhow::ensure!(scores.len() == labels.len(), "eval scores/labels mismatch");
-    Ok(ModelMetrics::from_scores(&scores, labels))
+    pub(crate) rng: Rng,
+    pub(crate) global_eval_batches: Vec<PaddedBatch>,
+    pub(crate) global_eval_labels: Vec<f32>,
+    pub(crate) root_key: [u8; 32],
 }
 
 impl<'a> Simulation<'a> {
@@ -281,7 +267,7 @@ impl<'a> Simulation<'a> {
     /// more than one worker is requested. Auto (`0`) degrades to
     /// sequential on a single-threaded backend — only an *explicit*
     /// `threads > 1` errors there.
-    fn effective_threads(&self) -> Result<usize> {
+    pub(crate) fn effective_threads(&self) -> Result<usize> {
         if self.cfg.threads == 0 && self.sync_compute.is_none() {
             return Ok(1);
         }
@@ -295,8 +281,61 @@ impl<'a> Simulation<'a> {
         Ok(t)
     }
 
+    // ------------------------------------------------------------------
+    // Unified entry points (thin wrappers over `engine::run`)
+    // ------------------------------------------------------------------
+
+    /// Run `algo` under `scenario` through the unified engine — the one
+    /// execution path behind every wrapper below and the CLI's `--algo`
+    /// axis. The determinism contract is within-version: a
+    /// `(config, seed, scenario)` triple reproduces byte-for-byte at any
+    /// `--threads` value (jitter streams derive per `(round, unit)`, so
+    /// results are *not* comparable to pre-parallel-engine traces).
+    pub fn run_algo(&mut self, algo: AlgoKind, scenario: &Scenario) -> Result<RunReport> {
+        match algo {
+            AlgoKind::Scale => engine::run(self, &mut ScaleAlgo::new(), scenario),
+            AlgoKind::FedAvg => engine::run(self, &mut FedAvgAlgo::new(None), scenario),
+            AlgoKind::Hfl { edge_period } => {
+                engine::run(self, &mut HflAlgo::new(edge_period)?, scenario)
+            }
+        }
+    }
+
+    /// Run the full SCALE protocol; returns the run report. Equivalent
+    /// to [`Self::run_scale_scenario`] with no events and
+    /// self-regulation off.
+    pub fn run_scale(&mut self) -> Result<RunReport> {
+        self.run_algo(AlgoKind::Scale, &Scenario::none())
+    }
+
+    /// Run the full SCALE protocol under an injected scenario timeline:
+    /// churn / outage / straggler / bandwidth / drift events drain at
+    /// each round boundary, after which the self-regulation loop repairs
+    /// the federation (health → re-clustering → re-election).
+    pub fn run_scale_scenario(&mut self, scenario: &Scenario) -> Result<RunReport> {
+        self.run_algo(AlgoKind::Scale, scenario)
+    }
+
+    /// Run the traditional FedAvg baseline over the same federation.
+    /// `grouping` (optional) assigns nodes to report-rows so Table 1 can
+    /// compare per-cluster counts; pass the SCALE clustering's members.
+    pub fn run_fedavg(&mut self, grouping: Option<Vec<Vec<usize>>>) -> Result<RunReport> {
+        engine::run(self, &mut FedAvgAlgo::new(grouping), &Scenario::none())
+    }
+
+    /// Run the client-edge-cloud HFL baseline: one always-on edge server
+    /// per metro aggregates its clients every round; edges sync to the
+    /// global server every `edge_period` rounds.
+    pub fn run_hfl(&mut self, edge_period: usize) -> Result<RunReport> {
+        engine::run(self, &mut HflAlgo::new(edge_period)?, &Scenario::none())
+    }
+
+    // ------------------------------------------------------------------
+    // Federation helpers shared by the algorithm phases
+    // ------------------------------------------------------------------
+
     /// Client-side summary for node `id` (eq 2 + eq 7 + coordinates).
-    fn summary_for(&mut self, id: usize) -> SummaryMsg {
+    pub(crate) fn summary_for(&mut self, id: usize) -> SummaryMsg {
         let node = &self.nodes[id];
         // all WDBC clients share the schema; the score is identical by
         // construction (the property clustering relies on)
@@ -315,7 +354,10 @@ impl<'a> Simulation<'a> {
 
     /// Setup phase shared by SCALE: encrypted summaries → server →
     /// clusters → assignments. Returns per-cluster member lists.
-    fn cluster_formation(&mut self, server: &mut GlobalServer) -> Result<Vec<Vec<usize>>> {
+    pub(crate) fn cluster_formation(
+        &mut self,
+        server: &mut GlobalServer,
+    ) -> Result<Vec<Vec<usize>>> {
         let mut crng = self.rng.derive(0xC1);
         for id in 0..self.nodes.len() {
             let msg = self.summary_for(id);
@@ -350,7 +392,7 @@ impl<'a> Simulation<'a> {
     /// Every node (and the server) starts from the same `init_params`, so
     /// that common model primes each cluster's baseline ring: delta
     /// frames have a shared reference from round 0.
-    fn init_clusters(&mut self, members: Vec<Vec<usize>>) -> Result<Vec<ClusterState>> {
+    pub(crate) fn init_clusters(&mut self, members: Vec<Vec<usize>>) -> Result<Vec<ClusterState>> {
         let init = self.compute.init_params(self.cfg.seed);
         let mut clusters = Vec::with_capacity(members.len());
         for (cid, member_ids) in members.into_iter().enumerate() {
@@ -368,7 +410,7 @@ impl<'a> Simulation<'a> {
     /// initial formation) primes the checkpoint ring and the upload
     /// stream's delta reference; re-formed clusters start without one
     /// and send dense frames until their first broadcast.
-    fn build_cluster(
+    pub(crate) fn build_cluster(
         &mut self,
         cid: usize,
         member_ids: Vec<usize>,
@@ -414,7 +456,7 @@ impl<'a> Simulation<'a> {
 
     /// Recompute a cluster's validation set and label mix from its current
     /// membership (formation, proximity admission, drift repair).
-    fn refresh_cluster_eval(&self, cluster: &mut ClusterState) {
+    pub(crate) fn refresh_cluster_eval(&self, cluster: &mut ClusterState) {
         let (b, f) = (self.compute.batch(), self.compute.features());
         if cluster.members.is_empty() {
             cluster.eval_batches = Vec::new();
@@ -456,7 +498,7 @@ impl<'a> Simulation<'a> {
     }
 
     /// Inject node failures / recoveries for this round.
-    fn inject_failures(&mut self, round: usize) {
+    pub(crate) fn inject_failures(&mut self, round: usize) {
         if self.cfg.node_failure_prob <= 0.0 {
             return;
         }
@@ -475,1075 +517,6 @@ impl<'a> Simulation<'a> {
         }
     }
 
-    // ------------------------------------------------------------------
-    // SCALE protocol
-    // ------------------------------------------------------------------
-
-    /// Run the full SCALE protocol; returns the run report. Equivalent
-    /// to [`Self::run_scale_scenario`] with no events and
-    /// self-regulation off. The determinism contract is within-version:
-    /// a `(config, seed)` pair reproduces byte-for-byte at any
-    /// `--threads` value (jitter streams derive per `(round, cluster)`,
-    /// so results are *not* comparable to pre-parallel-engine traces).
-    pub fn run_scale(&mut self) -> Result<RunReport> {
-        self.run_scale_scenario(&Scenario::none())
-    }
-
-    /// Run the full SCALE protocol under an injected scenario timeline:
-    /// churn / outage / straggler / bandwidth / drift events drain at
-    /// each round boundary, after which the self-regulation loop repairs
-    /// the federation (health → re-clustering → re-election).
-    pub fn run_scale_scenario(&mut self, scenario: &Scenario) -> Result<RunReport> {
-        scenario.validate(self.cfg.n_nodes, self.cfg.fleet.n_metros)?;
-        let threads = self.effective_threads()?;
-        let wall = std::time::Instant::now();
-        let mut server = GlobalServer::new(self.root_key);
-        let members = self.cluster_formation(&mut server)?;
-        let mut clusters = self.init_clusters(members)?;
-        let mut state = ScenarioState::new(scenario);
-        let mut notes: Vec<ScenarioNote> = Vec::new();
-
-        let mut rounds = Vec::with_capacity(self.cfg.rounds);
-        for round in 0..self.cfg.rounds {
-            let events_applied = self.apply_scenario_round(&mut state, round, &mut notes);
-            self.inject_failures(round);
-            // self-regulation repairs run between barriers — they touch
-            // cross-cluster state (proximity admission, re-formation)
-            // and must never race the fanned-out cluster rounds
-            let (reclusterings, regulate_elections) =
-                self.self_regulate(&mut state, &mut clusters, round, &mut notes)?;
-
-            let outs = self.run_cluster_rounds(&mut clusters, round, threads)?;
-
-            let mut round_updates = 0u64;
-            let mut round_elections = regulate_elections;
-            let mut slowest_cluster_ms = 0.0f64;
-            let mut loss_sum = 0.0f64;
-            let mut loss_n = 0usize;
-            // ordered merge: cluster-id order, whatever the scheduling was
-            for (out, ledger) in outs {
-                self.net.ledger.merge(&ledger);
-                round_updates += u64::from(out.upload.is_some());
-                round_elections += out.elections;
-                slowest_cluster_ms = slowest_cluster_ms.max(out.latency_ms);
-                loss_sum += out.loss_sum;
-                loss_n += out.loss_n;
-                if let Some((params, size)) = out.upload {
-                    server.receive_cluster_model(out.cid, params, size, round)?;
-                }
-            }
-
-            // server-side processing of this round's uploads
-            let server_ms = round_updates as f64 * self.net.cloud_process_latency_ms();
-            let latency_ms = slowest_cluster_ms + server_ms;
-
-            let metrics = if (round + 1) % self.cfg.eval_every == 0
-                || round + 1 == self.cfg.rounds
-            {
-                match server.global_model(self.compute) {
-                    Ok(params) => Some(eval_model(
-                        self.compute,
-                        &self.global_eval_batches,
-                        &self.global_eval_labels,
-                        &params,
-                    )?),
-                    Err(_) => None, // nothing uploaded yet
-                }
-            } else {
-                None
-            };
-
-            let cum = rounds
-                .last()
-                .map_or(0, |r: &RoundRecord| r.cum_updates)
-                + round_updates;
-            rounds.push(RoundRecord {
-                round,
-                updates: round_updates,
-                cum_updates: cum,
-                mean_loss: if loss_n > 0 { loss_sum / loss_n as f64 } else { f64::NAN },
-                latency_ms,
-                metrics,
-                live_nodes: self.nodes.iter().filter(|n| n.alive).count(),
-                elections: round_elections,
-                scenario_events: events_applied,
-                reclusterings,
-            });
-        }
-
-        let final_params = server.global_model(self.compute)?;
-        let final_metrics = eval_model(
-            self.compute,
-            &self.global_eval_batches,
-            &self.global_eval_labels,
-            &final_params,
-        )?;
-
-        let cluster_reports = clusters
-            .iter()
-            .map(|c| ClusterReport {
-                cluster: c.id,
-                n_nodes: c.members.len(),
-                rounds: self.cfg.rounds,
-                updates: c.updates,
-                final_accuracy: c.last_accuracy,
-                elections: c.elections,
-            })
-            .collect();
-
-        let mut report =
-            self.finish_report("scale", rounds, cluster_reports, final_metrics, &server, wall);
-        report.scenario = notes;
-        Ok(report)
-    }
-
-    /// Drain the scenario queue at a round boundary: expire finished
-    /// effect windows, then apply newly-due events. Returns the number of
-    /// events applied.
-    fn apply_scenario_round(
-        &mut self,
-        state: &mut ScenarioState,
-        round: usize,
-        notes: &mut Vec<ScenarioNote>,
-    ) -> u64 {
-        // Expired windows restore state *only as far as the remaining
-        // active windows allow* — overlapping effects never get cancelled
-        // early by a shorter sibling window.
-        for undo in state.take_expired(round) {
-            match undo {
-                Undo::Revive(ids) => {
-                    for id in ids {
-                        if state.still_down(id) {
-                            continue; // a later leave/outage still holds it
-                        }
-                        let node = &mut self.nodes[id];
-                        node.scenario_down = false;
-                        node.alive = true;
-                        if state.unassigned.remove(&id) {
-                            state.pending_join.insert(id);
-                        }
-                        notes.push(ScenarioNote {
-                            round,
-                            what: format!("node {id} returned"),
-                        });
-                    }
-                }
-                Undo::Unslow { ids, .. } => {
-                    for id in ids {
-                        self.nodes[id].slow_factor =
-                            state.active_slow_factor(id).unwrap_or(1.0);
-                    }
-                    notes.push(ScenarioNote {
-                        round,
-                        what: "straggler window ended".into(),
-                    });
-                }
-                Undo::RestoreBandwidth { .. } => {
-                    let floor = state.active_bandwidth_floor().unwrap_or(1.0);
-                    self.net.set_bandwidth_degradation(floor);
-                    notes.push(ScenarioNote {
-                        round,
-                        what: if floor >= 1.0 {
-                            "bandwidth restored".into()
-                        } else {
-                            format!(
-                                "bandwidth window ended (still degraded to {:.0}%)",
-                                floor * 100.0
-                            )
-                        },
-                    });
-                }
-            }
-        }
-
-        let due = state.take_due(round);
-        for (ei, ev) in due.iter().enumerate() {
-            let mut erng = self
-                .rng
-                .derive(0xE7E57 ^ crate::util::rng::mix64(round as u64, ei as u64));
-            match &ev.kind {
-                EventKind::Leave { who, duration } => {
-                    let candidates: Vec<usize> =
-                        self.nodes.iter().filter(|n| n.alive).map(|n| n.id).collect();
-                    let targets =
-                        who.resolve(&candidates, |id| self.nodes[id].device.metro, &mut erng);
-                    for &id in &targets {
-                        let node = &mut self.nodes[id];
-                        node.alive = false;
-                        node.scenario_down = true;
-                        state.pending_join.remove(&id);
-                    }
-                    if let Some(d) = duration {
-                        state.schedule_undo(round + d, Undo::Revive(targets.clone()));
-                    }
-                    notes.push(ScenarioNote {
-                        round,
-                        what: format!(
-                            "churn: {} node(s) left{}",
-                            targets.len(),
-                            match duration {
-                                Some(d) => format!(" for {d} round(s)"),
-                                None => " permanently".into(),
-                            }
-                        ),
-                    });
-                }
-                EventKind::Join { who } => {
-                    let candidates: Vec<usize> =
-                        self.nodes.iter().filter(|n| !n.alive).map(|n| n.id).collect();
-                    let targets =
-                        who.resolve(&candidates, |id| self.nodes[id].device.metro, &mut erng);
-                    for &id in &targets {
-                        let node = &mut self.nodes[id];
-                        node.alive = true;
-                        node.scenario_down = false;
-                        if state.unassigned.remove(&id) {
-                            state.pending_join.insert(id);
-                        }
-                    }
-                    notes.push(ScenarioNote {
-                        round,
-                        what: format!("churn: {} node(s) joined", targets.len()),
-                    });
-                }
-                EventKind::Straggler { who, factor, duration } => {
-                    let candidates: Vec<usize> =
-                        self.nodes.iter().filter(|n| n.alive).map(|n| n.id).collect();
-                    let targets =
-                        who.resolve(&candidates, |id| self.nodes[id].device.metro, &mut erng);
-                    for &id in &targets {
-                        // the strongest overlapping slowdown wins
-                        self.nodes[id].slow_factor =
-                            self.nodes[id].slow_factor.max(factor.max(1.0));
-                    }
-                    state.schedule_undo(
-                        round + *duration,
-                        Undo::Unslow { ids: targets.clone(), factor: factor.max(1.0) },
-                    );
-                    notes.push(ScenarioNote {
-                        round,
-                        what: format!(
-                            "{} straggler(s) at {factor:.1}x for {duration} round(s)",
-                            targets.len()
-                        ),
-                    });
-                }
-                EventKind::Outage { metro, duration } => {
-                    let targets: Vec<usize> = self
-                        .nodes
-                        .iter()
-                        .filter(|n| n.alive && n.device.metro == *metro)
-                        .map(|n| n.id)
-                        .collect();
-                    for &id in &targets {
-                        let node = &mut self.nodes[id];
-                        node.alive = false;
-                        node.scenario_down = true;
-                        state.pending_join.remove(&id);
-                    }
-                    state.schedule_undo(round + *duration, Undo::Revive(targets.clone()));
-                    notes.push(ScenarioNote {
-                        round,
-                        what: format!(
-                            "regional outage: metro {metro} dark ({} node(s)) for {duration} round(s)",
-                            targets.len()
-                        ),
-                    });
-                }
-                EventKind::Bandwidth { factor, duration } => {
-                    // the most severe overlapping degradation wins
-                    let floor = self.net.bandwidth_degradation().min(*factor);
-                    self.net.set_bandwidth_degradation(floor);
-                    state.schedule_undo(
-                        round + *duration,
-                        Undo::RestoreBandwidth { factor: *factor },
-                    );
-                    notes.push(ScenarioNote {
-                        round,
-                        what: format!(
-                            "bandwidth degraded to {:.0}% for {duration} round(s)",
-                            factor * 100.0
-                        ),
-                    });
-                }
-                EventKind::Drift { who, flip_frac } => {
-                    let candidates: Vec<usize> =
-                        self.nodes.iter().filter(|n| n.alive).map(|n| n.id).collect();
-                    let targets =
-                        who.resolve(&candidates, |id| self.nodes[id].device.metro, &mut erng);
-                    let (b, f) = (self.compute.batch(), self.compute.features());
-                    for &id in &targets {
-                        let mut drng = erng.derive(id as u64);
-                        let node = &mut self.nodes[id];
-                        for y in &mut node.train.y {
-                            if drng.chance(*flip_frac) {
-                                *y = -*y;
-                            }
-                        }
-                        node.pos_frac = if node.train.n() > 0 {
-                            node.train.positives() as f64 / node.train.n() as f64
-                        } else {
-                            0.0
-                        };
-                        node.train_batches = batches(&node.train, b, f);
-                        state.drifted.insert(id);
-                    }
-                    notes.push(ScenarioNote {
-                        round,
-                        what: format!(
-                            "label drift on {} node(s) (flip {:.0}%)",
-                            targets.len(),
-                            flip_frac * 100.0
-                        ),
-                    });
-                }
-            }
-        }
-        due.len() as u64
-    }
-
-    /// The self-regulation loop (the paper's "self-regulated" half):
-    /// `health` flags clusters whose reachable membership collapsed or
-    /// whose data drifted, `clustering` re-forms them via Proximity
-    /// Evaluation over fresh summaries, and `election` re-runs
-    /// Algorithm-4 driver selection. Returning nodes are re-admitted to
-    /// their geographically nearest cluster. Returns
-    /// `(re-clusterings, elections)` performed this round.
-    fn self_regulate(
-        &mut self,
-        state: &mut ScenarioState,
-        clusters: &mut [ClusterState],
-        round: usize,
-        notes: &mut Vec<ScenarioNote>,
-    ) -> Result<(u64, u64)> {
-        if !state.regulation.enabled {
-            return Ok((0, 0));
-        }
-        let mut elections = 0u64;
-
-        // randomly-recovered nodes whose old cluster was re-formed while
-        // they were down: route them back through proximity admission
-        let recovered: Vec<usize> = state
-            .unassigned
-            .iter()
-            .copied()
-            .filter(|&id| self.nodes[id].alive)
-            .collect();
-        for id in recovered {
-            state.unassigned.remove(&id);
-            state.pending_join.insert(id);
-        }
-
-        // --- proximity admission of returning / joining nodes ---
-        let pending: Vec<usize> = state.pending_join.iter().copied().collect();
-        for id in pending {
-            if !self.nodes[id].alive {
-                continue;
-            }
-            let mut best: Option<(f64, usize)> = None;
-            for (ci, c) in clusters.iter().enumerate() {
-                let pts: Vec<GeoPoint> = c
-                    .members
-                    .iter()
-                    .filter(|&&m| self.nodes[m].alive)
-                    .map(|&m| self.nodes[m].device.location)
-                    .collect();
-                if pts.is_empty() {
-                    continue;
-                }
-                let d = equirectangular_km(self.nodes[id].device.location, centroid(&pts));
-                if best.map_or(true, |(bd, _)| d < bd) {
-                    best = Some((d, ci));
-                }
-            }
-            if let Some((_, ci)) = best {
-                self.net.send(
-                    MsgKind::Assignment,
-                    None,
-                    Some(&self.nodes[id].device),
-                    ASSIGNMENT_BYTES,
-                    round,
-                );
-                let cluster = &mut clusters[ci];
-                cluster.members.push(id);
-                cluster.monitor.register(id, round);
-                let cid = cluster.id;
-                self.refresh_cluster_eval(cluster);
-                state.pending_join.remove(&id);
-                notes.push(ScenarioNote {
-                    round,
-                    what: format!("node {id} admitted to cluster {cid} by proximity"),
-                });
-            }
-        }
-
-        // --- health scan: clusters whose detected-live fraction collapsed
-        //     (or whose members' data drifted) need re-formation ---
-        let mut affected: Vec<usize> = Vec::new();
-        for (ci, c) in clusters.iter().enumerate() {
-            if c.members.is_empty() {
-                continue;
-            }
-            let down = c
-                .members
-                .iter()
-                .filter(|&&m| {
-                    !self.nodes[m].alive
-                        && c.monitor.state(m, round) != HealthState::Alive
-                })
-                .count();
-            let live_frac = 1.0 - down as f64 / c.members.len() as f64;
-            let drifted = c.members.iter().any(|m| state.drifted.contains(m));
-            if live_frac < state.regulation.min_live_frac || drifted {
-                affected.push(ci);
-            }
-        }
-        if affected.is_empty() || !state.may_recluster(round) {
-            return Ok((0, elections));
-        }
-
-        // --- proximity evaluation re-forms the affected clusters ---
-        let mut pool: Vec<usize> = Vec::new();
-        for &ci in &affected {
-            for &m in &clusters[ci].members.clone() {
-                if self.nodes[m].alive {
-                    pool.push(m);
-                } else {
-                    state.unassigned.insert(m);
-                }
-                state.drifted.remove(&m);
-            }
-        }
-        // stranded joiners (no live cluster existed to admit them above)
-        let stranded: Vec<usize> = state
-            .pending_join
-            .iter()
-            .copied()
-            .filter(|&id| self.nodes[id].alive)
-            .collect();
-        for id in stranded {
-            state.pending_join.remove(&id);
-            state.unassigned.remove(&id);
-            pool.push(id);
-        }
-        pool.sort_unstable();
-        pool.dedup();
-        if pool.is_empty() {
-            notes.push(ScenarioNote {
-                round,
-                what: format!(
-                    "{} cluster(s) fully dark; re-clustering deferred",
-                    affected.len()
-                ),
-            });
-            return Ok((0, elections));
-        }
-
-        let k_new = affected.len().min(pool.len());
-        let mut crng = self.rng.derive(0x5EC1 ^ round as u64);
-        let mut summaries = Vec::with_capacity(pool.len());
-        for &id in &pool {
-            let msg = self.summary_for(id);
-            let envelope = msg.seal(&self.root_key, &mut crng);
-            self.net.send(
-                MsgKind::Summary,
-                Some(&self.nodes[id].device),
-                None,
-                summary_payload_bytes(envelope.len()),
-                round,
-            );
-            summaries.push(crate::clustering::NodeSummary {
-                node_id: msg.node_id,
-                data_score: msg.data_score,
-                perf_index: msg.perf_index,
-                location: GeoPoint::new(msg.lat_deg, msg.lon_deg),
-            });
-        }
-        let ccfg = crate::clustering::ClusterConfig {
-            n_clusters: k_new,
-            ..self.cfg.cluster.clone()
-        };
-        let clustering = crate::clustering::form_clusters(&summaries, &ccfg);
-        let groups = clustering.members(&summaries);
-
-        for (gi, &ci) in affected.iter().enumerate() {
-            let member_ids = groups.get(gi).cloned().unwrap_or_default();
-            for &id in &member_ids {
-                self.net.send(
-                    MsgKind::Assignment,
-                    None,
-                    Some(&self.nodes[id].device),
-                    ASSIGNMENT_BYTES,
-                    round,
-                );
-                state.unassigned.remove(&id);
-            }
-            let cid = clusters[ci].id;
-            // re-formed clusters have no model every new member is known
-            // to hold, so their wire baseline resets (dense frames until
-            // the first broadcast re-arms the ring)
-            let mut fresh = self.build_cluster(cid, member_ids, round, None)?;
-            elections += fresh.elections;
-            fresh.elections += clusters[ci].elections;
-            fresh.updates += clusters[ci].updates;
-            clusters[ci] = fresh;
-        }
-        state.note_recluster(round);
-        notes.push(ScenarioNote {
-            round,
-            what: format!(
-                "re-clustered {} cluster(s) over {} live node(s) into {} group(s)",
-                affected.len(),
-                pool.len(),
-                k_new
-            ),
-        });
-        Ok((1, elections))
-    }
-
-    /// Fan every cluster's round out over the unit executor — scoped
-    /// workers when `threads > 1`, inline otherwise — and return
-    /// `(out, sub-ledger)` pairs **in cluster order**, the only order
-    /// the barrier merge ever uses. Each unit claims exclusive `&mut`
-    /// access to its members' node states (clusters partition the
-    /// fleet; a violation panics here) and a forked network whose
-    /// jitter stream derives from `(seed, round, cluster id)`.
-    fn run_cluster_rounds(
-        &mut self,
-        clusters: &mut [ClusterState],
-        round: usize,
-        threads: usize,
-    ) -> Result<Vec<(ClusterRoundOut, TrafficLedger)>> {
-        let cfg = &self.cfg;
-        let root_key = self.root_key;
-        let base_net = &self.net;
-        let mut slots: Vec<Option<&mut NodeState>> =
-            self.nodes.iter_mut().map(Some).collect();
-        let units: Vec<(&mut ClusterState, Vec<&mut NodeState>)> = clusters
-            .iter_mut()
-            .map(|cluster| {
-                let nodes: Vec<&mut NodeState> = cluster
-                    .members
-                    .iter()
-                    .map(|&id| slots[id].take().expect("node claimed by two clusters"))
-                    .collect();
-                (cluster, nodes)
-            })
-            .collect();
-        let run_one = |(cluster, mut nodes): (&mut ClusterState, Vec<&mut NodeState>),
-                       compute: &dyn ModelCompute|
-         -> Result<(ClusterRoundOut, TrafficLedger)> {
-            let seed = mix64(
-                mix64(cfg.seed, 0xC1_057E7),
-                mix64(round as u64, cluster.id as u64),
-            );
-            let mut net = base_net.fork(seed);
-            let out = cluster_round::scale_cluster_round(
-                cluster, &mut nodes, &mut net, compute, cfg, &root_key, round,
-            )?;
-            Ok((out, net.ledger))
-        };
-        let outs = if threads > 1 {
-            let compute = self.sync_compute.expect("effective_threads checked");
-            par::run_units_par(units, threads, move |u| run_one(u, compute))
-        } else {
-            let compute = self.compute;
-            par::run_units_seq(units, move |u| run_one(u, compute))
-        };
-        outs.into_iter().collect()
-    }
-
-    // ------------------------------------------------------------------
-    // Traditional-FL baseline
-    // ------------------------------------------------------------------
-
-    /// Run the traditional FedAvg baseline over the same federation.
-    /// `grouping` (optional) assigns nodes to report-rows so Table 1 can
-    /// compare per-cluster counts; pass the SCALE clustering's members.
-    pub fn run_fedavg(&mut self, grouping: Option<Vec<Vec<usize>>>) -> Result<RunReport> {
-        let threads = self.effective_threads()?;
-        let wall = std::time::Instant::now();
-        let mut server = GlobalServer::new(self.root_key);
-        // every node starts from (and is re-broadcast) the global model,
-        // so upload/broadcast frames always have a shared delta baseline
-        let payload = self.cfg.wire.frame_bytes(self.compute.param_dim(), true);
-
-        // the baseline registers every node as its own "cluster" of one so
-        // the registry tracks per-node models
-        {
-            // fabricate summaries locally (no crypto/network in baseline)
-            for id in 0..self.nodes.len() {
-                let s = self.summary_for(id);
-                let env = s.seal(&self.root_key, &mut self.rng.derive(0xBA5E + id as u64));
-                server.intake_summary(id, &env).ok();
-            }
-            let cfg = crate::clustering::ClusterConfig {
-                n_clusters: self.nodes.len(),
-                balance_slack: None,
-                ..self.cfg.cluster.clone()
-            };
-            server.form_clusters(&cfg)?;
-        }
-
-        let mut rounds = Vec::with_capacity(self.cfg.rounds);
-        let mut per_node_updates = vec![0u64; self.nodes.len()];
-        let mut global = self.compute.init_params(self.cfg.seed);
-
-        for round in 0..self.cfg.rounds {
-            self.inject_failures(round);
-            // --- sharded training + upload phase (fans out like the
-            //     SCALE cluster rounds; ordered merge below) ---
-            let shard_outs = self.fedavg_train_shards(round, threads, payload)?;
-            let mut train_ms = 0.0f64;
-            let mut loss_sum = 0.0;
-            let mut loss_n = 0usize;
-            let mut upload_ms = 0.0f64;
-            for (out, ledger) in shard_outs {
-                self.net.ledger.merge(&ledger);
-                train_ms = train_ms.max(out.train_ms);
-                upload_ms = upload_ms.max(out.upload_ms);
-                loss_sum += out.loss_sum;
-                loss_n += out.loss_n;
-                for id in out.uploaded {
-                    per_node_updates[id] += 1;
-                }
-            }
-            let alive: Vec<usize> =
-                (0..self.nodes.len()).filter(|&i| self.nodes[i].alive).collect();
-
-            if !alive.is_empty() {
-                let bank: Vec<&[f32]> =
-                    alive.iter().map(|&id| self.nodes[id].params.as_slice()).collect();
-                global = self.compute.aggregate(&bank)?;
-            }
-
-            let mut broadcast_ms = 0.0f64;
-            for &id in &alive {
-                let lat = self.net.send(
-                    MsgKind::GlobalBroadcast,
-                    None,
-                    Some(&self.nodes[id].device),
-                    payload,
-                    round,
-                );
-                broadcast_ms = broadcast_ms.max(lat);
-                self.nodes[id].params = global.clone();
-            }
-
-            let server_ms = alive.len() as f64 * self.net.cloud_process_latency_ms();
-            let latency_ms = train_ms + upload_ms + server_ms + broadcast_ms;
-
-            let metrics = if (round + 1) % self.cfg.eval_every == 0
-                || round + 1 == self.cfg.rounds
-            {
-                Some(eval_model(
-                    self.compute,
-                    &self.global_eval_batches,
-                    &self.global_eval_labels,
-                    &global,
-                )?)
-            } else {
-                None
-            };
-
-            let cum = rounds.last().map_or(0, |r: &RoundRecord| r.cum_updates)
-                + alive.len() as u64;
-            rounds.push(RoundRecord {
-                round,
-                updates: alive.len() as u64,
-                cum_updates: cum,
-                mean_loss: if loss_n > 0 { loss_sum / loss_n as f64 } else { f64::NAN },
-                latency_ms,
-                metrics,
-                live_nodes: alive.len(),
-                elections: 0,
-                scenario_events: 0,
-                reclusterings: 0,
-            });
-        }
-
-        let final_metrics = eval_model(
-            self.compute,
-            &self.global_eval_batches,
-            &self.global_eval_labels,
-            &global,
-        )?;
-
-        // per-group report rows (use provided grouping or one big group)
-        let grouping = grouping
-            .unwrap_or_else(|| vec![(0..self.nodes.len()).collect::<Vec<usize>>()]);
-        let (b, f) = (self.compute.batch(), self.compute.features());
-        let mut cluster_reports = Vec::with_capacity(grouping.len());
-        for (gid, group) in grouping.iter().enumerate() {
-            let tests: Vec<&Dataset> = group.iter().map(|&id| &self.nodes[id].test).collect();
-            let eval = Dataset::concat(&tests);
-            let labels = eval.y.clone();
-            let eb = batches(&eval, b, f);
-            let m = eval_model(self.compute, &eb, &labels, &global)?;
-            cluster_reports.push(ClusterReport {
-                cluster: gid,
-                n_nodes: group.len(),
-                rounds: self.cfg.rounds,
-                updates: group.iter().map(|&id| per_node_updates[id]).sum(),
-                final_accuracy: m.accuracy,
-                elections: 0,
-            });
-        }
-
-        Ok(self.finish_report("fedavg", rounds, cluster_reports, final_metrics, &server, wall))
-    }
-
-    /// The FedAvg training + upload phase over fixed-width node shards
-    /// (`NODE_SHARD`); results come back in shard (= node-id) order.
-    fn fedavg_train_shards(
-        &mut self,
-        round: usize,
-        threads: usize,
-        payload: u64,
-    ) -> Result<Vec<(ShardOut, TrafficLedger)>> {
-        let cfg = &self.cfg;
-        let base_net = &self.net;
-        let units: Vec<(usize, &mut [NodeState])> =
-            self.nodes.chunks_mut(NODE_SHARD).enumerate().collect();
-        let run_one = |(shard, nodes): (usize, &mut [NodeState]),
-                       compute: &dyn ModelCompute|
-         -> Result<(ShardOut, TrafficLedger)> {
-            let seed = mix64(
-                mix64(cfg.seed, 0xFE_DA56),
-                mix64(round as u64, shard as u64),
-            );
-            let mut net = base_net.fork(seed);
-            let mut out = ShardOut::default();
-            for node in nodes.iter_mut() {
-                if !node.alive {
-                    continue;
-                }
-                let (loss, ms) =
-                    node.local_train(compute, cfg.local_epochs, cfg.lr, cfg.reg)?;
-                out.loss_sum += loss;
-                out.loss_n += 1;
-                out.train_ms = out.train_ms.max(ms);
-                // every node uploads every round — the 2850 of Table 1
-                let lat =
-                    net.send(MsgKind::GlobalUpdate, Some(&node.device), None, payload, round);
-                out.upload_ms = out.upload_ms.max(lat);
-                out.uploaded.push(node.id);
-            }
-            Ok((out, net.ledger))
-        };
-        let outs = if threads > 1 {
-            let compute = self.sync_compute.expect("effective_threads checked");
-            par::run_units_par(units, threads, move |u| run_one(u, compute))
-        } else {
-            let compute = self.compute;
-            par::run_units_seq(units, move |u| run_one(u, compute))
-        };
-        outs.into_iter().collect()
-    }
-
-    fn finish_report(
-        &mut self,
-        mode: &str,
-        rounds: Vec<RoundRecord>,
-        clusters: Vec<ClusterReport>,
-        final_metrics: ModelMetrics,
-        server: &GlobalServer,
-        wall: std::time::Instant,
-    ) -> RunReport {
-        let compute_energy_j: f64 = self.nodes.iter().map(|n| n.compute_energy_j).sum();
-        RunReport {
-            mode: mode.to_string(),
-            rounds,
-            clusters,
-            ledger: self.net.ledger.all_totals().clone(),
-            final_metrics,
-            comm_energy_j: self.net.ledger.total_energy_j(),
-            compute_energy_j,
-            cloud_cost_usd: self.net.cloud_cost_usd(server.cpu_seconds),
-            edge_cost_usd: 0.0,
-            server_cpu_s: server.cpu_seconds,
-            wall_ms: wall.elapsed().as_secs_f64() * 1e3,
-            scenario: Vec::new(),
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // Hierarchical-FL baseline (client -> edge server -> cloud)
-    // ------------------------------------------------------------------
-
-    /// Run the client-edge-cloud HFL baseline [paper §1/§2, refs 2-4]:
-    /// the architecture SCALE claims to make redundant. One always-on
-    /// edge server per metro aggregates its clients every round; edges
-    /// sync to the global server every `edge_period` rounds. Updates to
-    /// the cloud therefore scale with edges (like SCALE's clusters), but
-    /// the tier costs dedicated infrastructure — `edge_cost_usd` captures
-    /// exactly the spend SCALE's driver-node design avoids.
-    pub fn run_hfl(&mut self, edge_period: usize) -> Result<RunReport> {
-        anyhow::ensure!(edge_period >= 1, "edge_period must be >= 1");
-        let threads = self.effective_threads()?;
-        let wall = std::time::Instant::now();
-        let mut server = GlobalServer::new(self.root_key);
-        // tiers re-broadcast the shared model every round, so frames
-        // always have a common delta baseline
-        let payload = self.cfg.wire.frame_bytes(self.compute.param_dim(), true);
-
-        // edge servers: one per metro, registered as clusters at the
-        // global server (re-using the registry machinery)
-        let n_edges = self.cfg.fleet.n_metros.max(1);
-        let mut edge_members: Vec<Vec<usize>> = vec![Vec::new(); n_edges];
-        for node in &self.nodes {
-            edge_members[node.device.metro % n_edges].push(node.id);
-        }
-        edge_members.retain(|m| !m.is_empty());
-        let n_edges = edge_members.len();
-        {
-            for id in 0..self.nodes.len() {
-                let msg = self.summary_for(id);
-                let env = msg.seal(&self.root_key, &mut self.rng.derive(0xED6E + id as u64));
-                server.intake_summary(id, &env).ok();
-            }
-            let cfg = crate::clustering::ClusterConfig {
-                n_clusters: n_edges,
-                balance_slack: None,
-                ..self.cfg.cluster.clone()
-            };
-            server.form_clusters(&cfg)?;
-        }
-        // a pseudo device profile per edge (wired uplink at the metro POP)
-        let edge_devices: Vec<DeviceProfile> = edge_members
-            .iter()
-            .enumerate()
-            .map(|(e, members)| {
-                let mut d = self.nodes[members[0]].device.clone();
-                d.id = 1_000_000 + e;
-                d.bandwidth_mbps = 1000.0;
-                d.latency_ms = 2.0;
-                d.tx_energy_j_per_mb = 0.5; // wired, not battery radio
-                d
-            })
-            .collect();
-
-        let mut edge_models: Vec<Vec<f32>> =
-            vec![self.compute.init_params(self.cfg.seed); n_edges];
-        let mut edge_updates = vec![0u64; n_edges];
-        let mut global = self.compute.init_params(self.cfg.seed);
-        let mut rounds = Vec::with_capacity(self.cfg.rounds);
-
-        for round in 0..self.cfg.rounds {
-            self.inject_failures(round);
-            // tier-2 sync every edge_period rounds (and final round)
-            let sync_round =
-                (round + 1) % edge_period == 0 || round + 1 == self.cfg.rounds;
-            // --- per-edge tier-1 phase (fans out like SCALE clusters);
-            //     cloud registration happens at the barrier, in edge
-            //     order, so uploads never race ---
-            let edge_outs =
-                self.hfl_edge_rounds(round, threads, payload, &edge_members, &edge_devices, sync_round)?;
-            let mut loss_sum = 0.0;
-            let mut loss_n = 0usize;
-            let mut train_ms = 0.0f64;
-            let mut tier1_ms = 0.0f64;
-            let mut cloud_updates = 0u64;
-            for (out, ledger) in edge_outs {
-                self.net.ledger.merge(&ledger);
-                loss_sum += out.loss_sum;
-                loss_n += out.loss_n;
-                train_ms = train_ms.max(out.train_ms);
-                tier1_ms = tier1_ms.max(out.tier1_ms);
-                if let Some(model) = out.edge_model {
-                    edge_models[out.e] = model;
-                    if out.uploaded {
-                        server.receive_cluster_model(
-                            out.e,
-                            edge_models[out.e].clone(),
-                            edge_members[out.e].len(),
-                            round,
-                        )?;
-                        edge_updates[out.e] += 1;
-                        cloud_updates += 1;
-                    }
-                }
-            }
-
-            // global aggregation + cascade back down on sync rounds
-            let synced = cloud_updates > 0;
-            if synced {
-                global = server.global_model(self.compute)?;
-                for (e, members) in edge_members.iter().enumerate() {
-                    let lat = self.net.send(
-                        MsgKind::GlobalBroadcast,
-                        None,
-                        Some(&edge_devices[e]),
-                        payload,
-                        round,
-                    );
-                    tier1_ms = tier1_ms.max(lat);
-                    edge_models[e] = global.clone();
-                    let _ = members;
-                }
-            }
-            // edge -> clients broadcast every round
-            let mut bc_ms = 0.0f64;
-            for (e, members) in edge_members.iter().enumerate() {
-                for &id in members {
-                    if !self.nodes[id].alive {
-                        continue;
-                    }
-                    let lat = self.net.send(
-                        MsgKind::EdgeBroadcast,
-                        Some(&edge_devices[e]),
-                        Some(&self.nodes[id].device),
-                        payload,
-                        round,
-                    );
-                    bc_ms = bc_ms.max(lat);
-                    self.nodes[id].params = edge_models[e].clone();
-                }
-            }
-
-            let server_ms = cloud_updates as f64 * self.net.cloud_process_latency_ms();
-            let latency_ms = train_ms + tier1_ms + bc_ms + server_ms;
-            let metrics = if (round + 1) % self.cfg.eval_every == 0
-                || round + 1 == self.cfg.rounds
-            {
-                Some(eval_model(
-                    self.compute,
-                    &self.global_eval_batches,
-                    &self.global_eval_labels,
-                    &global,
-                )?)
-            } else {
-                None
-            };
-            let cum = rounds.last().map_or(0, |r: &RoundRecord| r.cum_updates)
-                + cloud_updates;
-            rounds.push(RoundRecord {
-                round,
-                updates: cloud_updates,
-                cum_updates: cum,
-                mean_loss: if loss_n > 0 { loss_sum / loss_n as f64 } else { f64::NAN },
-                latency_ms,
-                metrics,
-                live_nodes: self.nodes.iter().filter(|n| n.alive).count(),
-                elections: 0,
-                scenario_events: 0,
-                reclusterings: 0,
-            });
-        }
-
-        let final_metrics = eval_model(
-            self.compute,
-            &self.global_eval_batches,
-            &self.global_eval_labels,
-            &global,
-        )?;
-        let (b, f) = (self.compute.batch(), self.compute.features());
-        let mut cluster_reports = Vec::with_capacity(n_edges);
-        for (e, members) in edge_members.iter().enumerate() {
-            let tests: Vec<&Dataset> =
-                members.iter().map(|&id| &self.nodes[id].test).collect();
-            let eval = Dataset::concat(&tests);
-            let labels = eval.y.clone();
-            let eb = batches(&eval, b, f);
-            let m = eval_model(self.compute, &eb, &labels, &global)?;
-            cluster_reports.push(ClusterReport {
-                cluster: e,
-                n_nodes: members.len(),
-                rounds: self.cfg.rounds,
-                updates: edge_updates[e],
-                final_accuracy: m.accuracy,
-                elections: 0,
-            });
-        }
-
-        // edge infrastructure cost: n_edges always-on servers over the
-        // modelled experiment duration
-        let modelled_s: f64 =
-            rounds.iter().map(|r: &RoundRecord| r.latency_ms).sum::<f64>() / 1e3;
-        let edge_cost =
-            n_edges as f64 * modelled_s * self.net.cfg.edge_server_cost_per_s;
-        let mut report =
-            self.finish_report("hfl", rounds, cluster_reports, final_metrics, &server, wall);
-        report.edge_cost_usd = edge_cost;
-        Ok(report)
-    }
-
-    /// One HFL round's tier-1 phase over every edge: client training,
-    /// client → edge uploads, edge aggregation, and — on sync rounds —
-    /// the edge → cloud transmission (the registration itself is the
-    /// caller's, at the barrier). Results come back in edge order.
-    fn hfl_edge_rounds(
-        &mut self,
-        round: usize,
-        threads: usize,
-        payload: u64,
-        edge_members: &[Vec<usize>],
-        edge_devices: &[DeviceProfile],
-        sync_round: bool,
-    ) -> Result<Vec<(EdgeOut, TrafficLedger)>> {
-        let cfg = &self.cfg;
-        let base_net = &self.net;
-        let mut slots: Vec<Option<&mut NodeState>> =
-            self.nodes.iter_mut().map(Some).collect();
-        let units: Vec<(usize, Vec<&mut NodeState>)> = edge_members
-            .iter()
-            .enumerate()
-            .map(|(e, members)| {
-                let nodes: Vec<&mut NodeState> = members
-                    .iter()
-                    .map(|&id| slots[id].take().expect("node claimed by two edges"))
-                    .collect();
-                (e, nodes)
-            })
-            .collect();
-        let run_one = |(e, mut nodes): (usize, Vec<&mut NodeState>),
-                       compute: &dyn ModelCompute|
-         -> Result<(EdgeOut, TrafficLedger)> {
-            let seed =
-                mix64(mix64(cfg.seed, 0x4F1_ED6E), mix64(round as u64, e as u64));
-            let mut net = base_net.fork(seed);
-            let mut out = EdgeOut { e, ..Default::default() };
-            let alive: Vec<usize> =
-                (0..nodes.len()).filter(|&li| nodes[li].alive).collect();
-            if alive.is_empty() {
-                return Ok((out, net.ledger)); // dark edge skips the round
-            }
-            for &li in &alive {
-                let (loss, ms) =
-                    nodes[li].local_train(compute, cfg.local_epochs, cfg.lr, cfg.reg)?;
-                out.loss_sum += loss;
-                out.loss_n += 1;
-                out.train_ms = out.train_ms.max(ms);
-                let lat = net.send(
-                    MsgKind::EdgeUpdate,
-                    Some(&nodes[li].device),
-                    Some(&edge_devices[e]),
-                    payload,
-                    round,
-                );
-                out.tier1_ms = out.tier1_ms.max(lat);
-            }
-            let bank: Vec<&[f32]> =
-                alive.iter().map(|&li| nodes[li].params.as_slice()).collect();
-            out.edge_model = Some(compute.aggregate(&bank)?);
-            if sync_round {
-                let lat =
-                    net.send(MsgKind::GlobalUpdate, Some(&edge_devices[e]), None, payload, round);
-                out.tier1_ms = out.tier1_ms.max(lat);
-                out.uploaded = true;
-            }
-            Ok((out, net.ledger))
-        };
-        let outs = if threads > 1 {
-            let compute = self.sync_compute.expect("effective_threads checked");
-            par::run_units_par(units, threads, move |u| run_one(u, compute))
-        } else {
-            let compute = self.compute;
-            par::run_units_seq(units, move |u| run_one(u, compute))
-        };
-        outs.into_iter().collect()
-    }
-
     /// The SCALE clustering's member lists (for baseline grouping): runs
     /// formation on a scratch server without touching `self.net` counts.
     pub fn scale_grouping(&mut self) -> Result<Vec<Vec<usize>>> {
@@ -1555,439 +528,5 @@ impl<'a> Simulation<'a> {
             server.intake_summary(id, &envelope)?;
         }
         server.form_clusters(&self.cfg.cluster)
-    }
-}
-
-/// One node-shard's training-phase results (FedAvg baseline), merged at
-/// the round barrier in shard order.
-#[derive(Default)]
-struct ShardOut {
-    loss_sum: f64,
-    loss_n: usize,
-    train_ms: f64,
-    upload_ms: f64,
-    /// Node ids that uploaded this round.
-    uploaded: Vec<usize>,
-}
-
-/// One edge's tier-1 round results (HFL baseline), merged at the round
-/// barrier in edge order.
-#[derive(Default)]
-struct EdgeOut {
-    e: usize,
-    loss_sum: f64,
-    loss_n: usize,
-    train_ms: f64,
-    tier1_ms: f64,
-    /// Fresh edge model (None when every member was down).
-    edge_model: Option<Vec<f32>>,
-    /// Whether this edge synced to the cloud this round.
-    uploaded: bool,
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::config::CheckpointMode;
-    use crate::runtime::compute::NativeSvm;
-
-    fn small_cfg() -> SimConfig {
-        SimConfig {
-            n_nodes: 20,
-            n_clusters: 4,
-            rounds: 8,
-            local_epochs: 3,
-            eval_every: 4,
-            dataset_samples: 400,
-            dataset_malignant: 150,
-            seed: 5,
-            ..Default::default()
-        }
-        .normalized()
-    }
-
-    fn native() -> NativeSvm {
-        NativeSvm::new(NativeSvm::default_dims())
-    }
-
-    #[test]
-    fn scale_run_end_to_end_native() {
-        let compute = native();
-        let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
-        let report = sim.run_scale().unwrap();
-        assert_eq!(report.rounds.len(), 8);
-        assert_eq!(report.clusters.len(), 4);
-        // every cluster uploads at least once (first observation is free)
-        assert!(report.clusters.iter().all(|c| c.updates >= 1));
-        // checkpoint gating never exceeds one upload per driver-round
-        assert!(report.total_updates() <= 8 * 4);
-        // the model actually learns
-        // label_noise=0.05 bounds achievable accuracy/AUC on noisy labels
-        assert!(report.final_metrics.accuracy > 0.8, "{:?}", report.final_metrics);
-        assert!(report.final_metrics.roc_auc > 0.85);
-        // ledger sanity
-        assert_eq!(
-            report.ledger[&MsgKind::GlobalUpdate].count,
-            report.total_updates()
-        );
-        assert!(report.ledger[&MsgKind::PeerExchange].count > 0);
-        assert!(report.ledger[&MsgKind::Summary].count == 20);
-        assert!(report.comm_energy_j > 0.0);
-        assert!(report.compute_energy_j > 0.0);
-    }
-
-    #[test]
-    fn fedavg_run_end_to_end_native() {
-        let compute = native();
-        let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
-        let grouping = sim.scale_grouping().unwrap();
-        let report = sim.run_fedavg(Some(grouping)).unwrap();
-        // every live node uploads every round (no failures configured)
-        assert_eq!(report.total_updates(), 20 * 8);
-        assert!(report.final_metrics.accuracy > 0.85);
-        assert_eq!(report.clusters.len(), 4);
-        assert_eq!(
-            report.ledger[&MsgKind::GlobalUpdate].count,
-            20 * 8
-        );
-    }
-
-    #[test]
-    fn scale_beats_fedavg_on_updates_at_similar_accuracy() {
-        let compute = native();
-        let cfg = small_cfg();
-        let mut sim = Simulation::new(cfg.clone(), &compute).unwrap();
-        let scale = sim.run_scale().unwrap();
-        let mut sim = Simulation::new(cfg, &compute).unwrap();
-        let fedavg = sim.run_fedavg(None).unwrap();
-        assert!(
-            (scale.total_updates() as f64) < fedavg.total_updates() as f64 * 0.6,
-            "scale {} vs fedavg {}",
-            scale.total_updates(),
-            fedavg.total_updates()
-        );
-        assert!(
-            (scale.final_metrics.accuracy - fedavg.final_metrics.accuracy).abs() < 0.08,
-            "scale {} vs fedavg {}",
-            scale.final_metrics.accuracy,
-            fedavg.final_metrics.accuracy
-        );
-    }
-
-    #[test]
-    fn deterministic_given_seed() {
-        let compute = native();
-        let run = || {
-            let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
-            let r = sim.run_scale().unwrap();
-            (
-                r.total_updates(),
-                r.final_metrics.accuracy,
-                r.ledger[&MsgKind::PeerExchange].count,
-            )
-        };
-        assert_eq!(run(), run());
-    }
-
-    #[test]
-    fn failure_injection_triggers_elections_and_survives() {
-        let compute = native();
-        let mut cfg = small_cfg();
-        cfg.node_failure_prob = 0.25;
-        cfg.node_recovery_prob = 0.5;
-        cfg.rounds = 10;
-        let mut sim = Simulation::new(cfg, &compute).unwrap();
-        let report = sim.run_scale().unwrap();
-        let elections: u64 = report.clusters.iter().map(|c| c.elections).sum();
-        // initial elections (4) plus failover re-elections
-        assert!(elections > 4, "elections {elections}");
-        assert!(report.ledger[&MsgKind::Election].count > 0);
-        // system still converges to a usable model
-        assert!(report.final_metrics.accuracy > 0.7, "{:?}", report.final_metrics);
-    }
-
-    #[test]
-    fn label_skew_partition_still_learns() {
-        let compute = native();
-        let mut cfg = small_cfg();
-        cfg.partition = Partition::LabelSkew(0.4);
-        let mut sim = Simulation::new(cfg, &compute).unwrap();
-        let report = sim.run_scale().unwrap();
-        assert!(report.final_metrics.accuracy > 0.75, "{:?}", report.final_metrics);
-    }
-
-    #[test]
-    fn tighter_checkpoint_gate_reduces_updates() {
-        let compute = native();
-        let updates_at = |delta: f64| {
-            let mut cfg = small_cfg();
-            cfg.rounds = 16;
-            cfg.checkpoint_min_delta = delta;
-            let mut sim = Simulation::new(cfg, &compute).unwrap();
-            sim.run_scale().unwrap().total_updates()
-        };
-        let loose = updates_at(0.0);
-        let mid = updates_at(0.08);
-        let tight = updates_at(0.8);
-        assert!(mid <= loose, "mid {mid} loose {loose}");
-        assert!(tight <= mid, "tight {tight} mid {mid}");
-        // a param-delta gate of 80% relative change ≈ first + forced final
-        assert!(tight <= 4 * 3, "tight {tight}");
-        // convergence tapering: the delta gate must skip some late rounds
-        assert!(mid < 16 * 4, "mid {mid} never skipped");
-    }
-
-    #[test]
-    fn accuracy_gate_mode_is_most_aggressive() {
-        let compute = native();
-        let run = |mode: CheckpointMode| {
-            let mut cfg = small_cfg();
-            cfg.checkpoint_mode = mode;
-            cfg.checkpoint_min_delta = 0.002;
-            let mut sim = Simulation::new(cfg, &compute).unwrap();
-            sim.run_scale().unwrap().total_updates()
-        };
-        let acc = run(CheckpointMode::Accuracy);
-        let delta = run(CheckpointMode::ParamDelta);
-        assert!(acc <= delta, "accuracy {acc} vs delta {delta}");
-    }
-
-    #[test]
-    fn hfl_baseline_runs_and_counts_edge_tier() {
-        let compute = native();
-        let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
-        let report = sim.run_hfl(3).unwrap();
-        // one cluster report per (non-empty) metro edge
-        assert!(!report.clusters.is_empty());
-        // cloud updates: edges * ceil-ish(rounds / period) incl. final
-        let n_edges = report.clusters.len() as u64;
-        let expected_syncs = (8usize / 3 + 1) as u64; // rounds 3,6,8(final)
-        assert_eq!(report.total_updates(), n_edges * expected_syncs);
-        // edge tier carries the per-round traffic
-        assert!(report.ledger[&MsgKind::EdgeUpdate].count >= 8 * 10);
-        assert!(report.ledger[&MsgKind::EdgeBroadcast].count >= 8 * 10);
-        // infrastructure cost is nonzero (the cost SCALE avoids)
-        assert!(report.edge_cost_usd > 0.0);
-        assert!(report.final_metrics.accuracy > 0.8, "{:?}", report.final_metrics);
-    }
-
-    #[test]
-    fn hfl_between_fedavg_and_scale_on_cloud_updates() {
-        let compute = native();
-        let cfg = small_cfg();
-        let mut sim = Simulation::new(cfg.clone(), &compute).unwrap();
-        let scale = sim.run_scale().unwrap();
-        let mut sim = Simulation::new(cfg.clone(), &compute).unwrap();
-        let hfl = sim.run_hfl(2).unwrap();
-        let mut sim = Simulation::new(cfg, &compute).unwrap();
-        let fedavg = sim.run_fedavg(None).unwrap();
-        assert!(hfl.total_updates() < fedavg.total_updates());
-        // SCALE has no edge infrastructure bill
-        assert_eq!(scale.edge_cost_usd, 0.0);
-        assert!(hfl.edge_cost_usd > 0.0);
-    }
-
-    #[test]
-    fn quantized_exchange_shrinks_bytes_and_holds_accuracy() {
-        let compute = native();
-        let run = |q: bool| {
-            let mut cfg = small_cfg();
-            cfg.quantize_exchange = q;
-            let mut sim = Simulation::new(cfg, &compute).unwrap();
-            sim.run_scale().unwrap()
-        };
-        let plain = run(false);
-        let quant = run(true);
-        let bytes = |r: &report::RunReport| {
-            r.ledger[&MsgKind::PeerExchange].bytes
-        };
-        // i8 frames at svm_dim=33: 20-byte header + 12+33 payload = 65 B
-        // vs the 196 B f32 passthrough envelope (~3x)
-        assert!(
-            bytes(&quant) * 3 < bytes(&plain) * 2,
-            "quantized {} vs plain {}",
-            bytes(&quant),
-            bytes(&plain)
-        );
-        assert!(
-            (quant.final_metrics.accuracy - plain.final_metrics.accuracy).abs() < 0.05,
-            "quant acc {} vs plain {}",
-            quant.final_metrics.accuracy,
-            plain.final_metrics.accuracy
-        );
-    }
-
-    #[test]
-    fn wire_passthrough_matches_legacy_payload_bytes() {
-        // the lossless-fingerprint contract at the byte level: with the
-        // default wire config every parameter transfer must cost exactly
-        // the seed's param_payload_bytes model
-        let compute = native();
-        let dim = compute.param_dim();
-        let legacy = crate::netsim::param_payload_bytes(dim);
-        let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
-        let r = sim.run_scale().unwrap();
-        for kind in [
-            MsgKind::PeerExchange,
-            MsgKind::DriverCollect,
-            MsgKind::DriverBroadcast,
-            MsgKind::GlobalUpdate,
-        ] {
-            let t = r.ledger[&kind];
-            assert_eq!(t.bytes, t.count * legacy, "{kind:?}");
-        }
-        let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
-        let f = sim.run_fedavg(None).unwrap();
-        for kind in [MsgKind::GlobalUpdate, MsgKind::GlobalBroadcast] {
-            let t = f.ledger[&kind];
-            assert_eq!(t.bytes, t.count * legacy, "fedavg {kind:?}");
-        }
-    }
-
-    #[test]
-    fn lean_wire_cuts_param_bytes_and_stays_thread_invariant() {
-        let compute = native();
-        let run = |wire: crate::wire::WireConfig, threads: usize| {
-            let mut cfg = small_cfg();
-            cfg.wire = wire;
-            cfg.threads = threads;
-            let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
-            sim.run_scale().unwrap()
-        };
-        let lean = crate::wire::WireConfig::preset("lean").unwrap();
-        let plain = run(crate::wire::WireConfig::default(), 1);
-        let seq = run(lean, 1);
-        let par = run(lean, 4);
-        // the lossy-codec path honours the parallel determinism contract
-        assert_eq!(seq.fingerprint(), par.fingerprint());
-        // i8 + delta + top-k sparsification cuts the param path hard
-        assert!(
-            plain.param_path_bytes() >= 3 * seq.param_path_bytes(),
-            "plain {} vs lean {}",
-            plain.param_path_bytes(),
-            seq.param_path_bytes()
-        );
-        // and the federation still trains a usable model
-        assert!(
-            seq.final_metrics.accuracy > 0.55,
-            "lean accuracy {:?}",
-            seq.final_metrics
-        );
-    }
-
-    #[test]
-    fn lean_wire_uniform_frames_match_ledger_accounting() {
-        // with the baseline ring primed at formation, every PeerExchange
-        // frame in a scenario-free run has the same encoded size — the
-        // ledger must agree with WireConfig::frame_bytes exactly
-        let compute = native();
-        let mut cfg = small_cfg();
-        cfg.wire = crate::wire::WireConfig::preset("lean").unwrap();
-        let per_frame = cfg.wire.frame_bytes(compute.param_dim(), true);
-        let mut sim = Simulation::new(cfg, &compute).unwrap();
-        let r = sim.run_scale().unwrap();
-        for kind in [MsgKind::PeerExchange, MsgKind::DriverBroadcast] {
-            let t = r.ledger[&kind];
-            assert_eq!(t.bytes, t.count * per_frame, "{kind:?}");
-        }
-    }
-
-    #[test]
-    fn secure_aggregation_preserves_consensus() {
-        let compute = native();
-        let run = |sa: bool| {
-            let mut cfg = small_cfg();
-            cfg.secure_aggregation = sa;
-            let mut sim = Simulation::new(cfg, &compute).unwrap();
-            sim.run_scale().unwrap()
-        };
-        let plain = run(false);
-        let secure = run(true);
-        // fixed-point masking must be metrically invisible
-        assert!(
-            (secure.final_metrics.accuracy - plain.final_metrics.accuracy).abs() < 0.02,
-            "secure {} vs plain {}",
-            secure.final_metrics.accuracy,
-            plain.final_metrics.accuracy
-        );
-        // ...but the collect payloads are 2x (i64 vs f32)
-        let bytes = |r: &report::RunReport| r.ledger[&MsgKind::DriverCollect].bytes;
-        assert!(bytes(&secure) > bytes(&plain));
-        assert_eq!(secure.total_updates(), plain.total_updates());
-    }
-
-    #[test]
-    fn round_latency_positive_and_loss_decreases() {
-        let compute = native();
-        let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
-        let report = sim.run_scale().unwrap();
-        assert!(report.rounds.iter().all(|r| r.latency_ms > 0.0));
-        let first = report.rounds.first().unwrap().mean_loss;
-        let last = report.rounds.last().unwrap().mean_loss;
-        assert!(last < first, "loss {first} -> {last}");
-    }
-
-    #[test]
-    fn parallel_scale_rounds_are_fingerprint_identical() {
-        let compute = native();
-        let fp = |threads: usize| {
-            let mut cfg = small_cfg();
-            cfg.threads = threads;
-            let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
-            sim.run_scale().unwrap().fingerprint()
-        };
-        let base = fp(1);
-        assert_eq!(fp(2), base, "threads=2 diverged");
-        assert_eq!(fp(5), base, "threads=5 diverged");
-        // the sequential constructor takes the same per-cluster path
-        let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
-        assert_eq!(sim.run_scale().unwrap().fingerprint(), base);
-    }
-
-    #[test]
-    fn parallel_baselines_are_fingerprint_identical() {
-        let compute = native();
-        let run = |threads: usize| {
-            let mut cfg = small_cfg();
-            cfg.threads = threads;
-            let mut sim = Simulation::new_parallel(cfg.clone(), &compute).unwrap();
-            let fedavg = sim.run_fedavg(None).unwrap().fingerprint();
-            let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
-            let hfl = sim.run_hfl(3).unwrap().fingerprint();
-            (fedavg, hfl)
-        };
-        assert_eq!(run(1), run(4));
-    }
-
-    #[test]
-    fn parallel_scale_under_churn_and_failures_matches_sequential() {
-        let scenario = Scenario::from_toml(
-            "[regulation]\nmin_live_frac = 0.7\ncooldown = 1\n\
-             [[event]]\nround = 1\nkind = \"leave\"\nfrac = 0.3\nduration = 2\n\
-             [[event]]\nround = 3\nkind = \"bandwidth\"\nfactor = 0.5\nduration = 2\n",
-        )
-        .unwrap();
-        let compute = native();
-        let fp = |threads: usize| {
-            let mut cfg = small_cfg();
-            cfg.rounds = 10;
-            cfg.node_failure_prob = 0.15;
-            cfg.node_recovery_prob = 0.5;
-            cfg.threads = threads;
-            let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
-            sim.run_scale_scenario(&scenario).unwrap().fingerprint()
-        };
-        assert_eq!(fp(1), fp(4));
-    }
-
-    #[test]
-    fn threads_without_sync_backend_error_helpfully() {
-        let compute = native();
-        let mut cfg = small_cfg();
-        cfg.threads = 4;
-        // plain constructor drops the Sync marker, so fan-out must refuse
-        let mut sim = Simulation::new(cfg, &compute).unwrap();
-        let err = sim.run_scale().unwrap_err().to_string();
-        assert!(err.contains("thread-safe"), "{err}");
     }
 }

@@ -1,11 +1,94 @@
-//! Run reports: per-round and per-cluster records, JSON export, and the
-//! markdown renderers that regenerate the paper's Table 1 / Figure 2.
+//! Run reports: per-round and per-cluster records, JSON export, the
+//! markdown renderers that regenerate the paper's Table 1 / Figure 2,
+//! and the two run-closing helpers every algorithm shares —
+//! [`eval_model`] and `finish_report`.
 
 use std::collections::BTreeMap;
 
+use anyhow::Result;
+
+use crate::data::{batches, Dataset, PaddedBatch};
 use crate::metrics::ModelMetrics;
 use crate::netsim::{KindTotals, MsgKind};
+use crate::runtime::compute::ModelCompute;
+use crate::server::GlobalServer;
 use crate::util::json::Value;
+
+use super::Simulation;
+
+/// Evaluate packed params over padded batches; returns full metrics.
+pub fn eval_model(
+    compute: &dyn ModelCompute,
+    eval_batches: &[PaddedBatch],
+    labels: &[f32],
+    params: &[f32],
+) -> Result<ModelMetrics> {
+    let mut scores = Vec::with_capacity(labels.len());
+    for b in eval_batches {
+        scores.extend(compute.scores(b, params)?);
+    }
+    anyhow::ensure!(scores.len() == labels.len(), "eval scores/labels mismatch");
+    Ok(ModelMetrics::from_scores(&scores, labels))
+}
+
+/// One [`ClusterReport`] row per node group — the shared report-phase
+/// tail of the static-membership baselines: every group's held-out data
+/// is evaluated against the final global model, with `updates(gid,
+/// members)` supplying the group's cloud-update count.
+pub(crate) fn group_reports(
+    sim: &Simulation<'_>,
+    groups: &[Vec<usize>],
+    updates: impl Fn(usize, &[usize]) -> u64,
+    params: &[f32],
+) -> Result<Vec<ClusterReport>> {
+    let (b, f) = (sim.compute.batch(), sim.compute.features());
+    let mut out = Vec::with_capacity(groups.len());
+    for (gid, group) in groups.iter().enumerate() {
+        let tests: Vec<&Dataset> = group.iter().map(|&id| &sim.nodes[id].test).collect();
+        let eval = Dataset::concat(&tests);
+        let labels = eval.y.clone();
+        let eb = batches(&eval, b, f);
+        let m = eval_model(sim.compute, &eb, &labels, params)?;
+        out.push(ClusterReport {
+            cluster: gid,
+            n_nodes: group.len(),
+            rounds: sim.cfg.rounds,
+            updates: updates(gid, group),
+            final_accuracy: m.accuracy,
+            elections: 0,
+        });
+    }
+    Ok(out)
+}
+
+/// Assemble the end-of-run [`RunReport`] from the engine's accumulated
+/// state: the ledger totals, energy sums and cost model land here once,
+/// for every algorithm.
+pub(crate) fn finish_report(
+    sim: &Simulation<'_>,
+    mode: &str,
+    rounds: Vec<RoundRecord>,
+    clusters: Vec<ClusterReport>,
+    final_metrics: ModelMetrics,
+    server: &GlobalServer,
+    wall: std::time::Instant,
+) -> RunReport {
+    let compute_energy_j: f64 = sim.nodes.iter().map(|n| n.compute_energy_j).sum();
+    RunReport {
+        mode: mode.to_string(),
+        rounds,
+        clusters,
+        ledger: sim.net.ledger.all_totals().clone(),
+        final_metrics,
+        comm_energy_j: sim.net.ledger.total_energy_j(),
+        compute_energy_j,
+        cloud_cost_usd: sim.net.cloud_cost_usd(server.cpu_seconds),
+        edge_cost_usd: 0.0,
+        server_cpu_s: server.cpu_seconds,
+        wall_ms: wall.elapsed().as_secs_f64() * 1e3,
+        scenario: Vec::new(),
+    }
+}
 
 /// One round's record.
 #[derive(Clone, Debug, Default)]

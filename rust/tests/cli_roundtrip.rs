@@ -102,6 +102,89 @@ fn scenario_gen_run_sweep_roundtrip() {
 }
 
 #[test]
+fn scenario_run_algo_baselines_end_to_end_with_thread_parity() {
+    // the unified --algo axis through the real binary: FedAvg and HFL
+    // execute the generated churn scenario end-to-end, and the printed
+    // fingerprint hash is identical for --threads 1 and --threads 4
+    let dir = temp_dir("algo");
+    let toml = dir.join("scenario.toml");
+    let out = run(&["scenario", "gen", "--out", toml.to_str().unwrap()]);
+    assert!(out.status.success(), "gen failed: {out:?}");
+
+    for algo in ["fedavg", "hfl"] {
+        let fingerprint = |threads: &str| -> String {
+            let out = run(&[
+                "scenario",
+                "run",
+                "--file",
+                toml.to_str().unwrap(),
+                "--algo",
+                algo,
+                "--threads",
+                threads,
+            ]);
+            assert!(out.status.success(), "--algo {algo} --threads {threads}: {out:?}");
+            let stdout = String::from_utf8_lossy(&out.stdout);
+            assert!(stdout.contains(&format!("[{algo}]")), "{stdout}");
+            assert!(stdout.contains(&format!("=== {algo} run ===")), "{stdout}");
+            stdout
+                .lines()
+                .find(|l| l.starts_with("fingerprint"))
+                .unwrap_or_else(|| panic!("no fingerprint line:\n{stdout}"))
+                .to_string()
+        };
+        assert_eq!(
+            fingerprint("1"),
+            fingerprint("4"),
+            "--algo {algo} diverged between threads 1 and 4"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bench_matrix_writes_one_row_per_cell() {
+    let dir = temp_dir("matrix");
+    let csv = dir.join("matrix.csv");
+    // a deliberately tiny grid: paper preset shrunk to 12 nodes / 2
+    // rounds, one codec axis entry, all three algorithms
+    let out = run(&[
+        "bench",
+        "matrix",
+        "--presets",
+        "paper",
+        "--codecs",
+        "lean",
+        "--nodes",
+        "12",
+        "--clusters",
+        "3",
+        "--rounds",
+        "2",
+        "--epochs",
+        "1",
+        "--threads",
+        "2",
+        "--csv",
+        csv.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "bench matrix failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("3 cell(s)"), "{stdout}");
+    let text = std::fs::read_to_string(&csv).expect("csv written");
+    assert!(text.starts_with("nodes,clusters,rounds,threads"), "{text}");
+    // header + one row per algorithm
+    assert_eq!(text.lines().count(), 4, "{text}");
+    for algo in ["scale", "fedavg", "hfl"] {
+        assert!(
+            text.lines().any(|l| l.ends_with(&format!(",{algo}"))),
+            "missing {algo} row:\n{text}"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn scenario_run_without_file_exits_nonzero() {
     let out = run(&["scenario", "run"]);
     assert!(!out.status.success());

@@ -1,0 +1,34 @@
+//! Shared setup for the integration suites: the native backend handle
+//! and the canonical small federation every engine-level test runs on.
+//! Each test binary includes this with `mod common;` and uses the
+//! subset it needs.
+
+#![allow(dead_code)] // not every suite uses every helper
+
+use scale_fl::config::SimConfig;
+use scale_fl::runtime::compute::NativeSvm;
+
+/// The pure-rust SVM oracle at its default dimensions — the `Send +
+/// Sync` backend the parallel engine and every tier-1 suite run on.
+pub fn native() -> NativeSvm {
+    NativeSvm::new(NativeSvm::default_dims())
+}
+
+/// The canonical small federation (20 nodes / 4 clusters / 8 rounds,
+/// seed 5): big enough that clustering, elections and checkpoint gating
+/// all engage, small enough that a full three-algorithm suite stays
+/// fast.
+pub fn small_cfg() -> SimConfig {
+    SimConfig {
+        n_nodes: 20,
+        n_clusters: 4,
+        rounds: 8,
+        local_epochs: 3,
+        eval_every: 4,
+        dataset_samples: 400,
+        dataset_malignant: 150,
+        seed: 5,
+        ..Default::default()
+    }
+    .normalized()
+}

@@ -1,7 +1,8 @@
 //! Golden-fingerprint regression suite: pins `RunReport::fingerprint`
 //! (as its 64-bit FNV hash) for canonical `(config, seed, scenario)`
-//! triples across the SCALE / FedAvg / HFL engines, so a refactor cannot
-//! silently change results.
+//! triples — SCALE, FedAvg and HFL, scenario-free and under churn, all
+//! through the unified `--algo` engine — so a refactor cannot silently
+//! change results.
 //!
 //! Every case is executed twice — `--threads 1` and `SCALE_TEST_THREADS`
 //! (default 4) — and the two fingerprints must match byte-for-byte
@@ -13,21 +14,25 @@
 //! file (e.g. a freshly added case) are auto-primed on first run;
 //! entries that *exist* and mismatch fail the suite.
 
+mod common;
+
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::path::PathBuf;
 
 use scale_fl::config::{CheckpointMode, Partition, SimConfig};
-use scale_fl::runtime::compute::NativeSvm;
 use scale_fl::scenario::Scenario;
-use scale_fl::sim::Simulation;
+use scale_fl::sim::{AlgoKind, Simulation};
 
-/// Which engine a golden case drives.
-enum Mode {
-    Scale,
-    Scenario(&'static str),
-    FedAvg,
-    Hfl(usize),
+/// One golden triple: every case drives the unified engine through
+/// `Simulation::run_algo`, optionally under a scenario timeline —
+/// including the FedAvg/HFL-under-churn combinations the engine
+/// refactor made possible.
+struct Case {
+    name: &'static str,
+    cfg: SimConfig,
+    algo: AlgoKind,
+    scenario: Option<&'static str>,
 }
 
 fn base_cfg(nodes: usize, clusters: usize, rounds: usize, seed: u64) -> SimConfig {
@@ -51,7 +56,8 @@ const CHURN_SCENARIO: &str = "\
 [[event]]\nround = 3\nkind = \"bandwidth\"\nfactor = 0.5\nduration = 2\n\
 [[event]]\nround = 4\nkind = \"drift\"\nfrac = 0.2\nflip_frac = 0.3\n";
 
-fn cases() -> Vec<(&'static str, SimConfig, Mode)> {
+fn cases() -> Vec<Case> {
+    let case = |name, cfg, algo, scenario| Case { name, cfg, algo, scenario };
     let skew_quantized = {
         let mut cfg = base_cfg(24, 4, 8, 11);
         cfg.partition = Partition::LabelSkew(0.4);
@@ -72,35 +78,50 @@ fn cases() -> Vec<(&'static str, SimConfig, Mode)> {
         cfg.normalized()
     };
     vec![
-        ("scale-iid-20x4", base_cfg(20, 4, 8, 5), Mode::Scale),
-        ("scale-skew-quantized", skew_quantized, Mode::Scale),
-        ("scale-secagg-accgate-failures", secagg_failures, Mode::Scale),
-        ("scale-wire-lean", wire_lean, Mode::Scale),
-        (
+        case("scale-iid-20x4", base_cfg(20, 4, 8, 5), AlgoKind::Scale, None),
+        case("scale-skew-quantized", skew_quantized, AlgoKind::Scale, None),
+        case("scale-secagg-accgate-failures", secagg_failures, AlgoKind::Scale, None),
+        case("scale-wire-lean", wire_lean, AlgoKind::Scale, None),
+        case(
             "scale-scenario-churn",
             base_cfg(30, 5, 10, 13),
-            Mode::Scenario(CHURN_SCENARIO),
+            AlgoKind::Scale,
+            Some(CHURN_SCENARIO),
         ),
-        ("fedavg-iid-20x4", base_cfg(20, 4, 6, 5), Mode::FedAvg),
-        ("hfl-20x4-period3", base_cfg(20, 4, 8, 9), Mode::Hfl(3)),
+        case("fedavg-iid-20x4", base_cfg(20, 4, 6, 5), AlgoKind::FedAvg, None),
+        case(
+            "hfl-20x4-period3",
+            base_cfg(20, 4, 8, 9),
+            AlgoKind::Hfl { edge_period: 3 },
+            None,
+        ),
+        // baselines under churn: newly possible once FedAvg/HFL run
+        // through the scenario-aware unified engine
+        case(
+            "fedavg-scenario-churn",
+            base_cfg(30, 5, 10, 13),
+            AlgoKind::FedAvg,
+            Some(CHURN_SCENARIO),
+        ),
+        case(
+            "hfl-scenario-churn-period2",
+            base_cfg(30, 5, 10, 19),
+            AlgoKind::Hfl { edge_period: 2 },
+            Some(CHURN_SCENARIO),
+        ),
     ]
 }
 
-fn run_case(cfg: &SimConfig, mode: &Mode, threads: usize) -> (String, String) {
-    let compute = NativeSvm::new(NativeSvm::default_dims());
-    let mut cfg = cfg.clone();
+fn run_case(case: &Case, threads: usize) -> (String, String) {
+    let compute = common::native();
+    let mut cfg = case.cfg.clone();
     cfg.threads = threads;
     let mut sim = Simulation::new_parallel(cfg, &compute).expect("sim setup");
-    let report = match mode {
-        Mode::Scale => sim.run_scale(),
-        Mode::Scenario(toml) => {
-            let scenario = Scenario::from_toml(toml).expect("scenario toml");
-            sim.run_scale_scenario(&scenario)
-        }
-        Mode::FedAvg => sim.run_fedavg(None),
-        Mode::Hfl(period) => sim.run_hfl(*period),
-    }
-    .expect("run");
+    let scenario = match case.scenario {
+        Some(toml) => Scenario::from_toml(toml).expect("scenario toml"),
+        None => Scenario::none(),
+    };
+    let report = sim.run_algo(case.algo, &scenario).expect("run");
     (report.fingerprint(), report.fingerprint_hash())
 }
 
@@ -152,10 +173,11 @@ fn golden_fingerprints_pinned_and_thread_invariant() {
     let mut mismatches: Vec<String> = Vec::new();
     let mut primed = false;
 
-    for (name, cfg, mode) in cases() {
-        let (fp_seq, hash_seq) = run_case(&cfg, &mode, 1);
+    for case in cases() {
+        let name = case.name;
+        let (fp_seq, hash_seq) = run_case(&case, 1);
         if par_threads > 1 {
-            let (fp_par, _) = run_case(&cfg, &mode, par_threads);
+            let (fp_par, _) = run_case(&case, par_threads);
             assert_eq!(
                 fp_seq, fp_par,
                 "{name}: fingerprint diverged between threads 1 and {par_threads}"

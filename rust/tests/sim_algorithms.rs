@@ -1,0 +1,459 @@
+//! Algorithm-level integration suite: SCALE, FedAvg and HFL end-to-end
+//! through the unified `sim::engine` path — protocol behaviour,
+//! extension combinations (quantized exchange, secure aggregation, wire
+//! presets), the three-way comparisons behind the paper's tables, and
+//! the `--threads 1` vs N fingerprint parity contract.
+//!
+//! (Moved out of `sim/mod.rs` when the monolith was dismantled; the
+//! shared setup lives in `tests/common`.)
+
+mod common;
+
+use common::{native, small_cfg};
+use scale_fl::config::{CheckpointMode, Partition};
+use scale_fl::netsim::MsgKind;
+use scale_fl::runtime::compute::ModelCompute;
+use scale_fl::scenario::Scenario;
+use scale_fl::sim::report::RunReport;
+use scale_fl::sim::{AlgoKind, Simulation};
+
+#[test]
+fn scale_run_end_to_end_native() {
+    let compute = native();
+    let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
+    let report = sim.run_scale().unwrap();
+    assert_eq!(report.rounds.len(), 8);
+    assert_eq!(report.clusters.len(), 4);
+    // every cluster uploads at least once (first observation is free)
+    assert!(report.clusters.iter().all(|c| c.updates >= 1));
+    // checkpoint gating never exceeds one upload per driver-round
+    assert!(report.total_updates() <= 8 * 4);
+    // the model actually learns
+    // label_noise=0.05 bounds achievable accuracy/AUC on noisy labels
+    assert!(report.final_metrics.accuracy > 0.8, "{:?}", report.final_metrics);
+    assert!(report.final_metrics.roc_auc > 0.85);
+    // ledger sanity
+    assert_eq!(
+        report.ledger[&MsgKind::GlobalUpdate].count,
+        report.total_updates()
+    );
+    assert!(report.ledger[&MsgKind::PeerExchange].count > 0);
+    assert!(report.ledger[&MsgKind::Summary].count == 20);
+    assert!(report.comm_energy_j > 0.0);
+    assert!(report.compute_energy_j > 0.0);
+}
+
+#[test]
+fn fedavg_run_end_to_end_native() {
+    let compute = native();
+    let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
+    let grouping = sim.scale_grouping().unwrap();
+    let report = sim.run_fedavg(Some(grouping)).unwrap();
+    // every live node uploads every round (no failures configured)
+    assert_eq!(report.total_updates(), 20 * 8);
+    assert!(report.final_metrics.accuracy > 0.85);
+    assert_eq!(report.clusters.len(), 4);
+    assert_eq!(report.ledger[&MsgKind::GlobalUpdate].count, 20 * 8);
+}
+
+#[test]
+fn scale_beats_fedavg_on_updates_at_similar_accuracy() {
+    let compute = native();
+    let cfg = small_cfg();
+    let mut sim = Simulation::new(cfg.clone(), &compute).unwrap();
+    let scale = sim.run_scale().unwrap();
+    let mut sim = Simulation::new(cfg, &compute).unwrap();
+    let fedavg = sim.run_fedavg(None).unwrap();
+    assert!(
+        (scale.total_updates() as f64) < fedavg.total_updates() as f64 * 0.6,
+        "scale {} vs fedavg {}",
+        scale.total_updates(),
+        fedavg.total_updates()
+    );
+    assert!(
+        (scale.final_metrics.accuracy - fedavg.final_metrics.accuracy).abs() < 0.08,
+        "scale {} vs fedavg {}",
+        scale.final_metrics.accuracy,
+        fedavg.final_metrics.accuracy
+    );
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let compute = native();
+    let run = || {
+        let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
+        let r = sim.run_scale().unwrap();
+        (
+            r.total_updates(),
+            r.final_metrics.accuracy,
+            r.ledger[&MsgKind::PeerExchange].count,
+        )
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn failure_injection_triggers_elections_and_survives() {
+    let compute = native();
+    let mut cfg = small_cfg();
+    cfg.node_failure_prob = 0.25;
+    cfg.node_recovery_prob = 0.5;
+    cfg.rounds = 10;
+    let mut sim = Simulation::new(cfg, &compute).unwrap();
+    let report = sim.run_scale().unwrap();
+    let elections: u64 = report.clusters.iter().map(|c| c.elections).sum();
+    // initial elections (4) plus failover re-elections
+    assert!(elections > 4, "elections {elections}");
+    assert!(report.ledger[&MsgKind::Election].count > 0);
+    // system still converges to a usable model
+    assert!(report.final_metrics.accuracy > 0.7, "{:?}", report.final_metrics);
+}
+
+#[test]
+fn label_skew_partition_still_learns() {
+    let compute = native();
+    let mut cfg = small_cfg();
+    cfg.partition = Partition::LabelSkew(0.4);
+    let mut sim = Simulation::new(cfg, &compute).unwrap();
+    let report = sim.run_scale().unwrap();
+    assert!(report.final_metrics.accuracy > 0.75, "{:?}", report.final_metrics);
+}
+
+#[test]
+fn tighter_checkpoint_gate_reduces_updates() {
+    let compute = native();
+    let updates_at = |delta: f64| {
+        let mut cfg = small_cfg();
+        cfg.rounds = 16;
+        cfg.checkpoint_min_delta = delta;
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        sim.run_scale().unwrap().total_updates()
+    };
+    let loose = updates_at(0.0);
+    let mid = updates_at(0.08);
+    let tight = updates_at(0.8);
+    assert!(mid <= loose, "mid {mid} loose {loose}");
+    assert!(tight <= mid, "tight {tight} mid {mid}");
+    // a param-delta gate of 80% relative change ≈ first + forced final
+    assert!(tight <= 4 * 3, "tight {tight}");
+    // convergence tapering: the delta gate must skip some late rounds
+    assert!(mid < 16 * 4, "mid {mid} never skipped");
+}
+
+#[test]
+fn accuracy_gate_mode_is_most_aggressive() {
+    let compute = native();
+    let run = |mode: CheckpointMode| {
+        let mut cfg = small_cfg();
+        cfg.checkpoint_mode = mode;
+        cfg.checkpoint_min_delta = 0.002;
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        sim.run_scale().unwrap().total_updates()
+    };
+    let acc = run(CheckpointMode::Accuracy);
+    let delta = run(CheckpointMode::ParamDelta);
+    assert!(acc <= delta, "accuracy {acc} vs delta {delta}");
+}
+
+#[test]
+fn hfl_baseline_runs_and_counts_edge_tier() {
+    let compute = native();
+    let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
+    let report = sim.run_hfl(3).unwrap();
+    // one cluster report per (non-empty) metro edge
+    assert!(!report.clusters.is_empty());
+    // cloud updates: edges * ceil-ish(rounds / period) incl. final
+    let n_edges = report.clusters.len() as u64;
+    let expected_syncs = (8usize / 3 + 1) as u64; // rounds 3,6,8(final)
+    assert_eq!(report.total_updates(), n_edges * expected_syncs);
+    // edge tier carries the per-round traffic
+    assert!(report.ledger[&MsgKind::EdgeUpdate].count >= 8 * 10);
+    assert!(report.ledger[&MsgKind::EdgeBroadcast].count >= 8 * 10);
+    // infrastructure cost is nonzero (the cost SCALE avoids)
+    assert!(report.edge_cost_usd > 0.0);
+    assert!(report.final_metrics.accuracy > 0.8, "{:?}", report.final_metrics);
+}
+
+#[test]
+fn hfl_between_fedavg_and_scale_on_cloud_updates() {
+    let compute = native();
+    let cfg = small_cfg();
+    let mut sim = Simulation::new(cfg.clone(), &compute).unwrap();
+    let scale = sim.run_scale().unwrap();
+    let mut sim = Simulation::new(cfg.clone(), &compute).unwrap();
+    let hfl = sim.run_hfl(2).unwrap();
+    let mut sim = Simulation::new(cfg, &compute).unwrap();
+    let fedavg = sim.run_fedavg(None).unwrap();
+    assert!(hfl.total_updates() < fedavg.total_updates());
+    // SCALE has no edge infrastructure bill
+    assert_eq!(scale.edge_cost_usd, 0.0);
+    assert!(hfl.edge_cost_usd > 0.0);
+}
+
+#[test]
+fn quantized_exchange_shrinks_bytes_and_holds_accuracy() {
+    let compute = native();
+    let run = |q: bool| {
+        let mut cfg = small_cfg();
+        cfg.quantize_exchange = q;
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        sim.run_scale().unwrap()
+    };
+    let plain = run(false);
+    let quant = run(true);
+    let bytes = |r: &RunReport| r.ledger[&MsgKind::PeerExchange].bytes;
+    // i8 frames at svm_dim=33: 20-byte header + 12+33 payload = 65 B
+    // vs the 196 B f32 passthrough envelope (~3x)
+    assert!(
+        bytes(&quant) * 3 < bytes(&plain) * 2,
+        "quantized {} vs plain {}",
+        bytes(&quant),
+        bytes(&plain)
+    );
+    assert!(
+        (quant.final_metrics.accuracy - plain.final_metrics.accuracy).abs() < 0.05,
+        "quant acc {} vs plain {}",
+        quant.final_metrics.accuracy,
+        plain.final_metrics.accuracy
+    );
+}
+
+#[test]
+fn wire_passthrough_matches_legacy_payload_bytes() {
+    // the lossless-fingerprint contract at the byte level: with the
+    // default wire config every parameter transfer must cost exactly
+    // the seed's param_payload_bytes model
+    let compute = native();
+    let dim = compute.param_dim();
+    let legacy = scale_fl::netsim::param_payload_bytes(dim);
+    let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
+    let r = sim.run_scale().unwrap();
+    for kind in [
+        MsgKind::PeerExchange,
+        MsgKind::DriverCollect,
+        MsgKind::DriverBroadcast,
+        MsgKind::GlobalUpdate,
+    ] {
+        let t = r.ledger[&kind];
+        assert_eq!(t.bytes, t.count * legacy, "{kind:?}");
+    }
+    let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
+    let f = sim.run_fedavg(None).unwrap();
+    for kind in [MsgKind::GlobalUpdate, MsgKind::GlobalBroadcast] {
+        let t = f.ledger[&kind];
+        assert_eq!(t.bytes, t.count * legacy, "fedavg {kind:?}");
+    }
+}
+
+#[test]
+fn lean_wire_cuts_param_bytes_and_stays_thread_invariant() {
+    let compute = native();
+    let run = |wire: scale_fl::wire::WireConfig, threads: usize| {
+        let mut cfg = small_cfg();
+        cfg.wire = wire;
+        cfg.threads = threads;
+        let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
+        sim.run_scale().unwrap()
+    };
+    let lean = scale_fl::wire::WireConfig::preset("lean").unwrap();
+    let plain = run(scale_fl::wire::WireConfig::default(), 1);
+    let seq = run(lean, 1);
+    let par = run(lean, 4);
+    // the lossy-codec path honours the parallel determinism contract
+    assert_eq!(seq.fingerprint(), par.fingerprint());
+    // i8 + delta + top-k sparsification cuts the param path hard
+    assert!(
+        plain.param_path_bytes() >= 3 * seq.param_path_bytes(),
+        "plain {} vs lean {}",
+        plain.param_path_bytes(),
+        seq.param_path_bytes()
+    );
+    // and the federation still trains a usable model
+    assert!(
+        seq.final_metrics.accuracy > 0.55,
+        "lean accuracy {:?}",
+        seq.final_metrics
+    );
+}
+
+#[test]
+fn lean_wire_uniform_frames_match_ledger_accounting() {
+    // with the baseline ring primed at formation, every PeerExchange
+    // frame in a scenario-free run has the same encoded size — the
+    // ledger must agree with WireConfig::frame_bytes exactly
+    let compute = native();
+    let mut cfg = small_cfg();
+    cfg.wire = scale_fl::wire::WireConfig::preset("lean").unwrap();
+    let per_frame = cfg.wire.frame_bytes(compute.param_dim(), true);
+    let mut sim = Simulation::new(cfg, &compute).unwrap();
+    let r = sim.run_scale().unwrap();
+    for kind in [MsgKind::PeerExchange, MsgKind::DriverBroadcast] {
+        let t = r.ledger[&kind];
+        assert_eq!(t.bytes, t.count * per_frame, "{kind:?}");
+    }
+}
+
+#[test]
+fn secure_aggregation_preserves_consensus() {
+    let compute = native();
+    let run = |sa: bool| {
+        let mut cfg = small_cfg();
+        cfg.secure_aggregation = sa;
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        sim.run_scale().unwrap()
+    };
+    let plain = run(false);
+    let secure = run(true);
+    // fixed-point masking must be metrically invisible
+    assert!(
+        (secure.final_metrics.accuracy - plain.final_metrics.accuracy).abs() < 0.02,
+        "secure {} vs plain {}",
+        secure.final_metrics.accuracy,
+        plain.final_metrics.accuracy
+    );
+    // ...but the collect payloads are 2x (i64 vs f32)
+    let bytes = |r: &RunReport| r.ledger[&MsgKind::DriverCollect].bytes;
+    assert!(bytes(&secure) > bytes(&plain));
+    assert_eq!(secure.total_updates(), plain.total_updates());
+}
+
+#[test]
+fn round_latency_positive_and_loss_decreases() {
+    let compute = native();
+    let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
+    let report = sim.run_scale().unwrap();
+    assert!(report.rounds.iter().all(|r| r.latency_ms > 0.0));
+    let first = report.rounds.first().unwrap().mean_loss;
+    let last = report.rounds.last().unwrap().mean_loss;
+    assert!(last < first, "loss {first} -> {last}");
+}
+
+#[test]
+fn parallel_scale_rounds_are_fingerprint_identical() {
+    let compute = native();
+    let fp = |threads: usize| {
+        let mut cfg = small_cfg();
+        cfg.threads = threads;
+        let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
+        sim.run_scale().unwrap().fingerprint()
+    };
+    let base = fp(1);
+    assert_eq!(fp(2), base, "threads=2 diverged");
+    assert_eq!(fp(5), base, "threads=5 diverged");
+    // the sequential constructor takes the same per-cluster path
+    let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
+    assert_eq!(sim.run_scale().unwrap().fingerprint(), base);
+}
+
+#[test]
+fn parallel_baselines_are_fingerprint_identical() {
+    let compute = native();
+    let run = |threads: usize| {
+        let mut cfg = small_cfg();
+        cfg.threads = threads;
+        let mut sim = Simulation::new_parallel(cfg.clone(), &compute).unwrap();
+        let fedavg = sim.run_fedavg(None).unwrap().fingerprint();
+        let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
+        let hfl = sim.run_hfl(3).unwrap().fingerprint();
+        (fedavg, hfl)
+    };
+    assert_eq!(run(1), run(4));
+}
+
+#[test]
+fn parallel_scale_under_churn_and_failures_matches_sequential() {
+    let scenario = Scenario::from_toml(
+        "[regulation]\nmin_live_frac = 0.7\ncooldown = 1\n\
+         [[event]]\nround = 1\nkind = \"leave\"\nfrac = 0.3\nduration = 2\n\
+         [[event]]\nround = 3\nkind = \"bandwidth\"\nfactor = 0.5\nduration = 2\n",
+    )
+    .unwrap();
+    let compute = native();
+    let fp = |threads: usize| {
+        let mut cfg = small_cfg();
+        cfg.rounds = 10;
+        cfg.node_failure_prob = 0.15;
+        cfg.node_recovery_prob = 0.5;
+        cfg.threads = threads;
+        let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
+        sim.run_scale_scenario(&scenario).unwrap().fingerprint()
+    };
+    assert_eq!(fp(1), fp(4));
+}
+
+#[test]
+fn baselines_run_churn_scenarios_with_thread_parity() {
+    // the tentpole's new capability: FedAvg and HFL execute a scenario
+    // timeline end-to-end through the unified engine, with the same
+    // --threads 1 vs 4 fingerprint contract SCALE has
+    let scenario = Scenario::from_toml(
+        "[regulation]\nmin_live_frac = 0.7\ncooldown = 1\n\
+         [[event]]\nround = 1\nkind = \"leave\"\nfrac = 0.3\nduration = 2\n\
+         [[event]]\nround = 3\nkind = \"bandwidth\"\nfactor = 0.5\nduration = 2\n\
+         [[event]]\nround = 4\nkind = \"straggler\"\nfrac = 0.2\nfactor = 3.0\nduration = 2\n",
+    )
+    .unwrap();
+    let compute = native();
+    for algo in [AlgoKind::FedAvg, AlgoKind::Hfl { edge_period: 2 }] {
+        let run = |threads: usize| {
+            let mut cfg = small_cfg();
+            cfg.rounds = 10;
+            cfg.threads = threads;
+            let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
+            sim.run_algo(algo, &scenario).unwrap()
+        };
+        let seq = run(1);
+        let par = run(4);
+        assert_eq!(
+            seq.fingerprint(),
+            par.fingerprint(),
+            "{} diverged between threads 1 and 4",
+            algo.label()
+        );
+        assert_eq!(seq.mode, algo.label());
+        // the churn actually happened: events recorded, node count dips
+        assert!(seq.rounds.iter().any(|r| r.scenario_events > 0));
+        assert!(seq.rounds.iter().any(|r| r.live_nodes < 20));
+        // ...and the timeline is logged like SCALE's
+        assert!(seq.scenario.iter().any(|n| n.what.contains("churn")));
+        // nodes return after the leave window: the final round sees the
+        // full fleet again (no random failures configured)
+        assert_eq!(seq.rounds.last().unwrap().live_nodes, 20);
+    }
+}
+
+#[test]
+fn run_algo_axis_matches_the_dedicated_wrappers() {
+    // the unified --algo entry point is the same execution path as the
+    // legacy wrappers — bit-identical reports
+    let compute = native();
+    let pair = |algo: AlgoKind| {
+        let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
+        let via_axis = sim.run_algo(algo, &Scenario::none()).unwrap().fingerprint();
+        let mut sim = Simulation::new(small_cfg(), &compute).unwrap();
+        let via_wrapper = match algo {
+            AlgoKind::Scale => sim.run_scale(),
+            AlgoKind::FedAvg => sim.run_fedavg(None),
+            AlgoKind::Hfl { edge_period } => sim.run_hfl(edge_period),
+        }
+        .unwrap()
+        .fingerprint();
+        (via_axis, via_wrapper)
+    };
+    for algo in AlgoKind::all() {
+        let (axis, wrapper) = pair(algo);
+        assert_eq!(axis, wrapper, "{} wrapper drifted from run_algo", algo.label());
+    }
+}
+
+#[test]
+fn threads_without_sync_backend_error_helpfully() {
+    let compute = native();
+    let mut cfg = small_cfg();
+    cfg.threads = 4;
+    // plain constructor drops the Sync marker, so fan-out must refuse
+    let mut sim = Simulation::new(cfg, &compute).unwrap();
+    let err = sim.run_scale().unwrap_err().to_string();
+    assert!(err.contains("thread-safe"), "{err}");
+}

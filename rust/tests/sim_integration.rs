@@ -9,10 +9,11 @@ use std::path::PathBuf;
 #[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
+mod common;
+
 use scale_fl::config::{Partition, SimConfig};
 #[cfg(feature = "pjrt")]
 use scale_fl::netsim::MsgKind;
-use scale_fl::runtime::compute::NativeSvm;
 #[cfg(feature = "pjrt")]
 use scale_fl::runtime::compute::PjrtModel;
 #[cfg(feature = "pjrt")]
@@ -74,7 +75,7 @@ fn pjrt_and_native_svm_agree_on_protocol_outputs() {
     };
     let cfg = small_cfg();
     let pjrt = PjrtModel::new(rt, ModelKind::Svm);
-    let native = NativeSvm::new(NativeSvm::default_dims());
+    let native = common::native();
 
     let mut sim_p = Simulation::new(cfg.clone(), &pjrt).unwrap();
     let rep_p = sim_p.run_scale().unwrap();
@@ -97,7 +98,7 @@ fn pjrt_and_native_svm_agree_on_protocol_outputs() {
 
 #[test]
 fn extension_matrix_native() {
-    let native = NativeSvm::new(NativeSvm::default_dims());
+    let native = common::native();
     for (quant, secagg) in [(false, false), (true, false), (false, true), (true, true)] {
         let mut cfg = small_cfg();
         cfg.quantize_exchange = quant;
@@ -137,7 +138,7 @@ fn skewed_mlp_with_failures_and_secagg() {
 
 #[test]
 fn trace_export_from_real_run() {
-    let native = NativeSvm::new(NativeSvm::default_dims());
+    let native = common::native();
     let mut sim = Simulation::new(small_cfg(), &native).unwrap();
     let report = sim.run_scale().unwrap();
     let dir = std::env::temp_dir().join(format!("scale_it_{}", std::process::id()));
@@ -160,7 +161,7 @@ fn config_json_drives_simulation() {
     let loaded = SimConfig::load(&path).unwrap();
     assert_eq!(loaded.quantize_exchange, true);
     assert_eq!(loaded.partition, Partition::LabelSkew(0.7));
-    let native = NativeSvm::new(NativeSvm::default_dims());
+    let native = common::native();
     let mut sim = Simulation::new(loaded, &native).unwrap();
     assert!(sim.run_scale().is_ok());
     std::fs::remove_file(&path).ok();

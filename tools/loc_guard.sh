@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# loc_guard.sh — fail the build when any Rust source module grows past
+# the line budget. Pins the sim-monolith's demise: `sim/mod.rs` was
+# 1,993 lines before the phase-structured Algorithm engine split it up,
+# and no module gets to regrow to that size unnoticed.
+#
+# Usage: tools/loc_guard.sh [limit]   (default 900; also via LOC_LIMIT)
+# Run from the repo root. CI wires this into the lint leg.
+
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+LIMIT="${1:-${LOC_LIMIT:-900}}"
+fail=0
+
+while IFS= read -r file; do
+    lines=$(wc -l < "$file")
+    if [ "$lines" -gt "$LIMIT" ]; then
+        echo "loc_guard: $file is $lines lines (limit $LIMIT) — split it up" >&2
+        fail=1
+    fi
+done < <(find rust/src -name '*.rs' | sort)
+
+if [ "$fail" -ne 0 ]; then
+    echo "loc_guard: FAILED (limit $LIMIT lines per rust/src module)" >&2
+    exit 1
+fi
+echo "loc_guard: OK (every rust/src module <= $LIMIT lines)"
