@@ -7,8 +7,11 @@
 //! (`SCALE_FLEET_CSV`, default `fleet_scale.csv`) that the CI leg
 //! uploads as an artifact.
 //!
-//! The full 10k sweep is gated behind `SCALE_FLEET_FULL=1` so the
-//! default `cargo bench` stays laptop-friendly; 1k and 4k always run.
+//! The full 10k sweep — and the population-scale `fleet-100k` row,
+//! which runs 3 rounds at `sample_frac = 0.01` over shared-dataset node
+//! views and records the process peak RSS — is gated behind
+//! `SCALE_FLEET_FULL=1` so the default `cargo bench` stays
+//! laptop-friendly; 1k and 4k always run.
 
 use scale_fl::bench::{fleet_csv_row, measure_fleet, section, FLEET_CSV_HEADER};
 use scale_fl::config::SimConfig;
@@ -57,6 +60,29 @@ fn main() {
             );
             rows.push(fleet_csv_row(&cfg, &m, AlgoKind::Scale));
         }
+    }
+
+    if full {
+        // population scale: only feasible because node state is index
+        // views into one shared dataset (no owned per-node copies) and
+        // only 1% of each cluster trains per round
+        let mut cfg = SimConfig::preset("fleet-100k").expect("fleet-100k preset");
+        cfg.rounds = 3;
+        cfg.sample_frac = 0.01;
+        let threads = *thread_counts.last().expect("thread counts");
+        let m = measure_fleet(&cfg, threads, AlgoKind::Scale).expect("fleet-100k measurement");
+        println!(
+            "{:>6} | {:>8} | {threads:>7} | {:>7.2} | {:>7.2} | {:>6.2}x | {} (sample 0.01, peak rss {:.0} MB)",
+            cfg.n_nodes,
+            cfg.n_clusters,
+            m.seq_s,
+            m.par_s,
+            m.speedup(),
+            m.identical,
+            m.peak_rss_bytes as f64 / 1e6,
+        );
+        assert!(m.identical, "fingerprint diverged at fleet-100k / sample 0.01");
+        rows.push(fleet_csv_row(&cfg, &m, AlgoKind::Scale));
     }
 
     let csv_path =

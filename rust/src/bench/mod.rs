@@ -74,8 +74,41 @@ pub struct FleetMeasurement {
     /// measured config uses a compact codec — the bytes-on-wire
     /// reference for the reduction factor. `None` for passthrough runs.
     pub ref_param_bytes: Option<u64>,
+    /// Process peak RSS (bytes) sampled after the runs — the memory
+    /// witness for the fleet-scale node-state diet (0 where the
+    /// platform exposes no high-water mark).
+    pub peak_rss_bytes: u64,
     /// The parallel run's report.
     pub report: RunReport,
+}
+
+/// Best-effort reset of the process peak-RSS high-water mark (Linux:
+/// code `5` to `/proc/self/clear_refs`), so one measurement's peak
+/// doesn't inherit an earlier, hungrier run in the same process.
+/// Silently a no-op where unsupported.
+pub fn reset_peak_rss() {
+    let _ = std::fs::write("/proc/self/clear_refs", "5");
+}
+
+/// Peak resident-set size of this process in bytes (Linux `VmHWM`; 0
+/// when unavailable). A high-water mark since process start or the
+/// last [`reset_peak_rss`] — `measure_fleet` resets it per
+/// measurement, so CSV rows reflect their own run.
+pub fn peak_rss_bytes() -> u64 {
+    if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb: u64 = rest
+                    .trim()
+                    .trim_end_matches("kB")
+                    .trim()
+                    .parse()
+                    .unwrap_or(0);
+                return kb * 1024;
+            }
+        }
+    }
+    0
 }
 
 impl FleetMeasurement {
@@ -95,13 +128,17 @@ impl FleetMeasurement {
 
 /// Shared CSV schema for fleet measurements — `scale fleet bench`,
 /// `scale bench matrix` and `benches/fleet_scale.rs` all emit it.
+/// `sample_frac` is the partial-participation fraction and
+/// `peak_rss_mb` the process high-water memory (the fleet-100k
+/// feasibility witnesses).
 pub const FLEET_CSV_HEADER: &str = "nodes,clusters,rounds,threads,seq_s,par_s,speedup,\
-     fingerprint_match,updates,accuracy,codec,param_bytes,wire_reduction,algo";
+     fingerprint_match,updates,accuracy,codec,param_bytes,wire_reduction,sample_frac,\
+     peak_rss_mb,algo";
 
 /// One CSV row under [`FLEET_CSV_HEADER`].
 pub fn fleet_csv_row(cfg: &SimConfig, m: &FleetMeasurement, algo: AlgoKind) -> String {
     format!(
-        "{},{},{},{},{:.4},{:.4},{:.3},{},{},{:.4},{},{},{:.3},{}",
+        "{},{},{},{},{:.4},{:.4},{:.3},{},{},{:.4},{},{},{:.3},{},{:.1},{}",
         cfg.n_nodes,
         cfg.n_clusters,
         cfg.rounds,
@@ -115,6 +152,8 @@ pub fn fleet_csv_row(cfg: &SimConfig, m: &FleetMeasurement, algo: AlgoKind) -> S
         cfg.wire.label(),
         m.param_bytes,
         m.wire_reduction(),
+        cfg.sample_frac,
+        m.peak_rss_bytes as f64 / 1e6,
         algo.label()
     )
 }
@@ -143,6 +182,9 @@ pub fn measure_fleet_with_ref(
         cfg.model == ModelKind::Svm,
         "fleet measurement is native-only (SVM model)"
     );
+    // the peak-RSS witness covers *this* measurement's runs, not
+    // whatever hungrier sweep ran earlier in the same bench process
+    reset_peak_rss();
     let compute = NativeSvm::new(NativeSvm::default_dims());
     let run_at = |cfg: &SimConfig, threads: usize| -> Result<(f64, RunReport)> {
         let mut c = cfg.clone();
@@ -173,6 +215,7 @@ pub fn measure_fleet_with_ref(
         identical,
         param_bytes,
         ref_param_bytes,
+        peak_rss_bytes: peak_rss_bytes(),
         report,
     })
 }

@@ -209,9 +209,9 @@ pub fn form_clusters(summaries: &[NodeSummary], cfg: &ClusterConfig) -> Clusteri
                     .enumerate()
                     .filter(|(i, _)| assignment[*i] == donor)
                     .max_by(|(_, a), (_, b)| {
-                        dist2(a, &centroids[donor])
-                            .partial_cmp(&dist2(b, &centroids[donor]))
-                            .unwrap()
+                        // total_cmp: never panics, even on degenerate
+                        // (NaN-distance) feature vectors
+                        dist2(a, &centroids[donor]).total_cmp(&dist2(b, &centroids[donor]))
                     })
                     .map(|(i, _)| i)
                     .unwrap();

@@ -54,6 +54,15 @@ pub struct SimConfig {
     pub partition: Partition,
     /// Held-out fraction per node (validation / metrics).
     pub test_frac: f64,
+    /// Partial participation: the fraction of live nodes that train and
+    /// exchange each round, drawn deterministically per `(round, group
+    /// unit)` — cluster for SCALE, 64-node shard for FedAvg, edge for
+    /// HFL. Drivers always participate; non-sampled nodes skip the
+    /// whole parameter path (training, exchange, broadcast) but keep
+    /// heartbeating. `1.0` (default) is byte-identical to the
+    /// pre-sampling engine: the draw is skipped entirely, so existing
+    /// fingerprints are untouched. (0, 1]; DESIGN.md §8.
+    pub sample_frac: f64,
 
     // --- SCALE machinery
     pub topology: Topology,
@@ -127,6 +136,7 @@ impl Default for SimConfig {
             reg: 0.001,
             partition: Partition::Iid,
             test_frac: 0.3,
+            sample_frac: 1.0,
             topology: Topology::KRegular(4),
             // calibrated so the paper setup lands at ~234 total uploads
             // (Table 1 reports 235)
@@ -198,8 +208,21 @@ impl SimConfig {
             "fleet-1k" => Ok(SimConfig::fleet_preset(1_000, 16)),
             "fleet-4k" => Ok(SimConfig::fleet_preset(4_000, 64)),
             "fleet-10k" => Ok(SimConfig::fleet_preset(10_000, 256)),
+            "fleet-100k" => {
+                // population scale: only viable with the shared-dataset
+                // node views (no owned per-node copies) and meant to run
+                // under partial participation (`--sample 0.01`). Greedy
+                // size rebalancing is O(moves · n · k) — disabled here —
+                // and Lloyd iterations are capped so formation over 100k
+                // summaries stays CI-friendly.
+                let mut cfg = SimConfig::fleet_preset(100_000, 2_048);
+                cfg.cluster.balance_slack = None;
+                cfg.cluster.max_iters = 12;
+                Ok(cfg)
+            }
             other => bail!(
-                "unknown preset '{other}' (paper, fleet-1k, fleet-4k, fleet-10k)"
+                "unknown preset '{other}' (paper, fleet-1k, fleet-4k, fleet-10k, \
+                 fleet-100k)"
             ),
         }
     }
@@ -220,6 +243,9 @@ impl SimConfig {
         }
         if !(0.0..1.0).contains(&self.test_frac) {
             bail!("test_frac must be in [0, 1)");
+        }
+        if !(self.sample_frac > 0.0 && self.sample_frac <= 1.0) {
+            bail!("sample_frac must be in (0, 1], got {}", self.sample_frac);
         }
         if !(0.0..=1.0).contains(&self.node_failure_prob) {
             bail!("node_failure_prob must be a probability");
@@ -293,6 +319,7 @@ impl SimConfig {
             }
         }
         v.set("test_frac", Value::Num(self.test_frac));
+        v.set("sample_frac", Value::Num(self.sample_frac));
         let (topo, topo_k) = match self.topology {
             Topology::Ring => ("ring", 0),
             Topology::KRegular(k) => ("k_regular", k),
@@ -381,6 +408,9 @@ impl SimConfig {
         }
         if let Some(x) = num("test_frac") {
             cfg.test_frac = x;
+        }
+        if let Some(x) = num("sample_frac") {
+            cfg.sample_frac = x;
         }
         if let Some(s) = v.get("topology").and_then(Value::as_str) {
             let k = int("topology_k").unwrap_or(4);
@@ -576,11 +606,27 @@ mod tests {
     }
 
     #[test]
+    fn sample_frac_roundtrips_and_validates() {
+        // default: full participation, byte-compatible with pre-sampling
+        assert_eq!(SimConfig::default().sample_frac, 1.0);
+        let mut cfg = SimConfig::default();
+        cfg.sample_frac = 0.05;
+        let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.sample_frac, 0.05);
+        for bad in [0.0, -0.2, 1.0001] {
+            let mut c = SimConfig::default();
+            c.sample_frac = bad;
+            assert!(c.validate().is_err(), "sample_frac {bad} accepted");
+        }
+    }
+
+    #[test]
     fn fleet_presets_validate_and_scale() {
         for (name, nodes, clusters) in [
             ("fleet-1k", 1_000, 16),
             ("fleet-4k", 4_000, 64),
             ("fleet-10k", 10_000, 256),
+            ("fleet-100k", 100_000, 2_048),
         ] {
             let cfg = SimConfig::preset(name).unwrap();
             cfg.validate().unwrap();
@@ -594,6 +640,11 @@ mod tests {
         }
         assert_eq!(SimConfig::preset("paper").unwrap().n_nodes, 100);
         assert!(SimConfig::preset("fleet-1m").is_err());
+        // the 100k preset trims formation cost: no greedy rebalance,
+        // capped Lloyd iterations
+        let big = SimConfig::preset("fleet-100k").unwrap();
+        assert_eq!(big.cluster.balance_slack, None);
+        assert!(big.cluster.max_iters <= 12);
     }
 
     #[test]

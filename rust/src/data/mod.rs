@@ -12,8 +12,18 @@
 //! Also here: z-score standardization, IID and non-IID (Dirichlet
 //! label-skew) partitioners, train/test splitting, and fixed-shape
 //! padding to the AOT batch contract (B×F with a validity mask).
+//!
+//! Fleet-scale memory model: at 100k nodes, per-node *owned* datasets
+//! and pre-padded batch copies dominate memory (a 64×32 padded batch is
+//! ~16× the ~6 rows a node actually holds). [`DatasetView`] is the lean
+//! alternative — row indices into one shared `Arc<Dataset>` plus
+//! view-owned labels — and [`BatchScratch`] / [`with_scratch`] build
+//! padded batches on the fly into one reusable per-worker buffer
+//! instead of storing them per node.
 
 pub mod wdbc;
+
+use std::sync::Arc;
 
 use crate::util::rng::Rng;
 
@@ -78,14 +88,53 @@ impl Dataset {
         self.y.iter().filter(|&&v| v > 0.0).count()
     }
 
-    /// Shuffled train/test split (test fraction in [0,1)).
+    /// Shuffled train/test split; the return order is **`(train, test)`**
+    /// with `round(n · test_frac)` rows held out as test.
+    ///
+    /// (The pre-refactor body bound `split_at`'s halves to names in the
+    /// opposite order they were returned in — functionally right, but an
+    /// invitation to swap them on the next edit. It now delegates to
+    /// [`split_indices`], whose outputs are unambiguous.)
+    ///
+    /// ```
+    /// use scale_fl::data::Dataset;
+    /// use scale_fl::util::rng::Rng;
+    ///
+    /// let ds = Dataset::new(vec![0.0; 20], vec![1.0; 10], 2);
+    /// let (train, test) = ds.split(0.3, &mut Rng::new(1));
+    /// assert_eq!((train.n(), test.n()), (7, 3)); // train first, test second
+    /// ```
     pub fn split(&self, test_frac: f64, rng: &mut Rng) -> (Dataset, Dataset) {
-        let mut idx: Vec<usize> = (0..self.n()).collect();
-        rng.shuffle(&mut idx);
-        let n_test = ((self.n() as f64) * test_frac).round() as usize;
-        let (test_idx, train_idx) = idx.split_at(n_test.min(self.n()));
-        (self.select(train_idx), self.select(test_idx))
+        let rows: Vec<u32> = (0..self.n() as u32).collect();
+        let (train_idx, test_idx) = split_indices(&rows, test_frac, rng);
+        (self.select_u32(&train_idx), self.select_u32(&test_idx))
     }
+
+    /// [`Dataset::select`] over `u32` row indices (the index-list form
+    /// the shared-dataset partitioners emit).
+    pub fn select_u32(&self, idx: &[u32]) -> Dataset {
+        let mut x = Vec::with_capacity(idx.len() * self.f);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.row(i as usize));
+            y.push(self.y[i as usize]);
+        }
+        Dataset { x, y, f: self.f }
+    }
+}
+
+/// Deterministically split `rows` into **`(train, test)`** index lists:
+/// shuffle the positions `0..rows.len()`, hold out the first
+/// `round(n · test_frac)` as test. Draw-for-draw identical to the
+/// pre-view [`Dataset::split`], so seeded splits reproduce exactly.
+pub fn split_indices(rows: &[u32], test_frac: f64, rng: &mut Rng) -> (Vec<u32>, Vec<u32>) {
+    let n = rows.len();
+    let mut pos: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut pos);
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let (test_pos, train_pos) = pos.split_at(n_test.min(n));
+    let take = |ps: &[u32]| ps.iter().map(|&p| rows[p as usize]).collect();
+    (take(train_pos), take(test_pos))
 }
 
 /// Per-feature standardization parameters (fit on training data).
@@ -135,37 +184,52 @@ impl Scaler {
     }
 }
 
-/// IID partition: shuffle rows, deal them round-robin to `clients`.
-pub fn partition_iid(ds: &Dataset, clients: usize, rng: &mut Rng) -> Vec<Dataset> {
+/// IID partition as row-index lists: shuffle rows, deal them round-robin
+/// to `clients`. Draw-for-draw identical to the dataset-copying
+/// [`partition_iid`], which wraps this.
+pub fn partition_iid_indices(n_rows: usize, clients: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
     assert!(clients > 0);
-    let mut idx: Vec<usize> = (0..ds.n()).collect();
+    let mut idx: Vec<u32> = (0..n_rows as u32).collect();
     rng.shuffle(&mut idx);
-    let mut parts: Vec<Vec<usize>> = vec![Vec::new(); clients];
+    let mut parts: Vec<Vec<u32>> = vec![Vec::new(); clients];
     for (k, &i) in idx.iter().enumerate() {
         parts[k % clients].push(i);
     }
-    parts.iter().map(|p| ds.select(p)).collect()
+    parts
 }
 
-/// Non-IID label-skew partition: each client's class mix is drawn from a
-/// symmetric Dirichlet(α) over the two classes (α → ∞ recovers IID;
-/// α ≈ 0.5 gives strong skew). Every client receives ≥ 1 row.
-pub fn partition_label_skew(
-    ds: &Dataset,
+/// IID partition: shuffle rows, deal them round-robin to `clients`.
+pub fn partition_iid(ds: &Dataset, clients: usize, rng: &mut Rng) -> Vec<Dataset> {
+    partition_iid_indices(ds.n(), clients, rng)
+        .iter()
+        .map(|p| ds.select_u32(p))
+        .collect()
+}
+
+/// Non-IID label-skew partition as row-index lists: each client's class
+/// mix is drawn from a symmetric Dirichlet(α) over the two classes
+/// (α → ∞ recovers IID; α ≈ 0.5 gives strong skew). The steal pass
+/// guarantees ≥ 1 row per client *when rows allow it* — at fleet scale
+/// with tiny α a client can legitimately end up empty, so every
+/// downstream consumer (training, eval, `pos_frac`) must tolerate
+/// zero-row partitions.
+pub fn partition_label_skew_indices(
+    y: &[f32],
     clients: usize,
     alpha: f64,
     rng: &mut Rng,
-) -> Vec<Dataset> {
+) -> Vec<Vec<u32>> {
     assert!(clients > 0 && alpha > 0.0);
-    let mut pos: Vec<usize> = (0..ds.n()).filter(|&i| ds.y[i] > 0.0).collect();
-    let mut neg: Vec<usize> = (0..ds.n()).filter(|&i| ds.y[i] <= 0.0).collect();
+    let n = y.len();
+    let mut pos: Vec<u32> = (0..n as u32).filter(|&i| y[i as usize] > 0.0).collect();
+    let mut neg: Vec<u32> = (0..n as u32).filter(|&i| y[i as usize] <= 0.0).collect();
     rng.shuffle(&mut pos);
     rng.shuffle(&mut neg);
 
     // per-client share of each class
     let pos_w = rng.dirichlet(alpha, clients);
     let neg_w = rng.dirichlet(alpha, clients);
-    let mut parts: Vec<Vec<usize>> = vec![Vec::new(); clients];
+    let mut parts: Vec<Vec<u32>> = vec![Vec::new(); clients];
     deal_weighted(&pos, &pos_w, &mut parts);
     deal_weighted(&neg, &neg_w, &mut parts);
 
@@ -179,10 +243,24 @@ pub fn partition_label_skew(
             }
         }
     }
-    parts.iter().map(|p| ds.select(p)).collect()
+    parts
 }
 
-fn deal_weighted(rows: &[usize], weights: &[f64], parts: &mut [Vec<usize>]) {
+/// Non-IID label-skew partition (dataset-copying form; see
+/// [`partition_label_skew_indices`]).
+pub fn partition_label_skew(
+    ds: &Dataset,
+    clients: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> Vec<Dataset> {
+    partition_label_skew_indices(&ds.y, clients, alpha, rng)
+        .iter()
+        .map(|p| ds.select_u32(p))
+        .collect()
+}
+
+fn deal_weighted(rows: &[u32], weights: &[f64], parts: &mut [Vec<u32>]) {
     let n = rows.len();
     let mut cursor = 0usize;
     let mut acc = 0.0f64;
@@ -235,11 +313,20 @@ impl Clone for PaddedBatch {
     }
 }
 
-/// Process-unique batch id.
-fn next_batch_uid() -> u64 {
+/// Reserve a process-unique, contiguous range of `count` batch uids and
+/// return its first id. Views reserve one id per potential chunk up
+/// front, so on-the-fly scratch batches keep stable, collision-free
+/// uids (the PJRT device-buffer cache keys on them) without storing any
+/// padded data per node.
+fn alloc_uid_range(count: u64) -> u64 {
     use std::sync::atomic::{AtomicU64, Ordering};
     static NEXT: AtomicU64 = AtomicU64::new(1);
-    NEXT.fetch_add(1, Ordering::Relaxed)
+    NEXT.fetch_add(count.max(1), Ordering::Relaxed)
+}
+
+/// Process-unique batch id.
+fn next_batch_uid() -> u64 {
+    alloc_uid_range(1)
 }
 
 /// Pad `ds` rows `[start, start+batch)` into the `batch × features`
@@ -268,6 +355,206 @@ pub fn batches(ds: &Dataset, batch: usize, features: usize) -> Vec<PaddedBatch> 
         .step_by(batch)
         .map(|s| pad_batch(ds, s, batch, features))
         .collect()
+}
+
+// ---------------------------------------------------------------------
+// Shared-dataset views + on-the-fly batch assembly (fleet memory diet)
+// ---------------------------------------------------------------------
+
+/// A memory-lean slice of a shared dataset: row indices into one
+/// `Arc<Dataset>` plus a view-owned label vector.
+///
+/// The feature matrix — the heavy part — is stored once for the whole
+/// federation; a view costs `4 bytes/row` of indices plus `4 bytes/row`
+/// of labels. Labels are owned per view so scenario label drift can
+/// flip one node's labels without touching the rows other nodes share.
+///
+/// Padded batches are never stored: [`BatchScratch::fill`] assembles
+/// chunk `k` of a view on demand, stamped with the view's stable
+/// per-chunk uid (`uid_base + k`, re-reserved whenever the view's
+/// contents change) so device-buffer caches behave exactly as they did
+/// with per-node owned batches.
+#[derive(Clone, Debug)]
+pub struct DatasetView {
+    data: Arc<Dataset>,
+    idx: Vec<u32>,
+    y: Vec<f32>,
+    uid_base: u64,
+}
+
+impl DatasetView {
+    /// View over `idx` rows of `data`; labels are copied out of the
+    /// shared dataset (so later drift stays view-local).
+    pub fn new(data: Arc<Dataset>, idx: Vec<u32>) -> DatasetView {
+        let y: Vec<f32> = idx.iter().map(|&i| data.y[i as usize]).collect();
+        let uid_base = alloc_uid_range(idx.len().max(1) as u64);
+        DatasetView { data, idx, y, uid_base }
+    }
+
+    /// The shared backing dataset.
+    pub fn data(&self) -> &Arc<Dataset> {
+        &self.data
+    }
+
+    /// Row count of the view.
+    pub fn n(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Feature count (of the backing dataset).
+    pub fn f(&self) -> usize {
+        self.data.f
+    }
+
+    /// Features of view-row `i` (a row of the shared dataset).
+    pub fn row(&self, i: usize) -> &[f32] {
+        self.data.row(self.idx[i] as usize)
+    }
+
+    /// View-local label of row `i`.
+    pub fn label(&self, i: usize) -> f32 {
+        self.y[i]
+    }
+
+    /// All view-local labels, in view-row order.
+    pub fn labels(&self) -> &[f32] {
+        &self.y
+    }
+
+    /// Mutable labels (scenario drift). Invalidates the view's batch
+    /// uids: staged device buffers keyed on the old uids must never be
+    /// reused for the mutated contents.
+    pub fn labels_mut(&mut self) -> &mut [f32] {
+        self.uid_base = alloc_uid_range(self.idx.len().max(1) as u64);
+        &mut self.y
+    }
+
+    /// Count of +1 labels (view-local).
+    pub fn positives(&self) -> usize {
+        self.y.iter().filter(|&&v| v > 0.0).count()
+    }
+
+    /// Concatenate views over the *same* shared dataset, in order.
+    pub fn concat(parts: &[&DatasetView]) -> DatasetView {
+        assert!(!parts.is_empty(), "DatasetView::concat of zero views");
+        let data = parts[0].data.clone();
+        assert!(
+            parts.iter().all(|p| Arc::ptr_eq(&p.data, &data)),
+            "DatasetView::concat across different shared datasets"
+        );
+        let mut idx = Vec::with_capacity(parts.iter().map(|p| p.n()).sum());
+        let mut y = Vec::with_capacity(idx.capacity());
+        for p in parts {
+            idx.extend_from_slice(&p.idx);
+            y.extend_from_slice(&p.y);
+        }
+        let uid_base = alloc_uid_range(idx.len().max(1) as u64);
+        DatasetView { data, idx, y, uid_base }
+    }
+
+    /// Copy the view out into an owned [`Dataset`] (tests, tooling —
+    /// never the hot path).
+    pub fn materialize(&self) -> Dataset {
+        let mut ds = self.data.select_u32(&self.idx);
+        ds.y.copy_from_slice(&self.y); // view-local labels win
+        ds
+    }
+
+    /// Number of padded chunks covering the view — mirrors [`batches`]:
+    /// an empty view still counts one (all-masked) chunk.
+    pub fn batch_count(&self, batch: usize) -> usize {
+        if self.idx.is_empty() {
+            1
+        } else {
+            self.idx.len().div_ceil(batch)
+        }
+    }
+
+    /// Stable uid of chunk `k` (see [`BatchScratch::fill`]).
+    fn chunk_uid(&self, chunk: usize) -> u64 {
+        self.uid_base + chunk as u64
+    }
+}
+
+/// One reusable padded-batch buffer: [`fill`](Self::fill) re-assembles
+/// any view chunk in place, so a worker thread carries a single `B×F`
+/// buffer instead of every node storing its padded copies.
+#[derive(Debug)]
+pub struct BatchScratch {
+    pb: PaddedBatch,
+}
+
+impl BatchScratch {
+    pub fn new(batch: usize, features: usize) -> BatchScratch {
+        BatchScratch {
+            pb: PaddedBatch {
+                x: vec![0.0; batch * features],
+                y: vec![0.0; batch],
+                mask: vec![0.0; batch],
+                batch,
+                features,
+                n_valid: 0,
+                uid: 0,
+            },
+        }
+    }
+
+    /// The `(batch, features)` contract this scratch was sized for.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.pb.batch, self.pb.features)
+    }
+
+    /// Assemble chunk `chunk` of `view` (rows
+    /// `[chunk·B, chunk·B + B)`) into the scratch buffer — identical
+    /// contents to [`pad_batch`] on the materialized view, stamped with
+    /// the view's stable chunk uid.
+    pub fn fill(&mut self, view: &DatasetView, chunk: usize) -> &PaddedBatch {
+        let (b, f) = (self.pb.batch, self.pb.features);
+        assert!(
+            f >= view.f(),
+            "cannot narrow features {} -> {}",
+            view.f(),
+            f
+        );
+        debug_assert!(chunk < view.batch_count(b), "chunk out of range");
+        let start = chunk * b;
+        let n_valid = view.n().saturating_sub(start).min(b);
+        self.pb.x.fill(0.0);
+        self.pb.y.fill(0.0);
+        self.pb.mask.fill(0.0);
+        for r in 0..n_valid {
+            let src = view.row(start + r);
+            self.pb.x[r * f..r * f + src.len()].copy_from_slice(src);
+            self.pb.y[r] = view.label(start + r);
+            self.pb.mask[r] = 1.0;
+        }
+        self.pb.n_valid = n_valid;
+        self.pb.uid = view.chunk_uid(chunk);
+        &self.pb
+    }
+}
+
+/// Run `f` with this thread's scratch buffer for the `(batch,
+/// features)` contract, (re)allocating only when the shape changes —
+/// the per-worker reuse the round engine's fan-out relies on. Do not
+/// call `with_scratch` again from inside `f`.
+pub fn with_scratch<R>(
+    batch: usize,
+    features: usize,
+    f: impl FnOnce(&mut BatchScratch) -> R,
+) -> R {
+    use std::cell::RefCell;
+    thread_local! {
+        static SCRATCH: RefCell<Option<BatchScratch>> = const { RefCell::new(None) };
+    }
+    SCRATCH.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let reuse = matches!(slot.as_ref(), Some(s) if s.shape() == (batch, features));
+        if !reuse {
+            *slot = Some(BatchScratch::new(batch, features));
+        }
+        f(slot.as_mut().expect("scratch just ensured"))
+    })
 }
 
 #[cfg(test)]
@@ -430,5 +717,124 @@ mod tests {
         let eb = batches(&empty, 64, 4);
         assert_eq!(eb.len(), 1);
         assert_eq!(eb[0].n_valid, 0);
+    }
+
+    #[test]
+    fn split_indices_matches_dataset_split() {
+        // the index form must consume the same RNG draws and pick the
+        // same rows as the dataset-copying split (fingerprint contract)
+        let ds = toy(57);
+        let rows: Vec<u32> = (0..57).collect();
+        let (train_idx, test_idx) = split_indices(&rows, 0.3, &mut Rng::new(9));
+        let (train, test) = ds.split(0.3, &mut Rng::new(9));
+        assert_eq!(ds.select_u32(&train_idx), train);
+        assert_eq!(ds.select_u32(&test_idx), test);
+        assert_eq!(test_idx.len(), (57f64 * 0.3).round() as usize);
+        // non-trivial base rows translate through the position shuffle
+        let offset: Vec<u32> = (100..157).collect();
+        let (tr2, te2) = split_indices(&offset, 0.3, &mut Rng::new(9));
+        assert_eq!(tr2, train_idx.iter().map(|&i| i + 100).collect::<Vec<_>>());
+        assert_eq!(te2, test_idx.iter().map(|&i| i + 100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn index_partitioners_match_dataset_partitioners() {
+        let ds = toy(203);
+        let by_idx = partition_iid_indices(ds.n(), 10, &mut Rng::new(4));
+        let by_ds = partition_iid(&ds, 10, &mut Rng::new(4));
+        for (p, d) in by_idx.iter().zip(&by_ds) {
+            assert_eq!(&ds.select_u32(p), d);
+        }
+        let by_idx = partition_label_skew_indices(&ds.y, 10, 0.3, &mut Rng::new(8));
+        let by_ds = partition_label_skew(&ds, 10, 0.3, &mut Rng::new(8));
+        for (p, d) in by_idx.iter().zip(&by_ds) {
+            assert_eq!(&ds.select_u32(p), d);
+        }
+    }
+
+    #[test]
+    fn view_mirrors_materialized_selection() {
+        let ds = Arc::new(toy(30));
+        let view = DatasetView::new(ds.clone(), vec![3, 0, 27, 9]);
+        assert_eq!(view.n(), 4);
+        assert_eq!(view.f(), 2);
+        assert_eq!(view.row(2), ds.row(27));
+        assert_eq!(view.label(1), ds.y[0]);
+        assert_eq!(view.positives(), ds.select(&[3, 0, 27, 9]).positives());
+        assert_eq!(view.materialize(), ds.select(&[3, 0, 27, 9]));
+    }
+
+    #[test]
+    fn scratch_fill_matches_pad_batch() {
+        let ds = Arc::new(toy(100));
+        let idx: Vec<u32> = (0..77).collect();
+        let view = DatasetView::new(ds.clone(), idx);
+        let owned = view.materialize();
+        let mut scratch = BatchScratch::new(64, 4);
+        assert_eq!(view.batch_count(64), 2);
+        for chunk in 0..2 {
+            let pb = scratch.fill(&view, chunk);
+            let reference = pad_batch(&owned, chunk * 64, 64, 4);
+            assert_eq!(pb.x, reference.x, "chunk {chunk}");
+            assert_eq!(pb.y, reference.y);
+            assert_eq!(pb.mask, reference.mask);
+            assert_eq!(pb.n_valid, reference.n_valid);
+        }
+        // refilling chunk 0 after chunk 1 fully clears stale contents
+        let pb = scratch.fill(&view, 0);
+        assert_eq!(pb.n_valid, 64);
+        assert!(pb.mask.iter().all(|&m| m == 1.0));
+        // empty view: one all-masked chunk, like `batches()`
+        let empty = DatasetView::new(ds, Vec::new());
+        assert_eq!(empty.batch_count(64), 1);
+        let pb = scratch.fill(&empty, 0);
+        assert_eq!(pb.n_valid, 0);
+        assert!(pb.mask.iter().all(|&m| m == 0.0));
+        assert!(pb.x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn view_uids_stable_until_mutation() {
+        let ds = Arc::new(toy(10));
+        let mut view = DatasetView::new(ds.clone(), vec![0, 1, 2, 3, 4]);
+        let mut scratch = BatchScratch::new(4, 4);
+        let uid0 = scratch.fill(&view, 0).uid;
+        let uid1 = scratch.fill(&view, 1).uid;
+        assert_ne!(uid0, uid1);
+        assert_eq!(scratch.fill(&view, 0).uid, uid0); // stable across refills
+        // distinct views never share uids
+        let other = DatasetView::new(ds, vec![0, 1, 2, 3, 4]);
+        assert_ne!(scratch.fill(&other, 0).uid, uid0);
+        // label mutation re-keys the chunks (device caches must miss)
+        let flipped = -view.label(0);
+        view.labels_mut()[0] = flipped;
+        assert_ne!(scratch.fill(&view, 0).uid, uid0);
+    }
+
+    #[test]
+    fn view_concat_preserves_order_and_labels() {
+        let ds = Arc::new(toy(30));
+        let mut a = DatasetView::new(ds.clone(), vec![1, 2]);
+        let b = DatasetView::new(ds.clone(), vec![10, 11, 12]);
+        // view-local label edits survive concat
+        a.labels_mut()[0] = 42.0;
+        let c = DatasetView::concat(&[&a, &b]);
+        assert_eq!(c.n(), 5);
+        assert_eq!(c.label(0), 42.0);
+        assert_eq!(c.row(3), ds.row(11));
+        // empty members are fine as long as one arc is shared
+        let empty = DatasetView::new(ds.clone(), Vec::new());
+        assert_eq!(DatasetView::concat(&[&empty, &b]).n(), 3);
+    }
+
+    #[test]
+    fn with_scratch_reuses_per_shape() {
+        let ds = Arc::new(toy(5));
+        let view = DatasetView::new(ds, vec![0, 1, 2]);
+        let n1 = with_scratch(8, 4, |s| s.fill(&view, 0).n_valid);
+        assert_eq!(n1, 3);
+        // different shape on the same thread reallocates transparently
+        let n2 = with_scratch(2, 4, |s| s.fill(&view, 1).n_valid);
+        assert_eq!(n2, 1);
     }
 }

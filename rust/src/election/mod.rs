@@ -119,12 +119,9 @@ pub fn elect(ballots: &[Ballot], w: &CriteriaWeights) -> ElectionResult {
             (b.node_id, score)
         })
         .collect();
-    // descending score, ascending id on ties (deterministic consensus)
-    ranking.sort_by(|a, b| {
-        b.1.partial_cmp(&a.1)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.0.cmp(&b.0))
-    });
+    // descending score, ascending id on ties (deterministic consensus);
+    // total_cmp keeps the ordering well-defined even for NaN scores
+    ranking.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
     ElectionResult { driver: ranking[0].0, ranking }
 }
 

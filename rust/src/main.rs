@@ -52,7 +52,7 @@ const RUN_SPEC: Spec = Spec {
         "config", "preset", "algo", "mode", "backend", "artifacts", "nodes",
         "clusters", "rounds", "epochs", "seed", "partition", "model", "min-delta",
         "failure-prob", "topology", "heterogeneity", "out", "lr", "reg",
-        "trace-dir", "edge-period", "threads", "wire", "codec", "topk",
+        "trace-dir", "edge-period", "threads", "sample", "wire", "codec", "topk",
     ],
     switches: &["table1", "fig2", "quiet", "rounds-trace", "quantize", "secagg", "delta"],
 };
@@ -62,8 +62,8 @@ const SCENARIO_SPEC: Spec = Spec {
         "file", "config", "preset", "algo", "edge-period", "backend", "artifacts",
         "nodes", "clusters", "rounds", "epochs", "seed", "partition", "model",
         "min-delta", "failure-prob", "topology", "heterogeneity", "out", "lr",
-        "reg", "trace-dir", "seeds", "base-seed", "threads", "wire", "codec",
-        "topk",
+        "reg", "trace-dir", "seeds", "base-seed", "threads", "sample", "wire",
+        "codec", "topk",
     ],
     switches: &[
         "quiet", "rounds-trace", "sequential", "verify", "quantize", "secagg", "delta",
@@ -74,17 +74,17 @@ const FLEET_SPEC: Spec = Spec {
     flags: &[
         "config", "preset", "algo", "edge-period", "nodes", "clusters", "rounds",
         "epochs", "seed", "partition", "model", "min-delta", "failure-prob",
-        "topology", "heterogeneity", "lr", "reg", "threads", "csv", "out", "wire",
-        "codec", "topk",
+        "topology", "heterogeneity", "lr", "reg", "threads", "sample", "csv",
+        "out", "wire", "codec", "topk",
     ],
     switches: &["quiet", "quantize", "secagg", "delta"],
 };
 
 const MATRIX_SPEC: Spec = Spec {
     flags: &[
-        "presets", "codecs", "edge-period", "csv", "threads", "nodes", "clusters",
-        "rounds", "epochs", "seed", "partition", "min-delta", "failure-prob",
-        "heterogeneity", "lr", "reg",
+        "presets", "codecs", "edge-period", "csv", "threads", "sample", "nodes",
+        "clusters", "rounds", "epochs", "seed", "partition", "min-delta",
+        "failure-prob", "heterogeneity", "lr", "reg",
     ],
     switches: &["quiet"],
 };
@@ -182,6 +182,9 @@ fn config_overrides(args: &Args, mut cfg: SimConfig) -> Result<SimConfig> {
     }
     if let Some(t) = args.get_usize("threads")? {
         cfg.threads = t;
+    }
+    if let Some(fr) = args.get_f64("sample")? {
+        cfg.sample_frac = fr;
     }
     if let Some(x) = args.get_f64("lr")? {
         cfg.lr = x as f32;
@@ -635,6 +638,12 @@ fn cmd_fleet_bench(args: &Args) -> Result<()> {
                 cfg.wire.label(),
                 m.param_bytes
             ),
+        }
+        if cfg.sample_frac < 1.0 {
+            println!("sampling     : {} of each group per round", cfg.sample_frac);
+        }
+        if m.peak_rss_bytes > 0 {
+            println!("peak rss     : {:.0} MB", m.peak_rss_bytes as f64 / 1e6);
         }
     }
 

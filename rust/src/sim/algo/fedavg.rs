@@ -1,7 +1,10 @@
 //! Traditional FedAvg as an [`Algorithm`]: every live node trains and
 //! uploads to the cloud every round, the server aggregates, and the
 //! global model is re-broadcast to every node — the Table-1 baseline
-//! SCALE is compared against.
+//! SCALE is compared against. Under partial participation
+//! (`SimConfig::sample_frac < 1`, DESIGN.md §8) each 64-node shard
+//! draws its per-round participants deterministically, and the
+//! aggregate/broadcast path covers exactly that subset.
 //!
 //! * **setup** — every node registers as its own "cluster" of one so
 //!   the server registry tracks per-node models; the global model starts
@@ -99,7 +102,10 @@ impl Algorithm for FedAvgAlgo {
     }
 
     /// The training + upload phase over fixed-width node shards; results
-    /// come back in shard (= node-id) order.
+    /// come back in shard (= node-id) order. Under partial participation
+    /// (`sample_frac < 1`) each shard draws its participants
+    /// deterministically per `(round, shard)`; at `1.0` the loop is the
+    /// pre-sampling every-live-node sweep, byte for byte.
     fn group_phase(
         &mut self,
         sim: &mut Simulation<'_>,
@@ -120,16 +126,19 @@ impl Algorithm for FedAvgAlgo {
             );
             let mut net = base_net.fork(seed);
             let mut out = ShardOut::default();
-            for node in nodes.iter_mut() {
-                if !node.alive {
-                    continue;
-                }
+            let alive: Vec<usize> =
+                (0..nodes.len()).filter(|&li| nodes[li].alive).collect();
+            let active =
+                crate::sim::round_participants(cfg, 0x5A_FEDA, round, shard as u64, alive, None);
+            for &li in &active {
+                let node = &mut nodes[li];
                 let (loss, ms) =
                     node.local_train(compute, cfg.local_epochs, cfg.lr, cfg.reg)?;
                 out.loss_sum += loss;
                 out.loss_n += 1;
                 out.train_ms = out.train_ms.max(ms);
-                // every node uploads every round — the 2850 of Table 1
+                // every participant uploads every round — the 2850 of
+                // Table 1 at full participation
                 let lat =
                     net.send(MsgKind::GlobalUpdate, Some(&node.device), None, payload, round);
                 out.upload_ms = out.upload_ms.max(lat);
@@ -152,26 +161,30 @@ impl Algorithm for FedAvgAlgo {
         let mut ro = RoundOut::default();
         let mut train_ms = 0.0f64;
         let mut upload_ms = 0.0f64;
+        // this round's participants, in shard (= ascending node-id) order;
+        // at sample_frac = 1.0 this is exactly the live fleet
+        let mut active: Vec<usize> = Vec::new();
         for out in outs {
             train_ms = train_ms.max(out.train_ms);
             upload_ms = upload_ms.max(out.upload_ms);
             ro.loss_sum += out.loss_sum;
             ro.loss_n += out.loss_n;
-            for id in out.uploaded {
+            for &id in &out.uploaded {
                 self.per_node_updates[id] += 1;
             }
+            active.extend(out.uploaded);
         }
-        let alive: Vec<usize> =
-            (0..sim.nodes.len()).filter(|&i| sim.nodes[i].alive).collect();
 
-        if !alive.is_empty() {
+        // aggregate over (and re-broadcast to) the participants only:
+        // non-sampled nodes skip the whole parameter path this round
+        if !active.is_empty() {
             let bank: Vec<&[f32]> =
-                alive.iter().map(|&id| sim.nodes[id].params.as_slice()).collect();
+                active.iter().map(|&id| sim.nodes[id].params.as_slice()).collect();
             self.global = sim.compute.aggregate(&bank)?;
         }
 
         let mut broadcast_ms = 0.0f64;
-        for &id in &alive {
+        for &id in &active {
             let lat = sim.net.send(
                 MsgKind::GlobalBroadcast,
                 None,
@@ -183,9 +196,9 @@ impl Algorithm for FedAvgAlgo {
             sim.nodes[id].params = self.global.clone();
         }
 
-        let server_ms = alive.len() as f64 * sim.net.cloud_process_latency_ms();
+        let server_ms = active.len() as f64 * sim.net.cloud_process_latency_ms();
         ro.latency_ms = train_ms + upload_ms + server_ms + broadcast_ms;
-        ro.updates = alive.len() as u64;
+        ro.updates = active.len() as u64;
         Ok(ro)
     }
 

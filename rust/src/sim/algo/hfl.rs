@@ -42,6 +42,10 @@ pub struct EdgeOut {
     edge_model: Option<Vec<f32>>,
     /// Whether this edge synced to the cloud this round.
     uploaded: bool,
+    /// This round's participating clients (global ids, member order) —
+    /// the targets of the barrier-side edge broadcast. The full live
+    /// membership at `sample_frac = 1.0`.
+    participants: Vec<usize>,
 }
 
 /// The client-edge-cloud baseline with a tier-2 sync every
@@ -166,7 +170,12 @@ impl Algorithm for HflAlgo {
             if alive.is_empty() {
                 return Ok((out, net.ledger)); // dark edge skips the round
             }
-            for &li in &alive {
+            // partial participation: each edge draws its clients
+            // deterministically per (round, edge); the edge server itself
+            // is infrastructure and always on
+            let active =
+                crate::sim::round_participants(cfg, 0x5A_4F1E, round, e as u64, alive, None);
+            for &li in &active {
                 let (loss, ms) =
                     nodes[li].local_train(compute, cfg.local_epochs, cfg.lr, cfg.reg)?;
                 out.loss_sum += loss;
@@ -182,8 +191,9 @@ impl Algorithm for HflAlgo {
                 out.tier1_ms = out.tier1_ms.max(lat);
             }
             let bank: Vec<&[f32]> =
-                alive.iter().map(|&li| nodes[li].params.as_slice()).collect();
+                active.iter().map(|&li| nodes[li].params.as_slice()).collect();
             out.edge_model = Some(compute.aggregate(&bank)?);
+            out.participants = active.iter().map(|&li| nodes[li].id).collect();
             if sync_round {
                 let lat =
                     net.send(MsgKind::GlobalUpdate, Some(&edge_devices[e]), None, payload, round);
@@ -208,11 +218,14 @@ impl Algorithm for HflAlgo {
         let mut train_ms = 0.0f64;
         let mut tier1_ms = 0.0f64;
         // cloud registration in edge order, so uploads never race
+        let mut active_by_edge: Vec<Vec<usize>> =
+            vec![Vec::new(); self.edge_members.len()];
         for out in outs {
             ro.loss_sum += out.loss_sum;
             ro.loss_n += out.loss_n;
             train_ms = train_ms.max(out.train_ms);
             tier1_ms = tier1_ms.max(out.tier1_ms);
+            active_by_edge[out.e] = out.participants;
             if let Some(model) = out.edge_model {
                 self.edge_models[out.e] = model;
                 if out.uploaded {
@@ -244,13 +257,12 @@ impl Algorithm for HflAlgo {
                 self.edge_models[e] = self.global.clone();
             }
         }
-        // edge -> clients broadcast every round
+        // edge -> clients broadcast every round, to this round's
+        // participants (the full live membership at sample_frac = 1.0 —
+        // non-sampled clients skip the parameter path entirely)
         let mut bc_ms = 0.0f64;
-        for (e, members) in self.edge_members.iter().enumerate() {
-            for &id in members {
-                if !sim.nodes[id].alive {
-                    continue;
-                }
+        for (e, active) in active_by_edge.iter().enumerate() {
+            for &id in active {
                 let lat = sim.net.send(
                     MsgKind::EdgeBroadcast,
                     Some(&self.edge_devices[e]),

@@ -26,7 +26,7 @@ use crate::secagg;
 use crate::topology::peer_sets;
 use crate::util::rng::mix64;
 
-use super::{eval_model, ClusterState, NodeState, BALLOT_BYTES, HEARTBEAT_BYTES};
+use super::{eval_view, ClusterState, NodeState, BALLOT_BYTES, HEARTBEAT_BYTES};
 
 /// One cluster's round results, merged at the round barrier in
 /// cluster-id order.
@@ -130,9 +130,9 @@ pub(crate) fn scale_cluster_round(
     if alive.is_empty() {
         return Ok(out); // cluster skips the round entirely
     }
-    let alive_global: Vec<usize> = alive.iter().map(|&li| cluster.members[li]).collect();
 
-    // driver liveness → Algorithm-4 re-election
+    // driver liveness → Algorithm-4 re-election (over the full live
+    // membership: sampling never shrinks the electorate)
     let driver_alive = driver_local.is_some_and(|dl| nodes[dl].alive);
     if !driver_alive {
         let alive_nodes: Vec<&NodeState> = alive.iter().map(|&li| &*nodes[li]).collect();
@@ -145,9 +145,25 @@ pub(crate) fn scale_cluster_round(
         .position(|&m| m == cluster.driver)
         .context("elected driver is not a cluster member")?;
 
+    // --- partial participation (DESIGN §8) ---
+    // The round's active set: the driver always, plus a deterministic
+    // per-(round, cluster) draw of the other live members. Non-sampled
+    // nodes have already heartbeated above and skip everything else.
+    // At sample_frac = 1.0 this is `alive` verbatim — no RNG touched,
+    // byte-identical to the pre-sampling engine.
+    let active = super::round_participants(
+        cfg,
+        0x5A_3C1E,
+        round,
+        cluster.id as u64,
+        alive,
+        Some(driver_local),
+    );
+    let active_global: Vec<usize> = active.iter().map(|&li| cluster.members[li]).collect();
+
     // --- local training ---
     let mut train_ms = 0.0f64;
-    for &li in &alive {
+    for &li in &active {
         let (loss, ms) =
             nodes[li].local_train(compute, cfg.local_epochs, cfg.lr, cfg.reg)?;
         out.loss_sum += loss;
@@ -165,14 +181,14 @@ pub(crate) fn scale_cluster_round(
     let payload = cfg.wire.frame_bytes(dim, has_baseline);
     let peers = peer_sets(
         cfg.topology,
-        &alive_global,
+        &active_global,
         round,
         mix64(cfg.seed, cluster.id as u64),
     );
     let mut exchange_ms = 0.0f64;
     for (p, ps) in peers.iter().enumerate() {
         for &q in ps {
-            let (from, to) = (&nodes[alive[p]].device, &nodes[alive[q]].device);
+            let (from, to) = (&nodes[active[p]].device, &nodes[active[q]].device);
             let lat = net.send(MsgKind::PeerExchange, Some(from), Some(to), payload, round);
             exchange_ms = exchange_ms.max(lat);
         }
@@ -185,12 +201,12 @@ pub(crate) fn scale_cluster_round(
     } else {
         None
     };
-    let snapshot: Vec<Vec<f32>> = alive
+    let snapshot: Vec<Vec<f32>> = active
         .iter()
         .map(|&li| cfg.wire.channel(&nodes[li].params, exchange_baseline.as_deref()))
         .collect();
     let exchanged = peer_exchange(compute, &snapshot, &peers)?;
-    for (p, &li) in alive.iter().enumerate() {
+    for (p, &li) in active.iter().enumerate() {
         nodes[li].params = exchanged[p].clone();
     }
 
@@ -202,7 +218,7 @@ pub(crate) fn scale_cluster_round(
         payload
     };
     let mut collect_ms = 0.0f64;
-    for &li in &alive {
+    for &li in &active {
         if li != driver_local {
             let (from, to) = (&nodes[li].device, &nodes[driver_local].device);
             let lat =
@@ -213,7 +229,7 @@ pub(crate) fn scale_cluster_round(
     let consensus = if cfg.secure_aggregation {
         // pairwise-masked sum: the driver only ever sees masked vectors;
         // the integer sum cancels the masks exactly
-        let members: Vec<(usize, secagg::MaskSecret)> = alive_global
+        let members: Vec<(usize, secagg::MaskSecret)> = active_global
             .iter()
             .map(|&id| (id, secagg::MaskSecret::derive(root_key, id as u64)))
             .collect();
@@ -228,7 +244,7 @@ pub(crate) fn scale_cluster_round(
     };
 
     // --- driver-side validation + checkpoint gate ---
-    let metrics = eval_model(compute, &cluster.eval_batches, &cluster.eval_labels, &consensus)?;
+    let metrics = eval_view(compute, &cluster.eval, &consensus)?;
     cluster.last_accuracy = metrics.accuracy;
     let last_round = round + 1 == cfg.rounds;
     let decision = match (last_round && cfg.force_final_upload, cfg.checkpoint_mode) {
@@ -267,9 +283,12 @@ pub(crate) fn scale_cluster_round(
         }
     }
 
-    // --- driver broadcast; members adopt the cluster model ---
+    // --- driver broadcast; the round's active members adopt the cluster
+    // model (non-sampled nodes skip the parameter path entirely — they
+    // stay on their last-adopted model until next sampled, which is what
+    // keeps the bytes-on-wire linear in the sampled count) ---
     let mut broadcast_ms = 0.0f64;
-    for &li in &alive {
+    for &li in &active {
         if li != driver_local {
             let (from, to) = (&nodes[driver_local].device, &nodes[li].device);
             let lat = net.send(MsgKind::DriverBroadcast, Some(from), Some(to), payload, round);
@@ -277,9 +296,11 @@ pub(crate) fn scale_cluster_round(
         }
         nodes[li].params = consensus.clone();
     }
-    // ring-buffer the broadcast model: it is the state every member now
-    // holds, i.e. the next round's delta baseline (and the failover
-    // restore point for a re-elected driver)
+    // ring-buffer the broadcast model: it is the state every *active*
+    // member now holds, i.e. the next round's delta baseline (and the
+    // failover restore point for a re-elected driver); under partial
+    // participation a non-sampled node re-syncs the first round it is
+    // drawn again (it adopts the then-current broadcast)
     cluster.store.push(Checkpoint {
         round: round as u32,
         metric: metrics.accuracy,

@@ -27,7 +27,6 @@
 
 use anyhow::Result;
 
-use crate::data::batches;
 use crate::runtime::compute::ModelCompute;
 use crate::scenario::{EventKind, Scenario, ScenarioState, Undo};
 use crate::server::GlobalServer;
@@ -75,12 +74,9 @@ pub fn run<A: Algorithm>(
             || round + 1 == sim.cfg.rounds
         {
             match algo.eval_params(sim, &mut server) {
-                Some(params) => Some(report::eval_model(
-                    sim.compute,
-                    &sim.global_eval_batches,
-                    &sim.global_eval_labels,
-                    &params,
-                )?),
+                Some(params) => {
+                    Some(report::eval_view(sim.compute, &sim.global_eval, &params)?)
+                }
                 None => None, // nothing uploaded yet
             }
         } else {
@@ -107,12 +103,7 @@ pub fn run<A: Algorithm>(
     }
 
     let final_params = algo.final_params(sim, &mut server)?;
-    let final_metrics = report::eval_model(
-        sim.compute,
-        &sim.global_eval_batches,
-        &sim.global_eval_labels,
-        &final_params,
-    )?;
+    let final_metrics = report::eval_view(sim.compute, &sim.global_eval, &final_params)?;
     let clusters = algo.reports(sim, &final_params)?;
     let edge_cost = algo.edge_cost_usd(sim, &rounds);
 
@@ -318,11 +309,13 @@ pub(crate) fn apply_scenario(
                     sim.nodes.iter().filter(|n| n.alive).map(|n| n.id).collect();
                 let targets =
                     who.resolve(&candidates, |id| sim.nodes[id].device.metro, &mut erng);
-                let (b, f) = (sim.compute.batch(), sim.compute.features());
                 for &id in &targets {
                     let mut drng = erng.derive(id as u64);
                     let node = &mut sim.nodes[id];
-                    for y in &mut node.train.y {
+                    // view-local labels: the flip never touches rows other
+                    // nodes share, and `labels_mut` re-keys the node's
+                    // batch uids so stale device buffers can't be reused
+                    for y in node.train.labels_mut() {
                         if drng.chance(*flip_frac) {
                             *y = -*y;
                         }
@@ -332,7 +325,6 @@ pub(crate) fn apply_scenario(
                     } else {
                         0.0
                     };
-                    node.train_batches = batches(&node.train, b, f);
                     state.drifted.insert(id);
                 }
                 notes.push(ScenarioNote {

@@ -42,13 +42,18 @@ pub mod report;
 
 pub use algo::{AlgoKind, Algorithm, FedAvgAlgo, HflAlgo, Repairs, RoundOut, ScaleAlgo};
 pub use cluster_round::ClusterRoundOut;
-pub use report::eval_model;
+pub use report::{eval_model, eval_view};
+
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::checkpoint::{Checkpoint, CheckpointStore, DeltaGate, UploadGate};
 use crate::config::{Partition, SimConfig};
-use crate::data::{batches, synth_wdbc_sized, Dataset, PaddedBatch, Scaler};
+use crate::data::{
+    partition_iid_indices, partition_label_skew_indices, split_indices, synth_wdbc_sized,
+    with_scratch, Dataset, DatasetView, Scaler,
+};
 use crate::devices::{generate_fleet, DeviceProfile};
 use crate::features::{combined_metadata_score, wdbc_columns, MetadataWeights};
 use crate::health::HealthMonitor;
@@ -57,7 +62,7 @@ use crate::perf_index::{local_log_pi, OperationalWeights};
 use crate::runtime::compute::ModelCompute;
 use crate::scenario::Scenario;
 use crate::server::{GlobalServer, SummaryMsg};
-use crate::util::rng::Rng;
+use crate::util::rng::{mix64, Rng};
 use report::RunReport;
 
 /// Heartbeat / ballot / assignment payload sizes (bytes).
@@ -66,12 +71,18 @@ pub(crate) const BALLOT_BYTES: u64 = 112;
 pub(crate) const ASSIGNMENT_BYTES: u64 = 96;
 
 /// One simulated client node.
+///
+/// Memory-lean by construction: `train` / `test` are [`DatasetView`]s —
+/// row indices into the federation's one shared `Arc<Dataset>` — and
+/// padded batches are assembled on demand into per-worker scratch
+/// buffers (`data::with_scratch`), never stored per node. At 100k nodes
+/// this is the difference between ~1 GB of padded copies and a few MB
+/// of indices (DESIGN.md §8).
 pub struct NodeState {
     pub id: usize,
     pub device: DeviceProfile,
-    pub train: Dataset,
-    pub test: Dataset,
-    pub(crate) train_batches: Vec<PaddedBatch>,
+    pub train: DatasetView,
+    pub test: DatasetView,
     pub params: Vec<f32>,
     pub battery_wh: f64,
     pub alive: bool,
@@ -102,14 +113,25 @@ impl NodeState {
         // instead of `epochs` — §Perf). For single-batch nodes (the paper
         // setup at 100 nodes) this is semantically identical to the
         // epoch-major loop; multi-batch nodes train block-sequentially.
+        // Batches are assembled on the fly from the shared-dataset view
+        // into this worker's scratch buffer — contents identical to the
+        // old per-node stored copies, stable uids included.
+        let (bsz, feats) = (compute.batch(), compute.features());
+        let nb = self.train.batch_count(bsz);
         let mut sum = 0.0f64;
-        for b in &self.train_batches {
-            let (p, loss) = compute.train_steps(b, &self.params, lr, reg, epochs)?;
-            self.params = p;
-            sum += loss as f64;
-        }
-        let last_mean = sum / self.train_batches.len().max(1) as f64;
-        let steps = (epochs * self.train_batches.len()) as f64;
+        let train = &self.train;
+        let params = &mut self.params;
+        with_scratch(bsz, feats, |scratch| -> Result<()> {
+            for chunk in 0..nb {
+                let pb = scratch.fill(train, chunk);
+                let (p, loss) = compute.train_steps(pb, params, lr, reg, epochs)?;
+                *params = p;
+                sum += loss as f64;
+            }
+            Ok(())
+        })?;
+        let last_mean = sum / nb as f64;
+        let steps = (epochs * nb) as f64;
         let gflop = compute.train_flops() * steps / 1e9;
         let seconds = self.device.compute_seconds(gflop) * self.slow_factor;
         let energy = gflop * self.device.compute_energy_j_per_gflop;
@@ -133,8 +155,10 @@ pub struct ClusterState {
     /// cluster shares (DESIGN §6) as well as the failover restore point.
     pub store: CheckpointStore,
     pub monitor: HealthMonitor,
-    pub(crate) eval_batches: Vec<PaddedBatch>,
-    pub(crate) eval_labels: Vec<f32>,
+    /// The cluster's validation set: the union of its members' hold-out
+    /// views, assembled lazily (indices + labels only; padded batches
+    /// are built per eval into worker scratch).
+    pub(crate) eval: DatasetView,
     /// Last model the global server received from this cluster — the
     /// driver's upload-stream delta baseline ("re-baseline at central
     /// aggregation").
@@ -155,8 +179,10 @@ pub struct Simulation<'a> {
     pub nodes: Vec<NodeState>,
     pub net: Network,
     pub(crate) rng: Rng,
-    pub(crate) global_eval_batches: Vec<PaddedBatch>,
-    pub(crate) global_eval_labels: Vec<f32>,
+    /// The one shared dataset every node view indexes into.
+    pub(crate) data: Arc<Dataset>,
+    /// Global evaluation set: the union of node hold-outs as a lazy view.
+    pub(crate) global_eval: DatasetView,
     pub(crate) root_key: [u8; 32],
 }
 
@@ -182,37 +208,38 @@ impl<'a> Simulation<'a> {
             }
         }
 
-        // --- partition to clients ---
+        // --- partition to clients (index lists into the shared dataset;
+        //     draw-for-draw identical to the old dataset-copying path) ---
         let mut part_rng = rng.derive(0xDA7A);
-        let parts = match cfg.partition {
-            Partition::Iid => crate::data::partition_iid(&full, cfg.n_nodes, &mut part_rng),
+        let parts: Vec<Vec<u32>> = match cfg.partition {
+            Partition::Iid => partition_iid_indices(full.n(), cfg.n_nodes, &mut part_rng),
             Partition::LabelSkew(alpha) => {
-                crate::data::partition_label_skew(&full, cfg.n_nodes, alpha, &mut part_rng)
+                partition_label_skew_indices(&full.y, cfg.n_nodes, alpha, &mut part_rng)
             }
         };
+        let data = Arc::new(full);
 
         // --- fleet ---
         let fleet = generate_fleet(&cfg.fleet);
 
-        // --- nodes ---
-        let (b, f) = (compute.batch(), compute.features());
+        // --- nodes: views into the shared dataset, no owned copies ---
         let mut nodes = Vec::with_capacity(cfg.n_nodes);
         for (id, part) in parts.into_iter().enumerate() {
             let mut split_rng = rng.derive(0x5711 + id as u64);
-            let (train, test) = part.split(cfg.test_frac, &mut split_rng);
+            let (train_idx, test_idx) = split_indices(&part, cfg.test_frac, &mut split_rng);
+            let train = DatasetView::new(data.clone(), train_idx);
+            let test = DatasetView::new(data.clone(), test_idx);
             let pos_frac = if train.n() > 0 {
                 train.positives() as f64 / train.n() as f64
             } else {
                 0.0
             };
-            let train_batches = batches(&train, b, f);
             nodes.push(NodeState {
                 id,
                 device: fleet[id].clone(),
                 battery_wh: fleet[id].battery_wh,
                 train,
                 test,
-                train_batches,
                 params: compute.init_params(cfg.seed),
                 alive: true,
                 pos_frac,
@@ -224,11 +251,10 @@ impl<'a> Simulation<'a> {
             });
         }
 
-        // --- global evaluation set: union of node hold-outs ---
-        let tests: Vec<&Dataset> = nodes.iter().map(|n| &n.test).collect();
-        let global_eval = Dataset::concat(&tests);
-        let global_eval_labels = global_eval.y.clone();
-        let global_eval_batches = batches(&global_eval, b, f);
+        // --- global evaluation set: union of node hold-outs, assembled
+        //     lazily from the view indices (same rows, same order) ---
+        let tests: Vec<&DatasetView> = nodes.iter().map(|n| &n.test).collect();
+        let global_eval = DatasetView::concat(&tests);
 
         let net = Network::new(cfg.net.clone(), crate::util::rng::mix64(cfg.seed, 0x7E7), false);
         let mut root_key = [0u8; 32];
@@ -244,8 +270,8 @@ impl<'a> Simulation<'a> {
             nodes,
             net,
             rng,
-            global_eval_batches,
-            global_eval_labels,
+            data,
+            global_eval,
             root_key,
         })
     }
@@ -437,8 +463,7 @@ impl<'a> Simulation<'a> {
             delta_gate: DeltaGate::new(self.cfg.checkpoint_min_delta),
             store,
             monitor,
-            eval_batches: Vec::new(),
-            eval_labels: Vec::new(),
+            eval: DatasetView::new(self.data.clone(), Vec::new()),
             upload_baseline: baseline,
             pos_frac: 0.0,
             elections: 0,
@@ -457,22 +482,17 @@ impl<'a> Simulation<'a> {
     /// Recompute a cluster's validation set and label mix from its current
     /// membership (formation, proximity admission, drift repair).
     pub(crate) fn refresh_cluster_eval(&self, cluster: &mut ClusterState) {
-        let (b, f) = (self.compute.batch(), self.compute.features());
         if cluster.members.is_empty() {
-            cluster.eval_batches = Vec::new();
-            cluster.eval_labels = Vec::new();
+            cluster.eval = DatasetView::new(self.data.clone(), Vec::new());
             cluster.pos_frac = 0.0;
             return;
         }
-        let tests: Vec<&Dataset> =
+        let tests: Vec<&DatasetView> =
             cluster.members.iter().map(|&id| &self.nodes[id].test).collect();
-        let eval = Dataset::concat(&tests);
-        cluster.eval_labels = eval.y.clone();
-        cluster.eval_batches = batches(&eval, b, f);
-        let trains: Vec<&Dataset> =
-            cluster.members.iter().map(|&id| &self.nodes[id].train).collect();
-        let total_n: usize = trains.iter().map(|t| t.n()).sum();
-        let total_pos: usize = trains.iter().map(|t| t.positives()).sum();
+        cluster.eval = DatasetView::concat(&tests);
+        let trains = cluster.members.iter().map(|&id| &self.nodes[id].train);
+        let total_n: usize = trains.clone().map(|t| t.n()).sum();
+        let total_pos: usize = trains.map(|t| t.positives()).sum();
         cluster.pos_frac =
             if total_n > 0 { total_pos as f64 / total_n as f64 } else { 0.0 };
     }
@@ -528,5 +548,138 @@ impl<'a> Simulation<'a> {
             server.intake_summary(id, &envelope)?;
         }
         server.form_clusters(&self.cfg.cluster)
+    }
+}
+
+/// One group unit's per-round participation draw
+/// (`SimConfig::sample_frac`, DESIGN.md §8) — the single entry point
+/// every algorithm routes through, so the seed discipline lives in one
+/// place: the stream derives from `(run seed, algorithm salt, round,
+/// unit id)`, mirroring the forked-network jitter discipline, and is
+/// therefore a pure function of the round coordinates — never of
+/// scheduling. At `sample_frac >= 1` the candidates are returned
+/// unchanged without touching any RNG (the byte-compatibility contract
+/// for full participation).
+pub(crate) fn round_participants(
+    cfg: &SimConfig,
+    salt: u64,
+    round: usize,
+    unit: u64,
+    candidates: Vec<usize>,
+    always: Option<usize>,
+) -> Vec<usize> {
+    if cfg.sample_frac >= 1.0 {
+        return candidates;
+    }
+    sample_participants(
+        &candidates,
+        always,
+        cfg.sample_frac,
+        mix64(mix64(cfg.seed, salt), mix64(round as u64, unit)),
+    )
+}
+
+/// Draw one group unit's participating subset for a round
+/// (`SimConfig::sample_frac`, DESIGN.md §8).
+///
+/// `candidates` are the unit's live members (cluster / shard / edge
+/// order); `always` — SCALE's driver — is unconditionally included and
+/// must be one of the candidates. The participant count is
+/// `ceil(frac · |candidates|)`, clamped to `[1, |candidates|]`; at
+/// `frac >= 1` the candidates are returned verbatim without touching
+/// any RNG. The result is sorted ascending, so downstream iteration
+/// stays in member order. Callers go through [`round_participants`],
+/// which owns the seed discipline.
+pub(crate) fn sample_participants(
+    candidates: &[usize],
+    always: Option<usize>,
+    frac: f64,
+    seed: u64,
+) -> Vec<usize> {
+    let n = candidates.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let k = ((frac * n as f64).ceil() as usize).clamp(1, n);
+    if k >= n {
+        return candidates.to_vec();
+    }
+    debug_assert!(
+        always.map_or(true, |a| candidates.contains(&a)),
+        "always-participant not a candidate"
+    );
+    let mut rng = Rng::new(seed);
+    let mut pool: Vec<usize> = match always {
+        Some(a) => candidates.iter().copied().filter(|&c| c != a).collect(),
+        None => candidates.to_vec(),
+    };
+    // partial Fisher–Yates: the first `picks` slots end up a uniform
+    // without-replacement sample
+    let picks = k - usize::from(always.is_some());
+    for i in 0..picks {
+        let j = i + rng.index(pool.len() - i);
+        pool.swap(i, j);
+    }
+    pool.truncate(picks);
+    if let Some(a) = always {
+        pool.push(a);
+    }
+    pool.sort_unstable();
+    pool
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{round_participants, sample_participants};
+    use crate::config::SimConfig;
+
+    #[test]
+    fn round_participants_full_participation_is_identity() {
+        // frac >= 1: candidates back verbatim, no draw — and the same
+        // (round, unit) coordinates always produce the same subset
+        let cfg = SimConfig::default(); // sample_frac = 1.0
+        let alive = vec![2, 4, 6, 8];
+        assert_eq!(
+            round_participants(&cfg, 0x5A_3C1E, 3, 1, alive.clone(), Some(4)),
+            alive
+        );
+        let mut sampled_cfg = SimConfig::default();
+        sampled_cfg.sample_frac = 0.5;
+        let a = round_participants(&sampled_cfg, 0x5A_3C1E, 3, 1, alive.clone(), Some(4));
+        let b = round_participants(&sampled_cfg, 0x5A_3C1E, 3, 1, alive.clone(), Some(4));
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 2); // ceil(0.5 * 4)
+        assert!(a.contains(&4));
+        // a different unit draws an independent stream
+        let c = round_participants(&sampled_cfg, 0x5A_3C1E, 3, 2, alive, Some(4));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_sorted_and_driver_inclusive() {
+        let alive: Vec<usize> = (0..20).collect();
+        let a = sample_participants(&alive, Some(7), 0.3, 99);
+        let b = sample_participants(&alive, Some(7), 0.3, 99);
+        assert_eq!(a, b); // pure function of (candidates, frac, seed)
+        assert_eq!(a.len(), 6); // ceil(0.3 * 20)
+        assert!(a.contains(&7), "driver always participates: {a:?}");
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "sorted: {a:?}");
+        let c = sample_participants(&alive, Some(7), 0.3, 100);
+        assert_ne!(a, c, "distinct seeds draw distinct subsets");
+    }
+
+    #[test]
+    fn sampling_edge_cases() {
+        let alive: Vec<usize> = vec![3, 5, 9];
+        // frac >= 1: candidates verbatim, no RNG touched
+        assert_eq!(sample_participants(&alive, Some(5), 1.0, 1), alive);
+        assert_eq!(sample_participants(&alive, None, 1.0, 1), alive);
+        // tiny frac still yields at least one participant (the driver)
+        let one = sample_participants(&alive, Some(9), 0.01, 2);
+        assert_eq!(one, vec![9]);
+        // driver-less units get >= 1 sampled node
+        assert_eq!(sample_participants(&alive, None, 0.01, 2).len(), 1);
+        // empty candidate set stays empty
+        assert!(sample_participants(&[], None, 0.5, 3).is_empty());
     }
 }

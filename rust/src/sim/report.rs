@@ -7,7 +7,7 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use crate::data::{batches, Dataset, PaddedBatch};
+use crate::data::{with_scratch, DatasetView, PaddedBatch};
 use crate::metrics::ModelMetrics;
 use crate::netsim::{KindTotals, MsgKind};
 use crate::runtime::compute::ModelCompute;
@@ -31,6 +31,28 @@ pub fn eval_model(
     Ok(ModelMetrics::from_scores(&scores, labels))
 }
 
+/// [`eval_model`] over a shared-dataset view: padded batches are
+/// assembled chunk by chunk into this worker's scratch buffer instead
+/// of being materialized — identical scores, O(B·F) memory. An empty
+/// view yields the all-zero metrics ([`ModelMetrics`] guards every
+/// division), so zero-row clusters report sanely instead of panicking.
+pub fn eval_view(
+    compute: &dyn ModelCompute,
+    eval: &DatasetView,
+    params: &[f32],
+) -> Result<ModelMetrics> {
+    let (b, f) = (compute.batch(), compute.features());
+    let mut scores = Vec::with_capacity(eval.n());
+    with_scratch(b, f, |scratch| -> Result<()> {
+        for chunk in 0..eval.batch_count(b) {
+            scores.extend(compute.scores(scratch.fill(eval, chunk), params)?);
+        }
+        Ok(())
+    })?;
+    anyhow::ensure!(scores.len() == eval.n(), "eval scores/labels mismatch");
+    Ok(ModelMetrics::from_scores(&scores, eval.labels()))
+}
+
 /// One [`ClusterReport`] row per node group — the shared report-phase
 /// tail of the static-membership baselines: every group's held-out data
 /// is evaluated against the final global model, with `updates(gid,
@@ -41,14 +63,14 @@ pub(crate) fn group_reports(
     updates: impl Fn(usize, &[usize]) -> u64,
     params: &[f32],
 ) -> Result<Vec<ClusterReport>> {
-    let (b, f) = (sim.compute.batch(), sim.compute.features());
     let mut out = Vec::with_capacity(groups.len());
     for (gid, group) in groups.iter().enumerate() {
-        let tests: Vec<&Dataset> = group.iter().map(|&id| &sim.nodes[id].test).collect();
-        let eval = Dataset::concat(&tests);
-        let labels = eval.y.clone();
-        let eb = batches(&eval, b, f);
-        let m = eval_model(sim.compute, &eb, &labels, params)?;
+        let tests: Vec<&DatasetView> = group.iter().map(|&id| &sim.nodes[id].test).collect();
+        let m = if tests.is_empty() {
+            ModelMetrics::default() // empty group: nothing to evaluate
+        } else {
+            eval_view(sim.compute, &DatasetView::concat(&tests), params)?
+        };
         out.push(ClusterReport {
             cluster: gid,
             n_nodes: group.len(),

@@ -47,12 +47,16 @@ pub fn minmax_scale_one(x: f64, lo: f64, hi: f64, a: f64, b: f64) -> f64 {
 }
 
 /// Percentile with linear interpolation, `q` in `[0, 100]`.
+///
+/// Non-finite samples (NaN / ±∞ — e.g. a latency vector polluted by a
+/// dead round's `NaN` mean) are ignored; returns NaN when no finite
+/// sample remains. Sorting uses `total_cmp`, so this never panics.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    if xs.is_empty() {
+    let mut s: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if s.is_empty() {
         return f64::NAN;
     }
-    let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     let rank = q / 100.0 * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -186,6 +190,16 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_survives_nan_bearing_latency_vector() {
+        // regression: a NaN sample used to panic the partial_cmp sort
+        let lat = [12.0, f64::NAN, 4.0, f64::INFINITY, 8.0, f64::NEG_INFINITY];
+        assert_eq!(percentile(&lat, 0.0), 4.0);
+        assert_eq!(percentile(&lat, 50.0), 8.0);
+        assert_eq!(percentile(&lat, 100.0), 12.0);
+        assert!(percentile(&[f64::NAN, f64::NAN], 50.0).is_nan());
     }
 
     #[test]

@@ -185,6 +185,92 @@ fn bench_matrix_writes_one_row_per_cell() {
 }
 
 #[test]
+fn scenario_run_with_sampling_has_thread_parity() {
+    // --sample end to end through the real binary: the printed
+    // fingerprint hash must match between --threads 1 and --threads 4
+    let dir = temp_dir("sample");
+    let toml = dir.join("scenario.toml");
+    let out = run(&["scenario", "gen", "--out", toml.to_str().unwrap()]);
+    assert!(out.status.success(), "gen failed: {out:?}");
+
+    let fingerprint = |threads: &str| -> String {
+        let out = run(&[
+            "scenario",
+            "run",
+            "--file",
+            toml.to_str().unwrap(),
+            "--sample",
+            "0.5",
+            "--threads",
+            threads,
+        ]);
+        assert!(out.status.success(), "--sample 0.5 --threads {threads}: {out:?}");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        stdout
+            .lines()
+            .find(|l| l.starts_with("fingerprint"))
+            .unwrap_or_else(|| panic!("no fingerprint line:\n{stdout}"))
+            .to_string()
+    };
+    assert_eq!(
+        fingerprint("1"),
+        fingerprint("4"),
+        "--sample diverged between threads 1 and 4"
+    );
+    // out-of-range fractions fail fast with a helpful message
+    let out = run(&[
+        "scenario",
+        "run",
+        "--file",
+        toml.to_str().unwrap(),
+        "--sample",
+        "1.5",
+    ]);
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("sample_frac"), "unhelpful error: {stderr}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fleet_bench_sampling_writes_csv_with_sample_and_rss_columns() {
+    let dir = temp_dir("fleet_sample");
+    let csv = dir.join("fleet.csv");
+    let out = run(&[
+        "fleet",
+        "bench",
+        "--nodes",
+        "60",
+        "--clusters",
+        "6",
+        "--rounds",
+        "3",
+        "--preset",
+        "fleet-1k",
+        "--threads",
+        "2",
+        "--sample",
+        "0.2",
+        "--csv",
+        csv.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "sampled fleet bench failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("identical"), "{stdout}");
+    assert!(stdout.contains("sampling"), "no sampling line:\n{stdout}");
+    let text = std::fs::read_to_string(&csv).expect("csv written");
+    let header = text.lines().next().unwrap();
+    assert!(header.contains("sample_frac"), "{header}");
+    assert!(header.contains("peak_rss_mb"), "{header}");
+    let row = text.lines().nth(1).unwrap();
+    let cols: Vec<&str> = row.split(',').collect();
+    assert_eq!(cols.len(), header.split(',').count(), "{row}");
+    // sample_frac lands in its column (third from the end)
+    assert_eq!(cols[cols.len() - 3], "0.2", "{row}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn scenario_run_without_file_exits_nonzero() {
     let out = run(&["scenario", "run"]);
     assert!(!out.status.success());

@@ -58,6 +58,20 @@ const CHURN_SCENARIO: &str = "\
 
 fn cases() -> Vec<Case> {
     let case = |name, cfg, algo, scenario| Case { name, cfg, algo, scenario };
+    let sampled = |nodes, clusters, rounds, seed| {
+        let mut cfg = base_cfg(nodes, clusters, rounds, seed);
+        cfg.sample_frac = 0.5;
+        cfg.normalized()
+    };
+    let sample_one = {
+        // sample_frac set explicitly to 1.0: must pin the SAME hash as
+        // scale-iid-20x4 (the pre-sampling fingerprint) forever — the
+        // byte-compatibility contract of the sampling axis, also
+        // asserted in-test below
+        let mut cfg = base_cfg(20, 4, 8, 5);
+        cfg.sample_frac = 1.0;
+        cfg.normalized()
+    };
     let skew_quantized = {
         let mut cfg = base_cfg(24, 4, 8, 11);
         cfg.partition = Partition::LabelSkew(0.4);
@@ -108,6 +122,18 @@ fn cases() -> Vec<Case> {
             base_cfg(30, 5, 10, 19),
             AlgoKind::Hfl { edge_period: 2 },
             Some(CHURN_SCENARIO),
+        ),
+        // partial participation (PR 5): sample_frac = 1.0 must reproduce
+        // the pre-sampling pins byte-for-byte; 0.5 pins the sampled path
+        // for every algorithm
+        case("scale-sample-1p0", sample_one, AlgoKind::Scale, None),
+        case("scale-sample-0p5", sampled(20, 4, 8, 5), AlgoKind::Scale, None),
+        case("fedavg-sample-0p5", sampled(20, 4, 6, 5), AlgoKind::FedAvg, None),
+        case(
+            "hfl-sample-0p5-period3",
+            sampled(20, 4, 8, 9),
+            AlgoKind::Hfl { edge_period: 3 },
+            None,
         ),
     ]
 }
@@ -164,14 +190,21 @@ fn write_golden(entries: &BTreeMap<String, String>) {
 #[test]
 fn golden_fingerprints_pinned_and_thread_invariant() {
     let bless = matches!(std::env::var("SCALE_BLESS").as_deref(), Ok("1"));
+    // the arming guard (CI sets this): a golden file with zero pinned
+    // entries is a hard failure instead of a silent bootstrap, so the
+    // suite can never ship unprimed without CI going red
+    let require_pinned =
+        matches!(std::env::var("SCALE_REQUIRE_PINNED").as_deref(), Ok("1"));
     let par_threads: usize = std::env::var("SCALE_TEST_THREADS")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(4);
 
     let mut golden = read_golden();
+    let armed_at_start = !golden.is_empty();
     let mut mismatches: Vec<String> = Vec::new();
     let mut primed = false;
+    let mut computed: BTreeMap<&'static str, String> = BTreeMap::new();
 
     for case in cases() {
         let name = case.name;
@@ -183,6 +216,7 @@ fn golden_fingerprints_pinned_and_thread_invariant() {
                 "{name}: fingerprint diverged between threads 1 and {par_threads}"
             );
         }
+        computed.insert(name, hash_seq.clone());
         match golden.get(name) {
             Some(stored) if *stored == hash_seq => {}
             Some(stored) => {
@@ -211,6 +245,14 @@ fn golden_fingerprints_pinned_and_thread_invariant() {
         }
     }
 
+    // sample_frac = 1.0 is the pre-sampling engine byte-for-byte: the
+    // explicit-1.0 case must hash identically to the default-config case
+    // whatever the pins say (this holds even before the file is armed)
+    assert_eq!(
+        computed["scale-sample-1p0"], computed["scale-iid-20x4"],
+        "sample_frac = 1.0 must not move the fingerprint"
+    );
+
     if primed {
         write_golden(&golden);
     }
@@ -219,5 +261,12 @@ fn golden_fingerprints_pinned_and_thread_invariant() {
         "golden fingerprints changed (rerun with SCALE_BLESS=1 only if the \
          change is intentional):\n{}",
         mismatches.join("\n")
+    );
+    assert!(
+        armed_at_start || !require_pinned,
+        "tests/golden/fingerprints.txt contained NO pinned entries — the \
+         regression gate was unarmed. The suite has now written a freshly \
+         primed file (or run `bash tools/arm_goldens.sh`); commit it to arm \
+         the gate, then re-run."
     );
 }

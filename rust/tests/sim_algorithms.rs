@@ -448,6 +448,112 @@ fn run_algo_axis_matches_the_dedicated_wrappers() {
 }
 
 #[test]
+fn full_participation_sampling_is_byte_identical_to_default() {
+    // sample_frac = 1.0 must take the pre-sampling path exactly: no RNG
+    // draws, no message reordering — fingerprints match the default
+    // config byte for byte, for every algorithm
+    let compute = native();
+    for algo in AlgoKind::all() {
+        let fp = |frac: Option<f64>| {
+            let mut cfg = small_cfg();
+            if let Some(f) = frac {
+                cfg.sample_frac = f;
+            }
+            let mut sim = Simulation::new(cfg, &compute).unwrap();
+            sim.run_algo(algo, &Scenario::none()).unwrap().fingerprint()
+        };
+        assert_eq!(
+            fp(Some(1.0)),
+            fp(None),
+            "{}: sample_frac=1.0 moved the fingerprint",
+            algo.label()
+        );
+    }
+}
+
+#[test]
+fn sampled_rounds_are_thread_invariant_and_rerun_stable() {
+    // the sampling determinism contract: with sample_frac < 1 the drawn
+    // subsets derive from (seed, round, unit), so fingerprints are
+    // identical for --threads 1 vs N and stable across re-runs
+    let compute = native();
+    for algo in AlgoKind::all() {
+        let run = |threads: usize| {
+            let mut cfg = small_cfg();
+            cfg.sample_frac = 0.4;
+            cfg.rounds = 6;
+            cfg.threads = threads;
+            let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
+            sim.run_algo(algo, &Scenario::none()).unwrap().fingerprint()
+        };
+        let seq = run(1);
+        assert_eq!(seq, run(4), "{}: sampled run diverged across threads", algo.label());
+        assert_eq!(seq, run(1), "{}: sampled set unstable across re-runs", algo.label());
+    }
+}
+
+#[test]
+fn sampling_under_churn_keeps_thread_parity() {
+    let scenario = Scenario::from_toml(
+        "[regulation]\nmin_live_frac = 0.7\ncooldown = 1\n\
+         [[event]]\nround = 1\nkind = \"leave\"\nfrac = 0.3\nduration = 2\n",
+    )
+    .unwrap();
+    let compute = native();
+    let fp = |threads: usize| {
+        let mut cfg = small_cfg();
+        cfg.sample_frac = 0.5;
+        cfg.rounds = 8;
+        cfg.threads = threads;
+        let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
+        sim.run_scale_scenario(&scenario).unwrap().fingerprint()
+    };
+    assert_eq!(fp(1), fp(4));
+}
+
+#[test]
+fn sampling_cuts_param_traffic_but_keeps_uploads_flowing() {
+    let compute = native();
+    let run = |frac: f64| {
+        let mut cfg = small_cfg();
+        cfg.sample_frac = frac;
+        let mut sim = Simulation::new(cfg, &compute).unwrap();
+        sim.run_scale().unwrap()
+    };
+    let full = run(1.0);
+    let sampled = run(0.3);
+    // non-sampled nodes skip the whole parameter path...
+    assert!(
+        sampled.param_path_bytes() < full.param_path_bytes() / 2,
+        "sampled {} vs full {}",
+        sampled.param_path_bytes(),
+        full.param_path_bytes()
+    );
+    // ...but keep heartbeating,
+    assert_eq!(
+        sampled.ledger[&MsgKind::Heartbeat].count,
+        full.ledger[&MsgKind::Heartbeat].count
+    );
+    // and the drivers (always sampled) keep the global model moving
+    assert!(sampled.total_updates() >= sampled.clusters.len() as u64);
+    assert!(sampled.final_metrics.accuracy > 0.6, "{:?}", sampled.final_metrics);
+}
+
+#[test]
+fn fedavg_sampling_counts_participants_not_fleet() {
+    let compute = native();
+    let mut cfg = small_cfg();
+    cfg.sample_frac = 0.25;
+    let mut sim = Simulation::new(cfg, &compute).unwrap();
+    let r = sim.run_fedavg(None).unwrap();
+    // ceil(0.25 * shard) participants per round, not all 20 nodes
+    let per_round = r.rounds.iter().map(|x| x.updates).max().unwrap();
+    assert!(per_round < 20, "per-round updates {per_round}");
+    assert!(per_round >= 1);
+    assert_eq!(r.ledger[&MsgKind::GlobalUpdate].count, r.total_updates());
+}
+
+#[test]
 fn threads_without_sync_backend_error_helpfully() {
     let compute = native();
     let mut cfg = small_cfg();

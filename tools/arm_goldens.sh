@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# arm_goldens.sh — prime and verify the golden-fingerprint pins.
+#
+# The golden suite (rust/tests/golden_fingerprints.rs) is the repo's
+# central regression gate, but it can only be primed in an environment
+# with a Rust toolchain. This script is the one-command arming flow for
+# the first such environment:
+#   1. bless: run every case and (re)write tests/golden/fingerprints.txt
+#   2. verify: re-run against the freshly written pins (threads 1 vs N
+#      parity included)
+#   3. sanity: refuse to finish unless the file now carries >= 1 pin
+#
+# Commit the resulting rust/tests/golden/fingerprints.txt to arm CI.
+
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "arm_goldens: blessing (SCALE_BLESS=1)..."
+SCALE_BLESS=1 cargo test --release --test golden_fingerprints -- --nocapture
+
+echo "arm_goldens: verifying against the fresh pins..."
+SCALE_REQUIRE_PINNED=1 cargo test --release --test golden_fingerprints
+
+if ! grep -qE '^[a-z0-9-]+ *= *[0-9a-f]{16}$' tests/golden/fingerprints.txt; then
+    echo "arm_goldens: FAILED — no pins were written" >&2
+    exit 1
+fi
+n=$(grep -cE '^[a-z0-9-]+ *= *[0-9a-f]{16}$' tests/golden/fingerprints.txt)
+echo "arm_goldens: OK — $n pin(s) in rust/tests/golden/fingerprints.txt; commit it."
