@@ -69,6 +69,8 @@ pub fn driver_consensus(
 /// Equivalent (to float rounding) to `decode()`-ing every contribution
 /// and taking the mean; errors on empty input or mismatched dimensions.
 pub fn dequantize_accumulate(contributions: &[QuantVec]) -> Result<Vec<f32>> {
+    let _s = crate::obs::span("dequantize_accumulate");
+    crate::obs::counter_add(crate::obs::Counter::DequantAccumulates, 1);
     anyhow::ensure!(!contributions.is_empty(), "accumulate over no contributions");
     let dim = contributions[0].codes.len();
     let mut acc = vec![0.0f64; dim];

@@ -4,9 +4,10 @@
 //! this module directly: warmup + timed iterations with mean / p50 / p95,
 //! plus markdown-ish table printing shared by the paper-table benches.
 
+use std::path::Path;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::config::SimConfig;
 use crate::runtime::compute::NativeSvm;
@@ -14,8 +15,14 @@ use crate::runtime::manifest::ModelKind;
 use crate::scenario::Scenario;
 use crate::sim::report::RunReport;
 use crate::sim::{AlgoKind, Simulation};
+use crate::util::json::Value;
 use crate::util::stats::percentile;
 use crate::wire::WireConfig;
+
+// The process-memory probe lives in `obs` now (it is the same
+// high-water mark the telemetry registry publishes as a gauge); keep
+// the historical `bench::` paths alive for the bench binaries.
+pub use crate::obs::{peak_rss_bytes, reset_peak_rss};
 
 /// Timing summary over all measured iterations.
 #[derive(Clone, Copy, Debug)]
@@ -80,35 +87,6 @@ pub struct FleetMeasurement {
     pub peak_rss_bytes: u64,
     /// The parallel run's report.
     pub report: RunReport,
-}
-
-/// Best-effort reset of the process peak-RSS high-water mark (Linux:
-/// code `5` to `/proc/self/clear_refs`), so one measurement's peak
-/// doesn't inherit an earlier, hungrier run in the same process.
-/// Silently a no-op where unsupported.
-pub fn reset_peak_rss() {
-    let _ = std::fs::write("/proc/self/clear_refs", "5");
-}
-
-/// Peak resident-set size of this process in bytes (Linux `VmHWM`; 0
-/// when unavailable). A high-water mark since process start or the
-/// last [`reset_peak_rss`] — `measure_fleet` resets it per
-/// measurement, so CSV rows reflect their own run.
-pub fn peak_rss_bytes() -> u64 {
-    if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
-        for line in status.lines() {
-            if let Some(rest) = line.strip_prefix("VmHWM:") {
-                let kb: u64 = rest
-                    .trim()
-                    .trim_end_matches("kB")
-                    .trim()
-                    .parse()
-                    .unwrap_or(0);
-                return kb * 1024;
-            }
-        }
-    }
-    0
 }
 
 impl FleetMeasurement {
@@ -195,9 +173,6 @@ pub fn measure_fleet_with_ref(
         Ok((t0.elapsed().as_secs_f64(), report))
     };
     let (seq_s, seq_report) = run_at(cfg, 1)?;
-    let (par_s, report) = run_at(cfg, threads)?;
-    let identical = seq_report.fingerprint() == report.fingerprint();
-    let param_bytes = report.param_path_bytes();
     let ref_param_bytes = if cfg.wire.is_passthrough() {
         None
     } else if reference.is_some() {
@@ -208,6 +183,14 @@ pub fn measure_fleet_with_ref(
         rc.quantize_exchange = false;
         Some(run_at(&rc, threads)?.1.param_path_bytes())
     };
+    // the timed parallel run goes last, after clearing any telemetry
+    // accumulated by the warm-up runs above: when the caller snapshots
+    // the registry (`fleet bench --json`), per-phase totals and worker
+    // busy-time describe exactly one run of `cfg` at `threads`
+    crate::obs::reset_metrics();
+    let (par_s, report) = run_at(cfg, threads)?;
+    let identical = seq_report.fingerprint() == report.fingerprint();
+    let param_bytes = report.param_path_bytes();
     Ok(FleetMeasurement {
         threads,
         seq_s,
@@ -286,6 +269,62 @@ pub fn run_matrix(
         }
     }
     Ok(out)
+}
+
+/// One `BENCH_scale.json` trajectory entry for a fleet measurement:
+/// the committed perf record (`scale fleet bench --json`). Per-phase
+/// wall-times come from the live telemetry registry, so call this
+/// before [`crate::obs::finish`] drains it.
+pub fn bench_json_entry(
+    preset: &str,
+    cfg: &SimConfig,
+    algo: AlgoKind,
+    m: &FleetMeasurement,
+) -> Value {
+    let snap = crate::obs::snapshot();
+    let par_s = m.par_s.max(1e-9);
+    let node_steps =
+        cfg.rounds as f64 * (cfg.n_nodes as f64 * cfg.sample_frac).round().max(1.0);
+    let mut e = Value::obj();
+    e.set("preset", Value::Str(preset.to_string()));
+    e.set("algo", Value::Str(algo.label().to_string()));
+    e.set("wire", Value::Str(cfg.wire.label()));
+    e.set("nodes", Value::Num(cfg.n_nodes as f64));
+    e.set("clusters", Value::Num(cfg.n_clusters as f64));
+    e.set("rounds", Value::Num(cfg.rounds as f64));
+    e.set("threads", Value::Num(m.threads as f64));
+    e.set("seq_s", Value::Num(m.seq_s));
+    e.set("par_s", Value::Num(m.par_s));
+    e.set("rounds_per_sec", Value::Num(cfg.rounds as f64 / par_s));
+    e.set("node_steps_per_sec", Value::Num(node_steps / par_s));
+    e.set("per_phase_ms", snap.phases_ms_json());
+    e.set("peak_rss_bytes", Value::Num(m.peak_rss_bytes as f64));
+    e.set("fingerprint", Value::Str(m.report.fingerprint_hash()));
+    e.set("measured", Value::Bool(true));
+    e
+}
+
+/// Append `entry` to the perf-trajectory file (`{"schema":1,"entries":
+/// [...]}`), creating it when absent. Entries accumulate — the file is
+/// the committed history `tools/check_bench_json.sh` validates in CI.
+pub fn append_bench_json(path: &Path, entry: Value) -> Result<()> {
+    let mut doc = match std::fs::read_to_string(path) {
+        Ok(text) => crate::util::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: bad JSON at byte {}: {}", path.display(), e.offset, e.msg))?,
+        Err(_) => {
+            let mut d = Value::obj();
+            d.set("schema", Value::Num(1.0));
+            d.set("entries", Value::Arr(Vec::new()));
+            d
+        }
+    };
+    let mut entries: Vec<Value> =
+        doc.get("entries").and_then(|v| v.as_arr()).unwrap_or(&[]).to_vec();
+    entries.push(entry);
+    doc.set("entries", Value::Arr(entries));
+    std::fs::write(path, doc.to_string_pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
 }
 
 /// Print one named measurement row.

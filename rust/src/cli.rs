@@ -1,12 +1,21 @@
-//! Minimal argument parser (offline stand-in for `clap`).
+//! Minimal argument parser (offline stand-in for `clap`), plus the
+//! shared flag→`SimConfig` builders every round-running subcommand
+//! (`run`, `scenario`, `fleet bench`, `bench matrix`, `profile`) feeds
+//! its arguments through.
 //!
 //! Grammar: `scale <subcommand> [--flag value] [--switch] [positional…]`.
 //! Flags may be given as `--flag value` or `--flag=value`; unknown flags
 //! are an error (catches typos), and every flag access is typed.
 
 use std::collections::BTreeMap;
+use std::path::Path;
 
 use anyhow::{bail, Context, Result};
+
+use crate::config::{Partition, SimConfig};
+use crate::runtime::manifest::ModelKind;
+use crate::sim::AlgoKind;
+use crate::topology::Topology;
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
@@ -94,6 +103,122 @@ impl Args {
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
+}
+
+/// Build a SimConfig from `--config` / `--preset` + flag overrides,
+/// falling back to `default_base` when neither source is given.
+pub fn config_from_base(
+    args: &Args,
+    default_base: impl FnOnce() -> Result<SimConfig>,
+) -> Result<SimConfig> {
+    let base = match (args.get("config"), args.get("preset")) {
+        (Some(_), Some(_)) => {
+            bail!("--config and --preset are mutually exclusive (pick one base)")
+        }
+        (Some(path), None) => SimConfig::load(Path::new(path))?,
+        (None, Some(name)) => SimConfig::preset(name)?,
+        (None, None) => default_base()?,
+    };
+    config_overrides(args, base)
+}
+
+/// Build a SimConfig from `--config` / `--preset` + flag overrides.
+pub fn config_from(args: &Args) -> Result<SimConfig> {
+    config_from_base(args, || Ok(SimConfig::default()))
+}
+
+/// Apply command-line overrides on top of `cfg`.
+pub fn config_overrides(args: &Args, mut cfg: SimConfig) -> Result<SimConfig> {
+    if let Some(n) = args.get_usize("nodes")? {
+        cfg.n_nodes = n;
+    }
+    if let Some(k) = args.get_usize("clusters")? {
+        cfg.n_clusters = k;
+    }
+    if let Some(r) = args.get_usize("rounds")? {
+        cfg.rounds = r;
+    }
+    if let Some(e) = args.get_usize("epochs")? {
+        cfg.local_epochs = e;
+    }
+    if let Some(s) = args.get_u64("seed")? {
+        cfg.seed = s;
+    }
+    if let Some(m) = args.get("model") {
+        cfg.model = ModelKind::parse(m)?;
+    }
+    if let Some(d) = args.get_f64("min-delta")? {
+        cfg.checkpoint_min_delta = d;
+    }
+    if let Some(p) = args.get_f64("failure-prob")? {
+        cfg.node_failure_prob = p;
+    }
+    if let Some(h) = args.get_f64("heterogeneity")? {
+        cfg.fleet.heterogeneity = h;
+    }
+    if let Some(t) = args.get_usize("threads")? {
+        cfg.threads = t;
+    }
+    if let Some(fr) = args.get_f64("sample")? {
+        cfg.sample_frac = fr;
+    }
+    if let Some(x) = args.get_f64("lr")? {
+        cfg.lr = x as f32;
+    }
+    if let Some(x) = args.get_f64("reg")? {
+        cfg.reg = x as f32;
+    }
+    if let Some(p) = args.get("partition") {
+        cfg.partition = match p {
+            "iid" => Partition::Iid,
+            skew if skew.starts_with("skew:") => {
+                let alpha: f64 = skew[5..].parse().context("skew alpha")?;
+                Partition::LabelSkew(alpha)
+            }
+            other => bail!("unknown partition '{other}'"),
+        };
+    }
+    // wire protocol: preset first, then individual overrides
+    if let Some(w) = args.get("wire") {
+        cfg.wire = crate::wire::WireConfig::preset(w)?;
+    }
+    if let Some(c) = args.get("codec") {
+        cfg.wire.codec = crate::wire::CodecKind::parse(c)?;
+    }
+    if args.has("delta") {
+        cfg.wire.delta = true;
+    }
+    if let Some(f) = args.get_f64("topk")? {
+        cfg.wire.topk = Some(f);
+    }
+    if args.has("quantize") {
+        cfg.quantize_exchange = true;
+    }
+    if args.has("secagg") {
+        cfg.secure_aggregation = true;
+    }
+    if let Some(t) = args.get("topology") {
+        cfg.topology = match t {
+            "ring" => Topology::Ring,
+            "full" => Topology::Full,
+            k if k.starts_with("k:") => Topology::KRegular(k[2..].parse()?),
+            k if k.starts_with("random:") => Topology::RandomK(k[7..].parse()?),
+            other => bail!("unknown topology '{other}'"),
+        };
+    }
+    let cfg = cfg.normalized();
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Resolve the unified `--algo` axis (with `--edge-period` folded into
+/// the HFL variant).
+pub fn algo_from(args: &Args) -> Result<AlgoKind> {
+    let kind = AlgoKind::parse(args.get_or("algo", "scale"))?;
+    Ok(match args.get_usize("edge-period")? {
+        Some(p) => kind.with_edge_period(p),
+        None => kind,
+    })
 }
 
 #[cfg(test)]

@@ -65,6 +65,7 @@ pub mod scenario;
 pub mod sim;
 pub mod cli;
 pub mod bench;
+pub mod obs;
 pub mod quant;
 pub mod secagg;
 pub mod trace;

@@ -5,6 +5,7 @@
 //! scale scenario     event-driven scenarios: run / sweep / gen
 //! scale fleet bench  cluster-parallel speedup + determinism check
 //! scale bench matrix all algorithms × wire presets, one CSV schema
+//! scale profile      run a preset under telemetry, print the phase table
 //! scale cluster-info run cluster formation only and print the clusters
 //! scale gen-config   write a default config JSON to edit
 //! scale artifacts    inspect the AOT artifact manifest (pjrt builds)
@@ -35,8 +36,8 @@ use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
 
-use scale_fl::cli::{Args, Spec};
-use scale_fl::config::{Partition, SimConfig};
+use scale_fl::cli::{self, Args, Spec};
+use scale_fl::config::SimConfig;
 use scale_fl::runtime::compute::{ModelCompute, NativeSvm};
 #[cfg(feature = "pjrt")]
 use scale_fl::runtime::compute::PjrtModel;
@@ -45,7 +46,6 @@ use scale_fl::runtime::manifest::ModelKind;
 use scale_fl::runtime::Runtime;
 use scale_fl::scenario::{self, sweep, Scenario};
 use scale_fl::sim::{AlgoKind, Simulation};
-use scale_fl::topology::Topology;
 
 const RUN_SPEC: Spec = Spec {
     flags: &[
@@ -53,6 +53,7 @@ const RUN_SPEC: Spec = Spec {
         "clusters", "rounds", "epochs", "seed", "partition", "model", "min-delta",
         "failure-prob", "topology", "heterogeneity", "out", "lr", "reg",
         "trace-dir", "edge-period", "threads", "sample", "wire", "codec", "topk",
+        "trace-out", "metrics-out",
     ],
     switches: &["table1", "fig2", "quiet", "rounds-trace", "quantize", "secagg", "delta"],
 };
@@ -63,7 +64,7 @@ const SCENARIO_SPEC: Spec = Spec {
         "nodes", "clusters", "rounds", "epochs", "seed", "partition", "model",
         "min-delta", "failure-prob", "topology", "heterogeneity", "out", "lr",
         "reg", "trace-dir", "seeds", "base-seed", "threads", "sample", "wire",
-        "codec", "topk",
+        "codec", "topk", "trace-out", "metrics-out",
     ],
     switches: &[
         "quiet", "rounds-trace", "sequential", "verify", "quantize", "secagg", "delta",
@@ -75,7 +76,7 @@ const FLEET_SPEC: Spec = Spec {
         "config", "preset", "algo", "edge-period", "nodes", "clusters", "rounds",
         "epochs", "seed", "partition", "model", "min-delta", "failure-prob",
         "topology", "heterogeneity", "lr", "reg", "threads", "sample", "csv",
-        "out", "wire", "codec", "topk",
+        "out", "wire", "codec", "topk", "trace-out", "metrics-out", "json",
     ],
     switches: &["quiet", "quantize", "secagg", "delta"],
 };
@@ -116,6 +117,10 @@ fn dispatch(argv: &[String]) -> Result<()> {
         Some("scenario") => cmd_scenario(&Args::parse(argv, &SCENARIO_SPEC)?),
         Some("fleet") => cmd_fleet(&Args::parse(argv, &FLEET_SPEC)?),
         Some("bench") => cmd_bench(&Args::parse(argv, &MATRIX_SPEC)?),
+        Some("profile") => scale_fl::obs::profile::cmd_profile(&Args::parse(
+            argv,
+            &scale_fl::obs::profile::PROFILE_SPEC,
+        )?),
         Some("cluster-info") => cmd_cluster_info(&Args::parse(argv, &INFO_SPEC)?),
         Some("gen-config") => cmd_gen_config(&Args::parse(argv, &GEN_SPEC)?),
         Some("artifacts") => cmd_artifacts(&Args::parse(argv, &ART_SPEC)?),
@@ -129,110 +134,28 @@ fn dispatch(argv: &[String]) -> Result<()> {
 
 const HELP: &str = include_str!("help.txt");
 
-/// Build a SimConfig from `--config` / `--preset` + flag overrides,
-/// falling back to `default_base` when neither source is given.
-fn config_from_base(
-    args: &Args,
-    default_base: impl FnOnce() -> Result<SimConfig>,
-) -> Result<SimConfig> {
-    let base = match (args.get("config"), args.get("preset")) {
-        (Some(_), Some(_)) => {
-            bail!("--config and --preset are mutually exclusive (pick one base)")
+/// Install telemetry from the shared `--trace-out` / `--metrics-out`
+/// flags; `force_on` enables collection even without a sink flag (the
+/// `--json` bench emitter needs per-phase totals).
+fn obs_install(args: &Args, force_on: bool) -> Result<()> {
+    let mut ocfg =
+        scale_fl::obs::ObsConfig::from_flags(args.get("trace-out"), args.get("metrics-out"));
+    ocfg.enabled |= force_on;
+    scale_fl::obs::install(&ocfg)
+}
+
+/// Flush + close the telemetry sinks and confirm where they went.
+fn obs_finish(args: &Args, quiet: bool) -> Result<()> {
+    scale_fl::obs::finish()?;
+    if !quiet {
+        if let Some(p) = args.get("trace-out") {
+            println!("telemetry trace written to {p}");
         }
-        (Some(path), None) => SimConfig::load(Path::new(path))?,
-        (None, Some(name)) => SimConfig::preset(name)?,
-        (None, None) => default_base()?,
-    };
-    config_overrides(args, base)
-}
-
-/// Build a SimConfig from `--config` / `--preset` + flag overrides.
-fn config_from(args: &Args) -> Result<SimConfig> {
-    config_from_base(args, || Ok(SimConfig::default()))
-}
-
-/// Apply command-line overrides on top of `cfg`.
-fn config_overrides(args: &Args, mut cfg: SimConfig) -> Result<SimConfig> {
-    if let Some(n) = args.get_usize("nodes")? {
-        cfg.n_nodes = n;
+        if let Some(p) = args.get("metrics-out") {
+            println!("metrics dump written to {p}");
+        }
     }
-    if let Some(k) = args.get_usize("clusters")? {
-        cfg.n_clusters = k;
-    }
-    if let Some(r) = args.get_usize("rounds")? {
-        cfg.rounds = r;
-    }
-    if let Some(e) = args.get_usize("epochs")? {
-        cfg.local_epochs = e;
-    }
-    if let Some(s) = args.get_u64("seed")? {
-        cfg.seed = s;
-    }
-    if let Some(m) = args.get("model") {
-        cfg.model = ModelKind::parse(m)?;
-    }
-    if let Some(d) = args.get_f64("min-delta")? {
-        cfg.checkpoint_min_delta = d;
-    }
-    if let Some(p) = args.get_f64("failure-prob")? {
-        cfg.node_failure_prob = p;
-    }
-    if let Some(h) = args.get_f64("heterogeneity")? {
-        cfg.fleet.heterogeneity = h;
-    }
-    if let Some(t) = args.get_usize("threads")? {
-        cfg.threads = t;
-    }
-    if let Some(fr) = args.get_f64("sample")? {
-        cfg.sample_frac = fr;
-    }
-    if let Some(x) = args.get_f64("lr")? {
-        cfg.lr = x as f32;
-    }
-    if let Some(x) = args.get_f64("reg")? {
-        cfg.reg = x as f32;
-    }
-    if let Some(p) = args.get("partition") {
-        cfg.partition = match p {
-            "iid" => Partition::Iid,
-            skew if skew.starts_with("skew:") => {
-                let alpha: f64 = skew[5..].parse().context("skew alpha")?;
-                Partition::LabelSkew(alpha)
-            }
-            other => bail!("unknown partition '{other}'"),
-        };
-    }
-    // wire protocol: preset first, then individual overrides
-    if let Some(w) = args.get("wire") {
-        cfg.wire = scale_fl::wire::WireConfig::preset(w)?;
-    }
-    if let Some(c) = args.get("codec") {
-        cfg.wire.codec = scale_fl::wire::CodecKind::parse(c)?;
-    }
-    if args.has("delta") {
-        cfg.wire.delta = true;
-    }
-    if let Some(f) = args.get_f64("topk")? {
-        cfg.wire.topk = Some(f);
-    }
-    if args.has("quantize") {
-        cfg.quantize_exchange = true;
-    }
-    if args.has("secagg") {
-        cfg.secure_aggregation = true;
-    }
-    if let Some(t) = args.get("topology") {
-        cfg.topology = match t {
-            "ring" => Topology::Ring,
-            "full" => Topology::Full,
-            k if k.starts_with("k:") => Topology::KRegular(k[2..].parse()?),
-            k if k.starts_with("random:") => Topology::RandomK(k[7..].parse()?),
-            other => bail!("unknown topology '{other}'"),
-        };
-    }
-    let cfg = cfg.normalized();
-    cfg.validate()?;
-    Ok(cfg)
+    Ok(())
 }
 
 /// The chosen compute backend. Native keeps its `Sync` marker so the
@@ -282,19 +205,10 @@ fn backend_pjrt(_args: &Args, _model: ModelKind) -> Result<Box<dyn ModelCompute>
     bail!("this build has no PJRT support (rebuild with `--features pjrt`)")
 }
 
-/// Resolve the unified `--algo` axis (with `--edge-period` folded into
-/// the HFL variant).
-fn algo_from(args: &Args) -> Result<AlgoKind> {
-    let kind = AlgoKind::parse(args.get_or("algo", "scale"))?;
-    Ok(match args.get_usize("edge-period")? {
-        Some(p) => kind.with_edge_period(p),
-        None => kind,
-    })
-}
-
 fn cmd_run(args: &Args) -> Result<()> {
-    let cfg = config_from(args)?;
+    let cfg = cli::config_from(args)?;
     let backend = backend_from(args, &cfg)?;
+    obs_install(args, false)?;
     // --algo is the unified axis; --mode remains a legacy alias
     let mode = args
         .get("algo")
@@ -311,9 +225,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         let mut sim = backend.simulation(cfg.clone())?;
         let report = sim.run_scale()?;
         if !quiet {
-            print_summary(&report);
+            report.print_summary();
             if args.has("rounds-trace") {
-                print_rounds(&report);
+                report.print_rounds();
             }
             if args.has("table1") {
                 println!("\nTable 1 (SCALE):\n{}", report.table1_rows());
@@ -331,10 +245,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         let mut sim = backend.simulation(cfg.clone())?;
         let report = sim.run_hfl(period)?;
         if !quiet {
-            print_summary(&report);
+            report.print_summary();
             println!("edge infra cost : ${:.6}", report.edge_cost_usd);
             if args.has("rounds-trace") {
-                print_rounds(&report);
+                report.print_rounds();
             }
         }
         reports.push(report);
@@ -344,9 +258,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         let grouping = Some(sim.scale_grouping()?);
         let report = sim.run_fedavg(grouping)?;
         if !quiet {
-            print_summary(&report);
+            report.print_summary();
             if args.has("rounds-trace") {
-                print_rounds(&report);
+                report.print_rounds();
             }
             if args.has("table1") {
                 println!("\nTable 1 (FedAvg):\n{}", report.table1_rows());
@@ -383,7 +297,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!("cloud cost     : ${:.6} vs ${:.6}", s.cloud_cost_usd, f.cloud_cost_usd);
     }
 
-    write_outputs(args, &reports, quiet)
+    write_outputs(args, &reports, quiet)?;
+    obs_finish(args, quiet)
 }
 
 fn write_outputs(
@@ -442,15 +357,16 @@ fn scenario_setup(args: &Args) -> Result<(Scenario, SimConfig)> {
         Some(p) => SimConfig::load(Path::new(p))?,
         None => embedded.unwrap_or_default(),
     };
-    let cfg = config_overrides(args, base)?;
+    let cfg = cli::config_overrides(args, base)?;
     scenario.validate(cfg.n_nodes, cfg.fleet.n_metros)?;
     Ok((scenario, cfg))
 }
 
 fn cmd_scenario_run(args: &Args) -> Result<()> {
     let (scenario, cfg) = scenario_setup(args)?;
-    let algo = algo_from(args)?;
+    let algo = cli::algo_from(args)?;
     let backend = backend_from(args, &cfg)?;
+    obs_install(args, false)?;
     let quiet = args.has("quiet");
     if !quiet {
         println!(
@@ -466,7 +382,7 @@ fn cmd_scenario_run(args: &Args) -> Result<()> {
     let mut sim = backend.simulation(cfg)?;
     let report = sim.run_algo(algo, &scenario)?;
     if !quiet {
-        print_summary(&report);
+        report.print_summary();
         println!(
             "re-clusterings  : {}   elections: {}",
             report.total_reclusterings(),
@@ -475,7 +391,7 @@ fn cmd_scenario_run(args: &Args) -> Result<()> {
         // the compact determinism witness: identical for any --threads
         println!("fingerprint     : {}", report.fingerprint_hash());
         if args.has("rounds-trace") {
-            print_rounds(&report);
+            report.print_rounds();
         }
         println!("\nself-regulation timeline:");
         println!("round | events | reclu | elect | live");
@@ -494,12 +410,13 @@ fn cmd_scenario_run(args: &Args) -> Result<()> {
             println!("  round {:>3}: {}", n.round + 1, n.what);
         }
     }
-    write_outputs(args, &[report], quiet)
+    write_outputs(args, &[report], quiet)?;
+    obs_finish(args, quiet)
 }
 
 fn cmd_scenario_sweep(args: &Args) -> Result<()> {
     let (scenario, cfg) = scenario_setup(args)?;
-    let algo = algo_from(args)?;
+    let algo = cli::algo_from(args)?;
     if args.get("backend") == Some("pjrt") {
         bail!("the sweep runner is native-only (PJRT handles are thread-local)");
     }
@@ -590,8 +507,11 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 /// parallel round engine, checked on the real workload.
 fn cmd_fleet_bench(args: &Args) -> Result<()> {
     let defaulted = args.get("config").is_none() && args.get("preset").is_none();
-    let cfg = config_from_base(args, || SimConfig::preset("fleet-4k"))?;
-    let algo = algo_from(args)?;
+    let cfg = cli::config_from_base(args, || SimConfig::preset("fleet-4k"))?;
+    let algo = cli::algo_from(args)?;
+    // the BENCH JSON emitter wants per-phase totals, so collection goes
+    // live even without an explicit sink flag
+    obs_install(args, args.get("json").is_some())?;
     let quiet = args.has("quiet");
     let par_threads = cfg.effective_threads();
     if !quiet {
@@ -650,10 +570,21 @@ fn cmd_fleet_bench(args: &Args) -> Result<()> {
     if let Some(csv) = args.get("csv") {
         append_fleet_csv(csv, &[scale_fl::bench::fleet_csv_row(&cfg, &m, algo)], quiet)?;
     }
+    if let Some(json) = args.get("json") {
+        // snapshot happens inside the entry builder; it must run
+        // before obs_finish disables the registry
+        let preset = args.get_or("preset", if defaulted { "fleet-4k" } else { "custom" });
+        let entry = scale_fl::bench::bench_json_entry(preset, &cfg, algo, &m);
+        scale_fl::bench::append_bench_json(Path::new(json), entry)?;
+        if !quiet {
+            println!("bench entry appended to {json}");
+        }
+    }
     if let Some(out) = args.get("out") {
         std::fs::write(out, m.report.to_json().to_string_pretty())
             .with_context(|| format!("writing {out}"))?;
     }
+    obs_finish(args, quiet)?;
     anyhow::ensure!(
         m.identical,
         "fingerprint diverged between --threads 1 and --threads {par_threads}"
@@ -694,7 +625,7 @@ fn cmd_bench_matrix(args: &Args) -> Result<()> {
 
     let mut bases = Vec::with_capacity(preset_names.len());
     for name in &preset_names {
-        let cfg = config_overrides(args, SimConfig::preset(name)?)?;
+        let cfg = cli::config_overrides(args, SimConfig::preset(name)?)?;
         bases.push((name.clone(), cfg));
     }
     let algos: Vec<AlgoKind> = AlgoKind::all()
@@ -765,43 +696,6 @@ fn append_fleet_csv(csv: &str, rows: &[String], quiet: bool) -> Result<()> {
         println!("{} csv row(s) appended to {csv}", rows.len());
     }
     Ok(())
-}
-
-fn print_summary(r: &scale_fl::sim::report::RunReport) {
-    println!("\n=== {} run ===", r.mode);
-    println!("rounds          : {}", r.rounds.len());
-    println!("global updates  : {}", r.total_updates());
-    println!(
-        "final metrics   : acc {:.3}  prec {:.3}  rec {:.3}  f1 {:.3}  auc {:.3}",
-        r.final_metrics.accuracy,
-        r.final_metrics.precision,
-        r.final_metrics.recall,
-        r.final_metrics.f1,
-        r.final_metrics.roc_auc
-    );
-    println!("total latency   : {:.0} ms (modelled)", r.total_latency_ms());
-    println!(
-        "energy          : {:.1} J comm + {:.3} J compute",
-        r.comm_energy_j, r.compute_energy_j
-    );
-    println!("cloud cost      : ${:.6}", r.cloud_cost_usd);
-    println!("sim wall time   : {:.0} ms", r.wall_ms);
-}
-
-fn print_rounds(r: &scale_fl::sim::report::RunReport) {
-    println!("round | updates | cum | loss     | latency_ms | live | acc");
-    for rec in &r.rounds {
-        println!(
-            "{:>5} | {:>7} | {:>3} | {:<8.5} | {:>10.1} | {:>4} | {}",
-            rec.round + 1,
-            rec.updates,
-            rec.cum_updates,
-            rec.mean_loss,
-            rec.latency_ms,
-            rec.live_nodes,
-            rec.metrics.map_or("-".to_string(), |m| format!("{:.3}", m.accuracy)),
-        );
-    }
 }
 
 fn cmd_cluster_info(args: &Args) -> Result<()> {

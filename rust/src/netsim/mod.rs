@@ -329,6 +329,10 @@ impl Network {
         bytes: u64,
         round: usize,
     ) -> f64 {
+        crate::obs::counter_add(crate::obs::Counter::MessagesSent, 1);
+        if kind != MsgKind::CheckpointLocal {
+            crate::obs::counter_add(crate::obs::Counter::BytesOnWire, bytes);
+        }
         let latency_ms = if kind == MsgKind::CheckpointLocal {
             0.0
         } else {

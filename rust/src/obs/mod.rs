@@ -1,0 +1,762 @@
+//! `obs` — the deterministic telemetry subsystem (DESIGN.md §9).
+//!
+//! Three pieces, all crate-wide:
+//!
+//! * **Phase-scoped spans** — [`span("train")`](span) returns an RAII
+//!   guard; nesting is tracked per thread, so a span opened inside
+//!   another records a dotted path (`"exchange.wire.encode"`). The
+//!   engine's fan-out isolates the span stack per unit, so unit-stage
+//!   paths are identical at `--threads 1` and `--threads N`.
+//! * **A sharded counter/gauge registry** — hot-path code bumps
+//!   thread-local [`Shard`]s; the engine drains one shard per unit and
+//!   merges them into the global registry at the round barrier in unit
+//!   order (the same discipline as the traffic ledger). Counter adds
+//!   are commutative `u64` sums, so aggregate totals are byte-identical
+//!   whatever the scheduling was.
+//! * **Sinks** — a JSONL event trace (run manifest, per-round
+//!   counter/span records, run summary), a Prometheus text-exposition
+//!   dump written at [`finish`], and the `scale profile` subcommand
+//!   ([`profile`]).
+//!
+//! Determinism contract: nothing in this module ever touches
+//! `RunReport` — fingerprints are byte-identical with telemetry on or
+//! off. Wall-clock numbers exist only in telemetry output and are
+//! quantized to 3 decimals (µs) before serialization. A disabled
+//! registry ([`ObsConfig::default`]) costs one relaxed atomic load per
+//! instrumentation site.
+
+pub mod profile;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::SimConfig;
+use crate::util::json::Value;
+
+const POISONED: &str = "obs registry poisoned";
+
+/// Master switch: every entry point loads this first and bails when
+/// telemetry is off — the "one branch on the hot path" invariant.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Counters carried by the sharded registry. Adds are commutative, so
+/// per-thread shards merge to identical totals at any thread count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    FramesEncoded = 0,
+    FramesDecoded = 1,
+    BytesOnWire = 2,
+    MessagesSent = 3,
+    Elections = 4,
+    Reclusterings = 5,
+    DequantAccumulates = 6,
+}
+
+const N_COUNTERS: usize = 7;
+
+impl Counter {
+    pub const ALL: [Counter; N_COUNTERS] = [
+        Counter::FramesEncoded,
+        Counter::FramesDecoded,
+        Counter::BytesOnWire,
+        Counter::MessagesSent,
+        Counter::Elections,
+        Counter::Reclusterings,
+        Counter::DequantAccumulates,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::FramesEncoded => "frames_encoded",
+            Counter::FramesDecoded => "frames_decoded",
+            Counter::BytesOnWire => "bytes_on_wire",
+            Counter::MessagesSent => "messages_sent",
+            Counter::Elections => "elections",
+            Counter::Reclusterings => "reclusterings",
+            Counter::DequantAccumulates => "dequant_accumulates",
+        }
+    }
+}
+
+/// Gauges: last-write-wins values set from the engine's main thread
+/// (never sharded, so there is no merge ambiguity).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gauge {
+    LiveNodes = 0,
+    PeakRssBytes = 1,
+}
+
+const N_GAUGES: usize = 2;
+
+impl Gauge {
+    pub const ALL: [Gauge; N_GAUGES] = [Gauge::LiveNodes, Gauge::PeakRssBytes];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::LiveNodes => "live_nodes",
+            Gauge::PeakRssBytes => "peak_rss_bytes",
+        }
+    }
+}
+
+/// Accumulated wall-clock for one span path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpanStat {
+    pub calls: u64,
+    pub total_ns: u64,
+}
+
+/// One thread-local slice of the registry: counter deltas plus span
+/// stats accumulated since the shard was last drained.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Shard {
+    counters: [u64; N_COUNTERS],
+    spans: BTreeMap<String, SpanStat>,
+}
+
+impl Shard {
+    pub fn bump(&mut self, c: Counter, v: u64) {
+        self.counters[c as usize] += v;
+    }
+
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    pub fn record_span(&mut self, path: String, ns: u64) {
+        let stat = self.spans.entry(path).or_default();
+        stat.calls += 1;
+        stat.total_ns += ns;
+    }
+
+    /// Fold `other` into `self`. Pure addition on every field, so any
+    /// merge order produces the same totals (asserted by a property
+    /// test in `tests/properties.rs`).
+    pub fn absorb(&mut self, other: &Shard) {
+        for (mine, theirs) in self.counters.iter_mut().zip(other.counters.iter()) {
+            *mine += *theirs;
+        }
+        for (path, stat) in &other.spans {
+            let mine = self.spans.entry(path.clone()).or_default();
+            mine.calls += stat.calls;
+            mine.total_ns += stat.total_ns;
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.iter().all(|&c| c == 0) && self.spans.is_empty()
+    }
+}
+
+struct Local {
+    shard: Shard,
+    stack: Vec<&'static str>,
+}
+
+thread_local! {
+    static LOCAL: RefCell<Local> = RefCell::new(Local {
+        shard: Shard::default(),
+        stack: Vec::new(),
+    });
+}
+
+struct Inner {
+    counters: [u64; N_COUNTERS],
+    gauges: [u64; N_GAUGES],
+    spans: BTreeMap<String, SpanStat>,
+    workers: BTreeMap<usize, u64>,
+    last_counters: [u64; N_COUNTERS],
+    last_spans: BTreeMap<String, SpanStat>,
+    sink: Option<BufWriter<File>>,
+    metrics_out: Option<PathBuf>,
+}
+
+impl Inner {
+    const fn new() -> Inner {
+        Inner {
+            counters: [0; N_COUNTERS],
+            gauges: [0; N_GAUGES],
+            spans: BTreeMap::new(),
+            workers: BTreeMap::new(),
+            last_counters: [0; N_COUNTERS],
+            last_spans: BTreeMap::new(),
+            sink: None,
+            metrics_out: None,
+        }
+    }
+
+    fn absorb_shard(&mut self, shard: &Shard) {
+        for (mine, theirs) in self.counters.iter_mut().zip(shard.counters.iter()) {
+            *mine += *theirs;
+        }
+        for (path, stat) in &shard.spans {
+            let mine = self.spans.entry(path.clone()).or_default();
+            mine.calls += stat.calls;
+            mine.total_ns += stat.total_ns;
+        }
+    }
+
+    fn reset_data(&mut self) {
+        self.counters = [0; N_COUNTERS];
+        self.gauges = [0; N_GAUGES];
+        self.spans.clear();
+        self.workers.clear();
+        self.last_counters = [0; N_COUNTERS];
+        self.last_spans.clear();
+    }
+
+    /// Append one compact-JSON line to the trace sink (best-effort:
+    /// telemetry must never fail a run mid-flight; `finish` surfaces
+    /// flush errors).
+    fn emit(&mut self, v: Value) {
+        if let Some(w) = self.sink.as_mut() {
+            let _ = writeln!(w, "{}", v.to_string_compact());
+        }
+    }
+}
+
+static REGISTRY: Mutex<Inner> = Mutex::new(Inner::new());
+
+/// Telemetry configuration. The default is fully disabled.
+#[derive(Clone, Debug, Default)]
+pub struct ObsConfig {
+    pub enabled: bool,
+    pub trace_out: Option<PathBuf>,
+    pub metrics_out: Option<PathBuf>,
+}
+
+impl ObsConfig {
+    /// CLI wiring: either sink flag switches telemetry on.
+    pub fn from_flags(trace_out: Option<&str>, metrics_out: Option<&str>) -> ObsConfig {
+        ObsConfig {
+            enabled: trace_out.is_some() || metrics_out.is_some(),
+            trace_out: trace_out.map(PathBuf::from),
+            metrics_out: metrics_out.map(PathBuf::from),
+        }
+    }
+}
+
+/// Is telemetry live? One relaxed load — the whole cost of a disabled
+/// registry at every instrumentation site.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// (Re-)install the telemetry configuration: resets the registry,
+/// opens the JSONL sink (writing the manifest line) and flips the
+/// master switch.
+pub fn install(cfg: &ObsConfig) -> Result<()> {
+    ENABLED.store(false, Ordering::SeqCst);
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        l.shard = Shard::default();
+        l.stack.clear();
+    });
+    let mut inner = REGISTRY.lock().expect(POISONED);
+    inner.reset_data();
+    inner.metrics_out = cfg.metrics_out.clone();
+    inner.sink = None;
+    if cfg.enabled {
+        if let Some(path) = &cfg.trace_out {
+            let file = File::create(path)
+                .with_context(|| format!("creating trace file {}", path.display()))?;
+            let mut w = BufWriter::new(file);
+            let mut manifest = Value::obj();
+            manifest.set("type", Value::Str("manifest".into()));
+            manifest.set("schema", Value::Num(1.0));
+            manifest.set("subsystem", Value::Str("scale-obs".into()));
+            writeln!(w, "{}", manifest.to_string_compact())
+                .with_context(|| format!("writing manifest to {}", path.display()))?;
+            inner.sink = Some(w);
+        }
+    }
+    drop(inner);
+    ENABLED.store(cfg.enabled, Ordering::SeqCst);
+    Ok(())
+}
+
+/// RAII span guard: created by [`span`], records its wall-clock into
+/// the thread-local shard on drop.
+#[must_use = "a span records on drop; bind it (`let _s = obs::span(..)`)"]
+pub struct Span(Option<SpanInner>);
+
+struct SpanInner {
+    path: String,
+    start: Instant,
+}
+
+/// Open a phase span. The recorded path is the dot-joined stack of
+/// enclosing spans on this thread (`"exchange.wire.encode"`).
+pub fn span(name: &'static str) -> Span {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return Span(None);
+    }
+    let path = LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        l.stack.push(name);
+        l.stack.join(".")
+    });
+    Span(Some(SpanInner { path, start: Instant::now() }))
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(inner) = self.0.take() {
+            let ns = inner.start.elapsed().as_nanos() as u64;
+            LOCAL.with(|l| {
+                let mut l = l.borrow_mut();
+                l.stack.pop();
+                l.shard.record_span(inner.path, ns);
+            });
+        }
+    }
+}
+
+/// Saved span stack returned by [`isolate_spans`].
+pub(crate) struct SavedSpans(Vec<&'static str>);
+
+/// Clear this thread's span stack so unit-stage spans root at their
+/// own name whatever the executor: in sequential mode units run on the
+/// main thread *inside* the engine's open `"group"` span, and without
+/// isolation their paths would diverge from the worker-thread paths.
+pub(crate) fn isolate_spans() -> SavedSpans {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return SavedSpans(Vec::new());
+    }
+    SavedSpans(LOCAL.with(|l| std::mem::take(&mut l.borrow_mut().stack)))
+}
+
+pub(crate) fn restore_spans(saved: SavedSpans) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    LOCAL.with(|l| l.borrow_mut().stack = saved.0);
+}
+
+/// Add `v` to counter `c` in this thread's shard.
+pub fn counter_add(c: Counter, v: u64) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    LOCAL.with(|l| l.borrow_mut().shard.bump(c, v));
+}
+
+/// Set gauge `g` (main-thread only; last write wins).
+pub fn gauge_set(g: Gauge, v: u64) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    REGISTRY.lock().expect(POISONED).gauges[g as usize] = v;
+}
+
+/// Drain this thread's shard (the engine's fan-out calls this once per
+/// unit, on whichever thread ran the unit).
+pub(crate) fn take_shard() -> Shard {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return Shard::default();
+    }
+    LOCAL.with(|l| std::mem::take(&mut l.borrow_mut().shard))
+}
+
+/// Merge a drained shard into the global registry. The engine calls
+/// this at the round barrier in unit order — the same discipline as
+/// the traffic-ledger merge.
+pub(crate) fn merge_shard(shard: Shard) {
+    if !ENABLED.load(Ordering::Relaxed) || shard.is_empty() {
+        return;
+    }
+    REGISTRY.lock().expect(POISONED).absorb_shard(&shard);
+}
+
+/// Accumulate busy wall-clock for one executor worker (telemetry only:
+/// busy-time depends on scheduling and is never part of any
+/// determinism assertion).
+pub(crate) fn record_worker_busy(worker: usize, busy_ns: u64) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    *REGISTRY.lock().expect(POISONED).workers.entry(worker).or_insert(0) += busy_ns;
+}
+
+/// Quantize nanoseconds to milliseconds with 3 decimals (µs) — the
+/// only resolution wall-clock ever reaches a sink at.
+fn ms3(ns: u64) -> f64 {
+    (ns as f64 / 1_000.0).round() / 1_000.0
+}
+
+fn counters_obj(vals: &[u64; N_COUNTERS]) -> Value {
+    let mut v = Value::obj();
+    for c in Counter::ALL {
+        v.set(c.name(), Value::Num(vals[c as usize] as f64));
+    }
+    v
+}
+
+/// Emit the `run_start` trace record (no-op when disabled or traceless).
+pub fn run_start(mode: &str, cfg: &SimConfig, threads: usize) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let mut v = Value::obj();
+    v.set("type", Value::Str("run_start".into()));
+    v.set("mode", Value::Str(mode.into()));
+    v.set("nodes", Value::Num(cfg.n_nodes as f64));
+    v.set("clusters", Value::Num(cfg.n_clusters as f64));
+    v.set("rounds", Value::Num(cfg.rounds as f64));
+    v.set("threads", Value::Num(threads as f64));
+    v.set("wire", Value::Str(cfg.wire.label()));
+    v.set("sample_frac", Value::Num(cfg.sample_frac));
+    REGISTRY.lock().expect(POISONED).emit(v);
+}
+
+/// Round barrier hook: drain the main thread's shard (central-sync
+/// traffic, engine-phase spans), refresh the peak-RSS gauge, and emit
+/// one per-round trace record carrying counter/span *deltas*.
+pub fn round_flush(round: usize) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let shard = LOCAL.with(|l| std::mem::take(&mut l.borrow_mut().shard));
+    let mut inner = REGISTRY.lock().expect(POISONED);
+    inner.absorb_shard(&shard);
+    inner.gauges[Gauge::PeakRssBytes as usize] = peak_rss_bytes();
+    if inner.sink.is_none() {
+        return;
+    }
+    let mut deltas = [0u64; N_COUNTERS];
+    for (d, (now, last)) in deltas
+        .iter_mut()
+        .zip(inner.counters.iter().zip(inner.last_counters.iter()))
+    {
+        *d = now - last;
+    }
+    let mut phases = Value::obj();
+    for (path, stat) in &inner.spans {
+        let prev = inner.last_spans.get(path).copied().unwrap_or_default();
+        let dns = stat.total_ns - prev.total_ns;
+        if dns > 0 || stat.calls > prev.calls {
+            phases.set(path, Value::Num(ms3(dns)));
+        }
+    }
+    let mut gauges = Value::obj();
+    for g in Gauge::ALL {
+        gauges.set(g.name(), Value::Num(inner.gauges[g as usize] as f64));
+    }
+    let mut v = Value::obj();
+    v.set("type", Value::Str("round".into()));
+    v.set("round", Value::Num(round as f64));
+    v.set("counters", counters_obj(&deltas));
+    v.set("gauges", gauges);
+    v.set("phases_ms", phases);
+    inner.last_counters = inner.counters;
+    inner.last_spans = inner.spans.clone();
+    inner.emit(v);
+}
+
+/// Emit the `run_end` trace record. The fingerprint hash is the same
+/// wall-clock-free digest the golden suite pins — recording it in the
+/// trace changes nothing about the report itself.
+pub fn run_end(mode: &str, fingerprint_hash: &str, wall_ms: f64) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let mut v = Value::obj();
+    v.set("type", Value::Str("run_end".into()));
+    v.set("mode", Value::Str(mode.into()));
+    v.set("fingerprint", Value::Str(fingerprint_hash.into()));
+    v.set("wall_ms", Value::Num((wall_ms * 1_000.0).round() / 1_000.0));
+    REGISTRY.lock().expect(POISONED).emit(v);
+}
+
+/// A point-in-time copy of the registry (drains the calling thread's
+/// shard first so totals are complete).
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    counters: [u64; N_COUNTERS],
+    gauges: [u64; N_GAUGES],
+    pub spans: BTreeMap<String, SpanStat>,
+    pub workers: BTreeMap<usize, u64>,
+}
+
+impl Snapshot {
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    pub fn gauge(&self, g: Gauge) -> u64 {
+        self.gauges[g as usize]
+    }
+
+    pub fn phase_ms(&self, path: &str) -> f64 {
+        self.spans.get(path).map_or(0.0, |s| ms3(s.total_ns))
+    }
+
+    /// Span totals as a JSON object (`path` → ms), largest first order
+    /// preserved by key — used by the BENCH emitter.
+    pub fn phases_ms_json(&self) -> Value {
+        let mut v = Value::obj();
+        for (path, stat) in &self.spans {
+            v.set(path, Value::Num(ms3(stat.total_ns)));
+        }
+        v
+    }
+}
+
+pub fn snapshot() -> Snapshot {
+    if ENABLED.load(Ordering::Relaxed) {
+        let shard = LOCAL.with(|l| std::mem::take(&mut l.borrow_mut().shard));
+        REGISTRY.lock().expect(POISONED).absorb_shard(&shard);
+    }
+    let inner = REGISTRY.lock().expect(POISONED);
+    Snapshot {
+        counters: inner.counters,
+        gauges: inner.gauges,
+        spans: inner.spans.clone(),
+        workers: inner.workers.clone(),
+    }
+}
+
+/// Zero every counter/gauge/span/worker total but keep sinks and the
+/// enabled state — the bench harness calls this between the warm-up
+/// and the measured run so the snapshot covers only the latter.
+pub fn reset_metrics() {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    LOCAL.with(|l| l.borrow_mut().shard = Shard::default());
+    REGISTRY.lock().expect(POISONED).reset_data();
+}
+
+fn summary_record(inner: &Inner) -> Value {
+    let mut gauges = Value::obj();
+    for g in Gauge::ALL {
+        gauges.set(g.name(), Value::Num(inner.gauges[g as usize] as f64));
+    }
+    let mut phases = Value::obj();
+    for (path, stat) in &inner.spans {
+        let mut s = Value::obj();
+        s.set("calls", Value::Num(stat.calls as f64));
+        s.set("total_ms", Value::Num(ms3(stat.total_ns)));
+        phases.set(path, s);
+    }
+    let mut workers = Value::obj();
+    for (w, busy) in &inner.workers {
+        workers.set(&format!("{w}"), Value::Num(ms3(*busy)));
+    }
+    let mut v = Value::obj();
+    v.set("type", Value::Str("summary".into()));
+    v.set("counters", counters_obj(&inner.counters));
+    v.set("gauges", gauges);
+    v.set("phases", phases);
+    v.set("workers_busy_ms", workers);
+    v
+}
+
+/// Render the registry as Prometheus text exposition (pure; unit
+/// tested without touching global state).
+pub fn render_prometheus(snap: &Snapshot) -> String {
+    let mut out = String::from(
+        "# SCALE telemetry — Prometheus text exposition, written once at exit\n",
+    );
+    for c in Counter::ALL {
+        let name = c.name();
+        out.push_str(&format!("# TYPE scale_{name}_total counter\n"));
+        out.push_str(&format!("scale_{name}_total {}\n", snap.counter(c)));
+    }
+    for g in Gauge::ALL {
+        let name = g.name();
+        out.push_str(&format!("# TYPE scale_{name} gauge\n"));
+        out.push_str(&format!("scale_{name} {}\n", snap.gauge(g)));
+    }
+    out.push_str("# TYPE scale_phase_seconds_total counter\n");
+    for (path, stat) in &snap.spans {
+        out.push_str(&format!(
+            "scale_phase_seconds_total{{phase=\"{path}\"}} {:.6}\n",
+            stat.total_ns as f64 / 1e9
+        ));
+    }
+    out.push_str("# TYPE scale_phase_calls_total counter\n");
+    for (path, stat) in &snap.spans {
+        out.push_str(&format!(
+            "scale_phase_calls_total{{phase=\"{path}\"}} {}\n",
+            stat.calls
+        ));
+    }
+    out.push_str("# TYPE scale_worker_busy_seconds_total counter\n");
+    for (w, busy) in &snap.workers {
+        out.push_str(&format!(
+            "scale_worker_busy_seconds_total{{worker=\"{w}\"}} {:.6}\n",
+            *busy as f64 / 1e9
+        ));
+    }
+    out
+}
+
+/// Flush and close every sink, write the Prometheus dump, disable the
+/// registry. Safe to call when telemetry was never enabled.
+pub fn finish() -> Result<()> {
+    if !ENABLED.load(Ordering::SeqCst) {
+        return Ok(());
+    }
+    let shard = LOCAL.with(|l| std::mem::take(&mut l.borrow_mut().shard));
+    let mut inner = REGISTRY.lock().expect(POISONED);
+    inner.absorb_shard(&shard);
+    inner.gauges[Gauge::PeakRssBytes as usize] = peak_rss_bytes();
+    if inner.sink.is_some() {
+        let rec = summary_record(&inner);
+        inner.emit(rec);
+    }
+    if let Some(mut w) = inner.sink.take() {
+        w.flush().context("flushing JSONL trace sink")?;
+    }
+    if let Some(path) = inner.metrics_out.take() {
+        let snap = Snapshot {
+            counters: inner.counters,
+            gauges: inner.gauges,
+            spans: inner.spans.clone(),
+            workers: inner.workers.clone(),
+        };
+        std::fs::write(&path, render_prometheus(&snap))
+            .with_context(|| format!("writing metrics dump {}", path.display()))?;
+    }
+    drop(inner);
+    ENABLED.store(false, Ordering::SeqCst);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// peak-RSS probe (moved here from `bench` so `run`, `scenario run` and
+// the bench harness all report memory through one code path; `bench`
+// re-exports these for compatibility)
+// ---------------------------------------------------------------------
+
+/// Reset the kernel's peak-RSS watermark for this process (Linux;
+/// best-effort elsewhere).
+pub fn reset_peak_rss() {
+    let _ = std::fs::write("/proc/self/clear_refs", "5");
+}
+
+/// Peak resident set size in bytes (`VmHWM` from `/proc/self/status`),
+/// or 0 where the probe is unavailable.
+pub fn peak_rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: these tests never flip the global ENABLED switch — lib
+    // unit tests run concurrently and other modules' tests drive
+    // instrumented code paths. Everything global-state-dependent lives
+    // in `tests/obs_telemetry.rs`, a dedicated (serialized) binary.
+
+    #[test]
+    fn disabled_span_and_counters_are_inert() {
+        assert!(!enabled());
+        let s = span("never_recorded_phase");
+        drop(s);
+        counter_add(Counter::FramesEncoded, 3);
+        let snap = snapshot();
+        assert!(!snap.spans.contains_key("never_recorded_phase"));
+    }
+
+    #[test]
+    fn shard_bump_and_absorb_adds() {
+        let mut a = Shard::default();
+        a.bump(Counter::BytesOnWire, 10);
+        a.record_span("train".into(), 1_000);
+        let mut b = Shard::default();
+        b.bump(Counter::BytesOnWire, 5);
+        b.bump(Counter::Elections, 1);
+        b.record_span("train".into(), 2_000);
+        b.record_span("train.step".into(), 500);
+        a.absorb(&b);
+        assert_eq!(a.counter(Counter::BytesOnWire), 15);
+        assert_eq!(a.counter(Counter::Elections), 1);
+        assert_eq!(a.spans["train"], SpanStat { calls: 2, total_ns: 3_000 });
+        assert_eq!(a.spans["train.step"], SpanStat { calls: 1, total_ns: 500 });
+        assert!(!a.is_empty());
+        assert!(Shard::default().is_empty());
+    }
+
+    #[test]
+    fn ms3_quantizes_to_microseconds() {
+        assert_eq!(ms3(1_234_567), 1.235);
+        assert_eq!(ms3(0), 0.0);
+        assert_eq!(ms3(999), 0.001);
+    }
+
+    #[test]
+    fn prometheus_rendering_covers_every_family() {
+        let mut snap = Snapshot::default();
+        snap.counters[Counter::FramesEncoded as usize] = 42;
+        snap.gauges[Gauge::LiveNodes as usize] = 7;
+        snap.spans
+            .insert("train".into(), SpanStat { calls: 3, total_ns: 2_000_000 });
+        snap.workers.insert(0, 1_000_000_000);
+        let text = render_prometheus(&snap);
+        assert!(text.contains("scale_frames_encoded_total 42"));
+        assert!(text.contains("scale_live_nodes 7"));
+        assert!(text.contains("scale_phase_seconds_total{phase=\"train\"} 0.002000"));
+        assert!(text.contains("scale_phase_calls_total{phase=\"train\"} 3"));
+        assert!(text.contains("scale_worker_busy_seconds_total{worker=\"0\"} 1.000000"));
+        // every declared family has a TYPE header
+        for c in Counter::ALL {
+            assert!(text.contains(&format!("# TYPE scale_{}_total counter", c.name())));
+        }
+        for g in Gauge::ALL {
+            assert!(text.contains(&format!("# TYPE scale_{} gauge", g.name())));
+        }
+    }
+
+    #[test]
+    fn counter_and_gauge_names_are_stable() {
+        let names: Vec<&str> = Counter::ALL.iter().map(|c| c.name()).collect();
+        assert_eq!(
+            names,
+            [
+                "frames_encoded",
+                "frames_decoded",
+                "bytes_on_wire",
+                "messages_sent",
+                "elections",
+                "reclusterings",
+                "dequant_accumulates",
+            ]
+        );
+        assert_eq!(Gauge::LiveNodes.name(), "live_nodes");
+        assert_eq!(Gauge::PeakRssBytes.name(), "peak_rss_bytes");
+    }
+
+    #[test]
+    fn peak_rss_probe_reports_on_linux() {
+        // on Linux the probe must return something plausible; elsewhere 0
+        let rss = peak_rss_bytes();
+        if cfg!(target_os = "linux") {
+            assert!(rss > 0, "VmHWM should be readable on Linux");
+        }
+    }
+}

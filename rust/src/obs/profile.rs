@@ -1,0 +1,199 @@
+//! `scale profile` — run a preset under full telemetry and print where
+//! the wall-clock went: per-phase table, worker utilization/imbalance,
+//! top-5 hotspots, and the headline counters. The run itself goes
+//! through the same engine as `scale run`, so the printed fingerprint
+//! matches a telemetry-free run of the same config byte-for-byte.
+
+use anyhow::Result;
+
+use crate::cli::{self, Args, Spec};
+use crate::config::SimConfig;
+use crate::runtime::compute::NativeSvm;
+use crate::runtime::manifest::ModelKind;
+use crate::scenario::Scenario;
+use crate::sim::Simulation;
+
+use super::{Counter, Gauge, ObsConfig, Snapshot};
+
+pub const PROFILE_SPEC: Spec = Spec {
+    flags: &[
+        "config", "preset", "algo", "edge-period", "nodes", "clusters", "rounds",
+        "epochs", "seed", "partition", "min-delta", "failure-prob", "topology",
+        "heterogeneity", "lr", "reg", "threads", "sample", "wire", "codec",
+        "topk", "trace-out", "metrics-out",
+    ],
+    switches: &["quiet", "quantize", "secagg", "delta"],
+};
+
+/// Render the per-phase wall-time table (largest total first), the
+/// worker utilization block and the top-5 hotspots. Pure — unit tested
+/// without global state.
+pub fn render_profile(snap: &Snapshot, wall_s: f64, threads: usize) -> String {
+    let mut out = String::new();
+    let wall_ms = (wall_s * 1e3).max(1e-9);
+
+    let mut phases: Vec<(&String, u64, u64)> = snap
+        .spans
+        .iter()
+        .map(|(path, stat)| (path, stat.total_ns, stat.calls))
+        .collect();
+    phases.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(b.0)));
+
+    out.push_str(&format!(
+        "{:<32} {:>12} {:>8} {:>11} {:>7}\n",
+        "phase", "total ms", "calls", "mean µs", "% wall"
+    ));
+    for (path, total_ns, calls) in &phases {
+        let total_ms = *total_ns as f64 / 1e6;
+        let mean_us = *total_ns as f64 / 1e3 / (*calls).max(1) as f64;
+        out.push_str(&format!(
+            "{:<32} {:>12.3} {:>8} {:>11.1} {:>6.1}%\n",
+            path,
+            total_ms,
+            calls,
+            mean_us,
+            100.0 * total_ms / wall_ms
+        ));
+    }
+    if phases.is_empty() {
+        out.push_str("  (no spans recorded)\n");
+    }
+
+    out.push_str(&format!(
+        "\nworker utilization ({} worker slot(s), wall {:.2}s):\n",
+        threads, wall_s
+    ));
+    if snap.workers.is_empty() {
+        out.push_str("  (no worker activity recorded)\n");
+    } else {
+        let busys: Vec<f64> =
+            snap.workers.values().map(|&ns| ns as f64 / 1e9).collect();
+        for (w, busy_s) in snap.workers.keys().zip(&busys) {
+            out.push_str(&format!(
+                "  worker {w}: busy {:.2}s  ({:.1}% of wall)\n",
+                busy_s,
+                100.0 * busy_s / wall_s.max(1e-9)
+            ));
+        }
+        let max = busys.iter().cloned().fold(0.0, f64::max);
+        let mean = busys.iter().sum::<f64>() / busys.len() as f64;
+        out.push_str(&format!(
+            "  imbalance (max/mean busy): {:.2}x\n",
+            max / mean.max(1e-12)
+        ));
+    }
+
+    out.push_str("\ntop hotspots:\n");
+    for (rank, (path, total_ns, _)) in phases.iter().take(5).enumerate() {
+        out.push_str(&format!(
+            "  {}. {:<30} {:>10.3} ms ({:.1}%)\n",
+            rank + 1,
+            path,
+            *total_ns as f64 / 1e6,
+            100.0 * (*total_ns as f64 / 1e6) / wall_ms
+        ));
+    }
+
+    out.push_str(&format!(
+        "\ncounters: {} frames encoded, {} decoded, {} bytes on wire, \
+         {} message(s), {} election(s), {} reclustering(s)\n",
+        snap.counter(Counter::FramesEncoded),
+        snap.counter(Counter::FramesDecoded),
+        snap.counter(Counter::BytesOnWire),
+        snap.counter(Counter::MessagesSent),
+        snap.counter(Counter::Elections),
+        snap.counter(Counter::Reclusterings),
+    ));
+    let rss = snap.gauge(Gauge::PeakRssBytes);
+    if rss > 0 {
+        out.push_str(&format!("peak rss: {:.0} MB\n", rss as f64 / 1e6));
+    }
+    out
+}
+
+/// `scale profile [--preset fleet-1k] [--rounds N] …` — run the config
+/// under telemetry (native backend) and print the report above.
+pub fn cmd_profile(args: &Args) -> Result<()> {
+    let cfg = cli::config_from_base(args, || SimConfig::preset("fleet-1k"))?;
+    anyhow::ensure!(
+        cfg.model == ModelKind::Svm,
+        "profiling is native-only (SVM model)"
+    );
+    let algo = cli::algo_from(args)?;
+    let quiet = args.has("quiet");
+    super::install(&ObsConfig {
+        enabled: true,
+        trace_out: args.get("trace-out").map(Into::into),
+        metrics_out: args.get("metrics-out").map(Into::into),
+    })?;
+    super::reset_peak_rss();
+
+    let threads = cfg.effective_threads();
+    if !quiet {
+        println!(
+            "profile [{}]: {} nodes / {} clusters / {} rounds, threads {}",
+            algo.label(),
+            cfg.n_nodes,
+            cfg.n_clusters,
+            cfg.rounds,
+            threads
+        );
+    }
+    let compute = NativeSvm::new(NativeSvm::default_dims());
+    let t0 = std::time::Instant::now();
+    let mut sim = Simulation::new_parallel(cfg, &compute)?;
+    let report = sim.run_algo(algo, &Scenario::none())?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let snap = super::snapshot();
+    if !quiet {
+        println!();
+        print!("{}", render_profile(&snap, wall_s, threads));
+        println!("\nfingerprint: {}", report.fingerprint_hash());
+    }
+    super::finish()?;
+    if !quiet {
+        if let Some(p) = args.get("trace-out") {
+            println!("telemetry trace written to {p}");
+        }
+        if let Some(p) = args.get("metrics-out") {
+            println!("metrics dump written to {p}");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::SpanStat;
+
+    #[test]
+    fn render_covers_phases_workers_and_hotspots() {
+        let mut snap = Snapshot::default();
+        snap.spans
+            .insert("train".into(), SpanStat { calls: 40, total_ns: 900_000_000 });
+        snap.spans
+            .insert("exchange".into(), SpanStat { calls: 40, total_ns: 100_000_000 });
+        snap.workers.insert(0, 500_000_000);
+        snap.workers.insert(1, 450_000_000);
+        let text = render_profile(&snap, 1.0, 2);
+        // sorted by total: train first
+        let train_at = text.find("train").unwrap();
+        let exchange_at = text.find("exchange").unwrap();
+        assert!(train_at < exchange_at, "{text}");
+        assert!(text.contains("% wall"));
+        assert!(text.contains("worker 0: busy 0.50s"));
+        assert!(text.contains("imbalance (max/mean busy): 1.05x"));
+        assert!(text.contains("top hotspots:"));
+        assert!(text.contains("1. train"));
+        assert!(text.contains("counters:"));
+    }
+
+    #[test]
+    fn render_degrades_gracefully_when_empty() {
+        let text = render_profile(&Snapshot::default(), 0.5, 1);
+        assert!(text.contains("(no spans recorded)"));
+        assert!(text.contains("(no worker activity recorded)"));
+    }
+}

@@ -21,6 +21,7 @@ use crate::checkpoint::{Checkpoint, Decision};
 use crate::config::{CheckpointMode, SimConfig};
 use crate::election::{elect, representativeness, Ballot, CriteriaWeights};
 use crate::netsim::{MsgKind, Network};
+use crate::obs;
 use crate::runtime::compute::ModelCompute;
 use crate::secagg;
 use crate::topology::peer_sets;
@@ -163,12 +164,15 @@ pub(crate) fn scale_cluster_round(
 
     // --- local training ---
     let mut train_ms = 0.0f64;
-    for &li in &active {
-        let (loss, ms) =
-            nodes[li].local_train(compute, cfg.local_epochs, cfg.lr, cfg.reg)?;
-        out.loss_sum += loss;
-        out.loss_n += 1;
-        train_ms = train_ms.max(ms);
+    {
+        let _s = obs::span("train");
+        for &li in &active {
+            let (loss, ms) =
+                nodes[li].local_train(compute, cfg.local_epochs, cfg.lr, cfg.reg)?;
+            out.loss_sum += loss;
+            out.loss_n += 1;
+            train_ms = train_ms.max(ms);
+        }
     }
 
     // --- peer exchange (eq 9) ---
@@ -186,29 +190,34 @@ pub(crate) fn scale_cluster_round(
         mix64(cfg.seed, cluster.id as u64),
     );
     let mut exchange_ms = 0.0f64;
-    for (p, ps) in peers.iter().enumerate() {
-        for &q in ps {
-            let (from, to) = (&nodes[active[p]].device, &nodes[active[q]].device);
-            let lat = net.send(MsgKind::PeerExchange, Some(from), Some(to), payload, round);
-            exchange_ms = exchange_ms.max(lat);
+    let exchanged = {
+        let _s = obs::span("exchange");
+        for (p, ps) in peers.iter().enumerate() {
+            for &q in ps {
+                let (from, to) = (&nodes[active[p]].device, &nodes[active[q]].device);
+                let lat =
+                    net.send(MsgKind::PeerExchange, Some(from), Some(to), payload, round);
+                exchange_ms = exchange_ms.max(lat);
+            }
         }
-    }
-    // snapshot of the weights as they leave each node: peers receive the
-    // configured codec's encode→decode channel of the sender's params
-    // (bit-identical clone for the f32 passthrough)
-    let exchange_baseline: Option<Vec<f32>> = if cfg.wire.delta {
-        cluster.store.latest().map(|cp| cp.params.clone())
-    } else {
-        None
+        // snapshot of the weights as they leave each node: peers receive
+        // the configured codec's encode→decode channel of the sender's
+        // params (bit-identical clone for the f32 passthrough)
+        let exchange_baseline: Option<Vec<f32>> = if cfg.wire.delta {
+            cluster.store.latest().map(|cp| cp.params.clone())
+        } else {
+            None
+        };
+        let snapshot: Vec<Vec<f32>> = active
+            .iter()
+            .map(|&li| cfg.wire.channel(&nodes[li].params, exchange_baseline.as_deref()))
+            .collect();
+        let exchanged = peer_exchange(compute, &snapshot, &peers)?;
+        for (p, &li) in active.iter().enumerate() {
+            nodes[li].params = exchanged[p].clone();
+        }
+        exchanged
     };
-    let snapshot: Vec<Vec<f32>> = active
-        .iter()
-        .map(|&li| cfg.wire.channel(&nodes[li].params, exchange_baseline.as_deref()))
-        .collect();
-    let exchanged = peer_exchange(compute, &snapshot, &peers)?;
-    for (p, &li) in active.iter().enumerate() {
-        nodes[li].params = exchanged[p].clone();
-    }
 
     // --- driver collect + consensus (eq 10) ---
     let collect_payload = if cfg.secure_aggregation {
@@ -218,94 +227,110 @@ pub(crate) fn scale_cluster_round(
         payload
     };
     let mut collect_ms = 0.0f64;
-    for &li in &active {
-        if li != driver_local {
-            let (from, to) = (&nodes[li].device, &nodes[driver_local].device);
-            let lat =
-                net.send(MsgKind::DriverCollect, Some(from), Some(to), collect_payload, round);
-            collect_ms = collect_ms.max(lat);
+    let consensus = {
+        let _s = obs::span("collect");
+        for &li in &active {
+            if li != driver_local {
+                let (from, to) = (&nodes[li].device, &nodes[driver_local].device);
+                let lat = net.send(
+                    MsgKind::DriverCollect,
+                    Some(from),
+                    Some(to),
+                    collect_payload,
+                    round,
+                );
+                collect_ms = collect_ms.max(lat);
+            }
         }
-    }
-    let consensus = if cfg.secure_aggregation {
-        // pairwise-masked sum: the driver only ever sees masked vectors;
-        // the integer sum cancels the masks exactly
-        let members: Vec<(usize, secagg::MaskSecret)> = active_global
-            .iter()
-            .map(|&id| (id, secagg::MaskSecret::derive(root_key, id as u64)))
-            .collect();
-        let masked: Vec<Vec<i64>> = exchanged
-            .iter()
-            .enumerate()
-            .map(|(i, p)| secagg::mask(&secagg::encode_fixed(p), &members, i))
-            .collect();
-        secagg::decode_mean(&secagg::sum_masked(&masked), masked.len())
-    } else {
-        driver_consensus(compute, &exchanged)?
+        if cfg.secure_aggregation {
+            // pairwise-masked sum: the driver only ever sees masked
+            // vectors; the integer sum cancels the masks exactly
+            let members: Vec<(usize, secagg::MaskSecret)> = active_global
+                .iter()
+                .map(|&id| (id, secagg::MaskSecret::derive(root_key, id as u64)))
+                .collect();
+            let masked: Vec<Vec<i64>> = exchanged
+                .iter()
+                .enumerate()
+                .map(|(i, p)| secagg::mask(&secagg::encode_fixed(p), &members, i))
+                .collect();
+            secagg::decode_mean(&secagg::sum_masked(&masked), masked.len())
+        } else {
+            driver_consensus(compute, &exchanged)?
+        }
     };
 
     // --- driver-side validation + checkpoint gate ---
-    let metrics = eval_view(compute, &cluster.eval, &consensus)?;
-    cluster.last_accuracy = metrics.accuracy;
-    let last_round = round + 1 == cfg.rounds;
-    let decision = match (last_round && cfg.force_final_upload, cfg.checkpoint_mode) {
-        (true, CheckpointMode::ParamDelta) => cluster.delta_gate.force(&consensus),
-        (true, CheckpointMode::Accuracy) => cluster.gate.force(),
-        (false, CheckpointMode::ParamDelta) => cluster.delta_gate.observe(&consensus),
-        (false, CheckpointMode::Accuracy) => cluster.gate.observe(metrics.accuracy),
-    };
     let mut upload_ms = 0.0f64;
-    match decision {
-        Decision::Upload => {
-            // the driver's upload stream deltas against the last model the
-            // server received from this cluster, and re-baselines on it
-            // (central aggregation is the re-sync point)
-            let upload_payload =
-                cfg.wire.frame_bytes(dim, cluster.upload_baseline.is_some());
-            upload_ms = net.send(
-                MsgKind::GlobalUpdate,
-                Some(&nodes[driver_local].device),
-                None,
-                upload_payload,
-                round,
-            );
-            cluster.updates += 1;
-            cluster.upload_baseline = Some(consensus.clone());
-            out.upload = Some((consensus.clone(), cluster.members.len()));
+    let metrics = {
+        let _s = obs::span("upload");
+        let metrics = eval_view(compute, &cluster.eval, &consensus)?;
+        cluster.last_accuracy = metrics.accuracy;
+        let last_round = round + 1 == cfg.rounds;
+        let decision = match (last_round && cfg.force_final_upload, cfg.checkpoint_mode) {
+            (true, CheckpointMode::ParamDelta) => cluster.delta_gate.force(&consensus),
+            (true, CheckpointMode::Accuracy) => cluster.gate.force(),
+            (false, CheckpointMode::ParamDelta) => cluster.delta_gate.observe(&consensus),
+            (false, CheckpointMode::Accuracy) => cluster.gate.observe(metrics.accuracy),
+        };
+        match decision {
+            Decision::Upload => {
+                // the driver's upload stream deltas against the last model
+                // the server received from this cluster, and re-baselines
+                // on it (central aggregation is the re-sync point)
+                let upload_payload =
+                    cfg.wire.frame_bytes(dim, cluster.upload_baseline.is_some());
+                upload_ms = net.send(
+                    MsgKind::GlobalUpdate,
+                    Some(&nodes[driver_local].device),
+                    None,
+                    upload_payload,
+                    round,
+                );
+                cluster.updates += 1;
+                cluster.upload_baseline = Some(consensus.clone());
+                out.upload = Some((consensus.clone(), cluster.members.len()));
+            }
+            Decision::Skip => {
+                net.send(
+                    MsgKind::CheckpointLocal,
+                    Some(&nodes[driver_local].device),
+                    Some(&nodes[driver_local].device),
+                    payload,
+                    round,
+                );
+            }
         }
-        Decision::Skip => {
-            net.send(
-                MsgKind::CheckpointLocal,
-                Some(&nodes[driver_local].device),
-                Some(&nodes[driver_local].device),
-                payload,
-                round,
-            );
-        }
-    }
+        metrics
+    };
 
     // --- driver broadcast; the round's active members adopt the cluster
     // model (non-sampled nodes skip the parameter path entirely — they
     // stay on their last-adopted model until next sampled, which is what
     // keeps the bytes-on-wire linear in the sampled count) ---
     let mut broadcast_ms = 0.0f64;
-    for &li in &active {
-        if li != driver_local {
-            let (from, to) = (&nodes[driver_local].device, &nodes[li].device);
-            let lat = net.send(MsgKind::DriverBroadcast, Some(from), Some(to), payload, round);
-            broadcast_ms = broadcast_ms.max(lat);
+    {
+        let _s = obs::span("broadcast");
+        for &li in &active {
+            if li != driver_local {
+                let (from, to) = (&nodes[driver_local].device, &nodes[li].device);
+                let lat =
+                    net.send(MsgKind::DriverBroadcast, Some(from), Some(to), payload, round);
+                broadcast_ms = broadcast_ms.max(lat);
+            }
+            nodes[li].params = consensus.clone();
         }
-        nodes[li].params = consensus.clone();
+        // ring-buffer the broadcast model: it is the state every *active*
+        // member now holds, i.e. the next round's delta baseline (and the
+        // failover restore point for a re-elected driver); under partial
+        // participation a non-sampled node re-syncs the first round it is
+        // drawn again (it adopts the then-current broadcast)
+        cluster.store.push(Checkpoint {
+            round: round as u32,
+            metric: metrics.accuracy,
+            params: consensus.clone(),
+        });
     }
-    // ring-buffer the broadcast model: it is the state every *active*
-    // member now holds, i.e. the next round's delta baseline (and the
-    // failover restore point for a re-elected driver); under partial
-    // participation a non-sampled node re-syncs the first round it is
-    // drawn again (it adopts the then-current broadcast)
-    cluster.store.push(Checkpoint {
-        round: round as u32,
-        metric: metrics.accuracy,
-        params: consensus.clone(),
-    });
 
     out.latency_ms = train_ms + exchange_ms + collect_ms + upload_ms + broadcast_ms;
     Ok(out)

@@ -27,6 +27,7 @@
 
 use anyhow::Result;
 
+use crate::obs;
 use crate::runtime::compute::ModelCompute;
 use crate::scenario::{EventKind, Scenario, ScenarioState, Undo};
 use crate::server::GlobalServer;
@@ -48,31 +49,52 @@ pub fn run<A: Algorithm>(
     let threads = sim.effective_threads()?;
     let wall = std::time::Instant::now();
     let mut server = GlobalServer::new(sim.root_key);
-    algo.setup(sim, &mut server)?;
+    {
+        let _s = obs::span("setup");
+        algo.setup(sim, &mut server)?;
+    }
+    obs::run_start(algo.mode(), &sim.cfg, threads);
     let mut state = ScenarioState::new(scenario);
     let mut notes: Vec<ScenarioNote> = Vec::new();
 
     let mut rounds: Vec<RoundRecord> = Vec::with_capacity(sim.cfg.rounds);
     for round in 0..sim.cfg.rounds {
-        let events_applied = apply_scenario(sim, &mut state, round, &mut notes);
-        sim.inject_failures(round);
+        let events_applied = {
+            let _s = obs::span("scenario");
+            let applied = apply_scenario(sim, &mut state, round, &mut notes);
+            sim.inject_failures(round);
+            applied
+        };
         // repairs touch cross-group state (proximity admission,
         // re-formation) and must never race the fanned-out group phase
-        let repairs = algo.regulate(sim, &mut state, round, &mut notes)?;
+        let repairs = {
+            let _s = obs::span("regulate");
+            algo.regulate(sim, &mut state, round, &mut notes)?
+        };
 
-        let units = algo.group_phase(sim, round, threads)?;
+        let units = {
+            let _s = obs::span("group");
+            algo.group_phase(sim, round, threads)?
+        };
         // round barrier: sub-ledgers merge in unit order, whatever the
         // scheduling was, before any barrier-side work runs
         let mut outs = Vec::with_capacity(units.len());
-        for (out, ledger) in units {
-            sim.net.ledger.merge(&ledger);
-            outs.push(out);
+        {
+            let _s = obs::span("barrier");
+            for (out, ledger) in units {
+                sim.net.ledger.merge(&ledger);
+                outs.push(out);
+            }
         }
-        let out = algo.central_sync(sim, &mut server, round, outs)?;
+        let out = {
+            let _s = obs::span("central_sync");
+            algo.central_sync(sim, &mut server, round, outs)?
+        };
 
         let metrics = if (round + 1) % sim.cfg.eval_every == 0
             || round + 1 == sim.cfg.rounds
         {
+            let _s = obs::span("eval");
             match algo.eval_params(sim, &mut server) {
                 Some(params) => {
                     Some(report::eval_view(sim.compute, &sim.global_eval, &params)?)
@@ -82,6 +104,11 @@ pub fn run<A: Algorithm>(
         } else {
             None
         };
+
+        let live_nodes = sim.nodes.iter().filter(|n| n.alive).count();
+        obs::counter_add(obs::Counter::Elections, repairs.elections + out.elections);
+        obs::counter_add(obs::Counter::Reclusterings, repairs.reclusterings);
+        obs::gauge_set(obs::Gauge::LiveNodes, live_nodes as u64);
 
         let cum = rounds.last().map_or(0, |r| r.cum_updates) + out.updates;
         rounds.push(RoundRecord {
@@ -95,22 +122,31 @@ pub fn run<A: Algorithm>(
             },
             latency_ms: out.latency_ms,
             metrics,
-            live_nodes: sim.nodes.iter().filter(|n| n.alive).count(),
+            live_nodes,
             elections: repairs.elections + out.elections,
             scenario_events: events_applied,
             reclusterings: repairs.reclusterings,
         });
+        obs::round_flush(round);
     }
 
-    let final_params = algo.final_params(sim, &mut server)?;
-    let final_metrics = report::eval_view(sim.compute, &sim.global_eval, &final_params)?;
-    let clusters = algo.reports(sim, &final_params)?;
+    let (final_metrics, clusters) = {
+        let _s = obs::span("finalize");
+        let final_params = algo.final_params(sim, &mut server)?;
+        let final_metrics =
+            report::eval_view(sim.compute, &sim.global_eval, &final_params)?;
+        let clusters = algo.reports(sim, &final_params)?;
+        (final_metrics, clusters)
+    };
     let edge_cost = algo.edge_cost_usd(sim, &rounds);
 
     let mut rep =
         report::finish_report(sim, algo.mode(), rounds, clusters, final_metrics, &server, wall);
     rep.edge_cost_usd = edge_cost;
     rep.scenario = notes;
+    if obs::enabled() {
+        obs::run_end(&rep.mode, &rep.fingerprint_hash(), rep.wall_ms);
+    }
     Ok(rep)
 }
 
@@ -119,6 +155,14 @@ pub fn run<A: Algorithm>(
 /// by `Simulation::new_parallel`; `effective_threads` has already
 /// enforced this), inline otherwise — returning outputs **in unit
 /// order** regardless of scheduling.
+///
+/// Telemetry rides along without touching scheduling: each unit drains
+/// the running thread's obs shard, and the shards merge into the
+/// registry here in unit order — the same barrier discipline as the
+/// traffic ledger, so `--threads 1` vs N counter aggregates are
+/// identical. The span stack is isolated per unit: in sequential mode
+/// units run inside the engine's open `"group"` span, and without
+/// isolation their span paths would differ from the worker-thread ones.
 pub(crate) fn fan_out<U: Send, O: Send>(
     compute: &dyn ModelCompute,
     sync_compute: Option<&(dyn ModelCompute + Sync)>,
@@ -126,12 +170,24 @@ pub(crate) fn fan_out<U: Send, O: Send>(
     units: Vec<U>,
     run_unit: impl Fn(U, &dyn ModelCompute) -> O + Sync,
 ) -> Vec<O> {
-    if threads > 1 {
+    let traced = |u: U, c: &dyn ModelCompute| -> (O, obs::Shard) {
+        let saved = obs::isolate_spans();
+        let out = run_unit(u, c);
+        obs::restore_spans(saved);
+        (out, obs::take_shard())
+    };
+    let pairs: Vec<(O, obs::Shard)> = if threads > 1 {
         let compute = sync_compute.expect("effective_threads checked");
-        par::run_units_par(units, threads, move |u| run_unit(u, compute))
+        par::run_units_par(units, threads, move |u| traced(u, compute))
     } else {
-        par::run_units_seq(units, move |u| run_unit(u, compute))
+        par::run_units_seq(units, move |u| traced(u, compute))
+    };
+    let mut outs = Vec::with_capacity(pairs.len());
+    for (out, shard) in pairs {
+        obs::merge_shard(shard);
+        outs.push(out);
     }
+    outs
 }
 
 /// Drain the scenario queue at a round boundary: expire finished effect

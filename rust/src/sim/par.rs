@@ -16,11 +16,20 @@
 use std::collections::VecDeque;
 use std::sync::Mutex;
 use std::thread;
+use std::time::Instant;
+
+use crate::obs;
 
 /// Run every unit inline, in order — the `--threads 1` path. Identical
-/// output to [`run_units_par`] by construction.
+/// output to [`run_units_par`] by construction. Busy-time lands on
+/// worker slot 0 (telemetry only — never part of the fingerprint).
 pub(crate) fn run_units_seq<T, O>(units: Vec<T>, mut f: impl FnMut(T) -> O) -> Vec<O> {
-    units.into_iter().map(&mut f).collect()
+    let t = obs::enabled().then(Instant::now);
+    let out: Vec<O> = units.into_iter().map(&mut f).collect();
+    if let Some(t) = t {
+        obs::record_worker_busy(0, t.elapsed().as_nanos() as u64);
+    }
+    out
 }
 
 /// Fan units out over at most `threads` scoped workers; outputs come
@@ -42,15 +51,29 @@ pub(crate) fn run_units_par<T: Send, O: Send>(
         let queue = &queue;
         let f = &f;
         let handles: Vec<_> = (0..workers)
-            .map(|_| {
+            .map(|w| {
                 scope.spawn(move || {
                     let mut done: Vec<(usize, O)> = Vec::new();
+                    let mut busy_ns = 0u64;
                     loop {
                         let next = queue.lock().expect("unit queue poisoned").pop_front();
                         match next {
-                            Some((i, unit)) => done.push((i, f(unit))),
+                            Some((i, unit)) => {
+                                // per-worker busy wall-clock: the
+                                // utilization/imbalance report of
+                                // `scale profile` (one branch when off)
+                                let t = obs::enabled().then(Instant::now);
+                                let o = f(unit);
+                                if let Some(t) = t {
+                                    busy_ns += t.elapsed().as_nanos() as u64;
+                                }
+                                done.push((i, o));
+                            }
                             None => break,
                         }
+                    }
+                    if busy_ns > 0 {
+                        obs::record_worker_busy(w, busy_ns);
                     }
                     done
                 })

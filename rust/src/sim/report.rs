@@ -371,6 +371,51 @@ impl RunReport {
         }
         format!("{h:016x}")
     }
+
+    /// Human summary block shared by `scale run` and `scale scenario
+    /// run`. Peak RSS comes from the `obs` probe — the one memory code
+    /// path the CLI, the bench harness and the profiler all use.
+    pub fn print_summary(&self) {
+        println!("\n=== {} run ===", self.mode);
+        println!("rounds          : {}", self.rounds.len());
+        println!("global updates  : {}", self.total_updates());
+        println!(
+            "final metrics   : acc {:.3}  prec {:.3}  rec {:.3}  f1 {:.3}  auc {:.3}",
+            self.final_metrics.accuracy,
+            self.final_metrics.precision,
+            self.final_metrics.recall,
+            self.final_metrics.f1,
+            self.final_metrics.roc_auc
+        );
+        println!("total latency   : {:.0} ms (modelled)", self.total_latency_ms());
+        println!(
+            "energy          : {:.1} J comm + {:.3} J compute",
+            self.comm_energy_j, self.compute_energy_j
+        );
+        println!("cloud cost      : ${:.6}", self.cloud_cost_usd);
+        println!("sim wall time   : {:.0} ms", self.wall_ms);
+        let rss = crate::obs::peak_rss_bytes();
+        if rss > 0 {
+            println!("peak rss        : {:.0} MB", rss as f64 / 1e6);
+        }
+    }
+
+    /// Per-round trace table (`--rounds-trace`).
+    pub fn print_rounds(&self) {
+        println!("round | updates | cum | loss     | latency_ms | live | acc");
+        for rec in &self.rounds {
+            println!(
+                "{:>5} | {:>7} | {:>3} | {:<8.5} | {:>10.1} | {:>4} | {}",
+                rec.round + 1,
+                rec.updates,
+                rec.cum_updates,
+                rec.mean_loss,
+                rec.latency_ms,
+                rec.live_nodes,
+                rec.metrics.map_or("-".to_string(), |m| format!("{:.3}", m.accuracy)),
+            );
+        }
+    }
 }
 
 #[cfg(test)]

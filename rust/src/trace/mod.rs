@@ -103,17 +103,25 @@ pub fn write_run(dir: &Path, report: &RunReport) -> Result<()> {
     Ok(())
 }
 
+/// Map a `SCALE_LOG` value to a level filter. Unset or unrecognized
+/// values fall back to `Info`; `off`/`none` silence the logger
+/// entirely (the knob CI smoke runs use to keep stderr clean).
+fn level_from(var: Option<&str>) -> log::LevelFilter {
+    match var {
+        Some("off" | "none") => log::LevelFilter::Off,
+        Some("error") => log::LevelFilter::Error,
+        Some("warn") => log::LevelFilter::Warn,
+        Some("debug") => log::LevelFilter::Debug,
+        Some("trace") => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    }
+}
+
 /// Minimal stderr logger for the `log` facade (level from `SCALE_LOG`:
-/// error|warn|info|debug|trace; default info). Idempotent.
+/// off|error|warn|info|debug|trace; default info). Idempotent.
 pub fn init_logger() {
     static LOGGER: StderrLogger = StderrLogger;
-    let level = match std::env::var("SCALE_LOG").as_deref() {
-        Ok("error") => log::LevelFilter::Error,
-        Ok("warn") => log::LevelFilter::Warn,
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("trace") => log::LevelFilter::Trace,
-        _ => log::LevelFilter::Info,
-    };
+    let level = level_from(std::env::var("SCALE_LOG").ok().as_deref());
     if log::set_logger(&LOGGER).is_ok() {
         log::set_max_level(level);
     }
@@ -128,7 +136,12 @@ impl log::Log for StderrLogger {
 
     fn log(&self, record: &log::Record) {
         if self.enabled(record.metadata()) {
-            eprintln!("[{:<5}] {}: {}", record.level(), record.target(), record.args());
+            // one preformatted write: interleaved worker threads emit
+            // whole lines, never spliced fragments
+            use std::io::Write;
+            let line =
+                format!("[{:<5}] {}: {}\n", record.level(), record.target(), record.args());
+            let _ = std::io::stderr().lock().write_all(line.as_bytes());
         }
     }
 
@@ -226,5 +239,19 @@ mod tests {
         init_logger();
         init_logger();
         log::info!("trace logger smoke");
+    }
+
+    #[test]
+    fn log_level_parses_every_documented_value() {
+        use log::LevelFilter::*;
+        assert_eq!(level_from(None), Info);
+        assert_eq!(level_from(Some("")), Info);
+        assert_eq!(level_from(Some("bogus")), Info);
+        assert_eq!(level_from(Some("off")), Off);
+        assert_eq!(level_from(Some("none")), Off);
+        assert_eq!(level_from(Some("error")), Error);
+        assert_eq!(level_from(Some("warn")), Warn);
+        assert_eq!(level_from(Some("debug")), Debug);
+        assert_eq!(level_from(Some("trace")), Trace);
     }
 }

@@ -337,6 +337,8 @@ impl WireConfig {
     /// reference both endpoints share; it is used only when `delta` is on
     /// and the dimensions match (otherwise the frame is dense).
     pub fn encode(&self, xs: &[f32], round: u32, baseline: Option<(u32, &[f32])>) -> Frame {
+        let _s = crate::obs::span("wire.encode");
+        crate::obs::counter_add(crate::obs::Counter::FramesEncoded, 1);
         let dim = xs.len();
         let c = codec(self.codec);
         let base = if self.delta {
@@ -534,6 +536,8 @@ impl Frame {
     /// baseline the sender referenced (`baseline_round` names the ring
     /// entry); dense frames ignore it.
     pub fn decode(&self, baseline: Option<&[f32]>) -> Result<Vec<f32>> {
+        let _s = crate::obs::span("wire.decode");
+        crate::obs::counter_add(crate::obs::Counter::FramesDecoded, 1);
         let dim = self.dim as usize;
         let c = codec(self.codec);
         if !self.delta {

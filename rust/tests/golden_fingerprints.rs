@@ -216,6 +216,23 @@ fn golden_fingerprints_pinned_and_thread_invariant() {
                 "{name}: fingerprint diverged between threads 1 and {par_threads}"
             );
         }
+        // telemetry must be write-only with respect to the simulation:
+        // the same case under a fully live registry (spans + counters;
+        // no sinks) reproduces the bare fingerprint at both thread
+        // counts — the obs-on/obs-off identity the subsystem pins
+        for threads in [1, par_threads] {
+            scale_fl::obs::install(&scale_fl::obs::ObsConfig {
+                enabled: true,
+                ..Default::default()
+            })
+            .expect("obs install");
+            let (fp_obs, _) = run_case(&case, threads);
+            scale_fl::obs::finish().expect("obs finish");
+            assert_eq!(
+                fp_seq, fp_obs,
+                "{name}: telemetry moved the fingerprint at threads {threads}"
+            );
+        }
         computed.insert(name, hash_seq.clone());
         match golden.get(name) {
             Some(stored) if *stored == hash_seq => {}

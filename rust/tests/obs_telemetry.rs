@@ -1,0 +1,179 @@
+//! Telemetry subsystem contract tests — the ones that must own the
+//! process-global registry. Library unit tests never flip the global
+//! `obs` switch (they would race the rest of the suite inside one test
+//! process); everything that installs/enables telemetry lives in this
+//! dedicated binary, serialized through [`OBS_LOCK`].
+//!
+//! The contracts under test:
+//! * span nesting produces dot-joined paths;
+//! * counter/gauge aggregates are byte-identical across `--threads 1`
+//!   vs N and across reruns (the sharded-registry merge is
+//!   deterministic);
+//! * `RunReport::fingerprint` is byte-identical with telemetry on or
+//!   off — observation never perturbs the simulation;
+//! * a disabled registry records nothing;
+//! * the JSONL trace is line-delimited valid JSON and the Prometheus
+//!   dump carries every metric family.
+
+mod common;
+
+use std::sync::Mutex;
+
+use scale_fl::obs::{self, Counter, Gauge, ObsConfig};
+use scale_fl::scenario::Scenario;
+use scale_fl::sim::{AlgoKind, Simulation};
+
+/// Serializes every test in this binary: the obs registry is
+/// process-global, and the default test runner is multi-threaded.
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    // a poisoned lock only means an earlier test assert-failed while
+    // holding it; the registry is reset by the next install()
+    OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run the canonical small federation under SCALE at `threads`, with
+/// telemetry live, and return (fingerprint, counters, live_nodes).
+fn run_observed(threads: usize) -> (String, Vec<u64>, u64) {
+    obs::install(&ObsConfig { enabled: true, ..Default::default() }).unwrap();
+    let compute = common::native();
+    let mut cfg = common::small_cfg();
+    cfg.threads = threads;
+    let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
+    let report = sim.run_algo(AlgoKind::Scale, &Scenario::none()).unwrap();
+    let snap = obs::snapshot();
+    let counters: Vec<u64> = Counter::ALL.iter().map(|&c| snap.counter(c)).collect();
+    let live = snap.gauge(Gauge::LiveNodes);
+    obs::finish().unwrap();
+    (report.fingerprint(), counters, live)
+}
+
+#[test]
+fn spans_nest_into_dot_joined_paths() {
+    let _g = lock();
+    obs::install(&ObsConfig { enabled: true, ..Default::default() }).unwrap();
+    {
+        let _outer = obs::span("outer");
+        let _inner = obs::span("inner");
+    }
+    {
+        let _solo = obs::span("solo");
+    }
+    {
+        let _outer = obs::span("outer");
+    }
+    let snap = obs::snapshot();
+    assert_eq!(snap.spans["outer"].calls, 2);
+    assert_eq!(snap.spans["outer.inner"].calls, 1);
+    assert_eq!(snap.spans["solo"].calls, 1);
+    assert!(
+        !snap.spans.contains_key("inner"),
+        "nested span leaked a root path: {:?}",
+        snap.spans.keys().collect::<Vec<_>>()
+    );
+    obs::finish().unwrap();
+}
+
+#[test]
+fn counters_and_gauges_are_thread_count_invariant_and_rerun_stable() {
+    let _g = lock();
+    let (fp1, counters1, live1) = run_observed(1);
+    let (fp4, counters4, live4) = run_observed(4);
+    let (fp4b, counters4b, live4b) = run_observed(4);
+    assert_eq!(fp1, fp4, "fingerprint diverged across thread counts");
+    assert_eq!(counters1, counters4, "counter aggregates diverged across thread counts");
+    assert_eq!(live1, live4, "live_nodes gauge diverged across thread counts");
+    assert_eq!((fp4.clone(), counters4, live4), (fp4b, counters4b, live4b), "rerun unstable");
+    // the instrumented paths actually fired
+    let by = |c: Counter| counters1[c as usize];
+    assert!(by(Counter::MessagesSent) > 0);
+    assert!(by(Counter::BytesOnWire) > 0);
+    assert!(by(Counter::Elections) > 0);
+    assert!(live1 > 0);
+}
+
+#[test]
+fn fingerprint_is_identical_with_telemetry_on_or_off() {
+    let _g = lock();
+    let fp_observed = run_observed(2).0;
+    obs::install(&ObsConfig::default()).unwrap(); // fully off
+    let compute = common::native();
+    let mut cfg = common::small_cfg();
+    cfg.threads = 2;
+    let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
+    let report = sim.run_algo(AlgoKind::Scale, &Scenario::none()).unwrap();
+    assert_eq!(report.fingerprint(), fp_observed, "telemetry perturbed the simulation");
+}
+
+#[test]
+fn disabled_registry_records_nothing() {
+    let _g = lock();
+    obs::install(&ObsConfig::default()).unwrap();
+    assert!(!obs::enabled());
+    {
+        let _s = obs::span("ghost");
+    }
+    obs::counter_add(Counter::FramesEncoded, 7);
+    obs::gauge_set(Gauge::LiveNodes, 7);
+    let snap = obs::snapshot();
+    assert!(snap.spans.is_empty(), "{:?}", snap.spans.keys().collect::<Vec<_>>());
+    assert_eq!(snap.counter(Counter::FramesEncoded), 0);
+    assert_eq!(snap.gauge(Gauge::LiveNodes), 0);
+    obs::finish().unwrap();
+}
+
+#[test]
+fn jsonl_trace_and_prometheus_dump_are_well_formed() {
+    let _g = lock();
+    let dir = std::env::temp_dir().join(format!("scale_obs_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("trace.jsonl");
+    let prom = dir.join("metrics.prom");
+    obs::install(&ObsConfig {
+        enabled: true,
+        trace_out: Some(trace.clone()),
+        metrics_out: Some(prom.clone()),
+    })
+    .unwrap();
+    let compute = common::native();
+    let mut cfg = common::small_cfg();
+    cfg.threads = 2;
+    let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
+    let report = sim.run_algo(AlgoKind::Scale, &Scenario::none()).unwrap();
+    obs::finish().unwrap();
+
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let records: Vec<scale_fl::util::json::Value> = text
+        .lines()
+        .map(|l| scale_fl::util::json::parse(l).unwrap_or_else(|e| panic!("bad JSONL: {l}: {e:?}")))
+        .collect();
+    let kinds: Vec<&str> =
+        records.iter().map(|r| r.get("type").and_then(|t| t.as_str()).unwrap()).collect();
+    assert_eq!(kinds[0], "manifest");
+    assert!(kinds.contains(&"run_start"));
+    assert!(kinds.contains(&"round"));
+    assert!(kinds.contains(&"run_end"));
+    assert!(kinds.contains(&"summary"));
+    // one round record per simulated round, in order
+    let rounds: Vec<u64> = records
+        .iter()
+        .filter(|r| r.get("type").and_then(|t| t.as_str()) == Some("round"))
+        .map(|r| r.get("round").unwrap().as_u64().unwrap())
+        .collect();
+    assert_eq!(rounds, (0..report.rounds.len() as u64).collect::<Vec<_>>());
+
+    let prom_text = std::fs::read_to_string(&prom).unwrap();
+    for family in [
+        "scale_messages_sent_total",
+        "scale_bytes_on_wire_total",
+        "scale_live_nodes",
+        "scale_phase_seconds_total",
+        "scale_phase_calls_total",
+        "scale_worker_busy_seconds_total",
+    ] {
+        assert!(prom_text.contains(family), "missing {family} in:\n{prom_text}");
+    }
+    assert!(prom_text.contains("phase=\"train\""), "{prom_text}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -580,3 +580,54 @@ fn fleet_scale_label_skew_tiny_alpha_never_panics() {
             .all(|c| (0.0..=1.0).contains(&c.final_accuracy)));
     }
 }
+
+#[test]
+fn obs_shard_merge_totals_are_order_independent() {
+    // The telemetry registry merges per-unit shards at the round
+    // barrier in unit order; determinism of the *aggregates* rests on
+    // every field being a pure sum. Fold a random batch of shards in
+    // unit order and in reverse (and in two halves) — identical totals.
+    use scale_fl::obs::{Counter, Shard};
+    check(
+        &Config { cases: 50, seed: 0x0B5, max_size: 8 },
+        "obs shard merge order",
+        |g| {
+            let n_shards = g.usize_in(1, 12);
+            let phases = ["train", "exchange", "collect", "upload", "broadcast"];
+            let mut shards: Vec<Shard> = Vec::with_capacity(n_shards);
+            for _ in 0..n_shards {
+                let mut s = Shard::default();
+                for &c in Counter::ALL.iter() {
+                    s.bump(c, g.rng.next_u64() % 1000);
+                }
+                for _ in 0..g.usize_in(0, 6) {
+                    let p = phases[g.usize_in(0, phases.len() - 1)];
+                    s.record_span(p.to_string(), g.rng.next_u64() % 1_000_000);
+                }
+                shards.push(s);
+            }
+            let fold = |order: &[usize]| {
+                let mut acc = Shard::default();
+                for &i in order {
+                    acc.absorb(&shards[i]);
+                }
+                acc
+            };
+            let forward: Vec<usize> = (0..n_shards).collect();
+            let reverse: Vec<usize> = (0..n_shards).rev().collect();
+            // split merge: halves folded separately, then combined —
+            // the shape a tree-reduction barrier would produce
+            let mid = n_shards / 2;
+            let mut split = fold(&forward[..mid]);
+            split.absorb(&fold(&forward[mid..]));
+            let a = fold(&forward);
+            if a != fold(&reverse) {
+                return Err("reverse merge diverged".to_string());
+            }
+            if a != split {
+                return Err("split merge diverged".to_string());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,62 @@
+#!/usr/bin/env bash
+# Schema check for the committed perf trajectory (BENCH_scale.json,
+# appended by `scale fleet bench --json`). Validates that the file is
+# JSON with schema 1 and that every entry carries the full field set —
+# so a hand-edited or truncated trajectory fails CI instead of rotting.
+# Skips gracefully (exit 0 with a notice) where python3 is unavailable.
+set -u
+
+file="${1:-BENCH_scale.json}"
+
+if [ ! -f "$file" ]; then
+    echo "check_bench_json: missing $file"
+    exit 1
+fi
+
+if ! command -v python3 >/dev/null 2>&1; then
+    echo "check_bench_json: python3 unavailable — skipping schema check"
+    exit 0
+fi
+
+python3 - "$file" <<'PY'
+import json
+import sys
+
+REQUIRED = [
+    "preset", "algo", "wire", "nodes", "clusters", "rounds", "threads",
+    "seq_s", "par_s", "rounds_per_sec", "node_steps_per_sec",
+    "per_phase_ms", "peak_rss_bytes", "fingerprint", "measured",
+]
+
+path = sys.argv[1]
+with open(path) as f:
+    doc = json.load(f)
+
+ok = True
+if doc.get("schema") != 1:
+    print(f"{path}: schema != 1: {doc.get('schema')!r}")
+    ok = False
+entries = doc.get("entries")
+if not isinstance(entries, list) or not entries:
+    print(f"{path}: 'entries' must be a non-empty list")
+    sys.exit(1)
+for i, e in enumerate(entries):
+    missing = [k for k in REQUIRED if k not in e]
+    if missing:
+        print(f"{path}: entry {i} missing {missing}")
+        ok = False
+        continue
+    if not isinstance(e["per_phase_ms"], dict):
+        print(f"{path}: entry {i}: per_phase_ms is not an object")
+        ok = False
+    if e["measured"] and not e["per_phase_ms"]:
+        print(f"{path}: entry {i}: measured entry has empty per_phase_ms")
+        ok = False
+    if e["measured"] and e["par_s"] <= 0:
+        print(f"{path}: entry {i}: measured entry has par_s <= 0")
+        ok = False
+
+if ok:
+    print(f"check_bench_json: {path} OK ({len(entries)} entry/entries)")
+sys.exit(0 if ok else 1)
+PY
