@@ -34,6 +34,7 @@
 //! assert_eq!(&Checkpoint::from_bytes(&bytes).unwrap(), ring.latest().unwrap());
 //! ```
 
+use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::path::Path;
 
@@ -100,6 +101,16 @@ impl UploadGate {
     pub fn skips(&self) -> u64 {
         self.skips
     }
+
+    /// Full internal state, for the resume snapshot.
+    pub fn snapshot(&self) -> (f64, Option<f64>, u64, u64) {
+        (self.min_delta, self.best, self.uploads, self.skips)
+    }
+
+    /// Rebuild a gate mid-stream from a resume snapshot.
+    pub fn from_snapshot(min_delta: f64, best: Option<f64>, uploads: u64, skips: u64) -> Self {
+        UploadGate { min_delta, best, uploads, skips }
+    }
 }
 
 /// Change-gated upload policy: upload while the cluster model is still
@@ -164,6 +175,21 @@ impl DeltaGate {
     pub fn skips(&self) -> u64 {
         self.skips
     }
+
+    /// Full internal state, for the resume snapshot.
+    pub fn snapshot(&self) -> (f64, Option<&Vec<f32>>, u64, u64) {
+        (self.threshold, self.last_uploaded.as_ref(), self.uploads, self.skips)
+    }
+
+    /// Rebuild a gate mid-stream from a resume snapshot.
+    pub fn from_snapshot(
+        threshold: f64,
+        last_uploaded: Option<Vec<f32>>,
+        uploads: u64,
+        skips: u64,
+    ) -> Self {
+        DeltaGate { threshold, last_uploaded, uploads, skips }
+    }
 }
 
 /// One checkpointed cluster model.
@@ -177,6 +203,13 @@ pub struct Checkpoint {
 const MAGIC: &[u8; 4] = b"SCKP";
 const VERSION: u8 = 1;
 
+/// Upper bound on the header `dim` field a decoder will accept.
+///
+/// The largest model this crate ships is a few thousand parameters; 2^24
+/// (16M params, 64 MiB raw) leaves orders of magnitude of headroom while
+/// keeping the worst-case allocation a corrupt header can induce bounded.
+pub const MAX_DIM: usize = 1 << 24;
+
 /// Codec errors.
 #[derive(Debug, thiserror::Error)]
 pub enum CodecError {
@@ -184,6 +217,8 @@ pub enum CodecError {
     BadHeader,
     #[error("unsupported version {0}")]
     BadVersion(u8),
+    #[error("implausible dim {0} (cap {MAX_DIM})")]
+    BadDim(usize),
     #[error("crc mismatch (stored {stored:08x}, computed {computed:08x})")]
     BadCrc { stored: u32, computed: u32 },
     #[error("io: {0}")]
@@ -227,10 +262,20 @@ impl Checkpoint {
         let metric = f64::from_le_bytes(bytes[9..17].try_into().unwrap());
         let dim = u32::from_le_bytes(bytes[17..21].try_into().unwrap()) as usize;
         let stored_crc = u32::from_le_bytes(bytes[21..25].try_into().unwrap());
+        if dim > MAX_DIM {
+            return Err(CodecError::BadDim(dim));
+        }
 
-        let mut raw = Vec::with_capacity(dim * 4);
-        ZlibDecoder::new(&bytes[25..]).read_to_end(&mut raw)?;
-        if raw.len() != dim * 4 {
+        // Bound the decompressor before trusting `dim`: read at most one
+        // byte past the expected payload so an oversized stream (zlib
+        // bomb) is detected without ever buffering it, and a corrupt
+        // header can't induce a multi-GiB `with_capacity`.
+        let want = dim * 4;
+        let mut raw = Vec::with_capacity(want.min(1 << 16));
+        ZlibDecoder::new(&bytes[25..])
+            .take(want as u64 + 1)
+            .read_to_end(&mut raw)?;
+        if raw.len() != want {
             return Err(CodecError::BadHeader);
         }
         let computed = crc32fast::hash(&raw);
@@ -249,35 +294,48 @@ impl Checkpoint {
 #[derive(Clone, Debug)]
 pub struct CheckpointStore {
     capacity: usize,
-    entries: Vec<Checkpoint>,
+    entries: VecDeque<Checkpoint>,
 }
 
 impl CheckpointStore {
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
-        CheckpointStore { capacity, entries: Vec::new() }
+        CheckpointStore { capacity, entries: VecDeque::with_capacity(capacity + 1) }
     }
 
-    /// Append a checkpoint, evicting the oldest beyond capacity.
+    /// Append a checkpoint, evicting the oldest beyond capacity (O(1)).
     pub fn push(&mut self, cp: Checkpoint) {
-        self.entries.push(cp);
+        self.entries.push_back(cp);
         if self.entries.len() > self.capacity {
-            self.entries.remove(0);
+            self.entries.pop_front();
         }
     }
 
     pub fn latest(&self) -> Option<&Checkpoint> {
-        self.entries.last()
+        self.entries.back()
     }
 
-    /// Highest-metric checkpoint (failover restore target).
+    /// Highest-metric checkpoint (failover restore target). NaN metrics
+    /// order below every real number (`total_cmp`), so a poisoned entry
+    /// can never win the restore slot regardless of insertion order.
     pub fn best(&self) -> Option<&Checkpoint> {
-        self.entries.iter().max_by(|a, b| {
-            a.metric
-                .partial_cmp(&b.metric)
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.round.cmp(&b.round))
-        })
+        self.entries
+            .iter()
+            .max_by(|a, b| a.metric.total_cmp(&b.metric).then(a.round.cmp(&b.round)))
+    }
+
+    /// Oldest-to-newest view of the ring (resume snapshot).
+    pub fn entries(&self) -> impl Iterator<Item = &Checkpoint> {
+        self.entries.iter()
+    }
+
+    /// Rebuild a ring from a snapshot, oldest first.
+    pub fn from_entries(capacity: usize, entries: Vec<Checkpoint>) -> Self {
+        let mut store = CheckpointStore::new(capacity);
+        for cp in entries {
+            store.push(cp);
+        }
+        store
     }
 
     pub fn len(&self) -> usize {
@@ -286,6 +344,10 @@ impl CheckpointStore {
 
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 
     /// Persist the latest checkpoint to disk.
@@ -428,6 +490,92 @@ mod tests {
     }
 
     #[test]
+    fn codec_rejects_absurd_dim_without_allocating() {
+        let mut bytes = cp(2, 0.5, 8).to_bytes();
+        // claim 4 billion params: must fail fast on the cap, never attempt
+        // the ~16 GiB buffer the old decoder reserved up front
+        bytes[17..21].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            Checkpoint::from_bytes(&bytes),
+            Err(CodecError::BadDim(d)) if d == u32::MAX as usize
+        ));
+        // just past the cap is rejected too
+        bytes[17..21].copy_from_slice(&((MAX_DIM as u32) + 1).to_le_bytes());
+        assert!(matches!(Checkpoint::from_bytes(&bytes), Err(CodecError::BadDim(_))));
+    }
+
+    #[test]
+    fn codec_rejects_dim_payload_mismatch() {
+        // header says fewer params than the stream holds → bounded reader
+        // stops one byte past `dim * 4` and errors
+        let mut bytes = cp(2, 0.5, 33).to_bytes();
+        bytes[17..21].copy_from_slice(&1u32.to_le_bytes());
+        assert!(matches!(Checkpoint::from_bytes(&bytes), Err(CodecError::BadHeader)));
+        // header says more params than the stream holds
+        let mut bytes = cp(2, 0.5, 33).to_bytes();
+        bytes[17..21].copy_from_slice(&1000u32.to_le_bytes());
+        assert!(matches!(Checkpoint::from_bytes(&bytes), Err(CodecError::BadHeader)));
+    }
+
+    #[test]
+    fn codec_bounds_zlib_bomb() {
+        // a plausible header (dim 8) spliced onto a 4 MiB-of-zeros zlib
+        // stream: the `.take` bound must reject after 33 bytes instead of
+        // inflating the whole bomb into memory
+        let raw = vec![0u8; 4 << 20];
+        let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(&raw).unwrap();
+        let bomb = enc.finish().unwrap();
+
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.push(VERSION);
+        bytes.extend_from_slice(&3u32.to_le_bytes()); // round
+        bytes.extend_from_slice(&0.5f64.to_le_bytes()); // metric
+        bytes.extend_from_slice(&8u32.to_le_bytes()); // dim
+        bytes.extend_from_slice(&crc32fast::hash(&raw[..32]).to_le_bytes());
+        bytes.extend_from_slice(&bomb);
+        assert!(matches!(Checkpoint::from_bytes(&bytes), Err(CodecError::BadHeader)));
+    }
+
+    #[test]
+    fn codec_rejects_every_truncation() {
+        let bytes = cp(5, 0.7, 33).to_bytes();
+        for len in 0..bytes.len() {
+            assert!(
+                Checkpoint::from_bytes(&bytes[..len]).is_err(),
+                "prefix of {len} bytes decoded"
+            );
+        }
+    }
+
+    #[test]
+    fn codec_rejects_bitflips_in_checked_regions() {
+        // every byte outside round/metric (which the codec stores but does
+        // not checksum) must fail closed when flipped: magic, version, dim,
+        // crc, and the whole compressed payload
+        let bytes = cp(5, 0.7, 33).to_bytes();
+        for i in (0..5).chain(17..bytes.len()) {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x01;
+            assert!(Checkpoint::from_bytes(&bad).is_err(), "flip at byte {i} decoded");
+        }
+    }
+
+    #[test]
+    fn codec_version_skew_rejected() {
+        let bytes = cp(5, 0.7, 8).to_bytes();
+        for v in [0u8, 2, VERSION + 1, 0xFF] {
+            let mut bad = bytes.clone();
+            bad[4] = v;
+            assert!(matches!(
+                Checkpoint::from_bytes(&bad),
+                Err(CodecError::BadVersion(got)) if got == v
+            ));
+        }
+    }
+
+    #[test]
     fn compression_helps_on_smooth_params() {
         let c = Checkpoint { round: 0, metric: 0.0, params: vec![0.25f32; 4096] };
         let bytes = c.to_bytes();
@@ -443,6 +591,28 @@ mod tests {
         assert_eq!(s.len(), 3); // round 0 evicted
         assert_eq!(s.latest().unwrap().round, 3);
         assert_eq!(s.best().unwrap().round, 1); // 0.9 survived
+    }
+
+    #[test]
+    fn store_best_survives_nan_metrics() {
+        // a NaN eval (empty validation split) must never win the failover
+        // restore slot — under the old partial_cmp/unwrap_or(Equal) code
+        // the winner depended on insertion order
+        let mut s = CheckpointStore::new(8);
+        s.push(cp(0, f64::NAN, 8));
+        s.push(cp(1, 0.6, 8));
+        s.push(cp(2, f64::NAN, 8));
+        assert_eq!(s.best().unwrap().round, 1);
+        // NaN-first and NaN-last orderings agree
+        let mut t = CheckpointStore::new(8);
+        t.push(cp(0, 0.6, 8));
+        t.push(cp(1, f64::NAN, 8));
+        assert_eq!(t.best().unwrap().round, 0);
+        // all-NaN ring still yields a deterministic winner (highest round)
+        let mut u = CheckpointStore::new(8);
+        u.push(cp(0, f64::NAN, 8));
+        u.push(cp(1, f64::NAN, 8));
+        assert_eq!(u.best().unwrap().round, 1);
     }
 
     #[test]

@@ -220,9 +220,21 @@ impl SimConfig {
                 cfg.cluster.max_iters = 12;
                 Ok(cfg)
             }
+            "fleet-1m" => {
+                // million-node scale (DESIGN.md §10): paged node arenas
+                // keep the container out of one giant allocation, and the
+                // preset is meant to run under heavy sampling
+                // (`--sample 0.001`) with `--stop-after`/`--resume`
+                // splitting the run across processes. Formation is
+                // trimmed harder than 100k: Lloyd capped at 8 iterations.
+                let mut cfg = SimConfig::fleet_preset(1_000_000, 8_192);
+                cfg.cluster.balance_slack = None;
+                cfg.cluster.max_iters = 8;
+                Ok(cfg)
+            }
             other => bail!(
                 "unknown preset '{other}' (paper, fleet-1k, fleet-4k, fleet-10k, \
-                 fleet-100k)"
+                 fleet-100k, fleet-1m)"
             ),
         }
     }
@@ -367,6 +379,7 @@ impl SimConfig {
                 None => Value::Null,
             },
         );
+        v.set("cluster_max_iters", Value::Num(self.cluster.max_iters as f64));
         v
     }
 
@@ -493,6 +506,9 @@ impl SimConfig {
         cfg.cluster.weights = w;
         if let Some(slot) = v.get("cluster_balance_slack") {
             cfg.cluster.balance_slack = slot.as_usize();
+        }
+        if let Some(x) = int("cluster_max_iters") {
+            cfg.cluster.max_iters = x;
         }
         let cfg = cfg.normalized();
         cfg.validate()?;
@@ -627,6 +643,7 @@ mod tests {
             ("fleet-4k", 4_000, 64),
             ("fleet-10k", 10_000, 256),
             ("fleet-100k", 100_000, 2_048),
+            ("fleet-1m", 1_000_000, 8_192),
         ] {
             let cfg = SimConfig::preset(name).unwrap();
             cfg.validate().unwrap();
@@ -639,12 +656,18 @@ mod tests {
             assert!(cfg.dataset_malignant < cfg.dataset_samples);
         }
         assert_eq!(SimConfig::preset("paper").unwrap().n_nodes, 100);
-        assert!(SimConfig::preset("fleet-1m").is_err());
-        // the 100k preset trims formation cost: no greedy rebalance,
-        // capped Lloyd iterations
-        let big = SimConfig::preset("fleet-100k").unwrap();
-        assert_eq!(big.cluster.balance_slack, None);
-        assert!(big.cluster.max_iters <= 12);
+        assert!(SimConfig::preset("fleet-2m").is_err());
+        // the big presets trim formation cost: no greedy rebalance,
+        // capped Lloyd iterations — and the cap must survive the JSON
+        // round-trip (resume replays formation from the embedded config)
+        for (name, cap) in [("fleet-100k", 12), ("fleet-1m", 8)] {
+            let big = SimConfig::preset(name).unwrap();
+            assert_eq!(big.cluster.balance_slack, None);
+            assert_eq!(big.cluster.max_iters, cap);
+            let back = SimConfig::from_json(&big.to_json()).unwrap();
+            assert_eq!(back.cluster.max_iters, cap);
+            assert_eq!(back.cluster.balance_slack, None);
+        }
     }
 
     #[test]

@@ -119,6 +119,24 @@ impl HealthMonitor {
     pub fn registered(&self) -> impl Iterator<Item = usize> + '_ {
         self.nodes.keys().copied()
     }
+
+    /// `(node, last_beat_round, registered_round)` triples in node order,
+    /// for the resume snapshot.
+    pub fn snapshot(&self) -> Vec<(usize, usize, usize)> {
+        self.nodes
+            .iter()
+            .map(|(&n, h)| (n, h.last_beat_round, h.registered_round))
+            .collect()
+    }
+
+    /// Rebuild a monitor mid-run from [`Self::snapshot`] output.
+    pub fn from_snapshot(cfg: HealthConfig, entries: &[(usize, usize, usize)]) -> Self {
+        let mut m = HealthMonitor::new(cfg);
+        for &(node, last_beat_round, registered_round) in entries {
+            m.nodes.insert(node, NodeHealth { last_beat_round, registered_round });
+        }
+        m
+    }
 }
 
 #[cfg(test)]

@@ -28,9 +28,7 @@
 //! scale bench matrix --presets paper --codecs lossless,lean --csv matrix.csv
 //! ```
 
-use std::path::Path;
-#[cfg(feature = "pjrt")]
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 #[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
@@ -45,7 +43,9 @@ use scale_fl::runtime::manifest::ModelKind;
 #[cfg(feature = "pjrt")]
 use scale_fl::runtime::Runtime;
 use scale_fl::scenario::{self, sweep, Scenario};
-use scale_fl::sim::{AlgoKind, Simulation};
+use scale_fl::sim::{
+    AlgoKind, CsvRoundSink, RoundSink, RunCtl, RunOutcome, RunState, Simulation,
+};
 
 const RUN_SPEC: Spec = Spec {
     flags: &[
@@ -53,7 +53,7 @@ const RUN_SPEC: Spec = Spec {
         "clusters", "rounds", "epochs", "seed", "partition", "model", "min-delta",
         "failure-prob", "topology", "heterogeneity", "out", "lr", "reg",
         "trace-dir", "edge-period", "threads", "sample", "wire", "codec", "topk",
-        "trace-out", "metrics-out",
+        "trace-out", "metrics-out", "resume", "state", "stop-after", "stream-rounds",
     ],
     switches: &["table1", "fig2", "quiet", "rounds-trace", "quantize", "secagg", "delta"],
 };
@@ -206,6 +206,15 @@ fn backend_pjrt(_args: &Args, _model: ModelKind) -> Result<Box<dyn ModelCompute>
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
+    // the run-control flags funnel through the engine's RunCtl path,
+    // which drives exactly one algorithm (no `--algo both` ensemble)
+    if args.get("resume").is_some()
+        || args.get("stop-after").is_some()
+        || args.get("state").is_some()
+        || args.get("stream-rounds").is_some()
+    {
+        return cmd_run_ctl(args);
+    }
     let cfg = cli::config_from(args)?;
     let backend = backend_from(args, &cfg)?;
     obs_install(args, false)?;
@@ -298,6 +307,111 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
 
     write_outputs(args, &reports, quiet)?;
+    obs_finish(args, quiet)
+}
+
+/// `run` with run-control: `--resume <state>` picks a signed snapshot
+/// back up, `--stop-after <n>` suspends once `n` rounds are recorded
+/// (writing the snapshot to `--state`, default `scale_run.state`), and
+/// `--stream-rounds <csv>` appends one flushed CSV row per completed
+/// round. A resumed run reproduces the uninterrupted run's fingerprint
+/// byte for byte at any `--threads`, so only the fan-out width may be
+/// overridden on resume — everything else comes from the state file.
+fn cmd_run_ctl(args: &Args) -> Result<()> {
+    let quiet = args.has("quiet");
+    let resume = match args.get("resume") {
+        Some(p) => Some(
+            RunState::load(Path::new(p)).with_context(|| format!("loading run state {p}"))?,
+        ),
+        None => None,
+    };
+    let (cfg, algo) = match &resume {
+        Some(rs) => {
+            if let Some(m) = args.get("algo").or_else(|| args.get("mode")) {
+                anyhow::ensure!(
+                    m == rs.algo,
+                    "state file holds a {} run; drop --algo {m} (or pass --algo {})",
+                    rs.algo,
+                    rs.algo
+                );
+            }
+            let mut kind = AlgoKind::parse(&rs.algo)?;
+            if let Some(p) = args.get_usize("edge-period")? {
+                kind = kind.with_edge_period(p);
+            }
+            let mut cfg = rs.cfg.clone();
+            // the fingerprint is thread-invariant, so the fan-out width
+            // is the one knob a resume may turn
+            if let Some(t) = args.get_usize("threads")? {
+                cfg.threads = t;
+            }
+            (cfg, kind)
+        }
+        None => {
+            let mode = args.get("algo").or_else(|| args.get("mode")).unwrap_or("scale");
+            anyhow::ensure!(
+                mode != "both",
+                "--stop-after/--state/--stream-rounds need a single --algo \
+                 (scale, fedavg or hfl)"
+            );
+            let mut kind = AlgoKind::parse(mode)?;
+            if let Some(p) = args.get_usize("edge-period")? {
+                kind = kind.with_edge_period(p);
+            }
+            (cli::config_from(args)?, kind)
+        }
+    };
+    let backend = backend_from(args, &cfg)?;
+    obs_install(args, false)?;
+    if !quiet {
+        if let Some(rs) = &resume {
+            println!(
+                "resuming {} run at round {}/{} ({} nodes, seed {})",
+                rs.algo,
+                rs.next_round + 1,
+                cfg.rounds,
+                cfg.n_nodes,
+                cfg.seed
+            );
+        }
+    }
+    let mut sink = match args.get("stream-rounds") {
+        Some(p) => Some(
+            CsvRoundSink::create(Path::new(p))
+                .with_context(|| format!("creating round stream {p}"))?,
+        ),
+        None => None,
+    };
+    let ctl = RunCtl {
+        resume,
+        stop_after: args.get_usize("stop-after")?,
+        state_out: args.get("state").map(PathBuf::from),
+        sink: sink.as_mut().map(|s| s as &mut dyn RoundSink),
+    };
+    let mut sim = backend.simulation(cfg)?;
+    match sim.run_algo_ctl(algo, &Scenario::none(), ctl)? {
+        RunOutcome::Complete(report) => {
+            if !quiet {
+                report.print_summary();
+                // the compact determinism witness a resumed run must
+                // reproduce byte for byte
+                println!("fingerprint     : {}", report.fingerprint_hash());
+                if args.has("rounds-trace") {
+                    report.print_rounds();
+                }
+            }
+            write_outputs(args, &[report], quiet)?;
+        }
+        RunOutcome::Suspended { rounds_done, state_path } => {
+            if !quiet {
+                println!(
+                    "suspended after {rounds_done} round(s); state written to {}",
+                    state_path.display()
+                );
+                println!("resume with: scale run --resume {}", state_path.display());
+            }
+        }
+    }
     obs_finish(args, quiet)
 }
 

@@ -75,6 +75,35 @@ pub enum MsgKind {
     EdgeBroadcast,
 }
 
+impl MsgKind {
+    /// Every kind in declaration order — the stable wire code space the
+    /// resume snapshot serializes ledger totals under.
+    pub const ALL: [MsgKind; 12] = [
+        MsgKind::Summary,
+        MsgKind::Assignment,
+        MsgKind::PeerExchange,
+        MsgKind::DriverCollect,
+        MsgKind::DriverBroadcast,
+        MsgKind::GlobalUpdate,
+        MsgKind::GlobalBroadcast,
+        MsgKind::Heartbeat,
+        MsgKind::Election,
+        MsgKind::CheckpointLocal,
+        MsgKind::EdgeUpdate,
+        MsgKind::EdgeBroadcast,
+    ];
+
+    /// Stable serialization code (index into [`Self::ALL`]).
+    pub fn code(self) -> u8 {
+        Self::ALL.iter().position(|&k| k == self).expect("kind in ALL") as u8
+    }
+
+    /// Inverse of [`Self::code`].
+    pub fn from_code(code: u8) -> Option<MsgKind> {
+        Self::ALL.get(code as usize).copied()
+    }
+}
+
 /// Link classes with different base latency / effective bandwidth.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LinkClass {
@@ -237,6 +266,25 @@ impl TrafficLedger {
             .sum()
     }
 
+    /// Aggregate state — per-kind totals and the per-round
+    /// `GlobalUpdate` series — for the resume snapshot. The per-message
+    /// log is deliberately excluded: engine runs keep `keep_log` off
+    /// (aggregates only), and a million-node log would defeat the
+    /// bounded-memory contract.
+    pub fn snapshot(&self) -> (Vec<(MsgKind, KindTotals)>, Vec<u64>) {
+        (
+            self.totals.iter().map(|(k, t)| (*k, *t)).collect(),
+            self.global_updates_by_round.clone(),
+        )
+    }
+
+    /// Overwrite aggregate state from a resume snapshot.
+    pub fn restore(&mut self, totals: Vec<(MsgKind, KindTotals)>, by_round: Vec<u64>) {
+        self.totals = totals.into_iter().collect();
+        self.global_updates_by_round = by_round;
+        self.log.clear();
+    }
+
     pub fn merge(&mut self, other: &TrafficLedger) {
         for (k, t) in &other.totals {
             let e = self.totals.entry(*k).or_default();
@@ -299,6 +347,21 @@ impl Network {
 
     pub fn bandwidth_degradation(&self) -> f64 {
         self.degradation
+    }
+
+    /// Jitter-stream position + degradation window, for the resume
+    /// snapshot. The main network's RNG is the one stateful stream a
+    /// round advances (per-unit forks are derived fresh each round), so
+    /// this pair is all a resumed run needs to continue draw-for-draw.
+    pub fn snapshot_state(&self) -> ([u64; 4], Option<f64>, f64) {
+        let (s, spare) = self.rng.state();
+        (s, spare, self.degradation)
+    }
+
+    /// Restore the jitter stream and degradation window mid-run.
+    pub fn restore_state(&mut self, s: [u64; 4], spare: Option<f64>, degradation: f64) {
+        self.rng = Rng::from_state(s, spare);
+        self.degradation = degradation;
     }
 
     /// Classify the link between two devices (or device ↔ cloud).

@@ -461,6 +461,19 @@ pub fn round_flush(round: usize) {
     inner.emit(v);
 }
 
+/// Emit a run-lifecycle trace record (`resume` / `suspend`), `round`
+/// being the round the loop continues from or suspended before. No-op
+/// when telemetry is disabled.
+pub fn lifecycle(what: &'static str, round: usize) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let mut v = Value::obj();
+    v.set("type", Value::Str(what.into()));
+    v.set("round", Value::Num(round as f64));
+    REGISTRY.lock().expect(POISONED).emit(v);
+}
+
 /// Emit the `run_end` trace record. The fingerprint hash is the same
 /// wall-clock-free digest the golden suite pins — recording it in the
 /// trace changes nothing about the report itself.

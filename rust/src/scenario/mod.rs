@@ -362,6 +362,11 @@ pub struct ScenarioState {
     /// Nodes whose local label distribution shifted since the last
     /// re-clustering (drift trigger for the regulation loop).
     pub drifted: BTreeSet<usize>,
+    /// Every node a drift event ever touched — never cleared (the
+    /// regulation loop drains `drifted` when it repairs). The resume
+    /// snapshot uses this set to know whose training labels diverged
+    /// from the deterministic initial partition and must be captured.
+    pub ever_drifted: BTreeSet<usize>,
     pub regulation: RegulationPolicy,
     last_recluster: Option<usize>,
 }
@@ -377,6 +382,7 @@ impl ScenarioState {
             pending_join: BTreeSet::new(),
             unassigned: BTreeSet::new(),
             drifted: BTreeSet::new(),
+            ever_drifted: BTreeSet::new(),
             regulation: scenario.regulation,
             last_recluster: None,
         }
@@ -448,6 +454,71 @@ impl ScenarioState {
 
     pub fn note_recluster(&mut self, round: usize) {
         self.last_recluster = Some(round);
+    }
+
+    /// Serialize the scheduler's mutable state for the resume snapshot.
+    /// The timeline itself (`events`) and the regulation policy are not
+    /// written: a resume re-reads the scenario source and only needs to
+    /// fast-forward this scheduler over it.
+    pub fn snapshot(&self, w: &mut crate::util::bin::BinWriter) {
+        w.usize(self.next);
+        w.usize(self.active.len());
+        for (expire, undo) in &self.active {
+            w.usize(*expire);
+            match undo {
+                Undo::Revive(ids) => {
+                    w.u8(0);
+                    w.vec_usize(ids);
+                }
+                Undo::Unslow { ids, factor } => {
+                    w.u8(1);
+                    w.vec_usize(ids);
+                    w.f64(*factor);
+                }
+                Undo::RestoreBandwidth { factor } => {
+                    w.u8(2);
+                    w.f64(*factor);
+                }
+            }
+        }
+        for set in [&self.pending_join, &self.unassigned, &self.drifted, &self.ever_drifted] {
+            w.vec_usize(&set.iter().copied().collect::<Vec<_>>());
+        }
+        w.opt_usize(self.last_recluster);
+    }
+
+    /// Fast-forward a freshly built scheduler from [`Self::snapshot`]
+    /// output. Fails if the snapshot claims more applied events than the
+    /// (re-read) timeline holds — the telltale of resuming against the
+    /// wrong scenario file.
+    pub fn restore(&mut self, r: &mut crate::util::bin::BinReader<'_>) -> Result<()> {
+        let next = r.usize()?;
+        if next > self.events.len() {
+            bail!(
+                "resume state has {next} scenario event(s) applied but the \
+                 timeline holds {} — wrong scenario file?",
+                self.events.len()
+            );
+        }
+        self.next = next;
+        let n_active = r.usize()?;
+        self.active.clear();
+        for _ in 0..n_active {
+            let expire = r.usize()?;
+            let undo = match r.u8()? {
+                0 => Undo::Revive(r.vec_usize()?),
+                1 => Undo::Unslow { ids: r.vec_usize()?, factor: r.f64()? },
+                2 => Undo::RestoreBandwidth { factor: r.f64()? },
+                tag => bail!("resume state corrupt: undo tag {tag}"),
+            };
+            self.active.push((expire, undo));
+        }
+        self.pending_join = r.vec_usize()?.into_iter().collect();
+        self.unassigned = r.vec_usize()?.into_iter().collect();
+        self.drifted = r.vec_usize()?.into_iter().collect();
+        self.ever_drifted = r.vec_usize()?.into_iter().collect();
+        self.last_recluster = r.opt_usize()?;
+        Ok(())
     }
 }
 

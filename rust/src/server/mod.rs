@@ -184,6 +184,37 @@ impl GlobalServer {
     pub fn coverage(&self) -> usize {
         self.models.iter().flatten().map(|m| m.size).sum()
     }
+
+    /// Round-mutated server state — the cluster-model registry plus the
+    /// cost counters — for the resume snapshot. Summaries and the
+    /// clustering are *not* captured: they are produced by the
+    /// deterministic setup replay a resume performs before restoring.
+    pub fn snapshot_models(&self) -> Vec<Option<(Vec<f32>, usize, usize)>> {
+        self.models
+            .iter()
+            .map(|m| m.as_ref().map(|c| (c.params.clone(), c.size, c.round)))
+            .collect()
+    }
+
+    /// Overwrite the model registry from a resume snapshot. The slot
+    /// count must match the replayed clustering's.
+    pub fn restore_models(
+        &mut self,
+        models: Vec<Option<(Vec<f32>, usize, usize)>>,
+    ) -> Result<()> {
+        if !self.models.is_empty() && self.models.len() != models.len() {
+            bail!(
+                "resume snapshot has {} cluster-model slot(s), replayed setup has {}",
+                models.len(),
+                self.models.len()
+            );
+        }
+        self.models = models
+            .into_iter()
+            .map(|m| m.map(|(params, size, round)| ClusterModel { params, size, round }))
+            .collect();
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -28,6 +28,7 @@ use crate::runtime::compute::ModelCompute;
 use crate::server::GlobalServer;
 use crate::sim::report::{group_reports, ClusterReport};
 use crate::sim::{engine, NodeState, Simulation};
+use crate::util::bin::{BinReader, BinWriter};
 use crate::util::rng::mix64;
 
 use super::{Algorithm, RoundOut};
@@ -115,9 +116,20 @@ impl Algorithm for FedAvgAlgo {
         let payload = self.payload;
         let cfg = &sim.cfg;
         let base_net = &sim.net;
-        let units: Vec<(usize, &mut [NodeState])> =
-            sim.nodes.chunks_mut(NODE_SHARD).enumerate().collect();
-        let run_one = |(shard, nodes): (usize, &mut [NodeState]),
+        let mut slots = sim.nodes.slots();
+        let n = slots.len();
+        let units: Vec<(usize, Vec<&mut NodeState>)> = (0..n.div_ceil(NODE_SHARD))
+            .map(|shard| {
+                let lo = shard * NODE_SHARD;
+                let hi = (lo + NODE_SHARD).min(n);
+                let nodes: Vec<&mut NodeState> = slots[lo..hi]
+                    .iter_mut()
+                    .map(|slot| slot.take().expect("node claimed by two shards"))
+                    .collect();
+                (shard, nodes)
+            })
+            .collect();
+        let run_one = |(shard, mut nodes): (usize, Vec<&mut NodeState>),
                        compute: &dyn ModelCompute|
          -> Result<(ShardOut, TrafficLedger)> {
             let seed = mix64(
@@ -223,5 +235,40 @@ impl Algorithm for FedAvgAlgo {
             |_, group| group.iter().map(|&id| self.per_node_updates[id]).sum(),
             final_params,
         )
+    }
+
+    /// Round-mutated baseline state: the global model and per-node update
+    /// counters. The grouping travels as a flag only — it is the SCALE
+    /// clustering over setup-time summaries, which `restore_state`
+    /// recomputes deterministically when the flag is set.
+    fn snapshot_state(&self, w: &mut BinWriter) -> Result<()> {
+        w.bool(self.grouping.is_some());
+        w.vec_f32(&self.global);
+        w.vec_u64(&self.per_node_updates);
+        Ok(())
+    }
+
+    fn restore_state(
+        &mut self,
+        sim: &mut Simulation<'_>,
+        r: &mut BinReader<'_>,
+    ) -> Result<()> {
+        if r.bool()? {
+            if self.grouping.is_none() {
+                self.grouping = Some(sim.scale_grouping()?);
+            }
+        } else {
+            self.grouping = None;
+        }
+        self.global = r.vec_f32()?;
+        let updates = r.vec_u64()?;
+        anyhow::ensure!(
+            updates.len() == sim.nodes.len(),
+            "resume state has {} update counter(s) for {} node(s)",
+            updates.len(),
+            sim.nodes.len()
+        );
+        self.per_node_updates = updates;
+        Ok(())
     }
 }

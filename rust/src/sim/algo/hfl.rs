@@ -25,6 +25,7 @@ use crate::runtime::compute::ModelCompute;
 use crate::server::GlobalServer;
 use crate::sim::report::{group_reports, ClusterReport, RoundRecord};
 use crate::sim::{engine, NodeState, Simulation};
+use crate::util::bin::{BinReader, BinWriter};
 use crate::util::rng::mix64;
 
 use super::{Algorithm, RoundOut};
@@ -92,7 +93,7 @@ impl Algorithm for HflAlgo {
         // global server (re-using the registry machinery)
         let n_edges = sim.cfg.fleet.n_metros.max(1);
         let mut edge_members: Vec<Vec<usize>> = vec![Vec::new(); n_edges];
-        for node in &sim.nodes {
+        for node in sim.nodes.iter() {
             edge_members[node.device.metro % n_edges].push(node.id);
         }
         edge_members.retain(|m| !m.is_empty());
@@ -144,8 +145,7 @@ impl Algorithm for HflAlgo {
         let edge_devices = &self.edge_devices;
         let cfg = &sim.cfg;
         let base_net = &sim.net;
-        let mut slots: Vec<Option<&mut NodeState>> =
-            sim.nodes.iter_mut().map(Some).collect();
+        let mut slots = sim.nodes.slots();
         let units: Vec<(usize, Vec<&mut NodeState>)> = self
             .edge_members
             .iter()
@@ -300,5 +300,51 @@ impl Algorithm for HflAlgo {
     fn edge_cost_usd(&self, sim: &Simulation<'_>, rounds: &[RoundRecord]) -> f64 {
         let modelled_s: f64 = rounds.iter().map(|r| r.latency_ms).sum::<f64>() / 1e3;
         self.edge_members.len() as f64 * modelled_s * sim.net.cfg.edge_server_cost_per_s
+    }
+
+    /// Round-mutated tier state: edge models, edge sync counters, the
+    /// global model. Membership, edge devices and the payload size are
+    /// setup-derived and rebuilt by the replay. `edge_period` is an
+    /// algorithm parameter, not part of `SimConfig`, so it travels in
+    /// the snapshot and a resume with a different `--edge-period` is
+    /// rejected rather than silently changing the sync cadence.
+    fn snapshot_state(&self, w: &mut BinWriter) -> Result<()> {
+        w.usize(self.edge_period);
+        w.usize(self.edge_models.len());
+        for m in &self.edge_models {
+            w.vec_f32(m);
+        }
+        w.vec_u64(&self.edge_updates);
+        w.vec_f32(&self.global);
+        Ok(())
+    }
+
+    fn restore_state(
+        &mut self,
+        _sim: &mut Simulation<'_>,
+        r: &mut BinReader<'_>,
+    ) -> Result<()> {
+        let period = r.usize()?;
+        anyhow::ensure!(
+            period == self.edge_period,
+            "resume state was written with --edge-period {period}, run asked for {}",
+            self.edge_period
+        );
+        let n = r.usize()?;
+        anyhow::ensure!(
+            n == self.edge_members.len(),
+            "resume state has {n} edge model(s), replayed setup built {}",
+            self.edge_members.len()
+        );
+        self.edge_models = (0..n).map(|_| r.vec_f32()).collect::<Result<Vec<_>>>()?;
+        let updates = r.vec_u64()?;
+        anyhow::ensure!(
+            updates.len() == n,
+            "resume state has {} edge counter(s) for {n} edge(s)",
+            updates.len()
+        );
+        self.edge_updates = updates;
+        self.global = r.vec_f32()?;
+        Ok(())
     }
 }

@@ -40,6 +40,7 @@ use crate::scenario::ScenarioState;
 use crate::server::GlobalServer;
 use crate::sim::report::{ClusterReport, RoundRecord, ScenarioNote};
 use crate::sim::Simulation;
+use crate::util::bin::{BinReader, BinWriter};
 
 /// One round's algorithm-level outcome; the engine folds it into a
 /// [`RoundRecord`] (adding the engine-owned fields: eval metrics, live
@@ -136,6 +137,25 @@ pub trait Algorithm {
     /// for infrastructure-free algorithms).
     fn edge_cost_usd(&self, _sim: &Simulation<'_>, _rounds: &[RoundRecord]) -> f64 {
         0.0
+    }
+
+    /// Serialize round-mutated algorithm state into the resume snapshot
+    /// body (`sim::resume`). Setup-derived state — summaries, membership
+    /// inputs, the edge registry — is *not* written: [`Self::restore_state`]
+    /// runs after a fresh, fully deterministic `setup` replay, so only
+    /// what completed rounds can have changed belongs here.
+    fn snapshot_state(&self, _w: &mut BinWriter) -> Result<()> {
+        bail!("algorithm '{}' does not support --resume", self.mode())
+    }
+
+    /// Restore round-mutated algorithm state after the `setup` replay
+    /// (node state has already been restored when this runs).
+    fn restore_state(
+        &mut self,
+        _sim: &mut Simulation<'_>,
+        _r: &mut BinReader<'_>,
+    ) -> Result<()> {
+        bail!("algorithm '{}' does not support --resume", self.mode())
     }
 }
 

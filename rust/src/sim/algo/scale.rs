@@ -17,8 +17,9 @@
 
 use anyhow::Result;
 
+use crate::checkpoint::{Checkpoint, CheckpointStore, DeltaGate, UploadGate};
 use crate::geo::{centroid, equirectangular_km, GeoPoint};
-use crate::health::HealthState;
+use crate::health::{HealthMonitor, HealthState};
 use crate::netsim::{summary_payload_bytes, MsgKind, TrafficLedger};
 use crate::runtime::compute::ModelCompute;
 use crate::scenario::ScenarioState;
@@ -26,6 +27,7 @@ use crate::server::GlobalServer;
 use crate::sim::cluster_round::{self, ClusterRoundOut};
 use crate::sim::report::{ClusterReport, ScenarioNote};
 use crate::sim::{engine, ClusterState, NodeState, Simulation, ASSIGNMENT_BYTES};
+use crate::util::bin::{BinReader, BinWriter};
 use crate::util::rng::mix64;
 
 use super::{Algorithm, Repairs, RoundOut};
@@ -52,6 +54,10 @@ impl Algorithm for ScaleAlgo {
 
     fn setup(&mut self, sim: &mut Simulation<'_>, server: &mut GlobalServer) -> Result<()> {
         let members = sim.cluster_formation(server)?;
+        // re-shard the arena cluster-contiguous so each fanned-out
+        // cluster round walks adjacent pages (locality only — id-order
+        // accessors, and therefore the fingerprint, are unaffected)
+        sim.nodes.regroup(&members);
         self.clusters = sim.init_clusters(members)?;
         Ok(())
     }
@@ -268,8 +274,7 @@ impl Algorithm for ScaleAlgo {
         let cfg = &sim.cfg;
         let root_key = sim.root_key;
         let base_net = &sim.net;
-        let mut slots: Vec<Option<&mut NodeState>> =
-            sim.nodes.iter_mut().map(Some).collect();
+        let mut slots = sim.nodes.slots();
         let units: Vec<(&mut ClusterState, Vec<&mut NodeState>)> = self
             .clusters
             .iter_mut()
@@ -346,5 +351,98 @@ impl Algorithm for ScaleAlgo {
                 elections: c.elections,
             })
             .collect())
+    }
+
+    /// Round-mutated cluster state: membership (regulation may have
+    /// re-formed it), driver, gates, checkpoint ring, health monitor and
+    /// counters. Eval views and `pos_frac` are *not* written —
+    /// `restore_state` recomputes them from the restored nodes.
+    fn snapshot_state(&self, w: &mut BinWriter) -> Result<()> {
+        w.usize(self.clusters.len());
+        for c in &self.clusters {
+            w.usize(c.id);
+            w.vec_usize(&c.members);
+            w.usize(c.driver);
+            let (min_delta, best, uploads, skips) = c.gate.snapshot();
+            w.f64(min_delta);
+            w.opt_f64(best);
+            w.u64(uploads);
+            w.u64(skips);
+            let (min_delta, baseline, uploads, skips) = c.delta_gate.snapshot();
+            w.f64(min_delta);
+            w.opt_vec_f32(baseline);
+            w.u64(uploads);
+            w.u64(skips);
+            w.usize(c.store.capacity());
+            w.usize(c.store.entries().count());
+            for cp in c.store.entries() {
+                w.u32(cp.round);
+                w.f64(cp.metric);
+                w.vec_f32(&cp.params);
+            }
+            let beats = c.monitor.snapshot();
+            w.usize(beats.len());
+            for (node, last_beat, registered) in beats {
+                w.usize(node);
+                w.usize(last_beat);
+                w.usize(registered);
+            }
+            w.opt_vec_f32(c.upload_baseline.as_ref());
+            w.u64(c.elections);
+            w.u64(c.updates);
+            w.f64(c.last_accuracy);
+        }
+        Ok(())
+    }
+
+    fn restore_state(
+        &mut self,
+        sim: &mut Simulation<'_>,
+        r: &mut BinReader<'_>,
+    ) -> Result<()> {
+        let n = r.usize()?;
+        anyhow::ensure!(
+            n == self.clusters.len(),
+            "resume state has {n} cluster(s), replayed formation built {}",
+            self.clusters.len()
+        );
+        for c in self.clusters.iter_mut() {
+            let id = r.usize()?;
+            anyhow::ensure!(id == c.id, "resume cluster id {id}, expected {}", c.id);
+            c.members = r.vec_usize()?;
+            c.driver = r.usize()?;
+            let (min_delta, best, uploads, skips) =
+                (r.f64()?, r.opt_f64()?, r.u64()?, r.u64()?);
+            c.gate = UploadGate::from_snapshot(min_delta, best, uploads, skips);
+            let (min_delta, baseline, uploads, skips) =
+                (r.f64()?, r.opt_vec_f32()?, r.u64()?, r.u64()?);
+            c.delta_gate = DeltaGate::from_snapshot(min_delta, baseline, uploads, skips);
+            let capacity = r.usize()?;
+            let n_cp = r.usize()?;
+            let mut entries = Vec::with_capacity(n_cp.min(64));
+            for _ in 0..n_cp {
+                entries.push(Checkpoint {
+                    round: r.u32()?,
+                    metric: r.f64()?,
+                    params: r.vec_f32()?,
+                });
+            }
+            c.store = CheckpointStore::from_entries(capacity, entries);
+            let n_beats = r.usize()?;
+            let mut beats = Vec::with_capacity(n_beats.min(1 << 16));
+            for _ in 0..n_beats {
+                beats.push((r.usize()?, r.usize()?, r.usize()?));
+            }
+            c.monitor = HealthMonitor::from_snapshot(sim.cfg.health, &beats);
+            c.upload_baseline = r.opt_vec_f32()?;
+            c.elections = r.u64()?;
+            c.updates = r.u64()?;
+            c.last_accuracy = r.f64()?;
+        }
+        // eval unions and label mixes re-derive from the restored nodes
+        for c in self.clusters.iter_mut() {
+            sim.refresh_cluster_eval(c);
+        }
+        Ok(())
     }
 }

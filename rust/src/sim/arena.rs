@@ -1,0 +1,165 @@
+//! Sharded node-state storage for million-node fleets (DESIGN.md §10).
+//!
+//! `fleet-100k` fit in memory by sharing one `Arc<Dataset>`; at 1M nodes
+//! the *container* becomes the problem: a flat `Vec<NodeState>` is one
+//! multi-hundred-MB contiguous allocation that the allocator must find,
+//! grow and copy as a unit. [`NodeArena`] stores nodes in bounded pages
+//! (at most [`PAGE`] nodes each) and, after cluster formation, re-shards
+//! them **cluster-contiguous** so a round unit walks one cache-friendly
+//! page run instead of striding the whole fleet.
+//!
+//! The determinism contract is preserved by construction: every public
+//! accessor ([`NodeArena::iter`], [`NodeArena::iter_mut`],
+//! [`NodeArena::slots`], indexing) is in **node-id order** regardless of
+//! the physical shard layout, so RNG draw order — and therefore
+//! `RunReport::fingerprint` — is independent of when (or whether)
+//! [`NodeArena::regroup`] ran. Resume snapshots consequently never need
+//! to record the layout.
+
+use std::ops::{Index, IndexMut};
+
+use super::NodeState;
+
+/// Maximum nodes per physical shard page.
+pub(crate) const PAGE: usize = 4096;
+
+/// Paged, cluster-groupable node storage with id-order iteration.
+pub struct NodeArena {
+    shards: Vec<Vec<NodeState>>,
+    /// id → (shard, offset) — the id-order view over the physical pages.
+    index: Vec<(u32, u32)>,
+}
+
+impl NodeArena {
+    pub fn new() -> NodeArena {
+        NodeArena { shards: Vec::new(), index: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> NodeArena {
+        NodeArena {
+            shards: Vec::with_capacity(n.div_ceil(PAGE)),
+            index: Vec::with_capacity(n),
+        }
+    }
+
+    /// Append a node (ids must arrive dense and in order: `node.id ==
+    /// self.len()`); opens a fresh page every [`PAGE`] nodes so no single
+    /// allocation scales with the fleet.
+    pub fn push(&mut self, node: NodeState) {
+        debug_assert_eq!(node.id, self.index.len(), "non-dense node id");
+        if self.shards.last().map_or(true, |s| s.len() >= PAGE) {
+            self.shards.push(Vec::with_capacity(PAGE));
+        }
+        let shard = self.shards.len() - 1;
+        let offset = self.shards[shard].len();
+        self.shards[shard].push(node);
+        self.index.push((shard as u32, offset as u32));
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Nodes in id order (layout-independent).
+    pub fn iter(&self) -> impl Iterator<Item = &NodeState> {
+        self.index
+            .iter()
+            .map(move |&(s, o)| &self.shards[s as usize][o as usize])
+    }
+
+    /// Mutable id-order traversal (layout-independent).
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut NodeState> {
+        self.slots().into_iter().map(|slot| slot.expect("dense arena"))
+    }
+
+    /// One `Option<&mut NodeState>` per id — the fan-out hand-off shape:
+    /// group units `take()` their members, leaving `None` behind, and the
+    /// borrow checker sees disjoint ownership without any unsafe.
+    pub fn slots(&mut self) -> Vec<Option<&mut NodeState>> {
+        let n = self.index.len();
+        let mut out: Vec<Option<&mut NodeState>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        for shard in &mut self.shards {
+            for node in shard.iter_mut() {
+                let id = node.id;
+                out[id] = Some(node);
+            }
+        }
+        out
+    }
+
+    /// Re-shard the fleet cluster-contiguous: each `groups[g]` becomes a
+    /// run of whole pages, so a round unit's members are physically
+    /// adjacent. Nodes in no group keep trailing pages of their own.
+    /// Purely a locality optimization — every id-order accessor above is
+    /// unaffected.
+    pub fn regroup(&mut self, groups: &[Vec<usize>]) {
+        let n = self.index.len();
+        let mut taken: Vec<Option<NodeState>> = Vec::with_capacity(n);
+        taken.resize_with(n, || None);
+        for shard in std::mem::take(&mut self.shards) {
+            for node in shard {
+                let id = node.id;
+                taken[id] = Some(node);
+            }
+        }
+        let mut shards: Vec<Vec<NodeState>> = Vec::new();
+        let mut place = |shards: &mut Vec<Vec<NodeState>>, node: NodeState, fresh: bool| {
+            if fresh || shards.last().map_or(true, |s: &Vec<NodeState>| s.len() >= PAGE) {
+                shards.push(Vec::with_capacity(PAGE));
+            }
+            shards.last_mut().expect("page").push(node);
+        };
+        for group in groups {
+            let mut first = true;
+            for &id in group {
+                if let Some(node) = taken[id].take() {
+                    place(&mut shards, node, first);
+                    first = false;
+                }
+            }
+        }
+        let mut first = true;
+        for node in taken.into_iter().flatten() {
+            place(&mut shards, node, first);
+            first = false;
+        }
+        self.shards = shards;
+        self.index = vec![(0, 0); n];
+        for (s, shard) in self.shards.iter().enumerate() {
+            for (o, node) in shard.iter().enumerate() {
+                self.index[node.id] = (s as u32, o as u32);
+            }
+        }
+    }
+
+    /// Physical page count (diagnostics / tests).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+impl Default for NodeArena {
+    fn default() -> Self {
+        NodeArena::new()
+    }
+}
+
+impl Index<usize> for NodeArena {
+    type Output = NodeState;
+    fn index(&self, id: usize) -> &NodeState {
+        let (s, o) = self.index[id];
+        &self.shards[s as usize][o as usize]
+    }
+}
+
+impl IndexMut<usize> for NodeArena {
+    fn index_mut(&mut self, id: usize) -> &mut NodeState {
+        let (s, o) = self.index[id];
+        &mut self.shards[s as usize][o as usize]
+    }
+}

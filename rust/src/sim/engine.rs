@@ -25,6 +25,8 @@
 //! pinned by `tests/golden_fingerprints.rs` — and `--threads 1` vs
 //! `--threads N` parity holds for all three algorithms.
 
+use std::path::PathBuf;
+
 use anyhow::Result;
 
 use crate::obs;
@@ -35,8 +37,38 @@ use crate::util::rng::mix64;
 
 use super::algo::Algorithm;
 use super::par;
-use super::report::{self, RoundRecord, RunReport, ScenarioNote};
+use super::report::{self, RoundRecord, RoundSink, RunReport, ScenarioNote};
+use super::resume::{self, RunState};
 use super::Simulation;
+
+/// Where a suspended run writes its state unless `--state` overrides it.
+pub const DEFAULT_STATE_PATH: &str = "scale_run.state";
+
+/// Run-control knobs for [`run_with`]: resume, suspension and per-round
+/// streaming. The default is a plain start-to-finish run.
+#[derive(Default)]
+pub struct RunCtl<'s> {
+    /// Continue from a loaded state snapshot instead of round 0.
+    pub resume: Option<RunState>,
+    /// Suspend after this many *total* completed rounds: persist the run
+    /// state and return [`RunOutcome::Suspended`]. A limit at or past
+    /// `cfg.rounds` simply runs to completion.
+    pub stop_after: Option<usize>,
+    /// Where a suspension writes its state ([`DEFAULT_STATE_PATH`] if
+    /// unset).
+    pub state_out: Option<PathBuf>,
+    /// Streaming per-round sink, fed right after every round barrier —
+    /// the kill-safe round history a suspended run leaves behind.
+    pub sink: Option<&'s mut dyn RoundSink>,
+}
+
+/// What a [`run_with`] call produced.
+pub enum RunOutcome {
+    /// Ran to the configured horizon.
+    Complete(RunReport),
+    /// Suspended by `stop_after`; the state file continues the run.
+    Suspended { rounds_done: usize, state_path: PathBuf },
+}
 
 /// Run `algo` for `sim.cfg.rounds` rounds under `scenario` and return
 /// the run report. The thin `Simulation::run_*` wrappers all land here.
@@ -45,6 +77,25 @@ pub fn run<A: Algorithm>(
     algo: &mut A,
     scenario: &Scenario,
 ) -> Result<RunReport> {
+    match run_with(sim, algo, scenario, RunCtl::default())? {
+        RunOutcome::Complete(rep) => Ok(rep),
+        RunOutcome::Suspended { .. } => unreachable!("default RunCtl never suspends"),
+    }
+}
+
+/// [`run`] with run-control: resume from a snapshot, suspend mid-run,
+/// stream per-round records. A run suspended at round *k* and resumed —
+/// any number of times, at any `--threads` value — reproduces the
+/// uninterrupted run's `RunReport::fingerprint` byte-for-byte: the
+/// resumed loop re-derives every per-`(round, unit)` stream from the
+/// same coordinates, and the snapshot restores all inter-round state
+/// bit-exactly (DESIGN.md §10).
+pub fn run_with<A: Algorithm>(
+    sim: &mut Simulation<'_>,
+    algo: &mut A,
+    scenario: &Scenario,
+    mut ctl: RunCtl<'_>,
+) -> Result<RunOutcome> {
     scenario.validate(sim.cfg.n_nodes, sim.cfg.fleet.n_metros)?;
     let threads = sim.effective_threads()?;
     let wall = std::time::Instant::now();
@@ -58,7 +109,16 @@ pub fn run<A: Algorithm>(
     let mut notes: Vec<ScenarioNote> = Vec::new();
 
     let mut rounds: Vec<RoundRecord> = Vec::with_capacity(sim.cfg.rounds);
-    for round in 0..sim.cfg.rounds {
+    let start_round = match ctl.resume.take() {
+        Some(rs) => {
+            let _s = obs::span("resume");
+            let at = rs.apply(sim, algo, &mut server, &mut state, &mut rounds, &mut notes)?;
+            obs::lifecycle("resume", at);
+            at
+        }
+        None => 0,
+    };
+    for round in start_round..sim.cfg.rounds {
         let events_applied = {
             let _s = obs::span("scenario");
             let applied = apply_scenario(sim, &mut state, round, &mut notes);
@@ -127,7 +187,29 @@ pub fn run<A: Algorithm>(
             scenario_events: events_applied,
             reclusterings: repairs.reclusterings,
         });
+        if let Some(sink) = ctl.sink.as_deref_mut() {
+            sink.on_round(rounds.last().expect("pushed above"))?;
+        }
         obs::round_flush(round);
+        if let Some(stop) = ctl.stop_after {
+            if rounds.len() >= stop && round + 1 < sim.cfg.rounds {
+                let path = ctl
+                    .state_out
+                    .take()
+                    .unwrap_or_else(|| PathBuf::from(DEFAULT_STATE_PATH));
+                {
+                    let _s = obs::span("suspend");
+                    resume::persist(
+                        &path, sim, algo, &server, &state, round + 1, &rounds, &notes,
+                    )?;
+                }
+                obs::lifecycle("suspend", round + 1);
+                return Ok(RunOutcome::Suspended {
+                    rounds_done: rounds.len(),
+                    state_path: path,
+                });
+            }
+        }
     }
 
     let (final_metrics, clusters) = {
@@ -147,7 +229,7 @@ pub fn run<A: Algorithm>(
     if obs::enabled() {
         obs::run_end(&rep.mode, &rep.fingerprint_hash(), rep.wall_ms);
     }
-    Ok(rep)
+    Ok(RunOutcome::Complete(rep))
 }
 
 /// Fan an algorithm's group units out over the unit executor — scoped
@@ -382,6 +464,7 @@ pub(crate) fn apply_scenario(
                         0.0
                     };
                     state.drifted.insert(id);
+                    state.ever_drifted.insert(id);
                 }
                 notes.push(ScenarioNote {
                     round,

@@ -35,14 +35,19 @@
 //! `--algo` axis, scenario timeline included.
 
 pub mod algo;
+mod arena;
 mod cluster_round;
 pub mod engine;
 mod par;
 pub mod report;
+pub mod resume;
 
 pub use algo::{AlgoKind, Algorithm, FedAvgAlgo, HflAlgo, Repairs, RoundOut, ScaleAlgo};
+pub use arena::NodeArena;
 pub use cluster_round::ClusterRoundOut;
-pub use report::{eval_model, eval_view};
+pub use engine::{RunCtl, RunOutcome, DEFAULT_STATE_PATH};
+pub use report::{eval_model, eval_view, CsvRoundSink, RoundSink};
+pub use resume::RunState;
 
 use std::sync::Arc;
 
@@ -176,7 +181,9 @@ pub struct Simulation<'a> {
     /// The same backend with its `Sync` marker retained — set by
     /// [`Simulation::new_parallel`], required for `threads > 1`.
     pub(crate) sync_compute: Option<&'a (dyn ModelCompute + Sync)>,
-    pub nodes: Vec<NodeState>,
+    /// Paged, cluster-groupable node storage; id-order iteration keeps
+    /// every RNG draw independent of the physical layout (DESIGN.md §10).
+    pub nodes: NodeArena,
     pub net: Network,
     pub(crate) rng: Rng,
     /// The one shared dataset every node view indexes into.
@@ -222,8 +229,10 @@ impl<'a> Simulation<'a> {
         // --- fleet ---
         let fleet = generate_fleet(&cfg.fleet);
 
-        // --- nodes: views into the shared dataset, no owned copies ---
-        let mut nodes = Vec::with_capacity(cfg.n_nodes);
+        // --- nodes: views into the shared dataset, no owned copies;
+        //     pushed straight into the paged arena so no allocation
+        //     scales with the whole fleet ---
+        let mut nodes = NodeArena::with_capacity(cfg.n_nodes);
         for (id, part) in parts.into_iter().enumerate() {
             let mut split_rng = rng.derive(0x5711 + id as u64);
             let (train_idx, test_idx) = split_indices(&part, cfg.test_frac, &mut split_rng);
@@ -323,6 +332,27 @@ impl<'a> Simulation<'a> {
             AlgoKind::FedAvg => engine::run(self, &mut FedAvgAlgo::new(None), scenario),
             AlgoKind::Hfl { edge_period } => {
                 engine::run(self, &mut HflAlgo::new(edge_period)?, scenario)
+            }
+        }
+    }
+
+    /// [`Self::run_algo`] with run-control: resume from a state snapshot,
+    /// suspend after `--stop-after` rounds, stream per-round records
+    /// (`engine::run_with`). A resumed run reproduces the uninterrupted
+    /// run's fingerprint byte-for-byte at any `--threads` value.
+    pub fn run_algo_ctl(
+        &mut self,
+        algo: AlgoKind,
+        scenario: &Scenario,
+        ctl: RunCtl<'_>,
+    ) -> Result<RunOutcome> {
+        match algo {
+            AlgoKind::Scale => engine::run_with(self, &mut ScaleAlgo::new(), scenario, ctl),
+            AlgoKind::FedAvg => {
+                engine::run_with(self, &mut FedAvgAlgo::new(None), scenario, ctl)
+            }
+            AlgoKind::Hfl { edge_period } => {
+                engine::run_with(self, &mut HflAlgo::new(edge_period)?, scenario, ctl)
             }
         }
     }
@@ -523,7 +553,7 @@ impl<'a> Simulation<'a> {
             return;
         }
         let mut frng = self.rng.derive(0xFA11 + round as u64);
-        for node in &mut self.nodes {
+        for node in self.nodes.iter_mut() {
             if node.scenario_down {
                 continue; // scenario-controlled outages don't self-heal
             }

@@ -4,8 +4,11 @@
 //! [`eval_model`] and `finish_report`.
 
 use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::data::{with_scratch, DatasetView, PaddedBatch};
 use crate::metrics::ModelMetrics;
@@ -109,6 +112,61 @@ pub(crate) fn finish_report(
         server_cpu_s: server.cpu_seconds,
         wall_ms: wall.elapsed().as_secs_f64() * 1e3,
         scenario: Vec::new(),
+    }
+}
+
+/// Streaming consumer of per-round records: the engine hands every
+/// completed [`RoundRecord`] over right after the round barrier, so a
+/// long fleet run can externalize its round history instead of only
+/// accumulating it (`--stream-rounds`). Sinks must be kill-safe —
+/// flush per round — because the record stream is exactly what a
+/// suspended run leaves behind.
+pub trait RoundSink {
+    fn on_round(&mut self, rec: &RoundRecord) -> Result<()>;
+}
+
+/// [`RoundSink`] writing one CSV row per round, flushed immediately.
+pub struct CsvRoundSink {
+    out: BufWriter<File>,
+}
+
+impl CsvRoundSink {
+    pub fn create(path: &Path) -> Result<CsvRoundSink> {
+        let file = File::create(path)
+            .with_context(|| format!("create round stream {}", path.display()))?;
+        let mut out = BufWriter::new(file);
+        writeln!(
+            out,
+            "round,updates,cum_updates,mean_loss,latency_ms,live_nodes,\
+             elections,scenario_events,reclusterings,accuracy,f1"
+        )?;
+        out.flush()?;
+        Ok(CsvRoundSink { out })
+    }
+}
+
+impl RoundSink for CsvRoundSink {
+    fn on_round(&mut self, rec: &RoundRecord) -> Result<()> {
+        let (acc, f1) = match rec.metrics {
+            Some(m) => (format!("{:.6}", m.accuracy), format!("{:.6}", m.f1)),
+            None => (String::new(), String::new()),
+        };
+        writeln!(
+            self.out,
+            "{},{},{},{},{},{},{},{},{},{acc},{f1}",
+            rec.round,
+            rec.updates,
+            rec.cum_updates,
+            rec.mean_loss,
+            rec.latency_ms,
+            rec.live_nodes,
+            rec.elections,
+            rec.scenario_events,
+            rec.reclusterings,
+        )?;
+        // kill-safety: every completed round must already be on disk
+        self.out.flush()?;
+        Ok(())
     }
 }
 

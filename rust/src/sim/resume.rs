@@ -1,0 +1,523 @@
+//! Resumable runs (DESIGN.md §10): persist a run's round-mutated state
+//! mid-flight and continue it in a fresh process with a byte-identical
+//! [`super::report::RunReport`] fingerprint.
+//!
+//! **Setup-replay design.** A snapshot does *not* serialize the whole
+//! federation. `Simulation::new(cfg)` and `Algorithm::setup` are fully
+//! deterministic functions of the embedded config (the sim RNG is never
+//! *advanced* after construction — every consumer derives pure child
+//! streams), so a resume rebuilds them from scratch and then overwrites
+//! only what completed rounds can have changed: node state, drifted
+//! labels, algorithm protocol state, the server registry, the network
+//! RNG/ledger, the scenario window state, and the round history. That
+//! keeps snapshots proportional to live state (megabytes at 1M nodes
+//! with `--sample`), not to the dataset.
+//!
+//! **Envelope.** `SCRS | ver | cfg_len u32 | cfg JSON | tag[32] |
+//! comp_len u64 | zlib(body)`. The config travels as plaintext JSON so
+//! `scale run --resume <state>` needs no other flags; the body is
+//! zlib-compressed and the whole envelope is sealed with
+//! HMAC-SHA256 under a key derived from the run's root key (itself a
+//! pure function of `cfg.seed`). This is tamper-*evidence* for an
+//! operational artifact — a bit-flipped, truncated or hand-edited state
+//! file is rejected before any of it is interpreted — not a defense
+//! against an adversary who knows the seed.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+use flate2::read::ZlibDecoder;
+use flate2::write::ZlibEncoder;
+use flate2::Compression;
+use hmac::{Hmac, Mac};
+use sha2::{Digest, Sha256};
+
+use crate::config::SimConfig;
+use crate::metrics::ModelMetrics;
+use crate::netsim::{KindTotals, MsgKind};
+use crate::scenario::ScenarioState;
+use crate::server::GlobalServer;
+use crate::util::bin::{BinReader, BinWriter};
+use crate::util::json;
+use crate::util::rng::Rng;
+
+use super::algo::Algorithm;
+use super::report::{RoundRecord, ScenarioNote};
+use super::Simulation;
+
+type HmacSha256 = Hmac<Sha256>;
+
+const MAGIC: [u8; 4] = *b"SCRS";
+const VERSION: u8 = 1;
+/// Decompressed-body cap: well above any real fleet snapshot, well below
+/// an allocation bomb (the same discipline as the checkpoint codec).
+const MAX_BODY: u64 = 1 << 33;
+
+/// The resume signing key: a domain-separated hash of the run's root
+/// key, which `Simulation::new` derives from `cfg.seed` alone — so the
+/// key never needs to be stored anywhere.
+fn resume_key(seed: u64) -> [u8; 32] {
+    let mut root = [0u8; 32];
+    let mut krng = Rng::new(seed).derive(0x5EC);
+    for chunk in root.chunks_mut(8) {
+        chunk.copy_from_slice(&krng.next_u64().to_le_bytes());
+    }
+    let mut h = Sha256::new();
+    h.update(root);
+    h.update(b"scale-resume");
+    h.finalize().into()
+}
+
+fn tag_for(key: &[u8; 32], cfg_json: &[u8], compressed: &[u8]) -> [u8; 32] {
+    let mut mac = <HmacSha256 as Mac>::new_from_slice(key).expect("hmac accepts any key length");
+    mac.update(&MAGIC);
+    mac.update(&[VERSION]);
+    mac.update(cfg_json);
+    mac.update(compressed);
+    mac.finalize().into_bytes().into()
+}
+
+/// Seal a snapshot body into the signed envelope.
+fn seal_envelope(cfg: &SimConfig, body: &[u8]) -> Result<Vec<u8>> {
+    let cfg_json = cfg.to_json().to_string_compact();
+    ensure!(
+        u32::try_from(cfg_json.len()).is_ok(),
+        "config JSON too large for resume envelope"
+    );
+    let mut enc = ZlibEncoder::new(Vec::new(), Compression::default());
+    enc.write_all(body)?;
+    let compressed = enc.finish()?;
+    let tag = tag_for(&resume_key(cfg.seed), cfg_json.as_bytes(), &compressed);
+    let mut out =
+        Vec::with_capacity(4 + 1 + 4 + cfg_json.len() + 32 + 8 + compressed.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.extend_from_slice(&(cfg_json.len() as u32).to_le_bytes());
+    out.extend_from_slice(cfg_json.as_bytes());
+    out.extend_from_slice(&tag);
+    out.extend_from_slice(&(compressed.len() as u64).to_le_bytes());
+    out.extend_from_slice(&compressed);
+    Ok(out)
+}
+
+/// Open a signed envelope: parse the config, verify the HMAC under the
+/// config-derived key, then (and only then) decompress the body.
+fn open_envelope(raw: &[u8]) -> Result<(SimConfig, Vec<u8>)> {
+    ensure!(raw.len() >= 9, "resume state truncated (no header)");
+    ensure!(raw[..4] == MAGIC, "not a resume state file (bad magic)");
+    ensure!(
+        raw[4] == VERSION,
+        "unsupported resume state version {} (this build reads v{VERSION})",
+        raw[4]
+    );
+    let cfg_len = u32::from_le_bytes(raw[5..9].try_into().unwrap()) as usize;
+    let rest = &raw[9..];
+    ensure!(
+        rest.len() >= cfg_len.saturating_add(40),
+        "resume state truncated (header claims {cfg_len}-byte config)"
+    );
+    let cfg_json = &rest[..cfg_len];
+    let tag = &rest[cfg_len..cfg_len + 32];
+    let comp_len = u64::from_le_bytes(rest[cfg_len + 32..cfg_len + 40].try_into().unwrap());
+    let compressed = &rest[cfg_len + 40..];
+    ensure!(
+        compressed.len() as u64 == comp_len,
+        "resume state truncated: {} compressed byte(s), header claims {comp_len}",
+        compressed.len()
+    );
+    let cfg_text = std::str::from_utf8(cfg_json).context("resume state config utf8")?;
+    let v = json::parse(cfg_text).context("resume state config JSON")?;
+    let cfg = SimConfig::from_json(&v).context("resume state config")?;
+    // authenticate before interpreting a single body byte
+    let expect = tag_for(&resume_key(cfg.seed), cfg_json, compressed);
+    ensure!(
+        constant_time_eq(&expect, tag),
+        "resume state rejected: signature mismatch (corrupt or tampered file)"
+    );
+    let mut body = Vec::new();
+    ZlibDecoder::new(compressed)
+        .take(MAX_BODY + 1)
+        .read_to_end(&mut body)
+        .context("resume state decompress")?;
+    ensure!(
+        body.len() as u64 <= MAX_BODY,
+        "resume state body exceeds the {MAX_BODY}-byte cap"
+    );
+    Ok((cfg, body))
+}
+
+fn constant_time_eq(a: &[u8; 32], b: &[u8]) -> bool {
+    if b.len() != 32 {
+        return false;
+    }
+    a.iter().zip(b).fold(0u8, |acc, (x, y)| acc | (x ^ y)) == 0
+}
+
+/// A loaded, authenticated run snapshot. `cfg` is the run's full
+/// configuration (so `--resume` needs no other flags); `apply` restores
+/// the round-mutated state into a freshly set-up run.
+pub struct RunState {
+    pub cfg: SimConfig,
+    /// Algorithm mode tag the snapshot was written under.
+    pub algo: String,
+    /// The round the resumed loop starts at (= completed rounds).
+    pub next_round: usize,
+    body: Vec<u8>,
+}
+
+impl RunState {
+    /// Read, authenticate and decode a state file's header. Fails closed
+    /// on any corruption: bad magic/version, signature mismatch,
+    /// truncation, oversized body.
+    pub fn load(path: &Path) -> Result<RunState> {
+        let raw = std::fs::read(path)
+            .with_context(|| format!("reading resume state {}", path.display()))?;
+        let (cfg, body) = open_envelope(&raw)?;
+        let mut r = BinReader::new(&body);
+        let algo = r.str()?;
+        let next_round = r.usize()?;
+        ensure!(
+            next_round <= cfg.rounds,
+            "resume state claims {next_round} completed round(s), config has {}",
+            cfg.rounds
+        );
+        Ok(RunState { cfg, algo, next_round, body })
+    }
+
+    /// Overwrite a freshly set-up run's round-mutated state from the
+    /// snapshot and return the round to continue from. Must run after
+    /// `Algorithm::setup` (the replay this snapshot assumes); `rounds` /
+    /// `notes` must be empty.
+    pub fn apply<A: Algorithm>(
+        &self,
+        sim: &mut Simulation<'_>,
+        algo: &mut A,
+        server: &mut GlobalServer,
+        state: &mut ScenarioState,
+        rounds: &mut Vec<RoundRecord>,
+        notes: &mut Vec<ScenarioNote>,
+    ) -> Result<usize> {
+        ensure!(rounds.is_empty() && notes.is_empty(), "apply on a fresh run only");
+        let mut r = BinReader::new(&self.body);
+        let mode = r.str()?;
+        ensure!(
+            mode == algo.mode(),
+            "resume state was written by '{mode}', not '{}'",
+            algo.mode()
+        );
+        let next_round = r.usize()?;
+
+        // --- nodes (id order; layout-independent) ---
+        let n = r.usize()?;
+        ensure!(
+            n == sim.nodes.len(),
+            "resume state has {n} node(s), replayed federation has {}",
+            sim.nodes.len()
+        );
+        for id in 0..n {
+            let node = &mut sim.nodes[id];
+            node.params = r.vec_f32()?;
+            node.battery_wh = r.f64()?;
+            node.alive = r.bool()?;
+            node.pos_frac = r.f64()?;
+            node.last_loss = r.f64()?;
+            node.compute_energy_j = r.f64()?;
+            node.compute_seconds = r.f64()?;
+            node.slow_factor = r.f64()?;
+            node.scenario_down = r.bool()?;
+        }
+        // --- scenario-drifted training labels (view-local flips) ---
+        let n_drift = r.usize()?;
+        for _ in 0..n_drift {
+            let id = r.usize()?;
+            ensure!(id < n, "resume state drift entry for unknown node {id}");
+            let labels = r.vec_f32()?;
+            let dst = sim.nodes[id].train.labels_mut();
+            ensure!(
+                dst.len() == labels.len(),
+                "resume state drift labels for node {id}: {} row(s), view has {}",
+                labels.len(),
+                dst.len()
+            );
+            dst.copy_from_slice(&labels);
+        }
+
+        // --- algorithm protocol state ---
+        algo.restore_state(sim, &mut r)?;
+
+        // --- global server: model registry + cost counters ---
+        let n_slots = r.usize()?;
+        let mut models = Vec::with_capacity(n_slots.min(1 << 16));
+        for _ in 0..n_slots {
+            models.push(if r.bool()? {
+                Some((r.vec_f32()?, r.usize()?, r.usize()?))
+            } else {
+                None
+            });
+        }
+        server.restore_models(models)?;
+        server.cpu_seconds = r.f64()?;
+        server.rejected_summaries = r.u64()?;
+
+        // --- main network: RNG position, degradation, traffic ledger ---
+        let rng = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+        let spare = r.opt_f64()?;
+        let degradation = r.f64()?;
+        sim.net.restore_state(rng, spare, degradation);
+        let n_kinds = r.usize()?;
+        let mut totals = Vec::with_capacity(n_kinds.min(MsgKind::ALL.len()));
+        for _ in 0..n_kinds {
+            let code = r.u8()?;
+            let kind = MsgKind::from_code(code)
+                .with_context(|| format!("resume state ledger kind code {code}"))?;
+            totals.push((
+                kind,
+                KindTotals {
+                    count: r.u64()?,
+                    bytes: r.u64()?,
+                    latency_ms: r.f64()?,
+                    energy_j: r.f64()?,
+                },
+            ));
+        }
+        let by_round = r.vec_u64()?;
+        sim.net.ledger.restore(totals, by_round);
+
+        // --- scenario window state ---
+        state.restore(&mut r)?;
+
+        // --- round history + scenario notes ---
+        let n_rounds = r.usize()?;
+        ensure!(
+            n_rounds == next_round,
+            "resume state has {n_rounds} round record(s) for {next_round} completed round(s)"
+        );
+        for _ in 0..n_rounds {
+            rounds.push(RoundRecord {
+                round: r.usize()?,
+                updates: r.u64()?,
+                cum_updates: r.u64()?,
+                mean_loss: r.f64()?,
+                latency_ms: r.f64()?,
+                metrics: if r.bool()? {
+                    Some(ModelMetrics {
+                        accuracy: r.f64()?,
+                        precision: r.f64()?,
+                        recall: r.f64()?,
+                        f1: r.f64()?,
+                        roc_auc: r.f64()?,
+                        n: r.u64()?,
+                    })
+                } else {
+                    None
+                },
+                live_nodes: r.usize()?,
+                elections: r.u64()?,
+                scenario_events: r.u64()?,
+                reclusterings: r.u64()?,
+            });
+        }
+        let n_notes = r.usize()?;
+        for _ in 0..n_notes {
+            notes.push(ScenarioNote { round: r.usize()?, what: r.str()? });
+        }
+        r.finish()?;
+        Ok(next_round)
+    }
+}
+
+/// Serialize the round-mutated state of a run into a snapshot body.
+/// Field order is the contract: [`RunState::apply`] reads it back
+/// verbatim.
+fn capture<A: Algorithm>(
+    sim: &Simulation<'_>,
+    algo: &A,
+    server: &GlobalServer,
+    state: &ScenarioState,
+    next_round: usize,
+    rounds: &[RoundRecord],
+    notes: &[ScenarioNote],
+) -> Result<Vec<u8>> {
+    let mut w = BinWriter::new();
+    w.str(algo.mode());
+    w.usize(next_round);
+
+    w.usize(sim.nodes.len());
+    for node in sim.nodes.iter() {
+        w.vec_f32(&node.params);
+        w.f64(node.battery_wh);
+        w.bool(node.alive);
+        w.f64(node.pos_frac);
+        w.f64(node.last_loss);
+        w.f64(node.compute_energy_j);
+        w.f64(node.compute_seconds);
+        w.f64(node.slow_factor);
+        w.bool(node.scenario_down);
+    }
+    // drifted views carry mutated labels the setup replay can't rebuild
+    w.usize(state.ever_drifted.len());
+    for &id in &state.ever_drifted {
+        w.usize(id);
+        w.vec_f32(sim.nodes[id].train.labels());
+    }
+
+    algo.snapshot_state(&mut w)?;
+
+    let models = server.snapshot_models();
+    w.usize(models.len());
+    for m in &models {
+        match m {
+            Some((params, size, round)) => {
+                w.bool(true);
+                w.vec_f32(params);
+                w.usize(*size);
+                w.usize(*round);
+            }
+            None => w.bool(false),
+        }
+    }
+    w.f64(server.cpu_seconds);
+    w.u64(server.rejected_summaries);
+
+    let (rng, spare, degradation) = sim.net.snapshot_state();
+    for s in rng {
+        w.u64(s);
+    }
+    w.opt_f64(spare);
+    w.f64(degradation);
+    let (totals, by_round) = sim.net.ledger.snapshot();
+    w.usize(totals.len());
+    for (kind, t) in &totals {
+        w.u8(kind.code());
+        w.u64(t.count);
+        w.u64(t.bytes);
+        w.f64(t.latency_ms);
+        w.f64(t.energy_j);
+    }
+    w.vec_u64(&by_round);
+
+    state.snapshot(&mut w);
+
+    w.usize(rounds.len());
+    for rec in rounds {
+        w.usize(rec.round);
+        w.u64(rec.updates);
+        w.u64(rec.cum_updates);
+        w.f64(rec.mean_loss);
+        w.f64(rec.latency_ms);
+        match &rec.metrics {
+            Some(m) => {
+                w.bool(true);
+                w.f64(m.accuracy);
+                w.f64(m.precision);
+                w.f64(m.recall);
+                w.f64(m.f1);
+                w.f64(m.roc_auc);
+                w.u64(m.n);
+            }
+            None => w.bool(false),
+        }
+        w.usize(rec.live_nodes);
+        w.u64(rec.elections);
+        w.u64(rec.scenario_events);
+        w.u64(rec.reclusterings);
+    }
+    w.usize(notes.len());
+    for note in notes {
+        w.usize(note.round);
+        w.str(&note.what);
+    }
+    Ok(w.into_bytes())
+}
+
+/// Capture, seal and atomically write a run's state to `path` (write to
+/// `path.tmp`, then rename — a kill mid-persist never leaves a partial
+/// state file behind).
+pub fn persist<A: Algorithm>(
+    path: &Path,
+    sim: &Simulation<'_>,
+    algo: &A,
+    server: &GlobalServer,
+    state: &ScenarioState,
+    next_round: usize,
+    rounds: &[RoundRecord],
+    notes: &[ScenarioNote],
+) -> Result<()> {
+    let body = capture(sim, algo, server, state, next_round, rounds, notes)?;
+    let envelope = seal_envelope(&sim.cfg, &body)?;
+    let tmp = path.with_extension("state.tmp");
+    std::fs::write(&tmp, &envelope)
+        .with_context(|| format!("writing resume state {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming resume state into {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::default();
+        c.seed = 77;
+        c
+    }
+
+    #[test]
+    fn envelope_roundtrips_config_and_body() {
+        let body = b"round-mutated state bytes".repeat(64);
+        let sealed = seal_envelope(&cfg(), &body).unwrap();
+        let (back_cfg, back_body) = open_envelope(&sealed).unwrap();
+        assert_eq!(back_body, body);
+        assert_eq!(back_cfg.seed, 77);
+        assert_eq!(back_cfg.n_nodes, cfg().n_nodes);
+    }
+
+    #[test]
+    fn envelope_rejects_bad_magic_and_version() {
+        let sealed = seal_envelope(&cfg(), b"x").unwrap();
+        let mut bad = sealed.clone();
+        bad[0] ^= 0xFF;
+        assert!(open_envelope(&bad).unwrap_err().to_string().contains("magic"));
+        let mut bad = sealed;
+        bad[4] = VERSION + 1;
+        assert!(open_envelope(&bad).unwrap_err().to_string().contains("version"));
+    }
+
+    #[test]
+    fn envelope_rejects_every_truncation() {
+        let sealed = seal_envelope(&cfg(), &[7u8; 256]).unwrap();
+        for len in 0..sealed.len() {
+            assert!(open_envelope(&sealed[..len]).is_err(), "prefix {len} accepted");
+        }
+    }
+
+    #[test]
+    fn envelope_rejects_bit_flips_everywhere() {
+        // any flipped bit — config, tag or compressed body — must fail
+        // closed (signature mismatch, or a parse error before it)
+        let sealed = seal_envelope(&cfg(), &[42u8; 512]).unwrap();
+        for pos in 5..sealed.len() {
+            let mut bad = sealed.clone();
+            bad[pos] ^= 0x10;
+            assert!(open_envelope(&bad).is_err(), "flip at {pos} accepted");
+        }
+    }
+
+    #[test]
+    fn envelope_rejects_reseeded_config() {
+        // re-keying the embedded config (e.g. editing the seed) breaks
+        // the signature: the key derives from the seed being claimed
+        let sealed = seal_envelope(&cfg(), b"body").unwrap();
+        let cfg_len = u32::from_le_bytes(sealed[5..9].try_into().unwrap()) as usize;
+        let mut other = cfg();
+        other.seed = 78;
+        let forged = other.to_json().to_string_compact();
+        let mut bad = Vec::from(&sealed[..5]);
+        bad.extend_from_slice(&(forged.len() as u32).to_le_bytes());
+        bad.extend_from_slice(forged.as_bytes());
+        bad.extend_from_slice(&sealed[9 + cfg_len..]);
+        assert!(open_envelope(&bad).is_err());
+    }
+}

@@ -1,0 +1,315 @@
+//! Minimal little-endian binary writer/reader for the resume snapshot
+//! (`sim::resume`).
+//!
+//! Every float travels as its raw bit pattern (`to_bits`/`from_bits`),
+//! so the round-trip is bit-exact — NaNs, signed zeros and all — which
+//! is what lets a resumed run reproduce the uninterrupted run's
+//! fingerprint byte-for-byte. The reader is bounds-checked everywhere
+//! and never allocates more than the remaining input can justify, so a
+//! truncated or corrupt body fails with an error instead of a panic or
+//! an absurd allocation (the same discipline as the checkpoint codec).
+
+use anyhow::{bail, ensure, Result};
+
+/// Append-only little-endian buffer.
+#[derive(Default)]
+pub struct BinWriter {
+    buf: Vec<u8>,
+}
+
+impl BinWriter {
+    pub fn new() -> BinWriter {
+        BinWriter { buf: Vec::new() }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    pub fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.bool(true);
+                self.f64(x);
+            }
+            None => self.bool(false),
+        }
+    }
+
+    pub fn opt_usize(&mut self, v: Option<usize>) {
+        match v {
+            Some(x) => {
+                self.bool(true);
+                self.usize(x);
+            }
+            None => self.bool(false),
+        }
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn vec_f32(&mut self, v: &[f32]) {
+        self.usize(v.len());
+        for &x in v {
+            self.f32(x);
+        }
+    }
+
+    pub fn opt_vec_f32(&mut self, v: Option<&Vec<f32>>) {
+        match v {
+            Some(x) => {
+                self.bool(true);
+                self.vec_f32(x);
+            }
+            None => self.bool(false),
+        }
+    }
+
+    pub fn vec_usize(&mut self, v: &[usize]) {
+        self.usize(v.len());
+        for &x in v {
+            self.usize(x);
+        }
+    }
+
+    pub fn vec_u64(&mut self, v: &[u64]) {
+        self.usize(v.len());
+        for &x in v {
+            self.u64(x);
+        }
+    }
+}
+
+/// Bounds-checked reader over a snapshot body.
+pub struct BinReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BinReader<'a> {
+    pub fn new(buf: &'a [u8]) -> BinReader<'a> {
+        BinReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Assert the body was fully consumed (trailing garbage is corruption).
+    pub fn finish(&self) -> Result<()> {
+        ensure!(
+            self.remaining() == 0,
+            "resume state has {} trailing byte(s)",
+            self.remaining()
+        );
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "resume state truncated: need {n} byte(s) at offset {}, {} left",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("resume state corrupt: bool byte {b:#04x}"),
+        }
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| anyhow::anyhow!("resume state corrupt: usize {v}"))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn opt_f64(&mut self) -> Result<Option<f64>> {
+        Ok(if self.bool()? { Some(self.f64()?) } else { None })
+    }
+
+    pub fn opt_usize(&mut self) -> Result<Option<usize>> {
+        Ok(if self.bool()? { Some(self.usize()?) } else { None })
+    }
+
+    /// Length-checked count prefix: each element needs at least
+    /// `elem_bytes` more input, so a corrupt length can't drive an
+    /// oversized allocation.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.usize()?;
+        ensure!(
+            n.checked_mul(elem_bytes.max(1)).is_some_and(|b| b <= self.remaining()),
+            "resume state corrupt: {n} element(s) exceed {} remaining byte(s)",
+            self.remaining()
+        );
+        Ok(n)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.count(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| anyhow::anyhow!("resume state utf8: {e}"))
+    }
+
+    pub fn vec_f32(&mut self) -> Result<Vec<f32>> {
+        let n = self.count(4)?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    pub fn opt_vec_f32(&mut self) -> Result<Option<Vec<f32>>> {
+        Ok(if self.bool()? { Some(self.vec_f32()?) } else { None })
+    }
+
+    pub fn vec_usize(&mut self) -> Result<Vec<usize>> {
+        let n = self.count(8)?;
+        (0..n).map(|_| self.usize()).collect()
+    }
+
+    pub fn vec_u64(&mut self) -> Result<Vec<u64>> {
+        let n = self.count(8)?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut w = BinWriter::new();
+        w.u8(7);
+        w.bool(true);
+        w.bool(false);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX);
+        w.usize(12345);
+        w.f64(f64::NAN);
+        w.f64(-0.0);
+        w.f32(1.5e-30);
+        w.opt_f64(Some(2.5));
+        w.opt_f64(None);
+        w.opt_usize(Some(9));
+        w.str("resume ✓");
+        w.vec_f32(&[1.0, f32::NAN, -0.0]);
+        w.opt_vec_f32(None);
+        w.vec_usize(&[3, 1, 4]);
+        w.vec_u64(&[u64::MAX, 0]);
+        let bytes = w.into_bytes();
+
+        let mut r = BinReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert!(r.bool().unwrap());
+        assert!(!r.bool().unwrap());
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.usize().unwrap(), 12345);
+        // bit-exact floats: NaN payload and signed zero survive
+        assert_eq!(r.f64().unwrap().to_bits(), f64::NAN.to_bits());
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.f32().unwrap(), 1.5e-30);
+        assert_eq!(r.opt_f64().unwrap(), Some(2.5));
+        assert_eq!(r.opt_f64().unwrap(), None);
+        assert_eq!(r.opt_usize().unwrap(), Some(9));
+        assert_eq!(r.str().unwrap(), "resume ✓");
+        let v = r.vec_f32().unwrap();
+        assert_eq!(v.len(), 3);
+        assert!(v[1].is_nan());
+        assert_eq!(v[2].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.opt_vec_f32().unwrap(), None);
+        assert_eq!(r.vec_usize().unwrap(), vec![3, 1, 4]);
+        assert_eq!(r.vec_u64().unwrap(), vec![u64::MAX, 0]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_and_corruption_fail_closed() {
+        let mut w = BinWriter::new();
+        w.vec_f32(&[1.0; 16]);
+        let bytes = w.into_bytes();
+        // every proper prefix errors, never panics
+        for len in 0..bytes.len() {
+            let mut r = BinReader::new(&bytes[..len]);
+            assert!(r.vec_f32().is_err() || r.finish().is_err(), "prefix {len}");
+        }
+        // absurd length prefix rejected before allocating
+        let mut w = BinWriter::new();
+        w.u64(u64::MAX / 2);
+        let bytes = w.into_bytes();
+        let mut r = BinReader::new(&bytes);
+        assert!(r.vec_f32().is_err());
+        // bad bool byte
+        let mut r = BinReader::new(&[9]);
+        assert!(r.bool().is_err());
+        // trailing garbage detected
+        let mut r = BinReader::new(&[0, 1]);
+        r.u8().unwrap();
+        assert!(r.finish().is_err());
+    }
+}

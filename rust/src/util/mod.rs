@@ -6,6 +6,7 @@
 //! every other module leans on are implemented here and unit-tested in
 //! place. See DESIGN.md §2 (substitutions).
 
+pub mod bin;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -53,6 +53,18 @@ impl Rng {
         Rng::new(mix64(self.s[0] ^ self.s[2], stream))
     }
 
+    /// Full generator state — xoshiro words plus the cached Box–Muller
+    /// sample — for the resume snapshot.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.gauss_spare)
+    }
+
+    /// Rebuild a generator mid-stream from [`Self::state`]; the restored
+    /// stream continues draw-for-draw where the original left off.
+    pub fn from_state(s: [u64; 4], gauss_spare: Option<f64>) -> Self {
+        Rng { s, gauss_spare }
+    }
+
     /// Next raw 64 bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {

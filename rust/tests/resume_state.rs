@@ -1,0 +1,254 @@
+//! Resume / suspend integration suite: the engine's run-control path
+//! (`RunCtl`) must make a killed-and-resumed run indistinguishable from
+//! an uninterrupted one.
+//!
+//! The contract under test (DESIGN.md §10):
+//! * suspending after `k` rounds and resuming from the signed state
+//!   file reproduces the uninterrupted run's `RunReport::fingerprint`
+//!   byte for byte — for every algorithm, at `--threads` 1 and N, at
+//!   every suspension point, and under an active churn/drift scenario;
+//! * tampered or truncated state files are rejected at load, never
+//!   silently resumed;
+//! * a state file only resumes the algorithm that wrote it;
+//! * `--stream-rounds` rows hit disk before the suspension, so progress
+//!   survives the kill.
+
+mod common;
+
+use std::path::{Path, PathBuf};
+
+use common::{native, small_cfg};
+use scale_fl::config::SimConfig;
+use scale_fl::scenario::Scenario;
+use scale_fl::sim::{AlgoKind, CsvRoundSink, RoundSink, RunCtl, RunOutcome, RunState, Simulation};
+
+/// Per-process scratch dir so parallel test binaries never collide.
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("scale_resume_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// The canonical resume fixture: the common small federation trimmed to
+/// 6 rounds so the suspend-at-every-round sweep stays fast.
+fn cfg_with(threads: usize) -> SimConfig {
+    let mut cfg = small_cfg();
+    cfg.rounds = 6;
+    cfg.threads = threads;
+    cfg
+}
+
+/// Fingerprint of the uninterrupted run.
+fn full_run(cfg: &SimConfig, algo: AlgoKind, scenario: &Scenario) -> String {
+    let compute = native();
+    let mut sim = Simulation::new_parallel(cfg.clone(), &compute).unwrap();
+    match sim.run_algo_ctl(algo, scenario, RunCtl::default()).unwrap() {
+        RunOutcome::Complete(rep) => rep.fingerprint(),
+        RunOutcome::Suspended { .. } => unreachable!("default RunCtl never suspends"),
+    }
+}
+
+/// Suspend after `stop_after` rounds, drop every in-memory structure
+/// (the "kill"), reload the signed snapshot in a fresh simulation, run
+/// to completion, and return the finished fingerprint.
+fn killed_and_resumed(
+    cfg: &SimConfig,
+    algo: AlgoKind,
+    scenario: &Scenario,
+    stop_after: usize,
+    state: &Path,
+) -> String {
+    let compute = native();
+    let mut sim = Simulation::new_parallel(cfg.clone(), &compute).unwrap();
+    let ctl = RunCtl {
+        stop_after: Some(stop_after),
+        state_out: Some(state.to_path_buf()),
+        ..RunCtl::default()
+    };
+    match sim.run_algo_ctl(algo, scenario, ctl).unwrap() {
+        RunOutcome::Suspended { rounds_done, state_path } => {
+            assert_eq!(rounds_done, stop_after);
+            assert_eq!(state_path, state);
+        }
+        RunOutcome::Complete(_) => panic!("run with stop_after {stop_after} never suspended"),
+    }
+    drop(sim); // the kill: nothing survives but the state file
+
+    let rs = RunState::load(state).unwrap();
+    assert_eq!(rs.algo, algo.label());
+    assert_eq!(rs.next_round, stop_after);
+    let mut sim = Simulation::new_parallel(rs.cfg.clone(), &compute).unwrap();
+    let ctl = RunCtl { resume: Some(rs), ..RunCtl::default() };
+    match sim.run_algo_ctl(algo, scenario, ctl).unwrap() {
+        RunOutcome::Complete(rep) => rep.fingerprint(),
+        RunOutcome::Suspended { .. } => panic!("resumed run suspended again"),
+    }
+}
+
+#[test]
+fn resumed_run_reproduces_fingerprint_for_every_algo_and_thread_count() {
+    let scenario = Scenario::none();
+    for algo in [AlgoKind::Scale, AlgoKind::FedAvg, AlgoKind::Hfl { edge_period: 2 }] {
+        let mut per_threads = Vec::new();
+        for threads in [1usize, 4] {
+            let cfg = cfg_with(threads);
+            let full = full_run(&cfg, algo, &scenario);
+            let state = tmp(&format!("{}_{threads}.state", algo.label()));
+            let resumed = killed_and_resumed(&cfg, algo, &scenario, 3, &state);
+            assert_eq!(
+                full, resumed,
+                "resume diverged for {} at --threads {threads}",
+                algo.label()
+            );
+            per_threads.push(full);
+        }
+        // and the two thread counts agree with each other, so the
+        // resumed fingerprint is thread-invariant too
+        assert_eq!(per_threads[0], per_threads[1], "thread parity for {}", algo.label());
+    }
+}
+
+#[test]
+fn resume_reproduces_fingerprint_at_every_suspension_point() {
+    let scenario = Scenario::none();
+    let cfg = cfg_with(1);
+    let full = full_run(&cfg, AlgoKind::Scale, &scenario);
+    // `stop_after == rounds` cannot suspend (the run just completes),
+    // so every proper prefix is the sweep
+    for k in 1..cfg.rounds {
+        let state = tmp(&format!("sweep_{k}.state"));
+        let resumed = killed_and_resumed(&cfg, AlgoKind::Scale, &scenario, k, &state);
+        assert_eq!(full, resumed, "resume diverged when suspended after round {k}");
+    }
+}
+
+#[test]
+fn resume_mid_scenario_reproduces_fingerprint() {
+    // churn + drift land before the suspension point, so the restored
+    // run must carry the drifted labels, the regulation cooldowns and
+    // the scenario state — not just the model parameters
+    let scenario = Scenario::from_toml(
+        "[regulation]\nmin_live_frac = 0.7\ncooldown = 1\n\
+         [[event]]\nround = 1\nkind = \"leave\"\nfrac = 0.3\nduration = 2\n\
+         [[event]]\nround = 2\nkind = \"drift\"\nfrac = 0.2\nflip_frac = 0.3\n\
+         [[event]]\nround = 3\nkind = \"bandwidth\"\nfactor = 0.5\nduration = 2\n",
+    )
+    .unwrap();
+    for threads in [1usize, 4] {
+        let cfg = cfg_with(threads);
+        let full = full_run(&cfg, AlgoKind::Scale, &scenario);
+        let state = tmp(&format!("scenario_{threads}.state"));
+        let resumed = killed_and_resumed(&cfg, AlgoKind::Scale, &scenario, 4, &state);
+        assert_eq!(full, resumed, "scenario resume diverged at --threads {threads}");
+    }
+}
+
+#[test]
+fn tampered_or_truncated_state_files_are_rejected() {
+    let compute = native();
+    let cfg = cfg_with(1);
+    let state = tmp("tamper.state");
+    let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
+    let ctl = RunCtl {
+        stop_after: Some(2),
+        state_out: Some(state.clone()),
+        ..RunCtl::default()
+    };
+    match sim.run_algo_ctl(AlgoKind::Scale, &Scenario::none(), ctl).unwrap() {
+        RunOutcome::Suspended { .. } => {}
+        RunOutcome::Complete(_) => panic!("expected suspension"),
+    }
+    let good = std::fs::read(&state).unwrap();
+    assert!(RunState::load(&state).is_ok(), "pristine state must load");
+
+    // single-bit flips across every region of the envelope: magic,
+    // version, config, tag, compressed body (exhaustive flips are the
+    // codec's unit tests; this is the end-to-end door check)
+    let bad = tmp("tamper_bad.state");
+    let positions =
+        [0, 4, 5, good.len() / 4, good.len() / 2, (good.len() * 3) / 4, good.len() - 1];
+    for &pos in &positions {
+        let mut raw = good.clone();
+        raw[pos] ^= 0x10;
+        std::fs::write(&bad, &raw).unwrap();
+        assert!(
+            RunState::load(&bad).is_err(),
+            "bit flip at byte {pos}/{} accepted",
+            good.len()
+        );
+    }
+    // every truncation that drops at least one byte must be rejected
+    for cut in [0, 1, 4, good.len() / 2, good.len() - 1] {
+        std::fs::write(&bad, &good[..cut]).unwrap();
+        assert!(RunState::load(&bad).is_err(), "truncation to {cut} bytes accepted");
+    }
+}
+
+#[test]
+fn state_file_only_resumes_the_algorithm_that_wrote_it() {
+    let compute = native();
+    let cfg = cfg_with(1);
+    let state = tmp("wrong_algo.state");
+    let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
+    let ctl = RunCtl {
+        stop_after: Some(2),
+        state_out: Some(state.clone()),
+        ..RunCtl::default()
+    };
+    sim.run_algo_ctl(AlgoKind::Scale, &Scenario::none(), ctl).unwrap();
+
+    let rs = RunState::load(&state).unwrap();
+    assert_eq!(rs.algo, "scale");
+    let compute2 = native();
+    let mut sim = Simulation::new_parallel(rs.cfg.clone(), &compute2).unwrap();
+    let ctl = RunCtl { resume: Some(rs), ..RunCtl::default() };
+    assert!(
+        sim.run_algo_ctl(AlgoKind::FedAvg, &Scenario::none(), ctl).is_err(),
+        "a scale snapshot must not resume a fedavg run"
+    );
+}
+
+#[test]
+fn stream_rounds_rows_survive_the_kill() {
+    let compute = native();
+    let cfg = cfg_with(1);
+    let state = tmp("stream.state");
+    let csv_a = tmp("stream_a.csv");
+    let csv_b = tmp("stream_b.csv");
+
+    let mut sink = CsvRoundSink::create(&csv_a).unwrap();
+    let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
+    let ctl = RunCtl {
+        stop_after: Some(3),
+        state_out: Some(state.clone()),
+        sink: Some(&mut sink as &mut dyn RoundSink),
+        ..RunCtl::default()
+    };
+    match sim.run_algo_ctl(AlgoKind::Scale, &Scenario::none(), ctl).unwrap() {
+        RunOutcome::Suspended { rounds_done, .. } => assert_eq!(rounds_done, 3),
+        RunOutcome::Complete(_) => panic!("expected suspension"),
+    }
+    drop(sim);
+    drop(sink);
+    // each row was flushed as its round completed: header + 3 rows are
+    // on disk even though the process "died" mid-run
+    let a = std::fs::read_to_string(&csv_a).unwrap();
+    assert_eq!(a.lines().count(), 1 + 3, "{a}");
+
+    // the resumed half streams only the rounds it actually executes
+    let rs = RunState::load(&state).unwrap();
+    let mut sink = CsvRoundSink::create(&csv_b).unwrap();
+    let mut sim = Simulation::new_parallel(rs.cfg.clone(), &compute).unwrap();
+    let ctl = RunCtl {
+        resume: Some(rs),
+        sink: Some(&mut sink as &mut dyn RoundSink),
+        ..RunCtl::default()
+    };
+    match sim.run_algo_ctl(AlgoKind::Scale, &Scenario::none(), ctl).unwrap() {
+        RunOutcome::Complete(rep) => assert_eq!(rep.rounds.len(), 6),
+        RunOutcome::Suspended { .. } => panic!("resumed run suspended again"),
+    }
+    drop(sink);
+    let b = std::fs::read_to_string(&csv_b).unwrap();
+    assert_eq!(b.lines().count(), 1 + 3, "{b}");
+}
