@@ -100,6 +100,49 @@ fn main() {
         "i8+delta must cut param-path bytes >= 4x vs f32 (got {lean_reduction:.2}x)"
     );
 
+    section("privacy tax: secure aggregation vs plaintext (fleet-1k)");
+    // the masked collect leg ships 8-byte fixed-point words without the
+    // passthrough envelope, plus reveal traffic when members drop — the
+    // table quantifies what the Bonawitz-style masking costs on top of
+    // each wire preset's plaintext param path
+    println!("setup             | param-path KB | collect KB | reveal KB | wall ms | updates");
+    let mut plain_collect = 0u64;
+    let mut masked_collect = 0u64;
+    for (label, preset, secagg) in [
+        ("lossless", "lossless", false),
+        ("lean", "lean", false),
+        ("lossless+secagg", "lossless", true),
+        ("lean+secagg", "lean", true),
+    ] {
+        let mut cfg = SimConfig::preset("fleet-1k").unwrap();
+        cfg.wire = WireConfig::preset(preset).unwrap();
+        cfg.secure_aggregation = secagg;
+        let t0 = std::time::Instant::now();
+        let mut sim = Simulation::new_parallel(cfg, &compute).unwrap();
+        let report = sim.run_scale().unwrap();
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let collect = report.ledger.get(&MsgKind::DriverCollect).map_or(0, |t| t.bytes);
+        let reveal = report.ledger.get(&MsgKind::SecaggReveal).map_or(0, |t| t.bytes);
+        match (preset, secagg) {
+            ("lossless", false) => plain_collect = collect,
+            ("lossless", true) => masked_collect = collect,
+            _ => {}
+        }
+        println!(
+            "{:<17} | {:>13.1} | {:>10.1} | {:>9.1} | {:>7.0} | {:>7}",
+            label,
+            report.param_path_bytes() as f64 / 1e3,
+            collect as f64 / 1e3,
+            reveal as f64 / 1e3,
+            wall_ms,
+            report.total_updates(),
+        );
+    }
+    assert!(
+        masked_collect >= plain_collect,
+        "masking cannot shrink the collect leg: masked {masked_collect} vs plain {plain_collect}"
+    );
+
     section("per-round update trace at 100 nodes (tapering)");
     let cfg = SimConfig::paper_table1();
     let mut sim = Simulation::new(cfg, &compute).unwrap();

@@ -89,6 +89,30 @@ pub fn dequantize_accumulate(contributions: &[QuantVec]) -> Result<Vec<f32>> {
     Ok(acc.into_iter().map(|v| (v / n) as f32).collect())
 }
 
+/// Masked accumulate: the secure-aggregation half of eq 10. Wrapping
+/// i64 sum over pairwise-masked fixed-point contributions
+/// ([`crate::secagg::Session::mask`]) — over a complete cohort the
+/// masks cancel term-by-term and the result is exactly the clear
+/// fixed-point `Σᵢ wᵢ`; under dropout the caller cancels the residual
+/// masks via `Session::unmask_sum` before dividing out the mean.
+///
+/// Errors on empty input or mismatched dimensions, mirroring
+/// [`dequantize_accumulate`].
+pub fn masked_accumulate(contributions: &[Vec<i64>]) -> Result<Vec<i64>> {
+    let _s = crate::obs::span("masked_accumulate");
+    crate::obs::counter_add(crate::obs::Counter::DequantAccumulates, 1);
+    anyhow::ensure!(!contributions.is_empty(), "accumulate over no contributions");
+    let dim = contributions[0].len();
+    let mut acc = vec![0i64; dim];
+    for c in contributions {
+        anyhow::ensure!(c.len() == dim, "contribution dim {} != {dim}", c.len());
+        for (a, &v) in acc.iter_mut().zip(c) {
+            *a = a.wrapping_add(v);
+        }
+    }
+    Ok(acc)
+}
+
 /// Convergence diagnostic: maximum pairwise L2 distance between member
 /// parameter vectors (gossip should shrink this every exchange round).
 pub fn dispersion(params: &[Vec<f32>]) -> f64 {
@@ -237,6 +261,35 @@ mod tests {
         let a = QuantVec::encode(&[1.0, 2.0]);
         let b = QuantVec::encode(&[1.0, 2.0, 3.0]);
         assert!(dequantize_accumulate(&[a, b]).is_err());
+    }
+
+    #[test]
+    fn masked_accumulate_matches_clear_sum_and_driver_consensus() {
+        use crate::secagg::{self, Session};
+        let params = random_params(5, 9);
+        let ids: Vec<u64> = (0..5u64).collect();
+        let sess = Session::new(&[7u8; 32], 3, 0, ids.clone());
+        let masked: Vec<Vec<i64>> = ids
+            .iter()
+            .zip(&params)
+            .map(|(&id, p)| sess.mask(id, &secagg::encode_fixed(p)))
+            .collect();
+        let clear: Vec<Vec<i64>> = params.iter().map(|p| secagg::encode_fixed(p)).collect();
+        // bit-for-bit: masks cancel inside the wrapping accumulate
+        let sum = masked_accumulate(&masked).unwrap();
+        assert_eq!(sum, masked_accumulate(&clear).unwrap());
+        // and the decoded mean agrees with eq-10 driver consensus
+        let mean = secagg::decode_mean(&sum, params.len());
+        let plain = driver_consensus(&compute(), &params).unwrap();
+        for (m, p) in mean.iter().zip(&plain) {
+            assert!((m - p).abs() < 1e-4, "{m} vs {p}");
+        }
+    }
+
+    #[test]
+    fn masked_accumulate_rejects_bad_input() {
+        assert!(masked_accumulate(&[]).is_err());
+        assert!(masked_accumulate(&[vec![1i64, 2], vec![1i64, 2, 3]]).is_err());
     }
 
     #[test]

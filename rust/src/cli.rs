@@ -197,6 +197,11 @@ pub fn config_overrides(args: &Args, mut cfg: SimConfig) -> Result<SimConfig> {
     if args.has("secagg") {
         cfg.secure_aggregation = true;
     }
+    if let Some(t) = args.get_f64("secagg-threshold")? {
+        // choosing a recovery floor implies masking itself
+        cfg.secure_aggregation = true;
+        cfg.secagg_threshold = t;
+    }
     if let Some(t) = args.get("topology") {
         cfg.topology = match t {
             "ring" => Topology::Ring,

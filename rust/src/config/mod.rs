@@ -88,6 +88,11 @@ pub struct SimConfig {
     /// (see `secagg`; driver learns only the sum — quantized/delta
     /// framing does not apply to masked vectors).
     pub secure_aggregation: bool,
+    /// Secagg dropout-recovery floor: the minimum fraction of a round's
+    /// masking cohort that must survive for the driver to recover the
+    /// aggregate. Below it the cluster round aborts (counted in
+    /// `secagg_aborts`) instead of unmasking — the unrecoverable path.
+    pub secagg_threshold: f64,
 
     // --- failure injection
     /// Per-round probability that any given node is down.
@@ -149,6 +154,7 @@ impl Default for SimConfig {
             wire: WireConfig::default(),
             quantize_exchange: false,
             secure_aggregation: false,
+            secagg_threshold: 0.5,
             node_failure_prob: 0.0,
             node_recovery_prob: 0.7,
             fleet: FleetConfig::default(),
@@ -262,6 +268,9 @@ impl SimConfig {
         if !(0.0..=1.0).contains(&self.node_failure_prob) {
             bail!("node_failure_prob must be a probability");
         }
+        if !(0.0..=1.0).contains(&self.secagg_threshold) {
+            bail!("secagg_threshold must be in [0, 1], got {}", self.secagg_threshold);
+        }
         if self.checkpoint_min_delta < 0.0 {
             bail!("checkpoint_min_delta must be >= 0");
         }
@@ -359,6 +368,7 @@ impl SimConfig {
         }
         v.set("quantize_exchange", Value::Bool(self.quantize_exchange));
         v.set("secure_aggregation", Value::Bool(self.secure_aggregation));
+        v.set("secagg_threshold", Value::Num(self.secagg_threshold));
         v.set("node_failure_prob", Value::Num(self.node_failure_prob));
         v.set("node_recovery_prob", Value::Num(self.node_recovery_prob));
         v.set("threads", Value::Num(self.threads as f64));
@@ -462,6 +472,9 @@ impl SimConfig {
         }
         if let Some(b) = v.get("secure_aggregation").and_then(Value::as_bool) {
             cfg.secure_aggregation = b;
+        }
+        if let Some(x) = num("secagg_threshold") {
+            cfg.secagg_threshold = x;
         }
         if let Some(x) = num("node_failure_prob") {
             cfg.node_failure_prob = x;
@@ -633,6 +646,31 @@ mod tests {
             let mut c = SimConfig::default();
             c.sample_frac = bad;
             assert!(c.validate().is_err(), "sample_frac {bad} accepted");
+        }
+    }
+
+    #[test]
+    fn secagg_threshold_roundtrips_and_validates() {
+        // default: masking off, half-cohort recovery floor
+        let cfg = SimConfig::default();
+        assert!(!cfg.secure_aggregation);
+        assert_eq!(cfg.secagg_threshold, 0.5);
+        let mut cfg = SimConfig::default();
+        cfg.secure_aggregation = true;
+        cfg.secagg_threshold = 0.75;
+        let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert!(back.secure_aggregation);
+        assert_eq!(back.secagg_threshold, 0.75);
+        for bad in [-0.1, 1.1] {
+            let mut c = SimConfig::default();
+            c.secagg_threshold = bad;
+            assert!(c.validate().is_err(), "secagg_threshold {bad} accepted");
+        }
+        // edge values are legal: 0 never aborts, 1 aborts on any dropout
+        for ok in [0.0, 1.0] {
+            let mut c = SimConfig::default();
+            c.secagg_threshold = ok;
+            c.validate().unwrap();
         }
     }
 

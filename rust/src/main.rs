@@ -53,7 +53,8 @@ const RUN_SPEC: Spec = Spec {
         "clusters", "rounds", "epochs", "seed", "partition", "model", "min-delta",
         "failure-prob", "topology", "heterogeneity", "out", "lr", "reg",
         "trace-dir", "edge-period", "threads", "sample", "wire", "codec", "topk",
-        "trace-out", "metrics-out", "resume", "state", "stop-after", "stream-rounds",
+        "secagg-threshold", "trace-out", "metrics-out", "resume", "state",
+        "stop-after", "stream-rounds",
     ],
     switches: &["table1", "fig2", "quiet", "rounds-trace", "quantize", "secagg", "delta"],
 };
@@ -64,7 +65,7 @@ const SCENARIO_SPEC: Spec = Spec {
         "nodes", "clusters", "rounds", "epochs", "seed", "partition", "model",
         "min-delta", "failure-prob", "topology", "heterogeneity", "out", "lr",
         "reg", "trace-dir", "seeds", "base-seed", "threads", "sample", "wire",
-        "codec", "topk", "trace-out", "metrics-out",
+        "codec", "topk", "secagg-threshold", "trace-out", "metrics-out",
     ],
     switches: &[
         "quiet", "rounds-trace", "sequential", "verify", "quantize", "secagg", "delta",
@@ -76,7 +77,8 @@ const FLEET_SPEC: Spec = Spec {
         "config", "preset", "algo", "edge-period", "nodes", "clusters", "rounds",
         "epochs", "seed", "partition", "model", "min-delta", "failure-prob",
         "topology", "heterogeneity", "lr", "reg", "threads", "sample", "csv",
-        "out", "wire", "codec", "topk", "trace-out", "metrics-out", "json",
+        "out", "wire", "codec", "topk", "secagg-threshold", "trace-out",
+        "metrics-out", "json",
     ],
     switches: &["quiet", "quantize", "secagg", "delta"],
 };

@@ -73,12 +73,17 @@ pub enum MsgKind {
     EdgeUpdate,
     /// Edge server → clients (HFL baseline tier-1 broadcast).
     EdgeBroadcast,
+    /// Survivor → driver: a dropped node's pair secret for secure-
+    /// aggregation dropout recovery (DESIGN.md §11). Appended last so
+    /// every pre-existing wire code — and with it `Ord`, the ledger
+    /// serialization order — is unchanged.
+    SecaggReveal,
 }
 
 impl MsgKind {
     /// Every kind in declaration order — the stable wire code space the
     /// resume snapshot serializes ledger totals under.
-    pub const ALL: [MsgKind; 12] = [
+    pub const ALL: [MsgKind; 13] = [
         MsgKind::Summary,
         MsgKind::Assignment,
         MsgKind::PeerExchange,
@@ -91,6 +96,7 @@ impl MsgKind {
         MsgKind::CheckpointLocal,
         MsgKind::EdgeUpdate,
         MsgKind::EdgeBroadcast,
+        MsgKind::SecaggReveal,
     ];
 
     /// Stable serialization code (index into [`Self::ALL`]).

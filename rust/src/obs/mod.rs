@@ -58,9 +58,15 @@ pub enum Counter {
     Elections = 4,
     Reclusterings = 5,
     DequantAccumulates = 6,
+    /// Pairwise-masked secure-aggregation frames built for the wire.
+    MaskedFrames = 7,
+    /// Dropout-recovery pair-secret reveals received by drivers.
+    SecaggReveals = 8,
+    /// Cluster rounds aborted below the secagg recovery threshold.
+    SecaggAborts = 9,
 }
 
-const N_COUNTERS: usize = 7;
+const N_COUNTERS: usize = 10;
 
 impl Counter {
     pub const ALL: [Counter; N_COUNTERS] = [
@@ -71,6 +77,9 @@ impl Counter {
         Counter::Elections,
         Counter::Reclusterings,
         Counter::DequantAccumulates,
+        Counter::MaskedFrames,
+        Counter::SecaggReveals,
+        Counter::SecaggAborts,
     ];
 
     pub fn name(self) -> &'static str {
@@ -82,6 +91,9 @@ impl Counter {
             Counter::Elections => "elections",
             Counter::Reclusterings => "reclusterings",
             Counter::DequantAccumulates => "dequant_accumulates",
+            Counter::MaskedFrames => "masked_frames",
+            Counter::SecaggReveals => "secagg_reveals",
+            Counter::SecaggAborts => "secagg_aborts",
         }
     }
 }

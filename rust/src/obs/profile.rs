@@ -20,7 +20,7 @@ pub const PROFILE_SPEC: Spec = Spec {
         "config", "preset", "algo", "edge-period", "nodes", "clusters", "rounds",
         "epochs", "seed", "partition", "min-delta", "failure-prob", "topology",
         "heterogeneity", "lr", "reg", "threads", "sample", "wire", "codec",
-        "topk", "trace-out", "metrics-out",
+        "topk", "secagg-threshold", "trace-out", "metrics-out",
     ],
     switches: &["quiet", "quantize", "secagg", "delta"],
 };

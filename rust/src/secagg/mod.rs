@@ -1,44 +1,110 @@
-//! Secure aggregation for the driver-collect phase (privacy extension).
+//! Secure aggregation for the driver-collect phase (DESIGN.md §11).
 //!
 //! The paper stresses privacy but transmits cluster members' raw weights
-//! to the driver for eq-10 consensus. This module adds the standard
-//! pairwise-masking construction (Bonawitz-style, simplified to the
-//! honest-but-curious, no-dropout-within-phase setting):
+//! to the driver for eq-10 consensus. This module implements the
+//! standard pairwise-masking construction (Bonawitz-style, honest-but-
+//! curious) with deterministic HKDF-style key expansion and a dropout
+//! recovery protocol for nodes that leave mid-round:
 //!
 //! 1. weights are encoded in **fixed point** (i64, 2⁻²⁴ resolution) so
 //!    masking is exact modular arithmetic, not lossy float addition;
-//! 2. every ordered pair `(i, j)` of group members derives a shared mask
-//!    stream from their node keys (`mix(k_i, k_j)` — in a deployment this
-//!    would be a Diffie–Hellman shared secret); member `i` **adds** the
-//!    stream for every `j > i` and **subtracts** it for every `j < i`;
-//! 3. the driver sums the masked vectors: all masks cancel term-by-term
-//!    (wrapping arithmetic), leaving exactly `Σᵢ wᵢ` in fixed point, which
-//!    divides out to the eq-10 mean.
+//! 2. every unordered pair `{i, j}` of cohort members shares a **pair
+//!    secret** `HMAC-SHA256(root, "scale-secagg-pair" ‖ lo ‖ hi)` — in a
+//!    deployment this would be a Diffie–Hellman shared secret; here it is
+//!    derived from the run's root key so fingerprints stay reproducible;
+//! 3. the pair secret expands counter-mode into a per-(round, cluster)
+//!    **mask stream** of i64 words: block `t` is
+//!    `HMAC-SHA256(secret, "scale-secagg-mask" ‖ round ‖ cluster ‖ t)`,
+//!    each 32-byte tag yielding four little-endian words — so masks never
+//!    repeat across rounds or clusters;
+//! 4. member `i` **adds** the stream for every cohort peer `j > i` and
+//!    **subtracts** it for every `j < i`; the driver's wrapping sum over
+//!    a complete cohort cancels every mask term-by-term, leaving exactly
+//!    `Σᵢ wᵢ` in fixed point, which divides out to the eq-10 mean;
+//! 5. **dropout recovery**: if node `d` left after the cohort was fixed
+//!    (its masks are baked into every survivor's vector but its own
+//!    contribution never arrives), each survivor `s` reveals the pair
+//!    secret `{s, d}` to the driver, which re-expands the stream and
+//!    subtracts (or adds, by the same sign convention) the residual.
 //!
 //! The driver learns only the sum — no individual member's weights —
-//! while the consensus result is bit-identical to the plaintext mean (up
-//! to the 2⁻²⁴ quantization, ~6e-8, far below f32 training noise).
+//! while the consensus result is bit-identical to the plaintext mean of
+//! the survivors (up to the 2⁻²⁴ quantization, ~6e-8, far below f32
+//! training noise). Threat-model caveats live in DESIGN.md §11: the sim
+//! driver holds the root key, so `verify_reveal` models integrity
+//! checking of the reveal channel, not key secrecy from the server.
 
-use crate::util::rng::{mix64, Rng};
+use std::collections::BTreeSet;
+
+use anyhow::{ensure, Result};
+use hmac::{Hmac, Mac};
+use sha2::Sha256;
+
+type HmacSha256 = Hmac<Sha256>;
 
 /// Fixed-point scale: 24 fractional bits.
 const SCALE: f64 = (1u64 << 24) as f64;
 
-/// Per-node masking secret (derived from the session root key in the sim).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct MaskSecret(pub u64);
+/// Ledger bytes for one `MsgKind::SecaggReveal` message: survivor id
+/// (8) + dropped id (8) + pair secret (32) + auth tag (32) + framing (8).
+pub const REVEAL_BYTES: u64 = 88;
 
-impl MaskSecret {
-    /// Derive from a session root key + node id.
-    pub fn derive(root: &[u8; 32], node_id: u64) -> MaskSecret {
-        let mut acc = 0xA17E_5EC2_D002u64 ^ node_id;
-        for chunk in root.chunks(8) {
-            let mut b = [0u8; 8];
-            b[..chunk.len()].copy_from_slice(chunk);
-            acc = mix64(acc, u64::from_le_bytes(b));
-        }
-        MaskSecret(acc)
+/// Domain label for pair-secret derivation.
+const PAIR_LABEL: &[u8] = b"scale-secagg-pair";
+/// Domain label for mask-stream expansion.
+const MASK_LABEL: &[u8] = b"scale-secagg-mask";
+
+/// Shared secret of one unordered node pair, derived from the run's
+/// root key. Symmetric: `derive(root, a, b) == derive(root, b, a)`.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct PairSecret(pub [u8; 32]);
+
+impl std::fmt::Debug for PairSecret {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // never print key material, even in test failures
+        write!(f, "PairSecret(..)")
     }
+}
+
+impl PairSecret {
+    /// `HMAC-SHA256(root, "scale-secagg-pair" ‖ lo_le ‖ hi_le)` over the
+    /// ordered pair of node ids.
+    pub fn derive(root: &[u8; 32], a: u64, b: u64) -> PairSecret {
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let mut mac = <HmacSha256 as Mac>::new_from_slice(root).expect("hmac key");
+        mac.update(PAIR_LABEL);
+        mac.update(&lo.to_le_bytes());
+        mac.update(&hi.to_le_bytes());
+        let tag = mac.finalize().into_bytes();
+        let mut out = [0u8; 32];
+        out.copy_from_slice(&tag);
+        PairSecret(out)
+    }
+}
+
+/// Counter-mode HKDF-style expansion of a pair secret into `dim` i64
+/// mask words, bound to the (round, cluster) coordinates.
+pub fn pair_mask_stream(secret: &PairSecret, round: u32, cluster: u32, dim: usize) -> Vec<i64> {
+    let mut out = Vec::with_capacity(dim);
+    let mut block: u32 = 0;
+    while out.len() < dim {
+        let mut mac = <HmacSha256 as Mac>::new_from_slice(&secret.0).expect("hmac key");
+        mac.update(MASK_LABEL);
+        mac.update(&round.to_le_bytes());
+        mac.update(&cluster.to_le_bytes());
+        mac.update(&block.to_le_bytes());
+        let tag = mac.finalize().into_bytes();
+        for word in tag.chunks_exact(8) {
+            if out.len() == dim {
+                break;
+            }
+            let mut b = [0u8; 8];
+            b.copy_from_slice(word);
+            out.push(i64::from_le_bytes(b));
+        }
+        block = block.wrapping_add(1);
+    }
+    out
 }
 
 /// Encode f32 weights to fixed-point i64 (wrapping domain).
@@ -52,40 +118,6 @@ pub fn decode_mean(sum: &[i64], count: usize) -> Vec<f32> {
     sum.iter()
         .map(|&v| (v as f64 / count as f64 / SCALE) as f32)
         .collect()
-}
-
-/// The pairwise mask stream shared by nodes `a` and `b` (symmetric).
-fn pair_stream(a: MaskSecret, b: MaskSecret, dim: usize) -> Vec<i64> {
-    // symmetric seed: order-independent combination
-    let seed = mix64(a.0 ^ b.0, a.0.wrapping_add(b.0));
-    let mut rng = Rng::new(seed);
-    (0..dim).map(|_| rng.next_u64() as i64).collect()
-}
-
-/// Mask one member's fixed-point weights for a group.
-///
-/// `members` are the (id, secret) pairs of the whole group **in a
-/// canonical order agreed by all members** (the sim uses ascending node
-/// id); `me` is this member's index in that list.
-pub fn mask(encoded: &[i64], members: &[(usize, MaskSecret)], me: usize) -> Vec<i64> {
-    let mut out = encoded.to_vec();
-    let my_secret = members[me].1;
-    for (idx, &(_, secret)) in members.iter().enumerate() {
-        if idx == me {
-            continue;
-        }
-        let stream = pair_stream(my_secret, secret, encoded.len());
-        if idx > me {
-            for (o, s) in out.iter_mut().zip(&stream) {
-                *o = o.wrapping_add(*s);
-            }
-        } else {
-            for (o, s) in out.iter_mut().zip(&stream) {
-                *o = o.wrapping_sub(*s);
-            }
-        }
-    }
-    out
 }
 
 /// Driver-side: sum the masked vectors (masks cancel) → fixed-point Σwᵢ.
@@ -102,17 +134,150 @@ pub fn sum_masked(masked: &[Vec<i64>]) -> Vec<i64> {
     sum
 }
 
-/// Full secure mean over a group's f32 parameter vectors (test helper /
-/// reference composition of the above).
-pub fn secure_mean(
-    params: &[Vec<f32>],
-    members: &[(usize, MaskSecret)],
-) -> Vec<f32> {
-    assert_eq!(params.len(), members.len());
-    let masked: Vec<Vec<i64>> = params
+/// One survivor's disclosure of a dropped node's pair secret, sent to
+/// the driver over `MsgKind::SecaggReveal` ([`REVEAL_BYTES`] each).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Reveal {
+    pub survivor: u64,
+    pub dropped: u64,
+    pub secret: PairSecret,
+}
+
+/// One cluster-round masking session: the cohort (sorted global node
+/// ids) that every member masks against, bound to (round, cluster).
+#[derive(Clone, Debug)]
+pub struct Session {
+    root: [u8; 32],
+    round: u32,
+    cluster: u32,
+    members: Vec<u64>,
+}
+
+impl Session {
+    /// Fix the masking cohort. `members` are global node ids; they are
+    /// sorted internally so every participant agrees on the pair order.
+    pub fn new(root: &[u8; 32], round: u32, cluster: u32, mut members: Vec<u64>) -> Session {
+        members.sort_unstable();
+        members.dedup();
+        Session { root: *root, round, cluster, members }
+    }
+
+    /// The cohort in canonical (ascending-id) order.
+    pub fn members(&self) -> &[u64] {
+        &self.members
+    }
+
+    fn stream(&self, a: u64, b: u64, dim: usize) -> Vec<i64> {
+        let secret = PairSecret::derive(&self.root, a, b);
+        pair_mask_stream(&secret, self.round, self.cluster, dim)
+    }
+
+    /// Mask member `me`'s fixed-point weights against the whole cohort:
+    /// add the pair stream for every peer with a higher id, subtract it
+    /// for every lower id.
+    pub fn mask(&self, me: u64, encoded: &[i64]) -> Vec<i64> {
+        assert!(self.members.contains(&me), "node {me} not in masking cohort");
+        let mut out = encoded.to_vec();
+        for &peer in &self.members {
+            if peer == me {
+                continue;
+            }
+            let stream = self.stream(me, peer, encoded.len());
+            if peer > me {
+                for (o, s) in out.iter_mut().zip(&stream) {
+                    *o = o.wrapping_add(*s);
+                }
+            } else {
+                for (o, s) in out.iter_mut().zip(&stream) {
+                    *o = o.wrapping_sub(*s);
+                }
+            }
+        }
+        out
+    }
+
+    /// Survivor-side: disclose the pair secret shared with a dropped
+    /// cohort member so the driver can cancel the orphaned mask.
+    pub fn reveal(&self, survivor: u64, dropped: u64) -> Reveal {
+        Reveal {
+            survivor,
+            dropped,
+            secret: PairSecret::derive(&self.root, survivor, dropped),
+        }
+    }
+
+    /// Driver-side integrity check: a reveal whose secret does not match
+    /// the claimed pair is rejected (wrong pair, corrupted in flight, or
+    /// a survivor lying about a secret it never held).
+    pub fn verify_reveal(&self, r: &Reveal) -> Result<()> {
+        ensure!(r.survivor != r.dropped, "reveal pairs a node with itself");
+        ensure!(
+            r.secret == PairSecret::derive(&self.root, r.survivor, r.dropped),
+            "pair secret mismatch in reveal ({} -> driver, dropped {})",
+            r.survivor,
+            r.dropped
+        );
+        Ok(())
+    }
+
+    /// Driver-side dropout recovery: given the wrapping sum of the
+    /// survivors' masked vectors, cancel the residual masks that the
+    /// dropped members baked into it. Requires exactly one verified
+    /// reveal per (survivor, dropped) pair; anything missing, duplicate,
+    /// out-of-cohort or failing verification is an error — the caller
+    /// falls back to the unrecoverable-threshold path.
+    pub fn unmask_sum(
+        &self,
+        sum: &mut [i64],
+        survivors: &[u64],
+        dropped: &[u64],
+        reveals: &[Reveal],
+    ) -> Result<()> {
+        let surv: BTreeSet<u64> = survivors.iter().copied().collect();
+        let gone: BTreeSet<u64> = dropped.iter().copied().collect();
+        ensure!(surv.is_disjoint(&gone), "a node cannot both survive and drop");
+        let mut seen: BTreeSet<(u64, u64)> = BTreeSet::new();
+        for r in reveals {
+            self.verify_reveal(r)?;
+            ensure!(surv.contains(&r.survivor), "reveal from non-survivor {}", r.survivor);
+            ensure!(gone.contains(&r.dropped), "reveal for non-dropped node {}", r.dropped);
+            ensure!(
+                seen.insert((r.survivor, r.dropped)),
+                "duplicate reveal for pair ({}, {})",
+                r.survivor,
+                r.dropped
+            );
+            // survivor s carried +stream for dropped d > s and -stream
+            // for d < s; apply the inverse to the sum
+            let stream = pair_mask_stream(&r.secret, self.round, self.cluster, sum.len());
+            if r.dropped > r.survivor {
+                for (o, s) in sum.iter_mut().zip(&stream) {
+                    *o = o.wrapping_sub(*s);
+                }
+            } else {
+                for (o, s) in sum.iter_mut().zip(&stream) {
+                    *o = o.wrapping_add(*s);
+                }
+            }
+        }
+        ensure!(
+            seen.len() == surv.len() * gone.len(),
+            "incomplete dropout recovery: {} reveals for {} survivor×dropped pairs",
+            seen.len(),
+            surv.len() * gone.len()
+        );
+        Ok(())
+    }
+}
+
+/// Full secure mean over a cohort's f32 parameter vectors (reference
+/// composition of the above; also the test oracle).
+pub fn secure_mean(session: &Session, ids: &[u64], params: &[Vec<f32>]) -> Vec<f32> {
+    assert_eq!(params.len(), ids.len());
+    let masked: Vec<Vec<i64>> = ids
         .iter()
-        .enumerate()
-        .map(|(i, p)| mask(&encode_fixed(p), members, i))
+        .zip(params)
+        .map(|(&id, p)| session.mask(id, &encode_fixed(p)))
         .collect();
     decode_mean(&sum_masked(&masked), params.len())
 }
@@ -122,9 +287,11 @@ mod tests {
     use super::*;
     use crate::util::prop::{check, Config};
 
-    fn group(n: usize) -> Vec<(usize, MaskSecret)> {
-        let root = [3u8; 32];
-        (0..n).map(|i| (i, MaskSecret::derive(&root, i as u64))).collect()
+    const ROOT: [u8; 32] = [3u8; 32];
+
+    fn session(n: usize) -> (Session, Vec<u64>) {
+        let ids: Vec<u64> = (0..n as u64).collect();
+        (Session::new(&ROOT, 2, 1, ids.clone()), ids)
     }
 
     #[test]
@@ -138,62 +305,114 @@ mod tests {
     }
 
     #[test]
-    fn masks_cancel_exactly() {
-        let members = group(5);
+    fn pair_secret_is_symmetric_and_distinct() {
+        assert_eq!(PairSecret::derive(&ROOT, 3, 9), PairSecret::derive(&ROOT, 9, 3));
+        assert_ne!(PairSecret::derive(&ROOT, 3, 9), PairSecret::derive(&ROOT, 3, 8));
+        let other = [4u8; 32];
+        assert_ne!(PairSecret::derive(&ROOT, 3, 9), PairSecret::derive(&other, 3, 9));
+    }
+
+    #[test]
+    fn mask_stream_varies_by_round_and_cluster() {
+        let s = PairSecret::derive(&ROOT, 0, 1);
+        let base = pair_mask_stream(&s, 5, 2, 16);
+        assert_ne!(base, pair_mask_stream(&s, 6, 2, 16), "round must rotate the stream");
+        assert_ne!(base, pair_mask_stream(&s, 5, 3, 16), "cluster must rotate the stream");
+        // a longer stream extends the shorter one (counter mode)
+        let long = pair_mask_stream(&s, 5, 2, 33);
+        assert_eq!(&long[..16], &base[..]);
+    }
+
+    #[test]
+    fn masks_cancel_exactly_over_complete_cohort() {
+        let (sess, ids) = session(5);
         let params: Vec<Vec<f32>> = (0..5)
             .map(|i| (0..33).map(|j| (i * 33 + j) as f32 * 0.01 - 0.5).collect())
             .collect();
-        let secure = secure_mean(&params, &members);
-        // plaintext mean
-        let mut plain = vec![0.0f64; 33];
-        for p in &params {
-            for (a, &x) in plain.iter_mut().zip(p) {
-                *a += x as f64;
-            }
-        }
-        for (s, p) in secure.iter().zip(&plain) {
-            let expected = (p / 5.0) as f32;
-            assert!((s - expected).abs() < 1e-5, "{s} vs {expected}");
-        }
+        // bit-for-bit in fixed point: masked sum == clear sum
+        let clear: Vec<Vec<i64>> = params.iter().map(|p| encode_fixed(p)).collect();
+        let masked: Vec<Vec<i64>> =
+            ids.iter().zip(&params).map(|(&id, p)| sess.mask(id, &encode_fixed(p))).collect();
+        assert_eq!(sum_masked(&masked), sum_masked(&clear));
     }
 
     #[test]
     fn single_masked_vector_is_garbage() {
         // the driver must not learn an individual's weights: a masked
         // vector decodes to something wildly different from the input
-        let members = group(3);
+        let (sess, _) = session(3);
         let p = vec![0.5f32; 33];
-        let masked = mask(&encode_fixed(&p), &members, 0);
+        let masked = sess.mask(0, &encode_fixed(&p));
         let decoded = decode_mean(&masked, 1);
-        let max_dev = decoded
-            .iter()
-            .map(|&v| (v - 0.5).abs())
-            .fold(0.0f32, f32::max);
+        let max_dev = decoded.iter().map(|&v| (v - 0.5).abs()).fold(0.0f32, f32::max);
         assert!(max_dev > 1e3, "mask too weak: max deviation {max_dev}");
     }
 
     #[test]
-    fn two_party_group() {
-        let members = group(2);
-        let params = vec![vec![1.0f32; 8], vec![3.0f32; 8]];
-        let m = secure_mean(&params, &members);
-        assert!(m.iter().all(|&v| (v - 2.0).abs() < 1e-6));
-    }
-
-    #[test]
-    fn singleton_group_is_identity() {
-        let members = group(1);
+    fn singleton_cohort_is_identity() {
+        let (sess, ids) = session(1);
         let params = vec![vec![0.75f32; 4]];
-        let m = secure_mean(&params, &members);
+        let m = secure_mean(&sess, &ids, &params);
         assert!(m.iter().all(|&v| (v - 0.75).abs() < 1e-6));
     }
 
     #[test]
-    fn secrets_differ_by_node_and_root() {
-        let r1 = [1u8; 32];
-        let r2 = [2u8; 32];
-        assert_ne!(MaskSecret::derive(&r1, 0), MaskSecret::derive(&r1, 1));
-        assert_ne!(MaskSecret::derive(&r1, 0), MaskSecret::derive(&r2, 0));
+    fn dropout_recovery_matches_survivor_only_aggregate() {
+        let (sess, ids) = session(6);
+        let params: Vec<Vec<f32>> = (0..6)
+            .map(|i| (0..17).map(|j| ((i + 1) * (j + 1)) as f32 * 0.02 - 1.0).collect())
+            .collect();
+        let dropped = [1u64, 4u64];
+        let survivors: Vec<u64> = ids.iter().copied().filter(|i| !dropped.contains(i)).collect();
+        // survivors masked against the FULL cohort; dropped never send
+        let masked: Vec<Vec<i64>> = survivors
+            .iter()
+            .map(|&id| sess.mask(id, &encode_fixed(&params[id as usize])))
+            .collect();
+        let mut sum = sum_masked(&masked);
+        let reveals: Vec<Reveal> = survivors
+            .iter()
+            .flat_map(|&s| dropped.iter().map(move |&d| (s, d)))
+            .map(|(s, d)| sess.reveal(s, d))
+            .collect();
+        sess.unmask_sum(&mut sum, &survivors, &dropped, &reveals).unwrap();
+        // exact fixed-point equality with the clear survivor-only sum
+        let clear: Vec<Vec<i64>> = survivors
+            .iter()
+            .map(|&id| encode_fixed(&params[id as usize]))
+            .collect();
+        assert_eq!(sum, sum_masked(&clear));
+    }
+
+    #[test]
+    fn wrong_or_incomplete_reveals_are_rejected() {
+        let (sess, _) = session(4);
+        let survivors = [0u64, 2, 3];
+        let dropped = [1u64];
+        let good: Vec<Reveal> =
+            survivors.iter().map(|&s| sess.reveal(s, 1)).collect();
+        let mut sum = vec![0i64; 8];
+
+        // corrupted secret
+        let mut bad = good.clone();
+        bad[0].secret.0[5] ^= 0x10;
+        assert!(sess.unmask_sum(&mut sum, &survivors, &dropped, &bad).is_err());
+
+        // reveal for the wrong pair (claims {0,1} but carries {2,1})
+        let mut bad = good.clone();
+        bad[0].secret = PairSecret::derive(&ROOT, 2, 1);
+        assert!(sess.unmask_sum(&mut sum, &survivors, &dropped, &bad).is_err());
+
+        // missing one pair
+        assert!(sess.unmask_sum(&mut sum, &survivors, &dropped, &good[..2]).is_err());
+
+        // duplicate
+        let mut dup = good.clone();
+        dup.push(good[0].clone());
+        assert!(sess.unmask_sum(&mut sum, &survivors, &dropped, &dup).is_err());
+
+        // the pristine set passes
+        assert!(sess.unmask_sum(&mut sum, &survivors, &dropped, &good).is_ok());
     }
 
     #[test]
@@ -201,20 +420,58 @@ mod tests {
         check(&Config { cases: 60, ..Default::default() }, "secagg correctness", |g| {
             let n = g.usize_in(1, 12);
             let dim = g.usize_in(1, 64);
-            let members = group(n);
+            let (sess, ids) = (
+                Session::new(&ROOT, g.usize_in(0, 40) as u32, g.usize_in(0, 8) as u32, {
+                    (0..n as u64).collect()
+                }),
+                (0..n as u64).collect::<Vec<u64>>(),
+            );
             let params: Vec<Vec<f32>> = (0..n)
                 .map(|_| (0..dim).map(|_| g.rng.f32() * 20.0 - 10.0).collect())
                 .collect();
-            let secure = secure_mean(&params, &members);
+            let secure = secure_mean(&sess, &ids, &params);
             for d in 0..dim {
                 let plain: f64 =
                     params.iter().map(|p| p[d] as f64).sum::<f64>() / n as f64;
                 if (secure[d] as f64 - plain).abs() > 1e-4 {
-                    return Err(format!(
-                        "dim {d}: secure {} vs plain {plain}",
-                        secure[d]
-                    ));
+                    return Err(format!("dim {d}: secure {} vs plain {plain}", secure[d]));
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_dropout_recovery_is_exact() {
+        check(&Config { cases: 40, ..Default::default() }, "secagg dropout", |g| {
+            let n = g.usize_in(2, 10);
+            let dim = g.usize_in(1, 48);
+            let n_drop = g.usize_in(1, n - 1);
+            let ids: Vec<u64> = (0..n as u64).collect();
+            let sess = Session::new(&ROOT, 7, 0, ids.clone());
+            let params: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..dim).map(|_| g.rng.f32() * 4.0 - 2.0).collect())
+                .collect();
+            let dropped: Vec<u64> = ids[..n_drop].to_vec();
+            let survivors: Vec<u64> = ids[n_drop..].to_vec();
+            let masked: Vec<Vec<i64>> = survivors
+                .iter()
+                .map(|&id| sess.mask(id, &encode_fixed(&params[id as usize])))
+                .collect();
+            let mut sum = sum_masked(&masked);
+            let reveals: Vec<Reveal> = survivors
+                .iter()
+                .flat_map(|&s| dropped.iter().map(move |&d| (s, d)))
+                .map(|(s, d)| sess.reveal(s, d))
+                .collect();
+            sess.unmask_sum(&mut sum, &survivors, &dropped, &reveals)
+                .map_err(|e| e.to_string())?;
+            let clear: Vec<Vec<i64>> = survivors
+                .iter()
+                .map(|&id| encode_fixed(&params[id as usize]))
+                .collect();
+            if sum != sum_masked(&clear) {
+                return Err("recovered sum != clear survivor sum".into());
             }
             Ok(())
         });

@@ -16,7 +16,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::aggregation::{driver_consensus, peer_exchange};
+use crate::aggregation::{driver_consensus, masked_accumulate, peer_exchange};
 use crate::checkpoint::{Checkpoint, Decision};
 use crate::config::{CheckpointMode, SimConfig};
 use crate::election::{elect, representativeness, Ballot, CriteriaWeights};
@@ -26,6 +26,7 @@ use crate::runtime::compute::ModelCompute;
 use crate::secagg;
 use crate::topology::peer_sets;
 use crate::util::rng::mix64;
+use crate::wire;
 
 use super::{eval_view, ClusterState, NodeState, BALLOT_BYTES, HEARTBEAT_BYTES};
 
@@ -152,14 +153,38 @@ pub(crate) fn scale_cluster_round(
     // nodes have already heartbeated above and skip everything else.
     // At sample_frac = 1.0 this is `alive` verbatim — no RNG touched,
     // byte-identical to the pre-sampling engine.
-    let active = super::round_participants(
-        cfg,
-        0x5A_3C1E,
-        round,
-        cluster.id as u64,
-        alive,
-        Some(driver_local),
-    );
+    //
+    // Under secure aggregation the draw instead covers the *masking
+    // cohort*: live members plus the nodes that went dark at this
+    // round's boundary with their pair masks outstanding (DESIGN §11).
+    // Those departures split off as `departed` — they train nothing and
+    // send nothing, but every survivor's masked vector still carries
+    // their pair masks, so the collect phase must recover. `departed`
+    // is always empty with secagg off.
+    let (active, departed) = if cfg.secure_aggregation {
+        let cohort: Vec<usize> = (0..nodes.len())
+            .filter(|&li| nodes[li].alive || nodes[li].left_this_round)
+            .collect();
+        let drawn = super::round_participants(
+            cfg,
+            0x5A_3C1E,
+            round,
+            cluster.id as u64,
+            cohort,
+            Some(driver_local),
+        );
+        drawn.into_iter().partition::<Vec<usize>, _>(|&li| nodes[li].alive)
+    } else {
+        let active = super::round_participants(
+            cfg,
+            0x5A_3C1E,
+            round,
+            cluster.id as u64,
+            alive,
+            Some(driver_local),
+        );
+        (active, Vec::new())
+    };
     let active_global: Vec<usize> = active.iter().map(|&li| cluster.members[li]).collect();
 
     // --- local training ---
@@ -220,44 +245,44 @@ pub(crate) fn scale_cluster_round(
     };
 
     // --- driver collect + consensus (eq 10) ---
-    let collect_payload = if cfg.secure_aggregation {
-        // fixed-point i64 per element (see `secagg`)
-        (dim * 8) as u64 + 64
-    } else {
-        payload
-    };
     let mut collect_ms = 0.0f64;
-    let consensus = {
+    let consensus = if cfg.secure_aggregation {
+        let _s = obs::span("collect");
+        let recovered = secagg_collect(
+            cluster,
+            nodes,
+            net,
+            cfg,
+            root_key,
+            round,
+            &active,
+            &departed,
+            &exchanged,
+            driver_local,
+            &mut collect_ms,
+        )?;
+        match recovered {
+            Some(c) => c,
+            None => {
+                // unrecoverable dropout: too few survivors to cancel the
+                // outstanding masks — the cluster's contribution is
+                // excluded this round (no consensus, upload or
+                // broadcast; the bytes already spent still count)
+                out.latency_ms = train_ms + exchange_ms + collect_ms;
+                return Ok(out);
+            }
+        }
+    } else {
         let _s = obs::span("collect");
         for &li in &active {
             if li != driver_local {
                 let (from, to) = (&nodes[li].device, &nodes[driver_local].device);
-                let lat = net.send(
-                    MsgKind::DriverCollect,
-                    Some(from),
-                    Some(to),
-                    collect_payload,
-                    round,
-                );
+                let lat =
+                    net.send(MsgKind::DriverCollect, Some(from), Some(to), payload, round);
                 collect_ms = collect_ms.max(lat);
             }
         }
-        if cfg.secure_aggregation {
-            // pairwise-masked sum: the driver only ever sees masked
-            // vectors; the integer sum cancels the masks exactly
-            let members: Vec<(usize, secagg::MaskSecret)> = active_global
-                .iter()
-                .map(|&id| (id, secagg::MaskSecret::derive(root_key, id as u64)))
-                .collect();
-            let masked: Vec<Vec<i64>> = exchanged
-                .iter()
-                .enumerate()
-                .map(|(i, p)| secagg::mask(&secagg::encode_fixed(p), &members, i))
-                .collect();
-            secagg::decode_mean(&secagg::sum_masked(&masked), masked.len())
-        } else {
-            driver_consensus(compute, &exchanged)?
-        }
+        driver_consensus(compute, &exchanged)?
     };
 
     // --- driver-side validation + checkpoint gate ---
@@ -334,4 +359,91 @@ pub(crate) fn scale_cluster_round(
 
     out.latency_ms = train_ms + exchange_ms + collect_ms + upload_ms + broadcast_ms;
     Ok(out)
+}
+
+/// The secure-aggregation collect phase (DESIGN §11): every survivor
+/// masks its post-exchange weights against the round's full cohort and
+/// ships a masked [`wire::Frame`] to the driver; survivors additionally
+/// reveal each departed member's pair secret so the driver can cancel
+/// the orphaned masks. Returns `None` when too few survivors remain for
+/// recovery (`cfg.secagg_threshold` of the cohort) — the unrecoverable
+/// path, counted in `secagg_aborts`.
+#[allow(clippy::too_many_arguments)]
+fn secagg_collect(
+    cluster: &ClusterState,
+    nodes: &[&mut NodeState],
+    net: &mut Network,
+    cfg: &SimConfig,
+    root_key: &[u8; 32],
+    round: usize,
+    active: &[usize],
+    departed: &[usize],
+    exchanged: &[Vec<f32>],
+    driver_local: usize,
+    collect_ms: &mut f64,
+) -> Result<Option<Vec<f32>>> {
+    let cohort_n = active.len() + departed.len();
+    let need = ((cfg.secagg_threshold * cohort_n as f64).ceil() as usize).max(1);
+    if active.len() < need {
+        obs::counter_add(obs::Counter::SecaggAborts, 1);
+        return Ok(None);
+    }
+    let cohort_ids: Vec<u64> = active
+        .iter()
+        .chain(departed.iter())
+        .map(|&li| cluster.members[li] as u64)
+        .collect();
+    let session =
+        secagg::Session::new(root_key, round as u32, cluster.id as u32, cohort_ids);
+
+    // masked frames: the driver parses exactly the bytes that crossed
+    // the wire, so a structurally tampered frame is rejected, never
+    // silently aggregated
+    let mut masked = Vec::with_capacity(active.len());
+    for (p, &li) in active.iter().enumerate() {
+        let id = cluster.members[li] as u64;
+        let words = session.mask(id, &secagg::encode_fixed(&exchanged[p]));
+        let frame = wire::Frame::masked_frame(round as u32, &words);
+        if li != driver_local {
+            let (from, to) = (&nodes[li].device, &nodes[driver_local].device);
+            let lat = net.send_frame(MsgKind::DriverCollect, Some(from), Some(to), &frame, round);
+            *collect_ms = collect_ms.max(lat);
+        }
+        let received =
+            wire::Frame::from_bytes(&frame.to_bytes()).context("masked collect frame")?;
+        masked.push(received.masked_values()?);
+    }
+
+    // dropout recovery: one reveal per (survivor, departed) pair, in
+    // deterministic draw order. The driver's own pair secrets are local
+    // knowledge; only non-driver reveals ride the wire.
+    let survivor_ids: Vec<u64> =
+        active.iter().map(|&li| cluster.members[li] as u64).collect();
+    let dropped_ids: Vec<u64> =
+        departed.iter().map(|&li| cluster.members[li] as u64).collect();
+    let mut reveals = Vec::with_capacity(active.len() * departed.len());
+    for &s in active {
+        let sid = cluster.members[s] as u64;
+        for &d in departed {
+            reveals.push(session.reveal(sid, cluster.members[d] as u64));
+            if s != driver_local {
+                let (from, to) = (&nodes[s].device, &nodes[driver_local].device);
+                let lat = net.send(
+                    MsgKind::SecaggReveal,
+                    Some(from),
+                    Some(to),
+                    secagg::REVEAL_BYTES,
+                    round,
+                );
+                *collect_ms = collect_ms.max(lat);
+            }
+        }
+    }
+    if !reveals.is_empty() {
+        obs::counter_add(obs::Counter::SecaggReveals, reveals.len() as u64);
+    }
+
+    let mut sum = masked_accumulate(&masked)?;
+    session.unmask_sum(&mut sum, &survivor_ids, &dropped_ids, &reveals)?;
+    Ok(Some(secagg::decode_mean(&sum, active.len())))
 }

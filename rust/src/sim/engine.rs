@@ -121,6 +121,11 @@ pub fn run_with<A: Algorithm>(
     for round in start_round..sim.cfg.rounds {
         let events_applied = {
             let _s = obs::span("scenario");
+            // secagg dropout bookkeeping: only this round's alive → dead
+            // transitions count as "left with a mask outstanding"
+            if sim.cfg.secure_aggregation {
+                sim.clear_departures();
+            }
             let applied = apply_scenario(sim, &mut state, round, &mut notes);
             sim.inject_failures(round);
             applied
@@ -347,6 +352,7 @@ pub(crate) fn apply_scenario(
                     let node = &mut sim.nodes[id];
                     node.alive = false;
                     node.scenario_down = true;
+                    node.left_this_round = true;
                     state.pending_join.remove(&id);
                 }
                 if let Some(d) = duration {
@@ -415,6 +421,7 @@ pub(crate) fn apply_scenario(
                     let node = &mut sim.nodes[id];
                     node.alive = false;
                     node.scenario_down = true;
+                    node.left_this_round = true;
                     state.pending_join.remove(&id);
                 }
                 state.schedule_undo(round + *duration, Undo::Revive(targets.clone()));

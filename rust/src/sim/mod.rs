@@ -102,6 +102,11 @@ pub struct NodeState {
     /// Downed by a scenario event; excluded from random recovery until the
     /// scenario brings the node back.
     pub scenario_down: bool,
+    /// Went alive → dead at this round's boundary ("left mid-round with
+    /// its mask outstanding"): the secagg dropout-recovery bookkeeping.
+    /// Cleared at the top of every secagg round and recomputed from the
+    /// scenario/failure events, so it never enters the resume snapshot.
+    pub left_this_round: bool,
 }
 
 impl NodeState {
@@ -257,6 +262,7 @@ impl<'a> Simulation<'a> {
                 compute_seconds: 0.0,
                 slow_factor: 1.0,
                 scenario_down: false,
+                left_this_round: false,
             });
         }
 
@@ -560,10 +566,20 @@ impl<'a> Simulation<'a> {
             if node.alive {
                 if frng.chance(self.cfg.node_failure_prob) {
                     node.alive = false;
+                    node.left_this_round = true;
                 }
             } else if frng.chance(self.cfg.node_recovery_prob) {
                 node.alive = true;
             }
+        }
+    }
+
+    /// Reset the per-round departure markers. The engine calls this at
+    /// the top of the scenario phase of every secure-aggregation round,
+    /// before churn/failure injection re-marks this round's leavers.
+    pub(crate) fn clear_departures(&mut self) {
+        for node in self.nodes.iter_mut() {
+            node.left_this_round = false;
         }
     }
 

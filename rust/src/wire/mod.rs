@@ -67,6 +67,10 @@ pub const DEFAULT_TOPK_FRAC: f64 = 0.1;
 
 const FLAG_DELTA: u8 = 0b01;
 const FLAG_SPARSE: u8 = 0b10;
+/// Secure-aggregation flag: the payload is `dim` fixed-point i64 words,
+/// pairwise-masked per DESIGN.md §11 — it carries no plaintext and only
+/// the driver's wrapping sum over a complete cohort is meaningful.
+const FLAG_MASKED: u8 = 0b100;
 
 /// Payload codec selector (the frame header's `codec` byte).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -351,6 +355,7 @@ impl WireConfig {
                 codec: self.codec,
                 delta: false,
                 sparse: false,
+                masked: false,
                 round,
                 baseline_round: NO_BASELINE,
                 dim: dim as u32,
@@ -364,6 +369,7 @@ impl WireConfig {
                         codec: self.codec,
                         delta: true,
                         sparse: false,
+                        masked: false,
                         round,
                         baseline_round: bround,
                         dim: dim as u32,
@@ -392,6 +398,7 @@ impl WireConfig {
                     codec: self.codec,
                     delta: true,
                     sparse: true,
+                    masked: false,
                     round,
                     baseline_round: bround,
                     dim: dim as u32,
@@ -433,6 +440,10 @@ pub struct Frame {
     pub delta: bool,
     /// Payload is top-k sparse (implies `delta`).
     pub sparse: bool,
+    /// Payload is a pairwise-masked fixed-point vector (`8·dim` bytes,
+    /// [`crate::secagg`]); excludes `delta`/`sparse` and never decodes
+    /// to plaintext — use [`Frame::masked_values`].
+    pub masked: bool,
     /// Producing round (metadata).
     pub round: u32,
     /// Checkpoint-ring round of the delta baseline ([`NO_BASELINE`] for
@@ -455,7 +466,7 @@ impl Frame {
     /// [`crate::netsim::param_payload_bytes`] model).
     pub fn encoded_len(&self) -> u64 {
         let raw = (FRAME_HEADER_BYTES + self.payload.len()) as u64;
-        if self.codec == CodecKind::F32 && !self.delta && !self.sparse {
+        if self.codec == CodecKind::F32 && !self.delta && !self.sparse && !self.masked {
             raw + PASSTHROUGH_ENVELOPE_BYTES as u64
         } else {
             raw
@@ -475,6 +486,9 @@ impl Frame {
         if self.sparse {
             flags |= FLAG_SPARSE;
         }
+        if self.masked {
+            flags |= FLAG_MASKED;
+        }
         out.push(flags);
         out.push(0); // reserved
         out.extend_from_slice(&self.round.to_le_bytes());
@@ -491,17 +505,34 @@ impl Frame {
         anyhow::ensure!(bytes[4] == FRAME_VERSION, "unsupported frame version {}", bytes[4]);
         let codec_kind = CodecKind::from_byte(bytes[5])?;
         let flags = bytes[6];
-        anyhow::ensure!(flags & !(FLAG_DELTA | FLAG_SPARSE) == 0, "unknown flags {flags:#x}");
+        anyhow::ensure!(
+            flags & !(FLAG_DELTA | FLAG_SPARSE | FLAG_MASKED) == 0,
+            "unknown flags {flags:#x}"
+        );
         let delta = flags & FLAG_DELTA != 0;
         let sparse = flags & FLAG_SPARSE != 0;
+        let masked = flags & FLAG_MASKED != 0;
         anyhow::ensure!(!sparse || delta, "sparse frame without delta flag");
+        anyhow::ensure!(!masked || (!delta && !sparse), "masked frame with delta/sparse flags");
         let round = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
         let baseline_round = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
         let dim = u32::from_le_bytes(bytes[16..20].try_into().unwrap());
         let payload = bytes[FRAME_HEADER_BYTES..].to_vec();
 
         let c = codec(codec_kind);
-        if sparse {
+        if masked {
+            anyhow::ensure!(
+                codec_kind == CodecKind::F32,
+                "masked frame with non-f32 codec byte"
+            );
+            anyhow::ensure!(baseline_round == NO_BASELINE, "masked frame with a baseline");
+            let expect = 8 * dim as usize;
+            anyhow::ensure!(
+                payload.len() == expect,
+                "masked payload length {} != {expect}",
+                payload.len()
+            );
+        } else if sparse {
             anyhow::ensure!(payload.len() >= 4, "sparse frame truncated");
             let k = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
             anyhow::ensure!(k <= dim as usize, "sparse k {k} > dim {dim}");
@@ -529,7 +560,54 @@ impl Frame {
                 payload.len()
             );
         }
-        Ok(Frame { codec: codec_kind, delta, sparse, round, baseline_round, dim, payload })
+        Ok(Frame { codec: codec_kind, delta, sparse, masked, round, baseline_round, dim, payload })
+    }
+
+    /// Build a secure-aggregation frame from pairwise-masked fixed-point
+    /// words ([`crate::secagg::Session::mask`]). Codec byte stays `f32`
+    /// (there is no plaintext codec to name); the [`FLAG_MASKED`] bit
+    /// switches the payload layout to `8·dim` little-endian i64 bytes.
+    pub fn masked_frame(round: u32, words: &[i64]) -> Frame {
+        let _s = crate::obs::span("wire.encode");
+        crate::obs::counter_add(crate::obs::Counter::FramesEncoded, 1);
+        crate::obs::counter_add(crate::obs::Counter::MaskedFrames, 1);
+        let mut payload = Vec::with_capacity(8 * words.len());
+        for w in words {
+            payload.extend_from_slice(&w.to_le_bytes());
+        }
+        Frame {
+            codec: CodecKind::F32,
+            delta: false,
+            sparse: false,
+            masked: true,
+            round,
+            baseline_round: NO_BASELINE,
+            dim: words.len() as u32,
+            payload,
+        }
+    }
+
+    /// Extract the masked fixed-point words of a [`Frame::masked_frame`].
+    pub fn masked_values(&self) -> Result<Vec<i64>> {
+        let _s = crate::obs::span("wire.decode");
+        crate::obs::counter_add(crate::obs::Counter::FramesDecoded, 1);
+        anyhow::ensure!(self.masked, "not a masked frame");
+        anyhow::ensure!(
+            self.payload.len() == 8 * self.dim as usize,
+            "masked payload length {} != {}",
+            self.payload.len(),
+            8 * self.dim as usize
+        );
+        Ok(self
+            .payload
+            .chunks_exact(8)
+            .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Modelled on-wire size of a masked `dim`-element transfer.
+    pub fn masked_frame_bytes(dim: usize) -> u64 {
+        (FRAME_HEADER_BYTES + 8 * dim) as u64
     }
 
     /// Decode back to the logical `f32` vector. Delta frames need the
@@ -538,6 +616,7 @@ impl Frame {
     pub fn decode(&self, baseline: Option<&[f32]>) -> Result<Vec<f32>> {
         let _s = crate::obs::span("wire.decode");
         crate::obs::counter_add(crate::obs::Counter::FramesDecoded, 1);
+        anyhow::ensure!(!self.masked, "masked frame carries no plaintext to decode");
         let dim = self.dim as usize;
         let c = codec(self.codec);
         if !self.delta {
@@ -659,6 +738,59 @@ mod tests {
         let mut bad = bytes.clone();
         bad[6] = 0xF0;
         assert!(Frame::from_bytes(&bad).is_err(), "flags");
+        let mut bad = bytes.clone();
+        bad.pop();
+        assert!(Frame::from_bytes(&bad).is_err(), "short payload");
+        bad = bytes;
+        bad.push(0);
+        assert!(Frame::from_bytes(&bad).is_err(), "long payload");
+    }
+
+    #[test]
+    fn masked_frame_roundtrip() {
+        let words: Vec<i64> = (0..17).map(|i| (i as i64 - 8) * 0x0123_4567_89AB).collect();
+        let frame = Frame::masked_frame(5, &words);
+        assert!(frame.masked && !frame.delta && !frame.sparse);
+        assert_eq!(frame.encoded_len(), Frame::masked_frame_bytes(17));
+        // masked frames shed the passthrough envelope: 8 bytes/word + header
+        assert_eq!(frame.encoded_len(), (FRAME_HEADER_BYTES + 8 * 17) as u64);
+        let back = Frame::from_bytes(&frame.to_bytes()).unwrap();
+        assert_eq!(back, frame);
+        assert_eq!(back.masked_values().unwrap(), words);
+        // a masked frame never decodes to plaintext; a plain frame has
+        // no masked words
+        assert!(frame.decode(None).is_err());
+        assert!(WireConfig::default().encode(&[1.0], 0, None).masked_values().is_err());
+    }
+
+    #[test]
+    fn from_bytes_rejects_masked_corruption() {
+        // the structural bit-flip pattern from tests/resume_state.rs,
+        // applied to every validated header region of a masked frame
+        let words: Vec<i64> = (0..9).map(|i| i as i64 * 31 - 100).collect();
+        let bytes = Frame::masked_frame(2, &words).to_bytes();
+        assert!(Frame::from_bytes(&bytes[..10]).is_err(), "truncated header");
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Frame::from_bytes(&bad).is_err(), "magic");
+        let mut bad = bytes.clone();
+        bad[4] = 99;
+        assert!(Frame::from_bytes(&bad).is_err(), "version");
+        let mut bad = bytes.clone();
+        bad[5] = 2; // i8 codec byte under FLAG_MASKED
+        assert!(Frame::from_bytes(&bad).is_err(), "masked must stay f32-coded");
+        let mut bad = bytes.clone();
+        bad[6] |= FLAG_DELTA; // masked + delta is contradictory
+        assert!(Frame::from_bytes(&bad).is_err(), "masked+delta flags");
+        let mut bad = bytes.clone();
+        bad[6] = 0xF0;
+        assert!(Frame::from_bytes(&bad).is_err(), "unknown flags");
+        let mut bad = bytes.clone();
+        bad[12] ^= 0x10; // baseline_round must stay NO_BASELINE
+        assert!(Frame::from_bytes(&bad).is_err(), "masked baseline");
+        let mut bad = bytes.clone();
+        bad[16] ^= 0x10; // dim no longer matches the payload length
+        assert!(Frame::from_bytes(&bad).is_err(), "dim flip");
         let mut bad = bytes.clone();
         bad.pop();
         assert!(Frame::from_bytes(&bad).is_err(), "short payload");

@@ -86,6 +86,14 @@ fn cases() -> Vec<Case> {
         cfg.node_recovery_prob = 0.5;
         cfg.normalized()
     };
+    let secagg_churn = {
+        // masked collect + dropout recovery through the churn timeline:
+        // pins the fixed-point masking path, the departure cohort draw
+        // and the reveal-based unmasking in one triple
+        let mut cfg = base_cfg(30, 5, 10, 13);
+        cfg.secure_aggregation = true;
+        cfg.normalized()
+    };
     let wire_lean = {
         let mut cfg = base_cfg(20, 4, 8, 17);
         cfg.wire = scale_fl::wire::WireConfig::preset("lean").unwrap();
@@ -95,6 +103,12 @@ fn cases() -> Vec<Case> {
         case("scale-iid-20x4", base_cfg(20, 4, 8, 5), AlgoKind::Scale, None),
         case("scale-skew-quantized", skew_quantized, AlgoKind::Scale, None),
         case("scale-secagg-accgate-failures", secagg_failures, AlgoKind::Scale, None),
+        case(
+            "scale-secagg-churn",
+            secagg_churn,
+            AlgoKind::Scale,
+            Some(CHURN_SCENARIO),
+        ),
         case("scale-wire-lean", wire_lean, AlgoKind::Scale, None),
         case(
             "scale-scenario-churn",
