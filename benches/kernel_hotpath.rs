@@ -1,0 +1,185 @@
+//! Bench: hot-path kernels — fused vs naive (wall-clock, bench harness).
+//!
+//! Times the PR-9 kernel overhaul head-to-head against verbatim copies
+//! of the loops it replaced, and asserts bit-equality inline so a
+//! timing table can never be produced from diverged math: the fused
+//! hinge-loss training step/loop (`runtime::kernel`), decision scores,
+//! decode-free frame accumulation
+//! (`aggregation::{FrameAccumulator, MaskedAccumulator}`), and the LPT
+//! assignment itself. These are the per-step numbers behind the
+//! round-time entries the perf pass tracks in BENCH_scale.json.
+
+use scale_fl::aggregation::{FrameAccumulator, MaskedAccumulator};
+use scale_fl::bench::{bench, report, section};
+use scale_fl::data::{pad_batch, synth_wdbc, PaddedBatch, Scaler};
+use scale_fl::runtime::compute::{ModelCompute, NativeSvm};
+use scale_fl::util::rng::Rng;
+use scale_fl::wire::{Frame, WireConfig};
+
+/// The pre-fusion naive training step (see `tests/kernel_equivalence.rs`
+/// for the canonical copy; duplicated here so the bench is self-contained).
+fn naive_train_step(
+    batch: &PaddedBatch,
+    params: &[f32],
+    lr: f32,
+    reg: f32,
+) -> (Vec<f32>, f32) {
+    let f = params.len() - 1;
+    let (w, bias) = params.split_at(f);
+    let mut gw = vec![0.0f32; f];
+    let mut gb = 0.0f32;
+    let mut loss_sum = 0.0f32;
+    let mut n = 0.0f32;
+    for r in 0..batch.batch {
+        let m = batch.mask[r];
+        if m == 0.0 {
+            continue;
+        }
+        let row = &batch.x[r * f..(r + 1) * f];
+        let mut s = bias[0];
+        for j in 0..f {
+            s += w[j] * row[j];
+        }
+        let y = batch.y[r];
+        let margin = 1.0 - y * s;
+        if margin > 0.0 {
+            loss_sum += m * margin;
+            let coef = m * y;
+            for j in 0..f {
+                gw[j] -= coef * row[j];
+            }
+            gb -= coef;
+        }
+        n += m;
+    }
+    let n = n.max(1.0);
+    let mut w_sq = 0.0f32;
+    let mut out = Vec::with_capacity(f + 1);
+    for j in 0..f {
+        w_sq += w[j] * w[j];
+        let grad = gw[j] / n + reg * w[j];
+        out.push(w[j] - lr * grad);
+    }
+    out.push(bias[0] - lr * (gb / n));
+    (out, loss_sum / n + 0.5 * reg * w_sq)
+}
+
+fn main() {
+    let native = NativeSvm::new(NativeSvm::default_dims());
+    let mut ds = synth_wdbc(3);
+    Scaler::fit(&ds).transform(&mut ds);
+    let batch = pad_batch(&ds, 0, 64, 32);
+    let params = native.init_params(0);
+    let (lr, reg) = (0.05f32, 0.001f32);
+
+    // value-identity gate: a diverged kernel must never produce a table
+    let (fp, fl) = native.train_step(&batch, &params, lr, reg).unwrap();
+    let (np, nl) = naive_train_step(&batch, &params, lr, reg);
+    assert_eq!(fl.to_bits(), nl.to_bits(), "loss diverged");
+    for (a, b) in fp.iter().zip(&np) {
+        assert_eq!(a.to_bits(), b.to_bits(), "params diverged");
+    }
+
+    section("hinge-loss train step (B=64 F=32)");
+    let t = bench(50, 4_000, || {
+        std::hint::black_box(naive_train_step(&batch, &params, lr, reg));
+    });
+    report("naive (scalar loops, 3 allocs/step)", &t);
+    let t = bench(50, 4_000, || {
+        std::hint::black_box(native.train_step(&batch, &params, lr, reg).unwrap());
+    });
+    report("fused (unrolled, scratch reuse)", &t);
+
+    section("local-epoch loop (5 steps on one batch)");
+    let t = bench(20, 1_000, || {
+        let mut p = params.clone();
+        for _ in 0..5 {
+            p = naive_train_step(&batch, &p, lr, reg).0;
+        }
+        std::hint::black_box(p);
+    });
+    report("naive x5 (fresh vectors per step)", &t);
+    let t = bench(20, 1_000, || {
+        std::hint::black_box(native.train_steps(&batch, &params, lr, reg, 5).unwrap());
+    });
+    report("fused train_steps(5) (in-place)", &t);
+
+    section("decision scores (64 rows)");
+    let t = bench(50, 4_000, || {
+        std::hint::black_box(native.scores(&batch, &params).unwrap());
+    });
+    report("fused scores", &t);
+
+    section("frame accumulation (33-dim, 32 contributors)");
+    {
+        let mut rng = Rng::new(7);
+        let baseline: Vec<f32> = (0..33).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        for preset in ["f16", "i8", "lean"] {
+            let wire = WireConfig::preset(preset).unwrap();
+            let frames: Vec<Frame> = (0..32)
+                .map(|_| {
+                    let xs: Vec<f32> = baseline
+                        .iter()
+                        .map(|&b| b + (rng.f32() - 0.5) * 0.2)
+                        .collect();
+                    wire.encode(&xs, 1, Some((0, &baseline)))
+                })
+                .collect();
+            let t = bench(20, 2_000, || {
+                // pre-fusion path: one decoded Vec<f32> per contributor
+                let mut acc = vec![0.0f64; 33];
+                for fr in &frames {
+                    for (a, v) in acc.iter_mut().zip(fr.decode(Some(&baseline)).unwrap())
+                    {
+                        *a += v as f64;
+                    }
+                }
+                std::hint::black_box(acc);
+            });
+            report(&format!("{preset}: decode-then-accumulate"), &t);
+            let t = bench(20, 2_000, || {
+                let mut acc = FrameAccumulator::new(33);
+                for fr in &frames {
+                    acc.add_frame(fr, Some(&baseline)).unwrap();
+                }
+                std::hint::black_box(acc.mean().unwrap());
+            });
+            report(&format!("{preset}: fused accumulate"), &t);
+        }
+    }
+
+    section("masked (secagg) accumulation (33-dim, 32 contributors)");
+    {
+        let mut rng = Rng::new(8);
+        let frames: Vec<Frame> = (0..32)
+            .map(|_| {
+                let words: Vec<i64> =
+                    (0..33).map(|_| rng.next_u64() as i64).collect();
+                Frame::masked_frame(1, &words)
+            })
+            .collect();
+        let t = bench(20, 2_000, || {
+            // pre-fusion path: one Vec<i64> per contributor, then sum
+            let words: Vec<Vec<i64>> =
+                frames.iter().map(|fr| fr.masked_values().unwrap()).collect();
+            let mut sum = vec![0i64; 33];
+            for w in &words {
+                for (a, v) in sum.iter_mut().zip(w) {
+                    *a = a.wrapping_add(*v);
+                }
+            }
+            std::hint::black_box(sum);
+        });
+        report("materialize-then-sum", &t);
+        let t = bench(20, 2_000, || {
+            let mut acc = MaskedAccumulator::new(33);
+            for fr in &frames {
+                acc.add_frame(fr).unwrap();
+            }
+            std::hint::black_box(acc.into_sum().unwrap());
+        });
+        report("fused accumulate", &t);
+    }
+
+    println!("\nkernel_hotpath OK (fused == naive, bit-exact)");
+}

@@ -89,6 +89,95 @@ pub fn dequantize_accumulate(contributions: &[QuantVec]) -> Result<Vec<f32>> {
     Ok(acc.into_iter().map(|v| (v / n) as f32).collect())
 }
 
+/// Decode-free frame accumulator: folds [`crate::wire::Frame`]s
+/// straight into an `f64` accumulator via
+/// [`crate::wire::Frame::accumulate_into`], so a server consuming a
+/// stream of i8/f16 (or delta/sparse) uploads never materializes an
+/// intermediate `Vec<f32>` per contributor — the fused counterpart of
+/// [`dequantize_accumulate`] one layer up, at the frame level.
+///
+/// Value contract: `mean()` is bit-identical to decoding every frame,
+/// accumulating the decoded values in `f64` in arrival order, and
+/// dividing by the count (pinned by `tests/kernel_equivalence.rs`).
+pub struct FrameAccumulator {
+    acc: Vec<f64>,
+    n: usize,
+}
+
+impl FrameAccumulator {
+    /// Accumulator for `dim`-element contributions.
+    pub fn new(dim: usize) -> FrameAccumulator {
+        FrameAccumulator { acc: vec![0.0; dim], n: 0 }
+    }
+
+    /// Fold one frame in (delta frames need the shared `baseline`).
+    pub fn add_frame(
+        &mut self,
+        frame: &crate::wire::Frame,
+        baseline: Option<&[f32]>,
+    ) -> Result<()> {
+        frame.accumulate_into(&mut self.acc, baseline)?;
+        self.n += 1;
+        Ok(())
+    }
+
+    /// Contributions folded so far.
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    /// Mean of the folded contributions; errors when nothing was added.
+    pub fn mean(self) -> Result<Vec<f32>> {
+        let _s = crate::obs::span("dequantize_accumulate");
+        crate::obs::counter_add(crate::obs::Counter::DequantAccumulates, 1);
+        anyhow::ensure!(self.n > 0, "accumulate over no contributions");
+        let n = self.n as f64;
+        Ok(self.acc.into_iter().map(|v| (v / n) as f32).collect())
+    }
+}
+
+/// Decode-free masked accumulator: the collect phase's zero-allocation
+/// fold over `FLAG_MASKED` frames. Each
+/// [`MaskedAccumulator::add_frame`] wrapping-adds the frame's
+/// fixed-point words straight into the running i64 sum
+/// ([`crate::wire::Frame::accumulate_masked_into`]) — no per-contributor
+/// `Vec<i64>` — and [`MaskedAccumulator::into_sum`] hands the caller
+/// the same wrapping sum (bit-for-bit, and with identical telemetry)
+/// that [`Frame::masked_values`](crate::wire::Frame::masked_values) +
+/// [`masked_accumulate`] produced.
+pub struct MaskedAccumulator {
+    acc: Vec<i64>,
+    n: usize,
+}
+
+impl MaskedAccumulator {
+    /// Accumulator for `dim`-word masked contributions.
+    pub fn new(dim: usize) -> MaskedAccumulator {
+        MaskedAccumulator { acc: vec![0; dim], n: 0 }
+    }
+
+    /// Fold one masked frame in.
+    pub fn add_frame(&mut self, frame: &crate::wire::Frame) -> Result<()> {
+        frame.accumulate_masked_into(&mut self.acc)?;
+        self.n += 1;
+        Ok(())
+    }
+
+    /// Contributions folded so far.
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    /// The wrapping sum; errors when nothing was added (mirroring
+    /// [`masked_accumulate`] on empty input).
+    pub fn into_sum(self) -> Result<Vec<i64>> {
+        let _s = crate::obs::span("masked_accumulate");
+        crate::obs::counter_add(crate::obs::Counter::DequantAccumulates, 1);
+        anyhow::ensure!(self.n > 0, "accumulate over no contributions");
+        Ok(self.acc)
+    }
+}
+
 /// Masked accumulate: the secure-aggregation half of eq 10. Wrapping
 /// i64 sum over pairwise-masked fixed-point contributions
 /// ([`crate::secagg::Session::mask`]) — over a complete cohort the
@@ -290,6 +379,87 @@ mod tests {
     fn masked_accumulate_rejects_bad_input() {
         assert!(masked_accumulate(&[]).is_err());
         assert!(masked_accumulate(&[vec![1i64, 2], vec![1i64, 2, 3]]).is_err());
+    }
+
+    #[test]
+    fn frame_accumulator_is_bit_identical_to_decode_then_mean() {
+        use crate::wire::WireConfig;
+        // every preset: dense f32/f16/i8, dense delta, and sparse delta
+        for preset in ["f32", "f16", "i8", "lean", "sparse"] {
+            let wire = WireConfig::preset(preset).unwrap();
+            let params = random_params(5, 11);
+            let mut rng = Rng::new(12);
+            let baseline: Vec<f32> = (0..33).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let frames: Vec<crate::wire::Frame> = params
+                .iter()
+                .map(|p| wire.encode(p, 3, Some((2, &baseline))))
+                .collect();
+
+            // reference: decode every frame, f64-accumulate in arrival
+            // order, divide by the count
+            let mut ref_acc = vec![0.0f64; 33];
+            for f in &frames {
+                for (a, v) in ref_acc.iter_mut().zip(f.decode(Some(&baseline)).unwrap()) {
+                    *a += v as f64;
+                }
+            }
+            let reference: Vec<f32> =
+                ref_acc.iter().map(|a| (a / frames.len() as f64) as f32).collect();
+
+            let mut acc = FrameAccumulator::new(33);
+            for f in &frames {
+                acc.add_frame(f, Some(&baseline)).unwrap();
+            }
+            assert_eq!(acc.count(), frames.len());
+            let fused = acc.mean().unwrap();
+            for (i, (f, r)) in fused.iter().zip(&reference).enumerate() {
+                assert_eq!(f.to_bits(), r.to_bits(), "{preset} coord {i}: {f} vs {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn frame_accumulator_rejects_bad_input() {
+        assert!(FrameAccumulator::new(4).mean().is_err());
+        let wire = crate::wire::WireConfig::default();
+        let frame = wire.encode(&[1.0, 2.0, 3.0], 0, None);
+        // dimension mismatch
+        let mut acc = FrameAccumulator::new(4);
+        assert!(acc.add_frame(&frame, None).is_err());
+        // masked frames belong to MaskedAccumulator
+        let masked = crate::wire::Frame::masked_frame(0, &[1, 2, 3]);
+        let mut acc = FrameAccumulator::new(3);
+        assert!(acc.add_frame(&masked, None).is_err());
+    }
+
+    #[test]
+    fn masked_accumulator_is_bit_identical_to_masked_accumulate() {
+        let mut rng = Rng::new(13);
+        let words: Vec<Vec<i64>> = (0..4)
+            .map(|_| (0..33).map(|_| rng.next_u64() as i64).collect())
+            .collect();
+        let frames: Vec<crate::wire::Frame> =
+            words.iter().map(|w| crate::wire::Frame::masked_frame(5, w)).collect();
+        let mut acc = MaskedAccumulator::new(33);
+        for f in &frames {
+            acc.add_frame(f).unwrap();
+        }
+        assert_eq!(acc.count(), frames.len());
+        assert_eq!(acc.into_sum().unwrap(), masked_accumulate(&words).unwrap());
+    }
+
+    #[test]
+    fn masked_accumulator_rejects_bad_input() {
+        assert!(MaskedAccumulator::new(4).into_sum().is_err());
+        // dimension mismatch
+        let frame = crate::wire::Frame::masked_frame(0, &[1, 2, 3]);
+        let mut acc = MaskedAccumulator::new(4);
+        assert!(acc.add_frame(&frame).is_err());
+        // unmasked frames belong to FrameAccumulator
+        let wire = crate::wire::WireConfig::default();
+        let plain = wire.encode(&[1.0, 2.0, 3.0], 0, None);
+        let mut acc = MaskedAccumulator::new(3);
+        assert!(acc.add_frame(&plain).is_err());
     }
 
     #[test]

@@ -64,9 +64,17 @@ pub enum Counter {
     SecaggReveals = 8,
     /// Cluster rounds aborted below the secagg recovery threshold.
     SecaggAborts = 9,
+    /// Fused hinge-loss training steps executed by the native kernels.
+    TrainSteps = 10,
+    /// Heap allocations on the kernel param path (one output vector per
+    /// kernel call). The O(1)-alloc witness of the fused loop: the
+    /// naive per-step loop would be ~3 allocations *per step*, the
+    /// fused path is 1 per `train_steps`/`scores` call — so
+    /// `kernel_allocs / train_steps` ≈ 1/local_epochs.
+    KernelAllocs = 11,
 }
 
-const N_COUNTERS: usize = 10;
+const N_COUNTERS: usize = 12;
 
 impl Counter {
     pub const ALL: [Counter; N_COUNTERS] = [
@@ -80,6 +88,8 @@ impl Counter {
         Counter::MaskedFrames,
         Counter::SecaggReveals,
         Counter::SecaggAborts,
+        Counter::TrainSteps,
+        Counter::KernelAllocs,
     ];
 
     pub fn name(self) -> &'static str {
@@ -94,6 +104,8 @@ impl Counter {
             Counter::MaskedFrames => "masked_frames",
             Counter::SecaggReveals => "secagg_reveals",
             Counter::SecaggAborts => "secagg_aborts",
+            Counter::TrainSteps => "train_steps",
+            Counter::KernelAllocs => "kernel_allocs",
         }
     }
 }
@@ -770,6 +782,11 @@ mod tests {
                 "elections",
                 "reclusterings",
                 "dequant_accumulates",
+                "masked_frames",
+                "secagg_reveals",
+                "secagg_aborts",
+                "train_steps",
+                "kernel_allocs",
             ]
         );
         assert_eq!(Gauge::LiveNodes.name(), "live_nodes");

@@ -24,6 +24,7 @@ use std::rc::Rc;
 
 use anyhow::Result;
 
+use super::kernel;
 use super::manifest::{Dims, ModelKind};
 #[cfg(feature = "pjrt")]
 use super::{to_f32_scalar, to_f32_vec, Runtime};
@@ -271,7 +272,10 @@ impl ModelCompute for PjrtModel {
 // Native (pure-rust) SVM oracle
 // ---------------------------------------------------------------------
 
-/// Pure-rust mirror of the SVM artifacts (same math as `ref.py`).
+/// Pure-rust mirror of the SVM artifacts (same math as `ref.py`),
+/// executed through the fused [`kernel`] hot path: unrolled fixed-order
+/// inner loops and per-worker scratch reuse, bit-identical to the naive
+/// reference loops (`tests/kernel_equivalence.rs`).
 #[derive(Clone, Debug)]
 pub struct NativeSvm {
     pub dims: Dims,
@@ -320,61 +324,44 @@ impl ModelCompute for NativeSvm {
         lr: f32,
         reg: f32,
     ) -> Result<(Vec<f32>, f32)> {
+        self.train_steps(batch, params, lr, reg, 1)
+    }
+
+    /// Native override: the whole local-epoch loop in reused buffers —
+    /// one output allocation per call (the returned params), the
+    /// gradient scratch per worker, every step updating in place. The
+    /// default trait loop allocates three vectors per step; the values
+    /// are bit-identical (`tests/kernel_equivalence.rs`).
+    fn train_steps(
+        &self,
+        batch: &PaddedBatch,
+        params: &[f32],
+        lr: f32,
+        reg: f32,
+        steps: usize,
+    ) -> Result<(Vec<f32>, f32)> {
         let f = self.dims.features;
         anyhow::ensure!(params.len() == f + 1, "param dim");
-        let (w, bias) = params.split_at(f);
-        let mut gw = vec![0.0f32; f];
-        let mut gb = 0.0f32;
-        let mut loss_sum = 0.0f32;
-        let mut n = 0.0f32;
-        for r in 0..batch.batch {
-            let m = batch.mask[r];
-            if m == 0.0 {
-                continue;
+        let _s = crate::obs::span("kernel.train");
+        let steps = steps.max(1);
+        crate::obs::counter_add(crate::obs::Counter::TrainSteps, steps as u64);
+        crate::obs::counter_add(crate::obs::Counter::KernelAllocs, 1);
+        kernel::with_kernel_scratch(|ks| {
+            let mut p = params.to_vec();
+            let mut loss = 0.0f32;
+            for _ in 0..steps {
+                loss = ks.hinge_step(batch, &mut p, lr, reg);
             }
-            let row = &batch.x[r * f..(r + 1) * f];
-            let mut s = bias[0];
-            for j in 0..f {
-                s += w[j] * row[j];
-            }
-            let y = batch.y[r];
-            let margin = 1.0 - y * s;
-            if margin > 0.0 {
-                loss_sum += m * margin;
-                let coef = m * y;
-                for j in 0..f {
-                    gw[j] -= coef * row[j];
-                }
-                gb -= coef;
-            }
-            n += m;
-        }
-        let n = n.max(1.0);
-        let mut new = Vec::with_capacity(f + 1);
-        let mut w_sq = 0.0f32;
-        for j in 0..f {
-            w_sq += w[j] * w[j];
-            let grad = gw[j] / n + reg * w[j];
-            new.push(w[j] - lr * grad);
-        }
-        new.push(bias[0] - lr * (gb / n));
-        let loss = loss_sum / n + 0.5 * reg * w_sq;
-        Ok((new, loss))
+            Ok((p, loss))
+        })
     }
 
     fn scores(&self, batch: &PaddedBatch, params: &[f32]) -> Result<Vec<f32>> {
         let f = self.dims.features;
         let (w, bias) = params.split_at(f);
-        let mut out = Vec::with_capacity(batch.n_valid);
-        for r in 0..batch.n_valid {
-            let row = &batch.x[r * f..(r + 1) * f];
-            let mut s = bias[0];
-            for j in 0..f {
-                s += w[j] * row[j];
-            }
-            out.push(s);
-        }
-        Ok(out)
+        let _s = crate::obs::span("kernel.scores");
+        crate::obs::counter_add(crate::obs::Counter::KernelAllocs, 1);
+        Ok(kernel::scores_into(batch, w, bias[0]))
     }
 
     fn aggregate(&self, vectors: &[&[f32]]) -> Result<Vec<f32>> {

@@ -1,0 +1,235 @@
+//! Fused hinge-loss training kernels for the native SVM backend.
+//!
+//! The hot-path rewrite of [`super::compute::NativeSvm`]'s naive
+//! per-step loops: bounds-check-free `chunks_exact` inner loops with
+//! fixed-order unrolled accumulation, and a per-worker [`KernelScratch`]
+//! so the whole local-epoch loop runs in reused buffers — the gradient
+//! buffer and the parameter vector are allocated once per worker /
+//! once per call instead of three fresh vectors per step.
+//!
+//! # Value-identity contract (DESIGN.md §12)
+//!
+//! Every kernel here performs the *exact* floating-point operations of
+//! the naive loop it replaces, in the same order: one accumulator per
+//! reduction, sequential adds in index order. Unrolling removes bounds
+//! checks and keeps products in registers, but never reassociates a
+//! reduction — `s += w[0]*x[0]; s += w[1]*x[1]; …` is the same f32 add
+//! chain as the scalar loop, so results are bit-identical and
+//! `RunReport::fingerprint` is untouched. The old-vs-new property suite
+//! (`tests/kernel_equivalence.rs`) pins this bit-exactness against a
+//! copy of the pre-fusion reference loops.
+
+use std::cell::RefCell;
+
+use crate::data::PaddedBatch;
+
+/// Reused per-worker buffers for the fused training loop. Obtained via
+/// [`with_kernel_scratch`] — one instance per OS thread, so the
+/// cluster-parallel engine's workers never contend and the sequential
+/// engine reuses a single instance across every node it trains.
+#[derive(Default)]
+pub struct KernelScratch {
+    /// Gradient accumulator, `features` long.
+    gw: Vec<f32>,
+}
+
+impl KernelScratch {
+    /// The gradient buffer, resized to exactly `f` elements. Contents
+    /// are unspecified — [`hinge_step_in_place`] zero-fills it.
+    fn gw(&mut self, f: usize) -> &mut [f32] {
+        if self.gw.len() != f {
+            self.gw = vec![0.0; f];
+        }
+        &mut self.gw
+    }
+
+    /// One fused hinge-loss step through this scratch's gradient
+    /// buffer; `params` is `[w…, bias]`, updated in place. Returns the
+    /// pre-step loss.
+    pub fn hinge_step(
+        &mut self,
+        batch: &PaddedBatch,
+        params: &mut [f32],
+        lr: f32,
+        reg: f32,
+    ) -> f32 {
+        let f = params.len() - 1;
+        hinge_step_in_place(batch, params, lr, reg, self.gw(f))
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<KernelScratch> = RefCell::new(KernelScratch::default());
+}
+
+/// Run `f` with the calling thread's [`KernelScratch`]. Same shape as
+/// `data::with_scratch`: the buffer lives for the thread's lifetime, so
+/// steady-state training allocates nothing per step.
+pub fn with_kernel_scratch<R>(f: impl FnOnce(&mut KernelScratch) -> R) -> R {
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Fixed-order dot product `acc0 + Σ_j w[j]·x[j]`.
+///
+/// `chunks_exact(8)` removes the per-element bounds checks; the single
+/// accumulator takes the eight products of each chunk *in index order*,
+/// so the add chain is bit-identical to the scalar loop.
+#[inline]
+pub fn dot(acc0: f32, w: &[f32], x: &[f32]) -> f32 {
+    debug_assert_eq!(w.len(), x.len());
+    let mut s = acc0;
+    let mut wc = w.chunks_exact(8);
+    let mut xc = x.chunks_exact(8);
+    for (a, b) in (&mut wc).zip(&mut xc) {
+        s += a[0] * b[0];
+        s += a[1] * b[1];
+        s += a[2] * b[2];
+        s += a[3] * b[3];
+        s += a[4] * b[4];
+        s += a[5] * b[5];
+        s += a[6] * b[6];
+        s += a[7] * b[7];
+    }
+    for (a, b) in wc.remainder().iter().zip(xc.remainder()) {
+        s += a * b;
+    }
+    s
+}
+
+/// `gw[j] -= coef·x[j]` for every `j` — element-wise (no cross-element
+/// reduction), unrolled only to drop the bounds checks.
+#[inline]
+fn grad_sub(gw: &mut [f32], x: &[f32], coef: f32) {
+    debug_assert_eq!(gw.len(), x.len());
+    let mut gc = gw.chunks_exact_mut(8);
+    let mut xc = x.chunks_exact(8);
+    for (g, b) in (&mut gc).zip(&mut xc) {
+        g[0] -= coef * b[0];
+        g[1] -= coef * b[1];
+        g[2] -= coef * b[2];
+        g[3] -= coef * b[3];
+        g[4] -= coef * b[4];
+        g[5] -= coef * b[5];
+        g[6] -= coef * b[6];
+        g[7] -= coef * b[7];
+    }
+    for (g, b) in gc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *g -= coef * b;
+    }
+}
+
+/// One fused hinge-loss SGD step, updating `params` (`[w…, bias]`) in
+/// place and returning the pre-step loss. `gw` is the worker's gradient
+/// scratch (`params.len() - 1` elements; zero-filled here).
+///
+/// The math — masked row gradients, `n.max(1)` normalization, the L2
+/// term folded into the epilogue, pre-step loss — is the naive
+/// reference step verbatim; only the buffer discipline changed (the
+/// update writes through `params` instead of pushing a fresh vector,
+/// which is the same subtraction on the same operands).
+pub fn hinge_step_in_place(
+    batch: &PaddedBatch,
+    params: &mut [f32],
+    lr: f32,
+    reg: f32,
+    gw: &mut [f32],
+) -> f32 {
+    let f = params.len() - 1;
+    debug_assert_eq!(gw.len(), f);
+    let (w, bias) = params.split_at_mut(f);
+    gw.fill(0.0);
+    let mut gb = 0.0f32;
+    let mut loss_sum = 0.0f32;
+    let mut n = 0.0f32;
+    for r in 0..batch.batch {
+        let m = batch.mask[r];
+        if m == 0.0 {
+            continue;
+        }
+        let row = &batch.x[r * f..(r + 1) * f];
+        let s = dot(bias[0], w, row);
+        let y = batch.y[r];
+        let margin = 1.0 - y * s;
+        if margin > 0.0 {
+            loss_sum += m * margin;
+            let coef = m * y;
+            grad_sub(gw, row, coef);
+            gb -= coef;
+        }
+        n += m;
+    }
+    let n = n.max(1.0);
+    let mut w_sq = 0.0f32;
+    for (wj, gj) in w.iter_mut().zip(gw.iter()) {
+        w_sq += *wj * *wj;
+        let grad = gj / n + reg * *wj;
+        *wj -= lr * grad;
+    }
+    bias[0] -= lr * (gb / n);
+    loss_sum / n + 0.5 * reg * w_sq
+}
+
+/// Decision scores for the valid rows: `bias + w·x_r` per row, through
+/// the unrolled [`dot`]. One output allocation; bit-identical to the
+/// scalar loop.
+pub fn scores_into(batch: &PaddedBatch, w: &[f32], bias: f32) -> Vec<f32> {
+    let f = w.len();
+    let mut out = Vec::with_capacity(batch.n_valid);
+    for r in 0..batch.n_valid {
+        out.push(dot(bias, w, &batch.x[r * f..(r + 1) * f]));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn dot_is_bit_identical_to_scalar_loop_at_any_length() {
+        let mut rng = Rng::new(0xD07);
+        for len in [0usize, 1, 7, 8, 9, 15, 16, 31, 32, 33, 100] {
+            let w = rand_vec(&mut rng, len);
+            let x = rand_vec(&mut rng, len);
+            let b = rng.f32();
+            let mut want = b;
+            for j in 0..len {
+                want += w[j] * x[j];
+            }
+            assert_eq!(dot(b, &w, &x).to_bits(), want.to_bits(), "len {len}");
+        }
+    }
+
+    #[test]
+    fn grad_sub_is_bit_identical_to_scalar_loop() {
+        let mut rng = Rng::new(0x96AD);
+        for len in [1usize, 8, 13, 32] {
+            let x = rand_vec(&mut rng, len);
+            let coef = rng.f32() - 0.5;
+            let mut a = rand_vec(&mut rng, len);
+            let mut b = a.clone();
+            grad_sub(&mut a, &x, coef);
+            for j in 0..len {
+                b[j] -= coef * x[j];
+            }
+            for j in 0..len {
+                assert_eq!(a[j].to_bits(), b[j].to_bits(), "len {len} j {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_is_reused_and_resized() {
+        with_kernel_scratch(|ks| {
+            let a = ks.gw(32).as_ptr();
+            let b = ks.gw(32).as_ptr();
+            assert_eq!(a, b, "same shape must reuse the buffer");
+            assert_eq!(ks.gw(16).len(), 16);
+        });
+    }
+}

@@ -15,7 +15,10 @@
 //! * [`compute`] — the [`compute::ModelCompute`] trait the coordinator
 //!   programs against, with the PJRT-backed implementation (`pjrt`
 //!   feature) and a pure-rust native oracle used for cross-checking and
-//!   artifact-free tests (always compiled).
+//!   artifact-free tests (always compiled);
+//! * [`kernel`] — the fused, scratch-reusing hinge-loss kernels behind
+//!   the native oracle's hot path (always compiled; value-identical to
+//!   the naive loops by contract, see DESIGN.md §12).
 //!
 //! PJRT handles in the `xla` crate are `Rc`-based (not `Send`), so all
 //! execution stays on the coordinator thread — which is also what keeps
@@ -24,6 +27,7 @@
 //! backend.
 
 pub mod compute;
+pub mod kernel;
 pub mod manifest;
 
 #[cfg(feature = "pjrt")]

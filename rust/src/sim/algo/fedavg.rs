@@ -158,9 +158,17 @@ impl Algorithm for FedAvgAlgo {
             }
             Ok((out, net.ledger))
         };
-        engine::fan_out(sim.compute, sim.sync_compute, threads, units, run_one)
-            .into_iter()
-            .collect()
+        // LPT weight = shard size (uniform except the tail shard)
+        engine::fan_out(
+            sim.compute,
+            sim.sync_compute,
+            threads,
+            units,
+            |u| u.1.len() as u64,
+            run_one,
+        )
+        .into_iter()
+        .collect()
     }
 
     fn central_sync(

@@ -202,9 +202,18 @@ impl Algorithm for HflAlgo {
             }
             Ok((out, net.ledger))
         };
-        engine::fan_out(sim.compute, sim.sync_compute, threads, units, run_one)
-            .into_iter()
-            .collect()
+        // LPT weight = edge population: metro edges are naturally
+        // lopsided, exactly the shape LPT flattens
+        engine::fan_out(
+            sim.compute,
+            sim.sync_compute,
+            threads,
+            units,
+            |u| u.1.len() as u64,
+            run_one,
+        )
+        .into_iter()
+        .collect()
     }
 
     fn central_sync(

@@ -300,9 +300,18 @@ impl Algorithm for ScaleAlgo {
             )?;
             Ok((out, net.ledger))
         };
-        engine::fan_out(sim.compute, sim.sync_compute, threads, units, run_one)
-            .into_iter()
-            .collect()
+        // LPT weight = cluster size: the unit's train/exchange/collect
+        // cost is linear in its member count
+        engine::fan_out(
+            sim.compute,
+            sim.sync_compute,
+            threads,
+            units,
+            |u| u.1.len() as u64,
+            run_one,
+        )
+        .into_iter()
+        .collect()
     }
 
     fn central_sync(

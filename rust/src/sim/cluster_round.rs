@@ -16,7 +16,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::aggregation::{driver_consensus, masked_accumulate, peer_exchange};
+use crate::aggregation::{driver_consensus, peer_exchange, MaskedAccumulator};
 use crate::checkpoint::{Checkpoint, Decision};
 use crate::config::{CheckpointMode, SimConfig};
 use crate::election::{elect, representativeness, Ballot, CriteriaWeights};
@@ -398,8 +398,11 @@ fn secagg_collect(
 
     // masked frames: the driver parses exactly the bytes that crossed
     // the wire, so a structurally tampered frame is rejected, never
-    // silently aggregated
-    let mut masked = Vec::with_capacity(active.len());
+    // silently aggregated. Each frame folds straight into the running
+    // i64 sum — the driver never holds per-contributor word vectors.
+    anyhow::ensure!(!exchanged.is_empty(), "secagg collect over empty cohort");
+    // encode_fixed is one i64 word per f32 parameter
+    let mut acc = MaskedAccumulator::new(exchanged[0].len());
     for (p, &li) in active.iter().enumerate() {
         let id = cluster.members[li] as u64;
         let words = session.mask(id, &secagg::encode_fixed(&exchanged[p]));
@@ -411,7 +414,7 @@ fn secagg_collect(
         }
         let received =
             wire::Frame::from_bytes(&frame.to_bytes()).context("masked collect frame")?;
-        masked.push(received.masked_values()?);
+        acc.add_frame(&received)?;
     }
 
     // dropout recovery: one reveal per (survivor, departed) pair, in
@@ -443,7 +446,7 @@ fn secagg_collect(
         obs::counter_add(obs::Counter::SecaggReveals, reveals.len() as u64);
     }
 
-    let mut sum = masked_accumulate(&masked)?;
+    let mut sum = acc.into_sum()?;
     session.unmask_sum(&mut sum, &survivor_ids, &dropped_ids, &reveals)?;
     Ok(Some(secagg::decode_mean(&sum, active.len())))
 }

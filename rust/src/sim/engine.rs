@@ -241,7 +241,10 @@ pub fn run_with<A: Algorithm>(
 /// workers when `threads > 1` (requires the `Sync` backend handle kept
 /// by `Simulation::new_parallel`; `effective_threads` has already
 /// enforced this), inline otherwise — returning outputs **in unit
-/// order** regardless of scheduling.
+/// order** regardless of scheduling. `unit_weight` is the unit's work
+/// estimate (its node count): the executor pre-assigns units to workers
+/// by deterministic LPT over these weights, so no shared queue and no
+/// locks sit on the fan-out path (`sim::par`).
 ///
 /// Telemetry rides along without touching scheduling: each unit drains
 /// the running thread's obs shard, and the shards merge into the
@@ -255,6 +258,7 @@ pub(crate) fn fan_out<U: Send, O: Send>(
     sync_compute: Option<&(dyn ModelCompute + Sync)>,
     threads: usize,
     units: Vec<U>,
+    unit_weight: impl Fn(&U) -> u64,
     run_unit: impl Fn(U, &dyn ModelCompute) -> O + Sync,
 ) -> Vec<O> {
     let traced = |u: U, c: &dyn ModelCompute| -> (O, obs::Shard) {
@@ -265,7 +269,8 @@ pub(crate) fn fan_out<U: Send, O: Send>(
     };
     let pairs: Vec<(O, obs::Shard)> = if threads > 1 {
         let compute = sync_compute.expect("effective_threads checked");
-        par::run_units_par(units, threads, move |u| traced(u, compute))
+        let weights: Vec<u64> = units.iter().map(unit_weight).collect();
+        par::run_units_par(units, &weights, threads, move |u| traced(u, compute))
     } else {
         par::run_units_seq(units, move |u| traced(u, compute))
     };

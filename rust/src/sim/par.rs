@@ -1,20 +1,25 @@
 //! Deterministic fan-out executor for the cluster-parallel round engine.
 //!
 //! [`run_units_par`] distributes round units (one per cluster / node
-//! shard / edge) over `std::thread::scope` workers through a shared work
-//! queue and returns the outputs **in unit order**, whatever the
-//! scheduling was. Callers merge the outputs at the round barrier in
-//! that order, which is what makes `--threads N` byte-identical to
-//! `--threads 1`: each unit owns its RNG child stream and traffic
-//! sub-ledger, so only the merge order could leak scheduling — and the
-//! merge order is pinned here.
+//! shard / edge) over `std::thread::scope` workers by **size-aware LPT**
+//! (longest-processing-time-first): unit weights — node counts, known
+//! before fan-out — are assigned heaviest-first to the least-loaded
+//! worker, so the whole schedule is fixed up front and workers run their
+//! slices with **zero shared-queue lock traffic**. Outputs come back
+//! **in unit order**, whatever the schedule was. Callers merge the
+//! outputs at the round barrier in that order, which is what makes
+//! `--threads N` byte-identical to `--threads 1`: each unit owns its RNG
+//! child stream and traffic sub-ledger, so only the merge order could
+//! leak scheduling — and the merge order is pinned here.
 //!
-//! The image vendors no `rayon`; a `Mutex<VecDeque>` queue over scoped
-//! threads is dependency-free and plenty for cluster-grained work (units
-//! are coarse: tens of µs to ms each).
+//! LPT replaced the PR-2 `Mutex<VecDeque>` shared queue: at fleet-100k
+//! (2048 units) and fleet-1m (8192 units) the per-unit lock round-trip
+//! was pure overhead, and cluster sizes give the scheduler everything
+//! dynamic stealing bought — LPT's makespan is within 4/3 of optimal,
+//! and the assignment is a pure function of `(weights, workers)`, so it
+//! is trivially deterministic. The image vendors no `rayon`; scoped
+//! threads over pre-split slices are dependency-free.
 
-use std::collections::VecDeque;
-use std::sync::Mutex;
 use std::thread;
 use std::time::Instant;
 
@@ -32,48 +37,62 @@ pub(crate) fn run_units_seq<T, O>(units: Vec<T>, mut f: impl FnMut(T) -> O) -> V
     out
 }
 
-/// Fan units out over at most `threads` scoped workers; outputs come
-/// back in unit order regardless of which worker ran what.
+/// Deterministic LPT assignment: unit indices sorted by weight
+/// descending (ties toward the lower index) land one by one on the
+/// currently least-loaded worker (ties toward the lower worker id).
+/// Returns each unit's worker. Zero weights count as 1 so degenerate
+/// all-empty rounds still spread instead of piling on worker 0.
+pub(crate) fn lpt_assign(weights: &[u64], workers: usize) -> Vec<usize> {
+    debug_assert!(workers > 0);
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| weights[b].cmp(&weights[a]).then(a.cmp(&b)));
+    let mut load = vec![0u64; workers];
+    let mut owner = vec![0usize; weights.len()];
+    for i in order {
+        let w = (0..workers).min_by_key(|&w| load[w]).expect("workers > 0");
+        owner[i] = w;
+        load[w] = load[w].saturating_add(weights[i].max(1));
+    }
+    owner
+}
+
+/// Fan units out over at most `threads` scoped workers by LPT over
+/// `weights` (one per unit — the unit's node count); outputs come back
+/// in unit order regardless of which worker ran what.
 pub(crate) fn run_units_par<T: Send, O: Send>(
     units: Vec<T>,
+    weights: &[u64],
     threads: usize,
     f: impl Fn(T) -> O + Sync,
 ) -> Vec<O> {
     let n = units.len();
+    debug_assert_eq!(weights.len(), n, "one weight per unit");
     if threads <= 1 || n <= 1 {
         return run_units_seq(units, f);
     }
     let workers = threads.min(n);
-    let queue: Mutex<VecDeque<(usize, T)>> =
-        Mutex::new(units.into_iter().enumerate().collect());
+    let owner = lpt_assign(weights, workers);
+    // pre-split: each worker gets its slice up front, in unit order
+    let mut slices: Vec<Vec<(usize, T)>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, unit) in units.into_iter().enumerate() {
+        slices[owner[i]].push((i, unit));
+    }
     let mut out: Vec<Option<O>> = std::iter::repeat_with(|| None).take(n).collect();
     thread::scope(|scope| {
-        let queue = &queue;
         let f = &f;
-        let handles: Vec<_> = (0..workers)
-            .map(|w| {
+        let handles: Vec<_> = slices
+            .into_iter()
+            .enumerate()
+            .map(|(w, slice)| {
                 scope.spawn(move || {
-                    let mut done: Vec<(usize, O)> = Vec::new();
-                    let mut busy_ns = 0u64;
-                    loop {
-                        let next = queue.lock().expect("unit queue poisoned").pop_front();
-                        match next {
-                            Some((i, unit)) => {
-                                // per-worker busy wall-clock: the
-                                // utilization/imbalance report of
-                                // `scale profile` (one branch when off)
-                                let t = obs::enabled().then(Instant::now);
-                                let o = f(unit);
-                                if let Some(t) = t {
-                                    busy_ns += t.elapsed().as_nanos() as u64;
-                                }
-                                done.push((i, o));
-                            }
-                            None => break,
-                        }
-                    }
-                    if busy_ns > 0 {
-                        obs::record_worker_busy(w, busy_ns);
+                    // per-worker busy wall-clock: the utilization /
+                    // imbalance report of `scale profile` (one branch
+                    // when off)
+                    let t = obs::enabled().then(Instant::now);
+                    let done: Vec<(usize, O)> =
+                        slice.into_iter().map(|(i, unit)| (i, f(unit))).collect();
+                    if let Some(t) = t {
+                        obs::record_worker_busy(w, t.elapsed().as_nanos() as u64);
                     }
                     done
                 })
@@ -92,21 +111,56 @@ pub(crate) fn run_units_par<T: Send, O: Send>(
 mod tests {
     use super::*;
 
+    fn uniform(n: usize) -> Vec<u64> {
+        vec![1; n]
+    }
+
     #[test]
     fn outputs_in_unit_order_for_any_thread_count() {
         let units: Vec<usize> = (0..37).collect();
         let seq = run_units_seq(units.clone(), |u| u * 3);
         for threads in [1, 2, 4, 8, 64] {
-            let par = run_units_par(units.clone(), threads, |u| u * 3);
+            let par = run_units_par(units.clone(), &uniform(37), threads, |u| u * 3);
             assert_eq!(par, seq, "threads={threads}");
         }
     }
 
     #[test]
-    fn workers_share_the_queue_not_a_static_split() {
+    fn lpt_assignment_is_deterministic_and_complete() {
+        let weights: Vec<u64> = vec![5, 40, 1, 1, 17, 3, 0, 29];
+        let a = lpt_assign(&weights, 3);
+        let b = lpt_assign(&weights, 3);
+        assert_eq!(a, b, "pure function of (weights, workers)");
+        assert_eq!(a.len(), weights.len());
+        assert!(a.iter().all(|&w| w < 3));
+        // heaviest three units land on three distinct workers
+        assert_ne!(a[1], a[7]);
+        assert_ne!(a[1], a[4]);
+        assert_ne!(a[7], a[4]);
+    }
+
+    #[test]
+    fn lpt_balances_the_known_worst_case() {
+        // one heavy unit + trailing light ones: a static round-robin
+        // split would put the heavy unit *and* half the light ones on
+        // one worker; LPT gives the heavy unit a worker to itself
+        let weights: Vec<u64> = vec![8, 1, 1, 1, 1, 1, 1, 1];
+        let owner = lpt_assign(&weights, 2);
+        let mut load = [0u64; 2];
+        for (i, &w) in owner.iter().enumerate() {
+            load[w] += weights[i];
+        }
+        assert_eq!(load.iter().max(), Some(&8), "makespan is the heavy unit");
+        // and the heavy unit's worker carries nothing else
+        assert!(owner.iter().skip(1).all(|&w| w != owner[0]));
+    }
+
+    #[test]
+    fn lopsided_weights_complete_in_unit_order() {
         // a lopsided workload still completes and preserves order
         let units: Vec<u64> = (0..16).map(|i| if i == 0 { 2_000_000 } else { 10 }).collect();
-        let out = run_units_par(units, 4, |spin| {
+        let weights: Vec<u64> = units.clone();
+        let out = run_units_par(units, &weights, 4, |spin| {
             let mut acc = 0u64;
             for i in 0..spin {
                 acc = acc.wrapping_add(i);
@@ -119,9 +173,17 @@ mod tests {
     }
 
     #[test]
+    fn zero_weights_spread_instead_of_piling_up() {
+        let owner = lpt_assign(&[0, 0, 0, 0, 0, 0, 0, 0], 4);
+        for w in 0..4 {
+            assert_eq!(owner.iter().filter(|&&o| o == w).count(), 2, "worker {w}");
+        }
+    }
+
+    #[test]
     fn empty_and_single_unit_edge_cases() {
         let none: Vec<u32> = Vec::new();
-        assert!(run_units_par(none, 8, |u| u).is_empty());
-        assert_eq!(run_units_par(vec![7u32], 8, |u| u + 1), vec![8]);
+        assert!(run_units_par(none, &[], 8, |u| u).is_empty());
+        assert_eq!(run_units_par(vec![7u32], &[1], 8, |u| u + 1), vec![8]);
     }
 }

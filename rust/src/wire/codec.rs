@@ -1,0 +1,236 @@
+//! Payload codecs for the wire protocol: the [`Codec`] trait, its
+//! f32/f16/i8 implementations, and the borrowed [`PayloadReader`] view
+//! the fused accumulate paths use to decode elements in place (no
+//! intermediate vector — see `Frame::accumulate_into`). Split out of
+//! `wire/mod.rs`; everything public is re-exported there, so
+//! `wire::{codec, Codec, ...}` paths are unchanged.
+
+use anyhow::{Context, Result};
+
+use crate::quant::{f16_from_f32, f16_to_f32, QuantVec};
+
+use super::CodecKind;
+
+/// A payload codec: turns an `f32` vector into wire bytes and back.
+///
+/// Implementations must be deterministic (same input, same bytes) and
+/// self-consistent (`decode(encode(xs), xs.len())` succeeds); lossy
+/// codecs bound their error per-tensor (`i8`: half a quantization step,
+/// `f16`: half an ulp ≈ 2⁻¹¹ relative).
+pub trait Codec {
+    /// Which header byte this codec writes.
+    fn kind(&self) -> CodecKind;
+    /// Whether `decode(encode(xs))` reproduces `xs` bit-for-bit.
+    fn is_lossless(&self) -> bool;
+    /// Exact payload size for an `n`-element tensor.
+    fn payload_bytes(&self, n: usize) -> usize;
+    /// Encode `xs` into the codec's payload bytes.
+    fn encode(&self, xs: &[f32]) -> Vec<u8>;
+    /// Decode an `n`-element tensor; errors on malformed/mis-sized input.
+    fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>>;
+}
+
+/// Little-endian `f32` passthrough.
+pub struct F32Codec;
+
+impl Codec for F32Codec {
+    fn kind(&self) -> CodecKind {
+        CodecKind::F32
+    }
+
+    fn is_lossless(&self) -> bool {
+        true
+    }
+
+    fn payload_bytes(&self, n: usize) -> usize {
+        4 * n
+    }
+
+    fn encode(&self, xs: &[f32]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 * xs.len());
+        for x in xs {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(bytes.len() == 4 * n, "f32 payload length {} != {}", bytes.len(), 4 * n);
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// IEEE 754 binary16.
+pub struct F16Codec;
+
+impl Codec for F16Codec {
+    fn kind(&self) -> CodecKind {
+        CodecKind::F16
+    }
+
+    fn is_lossless(&self) -> bool {
+        false
+    }
+
+    fn payload_bytes(&self, n: usize) -> usize {
+        2 * n
+    }
+
+    fn encode(&self, xs: &[f32]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(2 * xs.len());
+        for &x in xs {
+            out.extend_from_slice(&f16_from_f32(x).to_le_bytes());
+        }
+        out
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(bytes.len() == 2 * n, "f16 payload length {} != {}", bytes.len(), 2 * n);
+        Ok(bytes
+            .chunks_exact(2)
+            .map(|c| f16_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+}
+
+/// Uniform int8 with per-tensor scale/zero-point ([`QuantVec`]).
+pub struct I8Codec;
+
+impl Codec for I8Codec {
+    fn kind(&self) -> CodecKind {
+        CodecKind::I8
+    }
+
+    fn is_lossless(&self) -> bool {
+        false
+    }
+
+    fn payload_bytes(&self, n: usize) -> usize {
+        // QuantVec layout: len(4) + min(4) + step(4) + codes(n)
+        12 + n
+    }
+
+    fn encode(&self, xs: &[f32]) -> Vec<u8> {
+        QuantVec::encode(xs).to_bytes()
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
+        let q = QuantVec::from_bytes(bytes).context("malformed i8 payload")?;
+        anyhow::ensure!(q.codes.len() == n, "i8 payload dim {} != {}", q.codes.len(), n);
+        Ok(q.decode())
+    }
+}
+
+/// The codec singleton for a [`CodecKind`].
+pub fn codec(kind: CodecKind) -> &'static dyn Codec {
+    match kind {
+        CodecKind::F32 => &F32Codec,
+        CodecKind::F16 => &F16Codec,
+        CodecKind::I8 => &I8Codec,
+    }
+}
+
+/// Random-access view over a codec payload: yields the `j`-th decoded
+/// element without materializing the decoded vector. Each arm computes
+/// the *same* f32 value its codec's `decode` would ([`F32Codec`]:
+/// `from_le_bytes`; [`F16Codec`]: `f16_to_f32`; [`I8Codec`]:
+/// `min + code·step`), so fused consumers stay value-identical to
+/// decode-then-read.
+pub(super) struct PayloadReader<'a> {
+    kind: CodecKind,
+    /// Raw element bytes (codes only for i8 — header already parsed).
+    bytes: &'a [u8],
+    /// i8 zero-point / scale (unused by f32/f16).
+    min: f32,
+    step: f32,
+}
+
+impl<'a> PayloadReader<'a> {
+    /// Validate `payload` as an `n`-element tensor of `kind` (same
+    /// structural checks as the codec's `decode`) and build the view.
+    pub(super) fn new(kind: CodecKind, payload: &'a [u8], n: usize) -> Result<PayloadReader<'a>> {
+        match kind {
+            CodecKind::F32 => {
+                anyhow::ensure!(
+                    payload.len() == 4 * n,
+                    "f32 payload length {} != {}",
+                    payload.len(),
+                    4 * n
+                );
+                Ok(PayloadReader { kind, bytes: payload, min: 0.0, step: 0.0 })
+            }
+            CodecKind::F16 => {
+                anyhow::ensure!(
+                    payload.len() == 2 * n,
+                    "f16 payload length {} != {}",
+                    payload.len(),
+                    2 * n
+                );
+                Ok(PayloadReader { kind, bytes: payload, min: 0.0, step: 0.0 })
+            }
+            CodecKind::I8 => {
+                // parse the QuantVec header in place (`quant::QuantVec::
+                // from_bytes` layout) — no codes copy
+                anyhow::ensure!(payload.len() >= 12, "malformed i8 payload");
+                let len = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+                anyhow::ensure!(
+                    payload.len() == 12 + len,
+                    "i8 payload length {} != {}",
+                    payload.len(),
+                    12 + len
+                );
+                anyhow::ensure!(len == n, "i8 payload dim {len} != {n}");
+                let min = f32::from_le_bytes(payload[4..8].try_into().unwrap());
+                let step = f32::from_le_bytes(payload[8..12].try_into().unwrap());
+                Ok(PayloadReader { kind, bytes: &payload[12..], min, step })
+            }
+        }
+    }
+
+    #[inline]
+    pub(super) fn get(&self, j: usize) -> f32 {
+        match self.kind {
+            CodecKind::F32 => {
+                f32::from_le_bytes(self.bytes[4 * j..4 * j + 4].try_into().unwrap())
+            }
+            CodecKind::F16 => {
+                f16_to_f32(u16::from_le_bytes(self.bytes[2 * j..2 * j + 2].try_into().unwrap()))
+            }
+            CodecKind::I8 => self.min + self.bytes[j] as f32 * self.step,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vecs(dim: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let base: Vec<f32> = (0..dim).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let xs: Vec<f32> = base.iter().map(|b| b + (rng.f32() - 0.5) * 0.1).collect();
+        (base, xs)
+    }
+
+    #[test]
+    fn codec_trait_objects_are_consistent() {
+        for kind in [CodecKind::F32, CodecKind::F16, CodecKind::I8] {
+            let c = codec(kind);
+            assert_eq!(c.kind(), kind);
+            let (_, xs) = vecs(21, 8);
+            let bytes = c.encode(&xs);
+            assert_eq!(bytes.len(), c.payload_bytes(21));
+            let back = c.decode(&bytes, 21).unwrap();
+            assert_eq!(back.len(), 21);
+            if c.is_lossless() {
+                assert!(xs.iter().zip(&back).all(|(a, b)| a.to_bits() == b.to_bits()));
+            }
+            assert!(c.decode(&bytes, 20).is_err());
+        }
+        assert_eq!(CodecKind::parse("i8").unwrap(), CodecKind::I8);
+        assert!(CodecKind::parse("mp3").is_err());
+    }
+}

@@ -45,9 +45,12 @@
 //! assert_eq!(decoded.len(), 8);
 //! ```
 
+mod codec;
+
 use anyhow::{bail, Context, Result};
 
-use crate::quant::{f16_from_f32, f16_to_f32, QuantVec};
+use codec::PayloadReader;
+pub use codec::{codec, Codec, F16Codec, F32Codec, I8Codec};
 
 /// Frame magic: "SCALE Wire Format".
 pub const FRAME_MAGIC: [u8; 4] = *b"SWF1";
@@ -120,128 +123,6 @@ impl CodecKind {
             2 => Ok(CodecKind::I8),
             other => bail!("unknown codec byte {other}"),
         }
-    }
-}
-
-/// A payload codec: turns an `f32` vector into wire bytes and back.
-///
-/// Implementations must be deterministic (same input, same bytes) and
-/// self-consistent (`decode(encode(xs), xs.len())` succeeds); lossy
-/// codecs bound their error per-tensor (`i8`: half a quantization step,
-/// `f16`: half an ulp ≈ 2⁻¹¹ relative).
-pub trait Codec {
-    /// Which header byte this codec writes.
-    fn kind(&self) -> CodecKind;
-    /// Whether `decode(encode(xs))` reproduces `xs` bit-for-bit.
-    fn is_lossless(&self) -> bool;
-    /// Exact payload size for an `n`-element tensor.
-    fn payload_bytes(&self, n: usize) -> usize;
-    /// Encode `xs` into the codec's payload bytes.
-    fn encode(&self, xs: &[f32]) -> Vec<u8>;
-    /// Decode an `n`-element tensor; errors on malformed/mis-sized input.
-    fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>>;
-}
-
-/// Little-endian `f32` passthrough.
-pub struct F32Codec;
-
-impl Codec for F32Codec {
-    fn kind(&self) -> CodecKind {
-        CodecKind::F32
-    }
-
-    fn is_lossless(&self) -> bool {
-        true
-    }
-
-    fn payload_bytes(&self, n: usize) -> usize {
-        4 * n
-    }
-
-    fn encode(&self, xs: &[f32]) -> Vec<u8> {
-        let mut out = Vec::with_capacity(4 * xs.len());
-        for x in xs {
-            out.extend_from_slice(&x.to_le_bytes());
-        }
-        out
-    }
-
-    fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
-        anyhow::ensure!(bytes.len() == 4 * n, "f32 payload length {} != {}", bytes.len(), 4 * n);
-        Ok(bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect())
-    }
-}
-
-/// IEEE 754 binary16.
-pub struct F16Codec;
-
-impl Codec for F16Codec {
-    fn kind(&self) -> CodecKind {
-        CodecKind::F16
-    }
-
-    fn is_lossless(&self) -> bool {
-        false
-    }
-
-    fn payload_bytes(&self, n: usize) -> usize {
-        2 * n
-    }
-
-    fn encode(&self, xs: &[f32]) -> Vec<u8> {
-        let mut out = Vec::with_capacity(2 * xs.len());
-        for &x in xs {
-            out.extend_from_slice(&f16_from_f32(x).to_le_bytes());
-        }
-        out
-    }
-
-    fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
-        anyhow::ensure!(bytes.len() == 2 * n, "f16 payload length {} != {}", bytes.len(), 2 * n);
-        Ok(bytes
-            .chunks_exact(2)
-            .map(|c| f16_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
-            .collect())
-    }
-}
-
-/// Uniform int8 with per-tensor scale/zero-point ([`QuantVec`]).
-pub struct I8Codec;
-
-impl Codec for I8Codec {
-    fn kind(&self) -> CodecKind {
-        CodecKind::I8
-    }
-
-    fn is_lossless(&self) -> bool {
-        false
-    }
-
-    fn payload_bytes(&self, n: usize) -> usize {
-        // QuantVec layout: len(4) + min(4) + step(4) + codes(n)
-        12 + n
-    }
-
-    fn encode(&self, xs: &[f32]) -> Vec<u8> {
-        QuantVec::encode(xs).to_bytes()
-    }
-
-    fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
-        let q = QuantVec::from_bytes(bytes).context("malformed i8 payload")?;
-        anyhow::ensure!(q.codes.len() == n, "i8 payload dim {} != {}", q.codes.len(), n);
-        Ok(q.decode())
-    }
-}
-
-/// The codec singleton for a [`CodecKind`].
-pub fn codec(kind: CodecKind) -> &'static dyn Codec {
-    match kind {
-        CodecKind::F32 => &F32Codec,
-        CodecKind::F16 => &F16Codec,
-        CodecKind::I8 => &I8Codec,
     }
 }
 
@@ -610,6 +491,100 @@ impl Frame {
         (FRAME_HEADER_BYTES + 8 * dim) as u64
     }
 
+    /// Fused decode-accumulate for masked frames: add this frame's
+    /// fixed-point words straight into a wrapping i64 accumulator —
+    /// exactly [`Frame::masked_values`] followed by a wrapping add, but
+    /// with **no per-contributor `Vec<i64>`**. The collect phase folds
+    /// every survivor's frame through this
+    /// ([`crate::aggregation::MaskedAccumulator`]), so its per-node
+    /// allocation is zero.
+    pub fn accumulate_masked_into(&self, acc: &mut [i64]) -> Result<()> {
+        let _s = crate::obs::span("wire.decode");
+        crate::obs::counter_add(crate::obs::Counter::FramesDecoded, 1);
+        anyhow::ensure!(self.masked, "not a masked frame");
+        anyhow::ensure!(
+            self.payload.len() == 8 * self.dim as usize,
+            "masked payload length {} != {}",
+            self.payload.len(),
+            8 * self.dim as usize
+        );
+        anyhow::ensure!(
+            acc.len() == self.dim as usize,
+            "accumulator dim {} != frame dim {}",
+            acc.len(),
+            self.dim
+        );
+        for (a, c) in acc.iter_mut().zip(self.payload.chunks_exact(8)) {
+            *a = a.wrapping_add(i64::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(())
+    }
+
+    /// Fused decode-accumulate for plaintext frames: add this frame's
+    /// decoded values straight into an `f64` accumulator — value- and
+    /// counter-identical to [`Frame::decode`] followed by
+    /// `acc[i] += v[i] as f64`, but with **no intermediate `Vec<f32>`**:
+    /// i8 codes apply their scale/zero-point inline, f16 halves widen
+    /// inline, delta frames add the baseline element-wise, and sparse
+    /// frames walk the kept indices with a cursor so every coordinate
+    /// is still added to the accumulator exactly once.
+    pub fn accumulate_into(&self, acc: &mut [f64], baseline: Option<&[f32]>) -> Result<()> {
+        let _s = crate::obs::span("wire.decode");
+        crate::obs::counter_add(crate::obs::Counter::FramesDecoded, 1);
+        anyhow::ensure!(!self.masked, "masked frame carries no plaintext to decode");
+        let dim = self.dim as usize;
+        anyhow::ensure!(acc.len() == dim, "accumulator dim {} != frame dim {dim}", acc.len());
+        if !self.delta {
+            let r = PayloadReader::new(self.codec, &self.payload, dim)?;
+            for (i, a) in acc.iter_mut().enumerate() {
+                *a += r.get(i) as f64;
+            }
+            return Ok(());
+        }
+        let b = baseline.context("delta frame needs its baseline to decode")?;
+        anyhow::ensure!(b.len() == dim, "baseline dim {} != frame dim {dim}", b.len());
+        if !self.sparse {
+            let r = PayloadReader::new(self.codec, &self.payload, dim)?;
+            for (i, a) in acc.iter_mut().enumerate() {
+                *a += (b[i] + r.get(i)) as f64;
+            }
+            return Ok(());
+        }
+        anyhow::ensure!(self.payload.len() >= 4, "sparse frame truncated");
+        let k = u32::from_le_bytes(self.payload[0..4].try_into().unwrap()) as usize;
+        anyhow::ensure!(4 + 2 * k <= self.payload.len(), "sparse frame truncated");
+        // validate the index list like `from_bytes` does: in range and
+        // strictly increasing, so the single-cursor walk below visits
+        // every kept coordinate exactly once
+        let mut prev: Option<u16> = None;
+        for j in 0..k {
+            let idx =
+                u16::from_le_bytes(self.payload[4 + 2 * j..6 + 2 * j].try_into().unwrap());
+            anyhow::ensure!((idx as usize) < dim, "sparse index {idx} >= dim {dim}");
+            anyhow::ensure!(
+                prev.map_or(true, |p| idx > p),
+                "sparse indices not strictly increasing"
+            );
+            prev = Some(idx);
+        }
+        let r = PayloadReader::new(self.codec, &self.payload[4 + 2 * k..], k)?;
+        let mut j = 0usize;
+        for (i, a) in acc.iter_mut().enumerate() {
+            let mut v = b[i];
+            if j < k {
+                let idx = u16::from_le_bytes(
+                    self.payload[4 + 2 * j..6 + 2 * j].try_into().unwrap(),
+                ) as usize;
+                if idx == i {
+                    v += r.get(j);
+                    j += 1;
+                }
+            }
+            *a += v as f64;
+        }
+        Ok(())
+    }
+
     /// Decode back to the logical `f32` vector. Delta frames need the
     /// baseline the sender referenced (`baseline_round` names the ring
     /// entry); dense frames ignore it.
@@ -888,24 +863,5 @@ mod tests {
             f32_bytes as f64 / lean_bytes as f64 >= 4.0,
             "{f32_bytes} / {lean_bytes}"
         );
-    }
-
-    #[test]
-    fn codec_trait_objects_are_consistent() {
-        for kind in [CodecKind::F32, CodecKind::F16, CodecKind::I8] {
-            let c = codec(kind);
-            assert_eq!(c.kind(), kind);
-            let (_, xs) = vecs(21, 8);
-            let bytes = c.encode(&xs);
-            assert_eq!(bytes.len(), c.payload_bytes(21));
-            let back = c.decode(&bytes, 21).unwrap();
-            assert_eq!(back.len(), 21);
-            if c.is_lossless() {
-                assert!(xs.iter().zip(&back).all(|(a, b)| a.to_bits() == b.to_bits()));
-            }
-            assert!(c.decode(&bytes, 20).is_err());
-        }
-        assert_eq!(CodecKind::parse("i8").unwrap(), CodecKind::I8);
-        assert!(CodecKind::parse("mp3").is_err());
     }
 }

@@ -1,0 +1,285 @@
+//! Old-vs-new hot-path equivalence suite (DESIGN.md §12).
+//!
+//! The kernel overhaul (fused hinge-loss training in
+//! `runtime::kernel`, decode-free frame accumulation in
+//! `aggregation::{FrameAccumulator, MaskedAccumulator}`, LPT
+//! scheduling in `sim::par`) claims *value identity*: every
+//! optimization performs the same floating-point / integer operations
+//! in the same order as the loops it replaced. This suite pins that
+//! claim against verbatim copies of the pre-fusion reference loops —
+//! every comparison is `to_bits` equality, never a tolerance — and
+//! closes with a fingerprint thread-parity run over deliberately
+//! lopsided cluster sizes (the LPT scheduler's worst case).
+//!
+//! CI runs the suite twice (`SCALE_TEST_THREADS` 1 and 4) so the
+//! scheduler leg covers both the sequential path and a genuinely
+//! parallel one.
+
+mod common;
+
+use scale_fl::aggregation::{FrameAccumulator, MaskedAccumulator};
+use scale_fl::data::{pad_batch, Dataset, PaddedBatch};
+use scale_fl::runtime::compute::ModelCompute;
+use scale_fl::sim::Simulation;
+use scale_fl::util::rng::Rng;
+use scale_fl::wire::{Frame, WireConfig};
+
+// ---------------------------------------------------------------------
+// Reference implementations: the naive pre-fusion loops, verbatim.
+// ---------------------------------------------------------------------
+
+/// The naive hinge-loss step `NativeSvm::train_step` ran before the
+/// kernel rewrite: scalar inner loops, fresh gradient and output
+/// vectors every call.
+fn ref_train_step(
+    batch: &PaddedBatch,
+    params: &[f32],
+    lr: f32,
+    reg: f32,
+) -> (Vec<f32>, f32) {
+    let f = params.len() - 1;
+    let (w, bias) = params.split_at(f);
+    let mut gw = vec![0.0f32; f];
+    let mut gb = 0.0f32;
+    let mut loss_sum = 0.0f32;
+    let mut n = 0.0f32;
+    for r in 0..batch.batch {
+        let m = batch.mask[r];
+        if m == 0.0 {
+            continue;
+        }
+        let row = &batch.x[r * f..(r + 1) * f];
+        let mut s = bias[0];
+        for j in 0..f {
+            s += w[j] * row[j];
+        }
+        let y = batch.y[r];
+        let margin = 1.0 - y * s;
+        if margin > 0.0 {
+            loss_sum += m * margin;
+            let coef = m * y;
+            for j in 0..f {
+                gw[j] -= coef * row[j];
+            }
+            gb -= coef;
+        }
+        n += m;
+    }
+    let n = n.max(1.0);
+    let mut w_sq = 0.0f32;
+    let mut out = Vec::with_capacity(f + 1);
+    for j in 0..f {
+        w_sq += w[j] * w[j];
+        let grad = gw[j] / n + reg * w[j];
+        out.push(w[j] - lr * grad);
+    }
+    out.push(bias[0] - lr * (gb / n));
+    (out, loss_sum / n + 0.5 * reg * w_sq)
+}
+
+/// The naive scores loop: `bias + w·x_r` per valid row, scalar dot.
+fn ref_scores(batch: &PaddedBatch, params: &[f32]) -> Vec<f32> {
+    let f = params.len() - 1;
+    let (w, bias) = params.split_at(f);
+    (0..batch.n_valid)
+        .map(|r| {
+            let mut s = bias[0];
+            let row = &batch.x[r * f..(r + 1) * f];
+            for j in 0..f {
+                s += w[j] * row[j];
+            }
+            s
+        })
+        .collect()
+}
+
+/// A randomized batch: `rows` valid rows of dense features in [−2, 2],
+/// labels in {−1, +1}, padded to the backend's static (64, 32) shape.
+fn random_batch(rng: &mut Rng, rows: usize) -> PaddedBatch {
+    let mut x = Vec::with_capacity(rows * 30);
+    let mut y = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        for _ in 0..30 {
+            x.push(rng.f32() * 4.0 - 2.0);
+        }
+        y.push(if rng.chance(0.5) { 1.0 } else { -1.0 });
+    }
+    let ds = Dataset::new(x, y, 30);
+    pad_batch(&ds, 0, 64, 32)
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: coord {i} ({x} vs {y})");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Training-kernel equivalence
+// ---------------------------------------------------------------------
+
+#[test]
+fn fused_train_step_is_bit_identical_to_reference() {
+    let m = common::native();
+    let mut rng = Rng::new(0x2EF_57E9);
+    // sweep batch fill (empty, partial, full), params, lr, reg
+    for case in 0..32 {
+        let rows = [0usize, 1, 7, 40, 64][case % 5];
+        let batch = random_batch(&mut rng, rows);
+        let params: Vec<f32> = (0..33).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let lr = rng.f32() * 0.5 + 0.001;
+        let reg = rng.f32() * 0.3;
+        let (want_p, want_l) = ref_train_step(&batch, &params, lr, reg);
+        let (got_p, got_l) = m.train_step(&batch, &params, lr, reg).unwrap();
+        assert_bits_eq(&got_p, &want_p, &format!("case {case} params"));
+        assert_eq!(got_l.to_bits(), want_l.to_bits(), "case {case} loss");
+    }
+}
+
+#[test]
+fn fused_train_steps_matches_repeated_reference_steps() {
+    let m = common::native();
+    let mut rng = Rng::new(0x57E9_100F);
+    for &k in &[1usize, 3, 7] {
+        let batch = random_batch(&mut rng, 48);
+        let params: Vec<f32> = (0..33).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let (lr, reg) = (0.1f32, 0.01f32);
+        // reference: k naive steps, carrying fresh vectors
+        let mut want_p = params.clone();
+        let mut want_l = 0.0f32;
+        for _ in 0..k {
+            let (p, l) = ref_train_step(&batch, &want_p, lr, reg);
+            want_p = p;
+            want_l = l;
+        }
+        let (got_p, got_l) = m.train_steps(&batch, &params, lr, reg, k).unwrap();
+        assert_bits_eq(&got_p, &want_p, &format!("k={k} params"));
+        assert_eq!(got_l.to_bits(), want_l.to_bits(), "k={k} loss");
+        // and the in-place loop equals step-by-step through the public API
+        let mut p2 = params.clone();
+        let mut l2 = 0.0f32;
+        for _ in 0..k {
+            let (p, l) = m.train_step(&batch, &p2, lr, reg).unwrap();
+            p2 = p;
+            l2 = l;
+        }
+        assert_bits_eq(&got_p, &p2, &format!("k={k} vs stepwise"));
+        assert_eq!(got_l.to_bits(), l2.to_bits(), "k={k} loss vs stepwise");
+    }
+}
+
+#[test]
+fn fused_scores_are_bit_identical_to_reference() {
+    let m = common::native();
+    let mut rng = Rng::new(0x5C0_2E5);
+    for rows in [0usize, 1, 9, 33, 64] {
+        let batch = random_batch(&mut rng, rows);
+        let params: Vec<f32> = (0..33).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let got = m.scores(&batch, &params).unwrap();
+        let want = ref_scores(&batch, &params);
+        assert_eq!(got.len(), rows);
+        assert_bits_eq(&got, &want, &format!("rows {rows}"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fused frame accumulation equivalence
+// ---------------------------------------------------------------------
+
+#[test]
+fn frame_accumulator_matches_decode_reference_across_presets() {
+    let mut rng = Rng::new(0xACC_F2A);
+    for preset in ["f32", "f16", "i8", "lean", "sparse"] {
+        let wire = WireConfig::preset(preset).unwrap();
+        let dim = 33;
+        let baseline: Vec<f32> = (0..dim).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let frames: Vec<Frame> = (0..6)
+            .map(|_| {
+                // near-baseline vectors so sparse top-k has real structure
+                let xs: Vec<f32> = baseline
+                    .iter()
+                    .map(|&b| b + (rng.f32() - 0.5) * 0.2)
+                    .collect();
+                wire.encode(&xs, 4, Some((3, &baseline)))
+            })
+            .collect();
+        // reference: decode every frame, f64-accumulate in arrival order
+        let mut acc = vec![0.0f64; dim];
+        for fr in &frames {
+            for (a, v) in acc.iter_mut().zip(fr.decode(Some(&baseline)).unwrap()) {
+                *a += v as f64;
+            }
+        }
+        let want: Vec<f32> =
+            acc.iter().map(|a| (a / frames.len() as f64) as f32).collect();
+
+        let mut fused = FrameAccumulator::new(dim);
+        for fr in &frames {
+            fused.add_frame(fr, Some(&baseline)).unwrap();
+        }
+        assert_bits_eq(&fused.mean().unwrap(), &want, preset);
+    }
+}
+
+#[test]
+fn masked_accumulator_matches_per_frame_decode_reference() {
+    let mut rng = Rng::new(0x3A5_CED);
+    let dim = 33;
+    let words: Vec<Vec<i64>> = (0..5)
+        .map(|_| (0..dim).map(|_| rng.next_u64() as i64).collect())
+        .collect();
+    let frames: Vec<Frame> = words.iter().map(|w| Frame::masked_frame(2, w)).collect();
+    // reference: the pre-fusion collect path — materialize every
+    // contributor's words, then wrapping-sum
+    let mut want = vec![0i64; dim];
+    for fr in &frames {
+        for (a, v) in want.iter_mut().zip(fr.masked_values().unwrap()) {
+            *a = a.wrapping_add(v);
+        }
+    }
+    let mut fused = MaskedAccumulator::new(dim);
+    for fr in &frames {
+        fused.add_frame(fr).unwrap();
+    }
+    assert_eq!(fused.into_sum().unwrap(), want);
+}
+
+// ---------------------------------------------------------------------
+// LPT scheduler: fingerprint parity under lopsided cluster sizes
+// ---------------------------------------------------------------------
+
+/// Thread counts to compare against the sequential run. CI pins the
+/// suite at `SCALE_TEST_THREADS` 1 and 4; unset, it sweeps {2, 4}.
+fn parity_threads() -> Vec<usize> {
+    match std::env::var("SCALE_TEST_THREADS") {
+        Ok(v) => vec![v.parse().expect("SCALE_TEST_THREADS must be a number")],
+        Err(_) => vec![2, 4],
+    }
+}
+
+#[test]
+fn lpt_scheduling_keeps_fingerprints_thread_invariant_on_lopsided_clusters() {
+    // No balance constraint on clustering: with 4 centroids over
+    // label-skewed summaries the cluster sizes come out genuinely
+    // uneven, so LPT assignment actually reorders execution relative to
+    // the old shared-queue scheduler — and must still not leak into the
+    // fingerprint (only merge order could, and it is pinned).
+    let compute = common::native();
+    let mut cfg = common::small_cfg();
+    cfg.n_nodes = 26;
+    cfg.partition = scale_fl::config::Partition::LabelSkew(0.3);
+    cfg.cluster.balance_slack = None;
+    cfg.rounds = 5;
+    let cfg = cfg.normalized();
+    let fp = |threads: usize| -> String {
+        let mut c = cfg.clone();
+        c.threads = threads;
+        let mut sim = Simulation::new_parallel(c, &compute).expect("setup");
+        sim.run_scale().expect("run").fingerprint()
+    };
+    let base = fp(1);
+    for t in parity_threads() {
+        assert_eq!(fp(t), base, "fingerprint diverged at threads={t}");
+    }
+}
