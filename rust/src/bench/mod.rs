@@ -16,7 +16,7 @@ use crate::scenario::Scenario;
 use crate::sim::report::RunReport;
 use crate::sim::{AlgoKind, Simulation};
 use crate::util::json::Value;
-use crate::util::stats::percentile;
+use crate::util::stats::{percentile, total_min};
 use crate::wire::WireConfig;
 
 // The process-memory probe lives in `obs` now (it is the same
@@ -59,7 +59,7 @@ pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
         mean_us: samples.iter().sum::<f64>() / samples.len() as f64,
         p50_us: percentile(&samples, 50.0),
         p95_us: percentile(&samples, 95.0),
-        min_us: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        min_us: samples.iter().cloned().fold(f64::INFINITY, total_min),
     }
 }
 

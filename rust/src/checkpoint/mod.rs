@@ -243,7 +243,10 @@ impl Checkpoint {
         out.push(VERSION);
         out.extend_from_slice(&self.round.to_le_bytes());
         out.extend_from_slice(&self.metric.to_le_bytes());
-        out.extend_from_slice(&(self.params.len() as u32).to_le_bytes());
+        // mirror the MAX_DIM bound from_bytes enforces: a >u32 tensor
+        // must fail loudly here, not truncate into a decodable lie
+        let dim = u32::try_from(self.params.len()).expect("checkpoint dim exceeds u32");
+        out.extend_from_slice(&dim.to_le_bytes());
         out.extend_from_slice(&crc.to_le_bytes());
         out.extend_from_slice(&compressed);
         out

@@ -43,6 +43,11 @@
 //! See DESIGN.md (repo root) for the subsystem inventory and §6 for the
 //! wire-protocol rules.
 
+// Scoped here rather than in Cargo.toml [lints] so tests, benches, and
+// examples keep exact float comparison (asserting byte-identity IS the
+// point there); non-test lib code must justify each `==` inline.
+#![cfg_attr(not(test), warn(clippy::float_cmp))]
+
 pub mod crypto;
 pub mod data;
 pub mod devices;

@@ -543,6 +543,7 @@ fn cmd_scenario_sweep(args: &Args) -> Result<()> {
     let parallel = !args.has("sequential");
     let quiet = args.has("quiet");
 
+    // detlint: allow(D2) — CLI progress timing only; never enters a RunReport
     let t0 = std::time::Instant::now();
     let runs = sweep::run_sweep(&cfg, &scenario, &seeds, parallel, algo)?;
     let elapsed = t0.elapsed().as_secs_f64();
@@ -749,6 +750,7 @@ fn cmd_bench_matrix(args: &Args) -> Result<()> {
         .map(|a| a.with_edge_period(edge_period))
         .collect();
 
+    // detlint: allow(D2) — CLI progress timing only; never enters a RunReport
     let t0 = std::time::Instant::now();
     let cells = scale_fl::bench::run_matrix(&bases, &wire_names, &algos)?;
     if !quiet {

@@ -78,6 +78,9 @@ impl Confusion {
 
 /// ROC AUC via midrank Mann–Whitney U. Returns 0.5 when either class is
 /// absent (undefined; 0.5 = uninformative convention).
+// the tie-group walk compares scores for exact equality on purpose:
+// midranks group identical bit patterns, not nearby values
+#[allow(clippy::float_cmp)]
 pub fn roc_auc(scores: &[f32], labels: &[f32]) -> f64 {
     assert_eq!(scores.len(), labels.len());
     let n_pos = labels.iter().filter(|&&y| y > 0.0).count();
@@ -87,7 +90,9 @@ pub fn roc_auc(scores: &[f32], labels: &[f32]) -> f64 {
     }
     // sort indices by score ascending
     let mut idx: Vec<usize> = (0..scores.len()).collect();
-    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal));
+    // total_cmp (detlint D3): NaN scores order deterministically above
+    // +inf instead of collapsing every comparison to Equal
+    idx.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
     // midranks over tie groups
     let mut rank_sum_pos = 0.0f64;
     let mut i = 0;
@@ -207,6 +212,22 @@ mod tests {
         // one tie straddling classes
         let auc = roc_auc(&[0.9, 0.5, 0.5, 0.1], &[1.0, 1.0, -1.0, -1.0]);
         assert!((auc - 0.875).abs() < 1e-12, "{auc}");
+    }
+
+    /// NaN regression (detlint D3 sweep): under the old partial_cmp /
+    /// unwrap_or(Equal) comparator a NaN score froze the sort into
+    /// whatever order the pivots happened to visit; total_cmp ranks
+    /// NaN above every finite score, deterministically.
+    #[test]
+    fn auc_with_nan_score_is_deterministic() {
+        let labels = [1.0f32, 1.0, -1.0, -1.0];
+        let scores = [0.9f32, f32::NAN, 0.4, 0.1];
+        let a = roc_auc(&scores, &labels);
+        let b = roc_auc(&scores, &labels);
+        assert_eq!(a, b);
+        // NaN sorts last (highest rank); it belongs to a positive here,
+        // so the ranking is still perfect: AUC = 1
+        assert_eq!(a, 1.0);
     }
 
     #[test]

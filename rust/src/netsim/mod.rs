@@ -101,6 +101,7 @@ impl MsgKind {
 
     /// Stable serialization code (index into [`Self::ALL`]).
     pub fn code(self) -> u8 {
+        // detlint: allow(D4) — every variant is listed in ALL (asserted by tests)
         Self::ALL.iter().position(|&k| k == self).expect("kind in ALL") as u8
     }
 
@@ -412,7 +413,7 @@ impl Network {
                 .iter()
                 .flatten()
                 .map(|d| d.bandwidth_mbps)
-                .fold(f64::INFINITY, f64::min);
+                .fold(f64::INFINITY, crate::util::stats::total_min);
             let bw_mbps = if bw_mbps.is_finite() { bw_mbps } else { 500.0 }
                 * bw_factor
                 * self.degradation;
@@ -539,6 +540,23 @@ mod tests {
         assert!(l_metro < l_wan, "{l_metro} < {l_wan}");
         assert!(l_wan < l_cloud + 20.0);
         assert!(l_cloud > l_metro);
+    }
+
+    /// NaN regression (detlint D3 sweep): a device advertising a NaN
+    /// bandwidth must not poison the slower-endpoint reduction — the
+    /// finite peer's bandwidth wins and the sampled latency stays
+    /// finite (and identical to a rerun).
+    #[test]
+    fn nan_bandwidth_endpoint_is_skipped() {
+        let mk_net =
+            || Network::new(NetConfig { jitter_frac: 0.0, ..Default::default() }, 3, false);
+        let a = mk_point(0, 40.0, -74.0);
+        let mut b = mk_point(1, 40.01, -74.0);
+        b.bandwidth_mbps = f64::NAN;
+        let l1 = mk_net().send(MsgKind::PeerExchange, Some(&a), Some(&b), 10_000, 0);
+        let l2 = mk_net().send(MsgKind::PeerExchange, Some(&a), Some(&b), 10_000, 0);
+        assert!(l1.is_finite(), "{l1}");
+        assert_eq!(l1, l2);
     }
 
     #[test]

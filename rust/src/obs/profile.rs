@@ -75,7 +75,7 @@ pub fn render_profile(snap: &Snapshot, wall_s: f64, threads: usize) -> String {
                 100.0 * busy_s / wall_s.max(1e-9)
             ));
         }
-        let max = busys.iter().cloned().fold(0.0, f64::max);
+        let max = busys.iter().cloned().fold(0.0, crate::util::stats::total_max);
         let mean = busys.iter().sum::<f64>() / busys.len() as f64;
         out.push_str(&format!(
             "  imbalance (max/mean busy): {:.2}x\n",

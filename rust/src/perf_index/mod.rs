@@ -19,7 +19,7 @@
 //!   resource usage, α is an *efficiency* index. A `harmonic` switch
 //!   computes the proper weighted harmonic mean instead (ablation knob).
 
-use crate::util::stats::minmax_scale_one;
+use crate::util::stats::{minmax_scale_one, total_max, total_min};
 
 /// Raw Method-1 metrics as measured on a device.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -45,22 +45,25 @@ pub struct MetricBounds {
 }
 
 impl MetricBounds {
-    /// Bounds over a fleet of raw metrics.
+    /// Bounds over a fleet of raw metrics. Envelope folds use the
+    /// NaN-explicit `total_min`/`total_max` (detlint D3): a device
+    /// reporting a NaN metric is skipped for that bound instead of
+    /// silently winning or losing the IEEE `minNum` coin toss.
     pub fn from_fleet(fleet: &[ComputeMetrics]) -> Self {
         assert!(!fleet.is_empty(), "empty fleet");
         let mut lo = fleet[0];
         let mut hi = fleet[0];
         for m in fleet {
-            lo.compute_power = lo.compute_power.min(m.compute_power);
-            hi.compute_power = hi.compute_power.max(m.compute_power);
-            lo.energy_efficiency = lo.energy_efficiency.min(m.energy_efficiency);
-            hi.energy_efficiency = hi.energy_efficiency.max(m.energy_efficiency);
-            lo.latency_ms = lo.latency_ms.min(m.latency_ms);
-            hi.latency_ms = hi.latency_ms.max(m.latency_ms);
-            lo.bandwidth_mbps = lo.bandwidth_mbps.min(m.bandwidth_mbps);
-            hi.bandwidth_mbps = hi.bandwidth_mbps.max(m.bandwidth_mbps);
-            lo.concurrency = lo.concurrency.min(m.concurrency);
-            hi.concurrency = hi.concurrency.max(m.concurrency);
+            lo.compute_power = total_min(lo.compute_power, m.compute_power);
+            hi.compute_power = total_max(hi.compute_power, m.compute_power);
+            lo.energy_efficiency = total_min(lo.energy_efficiency, m.energy_efficiency);
+            hi.energy_efficiency = total_max(hi.energy_efficiency, m.energy_efficiency);
+            lo.latency_ms = total_min(lo.latency_ms, m.latency_ms);
+            hi.latency_ms = total_max(hi.latency_ms, m.latency_ms);
+            lo.bandwidth_mbps = total_min(lo.bandwidth_mbps, m.bandwidth_mbps);
+            hi.bandwidth_mbps = total_max(hi.bandwidth_mbps, m.bandwidth_mbps);
+            lo.concurrency = total_min(lo.concurrency, m.concurrency);
+            hi.concurrency = total_max(hi.concurrency, m.concurrency);
         }
         MetricBounds { lo, hi }
     }
@@ -229,6 +232,26 @@ mod tests {
         assert_eq!(b.hi.compute_power, 50.0);
         assert_eq!(b.lo.latency_ms, 10.0);
         assert_eq!(b.hi.latency_ms, 50.0);
+    }
+
+    /// NaN regression (detlint D3 sweep): one device reporting a NaN
+    /// metric must not capture (or lose by coin toss) the fleet
+    /// envelope — the finite devices' bounds are unchanged.
+    #[test]
+    fn bounds_skip_nan_metrics() {
+        let mut f = fleet();
+        f[2].compute_power = f64::NAN;
+        f[2].latency_ms = f64::NAN;
+        let b = MetricBounds::from_fleet(&f);
+        assert_eq!(b.lo.compute_power, 10.0);
+        assert_eq!(b.hi.compute_power, 50.0);
+        assert_eq!(b.lo.latency_ms, 10.0);
+        assert_eq!(b.hi.latency_ms, 50.0);
+        // a NaN in the *first* slot seeds the fold and must heal too
+        f.swap(0, 2);
+        let b = MetricBounds::from_fleet(&f);
+        assert_eq!(b.lo.compute_power, 10.0);
+        assert_eq!(b.hi.compute_power, 50.0);
     }
 
     #[test]

@@ -127,6 +127,8 @@ fn grad_sub(gw: &mut [f32], x: &[f32], coef: f32) {
 /// reference step verbatim; only the buffer discipline changed (the
 /// update writes through `params` instead of pushing a fresh vector,
 /// which is the same subtraction on the same operands).
+// the mask is exactly 0.0 or 1.0 by construction; == is the intended test
+#[allow(clippy::float_cmp)]
 pub fn hinge_step_in_place(
     batch: &PaddedBatch,
     params: &mut [f32],

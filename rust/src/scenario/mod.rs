@@ -425,7 +425,7 @@ impl ScenarioState {
                 Undo::RestoreBandwidth { factor } => Some(*factor),
                 _ => None,
             })
-            .reduce(f64::min)
+            .reduce(crate::util::stats::total_min)
     }
 
     /// Strongest straggler slowdown still covering `id`, if any.
@@ -436,7 +436,7 @@ impl ScenarioState {
                 Undo::Unslow { ids, factor } if ids.contains(&id) => Some(*factor),
                 _ => None,
             })
-            .reduce(f64::max)
+            .reduce(crate::util::stats::total_max)
     }
 
     /// Whether another active leave/outage window still holds `id` down.
@@ -667,6 +667,21 @@ mod tests {
         st.note_recluster(0);
         assert!(!st.may_recluster(1));
         assert!(st.may_recluster(2));
+    }
+
+    /// NaN regression (detlint D3 sweep): a corrupt window factor must
+    /// not poison the floor/slowdown reductions — the finite sibling
+    /// still wins, deterministically.
+    #[test]
+    fn window_reductions_survive_nan_factor() {
+        let scenario = Scenario::from_toml("name = \"nan\"\n").unwrap();
+        let mut st = ScenarioState::new(&scenario);
+        st.schedule_undo(5, Undo::RestoreBandwidth { factor: f64::NAN });
+        st.schedule_undo(5, Undo::RestoreBandwidth { factor: 0.5 });
+        st.schedule_undo(5, Undo::Unslow { ids: vec![1], factor: f64::NAN });
+        st.schedule_undo(5, Undo::Unslow { ids: vec![1], factor: 2.0 });
+        assert_eq!(st.active_bandwidth_floor(), Some(0.5));
+        assert_eq!(st.active_slow_factor(1), Some(2.0));
     }
 
     /// Overlapping effect windows: expiry of one window must not cancel

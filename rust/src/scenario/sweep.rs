@@ -112,11 +112,13 @@ pub fn run_sweep(
             }));
         }
         for h in handles {
+            // detlint: allow(D4) — join only errs if the worker panicked; re-raise it
             for (i, r) in h.join().expect("sweep worker panicked") {
                 slots[i] = Some(r);
             }
         }
     });
+    // detlint: allow(D4) — every index was handed to exactly one worker above
     slots.into_iter().map(|s| s.expect("sweep slot unfilled")).collect()
 }
 

@@ -71,6 +71,7 @@ impl PairSecret {
     /// ordered pair of node ids.
     pub fn derive(root: &[u8; 32], a: u64, b: u64) -> PairSecret {
         let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        // detlint: allow(D4) — HMAC-SHA256 accepts any key length; infallible
         let mut mac = <HmacSha256 as Mac>::new_from_slice(root).expect("hmac key");
         mac.update(PAIR_LABEL);
         mac.update(&lo.to_le_bytes());
@@ -88,6 +89,7 @@ pub fn pair_mask_stream(secret: &PairSecret, round: u32, cluster: u32, dim: usiz
     let mut out = Vec::with_capacity(dim);
     let mut block: u32 = 0;
     while out.len() < dim {
+        // detlint: allow(D4) — HMAC-SHA256 accepts any key length; infallible
         let mut mac = <HmacSha256 as Mac>::new_from_slice(&secret.0).expect("hmac key");
         mac.update(MASK_LABEL);
         mac.update(&round.to_le_bytes());
@@ -116,6 +118,8 @@ pub fn encode_fixed(params: &[f32]) -> Vec<i64> {
 pub fn decode_mean(sum: &[i64], count: usize) -> Vec<f32> {
     assert!(count > 0);
     sum.iter()
+        // detlint: allow(D6) — the f64→f32 narrowing IS the documented
+        // lossy fixed-point decode (24-bit budget, DESIGN.md §11)
         .map(|&v| (v as f64 / count as f64 / SCALE) as f32)
         .collect()
 }

@@ -124,6 +124,7 @@ impl Algorithm for FedAvgAlgo {
                 let hi = (lo + NODE_SHARD).min(n);
                 let nodes: Vec<&mut NodeState> = slots[lo..hi]
                     .iter_mut()
+                    // detlint: allow(D4) — shard ranges are disjoint by construction
                     .map(|slot| slot.take().expect("node claimed by two shards"))
                     .collect();
                 (shard, nodes)

@@ -153,6 +153,7 @@ impl Algorithm for HflAlgo {
             .map(|(e, members)| {
                 let nodes: Vec<&mut NodeState> = members
                     .iter()
+                    // detlint: allow(D4) — edge membership lists are disjoint by construction
                     .map(|&id| slots[id].take().expect("node claimed by two edges"))
                     .collect();
                 (e, nodes)

@@ -282,6 +282,7 @@ impl Algorithm for ScaleAlgo {
                 let nodes: Vec<&mut NodeState> = cluster
                     .members
                     .iter()
+                    // detlint: allow(D4) — cluster membership lists are disjoint by construction
                     .map(|&id| slots[id].take().expect("node claimed by two clusters"))
                     .collect();
                 (cluster, nodes)

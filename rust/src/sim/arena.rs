@@ -73,6 +73,7 @@ impl NodeArena {
 
     /// Mutable id-order traversal (layout-independent).
     pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut NodeState> {
+        // detlint: allow(D4) — slots() fills every id; the arena is dense
         self.slots().into_iter().map(|slot| slot.expect("dense arena"))
     }
 
@@ -112,6 +113,7 @@ impl NodeArena {
             if fresh || shards.last().map_or(true, |s: &Vec<NodeState>| s.len() >= PAGE) {
                 shards.push(Vec::with_capacity(PAGE));
             }
+            // detlint: allow(D4) — the branch above just pushed a page
             shards.last_mut().expect("page").push(node);
         };
         for group in groups {

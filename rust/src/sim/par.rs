@@ -29,6 +29,7 @@ use crate::obs;
 /// output to [`run_units_par`] by construction. Busy-time lands on
 /// worker slot 0 (telemetry only — never part of the fingerprint).
 pub(crate) fn run_units_seq<T, O>(units: Vec<T>, mut f: impl FnMut(T) -> O) -> Vec<O> {
+    // detlint: allow(D2) — worker busy-time feeds obs only, never the report
     let t = obs::enabled().then(Instant::now);
     let out: Vec<O> = units.into_iter().map(&mut f).collect();
     if let Some(t) = t {
@@ -49,6 +50,7 @@ pub(crate) fn lpt_assign(weights: &[u64], workers: usize) -> Vec<usize> {
     let mut load = vec![0u64; workers];
     let mut owner = vec![0usize; weights.len()];
     for i in order {
+        // detlint: allow(D4) — callers guarantee workers ≥ 1
         let w = (0..workers).min_by_key(|&w| load[w]).expect("workers > 0");
         owner[i] = w;
         load[w] = load[w].saturating_add(weights[i].max(1));
@@ -88,6 +90,7 @@ pub(crate) fn run_units_par<T: Send, O: Send>(
                     // per-worker busy wall-clock: the utilization /
                     // imbalance report of `scale profile` (one branch
                     // when off)
+                    // detlint: allow(D2) — feeds obs busy-time only, never the report
                     let t = obs::enabled().then(Instant::now);
                     let done: Vec<(usize, O)> =
                         slice.into_iter().map(|(i, unit)| (i, f(unit))).collect();
@@ -99,11 +102,13 @@ pub(crate) fn run_units_par<T: Send, O: Send>(
             })
             .collect();
         for h in handles {
+            // detlint: allow(D4) — join only errs if the worker panicked; re-raise it
             for (i, o) in h.join().expect("round worker panicked") {
                 out[i] = Some(o);
             }
         }
     });
+    // detlint: allow(D4) — LPT assignment hands every unit to exactly one worker
     out.into_iter().map(|o| o.expect("unit result missing")).collect()
 }
 

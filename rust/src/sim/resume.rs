@@ -70,6 +70,7 @@ fn resume_key(seed: u64) -> [u8; 32] {
 }
 
 fn tag_for(key: &[u8; 32], cfg_json: &[u8], compressed: &[u8]) -> [u8; 32] {
+    // detlint: allow(D4) — HMAC-SHA256 accepts any key length; infallible
     let mut mac = <HmacSha256 as Mac>::new_from_slice(key).expect("hmac accepts any key length");
     mac.update(&MAGIC);
     mac.update(&[VERSION]);
@@ -111,6 +112,7 @@ fn open_envelope(raw: &[u8]) -> Result<(SimConfig, Vec<u8>)> {
         "unsupported resume state version {} (this build reads v{VERSION})",
         raw[4]
     );
+    // detlint: allow(D4) — fixed-width slice of a length-checked buffer
     let cfg_len = u32::from_le_bytes(raw[5..9].try_into().unwrap()) as usize;
     let rest = &raw[9..];
     ensure!(
@@ -119,6 +121,7 @@ fn open_envelope(raw: &[u8]) -> Result<(SimConfig, Vec<u8>)> {
     );
     let cfg_json = &rest[..cfg_len];
     let tag = &rest[cfg_len..cfg_len + 32];
+    // detlint: allow(D4) — the range is exactly 8 bytes, so try_into is infallible
     let comp_len = u64::from_le_bytes(rest[cfg_len + 32..cfg_len + 40].try_into().unwrap());
     let compressed = &rest[cfg_len + 40..];
     ensure!(

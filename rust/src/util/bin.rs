@@ -170,10 +170,12 @@ impl<'a> BinReader<'a> {
     }
 
     pub fn u32(&mut self) -> Result<u32> {
+        // detlint: allow(D4) — take(4) returns exactly 4 bytes, so try_into is infallible
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
     pub fn u64(&mut self) -> Result<u64> {
+        // detlint: allow(D4) — take(8) returns exactly 8 bytes, so try_into is infallible
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 

@@ -83,6 +83,9 @@ impl Value {
         }
     }
 
+    // integer-valued check: fract() == 0.0 is an exact-representation
+    // test, not a tolerance comparison
+    #[allow(clippy::float_cmp)]
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Value::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= u64::MAX as f64 => {
@@ -206,6 +209,8 @@ fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
     }
 }
 
+// fract() == 0.0 is an exact integer-representation test
+#[allow(clippy::float_cmp)]
 fn write_num(out: &mut String, x: f64) {
     if !x.is_finite() {
         // JSON has no NaN/Inf; emit null like most tolerant writers.

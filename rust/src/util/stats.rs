@@ -22,16 +22,52 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     variance(xs).sqrt()
 }
 
+/// NaN-explicit minimum: a NaN operand is skipped (the other value
+/// wins), finite/infinite pairs order via `total_cmp`. Drop-in for
+/// `f64::min` in reduction folds — identical for every non-NaN pair —
+/// but the NaN policy is spelled out instead of inherited from IEEE
+/// `minNum`, which is what detlint rule D3 asks of float orderings.
+pub fn total_min(a: f64, b: f64) -> f64 {
+    if a.is_nan() {
+        return b;
+    }
+    if b.is_nan() {
+        return a;
+    }
+    if b.total_cmp(&a) == std::cmp::Ordering::Less {
+        b
+    } else {
+        a
+    }
+}
+
+/// NaN-explicit maximum; see [`total_min`].
+pub fn total_max(a: f64, b: f64) -> f64 {
+    if a.is_nan() {
+        return b;
+    }
+    if b.is_nan() {
+        return a;
+    }
+    if b.total_cmp(&a) == std::cmp::Ordering::Greater {
+        b
+    } else {
+        a
+    }
+}
+
 /// Min–max scaling onto `[a, b]` — paper eq 3:
 /// `x' = a + (x - min)(b - a) / (max - min)`.
 ///
 /// Degenerate ranges (max == min) map everything to the midpoint.
+/// NaN samples are ignored for the bounds (they stay NaN in the
+/// output, scaled by a finite range instead of poisoning it).
 pub fn minmax_scale(xs: &[f64], a: f64, b: f64) -> Vec<f64> {
     if xs.is_empty() {
         return Vec::new();
     }
-    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
-    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let lo = xs.iter().cloned().fold(f64::INFINITY, total_min);
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, total_max);
     if (hi - lo).abs() < f64::EPSILON {
         return vec![(a + b) / 2.0; xs.len()];
     }
@@ -200,6 +236,38 @@ mod tests {
         assert_eq!(percentile(&lat, 50.0), 8.0);
         assert_eq!(percentile(&lat, 100.0), 12.0);
         assert!(percentile(&[f64::NAN, f64::NAN], 50.0).is_nan());
+    }
+
+    #[test]
+    fn total_min_max_agree_with_ieee_on_finite_pairs() {
+        let vals = [-3.5, -0.0, 0.0, 1.25, f64::INFINITY, f64::NEG_INFINITY];
+        for &a in &vals {
+            for &b in &vals {
+                assert_eq!(total_min(a, b), a.min(b), "min({a}, {b})");
+                assert_eq!(total_max(a, b), a.max(b), "max({a}, {b})");
+            }
+        }
+    }
+
+    #[test]
+    fn total_min_max_skip_nan() {
+        assert_eq!(total_min(f64::NAN, 2.0), 2.0);
+        assert_eq!(total_min(2.0, f64::NAN), 2.0);
+        assert_eq!(total_max(f64::NAN, -2.0), -2.0);
+        assert_eq!(total_max(-2.0, f64::NAN), -2.0);
+        assert!(total_min(f64::NAN, f64::NAN).is_nan());
+        assert!(total_max(f64::NAN, f64::NAN).is_nan());
+    }
+
+    #[test]
+    fn minmax_scale_ignores_nan_samples_for_bounds() {
+        // regression (detlint D3 sweep): a NaN sample must not poison
+        // the min/max envelope — finite values scale exactly as if the
+        // NaN were absent, and the NaN itself stays NaN
+        let s = minmax_scale(&[0.0, f64::NAN, 10.0], 0.0, 1.0);
+        assert_eq!(s[0], 0.0);
+        assert!(s[1].is_nan());
+        assert_eq!(s[2], 1.0);
     }
 
     #[test]

@@ -57,6 +57,7 @@ pub fn parse(input: &str) -> Result<Value> {
             let key = key.trim();
             check_key(key).map_err(|e| anyhow::anyhow!(at(e)))?;
             let value = parse_value(rest.trim()).map_err(|e| anyhow::anyhow!(at(e)))?;
+            // detlint: allow(D4) — sections starts with the implicit root entry
             let section = sections.last_mut().unwrap();
             if section.1.iter().any(|(k, _)| k == key) {
                 bail!("{}", at(format!("duplicate key '{key}'")));

@@ -199,7 +199,7 @@ impl<'a> PayloadReader<'a> {
             CodecKind::F16 => {
                 f16_to_f32(u16::from_le_bytes(self.bytes[2 * j..2 * j + 2].try_into().unwrap()))
             }
-            CodecKind::I8 => self.min + self.bytes[j] as f32 * self.step,
+            CodecKind::I8 => self.min + f32::from(self.bytes[j]) * self.step,
         }
     }
 }

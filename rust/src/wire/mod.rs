@@ -225,6 +225,10 @@ impl WireConfig {
         let _s = crate::obs::span("wire.encode");
         crate::obs::counter_add(crate::obs::Counter::FramesEncoded, 1);
         let dim = xs.len();
+        // the header names dim in 32 bits; try_from (detlint D6) turns an
+        // unrepresentable tensor into a loud panic instead of a silent
+        // truncation that would decode as a different model
+        let dim32 = u32::try_from(dim).expect("frame dim exceeds the u32 header field");
         let c = codec(self.codec);
         let base = if self.delta {
             baseline.filter(|(_, b)| b.len() == dim)
@@ -239,7 +243,7 @@ impl WireConfig {
                 masked: false,
                 round,
                 baseline_round: NO_BASELINE,
-                dim: dim as u32,
+                dim: dim32,
                 payload: c.encode(xs),
             },
             Some((bround, b)) => {
@@ -253,7 +257,7 @@ impl WireConfig {
                         masked: false,
                         round,
                         baseline_round: bround,
-                        dim: dim as u32,
+                        dim: dim32,
                         payload: c.encode(&delta),
                     };
                 }
@@ -270,9 +274,12 @@ impl WireConfig {
                 keep.sort_unstable();
                 let values: Vec<f32> = keep.iter().map(|&i| delta[i]).collect();
                 let mut payload = Vec::with_capacity(4 + 2 * k + c.payload_bytes(k));
-                payload.extend_from_slice(&(k as u32).to_le_bytes());
+                // k ≤ dim ≤ u16::MAX on the sparse path (keep_k falls back
+                // to dense beyond that), so both try_froms are total here
+                payload.extend_from_slice(&u32::try_from(k).expect("sparse k").to_le_bytes());
                 for &i in &keep {
-                    payload.extend_from_slice(&(i as u16).to_le_bytes());
+                    payload
+                        .extend_from_slice(&u16::try_from(i).expect("sparse index").to_le_bytes());
                 }
                 payload.extend_from_slice(&c.encode(&values));
                 Frame {
@@ -282,7 +289,7 @@ impl WireConfig {
                     masked: false,
                     round,
                     baseline_round: bround,
-                    dim: dim as u32,
+                    dim: dim32,
                     payload,
                 }
             }
@@ -426,7 +433,7 @@ impl Frame {
             let mut prev: Option<u16> = None;
             for j in 0..k {
                 let idx = u16::from_le_bytes(payload[4 + 2 * j..6 + 2 * j].try_into().unwrap());
-                anyhow::ensure!((idx as u32) < dim, "sparse index {idx} >= dim {dim}");
+                anyhow::ensure!(u32::from(idx) < dim, "sparse index {idx} >= dim {dim}");
                 anyhow::ensure!(
                     prev.map_or(true, |p| idx > p),
                     "sparse indices not strictly increasing"
@@ -463,7 +470,7 @@ impl Frame {
             masked: true,
             round,
             baseline_round: NO_BASELINE,
-            dim: words.len() as u32,
+            dim: u32::try_from(words.len()).expect("masked dim exceeds the u32 header field"),
             payload,
         }
     }

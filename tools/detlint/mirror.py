@@ -1,0 +1,291 @@
+#!/usr/bin/env python3
+"""Line-level mirror of the detlint rules, for toolchain-less containers.
+
+The authoritative implementation is the `detlint` Rust crate in this
+directory (syn AST, exact spans). This mirror re-implements the same
+rule table over comment-stripped source lines so that an environment
+without `cargo` can still audit `rust/src` + `rust/tests` against the
+determinism contract (DESIGN.md section 13). Semantics intentionally
+match the crate:
+
+  D1  HashMap/HashSet/RandomState in fingerprint modules (non-test)
+  D2  Instant::now / SystemTime outside obs/, bench/, trace/
+  D3  partial_cmp anywhere, f32/f64::min/max path calls (non-test)
+  D4  unwrap()/expect() in library modules (non-test, not main/cli)
+  D5  unsafe block without a SAFETY: comment within 3 lines above
+  D6  narrowing `as` casts in wire/checkpoint/secagg (non-test)
+
+Suppression syntax (same as the crate):
+  - inline: `// detlint: allow(D4) — reason` on the finding line or in
+    the contiguous `//` comment block directly above it
+  - module-scoped: entries in allow.toml (path suffix match; paths
+    ending in '/' match as directory prefixes anywhere in the path)
+
+Usage: python3 tools/detlint/mirror.py [--json] [--allow allow.toml] ROOT...
+Exit status 1 if any unsuppressed finding remains.
+"""
+
+import json
+import os
+import re
+import sys
+
+FINGERPRINT_DIRS = (
+    "rust/src/sim/",
+    "rust/src/wire/",
+    "rust/src/aggregation/",
+    "rust/src/secagg/",
+    "rust/src/clustering/",
+    "rust/src/election/",
+    "rust/src/checkpoint/",
+    "rust/src/runtime/",
+)
+CLOCK_OK_DIRS = ("rust/src/obs/", "rust/src/bench/", "rust/src/trace/")
+SERIAL_DIRS = ("rust/src/wire/", "rust/src/checkpoint/", "rust/src/secagg/")
+NARROW_TARGETS = ("u8", "u16", "u32", "i8", "i16", "i32", "f32")
+
+ALLOW_RE = re.compile(r"detlint:\s*allow\((D[1-6])\)")
+TEST_ATTR_RE = re.compile(r"#\[(test|cfg\(test\)|cfg\(all\(test)")
+
+
+def norm(path):
+    return os.path.normpath(path).replace(os.sep, "/")
+
+
+def parse_allow_toml(path):
+    """Minimal [[allow]] table parser: rule/path/reason string keys."""
+    grants = []
+    if not os.path.exists(path):
+        return grants
+    cur = None
+    for raw in open(path, encoding="utf-8"):
+        line = raw.split("#", 1)[0].strip() if not raw.lstrip().startswith("#") else ""
+        if not line:
+            continue
+        if line == "[[allow]]":
+            cur = {}
+            grants.append(cur)
+            continue
+        m = re.match(r'^(\w+)\s*=\s*"(.*)"$', line)
+        if m and cur is not None:
+            cur[m.group(1)] = m.group(2)
+    return [g for g in grants if "rule" in g and "path" in g]
+
+
+def grant_matches(grant, relpath):
+    p = grant["path"]
+    if p.endswith("/"):
+        return ("/" + relpath).find("/" + p) >= 0 or relpath.startswith(p)
+    return relpath == p or relpath.endswith("/" + p)
+
+
+def strip_comments_and_strings(lines):
+    """Blank out comments, string/char literals, line by line.
+
+    Block comments and raw strings are tracked across lines. Escapes
+    inside normal strings are handled; nested block comments are not
+    (rustc allows them, the repo does not use them).
+    """
+    out = []
+    state = None  # None | "block" | ("str",) | ("raw", hashes)
+    for line in lines:
+        buf = []
+        i, n = 0, len(line)
+        while i < n:
+            c = line[i]
+            if state == "block":
+                if line.startswith("*/", i):
+                    state = None
+                    i += 2
+                else:
+                    i += 1
+                buf.append(" ")
+                continue
+            if isinstance(state, tuple) and state[0] == "str":
+                if c == "\\":
+                    i += 2
+                    buf.append("  ")
+                    continue
+                if c == '"':
+                    state = None
+                i += 1
+                buf.append(" ")
+                continue
+            if isinstance(state, tuple) and state[0] == "raw":
+                closer = '"' + "#" * state[1]
+                if line.startswith(closer, i):
+                    state = None
+                    i += len(closer)
+                    buf.append(" " * len(closer))
+                else:
+                    i += 1
+                    buf.append(" ")
+                continue
+            if line.startswith("//", i):
+                buf.append(" " * (n - i))
+                break
+            if line.startswith("/*", i):
+                state = "block"
+                i += 2
+                buf.append("  ")
+                continue
+            m = re.match(r'r(#*)"', line[i:])
+            if m:
+                state = ("raw", len(m.group(1)))
+                i += len(m.group(0))
+                buf.append(" " * len(m.group(0)))
+                continue
+            if c == '"':
+                state = ("str",)
+                i += 1
+                buf.append(" ")
+                continue
+            if c == "'":
+                # char literal or lifetime; consume 'x' / '\x' forms only
+                m = re.match(r"'(\\.[^']*|[^'\\])'", line[i:])
+                if m:
+                    i += len(m.group(0))
+                    buf.append(" " * len(m.group(0)))
+                    continue
+            buf.append(c)
+            i += 1
+        out.append("".join(buf))
+    return out
+
+
+def test_line_mask(code_lines):
+    """Mark lines inside #[cfg(test)] mod / #[test] fn via brace depth."""
+    mask = [False] * len(code_lines)
+    depth = 0
+    # stack of depths at which a test region opened
+    regions = []
+    pending_attr = False
+    for idx, line in enumerate(code_lines):
+        if pending_attr and re.search(r"\b(mod|fn)\b", line):
+            # region opens at the first '{' on or after this line
+            regions.append(("pending", depth))
+            pending_attr = False
+        if TEST_ATTR_RE.search(line):
+            if re.search(r"\b(mod|fn)\b", line):
+                regions.append(("pending", depth))
+            else:
+                pending_attr = True
+        for ch in line:
+            if ch == "{":
+                if regions and regions[-1][0] == "pending":
+                    regions[-1] = ("open", depth)
+                depth += 1
+            elif ch == "}":
+                depth -= 1
+                if regions and regions[-1][0] == "open" and depth == regions[-1][1]:
+                    regions.pop()
+        if any(r[0] == "open" for r in regions):
+            mask[idx] = True
+    return mask
+
+
+def scan_file(path, relpath, grants):
+    raw = open(path, encoding="utf-8").read().splitlines()
+    code = strip_comments_and_strings(raw)
+    in_test = test_line_mask(code)
+    is_tests_tree = "/tests/" in ("/" + relpath) or relpath.startswith("rust/tests/")
+    base = os.path.basename(relpath)
+    findings = []
+
+    def active_grants(rule):
+        return [g for g in grants if g["rule"] == rule and grant_matches(g, relpath)]
+
+    def suppressed(rule, lineno):
+        # the finding line itself, then the contiguous run of `//`
+        # comment lines directly above it (a wrapped justification)
+        probe = lineno
+        while 1 <= probe <= len(raw):
+            m = ALLOW_RE.search(raw[probe - 1])
+            if m and m.group(1) == rule:
+                return True
+            probe -= 1
+            if probe < 1 or not raw[probe - 1].lstrip().startswith("//"):
+                break
+        return bool(active_grants(rule))
+
+    def emit(rule, lineno, msg):
+        if not suppressed(rule, lineno):
+            findings.append(
+                {"file": relpath, "line": lineno, "rule": rule, "message": msg}
+            )
+
+    fp_mod = any(relpath.startswith(d) for d in FINGERPRINT_DIRS)
+    clock_ok = any(relpath.startswith(d) for d in CLOCK_OK_DIRS)
+    serial_mod = any(relpath.startswith(d) for d in SERIAL_DIRS)
+    lib_code = not is_tests_tree and base not in ("main.rs", "cli.rs")
+
+    for i, line in enumerate(code, 1):
+        nontest = not in_test[i - 1] and not is_tests_tree
+        if fp_mod and nontest:
+            for tok in ("HashMap", "HashSet", "RandomState"):
+                if re.search(r"\b%s\b" % tok, line):
+                    emit("D1", i, f"{tok} in fingerprint module (iteration order is nondeterministic); use BTreeMap/BTreeSet or a sorted Vec")
+        if not clock_ok:
+            if re.search(r"\bInstant\s*::\s*now\b", line):
+                emit("D2", i, "wall clock (Instant::now) outside obs/bench/trace; wall time must never feed a RunReport value path")
+            if re.search(r"\bSystemTime\b", line):
+                emit("D2", i, "wall clock (SystemTime) outside obs/bench/trace; wall time must never feed a RunReport value path")
+        if nontest:
+            if re.search(r"\.\s*partial_cmp\s*\(", line):
+                emit("D3", i, "partial_cmp on floats panics/misorders on NaN; use total_cmp")
+            m = re.search(r"\b(f32|f64)\s*::\s*(min|max)\b", line)
+            if m:
+                emit("D3", i, f"{m.group(1)}::{m.group(2)} silently drops NaN; fold with total_cmp instead")
+        if lib_code and not in_test[i - 1]:
+            for meth in ("unwrap", "expect"):
+                if re.search(r"\.\s*%s\s*\(" % meth, line):
+                    emit("D4", i, f"{meth}() in library code; return an error or justify via allow")
+        if re.search(r"\bunsafe\b", line) and not re.search(r"\bunsafe\s+(extern|trait)\b", line):
+            window = raw[max(0, i - 4) : i]
+            if not any("SAFETY:" in w for w in window):
+                emit("D5", i, "unsafe without a `// SAFETY:` comment in the 3 lines above")
+        if serial_mod and nontest:
+            for m in re.finditer(r"\bas\s+(%s)\b" % "|".join(NARROW_TARGETS), line):
+                emit("D6", i, f"narrowing cast `as {m.group(1)}` in a serialization path; use try_from or justify via allow")
+    return findings
+
+
+def main(argv):
+    as_json = "--json" in argv
+    argv = [a for a in argv if a != "--json"]
+    allow_path = os.path.join(os.path.dirname(__file__), "allow.toml")
+    if "--allow" in argv:
+        k = argv.index("--allow")
+        allow_path = argv[k + 1]
+        del argv[k : k + 2]
+    roots = argv or ["rust/src", "rust/tests"]
+    grants = parse_allow_toml(allow_path)
+
+    # repo-relative paths: anchor on the nearest ancestor containing rust/
+    findings = []
+    nfiles = 0
+    for root in roots:
+        for dirpath, _dirs, files in os.walk(root):
+            for f in sorted(files):
+                if not f.endswith(".rs"):
+                    continue
+                p = os.path.join(dirpath, f)
+                rel = norm(os.path.relpath(p))
+                # normalize to a rust/... repo-relative path when invoked
+                # from the repo root or from inside it
+                k = rel.find("rust/")
+                rel = rel[k:] if k >= 0 else rel
+                nfiles += 1
+                findings.extend(scan_file(p, rel, grants))
+    findings.sort(key=lambda x: (x["file"], x["line"], x["rule"]))
+    if as_json:
+        print(json.dumps({"files": nfiles, "findings": findings}, indent=2))
+    else:
+        for x in findings:
+            print("%s:%d %s %s" % (x["file"], x["line"], x["rule"], x["message"]))
+        print("detlint-mirror: %d file(s), %d finding(s)" % (nfiles, len(findings)))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,613 @@
+//! detlint: an AST-level determinism auditor for the `scale-fl` crate.
+//!
+//! The simulator's reproducibility story rests on a byte-identity
+//! fingerprint: the same config must produce the same `RunReport`
+//! whether it runs on one thread or sixteen, with telemetry on or off,
+//! fresh or resumed. That contract is prose in DESIGN.md until
+//! something checks it; detlint turns it into six mechanical rules and
+//! runs them over every file in `rust/src` + `rust/tests`:
+//!
+//! | rule | what it catches |
+//! |------|-----------------|
+//! | D1   | `HashMap`/`HashSet`/`RandomState` in fingerprint modules — iteration order is seeded per-process, so anything that walks one can leak nondeterminism into an output |
+//! | D2   | `Instant::now` / `SystemTime` outside `obs/`, `bench/`, `trace/` — wall time must never feed a `RunReport` value path |
+//! | D3   | `.partial_cmp(...)` and `f32::/f64::min/max` in non-test code — NaN misorders or silently drops; `total_cmp`-based folds are required |
+//! | D4   | `.unwrap()`/`.expect()` in library code — panics on the round path are availability bugs; every survivor needs a written justification |
+//! | D5   | `unsafe` without a `// SAFETY:` comment within the 3 lines above |
+//! | D6   | narrowing `as` casts (`as u8/u16/u32/i8/i16/i32/f32`) in `wire/`, `checkpoint/`, `secagg/` — serialization must use `try_from` or document why truncation cannot happen |
+//!
+//! Findings are emitted as `file:line rule message` (or `--json`). Two
+//! suppression channels exist, both of which force a written reason:
+//!
+//! - inline: `// detlint: allow(D4) — reason` on the finding line or in
+//!   the contiguous `//` comment block directly above it;
+//! - module-scoped: a `[[allow]]` entry in `tools/detlint/allow.toml`
+//!   (`path` matches by suffix; a trailing `/` matches as a directory
+//!   prefix).
+//!
+//! Detection is AST-driven (`syn` with `full` + `visit`; spans come
+//! from `proc-macro2` with `span-locations`), which keeps comments,
+//! strings, and doc text out of scope for free. Macro bodies are not
+//! part of `syn`'s AST, so `scan_tokens` re-runs the same patterns over
+//! the raw token stream of every macro invocation — `assert!(x.unwrap())`
+//! counts. Comments are *also* not in the AST, which is why suppression
+//! and `SAFETY:` detection read the raw source lines directly.
+//!
+//! `tools/detlint/mirror.py` is a line-level re-implementation of this
+//! rule table for containers without a Rust toolchain; keep the two in
+//! sync when adding a rule (the fixture suite in `tests/` pins the
+//! behavior of both).
+
+use proc_macro2::{Delimiter, Ident, TokenStream, TokenTree};
+use syn::spanned::Spanned;
+use syn::visit::{self, Visit};
+
+/// Modules whose outputs feed the run fingerprint: any iteration-order
+/// or wall-clock leak here is a reproducibility bug, not a style issue.
+pub const FINGERPRINT_DIRS: &[&str] = &[
+    "rust/src/sim/",
+    "rust/src/wire/",
+    "rust/src/aggregation/",
+    "rust/src/secagg/",
+    "rust/src/clustering/",
+    "rust/src/election/",
+    "rust/src/checkpoint/",
+    "rust/src/runtime/",
+];
+
+/// The only modules allowed to read wall clocks (D2).
+pub const CLOCK_OK_DIRS: &[&str] = &["rust/src/obs/", "rust/src/bench/", "rust/src/trace/"];
+
+/// Serialization modules where narrowing `as` casts are denied (D6).
+pub const SERIAL_DIRS: &[&str] = &["rust/src/wire/", "rust/src/checkpoint/", "rust/src/secagg/"];
+
+/// Cast targets D6 treats as narrowing. 64-bit / usize targets are
+/// exempt by design: on the supported 64-bit hosts `as u64`/`as usize`
+/// from our index types cannot truncate, and flagging them would bury
+/// the real signal (documented limitation, DESIGN.md section 13).
+pub const NARROW_TARGETS: &[&str] = &["u8", "u16", "u32", "i8", "i16", "i32", "f32"];
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// One `[[allow]]` entry from allow.toml.
+#[derive(Debug, Clone)]
+pub struct Grant {
+    pub rule: String,
+    pub path: String,
+    pub reason: String,
+}
+
+/// Minimal parser for the `[[allow]]` table subset used by allow.toml:
+/// `rule`/`path`/`reason` string keys only. Entries missing `rule` or
+/// `path` are dropped.
+pub fn parse_allow_toml(text: &str) -> Vec<Grant> {
+    let mut grants: Vec<Grant> = Vec::new();
+    let mut cur: Option<Grant> = None;
+    let flush = |cur: &mut Option<Grant>, grants: &mut Vec<Grant>| {
+        if let Some(g) = cur.take() {
+            if !g.rule.is_empty() && !g.path.is_empty() {
+                grants.push(g);
+            }
+        }
+    };
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "[[allow]]" {
+            flush(&mut cur, &mut grants);
+            cur = Some(Grant { rule: String::new(), path: String::new(), reason: String::new() });
+            continue;
+        }
+        if let Some(g) = cur.as_mut() {
+            if let Some((k, v)) = line.split_once('=') {
+                let v = v.trim();
+                let v = v
+                    .strip_prefix('"')
+                    .and_then(|v| v.strip_suffix('"'))
+                    .unwrap_or(v);
+                match k.trim() {
+                    "rule" => g.rule = v.to_string(),
+                    "path" => g.path = v.to_string(),
+                    "reason" => g.reason = v.to_string(),
+                    _ => {}
+                }
+            }
+        }
+    }
+    flush(&mut cur, &mut grants);
+    grants
+}
+
+/// Suffix path match: `path` ending in `/` matches as a directory
+/// prefix anywhere in the repo-relative path; otherwise the grant
+/// matches the exact file (as a whole-component suffix).
+pub fn grant_matches(grant: &Grant, relpath: &str) -> bool {
+    let p = grant.path.as_str();
+    if p.ends_with('/') {
+        relpath.starts_with(p) || relpath.contains(&format!("/{p}"))
+    } else {
+        relpath == p || relpath.ends_with(&format!("/{p}"))
+    }
+}
+
+/// Does this raw source line carry `detlint: allow(<rule>)`?
+fn line_allows(line: &str, rule: &str) -> bool {
+    if let Some(k) = line.find("detlint:") {
+        let rest = line[k + "detlint:".len()..].trim_start();
+        if let Some(rest) = rest.strip_prefix("allow(") {
+            if let Some(after) = rest.strip_prefix(rule) {
+                return after.starts_with(')');
+            }
+        }
+    }
+    false
+}
+
+/// Flattened macro token for the pattern scan; `Stop` breaks adjacency
+/// across literals and non-paren group boundaries.
+enum FTok {
+    Id(String, usize),
+    P(char, usize),
+    Stop,
+}
+
+fn flatten_tokens(ts: TokenStream, out: &mut Vec<FTok>) {
+    for tt in ts {
+        match tt {
+            TokenTree::Ident(i) => out.push(FTok::Id(i.to_string(), i.span().start().line)),
+            TokenTree::Punct(p) => out.push(FTok::P(p.as_char(), p.span().start().line)),
+            TokenTree::Group(g) => {
+                let paren = g.delimiter() == Delimiter::Parenthesis;
+                if paren {
+                    out.push(FTok::P('(', g.span_open().start().line));
+                } else {
+                    out.push(FTok::Stop);
+                }
+                flatten_tokens(g.stream(), out);
+                if paren {
+                    out.push(FTok::P(')', g.span_close().start().line));
+                } else {
+                    out.push(FTok::Stop);
+                }
+            }
+            TokenTree::Literal(_) => out.push(FTok::Stop),
+        }
+    }
+}
+
+fn id_at(toks: &[FTok], k: usize) -> Option<(&str, usize)> {
+    match toks.get(k) {
+        Some(FTok::Id(s, line)) => Some((s.as_str(), *line)),
+        _ => None,
+    }
+}
+
+fn punct_at(toks: &[FTok], k: usize) -> Option<char> {
+    match toks.get(k) {
+        Some(FTok::P(c, _)) => Some(*c),
+        _ => None,
+    }
+}
+
+struct Ctx<'a> {
+    relpath: &'a str,
+    raw: Vec<&'a str>,
+    grants: &'a [Grant],
+    fp_mod: bool,
+    clock_ok: bool,
+    serial_mod: bool,
+    lib_code: bool,
+    is_tests_tree: bool,
+    test_depth: usize,
+    findings: Vec<Finding>,
+}
+
+impl Ctx<'_> {
+    fn nontest(&self) -> bool {
+        self.test_depth == 0 && !self.is_tests_tree
+    }
+
+    /// Inline suppression: the finding line itself, then the contiguous
+    /// run of `//` comment lines directly above it (so a wrapped
+    /// justification still counts). Falls back to allow.toml grants.
+    fn suppressed(&self, rule: &str, line: usize) -> bool {
+        let mut probe = line;
+        while probe >= 1 && probe <= self.raw.len() {
+            if line_allows(self.raw[probe - 1], rule) {
+                return true;
+            }
+            if probe == 1 || !self.raw[probe - 2].trim_start().starts_with("//") {
+                break;
+            }
+            probe -= 1;
+        }
+        self.grants
+            .iter()
+            .any(|g| g.rule == rule && grant_matches(g, self.relpath))
+    }
+
+    fn emit(&mut self, rule: &'static str, line: usize, message: String) {
+        if !self.suppressed(rule, line) {
+            self.findings.push(Finding { file: self.relpath.to_string(), line, rule, message });
+        }
+    }
+
+    fn hash_ident(&mut self, name: &str, line: usize) {
+        if self.fp_mod && self.nontest() && matches!(name, "HashMap" | "HashSet" | "RandomState") {
+            self.emit(
+                "D1",
+                line,
+                format!("{name} in fingerprint module (iteration order is nondeterministic); use BTreeMap/BTreeSet or a sorted Vec"),
+            );
+        }
+        if !self.clock_ok && name == "SystemTime" {
+            self.emit(
+                "D2",
+                line,
+                "wall clock (SystemTime) outside obs/bench/trace; wall time must never feed a RunReport value path".to_string(),
+            );
+        }
+    }
+
+    fn instant_now(&mut self, line: usize) {
+        if !self.clock_ok {
+            self.emit(
+                "D2",
+                line,
+                "wall clock (Instant::now) outside obs/bench/trace; wall time must never feed a RunReport value path".to_string(),
+            );
+        }
+    }
+
+    fn float_minmax(&mut self, base: &str, method: &str, line: usize) {
+        if self.nontest() {
+            self.emit(
+                "D3",
+                line,
+                format!("{base}::{method} silently drops NaN; fold with total_cmp instead"),
+            );
+        }
+    }
+
+    fn partial_cmp(&mut self, line: usize) {
+        if self.nontest() {
+            self.emit(
+                "D3",
+                line,
+                "partial_cmp on floats panics/misorders on NaN; use total_cmp".to_string(),
+            );
+        }
+    }
+
+    fn unwrap_like(&mut self, method: &str, line: usize) {
+        if self.lib_code && self.test_depth == 0 {
+            self.emit(
+                "D4",
+                line,
+                format!("{method}() in library code; return an error or justify via allow"),
+            );
+        }
+    }
+
+    fn check_unsafe(&mut self, line: usize) {
+        // SAFETY: must appear on the unsafe line or in the 3 lines above
+        let start = line.saturating_sub(4);
+        for idx in start..line {
+            if self.raw.get(idx).is_some_and(|l| l.contains("SAFETY:")) {
+                return;
+            }
+        }
+        self.emit(
+            "D5",
+            line,
+            "unsafe without a `// SAFETY:` comment in the 3 lines above".to_string(),
+        );
+    }
+
+    fn narrow_cast(&mut self, target: &str, line: usize) {
+        if self.serial_mod && self.nontest() {
+            self.emit(
+                "D6",
+                line,
+                format!("narrowing cast `as {target}` in a serialization path; use try_from or justify via allow"),
+            );
+        }
+    }
+
+    /// Re-run the rule patterns over a macro invocation's token stream
+    /// (macro bodies are not in syn's AST).
+    fn scan_tokens(&mut self, ts: TokenStream) {
+        let mut toks = Vec::new();
+        flatten_tokens(ts, &mut toks);
+        for k in 0..toks.len() {
+            let (name, line) = match id_at(&toks, k) {
+                Some(x) => x,
+                None => continue,
+            };
+            let name = name.to_string();
+            self.hash_ident(&name, line);
+            let double_colon = punct_at(&toks, k + 1) == Some(':') && punct_at(&toks, k + 2) == Some(':');
+            if name == "Instant"
+                && double_colon
+                && id_at(&toks, k + 3).map(|(s, _)| s) == Some("now")
+            {
+                self.instant_now(line);
+            }
+            if (name == "f32" || name == "f64") && double_colon {
+                if let Some((m, _)) = id_at(&toks, k + 3) {
+                    if m == "min" || m == "max" {
+                        let m = m.to_string();
+                        self.float_minmax(&name, &m, line);
+                    }
+                }
+            }
+            let is_method_call = k >= 1
+                && punct_at(&toks, k - 1) == Some('.')
+                && punct_at(&toks, k + 1) == Some('(');
+            if is_method_call {
+                match name.as_str() {
+                    "partial_cmp" => self.partial_cmp(line),
+                    "unwrap" | "expect" => self.unwrap_like(&name, line),
+                    _ => {}
+                }
+            }
+            if name == "as" {
+                if let Some((t, _)) = id_at(&toks, k + 1) {
+                    if NARROW_TARGETS.contains(&t) {
+                        let t = t.to_string();
+                        self.narrow_cast(&t, line);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Does any attribute mark this item as test-only (`#[test]`,
+/// `#[cfg(test)]`, `#[cfg(all(test, ...))]`, `#[tokio::test]`, ...)?
+fn attrs_mark_test(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| {
+        let path = a.path();
+        if path.segments.last().is_some_and(|s| s.ident == "test") {
+            return true;
+        }
+        if path.is_ident("cfg") {
+            if let syn::Meta::List(ml) = &a.meta {
+                return tokens_contain_test(ml.tokens.clone());
+            }
+        }
+        false
+    })
+}
+
+fn tokens_contain_test(ts: TokenStream) -> bool {
+    for tt in ts {
+        match tt {
+            TokenTree::Ident(i) if i == "test" => return true,
+            TokenTree::Group(g) => {
+                if tokens_contain_test(g.stream()) {
+                    return true;
+                }
+            }
+            _ => {}
+        }
+    }
+    false
+}
+
+fn item_attrs(item: &syn::Item) -> &[syn::Attribute] {
+    use syn::Item::*;
+    match item {
+        Const(x) => &x.attrs,
+        Enum(x) => &x.attrs,
+        ExternCrate(x) => &x.attrs,
+        Fn(x) => &x.attrs,
+        ForeignMod(x) => &x.attrs,
+        Impl(x) => &x.attrs,
+        Macro(x) => &x.attrs,
+        Mod(x) => &x.attrs,
+        Static(x) => &x.attrs,
+        Struct(x) => &x.attrs,
+        Trait(x) => &x.attrs,
+        TraitAlias(x) => &x.attrs,
+        Type(x) => &x.attrs,
+        Union(x) => &x.attrs,
+        Use(x) => &x.attrs,
+        _ => &[],
+    }
+}
+
+impl<'ast> Visit<'ast> for Ctx<'_> {
+    fn visit_item(&mut self, node: &'ast syn::Item) {
+        let test = attrs_mark_test(item_attrs(node));
+        if test {
+            self.test_depth += 1;
+        }
+        visit::visit_item(self, node);
+        if test {
+            self.test_depth -= 1;
+        }
+    }
+
+    fn visit_impl_item(&mut self, node: &'ast syn::ImplItem) {
+        let attrs: &[syn::Attribute] = match node {
+            syn::ImplItem::Const(x) => &x.attrs,
+            syn::ImplItem::Fn(x) => &x.attrs,
+            syn::ImplItem::Type(x) => &x.attrs,
+            syn::ImplItem::Macro(x) => &x.attrs,
+            _ => &[],
+        };
+        let test = attrs_mark_test(attrs);
+        if test {
+            self.test_depth += 1;
+        }
+        visit::visit_impl_item(self, node);
+        if test {
+            self.test_depth -= 1;
+        }
+    }
+
+    fn visit_ident(&mut self, node: &'ast Ident) {
+        let name = node.to_string();
+        self.hash_ident(&name, node.span().start().line);
+    }
+
+    fn visit_path(&mut self, node: &'ast syn::Path) {
+        let segs: Vec<String> = node.segments.iter().map(|s| s.ident.to_string()).collect();
+        let line = node.span().start().line;
+        for w in segs.windows(2) {
+            if w[0] == "Instant" && w[1] == "now" {
+                self.instant_now(line);
+            }
+            if (w[0] == "f32" || w[0] == "f64") && (w[1] == "min" || w[1] == "max") {
+                self.float_minmax(&w[0], &w[1], line);
+            }
+        }
+        visit::visit_path(self, node);
+    }
+
+    fn visit_expr_method_call(&mut self, node: &'ast syn::ExprMethodCall) {
+        let method = node.method.to_string();
+        let line = node.method.span().start().line;
+        match method.as_str() {
+            "partial_cmp" => self.partial_cmp(line),
+            "unwrap" | "expect" => self.unwrap_like(&method, line),
+            _ => {}
+        }
+        visit::visit_expr_method_call(self, node);
+    }
+
+    fn visit_expr_cast(&mut self, node: &'ast syn::ExprCast) {
+        if let syn::Type::Path(tp) = &*node.ty {
+            if let Some(seg) = tp.path.segments.last() {
+                let t = seg.ident.to_string();
+                if NARROW_TARGETS.contains(&t.as_str()) {
+                    self.narrow_cast(&t, node.as_token.span.start().line);
+                }
+            }
+        }
+        visit::visit_expr_cast(self, node);
+    }
+
+    fn visit_expr_unsafe(&mut self, node: &'ast syn::ExprUnsafe) {
+        self.check_unsafe(node.unsafe_token.span.start().line);
+        visit::visit_expr_unsafe(self, node);
+    }
+
+    fn visit_signature(&mut self, node: &'ast syn::Signature) {
+        if let Some(u) = &node.unsafety {
+            self.check_unsafe(u.span.start().line);
+        }
+        visit::visit_signature(self, node);
+    }
+
+    fn visit_item_impl(&mut self, node: &'ast syn::ItemImpl) {
+        if let Some(u) = &node.unsafety {
+            self.check_unsafe(u.span.start().line);
+        }
+        visit::visit_item_impl(self, node);
+    }
+
+    fn visit_macro(&mut self, node: &'ast syn::Macro) {
+        self.scan_tokens(node.tokens.clone());
+        visit::visit_macro(self, node);
+    }
+}
+
+/// Scan one file's source against the rule table. `relpath` must be the
+/// repo-relative path (`rust/src/...`) — it drives every scope decision
+/// (fingerprint module, clock allowlist, serialization dirs, test
+/// tree, main/cli exemption).
+pub fn scan_source(relpath: &str, src: &str, grants: &[Grant]) -> Result<Vec<Finding>, syn::Error> {
+    let file = syn::parse_file(src)?;
+    let base = relpath.rsplit('/').next().unwrap_or(relpath);
+    let is_tests_tree = relpath.starts_with("rust/tests/") || relpath.contains("/tests/");
+    let mut ctx = Ctx {
+        relpath,
+        raw: src.lines().collect(),
+        grants,
+        fp_mod: FINGERPRINT_DIRS.iter().any(|d| relpath.starts_with(d)),
+        clock_ok: CLOCK_OK_DIRS.iter().any(|d| relpath.starts_with(d)),
+        serial_mod: SERIAL_DIRS.iter().any(|d| relpath.starts_with(d)),
+        lib_code: !is_tests_tree && base != "main.rs" && base != "cli.rs",
+        is_tests_tree,
+        test_depth: 0,
+        findings: Vec::new(),
+    };
+    ctx.visit_file(&file);
+    let mut findings = ctx.findings;
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings.dedup_by(|a, b| a.line == b.line && a.rule == b.rule);
+    Ok(findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_toml_roundtrip() {
+        let text = r#"
+# comment
+[[allow]]
+rule = "D4"
+path = "rust/src/wire/mod.rs"
+reason = "validated up front"
+
+[[allow]]
+rule = "D2"
+path = "rust/src/util/"
+"#;
+        let g = parse_allow_toml(text);
+        assert_eq!(g.len(), 2);
+        assert_eq!(g[0].rule, "D4");
+        assert!(grant_matches(&g[0], "rust/src/wire/mod.rs"));
+        assert!(!grant_matches(&g[0], "rust/src/wire/codec.rs"));
+        assert!(grant_matches(&g[1], "rust/src/util/timer.rs"));
+        assert!(!grant_matches(&g[1], "rust/src/sim/engine.rs"));
+    }
+
+    #[test]
+    fn inline_allow_matches_only_its_rule() {
+        assert!(line_allows("    // detlint: allow(D4) — reason", "D4"));
+        assert!(!line_allows("    // detlint: allow(D4) — reason", "D2"));
+        assert!(!line_allows("    // detlint allow(D4)", "D4"));
+    }
+
+    #[test]
+    fn wrapped_allow_comment_still_suppresses() {
+        let src = "pub fn f(x: Option<u32>) -> u32 {\n    // detlint: allow(D4) — a very long\n    // justification that wraps\n    x.unwrap()\n}\n";
+        let f = scan_source("rust/src/sim/x.rs", src, &[]).unwrap();
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn test_modules_are_exempt_from_d4_but_not_d2() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let v = vec![1u32];\n        let _ = v.first().unwrap();\n        let _t = std::time::Instant::now();\n    }\n}\n";
+        let f = scan_source("rust/src/sim/x.rs", src, &[]).unwrap();
+        assert!(f.iter().all(|x| x.rule != "D4"), "{f:?}");
+        assert!(f.iter().any(|x| x.rule == "D2"), "{f:?}");
+    }
+
+    #[test]
+    fn macro_bodies_are_scanned() {
+        let src = "pub fn f(x: Option<u32>) {\n    println!(\"{}\", x.unwrap());\n}\n";
+        let f = scan_source("rust/src/sim/x.rs", src, &[]).unwrap();
+        assert!(f.iter().any(|x| x.rule == "D4" && x.line == 2), "{f:?}");
+    }
+
+    #[test]
+    fn string_literals_do_not_fire() {
+        let src = "pub fn f() -> &'static str {\n    \"call .unwrap() on a HashMap as u32\"\n}\n";
+        let f = scan_source("rust/src/wire/x.rs", src, &[]).unwrap();
+        assert!(f.is_empty(), "{f:?}");
+    }
+}

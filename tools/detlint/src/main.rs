@@ -1,0 +1,144 @@
+//! detlint CLI: `detlint [--json] [--allow PATH] ROOT...`
+//!
+//! Walks every `.rs` file under the given roots (default: `rust/src`
+//! `rust/tests`, relative to the working directory), scans each against
+//! the determinism rule table, and prints unsuppressed findings as
+//! `file:line rule message` (or a JSON document with `--json`). Exits
+//! 1 if any finding remains, 2 on I/O or parse errors.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use detlint::{parse_allow_toml, scan_source, Finding, Grant};
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Normalize to a repo-relative `rust/...` path so allow.toml grants
+/// and directory scoping work no matter where the binary runs from.
+fn relpath(p: &Path) -> String {
+    let s = p.to_string_lossy().replace('\\', "/");
+    match s.find("rust/") {
+        Some(k) => s[k..].to_string(),
+        None => s.trim_start_matches("./").to_string(),
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn print_json(nfiles: usize, findings: &[Finding]) {
+    println!("{{");
+    println!("  \"files\": {nfiles},");
+    println!("  \"findings\": [");
+    for (i, f) in findings.iter().enumerate() {
+        let comma = if i + 1 < findings.len() { "," } else { "" };
+        println!(
+            "    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}{comma}",
+            json_escape(&f.file),
+            f.line,
+            f.rule,
+            json_escape(&f.message)
+        );
+    }
+    println!("  ]");
+    println!("}}");
+}
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut allow_path: Option<PathBuf> = None;
+    let mut roots: Vec<PathBuf> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => json = true,
+            "--allow" => match args.next() {
+                Some(p) => allow_path = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("detlint: --allow requires a path");
+                    return ExitCode::from(2);
+                }
+            },
+            _ => roots.push(PathBuf::from(a)),
+        }
+    }
+    if roots.is_empty() {
+        roots = vec![PathBuf::from("rust/src"), PathBuf::from("rust/tests")];
+    }
+    // default allowlist: the one committed next to this crate
+    let allow_path = allow_path
+        .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("allow.toml"));
+    let grants: Vec<Grant> = match fs::read_to_string(&allow_path) {
+        Ok(text) => parse_allow_toml(&text),
+        Err(_) => Vec::new(),
+    };
+
+    let mut files = Vec::new();
+    for root in &roots {
+        if let Err(e) = walk(root, &mut files) {
+            eprintln!("detlint: walk {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    }
+
+    let mut findings: Vec<Finding> = Vec::new();
+    for p in &files {
+        let src = match fs::read_to_string(p) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("detlint: read {}: {e}", p.display());
+                return ExitCode::from(2);
+            }
+        };
+        let rel = relpath(p);
+        match scan_source(&rel, &src, &grants) {
+            Ok(f) => findings.extend(f),
+            Err(e) => {
+                eprintln!("detlint: parse {rel}: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+
+    if json {
+        print_json(files.len(), &findings);
+    } else {
+        for f in &findings {
+            println!("{}:{} {} {}", f.file, f.line, f.rule, f.message);
+        }
+        println!("detlint: {} file(s), {} finding(s)", files.len(), findings.len());
+    }
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,106 @@
+//! Fixture suite: every rule must fire on its bad snippet and stay
+//! silent on its clean twin. The fixture files live outside `rust/`,
+//! so each scan fabricates the repo-relative path that puts the
+//! snippet in the rule's scope (fingerprint module for D1, wire/ for
+//! D6, ...).
+
+use detlint::{scan_source, Grant};
+
+fn fixture(name: &str) -> String {
+    let path = format!("{}/tests/fixtures/{name}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {path}: {e}"))
+}
+
+/// (rule, bad fixture, clean fixture, scan-as path)
+const CASES: &[(&str, &str, &str, &str)] = &[
+    ("D1", "d1_bad.rs", "d1_clean.rs", "rust/src/sim/fixture.rs"),
+    ("D2", "d2_bad.rs", "d2_clean.rs", "rust/src/sim/fixture.rs"),
+    ("D3", "d3_bad.rs", "d3_clean.rs", "rust/src/sim/fixture.rs"),
+    ("D4", "d4_bad.rs", "d4_clean.rs", "rust/src/sim/fixture.rs"),
+    ("D5", "d5_bad.rs", "d5_clean.rs", "rust/src/sim/fixture.rs"),
+    ("D6", "d6_bad.rs", "d6_clean.rs", "rust/src/wire/fixture.rs"),
+];
+
+#[test]
+fn every_rule_fires_on_its_bad_fixture() {
+    for (rule, bad, _, relpath) in CASES {
+        let findings = scan_source(relpath, &fixture(bad), &[]).unwrap();
+        assert!(
+            findings.iter().any(|f| f.rule == *rule),
+            "{rule} did not fire on {bad}; got {findings:?}"
+        );
+    }
+}
+
+#[test]
+fn clean_fixtures_are_finding_free() {
+    for (_, _, clean, relpath) in CASES {
+        let findings = scan_source(relpath, &fixture(clean), &[]).unwrap();
+        assert!(findings.is_empty(), "{clean} should be clean; got {findings:?}");
+    }
+}
+
+#[test]
+fn d2_fires_on_both_clock_forms() {
+    let findings = scan_source("rust/src/sim/fixture.rs", &fixture("d2_bad.rs"), &[]).unwrap();
+    let d2 = findings.iter().filter(|f| f.rule == "D2").count();
+    assert!(d2 >= 2, "expected Instant::now and SystemTime to both fire; got {findings:?}");
+}
+
+#[test]
+fn d4_fires_inside_macro_bodies() {
+    let findings = scan_source("rust/src/sim/fixture.rs", &fixture("d4_bad.rs"), &[]).unwrap();
+    assert!(
+        findings.iter().any(|f| f.rule == "D4" && f.line == 12),
+        "the format! body unwrap should fire; got {findings:?}"
+    );
+}
+
+#[test]
+fn clock_allowlist_dirs_are_exempt_from_d2() {
+    let findings = scan_source("rust/src/obs/fixture.rs", &fixture("d2_bad.rs"), &[]).unwrap();
+    assert!(findings.is_empty(), "obs/ may read clocks; got {findings:?}");
+}
+
+#[test]
+fn d6_is_scoped_to_serialization_dirs() {
+    let findings = scan_source("rust/src/sim/fixture.rs", &fixture("d6_bad.rs"), &[]).unwrap();
+    assert!(
+        findings.iter().all(|f| f.rule != "D6"),
+        "as-casts outside wire/checkpoint/secagg are clippy's problem; got {findings:?}"
+    );
+}
+
+#[test]
+fn d4_is_exempt_in_main_and_cli() {
+    let findings = scan_source("rust/src/main.rs", &fixture("d4_bad.rs"), &[]).unwrap();
+    assert!(
+        findings.iter().all(|f| f.rule != "D4"),
+        "main.rs may panic at the top level; got {findings:?}"
+    );
+}
+
+#[test]
+fn allow_toml_grant_suppresses_by_directory() {
+    let grants = vec![Grant {
+        rule: "D4".to_string(),
+        path: "rust/src/sim/".to_string(),
+        reason: "fixture".to_string(),
+    }];
+    let findings = scan_source("rust/src/sim/fixture.rs", &fixture("d4_bad.rs"), &grants).unwrap();
+    assert!(findings.is_empty(), "directory grant should suppress; got {findings:?}");
+}
+
+#[test]
+fn grant_for_one_rule_does_not_leak_to_others() {
+    let grants = vec![Grant {
+        rule: "D4".to_string(),
+        path: "rust/src/sim/".to_string(),
+        reason: "fixture".to_string(),
+    }];
+    let findings = scan_source("rust/src/sim/fixture.rs", &fixture("d3_bad.rs"), &grants).unwrap();
+    assert!(
+        findings.iter().any(|f| f.rule == "D3"),
+        "a D4 grant must not hide D3; got {findings:?}"
+    );
+}

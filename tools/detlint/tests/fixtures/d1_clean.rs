@@ -1,0 +1,11 @@
+// D1 clean: BTreeMap iterates in key order, so the same inserts always
+// walk the same way.
+use std::collections::BTreeMap;
+
+pub fn tally(xs: &[u32]) -> BTreeMap<u32, u32> {
+    let mut m = BTreeMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0) += 1;
+    }
+    m
+}

@@ -1,0 +1,9 @@
+// D2 bad: wall clocks outside obs/bench/trace. Both forms must fire.
+pub fn busy_ns() -> u128 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_nanos()
+}
+
+pub fn epoch() -> std::time::SystemTime {
+    std::time::SystemTime::now()
+}

@@ -1,0 +1,12 @@
+// D2 clean: simulated time is a logical counter owned by the engine,
+// never a wall clock.
+pub struct Clock {
+    ticks: u64,
+}
+
+impl Clock {
+    pub fn advance(&mut self, by: u64) -> u64 {
+        self.ticks += by;
+        self.ticks
+    }
+}

@@ -1,0 +1,8 @@
+// D3 bad: partial_cmp misorders on NaN and f64::max silently drops it.
+pub fn spread(xs: &[f64]) -> f64 {
+    let mut ys = xs.to_vec();
+    ys.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let hi = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let lo = xs.iter().copied().fold(f64::INFINITY, f64::min);
+    hi - lo
+}

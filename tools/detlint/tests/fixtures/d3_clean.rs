@@ -1,0 +1,10 @@
+// D3 clean: total_cmp gives every float (NaN included) one fixed place
+// in the order, so the fold result cannot depend on element order.
+pub fn spread(xs: &[f64]) -> f64 {
+    let mut ys = xs.to_vec();
+    ys.sort_by(|a, b| a.total_cmp(b));
+    match (ys.first(), ys.last()) {
+        (Some(lo), Some(hi)) => hi - lo,
+        _ => 0.0,
+    }
+}

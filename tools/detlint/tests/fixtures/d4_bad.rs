@@ -1,0 +1,13 @@
+// D4 bad: panics in library code; both unwrap and expect must fire,
+// including inside a macro body.
+pub fn head(xs: &[u32]) -> u32 {
+    *xs.first().unwrap()
+}
+
+pub fn must(x: Option<u32>) -> u32 {
+    x.expect("x was required")
+}
+
+pub fn shout(x: Option<u32>) -> String {
+    format!("{}", x.unwrap())
+}

@@ -1,0 +1,11 @@
+// D4 clean: fallible results stay fallible, and the one justified
+// unwrap carries an inline allow with a reason.
+pub fn head(xs: &[u32]) -> Option<u32> {
+    xs.first().copied()
+}
+
+pub fn one() -> u32 {
+    let v = vec![1u32];
+    // detlint: allow(D4) — v is non-empty by construction one line up
+    *v.first().unwrap()
+}

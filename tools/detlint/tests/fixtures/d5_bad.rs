@@ -1,0 +1,7 @@
+// D5 bad: an unsafe block with no safety comment above it.
+//
+// (padding so the rule's 3-line lookback window stays clear)
+//
+pub fn as_bytes(x: &[u32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(x.as_ptr().cast::<u8>(), x.len() * 4) }
+}

@@ -1,0 +1,6 @@
+// D5 clean: the SAFETY: comment sits directly above the unsafe block.
+pub fn as_bytes(x: &[u32]) -> &[u8] {
+    // SAFETY: the pointer comes from a live &[u32] and the byte length
+    // is exactly the element count times the element size.
+    unsafe { std::slice::from_raw_parts(x.as_ptr().cast::<u8>(), x.len() * 4) }
+}

@@ -1,0 +1,5 @@
+// D6 bad: a narrowing `as` cast on a serialization path silently
+// truncates once dim crosses u32::MAX.
+pub fn header_dim(dim: usize) -> u32 {
+    dim as u32
+}

@@ -1,0 +1,4 @@
+// D6 clean: try_from surfaces the overflow instead of truncating.
+pub fn header_dim(dim: usize) -> Result<u32, std::num::TryFromIntError> {
+    u32::try_from(dim)
+}

@@ -1,0 +1,59 @@
+//! The acceptance gate: the real `rust/src` + `rust/tests` trees must
+//! be finding-free modulo the committed allow.toml. A regression here
+//! means someone introduced a determinism hazard without writing down
+//! why it is safe.
+
+use std::path::{Path, PathBuf};
+
+use detlint::{parse_allow_toml, scan_source};
+
+fn collect(dir: &Path, out: &mut Vec<PathBuf>) {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("read_dir {}: {e}", dir.display()))
+        .map(|e| e.unwrap().path())
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect(&p, out);
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+#[test]
+fn real_tree_is_finding_free_modulo_allow_toml() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let repo = manifest
+        .parent()
+        .and_then(Path::parent)
+        .expect("tools/detlint sits two levels under the repo root");
+    let allow = std::fs::read_to_string(manifest.join("allow.toml")).expect("allow.toml");
+    let grants = parse_allow_toml(&allow);
+    assert!(!grants.is_empty(), "allow.toml should carry the audited grants");
+
+    let mut files = Vec::new();
+    collect(&repo.join("rust/src"), &mut files);
+    collect(&repo.join("rust/tests"), &mut files);
+    assert!(files.len() > 30, "expected the full source tree, got {} files", files.len());
+
+    let mut findings = Vec::new();
+    for p in &files {
+        let src = std::fs::read_to_string(p).unwrap_or_else(|e| panic!("read {}: {e}", p.display()));
+        let s = p.to_string_lossy().replace('\\', "/");
+        let k = s.find("rust/").expect("path under rust/");
+        let rel = s[k..].to_string();
+        let f = scan_source(&rel, &src, &grants).unwrap_or_else(|e| panic!("parse {rel}: {e}"));
+        findings.extend(f);
+    }
+    assert!(
+        findings.is_empty(),
+        "unsuppressed determinism findings:\n{}",
+        findings
+            .iter()
+            .map(|f| format!("  {}:{} {} {}", f.file, f.line, f.rule, f.message))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
